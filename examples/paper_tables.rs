@@ -1,0 +1,53 @@
+//! Regenerate the paper's Table 1 (classification steps) and Table 2
+//! (structure sizes) across all six datasets at a configurable forest size.
+//!
+//! Run: `cargo run --release --example paper_tables` (defaults to 1,000
+//! trees for a quick pass; `FOREST_ADD_BENCH_TABLE_TREES=10000` reproduces
+//! the paper's setting — the full benches live in `cargo bench`).
+
+use anyhow::Result;
+use forest_add::bench_support::{table_row_budgeted, BenchEnv};
+use forest_add::data::datasets;
+use forest_add::util::table::{fmt_reduction, fmt_thousands, Table};
+
+fn main() -> Result<()> {
+    let trees = std::env::var("FOREST_ADD_BENCH_TABLE_TREES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let _ = BenchEnv::load();
+    println!("forests of size {trees} (paper: 10,000; raise via FOREST_ADD_BENCH_TABLE_TREES)\n");
+
+    let mut t1 = Table::new(&["Dataset", "Random Forest", "Final DD", "reduction"]);
+    let mut t2 = Table::new(&["Dataset", "Random Forest", "Final DD", "reduction"]);
+    for name in datasets::names() {
+        let data = datasets::load(name)?;
+        eprintln!("[{name}] training + compiling …");
+        let (forest, dd, reached) = table_row_budgeted(
+            &data,
+            trees,
+            42,
+            std::time::Duration::from_secs(120),
+        );
+        let forest = forest.prefix(reached);
+        let rf_steps = forest.mean_steps(&data);
+        let dd_steps = dd.mean_steps(&data);
+        t1.row(vec![
+            name.to_string(),
+            fmt_thousands(rf_steps, 2),
+            fmt_thousands(dd_steps, 2),
+            fmt_reduction(rf_steps, dd_steps),
+        ]);
+        t2.row(vec![
+            name.to_string(),
+            fmt_thousands(forest.n_nodes() as f64, 0),
+            fmt_thousands(dd.size().total() as f64, 0),
+            fmt_reduction(forest.n_nodes() as f64, dd.size().total() as f64),
+        ]);
+    }
+    println!("Table 1 — mean classification steps (forest size {trees})");
+    print!("{}", t1.to_text());
+    println!("\nTable 2 — structure sizes in nodes (forest size {trees})");
+    print!("{}", t2.to_text());
+    Ok(())
+}

@@ -1,0 +1,182 @@
+//! End-to-end serving driver — the system-level validation example.
+//!
+//! Boots the full three-layer stack in one process:
+//!   L3 Rust coordinator (HTTP front-end, router, dynamic batcher)
+//!   + the compiled `DD*` diagram (the paper's contribution)
+//!   + the XLA/PJRT tensorised-forest executable (L2 JAX + L1 Pallas,
+//!     AOT-compiled by `make artifacts`)
+//!
+//! then replays the Iris dataset as concurrent HTTP traffic against every
+//! backend and reports latency/throughput plus cross-backend agreement.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_forest`
+//! The measured numbers are recorded in EXPERIMENTS.md §Serving.
+
+use anyhow::Result;
+use forest_add::data::datasets;
+use forest_add::serve::config::ServeConfig;
+use forest_add::serve::http::http_request;
+use forest_add::serve::{server, BackendKind};
+use forest_add::util::json::{self, Json};
+use forest_add::util::table::Table;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENT_THREADS: usize = 4;
+const PASSES_PER_CLIENT: usize = 3;
+
+fn main() -> Result<()> {
+    // `small` artifact variant: 32 trees, depth 6, 8 features, 4 classes —
+    // iris (4 features, 3 classes) fits after padding.
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        variant: "small".into(),
+        ..Default::default()
+    };
+    let handle = server::start(&cfg)?;
+    let addr = handle.addr.to_string();
+    println!("serving on http://{addr} (xla loaded: {})\n", handle.router.has_xla());
+
+    // -- health + model info -------------------------------------------------
+    let (st, health) = http_request(&addr, "GET", "/healthz", None)?;
+    assert_eq!(st, 200);
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true));
+    let (_, model) = http_request(&addr, "GET", "/model", None)?;
+    println!("model: {}", model.to_string_compact());
+
+    let data = datasets::load("iris")?;
+    let mut backends = vec![BackendKind::Forest, BackendKind::Dd];
+    if handle.router.has_xla() {
+        backends.push(BackendKind::Xla);
+    }
+
+    // -- agreement across backends (single requests) -------------------------
+    let mut reference: Vec<u32> = Vec::new();
+    for &backend in &backends {
+        let mut preds = Vec::new();
+        for i in 0..data.n_rows() {
+            let body = json::obj(vec![
+                (
+                    "features",
+                    Json::Arr(data.row(i).iter().map(|&v| json::num(v as f64)).collect()),
+                ),
+                ("backend", json::s(backend.name())),
+            ]);
+            let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body))?;
+            assert_eq!(st, 200, "{resp:?}");
+            preds.push(resp.get_i64("class").unwrap() as u32);
+        }
+        if reference.is_empty() {
+            reference = preds.clone();
+        }
+        let agree = preds
+            .iter()
+            .zip(&reference)
+            .filter(|(a, b)| a == b)
+            .count();
+        println!(
+            "agreement {} vs {}: {}/{}",
+            backend.name(),
+            backends[0].name(),
+            agree,
+            data.n_rows()
+        );
+        assert_eq!(agree, data.n_rows(), "backends must agree — same semantics");
+    }
+
+    // -- concurrent load per backend -----------------------------------------
+    let mut t = Table::new(&[
+        "backend", "requests", "errors", "throughput (req/s)", "mean latency", "p99 latency",
+    ]);
+    for &backend in &backends {
+        let counter = Arc::new(AtomicUsize::new(0));
+        let errors = Arc::new(AtomicUsize::new(0));
+        let lat_us = Arc::new(std::sync::Mutex::new(Vec::<u64>::new()));
+        let start = Instant::now();
+        std::thread::scope(|scope| {
+            for c in 0..CLIENT_THREADS {
+                let addr = addr.clone();
+                let data = &data;
+                let counter = counter.clone();
+                let errors = errors.clone();
+                let lat_us = lat_us.clone();
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    for pass in 0..PASSES_PER_CLIENT {
+                        for i in (c + pass..data.n_rows()).step_by(CLIENT_THREADS) {
+                            let body = json::obj(vec![
+                                (
+                                    "features",
+                                    Json::Arr(
+                                        data.row(i)
+                                            .iter()
+                                            .map(|&v| json::num(v as f64))
+                                            .collect(),
+                                    ),
+                                ),
+                                ("backend", json::s(backend.name())),
+                            ]);
+                            let t0 = Instant::now();
+                            match http_request(&addr, "POST", "/classify", Some(&body)) {
+                                Ok((200, _)) => {
+                                    local.push(t0.elapsed().as_micros() as u64);
+                                    counter.fetch_add(1, Ordering::Relaxed);
+                                }
+                                _ => {
+                                    errors.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
+                    }
+                    lat_us.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let elapsed = start.elapsed().as_secs_f64();
+        let n = counter.load(Ordering::Relaxed);
+        let mut lats = lat_us.lock().unwrap().clone();
+        lats.sort_unstable();
+        let mean = lats.iter().sum::<u64>() as f64 / lats.len().max(1) as f64;
+        let p99 = lats
+            .get((lats.len() as f64 * 0.99) as usize)
+            .copied()
+            .unwrap_or(0);
+        t.row(vec![
+            backend.name().to_string(),
+            n.to_string(),
+            errors.load(Ordering::Relaxed).to_string(),
+            format!("{:.0}", n as f64 / elapsed),
+            format!("{:.0} us", mean),
+            format!("{p99} us"),
+        ]);
+    }
+    println!("\n{}", t.to_text());
+
+    // -- batched endpoint (the XLA fast path) ---------------------------------
+    if handle.router.has_xla() {
+        let rows: Vec<Json> = (0..16)
+            .map(|i| Json::Arr(data.row(i * 9).iter().map(|&v| json::num(v as f64)).collect()))
+            .collect();
+        let body = json::obj(vec![("rows", Json::Arr(rows)), ("backend", json::s("xla"))]);
+        let t0 = Instant::now();
+        let (st, resp) = http_request(&addr, "POST", "/classify_batch", Some(&body))?;
+        assert_eq!(st, 200, "{resp:?}");
+        println!(
+            "batched xla: 16 rows in {:.2?} -> {}",
+            t0.elapsed(),
+            resp.get("labels").unwrap().to_string_compact()
+        );
+    }
+
+    // -- server-side metrics ---------------------------------------------------
+    let (_, metrics) = http_request(&addr, "GET", "/metrics", None)?;
+    println!("\nserver metrics: {}", metrics.to_string_pretty());
+    handle.stop();
+    println!("server stopped cleanly");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+"""AOT bridge: lower the L2 forest model to HLO *text* for the Rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 (behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``). The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs, per variant in ``model.VARIANTS``:
+
+    artifacts/forest_<name>.hlo.txt   — the compiled-from text by Rust/PJRT
+    artifacts/forest_<name>.meta.json — shapes the Rust packer must honour
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, VariantSpec, example_specs, forest_classify
+
+
+def lower_to_hlo_text(spec: VariantSpec) -> str:
+    """Lower one variant to HLO text (tupled outputs for ``to_tuple``)."""
+
+    def fn(x, feat, thr, leaf):
+        return forest_classify(x, feat, thr, leaf, spec=spec)
+
+    lowered = jax.jit(fn).lower(*example_specs(spec))
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit_variant(spec: VariantSpec, out_dir: str) -> dict:
+    hlo = lower_to_hlo_text(spec)
+    hlo_path = os.path.join(out_dir, f"forest_{spec.name}.hlo.txt")
+    meta_path = os.path.join(out_dir, f"forest_{spec.name}.meta.json")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    meta = spec.meta()
+    meta["hlo_file"] = os.path.basename(hlo_path)
+    meta["hlo_chars"] = len(hlo)
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return meta
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    parser.add_argument(
+        "--variant",
+        action="append",
+        choices=[v.name for v in VARIANTS],
+        help="lower only the named variant(s); default: all",
+    )
+    args = parser.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.variant) if args.variant else {v.name for v in VARIANTS}
+    index = []
+    for spec in VARIANTS:
+        if spec.name not in wanted:
+            continue
+        meta = emit_variant(spec, args.out_dir)
+        index.append(meta)
+        print(
+            f"[aot] {spec.name}: B={spec.batch} T={spec.trees} D={spec.depth} "
+            f"F={spec.features} C={spec.classes} -> {meta['hlo_file']} "
+            f"({meta['hlo_chars']} chars, VMEM/block {meta['vmem_block_bytes']} B)"
+        )
+    with open(os.path.join(args.out_dir, "index.json"), "w") as f:
+        json.dump({"variants": index}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

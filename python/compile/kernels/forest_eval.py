@@ -1,0 +1,116 @@
+"""L1 Pallas kernel: batched complete-tree forest evaluation.
+
+Hardware adaptation (paper is CPU/JVM; see DESIGN.md §Hardware-Adaptation):
+
+  * The grid runs over *tree blocks*. Each grid step keeps one block of node
+    tensors (``feat/thr[T_blk, N]``, ``leaf[T_blk, L]``) plus the full input
+    batch ``x[B, F]`` resident in VMEM, expressed with ``BlockSpec`` so the
+    HBM→VMEM schedule (and double-buffering of the next tree block) is
+    Mosaic's to pipeline.
+  * Traversal is level-synchronous — all ``T_blk × B`` cursors advance one
+    level per step via gather + compare + select — so there is no
+    data-dependent control flow, only dense VPU work.
+  * Vote accumulation is fused: the one-hot class sum of each tree block is
+    added into the single ``votes[B, C]`` output ref (the grid is sequential,
+    so read-modify-write accumulation across steps is sound).
+
+``interpret=True`` is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Numerics are verified
+against ``ref.py`` by ``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["forest_votes_pallas", "vmem_block_bytes"]
+
+
+def _forest_kernel(x_ref, feat_ref, thr_ref, leaf_ref, votes_ref, *, depth: int, classes: int):
+    """One grid step: evaluate a block of trees on the whole batch."""
+    x = x_ref[...]  # [B, F] f32
+    feat = feat_ref[...]  # [Tb, N] i32
+    thr = thr_ref[...]  # [Tb, N] f32
+    leaf = leaf_ref[...]  # [Tb, L] i32
+    batch = x.shape[0]
+    t_blk = feat.shape[0]
+
+    idx = jnp.zeros((t_blk, batch), dtype=jnp.int32)
+    cols = jnp.arange(batch, dtype=jnp.int32)[None, :]
+    # Static unroll over levels: `depth` is a compile-time constant, so the
+    # lowered HLO is a straight-line chain of gathers/compares (no scan
+    # bookkeeping for the short depths used here).
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, idx, axis=1)  # [Tb, B]
+        t = jnp.take_along_axis(thr, idx, axis=1)  # [Tb, B]
+        xv = x[cols, f]  # [Tb, B]
+        right = (xv >= t).astype(jnp.int32)
+        idx = 2 * idx + 1 + right
+
+    leaf_idx = idx - (2**depth - 1)
+    cls = jnp.take_along_axis(leaf, leaf_idx, axis=1)  # [Tb, B]
+    onehot = (cls[:, :, None] == jnp.arange(classes, dtype=jnp.int32)).astype(jnp.int32)
+    block_votes = onehot.sum(axis=0)  # [B, C]
+
+    # Sequential-grid accumulation: zero once, then add each tree block.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        votes_ref[...] = jnp.zeros_like(votes_ref)
+
+    votes_ref[...] += block_votes
+
+
+def forest_votes_pallas(x, feat, thr, leaf, *, depth: int, classes: int, block_trees: int):
+    """Per-class vote counts ``[B, C] int32`` via the Pallas kernel.
+
+    ``block_trees`` must divide the tree count; it is the VMEM tile size over
+    trees (see ``vmem_block_bytes`` for the footprint model).
+    """
+    batch, features = x.shape
+    trees, n_nodes = feat.shape
+    n_leaves = leaf.shape[1]
+    if trees % block_trees != 0:
+        raise ValueError(f"block_trees={block_trees} must divide trees={trees}")
+    if n_nodes != 2**depth - 1 or n_leaves != 2**depth:
+        raise ValueError(
+            f"complete-tree layout requires N=2^depth-1, L=2^depth; got "
+            f"N={n_nodes}, L={n_leaves}, depth={depth}"
+        )
+
+    grid = (trees // block_trees,)
+    kernel = functools.partial(_forest_kernel, depth=depth, classes=classes)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch, features), lambda i: (0, 0)),  # x: whole batch
+            pl.BlockSpec((block_trees, n_nodes), lambda i: (i, 0)),
+            pl.BlockSpec((block_trees, n_nodes), lambda i: (i, 0)),
+            pl.BlockSpec((block_trees, n_leaves), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch, classes), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, classes), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls (see module doc)
+    )(
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray(feat, jnp.int32),
+        jnp.asarray(thr, jnp.float32),
+        jnp.asarray(leaf, jnp.int32),
+    )
+
+
+def vmem_block_bytes(*, batch: int, features: int, depth: int, block_trees: int, classes: int) -> int:
+    """VMEM bytes resident per grid step (the L1 footprint model used in
+    DESIGN.md/EXPERIMENTS.md §Perf to size ``block_trees`` against the ~16 MiB
+    TPU VMEM budget with headroom for double-buffering)."""
+    n_nodes = 2**depth - 1
+    n_leaves = 2**depth
+    x_bytes = batch * features * 4
+    node_bytes = block_trees * (n_nodes * (4 + 4) + n_leaves * 4)
+    out_bytes = batch * classes * 4
+    cursor_bytes = block_trees * batch * 4 * 3  # idx, gathered feat/thr working set
+    return x_bytes + node_bytes + out_bytes + cursor_bytes

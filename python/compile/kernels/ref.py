@@ -1,0 +1,96 @@
+"""Pure-jnp (and pure-numpy) oracles for the tensorised forest evaluator.
+
+The serving-path artifact evaluates a *complete-tree layout* forest:
+
+  - ``feat[T, N] int32``  — feature index tested at each internal node,
+  - ``thr[T, N] float32`` — threshold; the predicate is ``x[f] < thr``,
+  - ``leaf[T, L] int32``  — class label at each leaf,
+
+with ``N = 2**depth - 1`` internal slots and ``L = 2**depth`` leaf slots per
+tree. Traversal is level-synchronous: every cursor advances exactly ``depth``
+levels (shallow trees are padded by the Rust packer with always-left dummy
+nodes, ``thr = +inf``, that replicate the leaf class below them).
+
+These references are the correctness oracle for the Pallas kernel
+(``forest_eval.py``): ``forest_votes_ref`` is vectorised jnp, and
+``forest_votes_np`` is a deliberately scalar numpy walk used by the pytest /
+hypothesis suite as an independent second opinion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "forest_votes_ref",
+    "forest_predict_ref",
+    "forest_votes_np",
+    "forest_predict_np",
+]
+
+
+def forest_votes_ref(x, feat, thr, leaf, *, depth: int, classes: int):
+    """Vectorised jnp reference: per-class vote counts ``[B, C] int32``.
+
+    Semantics: each tree ``t`` routes example ``b`` left when
+    ``x[b, feat[t, node]] < thr[t, node]`` and right otherwise, for exactly
+    ``depth`` levels; the reached leaf's class receives one vote.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    feat = jnp.asarray(feat, jnp.int32)
+    thr = jnp.asarray(thr, jnp.float32)
+    leaf = jnp.asarray(leaf, jnp.int32)
+    batch = x.shape[0]
+    trees = feat.shape[0]
+
+    # Cursor over *global* complete-tree node ids: children of i are 2i+1, 2i+2.
+    idx = jnp.zeros((trees, batch), dtype=jnp.int32)
+    cols = jnp.arange(batch, dtype=jnp.int32)[None, :]
+    for _ in range(depth):
+        f = jnp.take_along_axis(feat, idx, axis=1)  # [T, B]
+        t = jnp.take_along_axis(thr, idx, axis=1)  # [T, B]
+        xv = x[cols, f]  # [T, B] — x[b, f[t, b]]
+        right = (xv >= t).astype(jnp.int32)
+        idx = 2 * idx + 1 + right
+    leaf_idx = idx - (2**depth - 1)
+    cls = jnp.take_along_axis(leaf, leaf_idx, axis=1)  # [T, B]
+    onehot = (cls[:, :, None] == jnp.arange(classes, dtype=jnp.int32)).astype(
+        jnp.int32
+    )  # [T, B, C]
+    return onehot.sum(axis=0)  # [B, C]
+
+
+def forest_predict_ref(x, feat, thr, leaf, *, depth: int, classes: int):
+    """jnp reference returning ``(votes[B, C] int32, pred[B] int32)``.
+
+    Ties break toward the lowest class index (``jnp.argmax`` convention),
+    matching the Rust coordinator's majority-vote terminal abstraction.
+    """
+    votes = forest_votes_ref(x, feat, thr, leaf, depth=depth, classes=classes)
+    pred = jnp.argmax(votes, axis=1).astype(jnp.int32)
+    return votes, pred
+
+
+def forest_votes_np(x, feat, thr, leaf, *, depth: int, classes: int):
+    """Scalar numpy oracle — one explicit root-to-leaf walk per (tree, example)."""
+    x = np.asarray(x, np.float32)
+    feat = np.asarray(feat, np.int32)
+    thr = np.asarray(thr, np.float32)
+    leaf = np.asarray(leaf, np.int32)
+    batch, trees = x.shape[0], feat.shape[0]
+    votes = np.zeros((batch, classes), dtype=np.int32)
+    for b in range(batch):
+        for t in range(trees):
+            idx = 0
+            for _ in range(depth):
+                f = feat[t, idx]
+                idx = 2 * idx + 1 + (0 if x[b, f] < thr[t, idx] else 1)
+            votes[b, leaf[t, idx - (2**depth - 1)]] += 1
+    return votes
+
+
+def forest_predict_np(x, feat, thr, leaf, *, depth: int, classes: int):
+    """Scalar numpy oracle returning ``(votes, pred)`` with first-max ties."""
+    votes = forest_votes_np(x, feat, thr, leaf, depth=depth, classes=classes)
+    return votes, votes.argmax(axis=1).astype(np.int32)

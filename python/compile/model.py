@@ -1,0 +1,101 @@
+"""L2 JAX model: the tensorised batched forest classifier.
+
+This is the compute graph the Rust coordinator executes via PJRT on the
+serving path. It composes the L1 Pallas kernel (vote accumulation over tree
+blocks) with the final majority-vote argmax, so the whole request-path
+computation lowers into a single HLO module:
+
+    (x[B,F], feat[T,N], thr[T,N], leaf[T,L]) -> (votes[B,C], pred[B])
+
+Variants (shape configurations) are declared in ``VARIANTS``; ``aot.py``
+lowers each one to ``artifacts/forest_<name>.hlo.txt`` + a ``meta.json``
+sidecar that the Rust runtime reads to pack forests into the tensor layout.
+Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.forest_eval import forest_votes_pallas, vmem_block_bytes
+
+__all__ = ["VariantSpec", "VARIANTS", "forest_classify", "example_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """Static shape configuration for one compiled executable."""
+
+    name: str
+    batch: int
+    trees: int
+    depth: int
+    features: int
+    classes: int
+    block_trees: int
+
+    @property
+    def n_nodes(self) -> int:
+        return 2**self.depth - 1
+
+    @property
+    def n_leaves(self) -> int:
+        return 2**self.depth
+
+    def meta(self) -> dict:
+        return {
+            "name": self.name,
+            "batch": self.batch,
+            "trees": self.trees,
+            "depth": self.depth,
+            "features": self.features,
+            "classes": self.classes,
+            "block_trees": self.block_trees,
+            "n_nodes": self.n_nodes,
+            "n_leaves": self.n_leaves,
+            "vmem_block_bytes": vmem_block_bytes(
+                batch=self.batch,
+                features=self.features,
+                depth=self.depth,
+                block_trees=self.block_trees,
+                classes=self.classes,
+            ),
+        }
+
+
+# One compiled executable per variant (the serving router picks by capacity).
+VARIANTS = (
+    VariantSpec("small", batch=16, trees=32, depth=6, features=8, classes=4, block_trees=8),
+    VariantSpec("base", batch=64, trees=128, depth=8, features=16, classes=8, block_trees=16),
+    VariantSpec("wide", batch=256, trees=128, depth=8, features=16, classes=8, block_trees=16),
+)
+
+
+def forest_classify(x, feat, thr, leaf, *, spec: VariantSpec):
+    """Full request-path computation: votes via the Pallas kernel, then the
+    majority vote (ties toward the lowest class index, matching the Rust
+    ADD majority-vote abstraction)."""
+    votes = forest_votes_pallas(
+        x,
+        feat,
+        thr,
+        leaf,
+        depth=spec.depth,
+        classes=spec.classes,
+        block_trees=spec.block_trees,
+    )
+    pred = jnp.argmax(votes, axis=1).astype(jnp.int32)
+    return votes, pred
+
+
+def example_specs(spec: VariantSpec):
+    """``jax.ShapeDtypeStruct`` arguments for ``jax.jit(...).lower``."""
+    return (
+        jax.ShapeDtypeStruct((spec.batch, spec.features), jnp.float32),
+        jax.ShapeDtypeStruct((spec.trees, spec.n_nodes), jnp.int32),
+        jax.ShapeDtypeStruct((spec.trees, spec.n_nodes), jnp.float32),
+        jax.ShapeDtypeStruct((spec.trees, spec.n_leaves), jnp.int32),
+    )

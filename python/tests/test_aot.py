@@ -1,0 +1,43 @@
+"""AOT bridge: HLO-text emission and metadata sidecars.
+
+Only the `small` variant is lowered here to keep the suite fast; `make
+artifacts` lowers all variants and the Rust integration tests compile them
+through the actual PJRT client.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from compile import aot
+from compile.model import VARIANTS
+
+
+def test_lower_small_variant_to_hlo_text():
+    spec = next(v for v in VARIANTS if v.name == "small")
+    hlo = aot.lower_to_hlo_text(spec)
+    # HLO text, not a serialized proto (xla_extension 0.5.1 interop contract).
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # The majority-vote argmax must have been fused into the same module.
+    assert hlo.count("ENTRY") == 1
+
+
+def test_emit_variant_writes_artifacts(tmp_path):
+    spec = next(v for v in VARIANTS if v.name == "small")
+    meta = aot.emit_variant(spec, str(tmp_path))
+    hlo_path = tmp_path / meta["hlo_file"]
+    meta_path = tmp_path / f"forest_{spec.name}.meta.json"
+    assert hlo_path.exists() and meta_path.exists()
+    on_disk = json.loads(meta_path.read_text())
+    assert on_disk["trees"] == spec.trees
+    assert on_disk["hlo_chars"] == len(hlo_path.read_text())
+
+
+def test_main_emits_index(tmp_path):
+    rc = aot.main(["--out-dir", str(tmp_path), "--variant", "small"])
+    assert rc == 0
+    index = json.loads((tmp_path / "index.json").read_text())
+    assert [v["name"] for v in index["variants"]] == ["small"]
+    assert os.path.exists(tmp_path / "forest_small.hlo.txt")

@@ -1,0 +1,150 @@
+"""L1 correctness: Pallas kernel vs pure-jnp ref vs scalar numpy oracle.
+
+This is the core correctness signal for the compiled serving artifact: the
+hypothesis sweep walks shapes/dtypes and random forest tensors and requires
+exact agreement (votes are integer counts — no tolerance needed; the float
+threshold compares use identical f32 semantics in all three implementations).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.forest_eval import forest_votes_pallas, vmem_block_bytes
+from compile.kernels.ref import (
+    forest_predict_np,
+    forest_predict_ref,
+    forest_votes_np,
+    forest_votes_ref,
+)
+
+
+def make_forest(rng, *, batch, trees, depth, features, classes, thr_lo=-2.0, thr_hi=2.0):
+    """Random forest tensors in complete-tree layout + a random input batch."""
+    n_nodes = 2**depth - 1
+    n_leaves = 2**depth
+    x = rng.uniform(-3.0, 3.0, size=(batch, features)).astype(np.float32)
+    feat = rng.integers(0, features, size=(trees, n_nodes)).astype(np.int32)
+    thr = rng.uniform(thr_lo, thr_hi, size=(trees, n_nodes)).astype(np.float32)
+    leaf = rng.integers(0, classes, size=(trees, n_leaves)).astype(np.int32)
+    return x, feat, thr, leaf
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    batch=st.integers(1, 8),
+    depth=st.integers(1, 5),
+    block_trees=st.integers(1, 4),
+    n_blocks=st.integers(1, 4),
+    features=st.integers(1, 6),
+    classes=st.integers(2, 6),
+)
+def test_pallas_matches_oracles(seed, batch, depth, block_trees, n_blocks, features, classes):
+    trees = block_trees * n_blocks
+    rng = np.random.default_rng(seed)
+    x, feat, thr, leaf = make_forest(
+        rng, batch=batch, trees=trees, depth=depth, features=features, classes=classes
+    )
+    got = np.asarray(
+        forest_votes_pallas(
+            x, feat, thr, leaf, depth=depth, classes=classes, block_trees=block_trees
+        )
+    )
+    want_jnp = np.asarray(forest_votes_ref(x, feat, thr, leaf, depth=depth, classes=classes))
+    want_np = forest_votes_np(x, feat, thr, leaf, depth=depth, classes=classes)
+    np.testing.assert_array_equal(want_jnp, want_np)
+    np.testing.assert_array_equal(got, want_np)
+    # Every tree casts exactly one vote per example.
+    assert (got.sum(axis=1) == trees).all()
+
+
+def test_single_tree_hand_computed():
+    """depth-1 stump: x[0] < 0.5 -> class 1 else class 2."""
+    x = np.array([[0.0], [1.0], [0.5]], dtype=np.float32)  # 0.5 is NOT < 0.5 -> right
+    feat = np.zeros((1, 1), dtype=np.int32)
+    thr = np.full((1, 1), 0.5, dtype=np.float32)
+    leaf = np.array([[1, 2]], dtype=np.int32)
+    votes = np.asarray(
+        forest_votes_pallas(x, feat, thr, leaf, depth=1, classes=3, block_trees=1)
+    )
+    np.testing.assert_array_equal(votes, [[0, 1, 0], [0, 0, 1], [0, 0, 1]])
+
+
+def test_padding_inf_threshold_routes_left():
+    """Dummy padding nodes (thr=+inf) must always route left — this is the
+    contract the Rust packer relies on to pad shallow trees."""
+    x = np.array([[1e30, -1e30]], dtype=np.float32)
+    feat = np.zeros((1, 3), dtype=np.int32)
+    thr = np.array([[np.inf, np.inf, np.inf]], dtype=np.float32)
+    leaf = np.array([[7, 0, 0, 0]], dtype=np.int32)
+    votes = np.asarray(forest_votes_pallas(x, feat, thr, leaf, depth=2, classes=8, block_trees=1))
+    assert votes[0, 7] == 1 and votes.sum() == 1
+
+
+def test_boundary_equal_goes_right():
+    """x == thr takes the right child (predicate is strict `<`)."""
+    x = np.array([[2.45]], dtype=np.float32)
+    feat = np.zeros((1, 1), dtype=np.int32)
+    thr = np.array([[2.45]], dtype=np.float32)
+    leaf = np.array([[0, 1]], dtype=np.int32)
+    votes = np.asarray(forest_votes_pallas(x, feat, thr, leaf, depth=1, classes=2, block_trees=1))
+    np.testing.assert_array_equal(votes, [[0, 1]])
+
+
+def test_block_trees_must_divide():
+    rng = np.random.default_rng(0)
+    x, feat, thr, leaf = make_forest(rng, batch=2, trees=6, depth=2, features=2, classes=2)
+    with pytest.raises(ValueError, match="must divide"):
+        forest_votes_pallas(x, feat, thr, leaf, depth=2, classes=2, block_trees=4)
+
+
+def test_layout_shape_validation():
+    rng = np.random.default_rng(0)
+    x, feat, thr, leaf = make_forest(rng, batch=2, trees=2, depth=3, features=2, classes=2)
+    with pytest.raises(ValueError, match="complete-tree"):
+        forest_votes_pallas(x, feat, thr, leaf, depth=2, classes=2, block_trees=1)
+
+
+def test_predict_tie_breaks_to_lowest_class():
+    """Two trees voting class 2 and class 0 -> tie -> predict class 0."""
+    x = np.zeros((1, 1), dtype=np.float32)
+    feat = np.zeros((2, 1), dtype=np.int32)
+    thr = np.full((2, 1), np.inf, dtype=np.float32)  # both go left
+    leaf = np.array([[2, 0], [0, 0]], dtype=np.int32)
+    votes, pred = forest_predict_ref(x, feat, thr, leaf, depth=1, classes=3)
+    votes_np, pred_np = forest_predict_np(x, feat, thr, leaf, depth=1, classes=3)
+    np.testing.assert_array_equal(np.asarray(votes), votes_np)
+    assert int(pred[0]) == 0 == int(pred_np[0])
+
+
+def test_vmem_block_model_monotone():
+    """Footprint model grows with every dimension (sanity for §Perf sizing)."""
+    base = dict(batch=64, features=16, depth=8, block_trees=16, classes=8)
+    b0 = vmem_block_bytes(**base)
+    for key in base:
+        grown = dict(base)
+        grown[key] = base[key] * 2
+        assert vmem_block_bytes(**grown) > b0, key
+
+
+def test_deterministic_across_calls():
+    rng = np.random.default_rng(42)
+    x, feat, thr, leaf = make_forest(rng, batch=4, trees=8, depth=3, features=3, classes=3)
+    a = np.asarray(forest_votes_pallas(x, feat, thr, leaf, depth=3, classes=3, block_trees=4))
+    b = np.asarray(forest_votes_pallas(x, feat, thr, leaf, depth=3, classes=3, block_trees=4))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_block_size_invariance():
+    """Vote totals must not depend on the VMEM tiling choice."""
+    rng = np.random.default_rng(7)
+    x, feat, thr, leaf = make_forest(rng, batch=3, trees=12, depth=3, features=4, classes=5)
+    ref = None
+    for bt in (1, 2, 3, 4, 6, 12):
+        got = np.asarray(forest_votes_pallas(x, feat, thr, leaf, depth=3, classes=5, block_trees=bt))
+        if ref is None:
+            ref = got
+        np.testing.assert_array_equal(got, ref)

@@ -1,0 +1,72 @@
+"""L2 model: variant contracts, shapes, and end-to-end (small) execution."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import VARIANTS, example_specs, forest_classify
+from compile.kernels.ref import forest_predict_np
+
+from .test_kernel import make_forest
+
+
+def test_variant_invariants():
+    names = set()
+    for spec in VARIANTS:
+        assert spec.name not in names
+        names.add(spec.name)
+        assert spec.trees % spec.block_trees == 0
+        assert spec.n_nodes == 2**spec.depth - 1
+        assert spec.n_leaves == 2**spec.depth
+        # Fits comfortably in a 16 MiB VMEM budget with double-buffer headroom.
+        assert spec.meta()["vmem_block_bytes"] < 8 * 2**20
+
+
+@pytest.mark.parametrize("spec", VARIANTS, ids=lambda s: s.name)
+def test_variant_output_shapes(spec):
+    """jax.eval_shape: verify the full graph's output contract without running it."""
+    votes, pred = jax.eval_shape(
+        lambda *a: forest_classify(*a, spec=spec), *example_specs(spec)
+    )
+    assert votes.shape == (spec.batch, spec.classes) and votes.dtype == jnp.int32
+    assert pred.shape == (spec.batch,) and pred.dtype == jnp.int32
+
+
+def test_small_variant_end_to_end():
+    spec = next(v for v in VARIANTS if v.name == "small")
+    rng = np.random.default_rng(3)
+    x, feat, thr, leaf = make_forest(
+        rng,
+        batch=spec.batch,
+        trees=spec.trees,
+        depth=spec.depth,
+        features=spec.features,
+        classes=spec.classes,
+    )
+    votes, pred = forest_classify(x, feat, thr, leaf, spec=spec)
+    want_votes, want_pred = forest_predict_np(
+        x, feat, thr, leaf, depth=spec.depth, classes=spec.classes
+    )
+    np.testing.assert_array_equal(np.asarray(votes), want_votes)
+    np.testing.assert_array_equal(np.asarray(pred), want_pred)
+
+
+def test_meta_roundtrip_fields():
+    for spec in VARIANTS:
+        meta = spec.meta()
+        for key in (
+            "name",
+            "batch",
+            "trees",
+            "depth",
+            "features",
+            "classes",
+            "block_trees",
+            "n_nodes",
+            "n_leaves",
+            "vmem_block_bytes",
+        ):
+            assert key in meta, key

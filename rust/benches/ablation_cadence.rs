@@ -1,0 +1,104 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Reduction cadence** (`reduce_every`): the paper argues §5 that
+//!    applying unsat elimination *during* aggregation is what makes the
+//!    approach scale. Sweeping the cadence shows the trade-off between
+//!    reduction overhead and intermediate-diagram growth.
+//! 2. **Predicate order**: `(feature, threshold)`-sorted vs
+//!    frequency-descending variable orders.
+//!
+//! Env: FOREST_ADD_BENCH_ABLATION_TREES (default 300).
+
+use forest_add::compile::{Abstraction, CompileOptions, ForestCompiler};
+use forest_add::data::datasets;
+use forest_add::forest::ForestLearner;
+use forest_add::predicate::PredicateOrder;
+use forest_add::bench_support::report;
+use forest_add::util::table::Table;
+
+fn main() {
+    let trees: usize = std::env::var("FOREST_ADD_BENCH_ABLATION_TREES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default().trees(trees).seed(42).fit(&data);
+
+    // --- cadence sweep ------------------------------------------------------
+    let mut t = Table::new(&[
+        "reduce_every",
+        "compile time",
+        "peak live nodes",
+        "final nodes",
+        "reductions",
+    ]);
+    let mut notes = Vec::new();
+    for cadence in [1usize, 2, 5, 10, 25, 100] {
+        let opts = CompileOptions {
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            reduce_every: cadence,
+            node_budget: 5_000_000,
+            ..Default::default()
+        };
+        match ForestCompiler::new(opts).compile(&forest) {
+            Ok(dd) => {
+                t.row(vec![
+                    cadence.to_string(),
+                    format!("{:.2?}", dd.stats.elapsed),
+                    dd.stats.peak_live.to_string(),
+                    dd.size().total().to_string(),
+                    dd.stats.reduces.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![
+                    cadence.to_string(),
+                    "—".into(),
+                    "exploded".into(),
+                    "—".into(),
+                    "—".into(),
+                ]);
+                notes.push(format!("cadence {cadence}: {e}"));
+            }
+        }
+    }
+    report(
+        "ablation_cadence",
+        &format!("Ablation — unsat-elimination cadence (iris, {trees} trees)"),
+        &t,
+        &notes,
+    );
+
+    // --- predicate order ------------------------------------------------------
+    let mut t = Table::new(&["order", "compile time", "final nodes", "mean steps"]);
+    for (name, order) in [
+        ("feature-threshold", PredicateOrder::FeatureThreshold),
+        ("frequency-desc", PredicateOrder::FrequencyDesc),
+    ] {
+        let opts = CompileOptions {
+            order,
+            node_budget: 5_000_000,
+            ..Default::default()
+        };
+        match ForestCompiler::new(opts).compile(&forest) {
+            Ok(dd) => {
+                t.row(vec![
+                    name.to_string(),
+                    format!("{:.2?}", dd.stats.elapsed),
+                    dd.size().total().to_string(),
+                    format!("{:.2}", dd.mean_steps(&data)),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![name.to_string(), "—".into(), format!("{e}"), "—".into()]);
+            }
+        }
+    }
+    report(
+        "ablation_order",
+        &format!("Ablation — predicate order (iris, {trees} trees)"),
+        &t,
+        &[],
+    );
+}

@@ -1,0 +1,29 @@
+//! Fig. 6 reproduction: average classification steps vs forest size (Iris).
+//!
+//! Series: Random Forest, class-word DD, class-vector DD, most-frequent-
+//! class DD, each with and without unsatisfiable-path elimination (`*`).
+//! Non-`*` series are cut off when they exceed the node budget — the
+//! paper's own curves stop there too.
+//!
+//! Env: FOREST_ADD_BENCH_MAX_TREES (default 10000), FOREST_ADD_BENCH_BUDGET.
+
+use forest_add::bench_support::{paper_sweep, report, BenchEnv};
+use forest_add::data::datasets;
+use forest_add::util::table::fmt_thousands;
+
+fn main() {
+    let env = BenchEnv::load();
+    let data = datasets::load("iris").expect("built-in dataset");
+    let sweep = paper_sweep(&data, &env, 42);
+    let table = sweep.to_table(|p| fmt_thousands(p.steps, 2));
+    let notes = sweep.cutoff_notes();
+    report(
+        "fig6_steps",
+        &format!(
+            "Fig. 6 — mean classification steps vs forest size (iris, up to {} trees)",
+            env.max_trees
+        ),
+        &table,
+        &notes,
+    );
+}

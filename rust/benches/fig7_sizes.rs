@@ -1,0 +1,28 @@
+//! Fig. 7 reproduction: structure sizes vs forest size (Iris).
+//!
+//! Same sweep as Fig. 6, reporting node counts: the Random Forest grows
+//! linearly, the plain DDs explode (cut off at the node budget), and the
+//! `*` variants stay compact — with the final `DD*` far below the forest.
+//!
+//! Env: FOREST_ADD_BENCH_MAX_TREES (default 10000), FOREST_ADD_BENCH_BUDGET.
+
+use forest_add::bench_support::{paper_sweep, report, BenchEnv};
+use forest_add::data::datasets;
+use forest_add::util::table::fmt_thousands;
+
+fn main() {
+    let env = BenchEnv::load();
+    let data = datasets::load("iris").expect("built-in dataset");
+    let sweep = paper_sweep(&data, &env, 42);
+    let table = sweep.to_table(|p| fmt_thousands(p.size as f64, 0));
+    let notes = sweep.cutoff_notes();
+    report(
+        "fig7_sizes",
+        &format!(
+            "Fig. 7 — structure sizes (nodes) vs forest size (iris, up to {} trees)",
+            env.max_trees
+        ),
+        &table,
+        &notes,
+    );
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the hot-path primitives — the before/after
+//! instrument for the EXPERIMENTS.md §Perf iteration log.
+//!
+//! Covers: DD evaluation walk, forest walk, ADD combine, unsat reduction,
+//! tree→ADD conversion, and the packed-tensor row evaluation that mirrors
+//! the L1 kernel.
+
+use forest_add::add::reduce::reduce_feasible;
+use forest_add::add::{ClassVector, Manager};
+use forest_add::bench_support::{measure_ns, report, BenchEnv};
+use forest_add::compile::{CompileOptions, ForestCompiler};
+use forest_add::data::datasets;
+use forest_add::forest::ForestLearner;
+use forest_add::predicate::{PredicateOrder, PredicatePool};
+use forest_add::util::table::Table;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let env = BenchEnv::load();
+    let window = Duration::from_secs_f64(env.measure_secs.min(1.0));
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default().trees(100).seed(42).fit(&data);
+    let dd = ForestCompiler::new(CompileOptions::default())
+        .compile(&forest)
+        .unwrap();
+
+    let mut t = Table::new(&["operation", "time/op", "ops/s"]);
+    let mut add_row = |t: &mut Table, name: &str, ns: f64| {
+        t.row(vec![
+            name.to_string(),
+            if ns > 1e6 {
+                format!("{:.2} ms", ns / 1e6)
+            } else if ns > 1e3 {
+                format!("{:.2} us", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            },
+            format!("{:.0}", 1e9 / ns),
+        ]);
+    };
+
+    // DD walk (the request-path primitive)
+    let mut i = 0usize;
+    let ns = measure_ns(window, || {
+        let x = data.row(i % data.n_rows());
+        i += 1;
+        std::hint::black_box(dd.classify(x));
+    });
+    add_row(&mut t, "DD* classify (1 row)", ns);
+
+    // forest walk baseline
+    let mut i = 0usize;
+    let ns = measure_ns(window, || {
+        let x = data.row(i % data.n_rows());
+        i += 1;
+        std::hint::black_box(forest.predict(x));
+    });
+    add_row(&mut t, "forest predict (100 trees, 1 row)", ns);
+
+    // tree -> ADD conversion + combine (the compiler inner loop)
+    let pool = Arc::new(PredicatePool::from_forest(
+        &forest,
+        PredicateOrder::FeatureThreshold,
+    ));
+    let n_classes = forest.n_classes();
+    let ns = measure_ns(window, || {
+        let mut mgr: Manager<ClassVector> = Manager::new(pool.clone());
+        let mut acc = mgr.terminal(ClassVector::zero(n_classes));
+        for tree in forest.trees.iter().take(10) {
+            let t = mgr
+                .from_tree(tree, &|c| ClassVector::unit(c as u16, n_classes))
+                .unwrap();
+            acc = mgr.combine(acc, t);
+        }
+        std::hint::black_box(mgr.size(acc).total());
+    });
+    add_row(&mut t, "aggregate 10 trees (fresh manager)", ns);
+
+    // unsat reduction of a 10-tree aggregate
+    let ns = measure_ns(window, || {
+        let mut mgr: Manager<ClassVector> = Manager::new(pool.clone());
+        let mut acc = mgr.terminal(ClassVector::zero(n_classes));
+        for tree in forest.trees.iter().take(10) {
+            let t = mgr
+                .from_tree(tree, &|c| ClassVector::unit(c as u16, n_classes))
+                .unwrap();
+            acc = mgr.combine(acc, t);
+        }
+        let r = reduce_feasible(&mut mgr, acc);
+        std::hint::black_box(r);
+    });
+    add_row(&mut t, "aggregate+reduce 10 trees", ns);
+
+    // full compile throughput (DD*, 30-tree prefix — the per-tree cost
+    // grows with diagram size; see EXPERIMENTS.md §Perf for the scaling)
+    let prefix = forest.prefix(30);
+    let ns = measure_ns(Duration::from_secs_f64(env.measure_secs), || {
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&prefix)
+            .unwrap();
+        std::hint::black_box(dd.size().total());
+    });
+    add_row(&mut t, "full compile (30 trees, DD*)", ns);
+
+    // packed-tensor row eval (rust mirror of the L1 kernel semantics)
+    let shallow = ForestLearner::default()
+        .trees(32)
+        .max_depth(6)
+        .seed(3)
+        .fit(&data);
+    let meta = forest_add::runtime::VariantMeta {
+        name: "bench".into(),
+        batch: 16,
+        trees: 32,
+        depth: 6,
+        features: 8,
+        classes: 4,
+        n_nodes: 63,
+        n_leaves: 64,
+        hlo_file: String::new(),
+    };
+    let packed = forest_add::runtime::PackedForest::pack(&shallow, &meta).unwrap();
+    let mut i = 0usize;
+    let ns = measure_ns(window, || {
+        let x = data.row(i % data.n_rows());
+        i += 1;
+        std::hint::black_box(packed.eval_row(x, 6, 3));
+    });
+    add_row(&mut t, "packed tensor eval (32 trees, 1 row)", ns);
+
+    report("microbench", "Hot-path micro-benchmarks", &t, &[]);
+}

@@ -1,0 +1,150 @@
+//! Serving benchmark: latency/throughput of the three backends through the
+//! router (systems extension beyond the paper's step-count metric).
+//!
+//! Measures: single-request latency per backend (router-level, no HTTP
+//! overhead), batched XLA throughput vs batch size, and concurrent
+//! multi-client throughput. Env: FOREST_ADD_BENCH_SECONDS.
+
+use forest_add::bench_support::{measure_ns, report, BenchEnv};
+use forest_add::compile::CompileOptions;
+use forest_add::data::datasets;
+use forest_add::serve::batcher::BatcherConfig;
+use forest_add::serve::metrics::ServerMetrics;
+use forest_add::serve::router::Router;
+use forest_add::serve::xla_backend::XlaBackend;
+use forest_add::serve::{BackendKind, ClassifyRequest, ModelBundle};
+use forest_add::util::table::Table;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() {
+    let env = BenchEnv::load();
+    let window = Duration::from_secs_f64(env.measure_secs);
+    let data = datasets::load("iris").unwrap();
+    // `small` artifact geometry: 32 trees, depth 6.
+    let bundle =
+        Arc::new(ModelBundle::train(&data, 32, 6, 7, CompileOptions::default()).unwrap());
+    let xla = match XlaBackend::start("artifacts", "small", &bundle.forest) {
+        Ok(b) => Some(Arc::new(b)),
+        Err(e) => {
+            eprintln!("[serving] xla unavailable ({e}); native backends only");
+            None
+        }
+    };
+    let has_xla = xla.is_some();
+    let router = Arc::new(Router::new(
+        bundle.clone(),
+        Arc::new(ServerMetrics::default()),
+        BackendKind::Dd,
+        xla,
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 4096,
+        },
+    ));
+
+    // --- single-request latency per backend -------------------------------
+    let mut t = Table::new(&["backend", "mean latency", "throughput (req/s)"]);
+    let mut backends = vec![BackendKind::Forest, BackendKind::Dd];
+    if has_xla {
+        backends.push(BackendKind::Xla);
+    }
+    for &backend in &backends {
+        let mut i = 0usize;
+        let ns = measure_ns(window, || {
+            let row = data.row(i % data.n_rows()).to_vec();
+            i += 1;
+            let resp = router
+                .classify(&ClassifyRequest {
+                    features: row,
+                    backend: Some(backend),
+                })
+                .unwrap();
+            std::hint::black_box(resp.class);
+        });
+        t.row(vec![
+            backend.name().to_string(),
+            format!("{:.1} us", ns / 1000.0),
+            format!("{:.0}", 1e9 / ns),
+        ]);
+    }
+    report(
+        "serving_latency",
+        "Serving — single-request latency per backend (router-level)",
+        &t,
+        &[],
+    );
+
+    // --- concurrent throughput (8 client threads, dd backend) --------------
+    let mut t = Table::new(&["backend", "clients", "throughput (req/s)"]);
+    for &backend in &backends {
+        for clients in [1usize, 4, 8] {
+            let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let count = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let router = router.clone();
+                    let data = &data;
+                    let stop = stop.clone();
+                    let count = count.clone();
+                    scope.spawn(move || {
+                        let mut i = c;
+                        while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                            let row = data.row(i % data.n_rows()).to_vec();
+                            i += clients;
+                            if router
+                                .classify(&ClassifyRequest {
+                                    features: row,
+                                    backend: Some(backend),
+                                })
+                                .is_ok()
+                            {
+                                count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            }
+                        }
+                    });
+                }
+                std::thread::sleep(window);
+                stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            });
+            let total = count.load(std::sync::atomic::Ordering::Relaxed);
+            t.row(vec![
+                backend.name().to_string(),
+                clients.to_string(),
+                format!("{:.0}", total as f64 / window.as_secs_f64()),
+            ]);
+        }
+    }
+    report(
+        "serving_throughput",
+        "Serving — concurrent throughput per backend",
+        &t,
+        &[],
+    );
+
+    // --- batched endpoint scaling ------------------------------------------
+    let mut t = Table::new(&["backend", "batch", "rows/s"]);
+    for &backend in &backends {
+        for batch in [1usize, 8, 16] {
+            let rows: Vec<Vec<f32>> = (0..batch)
+                .map(|i| data.row((i * 13) % data.n_rows()).to_vec())
+                .collect();
+            let ns = measure_ns(window, || {
+                let out = router.classify_batch(&rows, Some(backend)).unwrap();
+                std::hint::black_box(out.len());
+            });
+            t.row(vec![
+                backend.name().to_string(),
+                batch.to_string(),
+                format!("{:.0}", batch as f64 * 1e9 / ns),
+            ]);
+        }
+    }
+    report(
+        "serving_batch",
+        "Serving — batched classification scaling",
+        &t,
+        &[],
+    );
+}

@@ -1,0 +1,65 @@
+//! Table 1 reproduction: classification-step improvements at 10,000 trees
+//! across the six UCI datasets (`Random Forest` vs `Final DD` =
+//! most-frequent-class DD*).
+//!
+//! Env: FOREST_ADD_BENCH_TABLE_TREES (default 10000).
+
+use forest_add::bench_support::{report, table_row_budgeted, BenchEnv};
+use forest_add::data::datasets;
+use forest_add::util::table::{fmt_reduction, fmt_thousands, Table};
+
+fn main() {
+    let env = BenchEnv::load();
+    let mut table = Table::new(&["Dataset", "Random Forest", "Final DD", "reduction"]);
+    let mut notes = Vec::new();
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        eprintln!("[table1] {name}: {} trees …", env.table_trees);
+        let start = std::time::Instant::now();
+        let (forest, dd, reached) = table_row_budgeted(
+            &data,
+            env.table_trees,
+            42,
+            std::time::Duration::from_secs(env.dataset_secs),
+        );
+        let forest = forest.prefix(reached);
+        let rf = forest.mean_steps(&data);
+        let dds = dd.mean_steps(&data);
+        table.row(vec![
+            format!("{} (n={reached})", pretty(name)),
+            fmt_thousands(rf, 2),
+            fmt_thousands(dds, 2),
+            fmt_reduction(rf, dds),
+        ]);
+        notes.push(format!(
+            "{name}: {reached}/{} trees within budget, compile {:.1?}, {} DD nodes",
+            env.table_trees,
+            start.elapsed(),
+            dd.size().total()
+        ));
+    }
+    report(
+        "table1_steps",
+        &format!(
+            "Table 1 — running time (steps) improvements at {} trees",
+            env.table_trees
+        ),
+        &table,
+        &notes,
+    );
+}
+
+fn pretty(name: &str) -> String {
+    match name {
+        "balance-scale" => "Balance Scale".into(),
+        "breast-cancer" => "Breast Cancer".into(),
+        "tic-tac-toe" => "Tic-Tac-Toe".into(),
+        other => {
+            let mut c = other.chars();
+            match c.next() {
+                Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+                None => String::new(),
+            }
+        }
+    }
+}

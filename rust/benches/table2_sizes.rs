@@ -1,0 +1,48 @@
+//! Table 2 reproduction: decision-diagram sizes at 10,000 trees across the
+//! six UCI datasets (`Random Forest` node count vs `Final DD` node count).
+//!
+//! Env: FOREST_ADD_BENCH_TABLE_TREES (default 10000).
+
+use forest_add::bench_support::{report, table_row_budgeted, BenchEnv};
+use forest_add::data::datasets;
+use forest_add::util::table::{fmt_reduction, fmt_thousands, Table};
+
+fn main() {
+    let env = BenchEnv::load();
+    let mut table = Table::new(&["Dataset", "Random Forest", "Final DD", "reduction"]);
+    let mut notes = Vec::new();
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        eprintln!("[table2] {name}: {} trees …", env.table_trees);
+        let (forest, dd, reached) = table_row_budgeted(
+            &data,
+            env.table_trees,
+            42,
+            std::time::Duration::from_secs(env.dataset_secs),
+        );
+        let forest = forest.prefix(reached);
+        let rf = forest.n_nodes() as f64;
+        let dds = dd.size().total() as f64;
+        table.row(vec![
+            format!("{name} (n={reached})"),
+            fmt_thousands(rf, 0),
+            fmt_thousands(dds, 0),
+            fmt_reduction(rf, dds),
+        ]);
+        notes.push(format!(
+            "{name}: {reached}/{} trees within budget, {} decision + {} terminal nodes",
+            env.table_trees,
+            dd.size().internal,
+            dd.size().terminals
+        ));
+    }
+    report(
+        "table2_sizes",
+        &format!(
+            "Table 2 — decision diagram sizes at {} trees",
+            env.table_trees
+        ),
+        &table,
+        &notes,
+    );
+}

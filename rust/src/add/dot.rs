@@ -1,0 +1,141 @@
+//! Graphviz (DOT) export of decision diagrams — the rendering behind the
+//! paper's Figures 2–5.
+
+use super::{Manager, NodeId, Terminal};
+use crate::data::Schema;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Render the cone under `root` as a DOT digraph. Decision nodes show the
+/// pool predicate (using `schema` feature names); terminals are rendered
+/// with `term` (e.g. a class label, a vote vector). Solid edges are the
+/// `true` (`<`) branch, dashed the `false` branch — the paper's convention.
+pub fn to_dot<T: Terminal>(
+    mgr: &Manager<T>,
+    root: NodeId,
+    schema: &Schema,
+    term: &impl Fn(&T) -> String,
+) -> String {
+    let mut out = String::from("digraph add {\n  rankdir=TB;\n  node [fontname=\"Helvetica\"];\n");
+    let mut names: HashMap<NodeId, String> = HashMap::new();
+    let mut stack = vec![root];
+    let mut next = 0usize;
+    // First pass: name + declare nodes.
+    while let Some(id) = stack.pop() {
+        if names.contains_key(&id) {
+            continue;
+        }
+        let name = format!("n{next}");
+        next += 1;
+        if id.is_terminal() {
+            let _ = writeln!(
+                out,
+                "  {name} [shape=box, style=filled, fillcolor=lightgrey, label=\"{}\"];",
+                escape(&term(mgr.terminal_value(id)))
+            );
+        } else {
+            let n = mgr.internal(id);
+            let _ = writeln!(
+                out,
+                "  {name} [shape=ellipse, label=\"{}\"];",
+                escape(&mgr.pool().render(n.level, schema))
+            );
+            stack.push(n.hi);
+            stack.push(n.lo);
+        }
+        names.insert(id, name);
+    }
+    // Second pass: edges.
+    let mut seen = std::collections::HashSet::new();
+    let mut stack = vec![root];
+    while let Some(id) = stack.pop() {
+        if id.is_terminal() || !seen.insert(id) {
+            continue;
+        }
+        let n = mgr.internal(id);
+        let _ = writeln!(out, "  {} -> {} [style=solid];", names[&id], names[&n.hi]);
+        let _ = writeln!(out, "  {} -> {} [style=dashed];", names[&id], names[&n.lo]);
+        stack.push(n.hi);
+        stack.push(n.lo);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::add::{ClassLabel, Manager};
+    use crate::data::{Feature, FeatureKind};
+    use crate::predicate::{Domain, Predicate, PredicatePool};
+    use std::sync::Arc;
+
+    #[test]
+    fn dot_contains_nodes_edges_and_labels() {
+        let pool = Arc::new(PredicatePool::from_predicates(
+            vec![Predicate {
+                feature: 0,
+                threshold: 1.65,
+            }],
+            vec![Domain::Real],
+            1,
+        ));
+        let schema = Schema {
+            features: vec![Feature {
+                name: "petalwidth".into(),
+                kind: FeatureKind::Numeric,
+            }],
+            classes: vec!["a".into(), "b".into()],
+        };
+        let mut m: Manager<ClassLabel> = Manager::new(pool);
+        let a = m.terminal(0);
+        let b = m.terminal(1);
+        let root = m.mk(0, a, b);
+        let dot = to_dot(&m, root, &schema, &|c| format!("class {c}"));
+        assert!(dot.starts_with("digraph add {"));
+        assert!(dot.contains("petalwidth < 1.65"));
+        assert!(dot.contains("class 0"));
+        assert!(dot.contains("class 1"));
+        assert!(dot.contains("style=solid"));
+        assert!(dot.contains("style=dashed"));
+        assert!(dot.trim_end().ends_with('}'));
+    }
+
+    #[test]
+    fn shared_nodes_rendered_once() {
+        let pool = Arc::new(PredicatePool::from_predicates(
+            vec![
+                Predicate {
+                    feature: 0,
+                    threshold: 1.0,
+                },
+                Predicate {
+                    feature: 0,
+                    threshold: 2.0,
+                },
+            ],
+            vec![Domain::Real],
+            1,
+        ));
+        let schema = Schema {
+            features: vec![Feature {
+                name: "x".into(),
+                kind: FeatureKind::Numeric,
+            }],
+            classes: vec![],
+        };
+        let mut m: Manager<ClassLabel> = Manager::new(pool);
+        let a = m.terminal(0);
+        let b = m.terminal(1);
+        let shared = m.mk(1, a, b);
+        let root = m.mk(0, shared, b);
+        let dot = to_dot(&m, root, &schema, &|c| c.to_string());
+        // 2 decision nodes + 2 terminals = 4 node declarations
+        assert_eq!(dot.matches("shape=ellipse").count(), 2);
+        assert_eq!(dot.matches("shape=box").count(), 2);
+    }
+}

@@ -1,0 +1,628 @@
+//! Algebraic Decision Diagrams — the ADD-Lib substitute at the core of the
+//! paper's aggregation machinery (§3–§4).
+//!
+//! A [`Manager`] owns a hash-consed node arena over a fixed
+//! [`PredicatePool`] (the variable order). Diagrams are canonical for that
+//! order: the unique table guarantees that structurally equal cones share
+//! nodes, and the ADD reduction rule (`hi == lo ⇒ child`) removes redundant
+//! tests, so semantic equality of functions coincides with [`NodeId`]
+//! equality within one manager.
+//!
+//! Operations, mirroring the paper's toolbox:
+//! - [`Manager::from_tree`] — the transformation `d(t)` of §3.2 via `ite`,
+//! - [`Manager::combine`] — the lifted monoid join (`∘` on words, `+` on
+//!   vectors) used for incremental forest aggregation,
+//! - [`Manager::map_into`] — lifted monadic transformations (the
+//!   majority-vote abstraction `mv` of §4.2, or the word→vector
+//!   abstraction),
+//! - [`Manager::eval`] — classification with the §6 step-count metric,
+//! - [`reduce`](reduce::reduce_feasible) — unsatisfiable-path elimination
+//!   (§5),
+//! - [`dot`](dot::to_dot) — Graphviz export of the diagrams (Figs. 2–5).
+
+pub mod dot;
+pub mod reduce;
+pub mod terminal;
+
+pub use terminal::{ClassLabel, ClassVector, ClassWord, Monoid, Terminal};
+
+use crate::error::{Error, Result};
+use crate::predicate::PredicatePool;
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Handle to a node within one [`Manager`].
+///
+/// The high bit tags terminals; the remaining 31 bits index the respective
+/// arena. Ids are only meaningful within the manager that produced them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(u32);
+
+const TERM_BIT: u32 = 1 << 31;
+
+impl NodeId {
+    /// True when this id denotes a terminal value.
+    #[inline]
+    pub fn is_terminal(self) -> bool {
+        self.0 & TERM_BIT != 0
+    }
+
+    #[inline]
+    fn term_index(self) -> usize {
+        (self.0 & !TERM_BIT) as usize
+    }
+
+    #[inline]
+    fn node_index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// An internal decision node: tests the pool predicate at `level`; `hi` is
+/// the branch where the predicate **holds** (`x[f] < t`), `lo` where it
+/// does not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Internal {
+    /// Pool level (= position in the global predicate order).
+    pub level: u32,
+    /// Child when the predicate holds.
+    pub hi: NodeId,
+    /// Child when the predicate fails.
+    pub lo: NodeId,
+}
+
+/// Size of a diagram cone (the paper's Fig. 7 / Table 2 measure).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SizeStats {
+    /// Distinct internal (decision) nodes.
+    pub internal: usize,
+    /// Distinct terminal nodes.
+    pub terminals: usize,
+}
+
+impl SizeStats {
+    /// Internal + terminal node count.
+    pub fn total(&self) -> usize {
+        self.internal + self.terminals
+    }
+}
+
+/// Hash-consing ADD manager over terminal co-domain `T`.
+#[derive(Debug)]
+pub struct Manager<T> {
+    pool: Arc<PredicatePool>,
+    nodes: Vec<Internal>,
+    terminals: Vec<T>,
+    term_index: FxHashMap<T, u32>,
+    unique: FxHashMap<(u32, NodeId, NodeId), NodeId>,
+    combine_cache: FxHashMap<(NodeId, NodeId), NodeId>,
+    ite_cache: FxHashMap<(u32, NodeId, NodeId), NodeId>,
+}
+
+impl<T: Terminal> Manager<T> {
+    /// New empty manager over a predicate pool (the variable order).
+    pub fn new(pool: Arc<PredicatePool>) -> Self {
+        Manager {
+            pool,
+            nodes: Vec::new(),
+            terminals: Vec::new(),
+            term_index: FxHashMap::default(),
+            unique: FxHashMap::default(),
+            combine_cache: FxHashMap::default(),
+            ite_cache: FxHashMap::default(),
+        }
+    }
+
+    /// The shared predicate pool.
+    pub fn pool(&self) -> &Arc<PredicatePool> {
+        &self.pool
+    }
+
+    /// Total arena sizes `(internal, terminal)` — includes garbage from
+    /// intermediate results (see [`Manager::rebuild`] for compaction).
+    pub fn arena_sizes(&self) -> (usize, usize) {
+        (self.nodes.len(), self.terminals.len())
+    }
+
+    /// Intern a terminal value.
+    pub fn terminal(&mut self, value: T) -> NodeId {
+        if let Some(&i) = self.term_index.get(&value) {
+            return NodeId(i | TERM_BIT);
+        }
+        let i = self.terminals.len() as u32;
+        assert!(i < TERM_BIT, "terminal arena overflow");
+        self.terminals.push(value.clone());
+        self.term_index.insert(value, i);
+        NodeId(i | TERM_BIT)
+    }
+
+    /// Terminal value of a terminal id.
+    pub fn terminal_value(&self, id: NodeId) -> &T {
+        debug_assert!(id.is_terminal());
+        &self.terminals[id.term_index()]
+    }
+
+    /// Internal node data.
+    pub fn internal(&self, id: NodeId) -> Internal {
+        debug_assert!(!id.is_terminal());
+        self.nodes[id.node_index()]
+    }
+
+    /// Level of a node; terminals sort below every predicate (`u32::MAX`).
+    #[inline]
+    pub fn level(&self, id: NodeId) -> u32 {
+        if id.is_terminal() {
+            u32::MAX
+        } else {
+            self.nodes[id.node_index()].level
+        }
+    }
+
+    /// Hash-consed constructor applying the ADD reduction rule.
+    pub fn mk(&mut self, level: u32, hi: NodeId, lo: NodeId) -> NodeId {
+        if hi == lo {
+            return hi;
+        }
+        debug_assert!(level < self.level(hi) && level < self.level(lo), "level order violated");
+        if let Some(&id) = self.unique.get(&(level, hi, lo)) {
+            return id;
+        }
+        let id = NodeId(self.nodes.len() as u32);
+        assert!(id.0 < TERM_BIT, "node arena overflow");
+        self.nodes.push(Internal { level, hi, lo });
+        self.unique.insert((level, hi, lo), id);
+        id
+    }
+
+    /// Cofactors of `f` with respect to the predicate at `level`:
+    /// `(f | pred=true, f | pred=false)`.
+    #[inline]
+    pub fn cofactors(&self, f: NodeId, level: u32) -> (NodeId, NodeId) {
+        if !f.is_terminal() {
+            let n = self.nodes[f.node_index()];
+            if n.level == level {
+                return (n.hi, n.lo);
+            }
+        }
+        (f, f)
+    }
+
+    /// `ite(p, g, h)`: the diagram that behaves as `g` when the predicate at
+    /// `level` holds and as `h` otherwise. This is the workhorse of the
+    /// tree transformation `d(t)` (§3.2); children may test predicates that
+    /// precede `level` in the order — they are pushed down recursively so
+    /// the result is properly ordered.
+    pub fn ite(&mut self, level: u32, g: NodeId, h: NodeId) -> NodeId {
+        if g == h {
+            return g;
+        }
+        let key = (level, g, h);
+        if let Some(&r) = self.ite_cache.get(&key) {
+            return r;
+        }
+        let t = level.min(self.level(g)).min(self.level(h));
+        let res = if t == level {
+            // Both children are at or below `level`: select cofactors.
+            let (ghi, _) = self.cofactors(g, level);
+            let (_, hlo) = self.cofactors(h, level);
+            self.mk(level, ghi, hlo)
+        } else {
+            // Some child tests an earlier predicate: expand it first.
+            let (ghi, glo) = self.cofactors(g, t);
+            let (hhi, hlo) = self.cofactors(h, t);
+            let hi = self.ite(level, ghi, hhi);
+            let lo = self.ite(level, glo, hlo);
+            self.mk(t, hi, lo)
+        };
+        self.ite_cache.insert(key, res);
+        res
+    }
+
+    /// Transform a decision tree into an ADD (`d(t)` of §3.2), mapping leaf
+    /// classes into terminals with `leaf`.
+    pub fn from_tree<F: Fn(u32) -> T + ?Sized>(
+        &mut self,
+        tree: &crate::tree::DecisionTree,
+        leaf: &F,
+    ) -> Result<NodeId> {
+        self.from_tree_at(tree, 0, leaf)
+    }
+
+    fn from_tree_at<F: Fn(u32) -> T + ?Sized>(
+        &mut self,
+        tree: &crate::tree::DecisionTree,
+        idx: u32,
+        leaf: &F,
+    ) -> Result<NodeId> {
+        match tree.nodes[idx as usize] {
+            crate::tree::TreeNode::Leaf { class } => Ok(self.terminal(leaf(class))),
+            crate::tree::TreeNode::Split {
+                feature,
+                threshold,
+                left,
+                right,
+            } => {
+                let level = self.pool.level_of(feature, threshold).ok_or_else(|| {
+                    Error::invalid(format!(
+                        "predicate x{feature} < {threshold} missing from pool"
+                    ))
+                })?;
+                // `left` is the `< threshold` branch = predicate TRUE.
+                let g = self.from_tree_at(tree, left, leaf)?;
+                let h = self.from_tree_at(tree, right, leaf)?;
+                Ok(self.ite(level, g, h))
+            }
+        }
+    }
+
+    /// Evaluate a diagram on a row; returns the terminal value and the
+    /// number of decision nodes traversed (the §6 step count for diagrams).
+    pub fn eval<'a>(&'a self, root: NodeId, x: &[f32]) -> (&'a T, usize) {
+        let mut id = root;
+        let mut steps = 0usize;
+        while !id.is_terminal() {
+            let n = self.nodes[id.node_index()];
+            steps += 1;
+            id = if self.pool.holds(n.level, x) { n.hi } else { n.lo };
+        }
+        (self.terminal_value(id), steps)
+    }
+
+    /// Node count of the cone rooted at `root`.
+    pub fn size(&self, root: NodeId) -> SizeStats {
+        let mut seen = FxHashSet::default();
+        let mut stats = SizeStats::default();
+        let mut stack = vec![root];
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            if id.is_terminal() {
+                stats.terminals += 1;
+            } else {
+                stats.internal += 1;
+                let n = self.nodes[id.node_index()];
+                stack.push(n.hi);
+                stack.push(n.lo);
+            }
+        }
+        stats
+    }
+
+    /// Copy the cone under `root` into another manager over the same pool
+    /// (used for garbage-collecting compaction during long aggregations).
+    pub fn copy_into(&self, dst: &mut Manager<T>, root: NodeId) -> NodeId {
+        assert!(
+            Arc::ptr_eq(&self.pool, &dst.pool),
+            "managers must share a predicate pool"
+        );
+        let mut memo: HashMap<NodeId, NodeId> = HashMap::new();
+        self.copy_rec(dst, root, &mut memo)
+    }
+
+    fn copy_rec(
+        &self,
+        dst: &mut Manager<T>,
+        id: NodeId,
+        memo: &mut HashMap<NodeId, NodeId>,
+    ) -> NodeId {
+        if let Some(&m) = memo.get(&id) {
+            return m;
+        }
+        let out = if id.is_terminal() {
+            dst.terminal(self.terminal_value(id).clone())
+        } else {
+            let n = self.nodes[id.node_index()];
+            let hi = self.copy_rec(dst, n.hi, memo);
+            let lo = self.copy_rec(dst, n.lo, memo);
+            dst.mk(n.level, hi, lo)
+        };
+        memo.insert(id, out);
+        out
+    }
+
+    /// Compact: rebuild only the live cone, dropping garbage nodes and all
+    /// operation caches. Returns the new manager and translated root.
+    pub fn rebuild(&self, root: NodeId) -> (Manager<T>, NodeId) {
+        let mut dst = Manager::new(self.pool.clone());
+        let root = self.copy_into(&mut dst, root);
+        (dst, root)
+    }
+
+    /// Lift a monadic transformation over the terminals (§4.2): copy the
+    /// structure into `dst` (a manager over co-domain `U`, same pool),
+    /// applying `f` to every terminal. Merged terminals collapse the
+    /// structure automatically through `mk`'s reduction rule.
+    pub fn map_into<U: Terminal>(
+        &self,
+        dst: &mut Manager<U>,
+        root: NodeId,
+        f: &impl Fn(&T) -> U,
+    ) -> NodeId {
+        assert!(
+            Arc::ptr_eq(&self.pool, &dst.pool),
+            "managers must share a predicate pool"
+        );
+        let mut memo: HashMap<NodeId, NodeId> = HashMap::new();
+        self.map_rec(dst, root, f, &mut memo)
+    }
+
+    fn map_rec<U: Terminal>(
+        &self,
+        dst: &mut Manager<U>,
+        id: NodeId,
+        f: &impl Fn(&T) -> U,
+        memo: &mut HashMap<NodeId, NodeId>,
+    ) -> NodeId {
+        if let Some(&m) = memo.get(&id) {
+            return m;
+        }
+        let out = if id.is_terminal() {
+            dst.terminal(f(self.terminal_value(id)))
+        } else {
+            let n = self.nodes[id.node_index()];
+            let hi = self.map_rec(dst, n.hi, f, memo);
+            let lo = self.map_rec(dst, n.lo, f, memo);
+            dst.mk(n.level, hi, lo)
+        };
+        memo.insert(id, out);
+        out
+    }
+
+    /// Drop all operation caches (unique table stays — it defines identity).
+    pub fn clear_caches(&mut self) {
+        self.combine_cache.clear();
+        self.ite_cache.clear();
+    }
+}
+
+impl<T: Monoid> Manager<T> {
+    /// The lifted monoid join of §3.2/§4.1: terminal-wise `combine` of two
+    /// diagrams (concatenation `∘` for words, `+` for vectors). Results are
+    /// memoised persistently — incremental aggregation re-uses subresults
+    /// across trees.
+    pub fn combine(&mut self, f: NodeId, g: NodeId) -> NodeId {
+        if f.is_terminal() && g.is_terminal() {
+            let v = self
+                .terminal_value(f)
+                .combine(self.terminal_value(g));
+            return self.terminal(v);
+        }
+        let key = (f, g);
+        if let Some(&r) = self.combine_cache.get(&key) {
+            return r;
+        }
+        let t = self.level(f).min(self.level(g));
+        let (fh, fl) = self.cofactors(f, t);
+        let (gh, gl) = self.cofactors(g, t);
+        let hi = self.combine(fh, gh);
+        let lo = self.combine(fl, gl);
+        let res = self.mk(t, hi, lo);
+        self.combine_cache.insert(key, res);
+        res
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predicate::{Domain, Predicate, PredicatePool};
+
+    /// Pool with 3 predicates on 2 real features:
+    /// L0: x0 < 1.0, L1: x0 < 2.0, L2: x1 < 0.0
+    pub(crate) fn tiny_pool() -> Arc<PredicatePool> {
+        Arc::new(PredicatePool::from_predicates(
+            vec![
+                Predicate {
+                    feature: 0,
+                    threshold: 1.0,
+                },
+                Predicate {
+                    feature: 0,
+                    threshold: 2.0,
+                },
+                Predicate {
+                    feature: 1,
+                    threshold: 0.0,
+                },
+            ],
+            vec![Domain::Real, Domain::Real],
+            2,
+        ))
+    }
+
+    #[test]
+    fn hash_consing_shares_nodes() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let a = m.terminal(0);
+        let b = m.terminal(1);
+        let n1 = m.mk(0, a, b);
+        let n2 = m.mk(0, a, b);
+        assert_eq!(n1, n2);
+        assert_eq!(m.arena_sizes().0, 1);
+        // terminal interning
+        assert_eq!(m.terminal(0), a);
+    }
+
+    #[test]
+    fn reduction_rule_collapses_equal_children() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let a = m.terminal(7);
+        assert_eq!(m.mk(1, a, a), a);
+    }
+
+    #[test]
+    fn eval_follows_predicates() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let t2 = m.terminal(2);
+        // x1 < 0 ? c1 : c2, under x0 < 1 ? c0 : ...
+        let inner = m.mk(2, t1, t2);
+        let root = m.mk(0, t0, inner);
+        assert_eq!(m.eval(root, &[0.5, 5.0]), (&0, 1));
+        assert_eq!(m.eval(root, &[1.5, -1.0]), (&1, 2));
+        assert_eq!(m.eval(root, &[1.5, 1.0]), (&2, 2));
+    }
+
+    #[test]
+    fn ite_orders_out_of_order_children() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let t2 = m.terminal(2);
+        // g tests level 0, h tests level 1; ite on level 2 must push the
+        // level-2 predicate *below* both.
+        let g = m.mk(0, t0, t1);
+        let h = m.mk(1, t1, t2);
+        let r = m.ite(2, g, h);
+        assert_eq!(m.level(r), 0);
+        // semantics: pred2(x) = x1 < 0 selects g else h
+        for (x, want) in [
+            ([0.5f32, -1.0], 0), // pred2 true -> g; x0<1 -> 0
+            ([1.5, -1.0], 1),    // pred2 true -> g; !(x0<1) -> 1
+            ([0.5, 1.0], 1),     // pred2 false -> h; x0<2 -> 1
+            ([2.5, 1.0], 2),     // pred2 false -> h; !(x0<2) -> 2
+        ] {
+            assert_eq!(*m.eval(r, &x).0, want, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn ite_canonical_same_function_same_id() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        // Build (p0 ? t0 : t1) two different ways.
+        let direct = m.mk(0, t0, t1);
+        let via_ite = m.ite(0, t0, t1);
+        assert_eq!(direct, via_ite);
+    }
+
+    #[test]
+    fn combine_words_concatenates_pointwise() {
+        let mut m: Manager<ClassWord> = Manager::new(tiny_pool());
+        let wa = ClassWord::singleton(0);
+        let wb = ClassWord::singleton(1);
+        let ta = m.terminal(wa.clone());
+        let tb = m.terminal(wb.clone());
+        // f = p0 ? [0] : [1] ; g = p2 ? [0] : [1]
+        let f = m.mk(0, ta, tb);
+        let g = m.mk(2, ta, tb);
+        let fg = m.combine(f, g);
+        // x = (0.5, -1) -> p0 true, p2 true -> [0,0]
+        assert_eq!(m.eval(fg, &[0.5, -1.0]).0 .0, vec![0, 0]);
+        // x = (1.5, 1) -> p0 false, p2 false -> [1,1]
+        assert_eq!(m.eval(fg, &[1.5, 1.0]).0 .0, vec![1, 1]);
+        // x = (0.5, 1) -> [0,1]; order preserved (f before g)
+        assert_eq!(m.eval(fg, &[0.5, 1.0]).0 .0, vec![0, 1]);
+        let gf = m.combine(g, f);
+        assert_eq!(m.eval(gf, &[0.5, 1.0]).0 .0, vec![1, 0]);
+    }
+
+    #[test]
+    fn combine_vectors_adds_and_collapses() {
+        let mut m: Manager<ClassVector> = Manager::new(tiny_pool());
+        let u0 = ClassVector::unit(0, 2);
+        let u1 = ClassVector::unit(1, 2);
+        let t0 = m.terminal(u0.clone());
+        let t1 = m.terminal(u1.clone());
+        let f = m.mk(0, t0, t1);
+        let g = m.mk(0, t1, t0); // opposite votes on the same predicate
+        let sum = m.combine(f, g);
+        // Both branches now sum to (1,1): the diagram must collapse to a
+        // single terminal — the "partial collapse" of §4.1.
+        assert!(sum.is_terminal());
+        assert_eq!(m.terminal_value(sum).0, vec![1, 1]);
+    }
+
+    #[test]
+    fn map_into_majority_abstraction() {
+        let pool = tiny_pool();
+        let mut mv: Manager<ClassVector> = Manager::new(pool.clone());
+        let v20 = mv.terminal(ClassVector(vec![2, 0]));
+        let v11a = mv.terminal(ClassVector(vec![1, 1]));
+        let inner = mv.mk(1, v20, v11a);
+        let v02 = mv.terminal(ClassVector(vec![0, 2]));
+        let root = mv.mk(0, inner, v02);
+        let mut ml: Manager<ClassLabel> = Manager::new(pool);
+        let mapped = mv.map_into(&mut ml, root, &|v| v.majority());
+        // (2,0) -> 0, (1,1) -> 0 (tie to low), so the level-1 node collapses.
+        assert_eq!(ml.level(mapped), 0);
+        let n = ml.internal(mapped);
+        assert!(n.hi.is_terminal() && n.lo.is_terminal());
+        assert_eq!(*ml.terminal_value(n.hi), 0);
+        assert_eq!(*ml.terminal_value(n.lo), 1);
+    }
+
+    #[test]
+    fn from_tree_matches_tree_semantics() {
+        use crate::data::datasets;
+        use crate::forest::ForestLearner;
+        use crate::predicate::PredicateOrder;
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(3).seed(5).fit(&ds);
+        let pool = Arc::new(PredicatePool::from_forest(
+            &forest,
+            PredicateOrder::FeatureThreshold,
+        ));
+        let mut m: Manager<ClassLabel> = Manager::new(pool);
+        for tree in &forest.trees {
+            let root = m.from_tree(tree, &|c| c as u16).unwrap();
+            for i in 0..ds.n_rows() {
+                let x = ds.row(i);
+                assert_eq!(*m.eval(root, x).0 as u32, tree.predict(x));
+            }
+        }
+    }
+
+    #[test]
+    fn size_counts_shared_nodes_once() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let shared = m.mk(2, t0, t1);
+        let root = m.mk(0, shared, shared); // collapses to shared!
+        assert_eq!(root, shared);
+        let a = m.mk(1, shared, t0);
+        let root2 = m.mk(0, a, shared);
+        let s = m.size(root2);
+        assert_eq!(s.internal, 3);
+        assert_eq!(s.terminals, 2);
+        assert_eq!(s.total(), 5);
+    }
+
+    #[test]
+    fn rebuild_preserves_semantics_and_compacts() {
+        let mut m: Manager<ClassLabel> = Manager::new(tiny_pool());
+        // create garbage
+        for i in 0..50u16 {
+            let t = m.terminal(i);
+            let t2 = m.terminal(i + 1);
+            m.mk(0, t, t2);
+        }
+        let t0 = m.terminal(100);
+        let t1 = m.terminal(101);
+        let live = m.mk(1, t0, t1);
+        let (m2, live2) = m.rebuild(live);
+        assert!(m2.arena_sizes().0 < m.arena_sizes().0);
+        assert_eq!(m2.arena_sizes(), (1, 2));
+        for x in [[0.5f32, 0.0], [3.0, 0.0]] {
+            assert_eq!(m.eval(live, &x).0, m2.eval(live2, &x).0);
+        }
+    }
+
+    #[test]
+    fn combine_with_empty_word_is_identity() {
+        let mut m: Manager<ClassWord> = Manager::new(tiny_pool());
+        let eps = m.terminal(ClassWord::empty());
+        let a = m.terminal(ClassWord(vec![1, 0]));
+        let b = m.terminal(ClassWord(vec![2]));
+        let f = m.mk(0, a, b);
+        let l = m.combine(eps, f);
+        let r = m.combine(f, eps);
+        assert_eq!(l, f);
+        assert_eq!(r, f);
+    }
+}

@@ -1,0 +1,578 @@
+//! Unsatisfiable-path elimination (§5).
+//!
+//! Symbolic aggregation treats predicates as independent Boolean variables,
+//! so the aggregated diagram contains paths whose predicate literals
+//! contradict each other semantically (`petallength < 2.45` followed by the
+//! false branch of `petallength < 2.7`). This pass rebuilds the diagram
+//! under an incremental feasibility store: nodes whose predicate is already
+//! entailed (either way) by the path constraints disappear, and every
+//! surviving path is satisfiable.
+//!
+//! Properties (matching the paper's §5 discussion):
+//! - **compositional**: sound to apply after every aggregation step — this
+//!   is what keeps intermediate diagrams small and makes the approach scale
+//!   beyond ~100 trees;
+//! - **not a normal form**: results can depend on aggregation order, but
+//!   contain no infeasible path and no entailed (semantically redundant)
+//!   decision node;
+//! - memoised on `(node, store projected onto the node's support)` so
+//!   shared cones under equivalent constraint contexts are rebuilt once.
+//!
+//! The [`Reducer`] keeps its memo **across calls**: during incremental
+//! aggregation the diagram after `combine` shares almost its entire
+//! structure with the previously reduced diagram, so a persistent cache
+//! turns the per-tree reduction from `O(diagram)` into `O(changed cone)` —
+//! the difference between hours and seconds at 10,000 trees (see
+//! EXPERIMENTS.md §Perf).
+
+use super::{Manager, Monoid, NodeId, Terminal};
+use crate::feas::interval::CtxKey;
+use crate::feas::IntervalStore;
+use crate::predicate::PredicatePool;
+use crate::util::fxhash::FxHashMap;
+use std::rc::Rc;
+use std::sync::Arc;
+
+/// Remove all unsatisfiable paths and entailed decisions from the cone
+/// under `root` (one-shot; see [`Reducer`] for the incremental form).
+pub fn reduce_feasible<T: Terminal>(mgr: &mut Manager<T>, root: NodeId) -> NodeId {
+    Reducer::new(mgr.pool().clone()).reduce(mgr, root)
+}
+
+/// Reusable unsat-path eliminator with a persistent memo.
+///
+/// A `Reducer` is bound to one manager's node-id space: it may be reused
+/// across many `reduce` calls on the **same** manager (ids are stable under
+/// hash-consing), and must be [`clear`](Reducer::clear)ed when the manager
+/// is rebuilt/compacted (ids change) or swapped.
+pub struct Reducer {
+    pool: Arc<PredicatePool>,
+    store: IntervalStore,
+    /// (node, store projection on the node's support) -> reduced node
+    memo: FxHashMap<(NodeId, CtxKey), NodeId>,
+    /// node -> sorted feature set of its cone
+    support: FxHashMap<NodeId, Rc<Vec<u32>>>,
+}
+
+impl Reducer {
+    /// New reducer over a predicate pool.
+    pub fn new(pool: Arc<PredicatePool>) -> Reducer {
+        Reducer {
+            store: IntervalStore::new(pool.domains()),
+            pool,
+            memo: FxHashMap::default(),
+            support: FxHashMap::default(),
+        }
+    }
+
+    /// Reduce the cone under `root` (same manager across calls!).
+    pub fn reduce<T: Terminal>(&mut self, mgr: &mut Manager<T>, root: NodeId) -> NodeId {
+        assert!(
+            Arc::ptr_eq(mgr.pool(), &self.pool),
+            "reducer bound to a different predicate pool"
+        );
+        debug_assert_eq!(self.store.mark(), 0, "store must be fully unwound");
+        self.go(mgr, root)
+    }
+
+    /// Entries in the persistent memo (cache-pressure monitoring).
+    pub fn cache_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Drop all cached state (mandatory after a manager rebuild — node ids
+    /// are reassigned there).
+    pub fn clear(&mut self) {
+        self.memo.clear();
+        self.support.clear();
+    }
+
+    fn support<T: Terminal>(&mut self, mgr: &Manager<T>, id: NodeId) -> Rc<Vec<u32>> {
+        if let Some(s) = self.support.get(&id) {
+            return s.clone();
+        }
+        let out: Rc<Vec<u32>> = if id.is_terminal() {
+            Rc::new(Vec::new())
+        } else {
+            let n = mgr.internal(id);
+            let f = self.pool.pred(n.level).feature;
+            let hi = self.support(mgr, n.hi);
+            let lo = self.support(mgr, n.lo);
+            let mut merged: Vec<u32> = Vec::with_capacity(hi.len() + lo.len() + 1);
+            merged.extend_from_slice(&hi);
+            for &x in lo.iter() {
+                merged.push(x);
+            }
+            merged.push(f);
+            merged.sort_unstable();
+            merged.dedup();
+            Rc::new(merged)
+        };
+        self.support.insert(id, out.clone());
+        out
+    }
+
+    fn go<T: Terminal>(&mut self, mgr: &mut Manager<T>, id: NodeId) -> NodeId {
+        if id.is_terminal() {
+            return id;
+        }
+        let n = mgr.internal(id);
+        let pred = self.pool.pred(n.level);
+        // Entailed decisions vanish: the path constraints already decide them.
+        match self.store.implied(pred) {
+            Some(true) => return self.go(mgr, n.hi),
+            Some(false) => return self.go(mgr, n.lo),
+            None => {}
+        }
+        let support = self.support(mgr, id);
+        let key = (id, self.store.project_ctx(support.iter().copied()));
+        if let Some(&r) = self.memo.get(&key) {
+            return r;
+        }
+        let mark = self.store.mark();
+        self.store.assume(pred, true);
+        let hi = self.go(mgr, n.hi);
+        self.store.undo_to(mark);
+        self.store.assume(pred, false);
+        let lo = self.go(mgr, n.lo);
+        self.store.undo_to(mark);
+        let out = mgr.mk(n.level, hi, lo);
+        self.memo.insert(key, out);
+        out
+    }
+}
+
+/// Feasibility-fused monoid apply: computes `reduce(combine(f, g))`
+/// without ever materialising the unreduced product.
+///
+/// This is the compiler's actual hot path. A plain `combine` followed by a
+/// reduction builds the full symbolic product first — including all the
+/// infeasible/entailed structure the reduction immediately deletes — and,
+/// because the monoid join rewrites **every** terminal, nothing of that
+/// work is shareable across aggregation steps. Fusing the interval store
+/// into the apply prunes entailed branches *during* the product
+/// construction, so per-tree cost tracks the size of the **reduced**
+/// result (EXPERIMENTS.md §Perf quantifies the difference).
+pub struct FusedCombiner {
+    pool: Arc<PredicatePool>,
+    store: IntervalStore,
+    memo: FxHashMap<(NodeId, NodeId, CtxKey), NodeId>,
+    support: FxHashMap<NodeId, std::rc::Rc<Vec<u32>>>,
+    /// instrumentation: product-node visits / memo hits / entailed skips
+    pub visits: u64,
+    /// memo hits
+    pub hits: u64,
+    /// entailed-predicate short-circuits
+    pub skips: u64,
+}
+
+impl FusedCombiner {
+    /// New fused combiner over a predicate pool.
+    pub fn new(pool: Arc<PredicatePool>) -> FusedCombiner {
+        FusedCombiner {
+            store: IntervalStore::new(pool.domains()),
+            pool,
+            memo: FxHashMap::default(),
+            support: FxHashMap::default(),
+            visits: 0,
+            hits: 0,
+            skips: 0,
+        }
+    }
+
+    /// `reduce(combine(f, g))` in one pass. `f` and `g` should themselves be
+    /// reduced (the aggregation loop maintains this inductively).
+    pub fn combine<T: Monoid>(&mut self, mgr: &mut Manager<T>, f: NodeId, g: NodeId) -> NodeId {
+        assert!(
+            Arc::ptr_eq(mgr.pool(), &self.pool),
+            "combiner bound to a different predicate pool"
+        );
+        // (f, g) memo entries are only valid within one store lineage; the
+        // support/memo survive across calls because node ids are stable and
+        // keys embed the projected context.
+        self.go(mgr, f, g)
+    }
+
+    /// Entries in the persistent memo.
+    pub fn cache_len(&self) -> usize {
+        self.memo.len()
+    }
+
+    /// Drop cached state (mandatory after a manager rebuild).
+    pub fn clear(&mut self) {
+        self.memo.clear();
+        self.support.clear();
+    }
+
+    /// Drop only the product memo, keeping the (still-valid) support cache.
+    ///
+    /// Called between aggregation steps: memo entries reference the previous
+    /// accumulator/tree nodes, which can never recur, so keeping them only
+    /// inflates the table (GBs at thousands of trees) and slows every probe.
+    pub fn clear_memo(&mut self) {
+        self.memo.clear();
+    }
+
+    fn support<T: Terminal>(&mut self, mgr: &Manager<T>, id: NodeId) -> std::rc::Rc<Vec<u32>> {
+        if let Some(s) = self.support.get(&id) {
+            return s.clone();
+        }
+        let out: std::rc::Rc<Vec<u32>> = if id.is_terminal() {
+            std::rc::Rc::new(Vec::new())
+        } else {
+            let n = mgr.internal(id);
+            let fe = self.pool.pred(n.level).feature;
+            let hi = self.support(mgr, n.hi);
+            let lo = self.support(mgr, n.lo);
+            let mut merged: Vec<u32> = Vec::with_capacity(hi.len() + lo.len() + 1);
+            merged.extend_from_slice(&hi);
+            for &x in lo.iter() {
+                merged.push(x);
+            }
+            merged.push(fe);
+            merged.sort_unstable();
+            merged.dedup();
+            std::rc::Rc::new(merged)
+        };
+        self.support.insert(id, out.clone());
+        out
+    }
+
+    fn go<T: Monoid>(&mut self, mgr: &mut Manager<T>, f: NodeId, g: NodeId) -> NodeId {
+        self.visits += 1;
+        if f.is_terminal() && g.is_terminal() {
+            let v = mgr.terminal_value(f).combine(mgr.terminal_value(g));
+            return mgr.terminal(v);
+        }
+        let t = mgr.level(f).min(mgr.level(g));
+        let pred = self.pool.pred(t);
+        // Entailed tests never materialise in the product.
+        match self.store.implied(pred) {
+            Some(true) => {
+                self.skips += 1;
+                let (fh, _) = mgr.cofactors(f, t);
+                let (gh, _) = mgr.cofactors(g, t);
+                return self.go(mgr, fh, gh);
+            }
+            Some(false) => {
+                self.skips += 1;
+                let (_, fl) = mgr.cofactors(f, t);
+                let (_, gl) = mgr.cofactors(g, t);
+                return self.go(mgr, fl, gl);
+            }
+            None => {}
+        }
+        // Context key: store projected onto the union of both supports
+        // (merged without allocation — both support sets are sorted).
+        let sf = self.support(mgr, f);
+        let sg = self.support(mgr, g);
+        let key = (f, g, self.store.project_ctx(MergeSorted::new(&sf, &sg)));
+        if let Some(&r) = self.memo.get(&key) {
+            self.hits += 1;
+            return r;
+        }
+        let (fh, fl) = mgr.cofactors(f, t);
+        let (gh, gl) = mgr.cofactors(g, t);
+        let mark = self.store.mark();
+        self.store.assume(pred, true);
+        let hi = self.go(mgr, fh, gh);
+        self.store.undo_to(mark);
+        self.store.assume(pred, false);
+        let lo = self.go(mgr, fl, gl);
+        self.store.undo_to(mark);
+        let out = mgr.mk(t, hi, lo);
+        self.memo.insert(key, out);
+        out
+    }
+}
+
+/// Deduplicating merge of two sorted `u32` slices, without allocation.
+struct MergeSorted<'a> {
+    a: &'a [u32],
+    b: &'a [u32],
+}
+
+impl<'a> MergeSorted<'a> {
+    fn new(a: &'a [u32], b: &'a [u32]) -> Self {
+        MergeSorted { a, b }
+    }
+}
+
+impl Iterator for MergeSorted<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        match (self.a.first(), self.b.first()) {
+            (Some(&x), Some(&y)) => {
+                if x < y {
+                    self.a = &self.a[1..];
+                    Some(x)
+                } else if y < x {
+                    self.b = &self.b[1..];
+                    Some(y)
+                } else {
+                    self.a = &self.a[1..];
+                    self.b = &self.b[1..];
+                    Some(x)
+                }
+            }
+            (Some(&x), None) => {
+                self.a = &self.a[1..];
+                Some(x)
+            }
+            (None, Some(&y)) => {
+                self.b = &self.b[1..];
+                Some(y)
+            }
+            (None, None) => None,
+        }
+    }
+}
+
+/// Enumerate all root-to-terminal paths of a cone as literal lists
+/// (`(level, taken-branch)`); used by tests and the DOT tooling. Paths are
+/// capped at `limit` to keep pathological cones enumerable.
+pub fn enumerate_paths<T: Terminal>(
+    mgr: &Manager<T>,
+    root: NodeId,
+    limit: usize,
+) -> Vec<Vec<(u32, bool)>> {
+    let mut out = Vec::new();
+    let mut path = Vec::new();
+    fn rec<T: Terminal>(
+        mgr: &Manager<T>,
+        id: NodeId,
+        path: &mut Vec<(u32, bool)>,
+        out: &mut Vec<Vec<(u32, bool)>>,
+        limit: usize,
+    ) {
+        if out.len() >= limit {
+            return;
+        }
+        if id.is_terminal() {
+            out.push(path.clone());
+            return;
+        }
+        let n = mgr.internal(id);
+        path.push((n.level, true));
+        rec(mgr, n.hi, path, out, limit);
+        path.pop();
+        path.push((n.level, false));
+        rec(mgr, n.lo, path, out, limit);
+        path.pop();
+    }
+    rec(mgr, root, &mut path, &mut out, limit);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::add::{ClassLabel, ClassVector, Manager};
+    use crate::feas::dpll::conjunction_sat;
+    use crate::predicate::{Domain, Predicate, PredicatePool};
+
+    /// Pool: L0: x0 < 1.0, L1: x0 < 2.0, L2: x1 < 0.0 (all real).
+    fn pool() -> Arc<PredicatePool> {
+        Arc::new(PredicatePool::from_predicates(
+            vec![
+                Predicate {
+                    feature: 0,
+                    threshold: 1.0,
+                },
+                Predicate {
+                    feature: 0,
+                    threshold: 2.0,
+                },
+                Predicate {
+                    feature: 1,
+                    threshold: 0.0,
+                },
+            ],
+            vec![Domain::Real, Domain::Real],
+            2,
+        ))
+    }
+
+    #[test]
+    fn entailed_node_is_removed() {
+        let mut m: Manager<ClassLabel> = Manager::new(pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let t2 = m.terminal(2);
+        // hi branch of L0 (x0 < 1) contains a test of L1 (x0 < 2) —
+        // entailed true, so the L1 node is semantically redundant.
+        let redundant = m.mk(1, t1, t2); // x0<2 ? 1 : 2
+        let root = m.mk(0, redundant, t0); // x0<1 ? (x0<2 ? 1 : 2) : 0
+        let before = m.size(root);
+        assert_eq!(before.internal, 2);
+        let reduced = reduce_feasible(&mut m, root);
+        let after = m.size(reduced);
+        assert_eq!(after.internal, 1, "redundant inner test must vanish");
+        // semantics preserved on feasible inputs
+        for x in [[0.5f32, 0.0], [1.5, 0.0], [2.5, 0.0]] {
+            let want = if x[0] < 1.0 { 1 } else { 0 };
+            assert_eq!(*m.eval(reduced, &x).0, want, "x={x:?}");
+        }
+    }
+
+    #[test]
+    fn infeasible_branch_is_bypassed() {
+        let mut m: Manager<ClassLabel> = Manager::new(pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let t9 = m.terminal(9);
+        // lo branch of L1 (x0 >= 2) tests L0 (x0 < 1): entailed false, so
+        // its hi child (terminal 9) is unreachable.
+        let dead = m.mk(0, t9, t1);
+        let root = m.ite(1, t0, dead);
+        let reduced = reduce_feasible(&mut m, root);
+        // 9 must not appear anywhere in the reduced cone
+        let paths = enumerate_paths(&m, reduced, 100);
+        for p in &paths {
+            let mut id = reduced;
+            for &(lvl, taken) in p {
+                let n = m.internal(id);
+                assert_eq!(n.level, lvl);
+                id = if taken { n.hi } else { n.lo };
+            }
+            assert_ne!(*m.terminal_value(id), 9, "unreachable terminal survived");
+        }
+    }
+
+    #[test]
+    fn all_surviving_paths_are_satisfiable() {
+        let pl = pool();
+        let mut m: Manager<ClassVector> = Manager::new(pl.clone());
+        let a = m.terminal(ClassVector(vec![1, 0]));
+        let b = m.terminal(ClassVector(vec![0, 1]));
+        let c = m.terminal(ClassVector(vec![2, 2]));
+        let n2 = m.mk(2, a, b);
+        let n1a = m.mk(1, n2, c);
+        let n1b = m.mk(1, b, n2);
+        let root = m.mk(0, n1a, n1b);
+        let reduced = reduce_feasible(&mut m, root);
+        let paths = enumerate_paths(&m, reduced, 1000);
+        assert!(!paths.is_empty());
+        for path in paths {
+            let lits: Vec<(Predicate, bool)> =
+                path.iter().map(|&(lvl, v)| (pl.pred(lvl), v)).collect();
+            assert!(
+                conjunction_sat(pl.domains(), &lits),
+                "unsat path survived: {lits:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduction_is_idempotent() {
+        let mut m: Manager<ClassLabel> = Manager::new(pool());
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let inner = m.mk(1, t0, t1);
+        let root = m.mk(0, inner, inner);
+        let r1 = reduce_feasible(&mut m, root);
+        let r2 = reduce_feasible(&mut m, r1);
+        assert_eq!(r1, r2);
+    }
+
+    #[test]
+    fn persistent_reducer_matches_one_shot_and_caches() {
+        use crate::data::datasets;
+        use crate::forest::ForestLearner;
+        use crate::predicate::PredicateOrder;
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(8).seed(3).fit(&ds);
+        let pl = Arc::new(PredicatePool::from_forest(
+            &forest,
+            PredicateOrder::FeatureThreshold,
+        ));
+        let mut m1: Manager<ClassVector> = Manager::new(pl.clone());
+        let mut m2: Manager<ClassVector> = Manager::new(pl.clone());
+        let mut persistent = Reducer::new(pl.clone());
+        let mut acc1 = m1.terminal(ClassVector::zero(3));
+        let mut acc2 = m2.terminal(ClassVector::zero(3));
+        for tree in &forest.trees {
+            let t1 = m1
+                .from_tree(tree, &|c| ClassVector::unit(c as u16, 3))
+                .unwrap();
+            acc1 = m1.combine(acc1, t1);
+            acc1 = persistent.reduce(&mut m1, acc1);
+            let t2 = m2
+                .from_tree(tree, &|c| ClassVector::unit(c as u16, 3))
+                .unwrap();
+            acc2 = m2.combine(acc2, t2);
+            acc2 = reduce_feasible(&mut m2, acc2); // fresh memo each time
+        }
+        assert!(persistent.cache_len() > 0);
+        assert_eq!(m1.size(acc1).total(), m2.size(acc2).total());
+        for i in 0..ds.n_rows() {
+            assert_eq!(m1.eval(acc1, ds.row(i)).0, m2.eval(acc2, ds.row(i)).0);
+        }
+        // clear() resets the cache but not correctness
+        persistent.clear();
+        assert_eq!(persistent.cache_len(), 0);
+        let again = persistent.reduce(&mut m1, acc1);
+        assert_eq!(again, acc1, "already-reduced diagram is a fixpoint");
+    }
+
+    #[test]
+    fn preserves_semantics_on_a_learned_forest_diagram() {
+        use crate::data::datasets;
+        use crate::forest::ForestLearner;
+        use crate::predicate::PredicateOrder;
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(5).seed(3).fit(&ds);
+        let pl = Arc::new(PredicatePool::from_forest(
+            &forest,
+            PredicateOrder::FeatureThreshold,
+        ));
+        let mut m: Manager<ClassVector> = Manager::new(pl);
+        let mut acc = m.terminal(ClassVector::zero(3));
+        for tree in &forest.trees {
+            let t = m
+                .from_tree(tree, &|c| ClassVector::unit(c as u16, 3))
+                .unwrap();
+            acc = m.combine(acc, t);
+        }
+        let before = m.size(acc);
+        let reduced = reduce_feasible(&mut m, acc);
+        let after = m.size(reduced);
+        assert!(after.total() <= before.total());
+        for i in 0..ds.n_rows() {
+            let x = ds.row(i);
+            assert_eq!(m.eval(acc, x).0, m.eval(reduced, x).0, "row {i}");
+        }
+    }
+
+    #[test]
+    fn grid_domains_enable_extra_elimination() {
+        // Grid {0,1,2}: after x >= 1.5 (i.e. x = 2), the test x < 2.5 is
+        // entailed true on the grid but not over the reals.
+        let pl = Arc::new(PredicatePool::from_predicates(
+            vec![
+                Predicate {
+                    feature: 0,
+                    threshold: 1.5,
+                },
+                Predicate {
+                    feature: 0,
+                    threshold: 2.5,
+                },
+            ],
+            vec![Domain::Grid { cardinality: 3 }],
+            1,
+        ));
+        let mut m: Manager<ClassLabel> = Manager::new(pl);
+        let t0 = m.terminal(0);
+        let t1 = m.terminal(1);
+        let t2 = m.terminal(2);
+        let inner = m.mk(1, t1, t2); // x < 2.5 ? 1 : 2
+        let root = m.mk(0, t0, inner); // x < 1.5 ? 0 : inner
+        let reduced = reduce_feasible(&mut m, root);
+        assert_eq!(m.size(reduced).internal, 1);
+        assert_eq!(*m.eval(reduced, &[2.0]).0, 1);
+        assert_eq!(*m.eval(reduced, &[0.0]).0, 0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Terminal co-domains of the ADDs — the algebraic structures of §3.1/§4.
+//!
+//! - [`ClassWord`]: the string monoid `W = (C*, ∘, ε)` — one symbol per
+//!   tree, fully information-preserving (§3.1).
+//! - [`ClassVector`]: the monoid `V = (ℕ^|C|, +, 0)` of per-class vote
+//!   frequencies — the coarsest *compositional* abstraction (§4.1).
+//! - [`ClassLabel`]: the plain class co-domain `C` after the majority-vote
+//!   abstraction `mv` (§4.2) — not a monoid, only the target of the final
+//!   monadic transformation.
+
+use std::hash::Hash;
+
+/// Requirements on terminal values stored in an ADD.
+pub trait Terminal: Clone + Eq + Hash + std::fmt::Debug {}
+impl<T: Clone + Eq + Hash + std::fmt::Debug> Terminal for T {}
+
+/// A monoid structure on a terminal type — what makes the incremental
+/// aggregation `d(t₀) ∘ d(t₁) ∘ …` of §3.2 well-defined.
+pub trait Monoid: Terminal {
+    /// The associative join.
+    fn combine(&self, other: &Self) -> Self;
+}
+
+/// Class word `c ∈ C*`: the sequence of per-tree decisions.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default)]
+pub struct ClassWord(pub Vec<u16>);
+
+impl ClassWord {
+    /// The empty word ε (decision of the empty forest).
+    pub fn empty() -> Self {
+        ClassWord(Vec::new())
+    }
+
+    /// Single-symbol word for one tree's decision.
+    pub fn singleton(class: u16) -> Self {
+        ClassWord(vec![class])
+    }
+
+    /// Word length = number of aggregated trees.
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    /// True for ε.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Majority vote over the word (runtime aggregation; costs `len` reads —
+    /// the §6 metric charges these). Ties break to the lowest class index.
+    pub fn majority(&self, n_classes: usize) -> u16 {
+        let mut counts = vec![0u32; n_classes];
+        for &c in &self.0 {
+            counts[c as usize] += 1;
+        }
+        argmax(&counts)
+    }
+
+    /// Abstraction to class frequencies (§4.1's `W → V` step).
+    pub fn to_vector(&self, n_classes: usize) -> ClassVector {
+        let mut counts = vec![0u32; n_classes];
+        for &c in &self.0 {
+            counts[c as usize] += 1;
+        }
+        ClassVector(counts)
+    }
+}
+
+impl Monoid for ClassWord {
+    fn combine(&self, other: &Self) -> Self {
+        let mut w = Vec::with_capacity(self.0.len() + other.0.len());
+        w.extend_from_slice(&self.0);
+        w.extend_from_slice(&other.0);
+        ClassWord(w)
+    }
+}
+
+/// Class vector `v ∈ ℕ^|C|`: per-class vote frequencies.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ClassVector(pub Vec<u32>);
+
+impl ClassVector {
+    /// The 0 vector for `n_classes` classes.
+    pub fn zero(n_classes: usize) -> Self {
+        ClassVector(vec![0; n_classes])
+    }
+
+    /// The unit vector `i(c)`.
+    pub fn unit(class: u16, n_classes: usize) -> Self {
+        let mut v = vec![0; n_classes];
+        v[class as usize] = 1;
+        ClassVector(v)
+    }
+
+    /// Total number of votes (= number of aggregated trees).
+    pub fn total(&self) -> u32 {
+        self.0.iter().sum()
+    }
+
+    /// The majority vote `mv(v) = argmax_c v_c` (§4.2); ties to the lowest
+    /// class index. Costs `|C|` reads at runtime (§6 metric).
+    pub fn majority(&self) -> u16 {
+        argmax(&self.0)
+    }
+}
+
+impl Monoid for ClassVector {
+    fn combine(&self, other: &Self) -> Self {
+        debug_assert_eq!(self.0.len(), other.0.len());
+        ClassVector(
+            self.0
+                .iter()
+                .zip(&other.0)
+                .map(|(a, b)| a + b)
+                .collect(),
+        )
+    }
+}
+
+/// Final class label after the majority-vote abstraction.
+pub type ClassLabel = u16;
+
+fn argmax(counts: &[u32]) -> u16 {
+    let mut best = 0usize;
+    for (i, &c) in counts.iter().enumerate() {
+        if c > counts[best] {
+            best = i;
+        }
+    }
+    best as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_monoid_laws() {
+        let a = ClassWord(vec![0, 1]);
+        let b = ClassWord(vec![2]);
+        let c = ClassWord(vec![1, 1]);
+        // associativity
+        assert_eq!(a.combine(&b).combine(&c), a.combine(&b.combine(&c)));
+        // identity
+        assert_eq!(ClassWord::empty().combine(&a), a);
+        assert_eq!(a.combine(&ClassWord::empty()), a);
+        // NOT commutative (word order matters)
+        assert_ne!(a.combine(&b), b.combine(&a));
+    }
+
+    #[test]
+    fn vector_monoid_laws() {
+        let a = ClassVector(vec![1, 0, 2]);
+        let b = ClassVector(vec![0, 3, 1]);
+        let c = ClassVector(vec![5, 0, 0]);
+        assert_eq!(a.combine(&b).combine(&c), a.combine(&b.combine(&c)));
+        assert_eq!(ClassVector::zero(3).combine(&a), a);
+        // commutative (the abstraction forgets tree identity)
+        assert_eq!(a.combine(&b), b.combine(&a));
+    }
+
+    #[test]
+    fn word_to_vector_is_a_homomorphism() {
+        let a = ClassWord(vec![0, 2, 2]);
+        let b = ClassWord(vec![1, 2]);
+        assert_eq!(
+            a.combine(&b).to_vector(3),
+            a.to_vector(3).combine(&b.to_vector(3))
+        );
+    }
+
+    #[test]
+    fn majorities_agree_across_abstractions() {
+        let w = ClassWord(vec![2, 0, 2, 1, 2, 0]);
+        let v = w.to_vector(3);
+        assert_eq!(w.majority(3), v.majority());
+        assert_eq!(v.majority(), 2);
+    }
+
+    #[test]
+    fn majority_tie_breaks_low() {
+        assert_eq!(ClassWord(vec![1, 0]).majority(2), 0);
+        assert_eq!(ClassVector(vec![3, 3, 1]).majority(), 0);
+        assert_eq!(ClassVector(vec![0, 0, 0]).majority(), 0); // empty forest
+    }
+
+    #[test]
+    fn unit_and_singleton_correspond() {
+        assert_eq!(ClassWord::singleton(2).to_vector(4), ClassVector::unit(2, 4));
+        assert_eq!(ClassVector::unit(2, 4).total(), 1);
+    }
+}

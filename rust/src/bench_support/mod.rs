@@ -1,0 +1,363 @@
+//! Shared harness for the `cargo bench` targets (criterion is unavailable
+//! offline; each bench is a `harness = false` binary built on this module).
+//!
+//! Responsibilities: environment-tunable workload sizes, the paper's
+//! log-spaced forest-size checkpoints, the per-variant sweep used by both
+//! Fig. 6 (steps) and Fig. 7 (sizes), wall-clock measurement helpers, and
+//! report output (aligned text to stdout + CSV/Markdown dumps under
+//! `bench_results/`).
+
+use crate::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
+use crate::data::Dataset;
+use crate::forest::{ForestLearner, RandomForest};
+use crate::util::table::Table;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Workload sizing, overridable via environment variables:
+/// `FOREST_ADD_BENCH_MAX_TREES`, `FOREST_ADD_BENCH_TABLE_TREES`,
+/// `FOREST_ADD_BENCH_BUDGET`, `FOREST_ADD_BENCH_SECONDS`.
+#[derive(Debug, Clone)]
+pub struct BenchEnv {
+    /// Largest forest size in the Fig. 6/7 sweeps.
+    pub max_trees: usize,
+    /// Forest size for the Table 1/2 reproduction (paper: 10,000).
+    pub table_trees: usize,
+    /// Node budget for the non-`*` variants (they explode; the paper cuts
+    /// those series off too).
+    pub node_budget: usize,
+    /// Generous node budget for the `*` variants (terminates the sweep
+    /// cleanly instead of thrashing if a star variant grows too far on a
+    /// noisy dataset).
+    pub star_budget: usize,
+    /// Measurement window for throughput benches.
+    pub measure_secs: f64,
+    /// Wall-clock budget per sweep variant (`FOREST_ADD_BENCH_VARIANT_SECS`).
+    pub variant_secs: u64,
+    /// Wall-clock budget per Table-1/2 dataset (`FOREST_ADD_BENCH_DATASET_SECS`).
+    pub dataset_secs: u64,
+}
+
+impl BenchEnv {
+    /// Read the environment (with CI-scale defaults).
+    pub fn load() -> BenchEnv {
+        let get = |k: &str, d: usize| {
+            std::env::var(k)
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(d)
+        };
+        BenchEnv {
+            max_trees: get("FOREST_ADD_BENCH_MAX_TREES", 10_000),
+            table_trees: get("FOREST_ADD_BENCH_TABLE_TREES", 10_000),
+            node_budget: get("FOREST_ADD_BENCH_BUDGET", 300_000),
+            star_budget: get("FOREST_ADD_BENCH_STAR_BUDGET", 2_000_000),
+            measure_secs: get("FOREST_ADD_BENCH_SECONDS", 2) as f64,
+            variant_secs: get("FOREST_ADD_BENCH_VARIANT_SECS", 600) as u64,
+            dataset_secs: get("FOREST_ADD_BENCH_DATASET_SECS", 600) as u64,
+        }
+    }
+}
+
+/// Log-spaced checkpoints `1, 2, 5, 10, …` up to and including `max`.
+pub fn log_checkpoints(max: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut decade = 1usize;
+    'outer: loop {
+        for m in [1, 2, 5] {
+            let v = decade * m;
+            if v >= max {
+                break 'outer;
+            }
+            out.push(v);
+        }
+        decade *= 10;
+    }
+    out.push(max);
+    out
+}
+
+/// One measured point of a sweep series.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    /// Forest size at this checkpoint.
+    pub trees: usize,
+    /// Mean §6 step count over the dataset.
+    pub steps: f64,
+    /// Structure size in nodes.
+    pub size: usize,
+}
+
+/// One series (e.g. `Class vector DD*`) of the Fig. 6/7 sweeps.
+#[derive(Debug, Clone)]
+pub struct SweepSeries {
+    /// Paper-style label.
+    pub label: String,
+    /// Measured checkpoints (may stop early on cutoff).
+    pub points: Vec<SweepPoint>,
+    /// Cutoff description when the variant exploded past the node budget.
+    pub cutoff: Option<String>,
+}
+
+/// Full sweep data for one dataset: the RF baseline plus all six DD
+/// variants (word/vector/majority × ±unsat), as in Figs. 6/7.
+pub struct PaperSweep {
+    /// Dataset name.
+    pub dataset: String,
+    /// Checkpoints requested.
+    pub checkpoints: Vec<usize>,
+    /// RF baseline series.
+    pub forest: SweepSeries,
+    /// DD variant series.
+    pub variants: Vec<SweepSeries>,
+}
+
+/// Run the Fig. 6/7 sweep on a dataset.
+///
+/// The forest is trained once at `max_trees`; prefixes give every
+/// checkpoint (the paper's incremental aggregation setting). Non-`*`
+/// variants run under `node_budget` and report their cutoff.
+pub fn paper_sweep(data: &Dataset, env: &BenchEnv, seed: u64) -> PaperSweep {
+    let checkpoints = log_checkpoints(env.max_trees);
+    eprintln!(
+        "[sweep] training {} trees on '{}' …",
+        env.max_trees, data.name
+    );
+    let forest = ForestLearner::default()
+        .trees(env.max_trees)
+        .seed(seed)
+        .fit(data);
+
+    // RF baseline: steps are linear; evaluate per checkpoint via prefixes.
+    let mut rf_points = Vec::new();
+    for &n in &checkpoints {
+        if n == 0 {
+            continue;
+        }
+        let prefix = forest.prefix(n);
+        rf_points.push(SweepPoint {
+            trees: n,
+            steps: prefix.mean_steps(data),
+            size: prefix.n_nodes(),
+        });
+    }
+    let rf_series = SweepSeries {
+        label: "Random Forest".into(),
+        points: rf_points,
+        cutoff: None,
+    };
+
+    let mut variants = Vec::new();
+    for (abstraction, unsat) in [
+        (Abstraction::Word, false),
+        (Abstraction::Word, true),
+        (Abstraction::Vector, false),
+        (Abstraction::Vector, true),
+        (Abstraction::Majority, false),
+        (Abstraction::Majority, true),
+    ] {
+        let label = abstraction.label(unsat);
+        eprintln!("[sweep] {label} …");
+        let opts = CompileOptions {
+            abstraction,
+            unsat_elim: unsat,
+            // Non-* variants explode; the budget turns that into a recorded
+            // cutoff instead of an OOM (the paper's truncated curves). Star
+            // variants get a generous budget as a termination guarantee.
+            node_budget: if unsat { env.star_budget } else { env.node_budget },
+            time_budget: Some(Duration::from_secs(env.variant_secs)),
+            ..Default::default()
+        };
+        let mut points = Vec::new();
+        let t0 = Instant::now();
+        let result = ForestCompiler::new(opts).sweep(&forest, &checkpoints, &mut |n, dd| {
+            let p = SweepPoint {
+                trees: n,
+                steps: dd.mean_steps(data),
+                size: dd.size().total(),
+            };
+            eprintln!(
+                "[sweep]   n={n}: steps {:.2}, {} nodes ({:.1?} elapsed)",
+                p.steps,
+                p.size,
+                t0.elapsed()
+            );
+            points.push(p);
+        });
+        let cutoff = match result {
+            Ok(outcome) => outcome
+                .cutoff
+                .map(|(at, why)| format!("cut off at {at} trees: {why}")),
+            Err(e) => Some(format!("failed: {e}")),
+        };
+        variants.push(SweepSeries {
+            label,
+            points,
+            cutoff,
+        });
+    }
+    PaperSweep {
+        dataset: data.name.clone(),
+        checkpoints,
+        forest: rf_series,
+        variants,
+    }
+}
+
+impl PaperSweep {
+    /// Render one metric (steps or size) as a table with a column per series.
+    pub fn to_table(&self, metric: impl Fn(&SweepPoint) -> String) -> Table {
+        let mut headers: Vec<String> = vec!["trees".into(), self.forest.label.clone()];
+        headers.extend(self.variants.iter().map(|v| v.label.clone()));
+        let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&headers_ref);
+        for &n in &self.checkpoints {
+            let mut row = vec![n.to_string()];
+            let find = |s: &SweepSeries| {
+                s.points
+                    .iter()
+                    .find(|p| p.trees == n)
+                    .map(&metric)
+                    .unwrap_or_else(|| "—".into())
+            };
+            row.push(find(&self.forest));
+            for v in &self.variants {
+                row.push(find(v));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Footnotes for cut-off series.
+    pub fn cutoff_notes(&self) -> Vec<String> {
+        self.variants
+            .iter()
+            .filter_map(|v| v.cutoff.as_ref().map(|c| format!("{}: {c}", v.label)))
+            .collect()
+    }
+}
+
+/// Compile one dataset's `Most frequent class DD*` at `trees` (Table 1/2
+/// row), returning the baseline forest as well.
+pub fn table_row(data: &Dataset, trees: usize, seed: u64) -> (RandomForest, CompiledDD) {
+    let forest = ForestLearner::default().trees(trees).seed(seed).fit(data);
+    let dd = ForestCompiler::new(CompileOptions::default())
+        .compile(&forest)
+        .expect("DD* compilation must not explode");
+    (forest, dd)
+}
+
+/// Time-budgeted Table-1/2 row: aggregates towards `trees`, snapshotting at
+/// log-spaced checkpoints; returns the forest, the largest completed
+/// snapshot, and the tree count it corresponds to (== `trees` when the
+/// budget sufficed). This is how the benches degrade gracefully on slow
+/// datasets instead of hanging (the cutoff is reported in the table notes).
+pub fn table_row_budgeted(
+    data: &Dataset,
+    trees: usize,
+    seed: u64,
+    budget: Duration,
+) -> (RandomForest, CompiledDD, usize) {
+    let forest = ForestLearner::default().trees(trees).seed(seed).fit(data);
+    let compiler = ForestCompiler::new(CompileOptions {
+        time_budget: Some(budget),
+        ..Default::default()
+    });
+    let checkpoints = log_checkpoints(trees);
+    let mut last: Option<(usize, CompiledDD)> = None;
+    compiler
+        .sweep(&forest, &checkpoints, &mut |n, dd| last = Some((n, dd)))
+        .expect("sweep must produce at least the first checkpoint");
+    let (n, dd) = last.expect("time budget too small for even one tree");
+    (forest, dd, n)
+}
+
+/// Measure mean wall-clock nanoseconds of `f` over a timed window.
+pub fn measure_ns(window: Duration, mut f: impl FnMut()) -> f64 {
+    // single warm-up pass (some measured operations are seconds-long)
+    f();
+    let start = Instant::now();
+    let mut iters = 0u64;
+    while start.elapsed() < window {
+        f();
+        iters += 1;
+    }
+    start.elapsed().as_nanos() as f64 / iters as f64
+}
+
+/// Output directory for bench reports (`bench_results/`).
+pub fn out_dir() -> PathBuf {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a report: aligned text to stdout, CSV + Markdown to
+/// `bench_results/<name>.{csv,md}`.
+pub fn report(name: &str, title: &str, table: &Table, notes: &[String]) {
+    println!("\n=== {title} ===");
+    print!("{}", table.to_text());
+    for n in notes {
+        println!("note: {n}");
+    }
+    let dir = out_dir();
+    let _ = std::fs::write(dir.join(format!("{name}.csv")), table.to_csv());
+    let mut md = format!("# {title}\n\n{}", table.to_markdown());
+    for n in notes {
+        md.push_str(&format!("\n> {n}\n"));
+    }
+    let _ = std::fs::write(dir.join(format!("{name}.md")), md);
+    println!("[written bench_results/{name}.csv bench_results/{name}.md]");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn checkpoints_log_spaced_and_capped() {
+        assert_eq!(log_checkpoints(100), vec![1, 2, 5, 10, 20, 50, 100]);
+        assert_eq!(log_checkpoints(7), vec![1, 2, 5, 7]);
+        assert_eq!(log_checkpoints(1), vec![1]);
+        let c = log_checkpoints(10_000);
+        assert_eq!(*c.last().unwrap(), 10_000);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn small_sweep_has_expected_shape() {
+        let ds = datasets::lenses();
+        let env = BenchEnv {
+            max_trees: 20,
+            table_trees: 20,
+            node_budget: 100_000,
+            star_budget: 1_000_000,
+            measure_secs: 0.01,
+            variant_secs: 600,
+            dataset_secs: 600,
+        };
+        let sweep = paper_sweep(&ds, &env, 7);
+        assert_eq!(sweep.forest.points.len(), sweep.checkpoints.len());
+        assert_eq!(sweep.variants.len(), 6);
+        // RF steps grow monotonically with n
+        let rf: Vec<f64> = sweep.forest.points.iter().map(|p| p.steps).collect();
+        assert!(rf.windows(2).all(|w| w[0] <= w[1]), "{rf:?}");
+        // DD* (majority) steps at the end are far below RF steps
+        let mv_star = sweep.variants.iter().find(|v| v.label == "Most frequent class DD*").unwrap();
+        let last = mv_star.points.last().unwrap();
+        assert!(last.steps < rf.last().unwrap() / 2.0);
+        // table renders with one row per checkpoint
+        let t = sweep.to_table(|p| format!("{:.2}", p.steps));
+        assert_eq!(t.len(), sweep.checkpoints.len());
+    }
+
+    #[test]
+    fn measure_ns_returns_positive() {
+        let ns = measure_ns(Duration::from_millis(10), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(ns > 0.0);
+    }
+}

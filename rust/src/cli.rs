@@ -1,0 +1,452 @@
+//! Command-line interface of the `forest-add` binary.
+//!
+//! Subcommands:
+//! - `datasets` — list built-in datasets
+//! - `train`    — train a Random Forest and save it as JSON
+//! - `compile`  — aggregate a forest into a decision diagram (+ DOT export)
+//! - `eval`     — steps/size/accuracy comparison table for one dataset
+//! - `serve`    — start the HTTP serving coordinator
+//! - `classify` — client convenience: send one request to a running server
+//! - `artifacts`— inspect compiled XLA artifact variants
+
+use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
+use crate::data::datasets;
+use crate::error::{Error, Result};
+use crate::forest::{ForestLearner, RandomForest};
+use crate::predicate::PredicateOrder;
+use crate::serve::config::ServeConfig;
+use crate::serve::http::http_request;
+use crate::serve::{server, BackendKind};
+use crate::util::argparse::{ArgSpec, Args};
+use crate::util::json::{self, Json};
+use crate::util::table::{fmt_thousands, Table};
+
+const USAGE: &str = "forest-add — Large Random Forests, optimised for rapid evaluation
+
+USAGE:
+  forest-add <COMMAND> [OPTIONS]
+
+COMMANDS:
+  datasets   List built-in datasets
+  train      Train a Random Forest and save it (JSON)
+  compile    Compile a forest into a decision diagram
+  eval       Compare RF vs DD steps/size/accuracy on a dataset
+  serve      Start the HTTP serving coordinator
+  classify   Send one classification request to a running server
+  artifacts  List compiled XLA artifact variants
+
+Run `forest-add <COMMAND> --help` for per-command options.
+";
+
+/// CLI entrypoint.
+pub fn run(args: Vec<String>) -> Result<()> {
+    let Some(cmd) = args.first().cloned() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = args[1..].to_vec();
+    match cmd.as_str() {
+        "datasets" => cmd_datasets(),
+        "train" => cmd_train(&rest),
+        "compile" => cmd_compile(&rest),
+        "eval" => cmd_eval(&rest),
+        "serve" => cmd_serve(&rest),
+        "classify" => cmd_classify(&rest),
+        "artifacts" => cmd_artifacts(&rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::invalid(format!(
+            "unknown command '{other}'\n\n{USAGE}"
+        ))),
+    }
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new(&["name", "rows", "features", "classes", "class histogram"]);
+    for name in datasets::names() {
+        let ds = datasets::load(name)?;
+        t.row(vec![
+            name.to_string(),
+            ds.n_rows().to_string(),
+            ds.n_features().to_string(),
+            ds.n_classes().to_string(),
+            format!("{:?}", ds.class_histogram()),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn train_spec() -> ArgSpec {
+    ArgSpec::new("forest-add train", "Train a Random Forest")
+        .req("dataset", "built-in dataset name or .csv/.arff path")
+        .opt("trees", "100", "number of trees")
+        .opt("seed", "42", "training seed")
+        .opt("max-depth", "0", "depth cap (0 = unlimited)")
+        .opt("out", "model.json", "output model path")
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let a = train_spec().parse(args)?;
+    let ds = server::resolve_dataset(a.str("dataset"))?;
+    let forest = ForestLearner::default()
+        .trees(a.usize("trees")?)
+        .seed(a.u64("seed")?)
+        .max_depth(a.usize("max-depth")?)
+        .fit(&ds);
+    let out = a.str("out");
+    forest.save(out)?;
+    println!(
+        "trained {} trees on '{}' ({} nodes, train acc {:.4}) -> {out}",
+        forest.n_trees(),
+        ds.name,
+        forest.n_nodes(),
+        forest.accuracy(&ds)
+    );
+    Ok(())
+}
+
+fn compile_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add compile",
+        "Compile a forest into a decision diagram",
+    )
+    .opt("model", "", "trained model JSON (from `train`)")
+    .opt("dataset", "", "train in-place on this dataset instead")
+    .opt("trees", "100", "trees when training in-place")
+    .opt("seed", "42", "seed when training in-place")
+    .opt("abstraction", "majority", "word | vector | majority")
+    .switch("no-unsat", "disable unsatisfiable-path elimination")
+    .opt("reduce-every", "1", "reduction cadence in trees (0 = end only)")
+    .opt("order", "frequency", "predicate order: frequency | threshold")
+    .opt("budget", "0", "live-node budget (0 = unlimited)")
+    .opt("dot", "", "write Graphviz DOT of the final diagram")
+    .opt("out", "", "save the compiled diagram as deployable JSON")
+}
+
+fn parse_abstraction(s: &str) -> Result<Abstraction> {
+    match s {
+        "word" => Ok(Abstraction::Word),
+        "vector" => Ok(Abstraction::Vector),
+        "majority" | "mv" => Ok(Abstraction::Majority),
+        other => Err(Error::invalid(format!("unknown abstraction '{other}'"))),
+    }
+}
+
+fn parse_order(s: &str) -> Result<PredicateOrder> {
+    match s {
+        "threshold" => Ok(PredicateOrder::FeatureThreshold),
+        "frequency" => Ok(PredicateOrder::FrequencyDesc),
+        other => Err(Error::invalid(format!("unknown order '{other}'"))),
+    }
+}
+
+fn load_or_train(a: &Args) -> Result<(RandomForest, Option<crate::data::Dataset>)> {
+    let model = a.str("model");
+    if !model.is_empty() {
+        return Ok((RandomForest::load(model)?, None));
+    }
+    let dataset = a.str("dataset");
+    if dataset.is_empty() {
+        return Err(Error::invalid("need --model or --dataset"));
+    }
+    let ds = server::resolve_dataset(dataset)?;
+    let forest = ForestLearner::default()
+        .trees(a.usize("trees")?)
+        .seed(a.u64("seed")?)
+        .fit(&ds);
+    Ok((forest, Some(ds)))
+}
+
+fn cmd_compile(args: &[String]) -> Result<()> {
+    let a = compile_spec().parse(args)?;
+    let (forest, ds) = load_or_train(&a)?;
+    let opts = CompileOptions {
+        abstraction: parse_abstraction(a.str("abstraction"))?,
+        unsat_elim: !a.flag("no-unsat"),
+        reduce_every: a.usize("reduce-every")?,
+        order: parse_order(a.str("order"))?,
+        node_budget: a.usize("budget")?,
+        ..Default::default()
+    };
+    let dd = ForestCompiler::new(opts).compile(&forest)?;
+    let s = dd.size();
+    println!(
+        "{}: {} trees -> {} nodes ({} decision + {} terminal), {} predicates, {} reductions, {:.2?}",
+        dd.label(),
+        forest.n_trees(),
+        s.total(),
+        s.internal,
+        s.terminals,
+        dd.stats.predicates,
+        dd.stats.reduces,
+        dd.stats.elapsed
+    );
+    println!(
+        "forest size {} nodes -> reduction {:.2}%",
+        forest.n_nodes(),
+        100.0 * (1.0 - s.total() as f64 / forest.n_nodes() as f64)
+    );
+    if let Some(ds) = &ds {
+        println!(
+            "mean steps: forest {} vs DD {} | agreement {:.4}",
+            fmt_thousands(forest.mean_steps(ds), 2),
+            fmt_thousands(dd.mean_steps(ds), 2),
+            dd.agreement(&forest, ds)
+        );
+    }
+    let dot = a.str("dot");
+    if !dot.is_empty() {
+        std::fs::write(dot, dd.to_dot())?;
+        println!("wrote {dot}");
+    }
+    let out = a.str("out");
+    if !out.is_empty() {
+        dd.save(out)?;
+        println!("wrote {out} (load on replicas with CompiledDD::load)");
+    }
+    Ok(())
+}
+
+fn eval_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add eval",
+        "Compare forest vs diagram variants on one dataset",
+    )
+    .req("dataset", "built-in dataset name or .csv/.arff path")
+    .opt("trees", "100", "forest size")
+    .opt("seed", "42", "training seed")
+    .opt("budget", "2000000", "node budget for non-* variants")
+}
+
+fn cmd_eval(args: &[String]) -> Result<()> {
+    let a = eval_spec().parse(args)?;
+    let ds = server::resolve_dataset(a.str("dataset"))?;
+    let forest = ForestLearner::default()
+        .trees(a.usize("trees")?)
+        .seed(a.u64("seed")?)
+        .fit(&ds);
+    let mut t = Table::new(&["structure", "mean steps", "size (nodes)", "accuracy"]);
+    t.row(vec![
+        "Random Forest".into(),
+        fmt_thousands(forest.mean_steps(&ds), 2),
+        fmt_thousands(forest.n_nodes() as f64, 0),
+        format!("{:.4}", forest.accuracy(&ds)),
+    ]);
+    for (abstraction, unsat) in [
+        (Abstraction::Word, true),
+        (Abstraction::Vector, true),
+        (Abstraction::Majority, true),
+    ] {
+        let opts = CompileOptions {
+            abstraction,
+            unsat_elim: unsat,
+            node_budget: a.usize("budget")?,
+            ..Default::default()
+        };
+        match ForestCompiler::new(opts).compile(&forest) {
+            Ok(dd) => {
+                t.row(vec![
+                    dd.label(),
+                    fmt_thousands(dd.mean_steps(&ds), 2),
+                    fmt_thousands(dd.size().total() as f64, 0),
+                    format!("{:.4}", dd.accuracy(&ds)),
+                ]);
+            }
+            Err(Error::Capacity(msg)) => {
+                t.row(vec![
+                    format!("{} (cut off)", abstraction.label(unsat)),
+                    "—".into(),
+                    msg,
+                    "—".into(),
+                ]);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn serve_spec() -> ArgSpec {
+    ArgSpec::new("forest-add serve", "Start the HTTP serving coordinator")
+        .opt("config", "", "JSON config file (CLI flags override)")
+        .opt("addr", "", "bind address, e.g. 127.0.0.1:7878")
+        .opt("dataset", "", "dataset to train on")
+        .opt("trees", "", "forest size")
+        .opt("max-depth", "", "tree depth cap")
+        .opt("backend", "", "default backend: forest | dd | xla")
+        .opt("artifacts", "", "artifacts directory")
+        .opt("variant", "", "artifact variant (small | base | wide)")
+        .switch("no-xla", "do not load the XLA backend")
+        .switch("dump-config", "print the effective config and exit")
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let a = serve_spec().parse(args)?;
+    let mut cfg = if a.str("config").is_empty() {
+        ServeConfig::default()
+    } else {
+        ServeConfig::load(a.str("config"))?
+    };
+    if !a.str("addr").is_empty() {
+        cfg.addr = a.str("addr").to_string();
+    }
+    if !a.str("dataset").is_empty() {
+        cfg.dataset = a.str("dataset").to_string();
+    }
+    if !a.str("trees").is_empty() {
+        cfg.trees = a.usize("trees")?;
+    }
+    if !a.str("max-depth").is_empty() {
+        cfg.max_depth = a.usize("max-depth")?;
+    }
+    if !a.str("backend").is_empty() {
+        cfg.default_backend = BackendKind::parse(a.str("backend"))?;
+    }
+    if !a.str("artifacts").is_empty() {
+        cfg.artifacts_dir = a.str("artifacts").to_string();
+    }
+    if !a.str("variant").is_empty() {
+        cfg.variant = a.str("variant").to_string();
+    }
+    if a.flag("no-xla") {
+        cfg.enable_xla = false;
+    }
+    if a.flag("dump-config") {
+        print!("{}", cfg.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let handle = server::start(&cfg)?;
+    println!("serving on http://{} — Ctrl-C to stop", handle.addr);
+    // Block forever; the process exits on signal.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn classify_spec() -> ArgSpec {
+    ArgSpec::new("forest-add classify", "Classify one row via a running server")
+        .req("addr", "server address, e.g. 127.0.0.1:7878")
+        .req("features", "comma-separated feature values")
+        .opt("backend", "", "forest | dd | xla")
+}
+
+fn cmd_classify(args: &[String]) -> Result<()> {
+    let a = classify_spec().parse(args)?;
+    let features: Vec<Json> = a
+        .str("features")
+        .split(',')
+        .map(|v| {
+            v.trim()
+                .parse::<f64>()
+                .map(json::num)
+                .map_err(|_| Error::invalid(format!("bad feature value '{v}'")))
+        })
+        .collect::<Result<_>>()?;
+    let mut fields = vec![("features", Json::Arr(features))];
+    if !a.str("backend").is_empty() {
+        fields.push(("backend", json::s(a.str("backend"))));
+    }
+    let body = json::obj(fields);
+    let (status, resp) = http_request(a.str("addr"), "POST", "/classify", Some(&body))?;
+    println!("{}", resp.to_string_pretty());
+    if status != 200 {
+        return Err(Error::Serve(format!("server returned {status}")));
+    }
+    Ok(())
+}
+
+fn artifacts_spec() -> ArgSpec {
+    ArgSpec::new("forest-add artifacts", "List compiled XLA artifact variants")
+        .opt("dir", "artifacts", "artifacts directory")
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let a = artifacts_spec().parse(args)?;
+    let dir = a.str("dir");
+    let mut t = Table::new(&["variant", "batch", "trees", "depth", "features", "classes"]);
+    for name in crate::runtime::VariantMeta::available(dir)? {
+        let m = crate::runtime::VariantMeta::load(dir, &name)?;
+        t.row(vec![
+            m.name,
+            m.batch.to_string(),
+            m.trees.to_string(),
+            m.depth.to_string(),
+            m.features.to_string(),
+            m.classes.to_string(),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_on_no_args_and_help() {
+        run(vec![]).unwrap();
+        run(vec!["help".into()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_command_rejected() {
+        assert!(run(vec!["frobnicate".into()]).is_err());
+    }
+
+    #[test]
+    fn datasets_lists() {
+        cmd_datasets().unwrap();
+    }
+
+    #[test]
+    fn train_compile_eval_roundtrip() {
+        let dir = std::env::temp_dir().join("forest-add-cli-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("model.json");
+        let model_s = model.to_str().unwrap().to_string();
+        cmd_train(&[
+            "--dataset".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "8".into(),
+            "--out".into(),
+            model_s.clone(),
+        ])
+        .unwrap();
+        assert!(model.exists());
+        let dot = dir.join("dd.dot");
+        cmd_compile(&[
+            "--model".into(),
+            model_s,
+            "--dot".into(),
+            dot.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let dot_text = std::fs::read_to_string(&dot).unwrap();
+        assert!(dot_text.starts_with("digraph"));
+        cmd_eval(&[
+            "--dataset".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "10".into(),
+        ])
+        .unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(parse_abstraction("word").unwrap(), Abstraction::Word);
+        assert!(parse_abstraction("x").is_err());
+        assert_eq!(
+            parse_order("frequency").unwrap(),
+            PredicateOrder::FrequencyDesc
+        );
+        assert!(parse_order("x").is_err());
+    }
+}

@@ -1,0 +1,749 @@
+//! The forest→ADD compiler: the paper's full pipeline (§3–§5).
+//!
+//! A [`ForestCompiler`] aggregates a trained [`RandomForest`] into one
+//! decision diagram under a chosen [`Abstraction`]:
+//!
+//! - [`Abstraction::Word`] — class-word ADD (§3): fully
+//!   information-preserving; majority vote still costs `n` reads at runtime.
+//! - [`Abstraction::Vector`] — class-vector ADD (§4.1): the coarsest
+//!   compositional abstraction; `|C|` reads at runtime.
+//! - [`Abstraction::Majority`] — majority-vote ADD (§4.2): the vector
+//!   pipeline followed by the monadic `mv` at the very end (it is not
+//!   compositional); zero aggregation reads at runtime.
+//!
+//! With [`CompileOptions::unsat_elim`], unsatisfiable-path elimination (§5)
+//! runs every [`CompileOptions::reduce_every`] trees *during* aggregation —
+//! the compositionality the paper highlights — and once more at the end.
+//! This is what keeps intermediate diagrams small enough to scale to
+//! 10,000-tree forests.
+//!
+//! Engineering safeguards not in the paper but required for a production
+//! compiler: a node budget (clean [`Error::Capacity`] instead of OOM when a
+//! non-`*` variant explodes — the paper's own Fig. 6/7 cut those series
+//! off), and periodic arena compaction (hash-consed managers never free
+//! nodes; long aggregations rebuild the live cone into a fresh manager).
+
+pub mod persist;
+
+use crate::add::reduce::{reduce_feasible, FusedCombiner, Reducer};
+use crate::add::{ClassLabel, ClassVector, ClassWord, Manager, Monoid, NodeId, SizeStats};
+use crate::data::{Dataset, Schema};
+use crate::error::{Error, Result};
+use crate::forest::RandomForest;
+use crate::predicate::{PredicateOrder, PredicatePool};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Which co-domain the final diagram carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Abstraction {
+    /// Class words `C*` (§3).
+    Word,
+    /// Class vectors `ℕ^|C|` (§4.1).
+    Vector,
+    /// Majority vote `C` (§4.2) — the paper's "Final DD".
+    #[default]
+    Majority,
+}
+
+impl Abstraction {
+    /// Short name used in reports (the paper's series labels).
+    pub fn label(&self, unsat: bool) -> String {
+        let base = match self {
+            Abstraction::Word => "Class word DD",
+            Abstraction::Vector => "Class vector DD",
+            Abstraction::Majority => "Most frequent class DD",
+        };
+        if unsat {
+            format!("{base}*")
+        } else {
+            base.to_string()
+        }
+    }
+}
+
+/// Compiler configuration.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Target co-domain.
+    pub abstraction: Abstraction,
+    /// Enable unsatisfiable-path elimination (the `*` variants).
+    pub unsat_elim: bool,
+    /// Apply the reduction every `k` trees during aggregation (`0` = only
+    /// at the very end). Ignored unless `unsat_elim`.
+    pub reduce_every: usize,
+    /// Predicate (variable) order heuristic.
+    pub order: PredicateOrder,
+    /// Live-node budget; exceeded ⇒ [`Error::Capacity`] (`0` = unlimited).
+    pub node_budget: usize,
+    /// Rebuild the manager when its arena exceeds this many internal nodes
+    /// (`0` = never). Keeps long aggregations within memory bounds.
+    pub gc_arena_threshold: usize,
+    /// Wall-clock budget for the aggregation; exceeded ⇒ cutoff (sweeps
+    /// keep the checkpoints already produced; `compile` returns
+    /// [`Error::Capacity`]). `None` = unlimited.
+    pub time_budget: Option<Duration>,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            reduce_every: 1,
+            // FrequencyDesc measured ~4x smaller diagrams, ~6x fewer steps
+            // and faster compiles than (feature, threshold) order on every
+            // evaluation dataset — see bench_results/ablation_order.md.
+            order: PredicateOrder::FrequencyDesc,
+            node_budget: 0,
+            gc_arena_threshold: 1 << 21,
+            time_budget: None,
+        }
+    }
+}
+
+/// Compilation statistics.
+#[derive(Debug, Clone, Default)]
+pub struct CompileStats {
+    /// Trees aggregated.
+    pub trees: usize,
+    /// Distinct predicates (= ADD levels).
+    pub predicates: usize,
+    /// Reduction passes executed.
+    pub reduces: usize,
+    /// Manager compactions executed.
+    pub gcs: usize,
+    /// Peak live diagram size observed during aggregation.
+    pub peak_live: usize,
+    /// Final diagram size.
+    pub final_size: SizeStats,
+    /// Wall-clock compilation time.
+    pub elapsed: Duration,
+}
+
+/// A compiled decision diagram, ready to classify.
+#[derive(Debug)]
+pub struct CompiledDD {
+    model: Model,
+    /// Schema of the training data (feature names, class labels).
+    pub schema: Schema,
+    /// Whether unsat elimination was applied.
+    pub unsat_elim: bool,
+    /// Compilation statistics.
+    pub stats: CompileStats,
+}
+
+#[derive(Debug)]
+enum Model {
+    Word { mgr: Manager<ClassWord>, root: NodeId },
+    Vector { mgr: Manager<ClassVector>, root: NodeId },
+    Majority { mgr: Manager<ClassLabel>, root: NodeId },
+}
+
+impl CompiledDD {
+    /// Which abstraction this diagram carries.
+    pub fn abstraction(&self) -> Abstraction {
+        match self.model {
+            Model::Word { .. } => Abstraction::Word,
+            Model::Vector { .. } => Abstraction::Vector,
+            Model::Majority { .. } => Abstraction::Majority,
+        }
+    }
+
+    /// Series label (paper style, e.g. `Most frequent class DD*`).
+    pub fn label(&self) -> String {
+        self.abstraction().label(self.unsat_elim)
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.schema.n_classes()
+    }
+
+    /// Classify one row (majority vote semantics in every abstraction).
+    pub fn classify(&self, x: &[f32]) -> u32 {
+        self.classify_with_steps(x).0
+    }
+
+    /// Classify with the §6 step metric: decision nodes traversed, plus the
+    /// runtime aggregation reads the abstraction still requires (`n` for
+    /// words, `|C|` for vectors, `0` after the majority abstraction).
+    pub fn classify_with_steps(&self, x: &[f32]) -> (u32, usize) {
+        match &self.model {
+            Model::Word { mgr, root } => {
+                let (w, steps) = mgr.eval(*root, x);
+                (w.majority(self.schema.n_classes()) as u32, steps + w.len())
+            }
+            Model::Vector { mgr, root } => {
+                let (v, steps) = mgr.eval(*root, x);
+                (v.majority() as u32, steps + self.schema.n_classes())
+            }
+            Model::Majority { mgr, root } => {
+                let (c, steps) = mgr.eval(*root, x);
+                (*c as u32, steps)
+            }
+        }
+    }
+
+    /// Diagram size (Fig. 7 / Table 2 measure).
+    pub fn size(&self) -> SizeStats {
+        match &self.model {
+            Model::Word { mgr, root } => mgr.size(*root),
+            Model::Vector { mgr, root } => mgr.size(*root),
+            Model::Majority { mgr, root } => mgr.size(*root),
+        }
+    }
+
+    /// Mean §6 step count over a dataset.
+    pub fn mean_steps(&self, data: &Dataset) -> f64 {
+        let total: usize = (0..data.n_rows())
+            .map(|i| self.classify_with_steps(data.row(i)).1)
+            .sum();
+        total as f64 / data.n_rows() as f64
+    }
+
+    /// Accuracy against dataset labels.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let ok = data.iter().filter(|(x, y)| self.classify(x) == *y).count();
+        ok as f64 / data.n_rows() as f64
+    }
+
+    /// Fraction of rows where this diagram and `forest` agree — the
+    /// semantics-preservation check (must be 1.0).
+    pub fn agreement(&self, forest: &RandomForest, data: &Dataset) -> f64 {
+        let ok = (0..data.n_rows())
+            .filter(|&i| self.classify(data.row(i)) == forest.predict(data.row(i)))
+            .count();
+        ok as f64 / data.n_rows() as f64
+    }
+
+    /// Graphviz rendering (Figs. 2–5 style).
+    pub fn to_dot(&self) -> String {
+        let classes = &self.schema.classes;
+        match &self.model {
+            Model::Word { mgr, root } => crate::add::dot::to_dot(mgr, *root, &self.schema, &|w| {
+                w.0.iter()
+                    .map(|&c| classes[c as usize].chars().next().unwrap_or('?').to_string())
+                    .collect::<Vec<_>>()
+                    .join("")
+            }),
+            Model::Vector { mgr, root } => {
+                crate::add::dot::to_dot(mgr, *root, &self.schema, &|v| format!("{:?}", v.0))
+            }
+            Model::Majority { mgr, root } => {
+                crate::add::dot::to_dot(mgr, *root, &self.schema, &|c| {
+                    classes[*c as usize].clone()
+                })
+            }
+        }
+    }
+}
+
+/// Outcome of a [`ForestCompiler::sweep`].
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Checkpoints that produced a snapshot.
+    pub completed: Vec<usize>,
+    /// `(checkpoint, reason)` when the sweep stopped early (node budget).
+    pub cutoff: Option<(usize, String)>,
+}
+
+/// The forest→DD compiler.
+#[derive(Debug, Clone, Default)]
+pub struct ForestCompiler {
+    opts: CompileOptions,
+}
+
+impl ForestCompiler {
+    /// Compiler with the given options.
+    pub fn new(opts: CompileOptions) -> Self {
+        ForestCompiler { opts }
+    }
+
+    /// Compile an entire forest.
+    pub fn compile(&self, forest: &RandomForest) -> Result<CompiledDD> {
+        let mut out = None;
+        let outcome = self.run(forest, &[forest.n_trees()], &mut |_, dd| out = Some(dd))?;
+        if let Some((at, reason)) = outcome.cutoff {
+            return Err(Error::Capacity(format!(
+                "node budget exceeded after {at} trees: {reason}"
+            )));
+        }
+        Ok(out.expect("sweep must produce the final checkpoint"))
+    }
+
+    /// Aggregate incrementally, producing an independent [`CompiledDD`]
+    /// snapshot at every checkpoint (ascending tree counts). Used by the
+    /// Fig. 6/7 sweeps; on node-budget exhaustion the sweep stops and
+    /// reports the cutoff instead of failing (the paper's truncated series).
+    pub fn sweep(
+        &self,
+        forest: &RandomForest,
+        checkpoints: &[usize],
+        f: &mut dyn FnMut(usize, CompiledDD),
+    ) -> Result<SweepOutcome> {
+        self.run(forest, checkpoints, f)
+    }
+
+    fn run(
+        &self,
+        forest: &RandomForest,
+        checkpoints: &[usize],
+        emit: &mut dyn FnMut(usize, CompiledDD),
+    ) -> Result<SweepOutcome> {
+        if forest.n_trees() == 0 {
+            return Err(Error::invalid("cannot compile an empty forest"));
+        }
+        for w in checkpoints.windows(2) {
+            if w[0] >= w[1] {
+                return Err(Error::invalid("checkpoints must be strictly ascending"));
+            }
+        }
+        if *checkpoints.last().unwrap_or(&0) > forest.n_trees() {
+            return Err(Error::invalid(format!(
+                "checkpoint beyond forest size {}",
+                forest.n_trees()
+            )));
+        }
+        let pool = Arc::new(PredicatePool::from_forest(forest, self.opts.order));
+        let n_classes = forest.n_classes();
+        match self.opts.abstraction {
+            Abstraction::Word => self.aggregate::<ClassWord>(
+                forest,
+                pool,
+                ClassWord::empty(),
+                &|c| ClassWord::singleton(c as u16),
+                checkpoints,
+                &mut |mgr, root, stats| {
+                    let (mgr, root) = mgr.rebuild(root);
+                    CompiledDD {
+                        model: Model::Word { mgr, root },
+                        schema: forest.schema.clone(),
+                        unsat_elim: self.opts.unsat_elim,
+                        stats,
+                    }
+                },
+                emit,
+            ),
+            Abstraction::Vector => self.aggregate::<ClassVector>(
+                forest,
+                pool,
+                ClassVector::zero(n_classes),
+                &|c| ClassVector::unit(c as u16, n_classes),
+                checkpoints,
+                &mut |mgr, root, stats| {
+                    let (mgr, root) = mgr.rebuild(root);
+                    CompiledDD {
+                        model: Model::Vector { mgr, root },
+                        schema: forest.schema.clone(),
+                        unsat_elim: self.opts.unsat_elim,
+                        stats,
+                    }
+                },
+                emit,
+            ),
+            Abstraction::Majority => {
+                let unsat = self.opts.unsat_elim;
+                self.aggregate::<ClassVector>(
+                    forest,
+                    pool,
+                    ClassVector::zero(n_classes),
+                    &|c| ClassVector::unit(c as u16, n_classes),
+                    checkpoints,
+                    &mut |mgr, root, mut stats| {
+                        // The non-compositional step (§4.2): mv at the end.
+                        let mut label_mgr: Manager<ClassLabel> =
+                            Manager::new(mgr.pool().clone());
+                        let mut mapped = mgr.map_into(&mut label_mgr, root, &|v| v.majority());
+                        if unsat {
+                            // mv merges terminals, exposing fresh entailed
+                            // decisions — reduce once more (§5 ordering).
+                            mapped = reduce_feasible(&mut label_mgr, mapped);
+                            stats.reduces += 1;
+                        }
+                        let (label_mgr, mapped) = label_mgr.rebuild(mapped);
+                        stats.final_size = label_mgr.size(mapped);
+                        CompiledDD {
+                            model: Model::Majority {
+                                mgr: label_mgr,
+                                root: mapped,
+                            },
+                            schema: forest.schema.clone(),
+                            unsat_elim: unsat,
+                            stats,
+                        }
+                    },
+                    emit,
+                )
+            }
+        }
+    }
+
+    /// Shared incremental aggregation loop over a monoid co-domain.
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate<T: Monoid>(
+        &self,
+        forest: &RandomForest,
+        pool: Arc<PredicatePool>,
+        empty: T,
+        inject: &dyn Fn(u32) -> T,
+        checkpoints: &[usize],
+        snapshot: &mut dyn FnMut(&Manager<T>, NodeId, CompileStats) -> CompiledDD,
+        emit: &mut dyn FnMut(usize, CompiledDD),
+    ) -> Result<SweepOutcome> {
+        let start = Instant::now();
+        let mut mgr: Manager<T> = Manager::new(pool.clone());
+        // Persistent reducer: after `combine`, the diagram shares almost all
+        // structure with the previously reduced one, so keeping the memo
+        // across trees makes the per-tree reduction incremental (§Perf).
+        let mut reducer = Reducer::new(pool.clone());
+        // At cadence 1 the combine+reduce pair is fused: entailed branches
+        // are pruned while the product is built (see reduce::FusedCombiner).
+        let mut fused = if self.opts.unsat_elim && self.opts.reduce_every == 1 {
+            Some(FusedCombiner::new(pool.clone()))
+        } else {
+            None
+        };
+        let mut acc = mgr.terminal(empty);
+        let mut stats = CompileStats {
+            predicates: pool.len(),
+            ..Default::default()
+        };
+        let mut outcome = SweepOutcome {
+            completed: Vec::new(),
+            cutoff: None,
+        };
+        let mut next_ckpt = 0usize;
+        // checkpoint 0 = the empty forest's diagram (the ε terminal)
+        while next_ckpt < checkpoints.len() && checkpoints[next_ckpt] == 0 {
+            let mut s = stats.clone();
+            s.elapsed = start.elapsed();
+            s.final_size = mgr.size(acc);
+            emit(0, snapshot(&mgr, acc, s));
+            outcome.completed.push(0);
+            next_ckpt += 1;
+        }
+        for (i, tree) in forest.trees.iter().enumerate() {
+            if next_ckpt >= checkpoints.len() {
+                break; // nothing left to produce
+            }
+            if let Some(tb) = self.opts.time_budget {
+                if start.elapsed() > tb {
+                    outcome.cutoff = Some((
+                        i,
+                        format!("time budget {tb:?} exhausted after {i} trees"),
+                    ));
+                    return Ok(outcome);
+                }
+            }
+            let t = mgr.from_tree(tree, inject)?;
+            stats.trees = i + 1;
+            if let Some(fc) = fused.as_mut() {
+                acc = fc.combine(&mut mgr, acc, t);
+                stats.reduces += 1;
+                // Product-memo entries cannot hit across trees (both the
+                // accumulator and the tree operand change); dropping them
+                // keeps the table cache-resident.
+                fc.clear_memo();
+            } else {
+                acc = mgr.combine(acc, t);
+                if self.opts.unsat_elim
+                    && self.opts.reduce_every > 0
+                    && (i + 1) % self.opts.reduce_every == 0
+                {
+                    acc = reducer.reduce(&mut mgr, acc);
+                    stats.reduces += 1;
+                    if reducer.cache_len() > 6_000_000 {
+                        reducer.clear();
+                    }
+                }
+            }
+            // The live-size DFS is only paid when a budget needs enforcing;
+            // otherwise the arena high-water mark tracks the peak cheaply.
+            if self.opts.node_budget > 0 {
+                let live = mgr.size(acc);
+                stats.peak_live = stats.peak_live.max(live.total());
+                if live.total() > self.opts.node_budget {
+                    outcome.cutoff = Some((
+                        i + 1,
+                        format!(
+                            "live diagram has {} nodes (budget {})",
+                            live.total(),
+                            self.opts.node_budget
+                        ),
+                    ));
+                    return Ok(outcome);
+                }
+            } else {
+                stats.peak_live = stats.peak_live.max(mgr.arena_sizes().0);
+            }
+            if self.opts.gc_arena_threshold > 0
+                && mgr.arena_sizes().0 > self.opts.gc_arena_threshold
+            {
+                let (m2, a2) = mgr.rebuild(acc);
+                mgr = m2;
+                acc = a2;
+                stats.gcs += 1;
+                // Node ids changed: all cached reduction results are stale.
+                reducer.clear();
+                if let Some(fc) = fused.as_mut() {
+                    fc.clear();
+                }
+            }
+            if std::env::var("FOREST_ADD_COMPILE_STATS").is_ok() && (i + 1) % 25 == 0 {
+                if let Some(fc) = fused.as_ref() {
+                    eprintln!(
+                        "[compile] tree {}: visits {} hits {} skips {} arena {}",
+                        i + 1,
+                        fc.visits,
+                        fc.hits,
+                        fc.skips,
+                        mgr.arena_sizes().0
+                    );
+                }
+            }
+            if checkpoints[next_ckpt] == i + 1 {
+                let mut fin = acc;
+                // End-of-pipeline reduction for checkpoints that fall between
+                // cadence points (and for reduce_every == 0).
+                if self.opts.unsat_elim {
+                    fin = reducer.reduce(&mut mgr, fin);
+                    stats.reduces += 1;
+                }
+                let mut s = stats.clone();
+                s.elapsed = start.elapsed();
+                s.final_size = mgr.size(fin);
+                emit(i + 1, snapshot(&mgr, fin, s));
+                outcome.completed.push(i + 1);
+                next_ckpt += 1;
+            }
+        }
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn iris_forest(n: usize) -> (crate::data::Dataset, RandomForest) {
+        let ds = datasets::iris();
+        let f = ForestLearner::default().trees(n).seed(42).fit(&ds);
+        (ds, f)
+    }
+
+    fn opts(a: Abstraction, unsat: bool) -> CompileOptions {
+        CompileOptions {
+            abstraction: a,
+            unsat_elim: unsat,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn all_variants_preserve_forest_semantics() {
+        let (ds, forest) = iris_forest(10);
+        for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+            for unsat in [false, true] {
+                let dd = ForestCompiler::new(opts(abstraction, unsat))
+                    .compile(&forest)
+                    .unwrap();
+                assert_eq!(
+                    dd.agreement(&forest, &ds),
+                    1.0,
+                    "{abstraction:?} unsat={unsat} changed semantics"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn word_dd_preserves_exact_words() {
+        let (ds, forest) = iris_forest(7);
+        let dd = ForestCompiler::new(opts(Abstraction::Word, true))
+            .compile(&forest)
+            .unwrap();
+        // word steps include n reads
+        let (_, steps) = dd.classify_with_steps(ds.row(0));
+        assert!(steps >= 7);
+        if let Model::Word { mgr, root } = &dd.model {
+            for i in [0, 60, 120] {
+                let x = ds.row(i);
+                let (w, _) = mgr.eval(*root, x);
+                let expect: Vec<u16> =
+                    forest.trees.iter().map(|t| t.predict(x) as u16).collect();
+                assert_eq!(w.0, expect, "row {i}: word must list per-tree decisions in order");
+            }
+        } else {
+            panic!("expected word model");
+        }
+    }
+
+    #[test]
+    fn vector_dd_carries_exact_vote_counts() {
+        let (ds, forest) = iris_forest(12);
+        let dd = ForestCompiler::new(opts(Abstraction::Vector, true))
+            .compile(&forest)
+            .unwrap();
+        if let Model::Vector { mgr, root } = &dd.model {
+            for i in [3, 77, 140] {
+                let x = ds.row(i);
+                let (v, _) = mgr.eval(*root, x);
+                let expect = forest.votes(x);
+                assert_eq!(v.0, expect, "row {i}");
+            }
+        } else {
+            panic!("expected vector model");
+        }
+    }
+
+    #[test]
+    fn unsat_elimination_shrinks_the_diagram() {
+        let (_, forest) = iris_forest(12);
+        let plain = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Majority,
+            unsat_elim: false,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        let star = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        assert!(
+            star.size().total() < plain.size().total(),
+            "{} !< {}",
+            star.size().total(),
+            plain.size().total()
+        );
+    }
+
+    #[test]
+    fn majority_dd_steps_beat_forest_steps() {
+        let (ds, forest) = iris_forest(60);
+        let dd = ForestCompiler::new(opts(Abstraction::Majority, true))
+            .compile(&forest)
+            .unwrap();
+        let dd_steps = dd.mean_steps(&ds);
+        let rf_steps = forest.mean_steps(&ds);
+        // At 60 trees the gap is already several-fold; it grows with n (the
+        // orders-of-magnitude factors of Table 1 appear at thousands of
+        // trees — regenerated by `cargo bench --bench table1_steps`).
+        assert!(
+            dd_steps * 3.0 < rf_steps,
+            "DD* {dd_steps} not ≫ faster than RF {rf_steps}"
+        );
+        // DD* steps must be sublinear in n: far below one step per tree.
+        assert!(dd_steps < 60.0, "DD* steps {dd_steps} not sublinear");
+    }
+
+    #[test]
+    fn node_budget_cuts_off_cleanly() {
+        let (_, forest) = iris_forest(40);
+        let err = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Word,
+            unsat_elim: false,
+            node_budget: 50,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap_err();
+        assert!(matches!(err, Error::Capacity(_)), "{err}");
+    }
+
+    #[test]
+    fn sweep_checkpoints_match_individual_compiles() {
+        let (ds, forest) = iris_forest(10);
+        let compiler = ForestCompiler::new(opts(Abstraction::Majority, true));
+        let mut snaps = Vec::new();
+        let outcome = compiler
+            .sweep(&forest, &[2, 5, 10], &mut |n, dd| snaps.push((n, dd)))
+            .unwrap();
+        assert_eq!(outcome.completed, vec![2, 5, 10]);
+        assert!(outcome.cutoff.is_none());
+        for (n, dd) in &snaps {
+            let direct = compiler.compile(&forest.prefix(*n)).unwrap();
+            for i in (0..ds.n_rows()).step_by(13) {
+                assert_eq!(
+                    dd.classify(ds.row(i)),
+                    direct.classify(ds.row(i)),
+                    "n={n} row={i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_cutoff_reports_partial_results() {
+        let (_, forest) = iris_forest(30);
+        let compiler = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Word,
+            unsat_elim: false,
+            node_budget: 200,
+            ..Default::default()
+        });
+        let mut seen = Vec::new();
+        let outcome = compiler
+            .sweep(&forest, &[1, 2, 30], &mut |n, _| seen.push(n))
+            .unwrap();
+        assert!(outcome.cutoff.is_some());
+        assert_eq!(seen, outcome.completed);
+        assert!(outcome.completed.len() < 3);
+    }
+
+    #[test]
+    fn empty_forest_rejected_and_zero_checkpoint_works() {
+        let (_, forest) = iris_forest(3);
+        let compiler = ForestCompiler::new(opts(Abstraction::Vector, false));
+        let mut sizes = Vec::new();
+        compiler
+            .sweep(&forest, &[0, 3], &mut |n, dd| sizes.push((n, dd.size().total())))
+            .unwrap();
+        assert_eq!(sizes[0].1, 1, "empty forest = single ε/0 terminal");
+        let empty = RandomForest {
+            trees: vec![],
+            schema: forest.schema.clone(),
+        };
+        assert!(compiler.compile(&empty).is_err());
+    }
+
+    #[test]
+    fn accuracy_matches_forest_accuracy() {
+        let (ds, forest) = iris_forest(30);
+        let dd = ForestCompiler::new(opts(Abstraction::Majority, true))
+            .compile(&forest)
+            .unwrap();
+        assert!((dd.accuracy(&ds) - forest.accuracy(&ds)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let (_, forest) = iris_forest(8);
+        let dd = ForestCompiler::new(opts(Abstraction::Majority, true))
+            .compile(&forest)
+            .unwrap();
+        assert_eq!(dd.stats.trees, 8);
+        assert!(dd.stats.predicates > 0);
+        assert!(dd.stats.reduces >= 8);
+        assert!(dd.stats.peak_live > 0);
+        assert!(dd.stats.final_size.total() > 0);
+        assert_eq!(dd.label(), "Most frequent class DD*");
+    }
+
+    #[test]
+    fn dot_export_renders_class_names() {
+        let (_, forest) = iris_forest(5);
+        let dd = ForestCompiler::new(opts(Abstraction::Majority, true))
+            .compile(&forest)
+            .unwrap();
+        let dot = dd.to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("setosa") || dot.contains("versicolor") || dot.contains("virginica"));
+    }
+}

@@ -1,0 +1,383 @@
+//! Persistence for compiled decision diagrams.
+//!
+//! A `CompiledDD` is the deployable artifact of this system — serialising
+//! it lets the serving fleet load pre-compiled diagrams instead of paying
+//! aggregation cost at startup (`forest-add compile --out dd.json`, then
+//! load on each replica). The format stores the predicate pool (the
+//! variable order), the node arena of the live cone, the terminals of the
+//! concrete abstraction, and the schema.
+
+use super::{Abstraction, CompiledDD, CompileStats, Model};
+use crate::add::{ClassLabel, ClassVector, ClassWord, Manager, NodeId, Terminal};
+use crate::data::{Feature, FeatureKind, Schema};
+use crate::error::{Error, Result};
+use crate::predicate::{Domain, Predicate, PredicatePool};
+use crate::util::json::{self, Json};
+use std::sync::Arc;
+
+impl CompiledDD {
+    /// Serialise to JSON (pool + cone + terminals + schema).
+    pub fn to_persist_json(&self) -> Json {
+        let (abstraction, mgr_json) = match &self.model {
+            Model::Word { mgr, root } => (
+                "word",
+                cone_json(mgr, *root, &|w: &ClassWord| {
+                    Json::Arr(w.0.iter().map(|&c| json::num(c as f64)).collect())
+                }),
+            ),
+            Model::Vector { mgr, root } => (
+                "vector",
+                cone_json(mgr, *root, &|v: &ClassVector| {
+                    Json::Arr(v.0.iter().map(|&c| json::num(c as f64)).collect())
+                }),
+            ),
+            Model::Majority { mgr, root } => (
+                "majority",
+                cone_json(mgr, *root, &|c: &ClassLabel| json::num(*c as f64)),
+            ),
+        };
+        let pool = self.pool_json();
+        json::obj(vec![
+            ("format", json::s("forest-add/dd-v1")),
+            ("abstraction", json::s(abstraction)),
+            ("unsat_elim", Json::Bool(self.unsat_elim)),
+            ("schema", schema_json(&self.schema)),
+            ("pool", pool),
+            ("diagram", mgr_json),
+        ])
+    }
+
+    fn pool_json(&self) -> Json {
+        let pool = match &self.model {
+            Model::Word { mgr, .. } => mgr.pool().clone(),
+            Model::Vector { mgr, .. } => mgr.pool().clone(),
+            Model::Majority { mgr, .. } => mgr.pool().clone(),
+        };
+        let preds: Vec<Json> = (0..pool.len() as u32)
+            .map(|l| {
+                let p = pool.pred(l);
+                json::obj(vec![
+                    ("f", json::num(p.feature as f64)),
+                    ("t", json::num(p.threshold as f64)),
+                ])
+            })
+            .collect();
+        Json::Arr(preds)
+    }
+
+    /// Save to a file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_persist_json().to_string_compact())?;
+        Ok(())
+    }
+
+    /// Deserialise a diagram saved by [`save`](Self::save).
+    pub fn load_from_json(v: &Json) -> Result<CompiledDD> {
+        if v.get_str("format") != Some("forest-add/dd-v1") {
+            return Err(Error::parse("not a forest-add dd-v1 document"));
+        }
+        let schema = schema_from_json(
+            v.get("schema")
+                .ok_or_else(|| Error::parse("dd: missing schema"))?,
+        )?;
+        let preds = v
+            .get("pool")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("dd: missing pool"))?
+            .iter()
+            .map(|p| {
+                Ok(Predicate {
+                    feature: p.get_i64("f").ok_or_else(|| Error::parse("pred: f"))? as u32,
+                    threshold: p
+                        .get("t")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| Error::parse("pred: t"))? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let domains: Vec<Domain> = schema
+            .features
+            .iter()
+            .map(|f| match &f.kind {
+                FeatureKind::Numeric => Domain::Real,
+                FeatureKind::Categorical { values } => Domain::Grid {
+                    cardinality: values.len() as u32,
+                },
+            })
+            .collect();
+        let n_features = schema.n_features();
+        let pool = Arc::new(PredicatePool::from_predicates(preds, domains, n_features));
+        let unsat_elim = v.get("unsat_elim").and_then(Json::as_bool).unwrap_or(true);
+        let diagram = v
+            .get("diagram")
+            .ok_or_else(|| Error::parse("dd: missing diagram"))?;
+        let n_classes = schema.n_classes();
+        let model = match v.get_str("abstraction") {
+            Some("word") => {
+                let (mgr, root) = cone_from_json(pool, diagram, &|t| {
+                    let codes = t.as_arr().ok_or_else(|| Error::parse("word terminal"))?;
+                    Ok(ClassWord(
+                        codes
+                            .iter()
+                            .map(|c| c.as_i64().map(|v| v as u16))
+                            .collect::<Option<_>>()
+                            .ok_or_else(|| Error::parse("word symbol"))?,
+                    ))
+                })?;
+                Model::Word { mgr, root }
+            }
+            Some("vector") => {
+                let (mgr, root) = cone_from_json(pool, diagram, &|t| {
+                    let counts = t.as_arr().ok_or_else(|| Error::parse("vector terminal"))?;
+                    if counts.len() != n_classes {
+                        return Err(Error::parse("vector terminal arity"));
+                    }
+                    Ok(ClassVector(
+                        counts
+                            .iter()
+                            .map(|c| c.as_i64().map(|v| v as u32))
+                            .collect::<Option<_>>()
+                            .ok_or_else(|| Error::parse("vector count"))?,
+                    ))
+                })?;
+                Model::Vector { mgr, root }
+            }
+            Some("majority") => {
+                let (mgr, root) = cone_from_json(pool, diagram, &|t| {
+                    t.as_i64()
+                        .map(|v| v as ClassLabel)
+                        .ok_or_else(|| Error::parse("label terminal"))
+                })?;
+                Model::Majority { mgr, root }
+            }
+            other => return Err(Error::parse(format!("unknown abstraction {other:?}"))),
+        };
+        Ok(CompiledDD {
+            model,
+            schema,
+            unsat_elim,
+            stats: CompileStats::default(),
+        })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<CompiledDD> {
+        let text = std::fs::read_to_string(path)?;
+        Self::load_from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Topologically serialise a cone: nodes listed children-first, the root
+/// last; ids are indices into the combined `[terminals..., nodes...]` list.
+fn cone_json<T: Terminal>(mgr: &Manager<T>, root: NodeId, term: &impl Fn(&T) -> Json) -> Json {
+    let mut order: Vec<NodeId> = Vec::new();
+    let mut index: std::collections::HashMap<NodeId, usize> = std::collections::HashMap::new();
+    // iterative post-order
+    let mut stack = vec![(root, false)];
+    while let Some((id, expanded)) = stack.pop() {
+        if index.contains_key(&id) {
+            continue;
+        }
+        if id.is_terminal() || expanded {
+            index.insert(id, order.len());
+            order.push(id);
+        } else {
+            let n = mgr.internal(id);
+            stack.push((id, true));
+            stack.push((n.hi, false));
+            stack.push((n.lo, false));
+        }
+    }
+    let nodes: Vec<Json> = order
+        .iter()
+        .map(|&id| {
+            if id.is_terminal() {
+                json::obj(vec![("v", term(mgr.terminal_value(id)))])
+            } else {
+                let n = mgr.internal(id);
+                json::obj(vec![
+                    ("l", json::num(n.level as f64)),
+                    ("h", json::num(index[&n.hi] as f64)),
+                    ("o", json::num(index[&n.lo] as f64)),
+                ])
+            }
+        })
+        .collect();
+    json::obj(vec![
+        ("nodes", Json::Arr(nodes)),
+        ("root", json::num((order.len() - 1) as f64)),
+    ])
+}
+
+fn cone_from_json<T: Terminal>(
+    pool: Arc<PredicatePool>,
+    v: &Json,
+    term: &impl Fn(&Json) -> Result<T>,
+) -> Result<(Manager<T>, NodeId)> {
+    let nodes = v
+        .get("nodes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::parse("diagram: missing nodes"))?;
+    let root_idx = v
+        .get_i64("root")
+        .ok_or_else(|| Error::parse("diagram: missing root"))? as usize;
+    let mut mgr = Manager::new(pool);
+    let mut ids: Vec<NodeId> = Vec::with_capacity(nodes.len());
+    for n in nodes {
+        if let Some(t) = n.get("v") {
+            ids.push(mgr.terminal(term(t)?));
+        } else {
+            let level = n.get_i64("l").ok_or_else(|| Error::parse("node: l"))? as u32;
+            let hi = *ids
+                .get(n.get_i64("h").ok_or_else(|| Error::parse("node: h"))? as usize)
+                .ok_or_else(|| Error::parse("node: forward reference"))?;
+            let lo = *ids
+                .get(n.get_i64("o").ok_or_else(|| Error::parse("node: o"))? as usize)
+                .ok_or_else(|| Error::parse("node: forward reference"))?;
+            if level as usize >= mgr.pool().len() {
+                return Err(Error::parse("node: level out of range"));
+            }
+            ids.push(mgr.mk(level, hi, lo));
+        }
+    }
+    let root = *ids
+        .get(root_idx)
+        .ok_or_else(|| Error::parse("diagram: root out of range"))?;
+    Ok((mgr, root))
+}
+
+fn schema_json(s: &Schema) -> Json {
+    json::obj(vec![
+        (
+            "classes",
+            Json::Arr(s.classes.iter().map(|c| json::s(c.clone())).collect()),
+        ),
+        (
+            "features",
+            Json::Arr(
+                s.features
+                    .iter()
+                    .map(|f| {
+                        let kind = match &f.kind {
+                            FeatureKind::Numeric => json::s("numeric"),
+                            FeatureKind::Categorical { values } => Json::Arr(
+                                values.iter().map(|v| json::s(v.clone())).collect(),
+                            ),
+                        };
+                        json::obj(vec![("name", json::s(f.name.clone())), ("kind", kind)])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn schema_from_json(v: &Json) -> Result<Schema> {
+    let classes = v
+        .get("classes")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::parse("schema: classes"))?
+        .iter()
+        .map(|c| c.as_str().map(String::from))
+        .collect::<Option<_>>()
+        .ok_or_else(|| Error::parse("schema: class label"))?;
+    let features = v
+        .get("features")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::parse("schema: features"))?
+        .iter()
+        .map(|f| {
+            let name = f
+                .get_str("name")
+                .ok_or_else(|| Error::parse("feature: name"))?
+                .to_string();
+            let kind = match f.get("kind") {
+                Some(Json::Str(s)) if s == "numeric" => FeatureKind::Numeric,
+                Some(Json::Arr(vals)) => FeatureKind::Categorical {
+                    values: vals
+                        .iter()
+                        .map(|v| v.as_str().map(String::from))
+                        .collect::<Option<_>>()
+                        .ok_or_else(|| Error::parse("feature: value"))?,
+                },
+                _ => return Err(Error::parse("feature: kind")),
+            };
+            Ok(Feature { name, kind })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(Schema { features, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::{CompileOptions, ForestCompiler};
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn roundtrip(abstraction: Abstraction) {
+        let ds = datasets::lenses();
+        let forest = ForestLearner::default().trees(12).seed(4).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        let text = dd.to_persist_json().to_string_compact();
+        let back = CompiledDD::load_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.abstraction(), abstraction);
+        assert_eq!(back.size(), dd.size());
+        for i in 0..ds.n_rows() {
+            assert_eq!(
+                back.classify_with_steps(ds.row(i)),
+                dd.classify_with_steps(ds.row(i)),
+                "row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn roundtrips_all_abstractions() {
+        roundtrip(Abstraction::Majority);
+        roundtrip(Abstraction::Vector);
+        roundtrip(Abstraction::Word);
+    }
+
+    #[test]
+    fn roundtrips_numeric_dataset() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(8).seed(1).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+        let back =
+            CompiledDD::load_from_json(&Json::parse(&dd.to_persist_json().to_string_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.agreement(&forest, &ds), 1.0);
+        assert_eq!(back.schema, dd.schema);
+    }
+
+    #[test]
+    fn file_save_load() {
+        let ds = datasets::balance_scale();
+        let forest = ForestLearner::default().trees(6).seed(2).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+        let path = std::env::temp_dir().join(format!("dd-persist-{}.json", std::process::id()));
+        dd.save(path.to_str().unwrap()).unwrap();
+        let back = CompiledDD::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(back.agreement(&forest, &ds), 1.0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(CompiledDD::load_from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"format":"forest-add/dd-v1","abstraction":"majority"}"#;
+        assert!(CompiledDD::load_from_json(&Json::parse(bad).unwrap()).is_err());
+        let wrong_fmt = r#"{"format":"v2"}"#;
+        assert!(CompiledDD::load_from_json(&Json::parse(wrong_fmt).unwrap()).is_err());
+    }
+}

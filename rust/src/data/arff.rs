@@ -1,0 +1,262 @@
+//! ARFF (Weka's Attribute-Relation File Format) loader/writer.
+//!
+//! The paper's reference RF implementation is Weka, whose native interchange
+//! format is ARFF; supporting it makes this system a drop-in consumer of
+//! existing Weka dataset files. Supported: `@relation`, `@attribute` with
+//! `numeric`/`real`/`integer` or nominal `{a,b,c}` domains, `@data` with
+//! comma-separated rows, `%` comments. The **last attribute is the class**
+//! and must be nominal. Sparse rows and strings/dates are not supported
+//! (none of the evaluation datasets need them).
+
+use super::{Dataset, Feature, FeatureKind, Schema};
+use crate::error::{Error, Result};
+
+fn strip_quotes(s: &str) -> &str {
+    let s = s.trim();
+    if (s.starts_with('\'') && s.ends_with('\'') && s.len() >= 2)
+        || (s.starts_with('"') && s.ends_with('"') && s.len() >= 2)
+    {
+        &s[1..s.len() - 1]
+    } else {
+        s
+    }
+}
+
+/// Parse ARFF text into a [`Dataset`].
+pub fn parse(text: &str) -> Result<Dataset> {
+    let mut relation = String::from("arff");
+    let mut attrs: Vec<(String, Option<Vec<String>>)> = Vec::new(); // None = numeric
+    let mut in_data = false;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let lineno = lineno + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        if !in_data {
+            let lower = line.to_ascii_lowercase();
+            if lower.starts_with("@relation") {
+                relation = strip_quotes(line[9..].trim()).to_string();
+            } else if lower.starts_with("@attribute") {
+                let rest = line[10..].trim();
+                // name may be quoted and contain spaces
+                let (name, domain) = if rest.starts_with('\'') || rest.starts_with('"') {
+                    let quote = rest.chars().next().unwrap();
+                    let end = rest[1..]
+                        .find(quote)
+                        .ok_or_else(|| Error::parse(format!("line {lineno}: unterminated attribute name")))?
+                        + 1;
+                    (rest[1..end].to_string(), rest[end + 1..].trim())
+                } else {
+                    let mut it = rest.splitn(2, char::is_whitespace);
+                    let n = it.next().unwrap().to_string();
+                    (n, it.next().unwrap_or("").trim())
+                };
+                if domain.starts_with('{') {
+                    let inner = domain
+                        .strip_prefix('{')
+                        .and_then(|d| d.trim_end().strip_suffix('}'))
+                        .ok_or_else(|| {
+                            Error::parse(format!("line {lineno}: malformed nominal domain"))
+                        })?;
+                    let values: Vec<String> = inner
+                        .split(',')
+                        .map(|v| strip_quotes(v).to_string())
+                        .collect();
+                    if values.is_empty() {
+                        return Err(Error::parse(format!("line {lineno}: empty nominal domain")));
+                    }
+                    attrs.push((name, Some(values)));
+                } else {
+                    let d = domain.to_ascii_lowercase();
+                    if d.starts_with("numeric") || d.starts_with("real") || d.starts_with("integer")
+                    {
+                        attrs.push((name, None));
+                    } else {
+                        return Err(Error::parse(format!(
+                            "line {lineno}: unsupported attribute type '{domain}'"
+                        )));
+                    }
+                }
+            } else if lower.starts_with("@data") {
+                in_data = true;
+            } else {
+                return Err(Error::parse(format!(
+                    "line {lineno}: unexpected directive '{line}'"
+                )));
+            }
+        } else {
+            let fields: Vec<String> = line
+                .split(',')
+                .map(|f| strip_quotes(f).to_string())
+                .collect();
+            if fields.len() != attrs.len() {
+                return Err(Error::parse(format!(
+                    "line {lineno}: expected {} fields, found {}",
+                    attrs.len(),
+                    fields.len()
+                )));
+            }
+            rows.push(fields);
+        }
+    }
+
+    if attrs.len() < 2 {
+        return Err(Error::parse("ARFF needs at least one feature and a class attribute"));
+    }
+    if rows.is_empty() {
+        return Err(Error::parse("ARFF has no data rows"));
+    }
+    let (class_name, class_domain) = attrs.pop().unwrap();
+    let classes = class_domain.ok_or_else(|| {
+        Error::parse(format!("class attribute '{class_name}' must be nominal"))
+    })?;
+
+    let features: Vec<Feature> = attrs
+        .iter()
+        .map(|(name, dom)| Feature {
+            name: name.clone(),
+            kind: match dom {
+                None => FeatureKind::Numeric,
+                Some(values) => FeatureKind::Categorical {
+                    values: values.clone(),
+                },
+            },
+        })
+        .collect();
+    let nf = features.len();
+    let schema = Schema {
+        features,
+        classes: classes.clone(),
+    };
+
+    let mut cells = Vec::with_capacity(rows.len() * nf);
+    let mut labels = Vec::with_capacity(rows.len());
+    for (r, row) in rows.iter().enumerate() {
+        for (c, (name, dom)) in attrs.iter().enumerate() {
+            let field = &row[c];
+            match dom {
+                None => cells.push(field.parse::<f32>().map_err(|_| {
+                    Error::parse(format!("data row {r}: '{field}' is not numeric for '{name}'"))
+                })?),
+                Some(values) => {
+                    let code = values.iter().position(|v| v == field).ok_or_else(|| {
+                        Error::parse(format!(
+                            "data row {r}: value '{field}' not in domain of '{name}'"
+                        ))
+                    })?;
+                    cells.push(code as f32);
+                }
+            }
+        }
+        let y = classes
+            .iter()
+            .position(|v| *v == row[nf])
+            .ok_or_else(|| Error::parse(format!("data row {r}: unknown class '{}'", row[nf])))?;
+        labels.push(y as u32);
+    }
+    Dataset::new(relation, schema, cells, labels)
+}
+
+/// Load an ARFF file.
+pub fn load_file(path: &str) -> Result<Dataset> {
+    parse(&std::fs::read_to_string(path)?)
+}
+
+/// Render a dataset as ARFF text (round-trips through [`parse`]).
+pub fn to_arff(ds: &Dataset) -> String {
+    let mut out = format!("@relation '{}'\n\n", ds.name);
+    for f in &ds.schema.features {
+        match &f.kind {
+            FeatureKind::Numeric => out.push_str(&format!("@attribute '{}' numeric\n", f.name)),
+            FeatureKind::Categorical { values } => out.push_str(&format!(
+                "@attribute '{}' {{{}}}\n",
+                f.name,
+                values.join(",")
+            )),
+        }
+    }
+    out.push_str(&format!("@attribute 'class' {{{}}}\n", ds.schema.classes.join(",")));
+    out.push_str("\n@data\n");
+    for i in 0..ds.n_rows() {
+        let mut row: Vec<String> = ds
+            .row(i)
+            .iter()
+            .enumerate()
+            .map(|(f, &v)| ds.schema.render_value(f, v))
+            .collect();
+        row.push(ds.schema.classes[ds.label(i) as usize].clone());
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+% Iris fragment
+@relation iris
+@attribute sepallength numeric
+@attribute 'petal width' real
+@attribute color {red, green}
+@attribute class {setosa,versicolor}
+
+@data
+5.1,0.2,red,setosa
+7.0,1.4,green,versicolor
+% trailing comment
+4.9,0.2,red,setosa
+";
+
+    #[test]
+    fn parse_basic() {
+        let ds = parse(SAMPLE).unwrap();
+        assert_eq!(ds.name, "iris");
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.n_features(), 3);
+        assert_eq!(ds.schema.features[1].name, "petal width");
+        assert_eq!(ds.row(1), &[7.0, 1.4, 1.0]);
+        assert_eq!(ds.label(1), 1);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = parse(SAMPLE).unwrap();
+        let ds2 = parse(&to_arff(&ds)).unwrap();
+        assert_eq!(ds.n_rows(), ds2.n_rows());
+        for i in 0..ds.n_rows() {
+            assert_eq!(ds.row(i), ds2.row(i));
+            assert_eq!(ds.label(i), ds2.label(i));
+        }
+        assert_eq!(ds.schema, ds2.schema);
+    }
+
+    #[test]
+    fn class_must_be_nominal() {
+        let bad = "@relation r\n@attribute a numeric\n@attribute class numeric\n@data\n1,2\n";
+        assert!(parse(bad).unwrap_err().to_string().contains("nominal"));
+    }
+
+    #[test]
+    fn unknown_nominal_value_rejected() {
+        let bad = "@relation r\n@attribute a {x,y}\n@attribute class {p,n}\n@data\nz,p\n";
+        assert!(parse(bad).unwrap_err().to_string().contains("not in domain"));
+    }
+
+    #[test]
+    fn ragged_row_rejected() {
+        let bad = "@relation r\n@attribute a numeric\n@attribute class {p,n}\n@data\n1\n";
+        assert!(parse(bad).unwrap_err().to_string().contains("expected 2 fields"));
+    }
+
+    #[test]
+    fn unsupported_type_rejected() {
+        let bad = "@relation r\n@attribute a string\n@attribute class {p}\n@data\nx,p\n";
+        assert!(parse(bad).unwrap_err().to_string().contains("unsupported"));
+    }
+}

@@ -1,0 +1,231 @@
+//! CSV loader/writer with schema inference.
+//!
+//! Format: first line is a header; the **last column is the class label**.
+//! A column is numeric when every cell parses as a float, categorical
+//! otherwise (value dictionary in first-appearance order). Quoted fields
+//! with embedded separators/quotes are supported.
+
+use super::{Dataset, Feature, FeatureKind, Schema};
+use crate::error::{Error, Result};
+
+/// Split one CSV record honouring double quotes.
+fn split_record(line: &str, lineno: usize) -> Result<Vec<String>> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' if cur.is_empty() => in_quotes = true,
+            ',' if !in_quotes => {
+                fields.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    if in_quotes {
+        return Err(Error::parse(format!("line {lineno}: unterminated quote")));
+    }
+    fields.push(cur);
+    Ok(fields.into_iter().map(|f| f.trim().to_string()).collect())
+}
+
+/// Parse CSV text into a [`Dataset`] (last column = class).
+pub fn parse(name: &str, text: &str) -> Result<Dataset> {
+    let mut lines = text
+        .lines()
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'));
+    let (hline, header) = lines
+        .next()
+        .ok_or_else(|| Error::parse("empty CSV document"))?;
+    let header = split_record(header, hline)?;
+    if header.len() < 2 {
+        return Err(Error::parse("CSV needs at least one feature and a class column"));
+    }
+    let ncols = header.len();
+    let mut records: Vec<Vec<String>> = Vec::new();
+    for (lineno, line) in lines {
+        let rec = split_record(line, lineno)?;
+        if rec.len() != ncols {
+            return Err(Error::parse(format!(
+                "line {lineno}: expected {ncols} fields, found {}",
+                rec.len()
+            )));
+        }
+        records.push(rec);
+    }
+    if records.is_empty() {
+        return Err(Error::parse("CSV has a header but no data rows"));
+    }
+
+    let nf = ncols - 1;
+    // Infer column kinds.
+    let mut numeric = vec![true; nf];
+    for rec in &records {
+        for (c, is_num) in numeric.iter_mut().enumerate() {
+            if *is_num && rec[c].parse::<f32>().is_err() {
+                *is_num = false;
+            }
+        }
+    }
+    // Value dictionaries for categorical columns, classes for the last.
+    let mut dicts: Vec<Vec<String>> = vec![Vec::new(); nf];
+    let mut classes: Vec<String> = Vec::new();
+    for rec in &records {
+        for c in 0..nf {
+            if !numeric[c] && !dicts[c].contains(&rec[c]) {
+                dicts[c].push(rec[c].clone());
+            }
+        }
+        if !classes.contains(&rec[nf]) {
+            classes.push(rec[nf].clone());
+        }
+    }
+
+    let features = (0..nf)
+        .map(|c| Feature {
+            name: header[c].clone(),
+            kind: if numeric[c] {
+                FeatureKind::Numeric
+            } else {
+                FeatureKind::Categorical {
+                    values: dicts[c].clone(),
+                }
+            },
+        })
+        .collect();
+    let schema = Schema { features, classes };
+
+    let mut cells = Vec::with_capacity(records.len() * nf);
+    let mut labels = Vec::with_capacity(records.len());
+    for rec in &records {
+        for c in 0..nf {
+            if numeric[c] {
+                cells.push(rec[c].parse::<f32>().unwrap());
+            } else {
+                cells.push(dicts[c].iter().position(|v| *v == rec[c]).unwrap() as f32);
+            }
+        }
+        labels.push(schema.class_index(&rec[nf]).unwrap() as u32);
+    }
+    Dataset::new(name, schema, cells, labels)
+}
+
+/// Load a CSV file.
+pub fn load_file(path: &str) -> Result<Dataset> {
+    let text = std::fs::read_to_string(path)?;
+    let name = std::path::Path::new(path)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("csv")
+        .to_string();
+    parse(&name, &text)
+}
+
+/// Render a dataset back to CSV text (categorical codes as names).
+pub fn to_csv(ds: &Dataset) -> String {
+    let esc = |c: &str| {
+        if c.contains([',', '"', '\n']) {
+            format!("\"{}\"", c.replace('"', "\"\""))
+        } else {
+            c.to_string()
+        }
+    };
+    let mut out = String::new();
+    let headers: Vec<String> = ds
+        .schema
+        .features
+        .iter()
+        .map(|f| esc(&f.name))
+        .chain(std::iter::once("class".to_string()))
+        .collect();
+    out.push_str(&headers.join(","));
+    out.push('\n');
+    for i in 0..ds.n_rows() {
+        let mut row: Vec<String> = ds
+            .row(i)
+            .iter()
+            .enumerate()
+            .map(|(f, &v)| esc(&ds.schema.render_value(f, v)))
+            .collect();
+        row.push(esc(&ds.schema.classes[ds.label(i) as usize]));
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+sepal,petal,color,species
+5.1,1.4,red,setosa
+7.0,4.7,green,versicolor
+6.3,6.0,red,virginica
+5.0,1.5,\"blue,ish\",setosa
+";
+
+    #[test]
+    fn parse_infers_kinds() {
+        let ds = parse("sample", SAMPLE).unwrap();
+        assert_eq!(ds.n_rows(), 4);
+        assert_eq!(ds.n_features(), 3);
+        assert_eq!(ds.schema.features[0].kind, FeatureKind::Numeric);
+        assert!(matches!(
+            ds.schema.features[2].kind,
+            FeatureKind::Categorical { .. }
+        ));
+        assert_eq!(ds.schema.classes, vec!["setosa", "versicolor", "virginica"]);
+        assert_eq!(ds.label(1), 1);
+        assert_eq!(ds.row(0)[0], 5.1);
+        // quoted value with comma became code 2
+        assert_eq!(ds.row(3)[2], 2.0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = parse("sample", SAMPLE).unwrap();
+        let text = to_csv(&ds);
+        let ds2 = parse("sample", &text).unwrap();
+        assert_eq!(ds2.n_rows(), ds.n_rows());
+        for i in 0..ds.n_rows() {
+            assert_eq!(ds.row(i), ds2.row(i));
+            assert_eq!(ds.label(i), ds2.label(i));
+        }
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let err = parse("bad", "a,b,c\n1,2\n").unwrap_err();
+        assert!(err.to_string().contains("expected 3 fields"));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(parse("bad", "").is_err());
+        assert!(parse("bad", "a,class\n").is_err());
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let ds = parse("s", "# c\n\na,class\n1,x\n\n# end\n2,y\n").unwrap();
+        assert_eq!(ds.n_rows(), 2);
+    }
+
+    #[test]
+    fn unterminated_quote_rejected() {
+        assert!(parse("bad", "a,class\n\"oops,x\n").is_err());
+    }
+}

@@ -1,0 +1,518 @@
+//! Built-in evaluation datasets — the six UCI corpora from the paper's §6.
+//!
+//! No network access exists in this environment, so each dataset is either
+//! **derived exactly** (three of the six are defined by deterministic rules,
+//! not collected data) or **synthesised** from a documented class-conditional
+//! model with the original schema, row count and class balance (see
+//! DESIGN.md §Substitutions):
+//!
+//! | name            | rows | provenance |
+//! |-----------------|------|------------|
+//! | `iris`          | 150  | synthesised from Fisher's published per-class means/stds, 50/class, 1-decimal grid |
+//! | `balance-scale` | 625  | **exact**: full 5⁴ factorial, class by comparing `LW·LD` vs `RW·RD` |
+//! | `lenses`        | 24   | **exact**: full factorial with Cendrowska's fitting rules (4 hard / 5 soft / 15 none) |
+//! | `tic-tac-toe`   | 958  | **exact**: all distinct terminal boards of the game tree (626 x-wins positive) |
+//! | `vote`          | 435  | synthesised: 267 dem / 168 rep, 16 issues, party-conditional vote model with abstentions |
+//! | `breast-cancer` | 286  | synthesised: 201 / 85 class split, Ljubljana schema, risk-factor-conditional model |
+
+use super::{Dataset, Feature, FeatureKind, Schema};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// Names of all built-in datasets (the paper's Table 1/2 rows).
+pub fn names() -> Vec<&'static str> {
+    vec![
+        "balance-scale",
+        "breast-cancer",
+        "lenses",
+        "iris",
+        "tic-tac-toe",
+        "vote",
+    ]
+}
+
+/// Load a built-in dataset by name (case-insensitive; `_` ≡ `-`).
+pub fn load(name: &str) -> Result<Dataset> {
+    match name.to_ascii_lowercase().replace('_', "-").as_str() {
+        "iris" => Ok(iris()),
+        "balance-scale" | "balance" => Ok(balance_scale()),
+        "lenses" => Ok(lenses()),
+        "tic-tac-toe" | "tictactoe" | "ttt" => Ok(tic_tac_toe()),
+        "vote" | "voting" | "house-votes-84" => Ok(vote()),
+        "breast-cancer" | "breast" => Ok(breast_cancer()),
+        other => Err(Error::invalid(format!(
+            "unknown dataset '{other}' (available: {})",
+            names().join(", ")
+        ))),
+    }
+}
+
+fn numeric(name: &str) -> Feature {
+    Feature {
+        name: name.to_string(),
+        kind: FeatureKind::Numeric,
+    }
+}
+
+fn categorical(name: &str, values: &[&str]) -> Feature {
+    Feature {
+        name: name.to_string(),
+        kind: FeatureKind::Categorical {
+            values: values.iter().map(|v| v.to_string()).collect(),
+        },
+    }
+}
+
+/// Iris (Fisher 1936): 150 rows, 4 numeric features, 3 species.
+///
+/// Synthesised from the published per-class feature means and standard
+/// deviations, sampled on the same 1-decimal measurement grid. The
+/// experiments measure structural quantities (steps, DD sizes), which depend
+/// on the threshold structure the learner extracts, not the historical rows.
+pub fn iris() -> Dataset {
+    // (per-class) means and stds for sepal length/width, petal length/width —
+    // the statistics reported for the original data.
+    const STATS: [([f64; 4], [f64; 4]); 3] = [
+        ([5.006, 3.428, 1.462, 0.246], [0.352, 0.379, 0.174, 0.105]),
+        ([5.936, 2.770, 4.260, 1.326], [0.516, 0.314, 0.470, 0.198]),
+        ([6.588, 2.974, 5.552, 2.026], [0.636, 0.322, 0.552, 0.275]),
+    ];
+    let mut rng = Rng::new(0x1A15);
+    let mut cells = Vec::with_capacity(150 * 4);
+    let mut labels = Vec::with_capacity(150);
+    for (cls, (means, stds)) in STATS.iter().enumerate() {
+        for _ in 0..50 {
+            for f in 0..4 {
+                let v = means[f] + stds[f] * rng.normal();
+                let v = (v * 10.0).round() / 10.0; // 1-decimal measurement grid
+                cells.push(v.max(0.1) as f32);
+            }
+            labels.push(cls as u32);
+        }
+    }
+    Dataset::new(
+        "iris",
+        Schema {
+            features: vec![
+                numeric("sepallength"),
+                numeric("sepalwidth"),
+                numeric("petallength"),
+                numeric("petalwidth"),
+            ],
+            classes: vec!["setosa".into(), "versicolor".into(), "virginica".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("iris generator is well-formed")
+}
+
+/// Balance Scale: **exact** — the UCI dataset is the full factorial of
+/// weights/distances in `1..=5` on both arms, labelled by the physics:
+/// `L` if `LW·LD > RW·RD`, `R` if `<`, `B` if balanced. 625 rows
+/// (288 L / 49 B / 288 R).
+pub fn balance_scale() -> Dataset {
+    let mut cells = Vec::with_capacity(625 * 4);
+    let mut labels = Vec::with_capacity(625);
+    for lw in 1..=5u32 {
+        for ld in 1..=5u32 {
+            for rw in 1..=5u32 {
+                for rd in 1..=5u32 {
+                    cells.extend_from_slice(&[lw as f32, ld as f32, rw as f32, rd as f32]);
+                    let (l, r) = (lw * ld, rw * rd);
+                    labels.push(if l > r {
+                        0
+                    } else if l == r {
+                        1
+                    } else {
+                        2
+                    });
+                }
+            }
+        }
+    }
+    Dataset::new(
+        "balance-scale",
+        Schema {
+            features: vec![
+                numeric("left-weight"),
+                numeric("left-distance"),
+                numeric("right-weight"),
+                numeric("right-distance"),
+            ],
+            classes: vec!["L".into(), "B".into(), "R".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("balance-scale generator is well-formed")
+}
+
+/// Lenses (Cendrowska 1987): **exact** — the complete 3·2·2·2 factorial with
+/// the published fitting rules. 24 rows (4 hard / 5 soft / 15 none).
+pub fn lenses() -> Dataset {
+    let ages = ["young", "pre-presbyopic", "presbyopic"];
+    let prescriptions = ["myope", "hypermetrope"];
+    let astigmatic = ["no", "yes"];
+    let tears = ["reduced", "normal"];
+    let mut cells = Vec::new();
+    let mut labels = Vec::new();
+    for (ai, _age) in ages.iter().enumerate() {
+        for (pi, _p) in prescriptions.iter().enumerate() {
+            for (si, _a) in astigmatic.iter().enumerate() {
+                for (ti, _t) in tears.iter().enumerate() {
+                    cells.extend_from_slice(&[ai as f32, pi as f32, si as f32, ti as f32]);
+                    // Cendrowska's rule set.
+                    let cls = if ti == 0 {
+                        2 // reduced tear production -> none
+                    } else if si == 0 {
+                        // not astigmatic -> soft, except presbyopic myopes
+                        if ai == 2 && pi == 0 {
+                            2
+                        } else {
+                            1
+                        }
+                    } else {
+                        // astigmatic -> hard for myopes; hypermetropes only when young
+                        if pi == 0 {
+                            0
+                        } else if ai == 0 {
+                            0
+                        } else {
+                            2
+                        }
+                    };
+                    labels.push(cls);
+                }
+            }
+        }
+    }
+    Dataset::new(
+        "lenses",
+        Schema {
+            features: vec![
+                categorical("age", &ages),
+                categorical("spectacle-prescrip", &prescriptions),
+                categorical("astigmatism", &astigmatic),
+                categorical("tear-prod-rate", &tears),
+            ],
+            classes: vec!["hard".into(), "soft".into(), "none".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("lenses generator is well-formed")
+}
+
+/// Tic-Tac-Toe Endgame: **exact** — the distinct terminal board
+/// configurations of tic-tac-toe with `x` moving first (the UCI dataset's
+/// definition). 958 rows; class `positive` iff `x` has a three-in-a-row
+/// (626 positive / 332 negative).
+pub fn tic_tac_toe() -> Dataset {
+    const LINES: [[usize; 3]; 8] = [
+        [0, 1, 2],
+        [3, 4, 5],
+        [6, 7, 8],
+        [0, 3, 6],
+        [1, 4, 7],
+        [2, 5, 8],
+        [0, 4, 8],
+        [2, 4, 6],
+    ];
+    fn winner(board: &[u8; 9], player: u8) -> bool {
+        LINES
+            .iter()
+            .any(|l| l.iter().all(|&i| board[i] == player))
+    }
+    // DFS over the game tree, collecting distinct terminal positions.
+    fn walk(board: &mut [u8; 9], player: u8, out: &mut BTreeSet<[u8; 9]>) {
+        // players: 1 = x, 2 = o; 0 = blank
+        if winner(board, 1) || winner(board, 2) || board.iter().all(|&c| c != 0) {
+            out.insert(*board);
+            return;
+        }
+        for i in 0..9 {
+            if board[i] == 0 {
+                board[i] = player;
+                walk(board, 3 - player, out);
+                board[i] = 0;
+            }
+        }
+    }
+    let mut terminals = BTreeSet::new();
+    walk(&mut [0u8; 9], 1, &mut terminals);
+
+    let squares = [
+        "top-left", "top-middle", "top-right", "middle-left", "middle-middle", "middle-right",
+        "bottom-left", "bottom-middle", "bottom-right",
+    ];
+    let mut cells = Vec::with_capacity(terminals.len() * 9);
+    let mut labels = Vec::with_capacity(terminals.len());
+    for board in &terminals {
+        for &c in board.iter() {
+            // codes follow the UCI value order {x, o, b}
+            cells.push(match c {
+                1 => 0.0,
+                2 => 1.0,
+                _ => 2.0,
+            });
+        }
+        labels.push(if winner(board, 1) { 0 } else { 1 });
+    }
+    let features = squares
+        .iter()
+        .map(|s| categorical(&format!("{s}-square"), &["x", "o", "b"]))
+        .collect();
+    Dataset::new(
+        "tic-tac-toe",
+        Schema {
+            features,
+            classes: vec!["positive".into(), "negative".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("tic-tac-toe generator is well-formed")
+}
+
+/// Congressional Voting Records (synthesised): 435 rows (267 democrat /
+/// 168 republican), 16 boolean issues with abstentions (`y`/`n`/`?`).
+///
+/// Per-issue party-conditional yes-probabilities mirror the qualitative
+/// structure of the 1984 roll call (a handful of near-party-line votes,
+/// several moderately separating issues, a few non-separating ones) — which
+/// is what gives the learned forests their shallow, highly shared predicate
+/// structure.
+pub fn vote() -> Dataset {
+    // (issue, P(yes | democrat), P(yes | republican))
+    const ISSUES: [(&str, f64, f64); 16] = [
+        ("handicapped-infants", 0.60, 0.19),
+        ("water-project-cost-sharing", 0.50, 0.51),
+        ("adoption-of-the-budget-resolution", 0.89, 0.13),
+        ("physician-fee-freeze", 0.05, 0.99),
+        ("el-salvador-aid", 0.22, 0.95),
+        ("religious-groups-in-schools", 0.47, 0.90),
+        ("anti-satellite-test-ban", 0.77, 0.24),
+        ("aid-to-nicaraguan-contras", 0.83, 0.15),
+        ("mx-missile", 0.76, 0.12),
+        ("immigration", 0.47, 0.56),
+        ("synfuels-corporation-cutback", 0.51, 0.13),
+        ("education-spending", 0.14, 0.87),
+        ("superfund-right-to-sue", 0.29, 0.86),
+        ("crime", 0.35, 0.98),
+        ("duty-free-exports", 0.64, 0.09),
+        ("export-administration-act-south-africa", 0.94, 0.66),
+    ];
+    const MISSING_P: f64 = 0.055; // overall abstention rate in the original
+    let mut rng = Rng::new(0x707E);
+    let mut cells = Vec::with_capacity(435 * 16);
+    let mut labels = Vec::with_capacity(435);
+    for i in 0..435u32 {
+        let dem = i < 267;
+        for &(_, dp, rp) in ISSUES.iter() {
+            let p = if dem { dp } else { rp };
+            let code = if rng.chance(MISSING_P) {
+                2.0 // '?'
+            } else if rng.chance(p) {
+                1.0 // 'y'
+            } else {
+                0.0 // 'n'
+            };
+            cells.push(code);
+        }
+        labels.push(if dem { 0 } else { 1 });
+    }
+    let features = ISSUES
+        .iter()
+        .map(|(name, _, _)| categorical(name, &["n", "y", "?"]))
+        .collect();
+    Dataset::new(
+        "vote",
+        Schema {
+            features,
+            classes: vec!["democrat".into(), "republican".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("vote generator is well-formed")
+}
+
+/// Breast Cancer, Ljubljana schema (synthesised): 286 rows
+/// (201 no-recurrence / 85 recurrence), 9 categorical risk factors.
+///
+/// Class-conditional sampling skews recurrence cases toward higher tumour
+/// grade (`deg-malig`), nodal involvement and larger tumours, matching the
+/// medically documented direction of each factor.
+pub fn breast_cancer() -> Dataset {
+    let age = ["20-29", "30-39", "40-49", "50-59", "60-69", "70-79"];
+    let menopause = ["lt40", "ge40", "premeno"];
+    let tumor_size = [
+        "0-4", "5-9", "10-14", "15-19", "20-24", "25-29", "30-34", "35-39", "40-44", "45-49",
+        "50-54",
+    ];
+    let inv_nodes = ["0-2", "3-5", "6-8", "9-11", "12-14", "15-17", "24-26"];
+    let node_caps = ["no", "yes"];
+    let deg_malig = ["1", "2", "3"];
+    let breast = ["left", "right"];
+    let quad = ["left-up", "left-low", "right-up", "right-low", "central"];
+    let irradiat = ["no", "yes"];
+
+    // Per-class sampling weights (no-recurrence, recurrence) per value.
+    let w_age: [&[f64]; 2] = [&[1.0, 4.0, 9.0, 10.0, 6.0, 1.0], &[1.0, 5.0, 10.0, 9.0, 5.0, 1.0]];
+    let w_meno: [&[f64]; 2] = [&[1.0, 5.0, 7.0], &[1.0, 4.0, 8.0]];
+    let w_size: [&[f64]; 2] = [
+        &[2.0, 3.0, 6.0, 7.0, 10.0, 9.0, 7.0, 4.0, 2.0, 1.0, 1.0],
+        &[1.0, 1.0, 3.0, 5.0, 8.0, 9.0, 9.0, 6.0, 4.0, 2.0, 2.0],
+    ];
+    let w_nodes: [&[f64]; 2] = [
+        &[40.0, 4.0, 2.0, 1.0, 0.5, 0.3, 0.2],
+        &[15.0, 8.0, 5.0, 3.0, 2.0, 1.0, 0.5],
+    ];
+    let w_caps: [&[f64]; 2] = [&[12.0, 1.0], &[5.0, 4.0]];
+    let w_malig: [&[f64]; 2] = [&[5.0, 8.0, 3.0], &[1.0, 4.0, 9.0]];
+    let w_breast: [&[f64]; 2] = [&[1.05, 1.0], &[1.1, 1.0]];
+    let w_quad: [&[f64]; 2] = [&[3.0, 10.0, 3.0, 3.0, 1.5], &[3.5, 9.0, 3.0, 3.5, 2.0]];
+    let w_irr: [&[f64]; 2] = [&[5.0, 1.0], &[2.5, 1.5]];
+
+    let mut rng = Rng::new(0xBC286);
+    let mut cells = Vec::with_capacity(286 * 9);
+    let mut labels = Vec::with_capacity(286);
+    for i in 0..286usize {
+        let cls = usize::from(i >= 201); // 0 = no-recurrence, 1 = recurrence
+        for weights in [
+            w_age[cls], w_meno[cls], w_size[cls], w_nodes[cls], w_caps[cls], w_malig[cls],
+            w_breast[cls], w_quad[cls], w_irr[cls],
+        ] {
+            cells.push(rng.categorical(weights) as f32);
+        }
+        labels.push(cls as u32);
+    }
+    Dataset::new(
+        "breast-cancer",
+        Schema {
+            features: vec![
+                categorical("age", &age),
+                categorical("menopause", &menopause),
+                categorical("tumor-size", &tumor_size),
+                categorical("inv-nodes", &inv_nodes),
+                categorical("node-caps", &node_caps),
+                categorical("deg-malig", &deg_malig),
+                categorical("breast", &breast),
+                categorical("breast-quad", &quad),
+                categorical("irradiat", &irradiat),
+            ],
+            classes: vec!["no-recurrence-events".into(), "recurrence-events".into()],
+        },
+        cells,
+        labels,
+    )
+    .expect("breast-cancer generator is well-formed")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all_names() {
+        for n in names() {
+            let ds = load(n).unwrap();
+            assert!(ds.n_rows() > 0, "{n}");
+        }
+        assert!(load("nope").is_err());
+        assert!(load("Tic_Tac_Toe").is_ok());
+    }
+
+    #[test]
+    fn iris_shape_and_balance() {
+        let ds = iris();
+        assert_eq!(ds.n_rows(), 150);
+        assert_eq!(ds.n_features(), 4);
+        assert_eq!(ds.class_histogram(), vec![50, 50, 50]);
+        // Petal length separates setosa from the rest by a wide margin in the
+        // source statistics; the synthesis must preserve that structure.
+        let setosa_max = (0..50).map(|i| ds.row(i)[2]).fold(f32::MIN, f32::max);
+        let others_min = (50..150).map(|i| ds.row(i)[2]).fold(f32::MAX, f32::min);
+        assert!(setosa_max < others_min, "{setosa_max} vs {others_min}");
+    }
+
+    #[test]
+    fn iris_deterministic() {
+        let a = iris();
+        let b = iris();
+        assert_eq!(a.row(17), b.row(17));
+        assert_eq!(a.row(149), b.row(149));
+    }
+
+    #[test]
+    fn balance_scale_exact() {
+        let ds = balance_scale();
+        assert_eq!(ds.n_rows(), 625);
+        // The known exact distribution of the UCI dataset.
+        assert_eq!(ds.class_histogram(), vec![288, 49, 288]);
+    }
+
+    #[test]
+    fn lenses_exact() {
+        let ds = lenses();
+        assert_eq!(ds.n_rows(), 24);
+        // Cendrowska's published distribution: 4 hard, 5 soft, 15 none.
+        assert_eq!(ds.class_histogram(), vec![4, 5, 15]);
+    }
+
+    #[test]
+    fn tic_tac_toe_exact_terminal_count() {
+        let ds = tic_tac_toe();
+        // The canonical counts: 958 distinct terminal boards, 626 x-wins.
+        assert_eq!(ds.n_rows(), 958);
+        assert_eq!(ds.class_histogram(), vec![626, 332]);
+        assert_eq!(ds.n_features(), 9);
+    }
+
+    #[test]
+    fn vote_shape() {
+        let ds = vote();
+        assert_eq!(ds.n_rows(), 435);
+        assert_eq!(ds.n_features(), 16);
+        assert_eq!(ds.class_histogram(), vec![267, 168]);
+        // physician-fee-freeze (feature 3) must be near-party-line.
+        let mut dem_yes = 0;
+        let mut rep_yes = 0;
+        for (row, y) in ds.iter() {
+            if row[3] == 1.0 {
+                if y == 0 {
+                    dem_yes += 1;
+                } else {
+                    rep_yes += 1;
+                }
+            }
+        }
+        assert!(dem_yes < 30, "dem_yes={dem_yes}");
+        assert!(rep_yes > 140, "rep_yes={rep_yes}");
+    }
+
+    #[test]
+    fn breast_cancer_shape() {
+        let ds = breast_cancer();
+        assert_eq!(ds.n_rows(), 286);
+        assert_eq!(ds.n_features(), 9);
+        assert_eq!(ds.class_histogram(), vec![201, 85]);
+        // deg-malig=3 (feature 5) must be enriched in recurrence cases.
+        let frac = |lo: usize, hi: usize| {
+            (lo..hi).filter(|&i| ds.row(i)[5] == 2.0).count() as f64 / (hi - lo) as f64
+        };
+        assert!(frac(201, 286) > frac(0, 201) + 0.2);
+    }
+
+    #[test]
+    fn all_built_ins_are_deterministic() {
+        for n in names() {
+            let a = load(n).unwrap();
+            let b = load(n).unwrap();
+            assert_eq!(a.labels(), b.labels(), "{n}");
+            assert_eq!(a.row(a.n_rows() - 1), b.row(b.n_rows() - 1), "{n}");
+        }
+    }
+}

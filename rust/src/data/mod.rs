@@ -1,0 +1,308 @@
+//! Dataset substrate: schemas, tabular data, loaders and splits.
+//!
+//! The system is Weka-free (the paper used Weka only as a stock RF
+//! implementation), so this module provides the equivalent data handling:
+//! typed schemas (numeric + categorical features), CSV and ARFF loaders,
+//! the six built-in evaluation datasets, train/test splitting, and synthetic
+//! generators for the serving workload.
+//!
+//! **Encoding.** Categorical features are stored as ordinal codes in `f32`
+//! cells (`0.0, 1.0, …`). Trees split every feature with a threshold
+//! predicate `x[f] < t`; for a `k`-valued categorical this expresses every
+//! prefix/suffix partition of the code ordering, which together with the
+//! discrete-grid feasibility rules in [`crate::feas`] preserves the paper's
+//! predicate semantics while keeping a single uniform predicate language
+//! (see DESIGN.md §Substitutions).
+
+pub mod arff;
+pub mod csv;
+pub mod datasets;
+pub mod split;
+pub mod synth;
+
+use crate::error::{Error, Result};
+
+/// The kind of a feature column.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FeatureKind {
+    /// Real-valued.
+    Numeric,
+    /// Finite-valued; cell values are ordinal codes `0..values.len()`.
+    Categorical { values: Vec<String> },
+}
+
+impl FeatureKind {
+    /// Number of distinct values for categorical features.
+    pub fn cardinality(&self) -> Option<usize> {
+        match self {
+            FeatureKind::Numeric => None,
+            FeatureKind::Categorical { values } => Some(values.len()),
+        }
+    }
+}
+
+/// A named feature column.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Feature {
+    /// Column name (used in predicate rendering, e.g. `petalwidth < 1.65`).
+    pub name: String,
+    /// Numeric or categorical.
+    pub kind: FeatureKind,
+}
+
+/// Dataset schema: feature columns plus the class alphabet `C`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schema {
+    /// Feature columns, in cell order.
+    pub features: Vec<Feature>,
+    /// Class labels; the classification co-domain `C` of the paper.
+    pub classes: Vec<String>,
+}
+
+impl Schema {
+    /// Number of feature columns.
+    pub fn n_features(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Number of classes `|C|`.
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Index of a class label.
+    pub fn class_index(&self, label: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c == label)
+    }
+
+    /// Render a cell value for display (categorical codes back to names).
+    pub fn render_value(&self, feature: usize, v: f32) -> String {
+        match &self.features[feature].kind {
+            FeatureKind::Numeric => format!("{v}"),
+            FeatureKind::Categorical { values } => {
+                let i = v as usize;
+                values
+                    .get(i)
+                    .cloned()
+                    .unwrap_or_else(|| format!("<bad code {v}>"))
+            }
+        }
+    }
+}
+
+/// An in-memory labelled dataset (row-major cells).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Human-readable dataset name.
+    pub name: String,
+    /// Column schema.
+    pub schema: Schema,
+    cells: Vec<f32>,
+    labels: Vec<u32>,
+}
+
+impl Dataset {
+    /// Build a dataset, validating dimensions and label/code ranges.
+    pub fn new(
+        name: impl Into<String>,
+        schema: Schema,
+        cells: Vec<f32>,
+        labels: Vec<u32>,
+    ) -> Result<Dataset> {
+        let nf = schema.n_features();
+        if nf == 0 {
+            return Err(Error::invalid("dataset must have at least one feature"));
+        }
+        if cells.len() % nf != 0 {
+            return Err(Error::invalid(format!(
+                "cell count {} is not a multiple of feature count {nf}",
+                cells.len()
+            )));
+        }
+        let rows = cells.len() / nf;
+        if labels.len() != rows {
+            return Err(Error::invalid(format!(
+                "label count {} != row count {rows}",
+                labels.len()
+            )));
+        }
+        for &y in &labels {
+            if y as usize >= schema.n_classes() {
+                return Err(Error::invalid(format!(
+                    "label {y} out of range for {} classes",
+                    schema.n_classes()
+                )));
+            }
+        }
+        for (f, feat) in schema.features.iter().enumerate() {
+            if let Some(k) = feat.kind.cardinality() {
+                for r in 0..rows {
+                    let v = cells[r * nf + f];
+                    if v.fract() != 0.0 || v < 0.0 || v as usize >= k {
+                        return Err(Error::invalid(format!(
+                            "row {r}, feature '{}': code {v} out of range 0..{k}",
+                            feat.name
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(Dataset {
+            name: name.into(),
+            schema,
+            cells,
+            labels,
+        })
+    }
+
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Number of feature columns.
+    pub fn n_features(&self) -> usize {
+        self.schema.n_features()
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.schema.n_classes()
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let nf = self.n_features();
+        &self.cells[i * nf..(i + 1) * nf]
+    }
+
+    /// Label of row `i` (class index).
+    pub fn label(&self, i: usize) -> u32 {
+        self.labels[i]
+    }
+
+    /// All labels.
+    pub fn labels(&self) -> &[u32] {
+        &self.labels
+    }
+
+    /// Iterate `(row, label)` pairs.
+    pub fn iter(&self) -> impl Iterator<Item = (&[f32], u32)> + '_ {
+        (0..self.n_rows()).map(move |i| (self.row(i), self.label(i)))
+    }
+
+    /// Per-class row counts.
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes()];
+        for &y in &self.labels {
+            h[y as usize] += 1;
+        }
+        h
+    }
+
+    /// Select a subset of rows (by index, duplicates allowed — used for
+    /// bootstrap samples).
+    pub fn select(&self, indices: &[usize]) -> Dataset {
+        let nf = self.n_features();
+        let mut cells = Vec::with_capacity(indices.len() * nf);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            cells.extend_from_slice(self.row(i));
+            labels.push(self.label(i));
+        }
+        Dataset {
+            name: self.name.clone(),
+            schema: self.schema.clone(),
+            cells,
+            labels,
+        }
+    }
+
+    /// Distinct sorted values of a feature column (split-candidate support).
+    pub fn distinct_values(&self, feature: usize) -> Vec<f32> {
+        let nf = self.n_features();
+        let mut vs: Vec<f32> = (0..self.n_rows())
+            .map(|r| self.cells[r * nf + feature])
+            .collect();
+        vs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        vs.dedup();
+        vs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_schema() -> Schema {
+        Schema {
+            features: vec![
+                Feature {
+                    name: "x0".into(),
+                    kind: FeatureKind::Numeric,
+                },
+                Feature {
+                    name: "color".into(),
+                    kind: FeatureKind::Categorical {
+                        values: vec!["red".into(), "green".into()],
+                    },
+                },
+            ],
+            classes: vec!["a".into(), "b".into()],
+        }
+    }
+
+    #[test]
+    fn construct_and_access() {
+        let ds = Dataset::new(
+            "tiny",
+            tiny_schema(),
+            vec![0.5, 0.0, 1.5, 1.0, -1.0, 0.0],
+            vec![0, 1, 0],
+        )
+        .unwrap();
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.row(1), &[1.5, 1.0]);
+        assert_eq!(ds.label(2), 0);
+        assert_eq!(ds.class_histogram(), vec![2, 1]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_codes() {
+        assert!(Dataset::new("t", tiny_schema(), vec![0.0; 5], vec![0, 0]).is_err());
+        assert!(Dataset::new("t", tiny_schema(), vec![0.0; 4], vec![0]).is_err());
+        // label out of range
+        assert!(Dataset::new("t", tiny_schema(), vec![0.0; 4], vec![0, 7]).is_err());
+        // categorical code out of range
+        assert!(
+            Dataset::new("t", tiny_schema(), vec![0.0, 5.0, 0.0, 0.0], vec![0, 0]).is_err()
+        );
+        // fractional categorical code
+        assert!(
+            Dataset::new("t", tiny_schema(), vec![0.0, 0.5, 0.0, 0.0], vec![0, 0]).is_err()
+        );
+    }
+
+    #[test]
+    fn select_and_distinct() {
+        let ds = Dataset::new(
+            "t",
+            tiny_schema(),
+            vec![3.0, 0.0, 1.0, 1.0, 3.0, 0.0],
+            vec![0, 1, 1],
+        )
+        .unwrap();
+        let sub = ds.select(&[2, 2, 0]);
+        assert_eq!(sub.n_rows(), 3);
+        assert_eq!(sub.label(0), 1);
+        assert_eq!(sub.row(2), &[3.0, 0.0]);
+        assert_eq!(ds.distinct_values(0), vec![1.0, 3.0]);
+    }
+
+    #[test]
+    fn render_values() {
+        let s = tiny_schema();
+        assert_eq!(s.render_value(0, 1.5), "1.5");
+        assert_eq!(s.render_value(1, 1.0), "green");
+    }
+}

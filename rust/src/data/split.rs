@@ -1,0 +1,124 @@
+//! Train/test splitting and cross-validation folds.
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Split into `(train, test)` with `test_frac` of rows in the test set.
+///
+/// Stratified: each class contributes proportionally to the test set, so
+/// small classes are never absent from either side.
+pub fn train_test_split(ds: &Dataset, test_frac: f64, seed: u64) -> Result<(Dataset, Dataset)> {
+    if !(0.0..1.0).contains(&test_frac) {
+        return Err(Error::invalid("test_frac must be in [0, 1)"));
+    }
+    let mut rng = Rng::new(seed);
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes()];
+    for i in 0..ds.n_rows() {
+        by_class[ds.label(i) as usize].push(i);
+    }
+    let mut train_idx = Vec::new();
+    let mut test_idx = Vec::new();
+    for mut idxs in by_class {
+        rng.shuffle(&mut idxs);
+        let n_test = ((idxs.len() as f64) * test_frac).round() as usize;
+        test_idx.extend_from_slice(&idxs[..n_test]);
+        train_idx.extend_from_slice(&idxs[n_test..]);
+    }
+    train_idx.sort_unstable();
+    test_idx.sort_unstable();
+    if train_idx.is_empty() {
+        return Err(Error::invalid("split left the training set empty"));
+    }
+    Ok((ds.select(&train_idx), ds.select(&test_idx)))
+}
+
+/// Stratified k-fold split; returns `k` (train, test) pairs covering all rows.
+pub fn k_folds(ds: &Dataset, k: usize, seed: u64) -> Result<Vec<(Dataset, Dataset)>> {
+    if k < 2 || k > ds.n_rows() {
+        return Err(Error::invalid(format!(
+            "k must be in 2..=n_rows ({}), got {k}",
+            ds.n_rows()
+        )));
+    }
+    let mut rng = Rng::new(seed);
+    let mut fold_of = vec![0usize; ds.n_rows()];
+    let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); ds.n_classes()];
+    for i in 0..ds.n_rows() {
+        by_class[ds.label(i) as usize].push(i);
+    }
+    // Deal each class's rows round-robin over folds, starting at a random
+    // offset so folds are balanced per class.
+    for mut idxs in by_class {
+        rng.shuffle(&mut idxs);
+        let start = rng.below_usize(k);
+        for (j, i) in idxs.into_iter().enumerate() {
+            fold_of[i] = (start + j) % k;
+        }
+    }
+    let mut out = Vec::with_capacity(k);
+    for f in 0..k {
+        let test: Vec<usize> = (0..ds.n_rows()).filter(|&i| fold_of[i] == f).collect();
+        let train: Vec<usize> = (0..ds.n_rows()).filter(|&i| fold_of[i] != f).collect();
+        if test.is_empty() || train.is_empty() {
+            return Err(Error::invalid("degenerate fold (too many folds for dataset)"));
+        }
+        out.push((ds.select(&train), ds.select(&test)));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn split_partitions_rows() {
+        let ds = datasets::iris();
+        let (train, test) = train_test_split(&ds, 0.2, 1).unwrap();
+        assert_eq!(train.n_rows() + test.n_rows(), 150);
+        assert_eq!(test.n_rows(), 30);
+        // stratified: 10 per class
+        assert_eq!(test.class_histogram(), vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn split_is_seeded() {
+        let ds = datasets::iris();
+        let (a, _) = train_test_split(&ds, 0.3, 7).unwrap();
+        let (b, _) = train_test_split(&ds, 0.3, 7).unwrap();
+        let (c, _) = train_test_split(&ds, 0.3, 8).unwrap();
+        assert_eq!(a.row(0), b.row(0));
+        assert_eq!(a.labels(), b.labels());
+        assert!(a.labels() != c.labels() || a.row(5) != c.row(5));
+    }
+
+    #[test]
+    fn split_rejects_bad_frac() {
+        let ds = datasets::lenses();
+        assert!(train_test_split(&ds, 1.0, 0).is_err());
+        assert!(train_test_split(&ds, -0.1, 0).is_err());
+    }
+
+    #[test]
+    fn folds_cover_everything() {
+        let ds = datasets::iris();
+        let folds = k_folds(&ds, 5, 3).unwrap();
+        assert_eq!(folds.len(), 5);
+        let total_test: usize = folds.iter().map(|(_, t)| t.n_rows()).sum();
+        assert_eq!(total_test, 150);
+        for (train, test) in &folds {
+            assert_eq!(train.n_rows() + test.n_rows(), 150);
+            // stratification keeps all classes present
+            assert!(test.class_histogram().iter().all(|&c| c > 0));
+        }
+    }
+
+    #[test]
+    fn folds_reject_bad_k() {
+        let ds = datasets::lenses();
+        assert!(k_folds(&ds, 1, 0).is_err());
+        assert!(k_folds(&ds, 25, 0).is_err());
+    }
+}

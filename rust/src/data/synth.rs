@@ -1,0 +1,182 @@
+//! Generic synthetic dataset generators.
+//!
+//! Used by the serving workload generator, scalability benches, and
+//! property tests — places that need datasets with controlled shape
+//! (feature count, class count, difficulty) rather than a fixed corpus.
+
+use super::{Dataset, Feature, FeatureKind, Schema};
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+/// Configuration for a Gaussian-blob classification problem.
+#[derive(Debug, Clone)]
+pub struct BlobSpec {
+    /// Rows to generate.
+    pub rows: usize,
+    /// Numeric feature count.
+    pub features: usize,
+    /// Class count (one blob per class).
+    pub classes: usize,
+    /// Distance between class centres (larger = easier).
+    pub separation: f64,
+    /// Per-feature noise std.
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for BlobSpec {
+    fn default() -> Self {
+        BlobSpec {
+            rows: 200,
+            features: 4,
+            classes: 3,
+            separation: 3.0,
+            noise: 1.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Gaussian blobs: class `c` is centred at a random point scaled by
+/// `separation`; rows cycle through classes so the histogram is balanced.
+pub fn blobs(spec: &BlobSpec) -> Result<Dataset> {
+    let mut rng = Rng::new(spec.seed);
+    let centers: Vec<Vec<f64>> = (0..spec.classes)
+        .map(|_| {
+            (0..spec.features)
+                .map(|_| rng.normal() * spec.separation)
+                .collect()
+        })
+        .collect();
+    let mut cells = Vec::with_capacity(spec.rows * spec.features);
+    let mut labels = Vec::with_capacity(spec.rows);
+    for i in 0..spec.rows {
+        let c = i % spec.classes;
+        for f in 0..spec.features {
+            cells.push((centers[c][f] + rng.normal() * spec.noise) as f32);
+        }
+        labels.push(c as u32);
+    }
+    let schema = Schema {
+        features: (0..spec.features)
+            .map(|f| Feature {
+                name: format!("x{f}"),
+                kind: FeatureKind::Numeric,
+            })
+            .collect(),
+        classes: (0..spec.classes).map(|c| format!("c{c}")).collect(),
+    };
+    Dataset::new(
+        format!("blobs-{}x{}", spec.rows, spec.features),
+        schema,
+        cells,
+        labels,
+    )
+}
+
+/// A mixed numeric/categorical problem where the label is a noisy rule over
+/// both feature kinds — exercises the full predicate language.
+pub fn mixed_rule(rows: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed);
+    let mut cells = Vec::with_capacity(rows * 4);
+    let mut labels = Vec::with_capacity(rows);
+    for _ in 0..rows {
+        let a = rng.range_f64(0.0, 10.0) as f32;
+        let b = rng.range_f64(-5.0, 5.0) as f32;
+        let color = rng.below(3) as f32;
+        let shape = rng.below(2) as f32;
+        cells.extend_from_slice(&[a, b, color, shape]);
+        let rule = (a < 4.0 && color == 0.0) || (b >= 1.5 && shape == 1.0);
+        let noisy = if rng.chance(0.05) { !rule } else { rule };
+        labels.push(noisy as u32);
+    }
+    let schema = Schema {
+        features: vec![
+            Feature {
+                name: "a".into(),
+                kind: FeatureKind::Numeric,
+            },
+            Feature {
+                name: "b".into(),
+                kind: FeatureKind::Numeric,
+            },
+            Feature {
+                name: "color".into(),
+                kind: FeatureKind::Categorical {
+                    values: vec!["red".into(), "green".into(), "blue".into()],
+                },
+            },
+            Feature {
+                name: "shape".into(),
+                kind: FeatureKind::Categorical {
+                    values: vec!["square".into(), "round".into()],
+                },
+            },
+        ],
+        classes: vec!["no".into(), "yes".into()],
+    };
+    Dataset::new(format!("mixed-rule-{rows}"), schema, cells, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_shape_and_balance() {
+        let ds = blobs(&BlobSpec {
+            rows: 90,
+            classes: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(ds.n_rows(), 90);
+        assert_eq!(ds.class_histogram(), vec![30, 30, 30]);
+    }
+
+    #[test]
+    fn blobs_deterministic_per_seed() {
+        let s = BlobSpec::default();
+        let a = blobs(&s).unwrap();
+        let b = blobs(&s).unwrap();
+        assert_eq!(a.row(7), b.row(7));
+        let c = blobs(&BlobSpec { seed: 1, ..s }).unwrap();
+        assert_ne!(a.row(7), c.row(7));
+    }
+
+    #[test]
+    fn blobs_separable_when_separation_high() {
+        // With huge separation and small noise, nearest-centre classification
+        // by feature 0 alone should be mostly consistent within a class.
+        let ds = blobs(&BlobSpec {
+            rows: 300,
+            separation: 50.0,
+            noise: 0.5,
+            seed: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        // within-class variance of feature 0 must be far below global variance
+        let mean = |xs: &[f32]| xs.iter().map(|&v| v as f64).sum::<f64>() / xs.len() as f64;
+        let var = |xs: &[f32]| {
+            let m = mean(xs);
+            xs.iter().map(|&v| (v as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+        };
+        let all: Vec<f32> = (0..300).map(|i| ds.row(i)[0]).collect();
+        let c0: Vec<f32> = (0..300)
+            .filter(|&i| ds.label(i) == 0)
+            .map(|i| ds.row(i)[0])
+            .collect();
+        assert!(var(&c0) * 20.0 < var(&all));
+    }
+
+    #[test]
+    fn mixed_rule_valid_and_learnable_signal() {
+        let ds = mixed_rule(500, 3).unwrap();
+        assert_eq!(ds.n_rows(), 500);
+        assert_eq!(ds.n_classes(), 2);
+        let h = ds.class_histogram();
+        assert!(h[0] > 50 && h[1] > 50, "{h:?}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Library-wide error type.
+//!
+//! Every fallible public API in `forest_add` returns [`Result`] with this
+//! error. Binaries and examples wrap it in `anyhow` at the edge.
+
+use thiserror::Error;
+
+/// Errors produced by the `forest_add` library.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Malformed input data (CSV/ARFF/JSON parse failures, bad values).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// A request, configuration, or argument violates a documented contract.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// Schema mismatch between a model and the data it is applied to.
+    #[error("schema mismatch: {0}")]
+    SchemaMismatch(String),
+
+    /// A capacity or structural limit was exceeded (e.g. DD node budget).
+    #[error("capacity exceeded: {0}")]
+    Capacity(String),
+
+    /// The XLA/PJRT runtime reported an error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// The serving layer failed (queue closed, worker died, bad request).
+    #[error("serving error: {0}")]
+    Serve(String),
+
+    /// Underlying I/O failure.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for parse errors.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+
+    /// Convenience constructor for invalid arguments.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArgument(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::parse("line 3: expected number");
+        assert_eq!(e.to_string(), "parse error: line 3: expected number");
+        let e = Error::invalid("trees must be > 0");
+        assert!(e.to_string().contains("trees must be > 0"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,366 @@
+//! DPLL(T): a small propositional solver with theory propagation.
+//!
+//! This is the generic "SMT solving" interface of the paper's §5. The
+//! production reducer talks to the [`IntervalStore`](super::IntervalStore)
+//! directly (the occurring theory is a conjunction of interval literals,
+//! decidable without search), but this solver provides:
+//!
+//! - the general entry point for richer predicate theories (disjunctive
+//!   side conditions, cross-feature constraints),
+//! - an independent oracle the test suite uses to cross-check the reducer
+//!   (every surviving DD path must be T-satisfiable, every eliminated one
+//!   T-unsatisfiable).
+//!
+//! Implementation: iterative DPLL with unit propagation over CNF clauses;
+//! every assignment is forwarded to the theory, whose veto triggers
+//! backtracking.
+
+use crate::predicate::{Domain, Predicate};
+
+use super::IntervalStore;
+
+/// A literal: variable index with polarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lit {
+    /// Variable index.
+    pub var: usize,
+    /// True for the positive literal.
+    pub positive: bool,
+}
+
+impl Lit {
+    /// Positive literal.
+    pub fn pos(var: usize) -> Lit {
+        Lit {
+            var,
+            positive: true,
+        }
+    }
+
+    /// Negative literal.
+    pub fn neg(var: usize) -> Lit {
+        Lit {
+            var,
+            positive: false,
+        }
+    }
+}
+
+/// Theory hook: observes assignments, can veto (report T-conflict).
+pub trait Theory {
+    /// Called on every assignment; return `false` to signal a conflict.
+    fn on_assign(&mut self, var: usize, value: bool) -> bool;
+    /// Snapshot for backtracking.
+    fn mark(&self) -> usize;
+    /// Restore a snapshot.
+    fn undo_to(&mut self, mark: usize);
+}
+
+/// A trivially-true theory (pure SAT).
+pub struct NoTheory;
+
+impl Theory for NoTheory {
+    fn on_assign(&mut self, _var: usize, _value: bool) -> bool {
+        true
+    }
+    fn mark(&self) -> usize {
+        0
+    }
+    fn undo_to(&mut self, _mark: usize) {}
+}
+
+/// Interval theory over threshold predicates: variable `i` ⇔ `preds[i]`.
+pub struct IntervalTheory {
+    preds: Vec<Predicate>,
+    store: IntervalStore,
+}
+
+impl IntervalTheory {
+    /// Theory where propositional variable `i` denotes `preds[i]`.
+    pub fn new(domains: &[Domain], preds: Vec<Predicate>) -> Self {
+        IntervalTheory {
+            preds,
+            store: IntervalStore::new(domains),
+        }
+    }
+}
+
+impl Theory for IntervalTheory {
+    fn on_assign(&mut self, var: usize, value: bool) -> bool {
+        let p = self.preds[var];
+        match self.store.implied(p) {
+            Some(v) => v == value,
+            None => {
+                self.store.assume(p, value);
+                true
+            }
+        }
+    }
+    fn mark(&self) -> usize {
+        self.store.mark()
+    }
+    fn undo_to(&mut self, mark: usize) {
+        self.store.undo_to(mark)
+    }
+}
+
+/// CNF formula + DPLL search.
+pub struct Solver {
+    n_vars: usize,
+    clauses: Vec<Vec<Lit>>,
+}
+
+impl Solver {
+    /// Solver over `n_vars` variables.
+    pub fn new(n_vars: usize) -> Self {
+        Solver {
+            n_vars,
+            clauses: Vec::new(),
+        }
+    }
+
+    /// Add a disjunctive clause.
+    pub fn add_clause(&mut self, lits: Vec<Lit>) {
+        debug_assert!(lits.iter().all(|l| l.var < self.n_vars));
+        self.clauses.push(lits);
+    }
+
+    /// Add a unit (forced literal).
+    pub fn add_unit(&mut self, lit: Lit) {
+        self.add_clause(vec![lit]);
+    }
+
+    /// Find a T-satisfying assignment, or `None` when T-unsatisfiable.
+    pub fn solve<T: Theory>(&self, theory: &mut T) -> Option<Vec<bool>> {
+        let mut assign: Vec<Option<bool>> = vec![None; self.n_vars];
+        if self.search(&mut assign, theory) {
+            Some(assign.into_iter().map(|a| a.unwrap_or(false)).collect())
+        } else {
+            None
+        }
+    }
+
+    /// Clause status under partial assignment: `Some(true)` satisfied,
+    /// `Some(false)` conflicting, `None` undecided.
+    fn clause_state(&self, clause: &[Lit], assign: &[Option<bool>]) -> Option<bool> {
+        let mut undecided = false;
+        for l in clause {
+            match assign[l.var] {
+                Some(v) if v == l.positive => return Some(true),
+                Some(_) => {}
+                None => undecided = true,
+            }
+        }
+        if undecided {
+            None
+        } else {
+            Some(false)
+        }
+    }
+
+    fn unit_literal(&self, clause: &[Lit], assign: &[Option<bool>]) -> Option<Lit> {
+        let mut unit = None;
+        for l in clause {
+            match assign[l.var] {
+                Some(v) if v == l.positive => return None, // satisfied
+                Some(_) => {}
+                None => {
+                    if unit.is_some() {
+                        return None; // two unassigned
+                    }
+                    unit = Some(*l);
+                }
+            }
+        }
+        unit
+    }
+
+    fn search<T: Theory>(&self, assign: &mut Vec<Option<bool>>, theory: &mut T) -> bool {
+        let t_mark = theory.mark();
+        let mut trail: Vec<usize> = Vec::new();
+
+        // Unit propagation to fixpoint.
+        loop {
+            let mut progressed = false;
+            for clause in &self.clauses {
+                match self.clause_state(clause, assign) {
+                    Some(false) => {
+                        self.rollback(assign, theory, &trail, t_mark);
+                        return false;
+                    }
+                    Some(true) => {}
+                    None => {
+                        if let Some(l) = self.unit_literal(clause, assign) {
+                            assign[l.var] = Some(l.positive);
+                            trail.push(l.var);
+                            if !theory.on_assign(l.var, l.positive) {
+                                self.rollback(assign, theory, &trail, t_mark);
+                                return false;
+                            }
+                            progressed = true;
+                        }
+                    }
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+
+        // Pick a branch variable.
+        let var = match assign.iter().position(|a| a.is_none()) {
+            Some(v) => v,
+            None => return true, // complete assignment, all clauses satisfied
+        };
+        for value in [true, false] {
+            let inner_mark = theory.mark();
+            assign[var] = Some(value);
+            if theory.on_assign(var, value) && self.search(assign, theory) {
+                return true;
+            }
+            assign[var] = None;
+            theory.undo_to(inner_mark);
+        }
+        self.rollback(assign, theory, &trail, t_mark);
+        false
+    }
+
+    fn rollback<T: Theory>(
+        &self,
+        assign: &mut [Option<bool>],
+        theory: &mut T,
+        trail: &[usize],
+        t_mark: usize,
+    ) {
+        for &v in trail {
+            assign[v] = None;
+        }
+        theory.undo_to(t_mark);
+    }
+}
+
+/// T-satisfiability of a conjunction of predicate literals — the exact
+/// query unsatisfiable-path elimination asks, expressed through DPLL(T)
+/// (used as the cross-check oracle in tests).
+pub fn conjunction_sat(domains: &[Domain], literals: &[(Predicate, bool)]) -> bool {
+    let preds: Vec<Predicate> = literals.iter().map(|&(p, _)| p).collect();
+    let mut solver = Solver::new(preds.len());
+    for (i, &(_, v)) in literals.iter().enumerate() {
+        solver.add_unit(if v { Lit::pos(i) } else { Lit::neg(i) });
+    }
+    let mut theory = IntervalTheory::new(domains, preds);
+    solver.solve(&mut theory).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_sat_simple() {
+        // (a ∨ b) ∧ (¬a ∨ b) ∧ (¬b ∨ c)
+        let mut s = Solver::new(3);
+        s.add_clause(vec![Lit::pos(0), Lit::pos(1)]);
+        s.add_clause(vec![Lit::neg(0), Lit::pos(1)]);
+        s.add_clause(vec![Lit::neg(1), Lit::pos(2)]);
+        let model = s.solve(&mut NoTheory).unwrap();
+        assert!(model[1] && model[2]);
+    }
+
+    #[test]
+    fn pure_unsat() {
+        let mut s = Solver::new(1);
+        s.add_unit(Lit::pos(0));
+        s.add_unit(Lit::neg(0));
+        assert!(s.solve(&mut NoTheory).is_none());
+    }
+
+    #[test]
+    fn unit_propagation_chains() {
+        // a ∧ (¬a ∨ b) ∧ (¬b ∨ ¬c) ∧ c  -> UNSAT
+        let mut s = Solver::new(3);
+        s.add_unit(Lit::pos(0));
+        s.add_clause(vec![Lit::neg(0), Lit::pos(1)]);
+        s.add_clause(vec![Lit::neg(1), Lit::neg(2)]);
+        s.add_unit(Lit::pos(2));
+        assert!(s.solve(&mut NoTheory).is_none());
+    }
+
+    #[test]
+    fn theory_vetoes_propositionally_sat_formula() {
+        // Propositionally: v0 ∧ ¬v1 is fine. Theory: v0 = (x < 2.45),
+        // v1 = (x < 2.7) -> x < 2.45 ∧ x >= 2.7 is T-unsat.
+        let preds = vec![
+            Predicate {
+                feature: 0,
+                threshold: 2.45,
+            },
+            Predicate {
+                feature: 0,
+                threshold: 2.7,
+            },
+        ];
+        let mut s = Solver::new(2);
+        s.add_unit(Lit::pos(0));
+        s.add_unit(Lit::neg(1));
+        let mut t = IntervalTheory::new(&[Domain::Real], preds.clone());
+        assert!(s.solve(&mut t).is_none());
+
+        // The reverse polarity is T-sat.
+        let mut s = Solver::new(2);
+        s.add_unit(Lit::neg(0));
+        s.add_unit(Lit::pos(1));
+        let mut t = IntervalTheory::new(&[Domain::Real], preds);
+        assert!(s.solve(&mut t).is_some());
+    }
+
+    #[test]
+    fn search_navigates_theory_conflicts() {
+        // (v0 ∨ v1) with a theory where v0's positive literal is impossible:
+        // x < 1 ∧ x >= 2 forced elsewhere.
+        let preds = vec![
+            Predicate {
+                feature: 0,
+                threshold: 1.0,
+            },
+            Predicate {
+                feature: 1,
+                threshold: 1.0,
+            },
+            Predicate {
+                feature: 0,
+                threshold: 2.0,
+            },
+        ];
+        let mut s = Solver::new(3);
+        s.add_unit(Lit::neg(2)); // x0 >= 2
+        s.add_clause(vec![Lit::pos(0), Lit::pos(1)]); // (x0<1) ∨ (x1<1)
+        let mut t = IntervalTheory::new(&[Domain::Real, Domain::Real], preds);
+        let model = s.solve(&mut t).unwrap();
+        assert!(!model[0], "x0 < 1 contradicts x0 >= 2");
+        assert!(model[1]);
+    }
+
+    #[test]
+    fn conjunction_sat_agrees_with_interval_module() {
+        use crate::feas::conjunction_feasible;
+        let d = vec![Domain::Real, Domain::Grid { cardinality: 3 }];
+        let p = |f: u32, t: f32| Predicate {
+            feature: f,
+            threshold: t,
+        };
+        let cases: Vec<Vec<(Predicate, bool)>> = vec![
+            vec![(p(0, 2.45), true), (p(0, 2.7), false)],
+            vec![(p(0, 2.7), true), (p(0, 2.45), false)],
+            vec![(p(1, 1.2), false), (p(1, 1.8), true)],
+            vec![(p(1, 0.5), false), (p(1, 1.5), true), (p(0, 1.0), true)],
+        ];
+        for lits in cases {
+            assert_eq!(
+                conjunction_sat(&d, &lits),
+                conjunction_feasible(&d, &lits),
+                "{lits:?}"
+            );
+        }
+    }
+}

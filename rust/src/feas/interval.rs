@@ -1,0 +1,362 @@
+//! Incremental per-feature interval store with trail-based backtracking.
+//!
+//! The feasible set of each feature under a conjunction of threshold
+//! literals is a half-open interval `[lo, hi)` (intersected with the
+//! feature's grid for ordinal domains). The store supports O(1)
+//! `assume`/`implied` and O(assumptions) backtracking via an undo trail —
+//! the access pattern of the DFS in unsatisfiable-path elimination.
+
+use crate::predicate::{Domain, Predicate};
+
+/// Compact canonical store projection used as a memoisation key.
+///
+/// Almost every projection touches a handful of features, so the common
+/// case is stored inline (no heap allocation on the reducer/combiner hot
+/// path); larger projections spill to a heap vector. Unused inline slots
+/// hold a fixed sentinel so the derived `Eq`/`Hash` stay consistent.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CtxKey {
+    /// Up to 10 constrained features, inline.
+    Inline {
+        /// Number of used slots.
+        len: u8,
+        /// `(feature, lo, hi)` entries; unused slots are the sentinel.
+        items: [(u32, u32, u32); 10],
+    },
+    /// Spill for wide projections.
+    Heap(Vec<(u32, u32, u32)>),
+}
+
+const CTX_SENTINEL: (u32, u32, u32) = (u32::MAX, 0, 0);
+
+impl CtxKey {
+    fn from_iter(mut items: impl Iterator<Item = (u32, u32, u32)>) -> CtxKey {
+        let mut inline = [CTX_SENTINEL; 10];
+        let mut len = 0usize;
+        for it in items.by_ref() {
+            if len == 10 {
+                let mut v: Vec<(u32, u32, u32)> = inline.to_vec();
+                v.push(it);
+                v.extend(items);
+                return CtxKey::Heap(v);
+            }
+            inline[len] = it;
+            len += 1;
+        }
+        CtxKey::Inline {
+            len: len as u8,
+            items: inline,
+        }
+    }
+
+    /// Number of constrained features in the key.
+    pub fn len(&self) -> usize {
+        match self {
+            CtxKey::Inline { len, .. } => *len as usize,
+            CtxKey::Heap(v) => v.len(),
+        }
+    }
+
+    /// True when no feature is constrained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Current feasible interval `[lo, hi)` of one feature.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Bound {
+    lo: f32,
+    hi: f32,
+}
+
+const FULL: Bound = Bound {
+    lo: f32::NEG_INFINITY,
+    hi: f32::INFINITY,
+};
+
+/// Incremental feasibility store (see module docs).
+#[derive(Debug, Clone)]
+pub struct IntervalStore {
+    bounds: Vec<Bound>,
+    domains: Vec<Domain>,
+    trail: Vec<(u32, Bound)>,
+}
+
+impl IntervalStore {
+    /// Unconstrained store over the given feature domains.
+    pub fn new(domains: &[Domain]) -> Self {
+        IntervalStore {
+            bounds: vec![FULL; domains.len()],
+            domains: domains.to_vec(),
+            trail: Vec::new(),
+        }
+    }
+
+    /// Smallest and largest *feasible* value of a feature under the current
+    /// bounds, as a closed range; `None` when the feasible set is empty.
+    fn feasible_range(&self, f: usize) -> Option<(f32, f32)> {
+        let b = self.bounds[f];
+        match self.domains[f] {
+            Domain::Real => {
+                if b.lo < b.hi {
+                    // open above: supremum is hi, but no max; report hi as the
+                    // exclusive upper bound handled by callers via `implied`.
+                    Some((b.lo, b.hi))
+                } else {
+                    None
+                }
+            }
+            Domain::Grid { cardinality } => {
+                let min = ceil_clamped(b.lo, 0.0);
+                // x < hi on integers means x <= ceil(hi) - 1
+                let max = (ceil_f32(b.hi) - 1.0).min(cardinality as f32 - 1.0);
+                if min <= max {
+                    Some((min, max))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Tri-state entailment of `x[f] < t` under the current constraints:
+    /// `Some(true)` when every feasible value satisfies it, `Some(false)`
+    /// when none does, `None` when both outcomes remain possible.
+    pub fn implied(&self, p: Predicate) -> Option<bool> {
+        let f = p.feature as usize;
+        let t = p.threshold;
+        match self.domains[f] {
+            Domain::Real => {
+                let b = self.bounds[f];
+                if b.hi <= t {
+                    Some(true) // all x < hi <= t
+                } else if b.lo >= t {
+                    Some(false) // all x >= lo >= t
+                } else {
+                    None
+                }
+            }
+            Domain::Grid { .. } => {
+                let (min, max) = self
+                    .feasible_range(f)
+                    .expect("grid store became infeasible — assume() contract violated");
+                if max < t {
+                    Some(true)
+                } else if min >= t {
+                    Some(false)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Record an assumption `x[f] < t == value`. Callers must only assume
+    /// predicates whose [`implied`](Self::implied) answer is `None` — that
+    /// keeps the store feasible by construction (the reducer's invariant).
+    pub fn assume(&mut self, p: Predicate, value: bool) {
+        let f = p.feature as usize;
+        let b = self.bounds[f];
+        self.trail.push((p.feature, b));
+        if value {
+            self.bounds[f].hi = b.hi.min(p.threshold);
+        } else {
+            self.bounds[f].lo = b.lo.max(p.threshold);
+        }
+        debug_assert!(
+            self.feasible_range(f).is_some(),
+            "assumed an implied-impossible literal"
+        );
+    }
+
+    /// Trail position for later [`undo_to`](Self::undo_to).
+    pub fn mark(&self) -> usize {
+        self.trail.len()
+    }
+
+    /// Backtrack to a previous [`mark`](Self::mark).
+    pub fn undo_to(&mut self, mark: usize) {
+        while self.trail.len() > mark {
+            let (f, b) = self.trail.pop().unwrap();
+            self.bounds[f as usize] = b;
+        }
+    }
+
+    /// True when every feature still has a feasible value.
+    pub fn is_feasible(&self) -> bool {
+        (0..self.bounds.len()).all(|f| self.feasible_range(f).is_some())
+    }
+
+    /// Allocation-free canonical projection into a [`CtxKey`] (hot-path
+    /// variant of [`project_key`](Self::project_key)).
+    pub fn project_ctx(&self, features: impl Iterator<Item = u32>) -> CtxKey {
+        CtxKey::from_iter(features.filter_map(|f| self.project_one(f)))
+    }
+
+    /// Projection of a single feature; `None` when unconstrained.
+    #[inline]
+    fn project_one(&self, f: u32) -> Option<(u32, u32, u32)> {
+        let fi = f as usize;
+        let b = self.bounds[fi];
+        if b == FULL {
+            return None;
+        }
+        match self.domains[fi] {
+            Domain::Real => Some((f, b.lo.to_bits(), b.hi.to_bits())),
+            Domain::Grid { cardinality } => {
+                let (min, max) = self
+                    .feasible_range(fi)
+                    .expect("infeasible grid store in project_ctx");
+                if min == 0.0 && max == cardinality as f32 - 1.0 {
+                    None
+                } else {
+                    Some((f, min as u32, max as u32))
+                }
+            }
+        }
+    }
+
+    /// Canonical projection of the store onto a feature subset, for use as
+    /// a memoisation key. Grid features canonicalise to their integer range
+    /// (different real bounds with the same feasible grid values produce the
+    /// same key — strictly more cache hits). Unconstrained features are
+    /// omitted.
+    pub fn project_key(&self, features: impl Iterator<Item = u32>) -> Vec<(u32, u32, u32)> {
+        features.filter_map(|f| self.project_one(f)).collect()
+    }
+}
+
+fn ceil_f32(v: f32) -> f32 {
+    if v.is_finite() {
+        v.ceil()
+    } else {
+        v
+    }
+}
+
+fn ceil_clamped(v: f32, min: f32) -> f32 {
+    if v == f32::NEG_INFINITY {
+        min
+    } else {
+        v.ceil().max(min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(feature: u32, threshold: f32) -> Predicate {
+        Predicate { feature, threshold }
+    }
+
+    #[test]
+    fn real_implication_chain() {
+        let mut s = IntervalStore::new(&[Domain::Real]);
+        assert_eq!(s.implied(p(0, 2.45)), None);
+        s.assume(p(0, 2.45), true);
+        // x < 2.45 -> x < 2.7 implied true; x < 2.0 unknown
+        assert_eq!(s.implied(p(0, 2.7)), Some(true));
+        assert_eq!(s.implied(p(0, 2.45)), Some(true)); // self
+        assert_eq!(s.implied(p(0, 2.0)), None);
+        s.assume(p(0, 2.0), false);
+        // now 2.0 <= x < 2.45
+        assert_eq!(s.implied(p(0, 1.5)), Some(false));
+        assert_eq!(s.implied(p(0, 2.0)), Some(false));
+    }
+
+    #[test]
+    fn backtracking_restores_bounds() {
+        let mut s = IntervalStore::new(&[Domain::Real, Domain::Real]);
+        let m0 = s.mark();
+        s.assume(p(0, 1.0), true);
+        let m1 = s.mark();
+        s.assume(p(1, 5.0), false);
+        s.assume(p(0, 0.5), false);
+        assert_eq!(s.implied(p(1, 4.0)), Some(false));
+        s.undo_to(m1);
+        assert_eq!(s.implied(p(1, 4.0)), None);
+        assert_eq!(s.implied(p(0, 1.5)), Some(true));
+        s.undo_to(m0);
+        assert_eq!(s.implied(p(0, 1.5)), None);
+    }
+
+    #[test]
+    fn boundary_semantics_half_open() {
+        let mut s = IntervalStore::new(&[Domain::Real]);
+        s.assume(p(0, 3.0), false); // x >= 3.0
+        // x < 3.0 is exactly false, not unknown
+        assert_eq!(s.implied(p(0, 3.0)), Some(false));
+        let mut s = IntervalStore::new(&[Domain::Real]);
+        s.assume(p(0, 3.0), true); // x < 3.0
+        assert_eq!(s.implied(p(0, 3.0)), Some(true));
+    }
+
+    #[test]
+    fn grid_entailment_is_stronger_than_real() {
+        let d = [Domain::Grid { cardinality: 5 }]; // {0..4}
+        let mut s = IntervalStore::new(&d);
+        s.assume(p(0, 1.5), false); // x >= 1.5 -> on grid x >= 2
+        // real reasoning can't decide x < 2.2; grid reasoning: x ∈ {2,3,4}
+        // so x < 2.2 iff x == 2 -> unknown; but x < 2.0 is false.
+        assert_eq!(s.implied(p(0, 2.0)), Some(false));
+        s.assume(p(0, 2.5), true); // x ∈ {2}
+        assert_eq!(s.implied(p(0, 2.2)), Some(true));
+        assert_eq!(s.implied(p(0, 2.0)), Some(false));
+    }
+
+    #[test]
+    fn grid_feasibility_detects_empty_cells() {
+        let d = [Domain::Grid { cardinality: 3 }];
+        let mut s = IntervalStore::new(&d);
+        s.assume(p(0, 1.2), false); // x >= 1.2 -> x = 2 only? no: x ∈ {2}
+        assert!(s.is_feasible());
+        // x < 1.8 would require a grid point in [1.2, 1.8) -> none;
+        // implied() must answer false so the reducer never assumes it.
+        assert_eq!(s.implied(p(0, 1.8)), Some(false));
+    }
+
+    #[test]
+    fn project_key_canonicalises_grids() {
+        let d = [Domain::Grid { cardinality: 5 }, Domain::Real];
+        let mut a = IntervalStore::new(&d);
+        a.assume(p(0, 2.3), true); // grid: x ∈ {0,1,2}
+        let mut b = IntervalStore::new(&d);
+        b.assume(p(0, 2.9), true); // grid: x ∈ {0,1,2} — same feasible set
+        assert_eq!(
+            a.project_key([0u32, 1u32].into_iter()),
+            b.project_key([0u32, 1u32].into_iter())
+        );
+        // Real features keep exact bits (no spurious merging).
+        let mut c = IntervalStore::new(&d);
+        c.assume(p(1, 2.3), true);
+        let mut e = IntervalStore::new(&d);
+        e.assume(p(1, 2.9), true);
+        assert_ne!(
+            c.project_key([0u32, 1u32].into_iter()),
+            e.project_key([0u32, 1u32].into_iter())
+        );
+    }
+
+    #[test]
+    fn project_key_omits_unconstrained() {
+        let d = [Domain::Real, Domain::Real, Domain::Real];
+        let mut s = IntervalStore::new(&d);
+        s.assume(p(1, 4.0), true);
+        let key = s.project_key([0u32, 1, 2].into_iter());
+        assert_eq!(key.len(), 1);
+        assert_eq!(key[0].0, 1);
+        // projection respects the requested feature subset
+        let key2 = s.project_key([0u32, 2].into_iter());
+        assert!(key2.is_empty());
+    }
+
+    #[test]
+    fn full_grid_range_is_omitted_from_key() {
+        let d = [Domain::Grid { cardinality: 3 }];
+        let mut s = IntervalStore::new(&d);
+        s.assume(p(0, 5.0), true); // x < 5 constrains nothing on {0,1,2}
+        assert!(s.project_key([0u32].into_iter()).is_empty());
+    }
+}

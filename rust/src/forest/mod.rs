@@ -1,0 +1,392 @@
+//! Random Forests: bagging ensemble of CART trees with majority vote.
+//!
+//! The baseline classifier of the paper (§2): every tree is trained on a
+//! bootstrap sample with random feature subspaces, and classification
+//! evaluates **all** trees — cost linear in the forest size, which is
+//! exactly what the ADD aggregation removes.
+
+use crate::data::{Dataset, Schema};
+use crate::error::{Error, Result};
+use crate::tree::{DecisionTree, TreeLearner, TreeParams};
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// A trained Random Forest.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    /// Member trees (evaluated independently; majority vote aggregates).
+    pub trees: Vec<DecisionTree>,
+    /// Schema the forest was trained on (feature names for predicate
+    /// rendering, class labels for output).
+    pub schema: Schema,
+}
+
+/// Builder-style trainer for [`RandomForest`].
+#[derive(Debug, Clone)]
+pub struct ForestLearner {
+    n_trees: usize,
+    params: TreeParams,
+    bootstrap: bool,
+    seed: u64,
+}
+
+impl Default for ForestLearner {
+    fn default() -> Self {
+        ForestLearner {
+            n_trees: 100,
+            params: TreeParams::default(),
+            bootstrap: true,
+            seed: 0,
+        }
+    }
+}
+
+impl ForestLearner {
+    /// Set the number of trees.
+    pub fn trees(mut self, n: usize) -> Self {
+        self.n_trees = n;
+        self
+    }
+
+    /// Set the RNG seed (forests are fully reproducible per seed).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the per-tree maximum depth (`0` = unlimited).
+    pub fn max_depth(mut self, d: usize) -> Self {
+        self.params.max_depth = d;
+        self
+    }
+
+    /// Set the minimum rows per leaf.
+    pub fn min_samples_leaf(mut self, n: usize) -> Self {
+        self.params.min_samples_leaf = n.max(1);
+        self
+    }
+
+    /// Set candidate features per node (`0` = `⌈√F⌉`).
+    pub fn k_features(mut self, k: usize) -> Self {
+        self.params.k_features = k;
+        self
+    }
+
+    /// Enable/disable bootstrap sampling (disabled = every tree sees all rows,
+    /// randomness only from the feature subspace).
+    pub fn bootstrap(mut self, on: bool) -> Self {
+        self.bootstrap = on;
+        self
+    }
+
+    /// Train on a dataset.
+    pub fn fit(&self, data: &Dataset) -> RandomForest {
+        assert!(data.n_rows() > 0, "cannot train on an empty dataset");
+        let root = Rng::new(self.seed);
+        let trees = (0..self.n_trees)
+            .map(|t| {
+                // Every tree gets an independent stream -> identical forests
+                // regardless of evaluation order.
+                let mut rng = root.fork(t as u64);
+                let rows: Vec<usize> = if self.bootstrap {
+                    rng.bootstrap(data.n_rows())
+                } else {
+                    (0..data.n_rows()).collect()
+                };
+                TreeLearner::new(data, self.params.clone(), rng).fit(&rows)
+            })
+            .collect();
+        RandomForest {
+            trees,
+            schema: data.schema.clone(),
+        }
+    }
+}
+
+impl RandomForest {
+    /// Number of trees.
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// Number of classes.
+    pub fn n_classes(&self) -> usize {
+        self.schema.n_classes()
+    }
+
+    /// Total node count over all trees — the paper's Fig. 7/Table 2 "size"
+    /// for the Random Forest structure.
+    pub fn n_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.n_nodes()).sum()
+    }
+
+    /// Per-class vote counts for one row.
+    pub fn votes(&self, x: &[f32]) -> Vec<u32> {
+        let mut v = vec![0u32; self.n_classes()];
+        for tree in &self.trees {
+            v[tree.predict(x) as usize] += 1;
+        }
+        v
+    }
+
+    /// Majority-vote prediction (ties toward the lowest class index,
+    /// matching the ADD majority abstraction and the L1 kernel's argmax).
+    pub fn predict(&self, x: &[f32]) -> u32 {
+        let v = self.votes(x);
+        v.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0)
+    }
+
+    /// Prediction with the paper's §6 step count: internal nodes visited in
+    /// every tree, plus `n` additional reads for the majority vote.
+    pub fn predict_with_steps(&self, x: &[f32]) -> (u32, usize) {
+        let mut votes = vec![0u32; self.n_classes()];
+        let mut steps = 0usize;
+        for tree in &self.trees {
+            let (c, s) = tree.walk(x);
+            votes[c as usize] += 1;
+            steps += s;
+        }
+        steps += self.trees.len(); // one read per tree result (§6)
+        let pred = votes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .map(|(i, _)| i as u32)
+            .unwrap_or(0);
+        (pred, steps)
+    }
+
+    /// Mean step count over a dataset (the paper's reported measure).
+    pub fn mean_steps(&self, data: &Dataset) -> f64 {
+        let total: usize = (0..data.n_rows())
+            .map(|i| self.predict_with_steps(data.row(i)).1)
+            .sum();
+        total as f64 / data.n_rows() as f64
+    }
+
+    /// Classification accuracy on a dataset.
+    pub fn accuracy(&self, data: &Dataset) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|(x, y)| self.predict(x) == *y)
+            .count();
+        correct as f64 / data.n_rows() as f64
+    }
+
+    /// Prefix sub-forest (first `n` trees) — used for the Fig. 6/7 sweeps so
+    /// the size-`k` forest is always a prefix of the size-`k+1` forest,
+    /// matching the paper's incremental-aggregation setting.
+    pub fn prefix(&self, n: usize) -> RandomForest {
+        RandomForest {
+            trees: self.trees[..n.min(self.trees.len())].to_vec(),
+            schema: self.schema.clone(),
+        }
+    }
+
+    /// JSON encoding (model persistence for the CLI train/compile workflow).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            (
+                "classes",
+                Json::Arr(self.schema.classes.iter().map(|c| json::s(c.clone())).collect()),
+            ),
+            (
+                "features",
+                Json::Arr(
+                    self.schema
+                        .features
+                        .iter()
+                        .map(|f| {
+                            let kind = match &f.kind {
+                                crate::data::FeatureKind::Numeric => json::s("numeric"),
+                                crate::data::FeatureKind::Categorical { values } => Json::Arr(
+                                    values.iter().map(|v| json::s(v.clone())).collect(),
+                                ),
+                            };
+                            json::obj(vec![("name", json::s(f.name.clone())), ("kind", kind)])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "trees",
+                Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// JSON decoding.
+    pub fn from_json(v: &Json) -> Result<RandomForest> {
+        let classes: Vec<String> = v
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("forest: missing classes"))?
+            .iter()
+            .map(|c| c.as_str().map(String::from))
+            .collect::<Option<_>>()
+            .ok_or_else(|| Error::parse("forest: bad class label"))?;
+        let features = v
+            .get("features")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("forest: missing features"))?
+            .iter()
+            .map(|f| {
+                let name = f
+                    .get_str("name")
+                    .ok_or_else(|| Error::parse("feature: missing name"))?
+                    .to_string();
+                let kind = match f.get("kind") {
+                    Some(Json::Str(s)) if s == "numeric" => crate::data::FeatureKind::Numeric,
+                    Some(Json::Arr(vals)) => crate::data::FeatureKind::Categorical {
+                        values: vals
+                            .iter()
+                            .map(|v| v.as_str().map(String::from))
+                            .collect::<Option<_>>()
+                            .ok_or_else(|| Error::parse("feature: bad categorical value"))?,
+                    },
+                    _ => return Err(Error::parse("feature: bad kind")),
+                };
+                Ok(crate::data::Feature { name, kind })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let trees = v
+            .get("trees")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("forest: missing trees"))?
+            .iter()
+            .map(DecisionTree::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let schema = Schema { features, classes };
+        for t in &trees {
+            if t.n_features != schema.n_features() || t.n_classes != schema.n_classes() {
+                return Err(Error::SchemaMismatch(
+                    "tree dimensions do not match forest schema".into(),
+                ));
+            }
+        }
+        Ok(RandomForest { trees, schema })
+    }
+
+    /// Save to a JSON file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<RandomForest> {
+        let text = std::fs::read_to_string(path)?;
+        RandomForest::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{datasets, split};
+
+    #[test]
+    fn forest_beats_chance_and_single_tree_on_holdout() {
+        let ds = datasets::iris();
+        let (train, test) = split::train_test_split(&ds, 0.3, 11).unwrap();
+        let forest = ForestLearner::default().trees(60).seed(4).fit(&train);
+        let acc = forest.accuracy(&test);
+        assert!(acc > 0.85, "holdout accuracy {acc}");
+    }
+
+    #[test]
+    fn reproducible_per_seed() {
+        let ds = datasets::lenses();
+        let a = ForestLearner::default().trees(20).seed(9).fit(&ds);
+        let b = ForestLearner::default().trees(20).seed(9).fit(&ds);
+        for (ta, tb) in a.trees.iter().zip(&b.trees) {
+            assert_eq!(ta, tb);
+        }
+        let c = ForestLearner::default().trees(20).seed(10).fit(&ds);
+        assert!(a.trees.iter().zip(&c.trees).any(|(x, y)| x != y));
+    }
+
+    #[test]
+    fn prefix_property_of_tree_streams() {
+        // tree i of an n-tree forest == tree i of an m-tree forest (same seed)
+        let ds = datasets::lenses();
+        let small = ForestLearner::default().trees(5).seed(3).fit(&ds);
+        let big = ForestLearner::default().trees(12).seed(3).fit(&ds);
+        for i in 0..5 {
+            assert_eq!(small.trees[i], big.trees[i], "tree {i}");
+        }
+        let pre = big.prefix(5);
+        for i in 0..5 {
+            assert_eq!(pre.trees[i], small.trees[i]);
+        }
+    }
+
+    #[test]
+    fn votes_sum_to_tree_count() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(31).seed(0).fit(&ds);
+        for i in [0, 75, 149] {
+            let v = forest.votes(ds.row(i));
+            assert_eq!(v.iter().sum::<u32>(), 31);
+        }
+    }
+
+    #[test]
+    fn steps_grow_linearly_with_forest_size() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(64).seed(1).fit(&ds);
+        let s16 = forest.prefix(16).mean_steps(&ds);
+        let s64 = forest.mean_steps(&ds);
+        let ratio = s64 / s16;
+        assert!(
+            (3.0..5.0).contains(&ratio),
+            "expected ~4x step growth, got {ratio} ({s16} -> {s64})"
+        );
+    }
+
+    #[test]
+    fn steps_include_majority_reads() {
+        // A forest of single-leaf trees walks 0 internal nodes but still pays
+        // n reads for the majority vote (§6 metric definition).
+        let ds = datasets::iris();
+        let rows: Vec<usize> = (0..50).collect(); // pure setosa
+        let pure = ds.select(&rows);
+        let forest = ForestLearner::default().trees(10).seed(0).fit(&pure);
+        let (pred, steps) = forest.predict_with_steps(pure.row(0));
+        assert_eq!(pred, 0);
+        assert_eq!(steps, 10);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let ds = datasets::lenses();
+        let forest = ForestLearner::default().trees(7).seed(2).fit(&ds);
+        let text = forest.to_json().to_string_pretty();
+        let back = RandomForest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_trees(), 7);
+        for i in 0..ds.n_rows() {
+            assert_eq!(forest.predict(ds.row(i)), back.predict(ds.row(i)));
+        }
+        assert_eq!(forest.schema, back.schema);
+    }
+
+    #[test]
+    fn no_bootstrap_mode() {
+        let ds = datasets::lenses();
+        let forest = ForestLearner::default()
+            .trees(5)
+            .bootstrap(false)
+            .k_features(4)
+            .seed(0)
+            .fit(&ds);
+        // all-features + full data -> every tree is identical plain CART
+        for t in &forest.trees[1..] {
+            assert_eq!(*t, forest.trees[0]);
+        }
+        assert_eq!(forest.accuracy(&ds), 1.0);
+    }
+}

@@ -1,0 +1,50 @@
+//! # forest-add
+//!
+//! Reproduction of **"Large Random Forests: Optimisation for Rapid
+//! Evaluation"** (Gossen & Steffen, 2019): aggregation of Random Forests
+//! into a single Algebraic Decision Diagram (ADD) for classification that is
+//! orders of magnitude faster and smaller, packaged as a three-layer
+//! Rust + JAX/Pallas serving system.
+//!
+//! Architecture (see `DESIGN.md`):
+//! - **L3 (this crate)**: the paper's entire algorithm — random-forest
+//!   training substrate, the ADD library, feasibility solvers,
+//!   unsatisfiable-path elimination, the forest→DD compiler — plus a
+//!   production-style serving coordinator (router, dynamic batcher, HTTP).
+//! - **L2/L1 (`python/compile/`)**: a tensorised batched forest evaluator
+//!   (JAX + Pallas) AOT-lowered to HLO text, executed from Rust via PJRT
+//!   (`runtime`). Python never runs on the request path.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//! ```no_run
+//! use forest_add::data::datasets;
+//! use forest_add::forest::ForestLearner;
+//! use forest_add::compile::{CompileOptions, ForestCompiler};
+//!
+//! let data = datasets::load("iris").unwrap();
+//! let forest = ForestLearner::default().trees(100).seed(7).fit(&data);
+//! let dd = ForestCompiler::new(CompileOptions::default()).compile(&forest).unwrap();
+//! let pred = dd.classify(data.row(0));
+//! # let _ = pred;
+//! ```
+
+pub mod add;
+pub mod bench_support;
+pub mod cli;
+pub mod compile;
+pub mod data;
+pub mod error;
+pub mod feas;
+pub mod forest;
+pub mod predicate;
+pub mod runtime;
+pub mod serve;
+pub mod tree;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// CLI entrypoint (see [`cli`]).
+pub fn run_cli(args: Vec<String>) -> Result<()> {
+    cli::run(args)
+}

@@ -1,0 +1,8 @@
+//! `forest-add` CLI — leader entrypoint (subcommands grow with the library).
+
+fn main() {
+    if let Err(e) = forest_add::run_cli(std::env::args().skip(1).collect()) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,302 @@
+//! Predicates and the global variable order.
+//!
+//! Every split in every tree is a threshold predicate `x[feature] < threshold`.
+//! The ADD machinery requires a **fixed total order** on predicates (§3.2:
+//! "they enforce an order of predicates along all paths"); this module
+//! interns all predicates occurring in a forest into a [`PredicatePool`]
+//! whose index *is* the ADD level.
+//!
+//! Two orders are provided (the choice is a classical BDD quality lever the
+//! paper defers to "the corresponding frameworks"; `ablation_cadence` benches
+//! both):
+//! - [`PredicateOrder::FeatureThreshold`]: lexicographic by `(feature,
+//!   threshold)`. Keeps all predicates of one feature adjacent and sorted.
+//! - [`PredicateOrder::FrequencyDesc`]: most-used predicates first (a
+//!   greedy static heuristic in the spirit of common BDD ordering
+//!   heuristics). Measured best on all six evaluation datasets — smaller
+//!   diagrams, fewer steps, faster compiles (ablation_order bench) — and
+//!   therefore the compiler default.
+
+use crate::data::{FeatureKind, Schema};
+use crate::forest::RandomForest;
+use crate::tree::TreeNode;
+use std::collections::HashMap;
+
+/// An atomic decision `x[feature] < threshold`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Predicate {
+    /// Feature column index.
+    pub feature: u32,
+    /// Strict upper-bound threshold.
+    pub threshold: f32,
+}
+
+impl Predicate {
+    fn key(&self) -> (u32, u32) {
+        (self.feature, self.threshold.to_bits())
+    }
+}
+
+/// Variable-order heuristic for the pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PredicateOrder {
+    /// Sort by `(feature, threshold)`.
+    FeatureThreshold,
+    /// Sort by occurrence count (descending), ties by `(feature,
+    /// threshold)` — the measured-best default.
+    #[default]
+    FrequencyDesc,
+}
+
+/// The value domain of a feature, used by feasibility reasoning.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Domain {
+    /// Real-valued feature.
+    Real,
+    /// Values lie on the integer grid `0..cardinality` (ordinal-encoded
+    /// categorical features).
+    Grid {
+        /// Number of admissible integer values.
+        cardinality: u32,
+    },
+}
+
+/// Interned, totally ordered predicate set of one compilation.
+#[derive(Debug, Clone)]
+pub struct PredicatePool {
+    preds: Vec<Predicate>,
+    index: HashMap<(u32, u32), u32>,
+    domains: Vec<Domain>,
+    n_features: usize,
+}
+
+impl PredicatePool {
+    /// Build a pool from an explicit predicate list (tests, tools). The
+    /// list order becomes the variable order; duplicates are rejected by
+    /// debug assertion.
+    pub fn from_predicates(
+        preds: Vec<Predicate>,
+        domains: Vec<Domain>,
+        n_features: usize,
+    ) -> PredicatePool {
+        let index: HashMap<(u32, u32), u32> = preds
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.key(), i as u32))
+            .collect();
+        debug_assert_eq!(index.len(), preds.len(), "duplicate predicates");
+        debug_assert_eq!(domains.len(), n_features);
+        PredicatePool {
+            preds,
+            index,
+            domains,
+            n_features,
+        }
+    }
+
+    /// Collect and order every predicate of `forest`.
+    pub fn from_forest(forest: &RandomForest, order: PredicateOrder) -> PredicatePool {
+        let mut counts: HashMap<(u32, u32), (Predicate, usize)> = HashMap::new();
+        for tree in &forest.trees {
+            for node in &tree.nodes {
+                if let TreeNode::Split {
+                    feature, threshold, ..
+                } = node
+                {
+                    let p = Predicate {
+                        feature: *feature,
+                        threshold: *threshold,
+                    };
+                    counts.entry(p.key()).or_insert((p, 0)).1 += 1;
+                }
+            }
+        }
+        let mut preds: Vec<(Predicate, usize)> = counts.into_values().collect();
+        match order {
+            PredicateOrder::FeatureThreshold => preds.sort_by(|a, b| {
+                (a.0.feature, a.0.threshold)
+                    .partial_cmp(&(b.0.feature, b.0.threshold))
+                    .unwrap()
+            }),
+            PredicateOrder::FrequencyDesc => preds.sort_by(|a, b| {
+                b.1.cmp(&a.1).then(
+                    (a.0.feature, a.0.threshold)
+                        .partial_cmp(&(b.0.feature, b.0.threshold))
+                        .unwrap(),
+                )
+            }),
+        }
+        let preds: Vec<Predicate> = preds.into_iter().map(|(p, _)| p).collect();
+        let index = preds
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.key(), i as u32))
+            .collect();
+        PredicatePool {
+            preds,
+            index,
+            domains: Self::domains_from_schema(&forest.schema),
+            n_features: forest.schema.n_features(),
+        }
+    }
+
+    fn domains_from_schema(schema: &Schema) -> Vec<Domain> {
+        schema
+            .features
+            .iter()
+            .map(|f| match &f.kind {
+                FeatureKind::Numeric => Domain::Real,
+                FeatureKind::Categorical { values } => Domain::Grid {
+                    cardinality: values.len() as u32,
+                },
+            })
+            .collect()
+    }
+
+    /// Number of predicates (= number of ADD levels).
+    pub fn len(&self) -> usize {
+        self.preds.len()
+    }
+
+    /// True when the pool is empty (forest of single-leaf trees).
+    pub fn is_empty(&self) -> bool {
+        self.preds.is_empty()
+    }
+
+    /// Predicate at a level.
+    pub fn pred(&self, level: u32) -> Predicate {
+        self.preds[level as usize]
+    }
+
+    /// Level of a predicate (must have been collected).
+    pub fn level_of(&self, feature: u32, threshold: f32) -> Option<u32> {
+        self.index.get(&(feature, threshold.to_bits())).copied()
+    }
+
+    /// Evaluate the predicate at `level` on a row.
+    #[inline]
+    pub fn holds(&self, level: u32, x: &[f32]) -> bool {
+        let p = self.preds[level as usize];
+        x[p.feature as usize] < p.threshold
+    }
+
+    /// Feature domains (for feasibility reasoning).
+    pub fn domains(&self) -> &[Domain] {
+        &self.domains
+    }
+
+    /// Number of feature columns.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Render a predicate like the paper's figures (`petalwidth < 1.65`).
+    pub fn render(&self, level: u32, schema: &Schema) -> String {
+        let p = self.pred(level);
+        format!(
+            "{} < {}",
+            schema.features[p.feature as usize].name, p.threshold
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn small_forest() -> RandomForest {
+        ForestLearner::default()
+            .trees(8)
+            .seed(1)
+            .fit(&datasets::iris())
+    }
+
+    #[test]
+    fn collects_all_split_predicates() {
+        let f = small_forest();
+        let pool = PredicatePool::from_forest(&f, PredicateOrder::FeatureThreshold);
+        assert!(!pool.is_empty());
+        for tree in &f.trees {
+            for node in &tree.nodes {
+                if let TreeNode::Split {
+                    feature, threshold, ..
+                } = node
+                {
+                    assert!(pool.level_of(*feature, *threshold).is_some());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn feature_threshold_order_is_sorted() {
+        let pool = PredicatePool::from_forest(&small_forest(), PredicateOrder::FeatureThreshold);
+        for w in 0..pool.len() - 1 {
+            let a = pool.pred(w as u32);
+            let b = pool.pred(w as u32 + 1);
+            assert!(
+                (a.feature, a.threshold) < (b.feature, b.threshold),
+                "{a:?} !< {b:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn frequency_order_puts_popular_first() {
+        let f = small_forest();
+        let pool = PredicatePool::from_forest(&f, PredicateOrder::FrequencyDesc);
+        // count occurrences of level 0's predicate vs the last level's
+        let count = |p: Predicate| {
+            f.trees
+                .iter()
+                .flat_map(|t| &t.nodes)
+                .filter(|n| {
+                    matches!(n, TreeNode::Split { feature, threshold, .. }
+                        if *feature == p.feature && *threshold == p.threshold)
+                })
+                .count()
+        };
+        let first = count(pool.pred(0));
+        let last = count(pool.pred(pool.len() as u32 - 1));
+        assert!(first >= last);
+    }
+
+    #[test]
+    fn holds_matches_semantics() {
+        let f = small_forest();
+        let pool = PredicatePool::from_forest(&f, PredicateOrder::FeatureThreshold);
+        let p = pool.pred(0);
+        let mut x = vec![0.0f32; 4];
+        x[p.feature as usize] = p.threshold - 0.1;
+        assert!(pool.holds(0, &x));
+        x[p.feature as usize] = p.threshold;
+        assert!(!pool.holds(0, &x));
+    }
+
+    #[test]
+    fn domains_follow_schema() {
+        let iris_pool =
+            PredicatePool::from_forest(&small_forest(), PredicateOrder::FeatureThreshold);
+        assert!(iris_pool.domains().iter().all(|d| *d == Domain::Real));
+        let ttt = ForestLearner::default()
+            .trees(3)
+            .seed(0)
+            .fit(&datasets::tic_tac_toe());
+        let pool = PredicatePool::from_forest(&ttt, PredicateOrder::FeatureThreshold);
+        assert!(pool
+            .domains()
+            .iter()
+            .all(|d| *d == Domain::Grid { cardinality: 3 }));
+    }
+
+    #[test]
+    fn render_uses_feature_names() {
+        let f = small_forest();
+        let pool = PredicatePool::from_forest(&f, PredicateOrder::FeatureThreshold);
+        let text = pool.render(0, &f.schema);
+        assert!(text.contains(" < "));
+        assert!(text.starts_with("sepallength"));
+    }
+}

@@ -1,0 +1,239 @@
+//! XLA/PJRT runtime: load and execute the AOT-compiled forest artifacts.
+//!
+//! `make artifacts` lowers the L2/L1 JAX+Pallas forest evaluator to **HLO
+//! text** (the image's xla_extension 0.5.1 rejects jax≥0.5's serialized
+//! protos — see `python/compile/aot.py`). This module:
+//!
+//! 1. reads the `forest_<variant>.meta.json` sidecar (the shape contract),
+//! 2. parses the HLO text and compiles it once on the PJRT CPU client,
+//! 3. packs a trained [`RandomForest`] into the artifact's dense
+//!    complete-tree tensor layout ([`packing`]),
+//! 4. executes batched classification on the request path.
+//!
+//! Python never runs at request time: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod packing;
+
+pub use packing::PackedForest;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Shape contract of one compiled artifact variant (from `meta.json`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantMeta {
+    /// Variant name (`small`, `base`, `wide`).
+    pub name: String,
+    /// Fixed batch size of the executable.
+    pub batch: usize,
+    /// Tree-slot count.
+    pub trees: usize,
+    /// Complete-tree depth.
+    pub depth: usize,
+    /// Feature-column count.
+    pub features: usize,
+    /// Class-slot count.
+    pub classes: usize,
+    /// Internal node slots per tree (`2^depth - 1`).
+    pub n_nodes: usize,
+    /// Leaf slots per tree (`2^depth`).
+    pub n_leaves: usize,
+    /// HLO text file name within the artifacts directory.
+    pub hlo_file: String,
+}
+
+impl VariantMeta {
+    /// Parse a `meta.json` document.
+    pub fn from_json(v: &Json) -> Result<VariantMeta> {
+        let geti = |k: &str| {
+            v.get_i64(k)
+                .map(|x| x as usize)
+                .ok_or_else(|| Error::parse(format!("meta.json: missing field '{k}'")))
+        };
+        let meta = VariantMeta {
+            name: v
+                .get_str("name")
+                .ok_or_else(|| Error::parse("meta.json: missing name"))?
+                .to_string(),
+            batch: geti("batch")?,
+            trees: geti("trees")?,
+            depth: geti("depth")?,
+            features: geti("features")?,
+            classes: geti("classes")?,
+            n_nodes: geti("n_nodes")?,
+            n_leaves: geti("n_leaves")?,
+            hlo_file: v
+                .get_str("hlo_file")
+                .ok_or_else(|| Error::parse("meta.json: missing hlo_file"))?
+                .to_string(),
+        };
+        if meta.n_nodes != (1 << meta.depth) - 1 || meta.n_leaves != 1 << meta.depth {
+            return Err(Error::parse(
+                "meta.json: node/leaf counts inconsistent with depth",
+            ));
+        }
+        Ok(meta)
+    }
+
+    /// Load `forest_<variant>.meta.json` from an artifacts directory.
+    pub fn load(artifacts_dir: &str, variant: &str) -> Result<VariantMeta> {
+        let path = Path::new(artifacts_dir).join(format!("forest_{variant}.meta.json"));
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Names of all variants listed in `artifacts/index.json`.
+    pub fn available(artifacts_dir: &str) -> Result<Vec<String>> {
+        let path = Path::new(artifacts_dir).join("index.json");
+        let text = std::fs::read_to_string(path)?;
+        let v = Json::parse(&text)?;
+        v.get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("index.json: missing variants"))?
+            .iter()
+            .map(|m| {
+                m.get_str("name")
+                    .map(String::from)
+                    .ok_or_else(|| Error::parse("index.json: variant without name"))
+            })
+            .collect()
+    }
+}
+
+/// A compiled PJRT executable for one artifact variant.
+///
+/// Not `Send`: PJRT client handles live on one thread. The serving layer
+/// owns engines on dedicated threads (see `serve::xla_backend`).
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// The artifact's shape contract.
+    pub meta: VariantMeta,
+}
+
+impl XlaEngine {
+    /// Load + compile `forest_<variant>` from the artifacts directory.
+    pub fn load(artifacts_dir: &str, variant: &str) -> Result<XlaEngine> {
+        let meta = VariantMeta::load(artifacts_dir, variant)?;
+        let hlo_path = Path::new(artifacts_dir).join(&meta.hlo_file);
+        let client = xla::PjRtClient::cpu()?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| Error::Runtime("non-UTF-8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        crate::log_info!(
+            "runtime: compiled variant '{variant}' (B={} T={} D={}) on {}",
+            meta.batch,
+            meta.trees,
+            meta.depth,
+            client.platform_name()
+        );
+        Ok(XlaEngine { client, exe, meta })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute one fixed-size batch against a packed forest.
+    ///
+    /// `x` must hold exactly `batch × features` values (row-major). Returns
+    /// `(votes, preds)` with `votes` of length `batch × classes`.
+    pub fn run(&self, x: &[f32], forest: &PackedForest) -> Result<(Vec<i32>, Vec<i32>)> {
+        let m = &self.meta;
+        if x.len() != m.batch * m.features {
+            return Err(Error::invalid(format!(
+                "batch input has {} values, artifact expects {}×{}",
+                x.len(),
+                m.batch,
+                m.features
+            )));
+        }
+        forest.check_compatible(m)?;
+        let x_lit = xla::Literal::vec1(x).reshape(&[m.batch as i64, m.features as i64])?;
+        let feat = xla::Literal::vec1(&forest.feat)
+            .reshape(&[m.trees as i64, m.n_nodes as i64])?;
+        let thr = xla::Literal::vec1(&forest.thr)
+            .reshape(&[m.trees as i64, m.n_nodes as i64])?;
+        let leaf = xla::Literal::vec1(&forest.leaf)
+            .reshape(&[m.trees as i64, m.n_leaves as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[x_lit, feat, thr, leaf])?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            return Err(Error::Runtime(format!(
+                "artifact returned {}-tuple, expected (votes, pred)",
+                outs.len()
+            )));
+        }
+        let votes = outs[0].to_vec::<i32>()?;
+        let preds = outs[1].to_vec::<i32>()?;
+        Ok((votes, preds))
+    }
+
+    /// Classify up to `batch` rows by padding the tail with the first row
+    /// (fixed-shape executable); returns one class per input row.
+    pub fn classify_rows(&self, rows: &[Vec<f32>], forest: &PackedForest) -> Result<Vec<u32>> {
+        let m = &self.meta;
+        if rows.is_empty() || rows.len() > m.batch {
+            return Err(Error::invalid(format!(
+                "row count {} not in 1..={}",
+                rows.len(),
+                m.batch
+            )));
+        }
+        let mut x = vec![0f32; m.batch * m.features];
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() > m.features {
+                return Err(Error::SchemaMismatch(format!(
+                    "row has {} features, artifact holds {}",
+                    row.len(),
+                    m.features
+                )));
+            }
+            x[i * m.features..i * m.features + row.len()].copy_from_slice(row);
+        }
+        // pad remaining slots with row 0 (results discarded)
+        for i in rows.len()..m.batch {
+            let (head, tail) = x.split_at_mut(i * m.features);
+            tail[..m.features].copy_from_slice(&head[..m.features]);
+        }
+        let (_, preds) = self.run(&x, forest)?;
+        Ok(preds[..rows.len()].iter().map(|&p| p as u32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_json_roundtrip_and_validation() {
+        let good = r#"{"name":"base","batch":64,"trees":128,"depth":8,"features":16,
+            "classes":8,"n_nodes":255,"n_leaves":256,"hlo_file":"forest_base.hlo.txt"}"#;
+        let m = VariantMeta::from_json(&Json::parse(good).unwrap()).unwrap();
+        assert_eq!(m.trees, 128);
+        assert_eq!(m.n_leaves, 256);
+        let bad = good.replace("255", "100");
+        assert!(VariantMeta::from_json(&Json::parse(&bad).unwrap()).is_err());
+        let missing = r#"{"name":"x"}"#;
+        assert!(VariantMeta::from_json(&Json::parse(missing).unwrap()).is_err());
+    }
+
+    #[test]
+    fn load_reports_missing_artifacts_helpfully() {
+        let err = VariantMeta::load("/nonexistent-dir", "base").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Forest → dense tensor packing for the XLA artifact.
+//!
+//! The compiled executable evaluates a **complete-tree layout**: every tree
+//! occupies `2^D - 1` internal slots (`feat`, `thr`) and `2^D` leaf slots
+//! (`leaf`), with node `i`'s children at `2i+1` / `2i+2`. The packer embeds
+//! arbitrary (≤ depth-D) CART trees into that layout:
+//!
+//! - internal tree nodes map to their slot's feature/threshold;
+//! - when a tree leaf sits above depth `D`, the remaining subtree is filled
+//!   with *dummy* nodes (`feature 0`, `threshold +∞` — always routes left,
+//!   see the L1 kernel contract) and every leaf slot below inherits the
+//!   class, so the padded tree is semantically identical;
+//! - forests smaller than the artifact's tree count are **replicated
+//!   uniformly** (`k` copies of every tree scales all vote counts by `k`,
+//!   preserving the majority vote and its tie-breaks exactly), which
+//!   requires the slot count to be a multiple of the forest size;
+//! - deeper trees are rejected ([`Error::SchemaMismatch`]) — the serving
+//!   router then falls back to the native DD backend rather than silently
+//!   changing semantics (DESIGN.md §7).
+
+use super::VariantMeta;
+use crate::error::{Error, Result};
+use crate::forest::RandomForest;
+use crate::tree::{DecisionTree, TreeNode};
+
+/// A forest packed into the artifact tensor layout.
+#[derive(Debug, Clone)]
+pub struct PackedForest {
+    /// `[trees × n_nodes]` feature indices.
+    pub feat: Vec<i32>,
+    /// `[trees × n_nodes]` thresholds (`+∞` on dummy nodes).
+    pub thr: Vec<f32>,
+    /// `[trees × n_leaves]` leaf class indices.
+    pub leaf: Vec<i32>,
+    /// Tree-slot count (matches the artifact).
+    pub trees: usize,
+    /// Internal slots per tree.
+    pub n_nodes: usize,
+    /// Leaf slots per tree.
+    pub n_leaves: usize,
+    /// Replication factor applied (`slots / forest size`).
+    pub replication: usize,
+}
+
+impl PackedForest {
+    /// Pack `forest` for the artifact described by `meta`.
+    pub fn pack(forest: &RandomForest, meta: &VariantMeta) -> Result<PackedForest> {
+        let n = forest.n_trees();
+        if n == 0 {
+            return Err(Error::invalid("cannot pack an empty forest"));
+        }
+        if n > meta.trees {
+            return Err(Error::SchemaMismatch(format!(
+                "forest has {n} trees, artifact holds {}",
+                meta.trees
+            )));
+        }
+        if meta.trees % n != 0 {
+            return Err(Error::SchemaMismatch(format!(
+                "artifact tree count {} is not a multiple of forest size {n}; \
+                 uniform replication would distort the majority vote",
+                meta.trees
+            )));
+        }
+        if forest.n_classes() > meta.classes {
+            return Err(Error::SchemaMismatch(format!(
+                "forest has {} classes, artifact holds {}",
+                forest.n_classes(),
+                meta.classes
+            )));
+        }
+        if forest.schema.n_features() > meta.features {
+            return Err(Error::SchemaMismatch(format!(
+                "forest has {} features, artifact holds {}",
+                forest.schema.n_features(),
+                meta.features
+            )));
+        }
+        for (i, tree) in forest.trees.iter().enumerate() {
+            if tree.depth() > meta.depth {
+                return Err(Error::SchemaMismatch(format!(
+                    "tree {i} has depth {} > artifact depth {} — \
+                     retrain with --max-depth {} or use the DD backend",
+                    tree.depth(),
+                    meta.depth,
+                    meta.depth
+                )));
+            }
+        }
+        let replication = meta.trees / n;
+        let mut packed = PackedForest {
+            feat: vec![0; meta.trees * meta.n_nodes],
+            thr: vec![f32::INFINITY; meta.trees * meta.n_nodes],
+            leaf: vec![0; meta.trees * meta.n_leaves],
+            trees: meta.trees,
+            n_nodes: meta.n_nodes,
+            n_leaves: meta.n_leaves,
+            replication,
+        };
+        for slot in 0..meta.trees {
+            let tree = &forest.trees[slot % n];
+            packed.pack_tree(slot, tree, meta.depth);
+        }
+        Ok(packed)
+    }
+
+    fn pack_tree(&mut self, slot: usize, tree: &DecisionTree, depth: usize) {
+        let feat_base = slot * self.n_nodes;
+        let leaf_base = slot * self.n_leaves;
+        // (tree node, layout position, level); layout position is the global
+        // complete-tree index: children of i are 2i+1 / 2i+2.
+        let mut stack: Vec<(Option<u32>, usize, usize, i32)> = vec![(Some(0), 0, 0, 0)];
+        while let Some((node, pos, level, inherited)) = stack.pop() {
+            let class_here = match node {
+                Some(idx) => match tree.nodes[idx as usize] {
+                    TreeNode::Split {
+                        feature,
+                        threshold,
+                        left,
+                        right,
+                    } => {
+                        debug_assert!(level < depth);
+                        self.feat[feat_base + pos] = feature as i32;
+                        self.thr[feat_base + pos] = threshold;
+                        stack.push((Some(left), 2 * pos + 1, level + 1, 0));
+                        stack.push((Some(right), 2 * pos + 2, level + 1, 0));
+                        continue;
+                    }
+                    TreeNode::Leaf { class } => class as i32,
+                },
+                None => inherited,
+            };
+            if level == depth {
+                self.leaf[leaf_base + (pos - (self.n_leaves - 1))] = class_here;
+            } else {
+                // dummy always-left node; both subtrees inherit the class so
+                // the reachable (leftmost) leaf — and all others — carry it.
+                self.feat[feat_base + pos] = 0;
+                self.thr[feat_base + pos] = f32::INFINITY;
+                stack.push((None, 2 * pos + 1, level + 1, class_here));
+                stack.push((None, 2 * pos + 2, level + 1, class_here));
+            }
+        }
+    }
+
+    /// Validate against an artifact's shape contract.
+    pub fn check_compatible(&self, meta: &VariantMeta) -> Result<()> {
+        if self.trees != meta.trees || self.n_nodes != meta.n_nodes || self.n_leaves != meta.n_leaves
+        {
+            return Err(Error::SchemaMismatch(format!(
+                "packed forest ({}×{}/{}) does not match artifact ({}×{}/{})",
+                self.trees, self.n_nodes, self.n_leaves, meta.trees, meta.n_nodes, meta.n_leaves
+            )));
+        }
+        Ok(())
+    }
+
+    /// Reference evaluation of the packed tensors (pure Rust mirror of the
+    /// L1 kernel; used to validate packing independently of PJRT).
+    pub fn eval_row(&self, x: &[f32], depth: usize, n_classes: usize) -> Vec<u32> {
+        let mut votes = vec![0u32; n_classes];
+        for t in 0..self.trees {
+            let mut pos = 0usize;
+            for _ in 0..depth {
+                let f = self.feat[t * self.n_nodes + pos] as usize;
+                let thr = self.thr[t * self.n_nodes + pos];
+                let right = !(x.get(f).copied().unwrap_or(0.0) < thr);
+                pos = 2 * pos + 1 + usize::from(right);
+            }
+            let class = self.leaf[t * self.n_leaves + (pos - (self.n_leaves - 1))];
+            votes[class as usize] += 1;
+        }
+        votes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn meta(trees: usize, depth: usize) -> VariantMeta {
+        VariantMeta {
+            name: "test".into(),
+            batch: 4,
+            trees,
+            depth,
+            features: 16,
+            classes: 8,
+            n_nodes: (1 << depth) - 1,
+            n_leaves: 1 << depth,
+            hlo_file: "unused".into(),
+        }
+    }
+
+    #[test]
+    fn packed_votes_match_forest_votes() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default()
+            .trees(16)
+            .max_depth(6)
+            .seed(3)
+            .fit(&ds);
+        let m = meta(16, 6);
+        let packed = PackedForest::pack(&forest, &m).unwrap();
+        assert_eq!(packed.replication, 1);
+        for i in 0..ds.n_rows() {
+            let x = ds.row(i);
+            let votes = packed.eval_row(x, m.depth, forest.n_classes());
+            assert_eq!(votes, forest.votes(x), "row {i}");
+        }
+    }
+
+    #[test]
+    fn replication_preserves_majority_exactly() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default()
+            .trees(8)
+            .max_depth(5)
+            .seed(9)
+            .fit(&ds);
+        let m = meta(32, 5); // 4x replication
+        let packed = PackedForest::pack(&forest, &m).unwrap();
+        assert_eq!(packed.replication, 4);
+        for i in (0..ds.n_rows()).step_by(7) {
+            let x = ds.row(i);
+            let votes = packed.eval_row(x, m.depth, forest.n_classes());
+            let base = forest.votes(x);
+            let scaled: Vec<u32> = base.iter().map(|v| v * 4).collect();
+            assert_eq!(votes, scaled, "row {i}");
+        }
+    }
+
+    #[test]
+    fn rejects_incompatible_forests() {
+        let ds = datasets::iris();
+        let deep = ForestLearner::default().trees(4).seed(0).fit(&ds);
+        // unlimited depth almost surely exceeds 2
+        let err = PackedForest::pack(&deep, &meta(4, 2)).unwrap_err();
+        assert!(err.to_string().contains("depth"));
+        let f8 = ForestLearner::default().trees(8).max_depth(3).seed(0).fit(&ds);
+        // 12 % 8 != 0 -> replication would distort votes
+        assert!(PackedForest::pack(&f8, &meta(12, 3)).is_err());
+        // too many trees
+        assert!(PackedForest::pack(&f8, &meta(4, 3)).is_err());
+    }
+
+    #[test]
+    fn shallow_leaf_padding_is_semantically_inert() {
+        // single-leaf tree (pure class 2) padded to depth 3
+        let ds = datasets::iris();
+        let rows: Vec<usize> = (100..150).collect(); // virginica only
+        let pure = ds.select(&rows);
+        let forest = ForestLearner::default().trees(2).max_depth(3).seed(1).fit(&pure);
+        let m = meta(2, 3);
+        let packed = PackedForest::pack(&forest, &m).unwrap();
+        for i in 0..10 {
+            let votes = packed.eval_row(ds.row(i), 3, pure.n_classes());
+            assert_eq!(votes.iter().sum::<u32>(), 2);
+            assert_eq!(votes[forest.predict(ds.row(i)) as usize], 2);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! Dynamic batcher: groups individual requests into fixed-deadline batches.
+//!
+//! Classic serving pattern (vLLM-style continuous batching simplified to
+//! the stateless-classification case): the first job opens a batch window;
+//! the batch is dispatched when it reaches `max_batch` items or `max_wait`
+//! elapses, whichever comes first. Dispatch happens on the batcher thread;
+//! replies travel back through per-job channels.
+
+use crate::error::{Error, Result};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Maximum items per dispatched batch.
+    pub max_batch: usize,
+    /// Maximum time the first item of a batch waits.
+    pub max_wait: Duration,
+    /// Bounded queue capacity (backpressure: submits fail when full).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// Handle to a running batcher.
+pub struct Batcher<J: Send + 'static> {
+    tx: SyncSender<Msg<J>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+enum Msg<J> {
+    Job(J),
+    Shutdown,
+}
+
+impl<J: Send + 'static> Batcher<J> {
+    /// Start a batcher thread; `process` receives each dispatched batch.
+    pub fn start(
+        name: &str,
+        cfg: BatcherConfig,
+        mut process: impl FnMut(Vec<J>) + Send + 'static,
+    ) -> Batcher<J> {
+        assert!(cfg.max_batch > 0, "max_batch must be positive");
+        let (tx, rx): (SyncSender<Msg<J>>, Receiver<Msg<J>>) = mpsc::sync_channel(cfg.queue_cap);
+        let thread_name = format!("batcher-{name}");
+        let handle = std::thread::Builder::new()
+            .name(thread_name)
+            .spawn(move || {
+                loop {
+                    // Wait for the first job of the next batch.
+                    let first = match rx.recv() {
+                        Ok(Msg::Job(j)) => j,
+                        Ok(Msg::Shutdown) | Err(_) => return,
+                    };
+                    let mut batch = vec![first];
+                    let deadline = Instant::now() + cfg.max_wait;
+                    while batch.len() < cfg.max_batch {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(Msg::Job(j)) => batch.push(j),
+                            Ok(Msg::Shutdown) => {
+                                process(batch);
+                                return;
+                            }
+                            Err(RecvTimeoutError::Timeout) => break,
+                            Err(RecvTimeoutError::Disconnected) => {
+                                process(batch);
+                                return;
+                            }
+                        }
+                    }
+                    process(batch);
+                }
+            })
+            .expect("failed to spawn batcher thread");
+        Batcher {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    /// Submit a job; fails fast when the queue is full (backpressure) or
+    /// the batcher has shut down.
+    pub fn submit(&self, job: J) -> Result<()> {
+        match self.tx.try_send(Msg::Job(job)) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(Error::Serve(
+                "batcher queue full — shed load or raise queue_cap".into(),
+            )),
+            Err(TrySendError::Disconnected(_)) => {
+                Err(Error::Serve("batcher has shut down".into()))
+            }
+        }
+    }
+
+    /// Stop the batcher thread (processes whatever is already queued).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<J: Send + 'static> Drop for Batcher<J> {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    fn collect_batches(cfg: BatcherConfig) -> (Batcher<u32>, Arc<Mutex<Vec<Vec<u32>>>>) {
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let s = seen.clone();
+        let b = Batcher::start("test", cfg, move |batch| {
+            s.lock().unwrap().push(batch);
+        });
+        (b, seen)
+    }
+
+    #[test]
+    fn batches_fill_to_max() {
+        let (b, seen) = collect_batches(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(200),
+            queue_cap: 64,
+        });
+        for i in 0..8 {
+            b.submit(i).unwrap();
+        }
+        // give the batcher time to form both batches
+        std::thread::sleep(Duration::from_millis(50));
+        b.shutdown();
+        let batches = seen.lock().unwrap();
+        let total: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(total, 8);
+        assert!(batches.iter().all(|b| b.len() <= 4));
+        assert_eq!(batches[0].len(), 4, "first batch should fill to max");
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (b, seen) = collect_batches(BatcherConfig {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+            queue_cap: 64,
+        });
+        b.submit(1).unwrap();
+        b.submit(2).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        {
+            let batches = seen.lock().unwrap();
+            assert_eq!(batches.len(), 1, "deadline must flush without more input");
+            assert_eq!(batches[0], vec![1, 2]);
+        }
+        b.shutdown();
+    }
+
+    #[test]
+    fn order_is_preserved_within_batches() {
+        let (b, seen) = collect_batches(BatcherConfig {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(30),
+            queue_cap: 1024,
+        });
+        for i in 0..100 {
+            b.submit(i).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(100));
+        b.shutdown();
+        let batches = seen.lock().unwrap();
+        let flat: Vec<u32> = batches.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn backpressure_when_queue_full() {
+        // processor blocks forever -> queue fills -> submit errors
+        let gate = Arc::new(Mutex::new(()));
+        let guard = gate.lock().unwrap();
+        let g = gate.clone();
+        let b = Batcher::start(
+            "stuck",
+            BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 2,
+            },
+            move |_| {
+                let _guard = g.lock().unwrap();
+            },
+        );
+        // first submit is consumed into a batch and blocks in process();
+        // the queue then holds at most queue_cap more.
+        let mut errors = 0;
+        for i in 0..10 {
+            if b.submit(i).is_err() {
+                errors += 1;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(errors > 0, "expected backpressure errors");
+        drop(guard);
+        b.shutdown();
+    }
+
+    #[test]
+    fn shutdown_processes_queued_jobs() {
+        let (b, seen) = collect_batches(BatcherConfig {
+            max_batch: 10,
+            max_wait: Duration::from_secs(10), // deadline never fires
+            queue_cap: 64,
+        });
+        b.submit(7).unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+        b.shutdown(); // must flush the pending partial batch
+        let batches = seen.lock().unwrap();
+        assert_eq!(*batches, vec![vec![7]]);
+    }
+}

@@ -1,0 +1,178 @@
+//! Server configuration: JSON config file + programmatic defaults.
+
+use crate::error::{Error, Result};
+use crate::serve::BackendKind;
+use crate::util::json::{self, Json};
+
+/// Full configuration of `forest-add serve`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks a free port).
+    pub addr: String,
+    /// Built-in dataset to train on (or a CSV/ARFF path).
+    pub dataset: String,
+    /// Forest size.
+    pub trees: usize,
+    /// Per-tree depth cap (`0` = unlimited; the XLA path needs a cap that
+    /// fits the artifact depth).
+    pub max_depth: usize,
+    /// Training seed.
+    pub seed: u64,
+    /// Default backend for untagged requests.
+    pub default_backend: BackendKind,
+    /// Dynamic batcher: max items per batch.
+    pub batch_max: usize,
+    /// Dynamic batcher: max wait in milliseconds.
+    pub batch_wait_ms: u64,
+    /// HTTP worker threads.
+    pub http_workers: usize,
+    /// Artifacts directory (XLA path).
+    pub artifacts_dir: String,
+    /// Artifact variant to load.
+    pub variant: String,
+    /// Load the XLA backend at startup.
+    pub enable_xla: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".into(),
+            dataset: "iris".into(),
+            trees: 128,
+            max_depth: 8,
+            seed: 42,
+            default_backend: BackendKind::Dd,
+            batch_max: 64,
+            batch_wait_ms: 2,
+            http_workers: 4,
+            artifacts_dir: "artifacts".into(),
+            variant: "base".into(),
+            enable_xla: true,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Parse from a JSON document; absent fields keep their defaults.
+    pub fn from_json(v: &Json) -> Result<ServeConfig> {
+        let mut cfg = ServeConfig::default();
+        if let Some(s) = v.get_str("addr") {
+            cfg.addr = s.to_string();
+        }
+        if let Some(s) = v.get_str("dataset") {
+            cfg.dataset = s.to_string();
+        }
+        if let Some(n) = v.get_i64("trees") {
+            cfg.trees = n as usize;
+        }
+        if let Some(n) = v.get_i64("max_depth") {
+            cfg.max_depth = n as usize;
+        }
+        if let Some(n) = v.get_i64("seed") {
+            cfg.seed = n as u64;
+        }
+        if let Some(s) = v.get_str("default_backend") {
+            cfg.default_backend = BackendKind::parse(s)?;
+        }
+        if let Some(n) = v.get_i64("batch_max") {
+            cfg.batch_max = n as usize;
+        }
+        if let Some(n) = v.get_i64("batch_wait_ms") {
+            cfg.batch_wait_ms = n as u64;
+        }
+        if let Some(n) = v.get_i64("http_workers") {
+            cfg.http_workers = n as usize;
+        }
+        if let Some(s) = v.get_str("artifacts_dir") {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = v.get_str("variant") {
+            cfg.variant = s.to_string();
+        }
+        if let Some(b) = v.get("enable_xla").and_then(Json::as_bool) {
+            cfg.enable_xla = b;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON file.
+    pub fn load(path: &str) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Sanity-check field combinations.
+    pub fn validate(&self) -> Result<()> {
+        if self.trees == 0 {
+            return Err(Error::invalid("trees must be positive"));
+        }
+        if self.batch_max == 0 {
+            return Err(Error::invalid("batch_max must be positive"));
+        }
+        if self.http_workers == 0 {
+            return Err(Error::invalid("http_workers must be positive"));
+        }
+        Ok(())
+    }
+
+    /// Render to JSON (written by `forest-add serve --dump-config`).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("addr", json::s(self.addr.clone())),
+            ("dataset", json::s(self.dataset.clone())),
+            ("trees", json::num(self.trees as f64)),
+            ("max_depth", json::num(self.max_depth as f64)),
+            ("seed", json::num(self.seed as f64)),
+            ("default_backend", json::s(self.default_backend.name())),
+            ("batch_max", json::num(self.batch_max as f64)),
+            ("batch_wait_ms", json::num(self.batch_wait_ms as f64)),
+            ("http_workers", json::num(self.http_workers as f64)),
+            ("artifacts_dir", json::s(self.artifacts_dir.clone())),
+            ("variant", json::s(self.variant.clone())),
+            ("enable_xla", Json::Bool(self.enable_xla)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ServeConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ServeConfig {
+            trees: 500,
+            default_backend: BackendKind::Xla,
+            enable_xla: false,
+            ..Default::default()
+        };
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trees, 500);
+        assert_eq!(back.default_backend, BackendKind::Xla);
+        assert!(!back.enable_xla);
+    }
+
+    #[test]
+    fn partial_json_keeps_defaults() {
+        let cfg = ServeConfig::from_json(&Json::parse(r#"{"trees": 9}"#).unwrap()).unwrap();
+        assert_eq!(cfg.trees, 9);
+        assert_eq!(cfg.dataset, "iris");
+        assert_eq!(cfg.http_workers, 4);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(ServeConfig::from_json(&Json::parse(r#"{"trees": 0}"#).unwrap()).is_err());
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"default_backend": "gpu"}"#).unwrap())
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,248 @@
+//! Minimal HTTP/1.1 front-end over `std::net` (no async runtime is
+//! available offline; a thread-pool accept loop serves the same purpose
+//! for this request shape).
+//!
+//! Endpoints:
+//! - `GET  /healthz`          → `{"ok": true}`
+//! - `GET  /metrics`          → server metrics snapshot
+//! - `GET  /model`            → model/bundle description
+//! - `POST /classify`         → `{"features": [...], "backend": "dd"?}`
+//! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?}`
+
+use crate::error::{Error, Result};
+use crate::serve::router::Router;
+use crate::serve::{BackendKind, ClassifyRequest};
+use crate::util::json::{self, Json};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+/// Maximum accepted request body (1 MiB — batches of a few thousand rows).
+const MAX_BODY: usize = 1 << 20;
+
+/// Parsed request.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| Error::Serve("empty request line".into()))?
+        .to_string();
+    let path = parts
+        .next()
+        .ok_or_else(|| Error::Serve("request line missing path".into()))?
+        .to_string();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Serve("bad content-length".into()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(Error::Serve(format!("body too large ({content_length} bytes)")));
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Request { method, path, body })
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
+    let body = body.to_string_compact();
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        _ => "Internal Server Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Handle one connection: parse, route, respond. Errors become JSON
+/// error bodies; connection-level failures are logged and dropped.
+pub fn handle_connection(mut stream: TcpStream, router: &Arc<Router>) {
+    let _ = stream.set_nodelay(true);
+    let response = match read_request(&mut stream) {
+        Ok(req) => route(&req, router),
+        Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
+    };
+    if let Err(e) = write_response(&mut stream, response.0, &response.1) {
+        crate::log_debug!("http: failed to write response: {e}");
+    }
+}
+
+fn route(req: &Request, router: &Arc<Router>) -> (u16, Json) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/metrics") => (200, router.metrics().to_json()),
+        ("GET", "/model") => (200, model_info(router)),
+        ("POST", "/classify") => match classify(req, router) {
+            Ok(j) => (200, j),
+            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
+        },
+        ("POST", "/classify_batch") => match classify_batch(req, router) {
+            Ok(j) => (200, j),
+            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
+        },
+        ("GET", _) | ("POST", _) => (
+            404,
+            json::obj(vec![("error", json::s(format!("no such path {}", req.path)))]),
+        ),
+        _ => (
+            405,
+            json::obj(vec![("error", json::s("method not allowed"))]),
+        ),
+    }
+}
+
+fn model_info(router: &Arc<Router>) -> Json {
+    let b = router.bundle();
+    let size = b.dd.size();
+    json::obj(vec![
+        ("dataset", json::s(b.forest.schema.classes.join("/"))),
+        ("trees", json::num(b.forest.n_trees() as f64)),
+        ("forest_nodes", json::num(b.forest.n_nodes() as f64)),
+        ("dd_nodes", json::num(size.total() as f64)),
+        ("dd_label", json::s(b.dd.label())),
+        (
+            "classes",
+            Json::Arr(
+                b.forest
+                    .schema
+                    .classes
+                    .iter()
+                    .map(|c| json::s(c.clone()))
+                    .collect(),
+            ),
+        ),
+        ("default_backend", json::s(router.default_backend().name())),
+        ("xla_loaded", Json::Bool(router.has_xla())),
+    ])
+}
+
+fn parse_body(body: &[u8]) -> Result<Json> {
+    let text = std::str::from_utf8(body).map_err(|_| Error::Serve("body is not UTF-8".into()))?;
+    Json::parse(text)
+}
+
+fn parse_backend(v: &Json) -> Result<Option<BackendKind>> {
+    match v.get_str("backend") {
+        Some(s) => Ok(Some(BackendKind::parse(s)?)),
+        None => Ok(None),
+    }
+}
+
+fn parse_row(v: &Json) -> Result<Vec<f32>> {
+    v.as_arr()
+        .ok_or_else(|| Error::Serve("features must be an array".into()))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|f| f as f32)
+                .ok_or_else(|| Error::Serve("features must be numbers".into()))
+        })
+        .collect()
+}
+
+fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
+    let v = parse_body(&req.body)?;
+    let features = parse_row(
+        v.get("features")
+            .ok_or_else(|| Error::Serve("missing 'features'".into()))?,
+    )?;
+    let backend = parse_backend(&v)?;
+    let resp = router.classify(&ClassifyRequest { features, backend })?;
+    Ok(json::obj(vec![
+        ("class", json::num(resp.class as f64)),
+        ("label", json::s(resp.label)),
+        ("backend", json::s(resp.backend.name())),
+        (
+            "steps",
+            resp.steps.map(|s| json::num(s as f64)).unwrap_or(Json::Null),
+        ),
+        ("latency_us", json::num(resp.latency_us as f64)),
+    ]))
+}
+
+fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
+    let v = parse_body(&req.body)?;
+    let rows: Vec<Vec<f32>> = v
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Serve("missing 'rows' array".into()))?
+        .iter()
+        .map(parse_row)
+        .collect::<Result<_>>()?;
+    if rows.is_empty() {
+        return Err(Error::Serve("empty batch".into()));
+    }
+    let backend = parse_backend(&v)?;
+    let classes = router.classify_batch(&rows, backend)?;
+    let bundle = router.bundle();
+    Ok(json::obj(vec![
+        (
+            "classes",
+            Json::Arr(classes.iter().map(|&c| json::num(c as f64)).collect()),
+        ),
+        (
+            "labels",
+            Json::Arr(classes.iter().map(|&c| json::s(bundle.label(c))).collect()),
+        ),
+    ]))
+}
+
+/// Tiny blocking HTTP client for tests, examples and the bench harness.
+pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
+    let mut stream = TcpStream::connect(addr)?;
+    let body_text = body.map(|b| b.to_string_compact()).unwrap_or_default();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body_text}",
+        body_text.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut buf = Vec::new();
+    BufReader::new(stream).read_to_end(&mut buf)?;
+    let text = String::from_utf8_lossy(&buf);
+    let mut lines = text.split("\r\n");
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| Error::Serve("malformed response".into()))?;
+    let payload = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .unwrap_or("");
+    let json = if payload.trim().is_empty() {
+        Json::Null
+    } else {
+        Json::parse(payload.trim())?
+    };
+    Ok((status, json))
+}

@@ -1,0 +1,242 @@
+//! Server metrics: lock-free counters and log₂ latency histograms.
+
+use crate::serve::BackendKind;
+use crate::util::json::{self, Json};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Number of log₂ microsecond buckets (`2^0 .. 2^N` µs, last = overflow).
+const BUCKETS: usize = 24;
+
+/// A latency histogram with power-of-two microsecond buckets.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Histogram {
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of the
+    /// bucket containing the q-th observation).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// JSON snapshot.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("count", json::num(self.count() as f64)),
+            ("mean_us", json::num(self.mean_us())),
+            ("p50_us", json::num(self.quantile_us(0.5) as f64)),
+            ("p99_us", json::num(self.quantile_us(0.99) as f64)),
+            (
+                "max_us",
+                json::num(self.max_us.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+}
+
+/// Aggregated server metrics.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    started: Instant,
+    /// Total requests accepted.
+    pub requests: AtomicU64,
+    /// Requests that failed.
+    pub errors: AtomicU64,
+    /// Per-backend latency histograms (indexed by `BackendKind`).
+    forest: Histogram,
+    dd: Histogram,
+    xla: Histogram,
+    /// Dynamic batcher: batches dispatched and total batched items.
+    pub batches: AtomicU64,
+    /// Total items across all dispatched batches.
+    pub batched_items: AtomicU64,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics {
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            forest: Histogram::default(),
+            dd: Histogram::default(),
+            xla: Histogram::default(),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+        }
+    }
+}
+
+impl ServerMetrics {
+    /// The histogram for a backend.
+    pub fn backend(&self, kind: BackendKind) -> &Histogram {
+        match kind {
+            BackendKind::Forest => &self.forest,
+            BackendKind::Dd => &self.dd,
+            BackendKind::Xla => &self.xla,
+        }
+    }
+
+    /// Record a served request.
+    pub fn observe(&self, kind: BackendKind, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.backend(kind).observe(latency);
+    }
+
+    /// Record a failed request.
+    pub fn observe_error(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a dispatched batch of `n` items.
+    pub fn observe_batch(&self, n: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Mean items per dispatched batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    /// Full JSON snapshot (the `/metrics` endpoint body).
+    pub fn to_json(&self) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let requests = self.requests.load(Ordering::Relaxed);
+        json::obj(vec![
+            ("uptime_s", json::num(uptime)),
+            ("requests", json::num(requests as f64)),
+            (
+                "errors",
+                json::num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "throughput_rps",
+                json::num(if uptime > 0.0 {
+                    requests as f64 / uptime
+                } else {
+                    0.0
+                }),
+            ),
+            ("mean_batch_size", json::num(self.mean_batch_size())),
+            (
+                "backends",
+                json::obj(vec![
+                    ("forest", self.forest.to_json()),
+                    ("dd", self.dd.to_json()),
+                    ("xla", self.xla.to_json()),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_quantiles_monotone() {
+        let h = Histogram::default();
+        for us in [1u64, 10, 100, 1000, 10_000] {
+            h.observe(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 2222.2).abs() < 1.0);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.quantile_us(0.99) >= 8192);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0);
+    }
+
+    #[test]
+    fn metrics_snapshot_shape() {
+        let m = ServerMetrics::default();
+        m.observe(BackendKind::Dd, Duration::from_micros(50));
+        m.observe(BackendKind::Xla, Duration::from_micros(500));
+        m.observe_error();
+        m.observe_batch(16);
+        m.observe_batch(8);
+        let j = m.to_json();
+        assert_eq!(j.get_i64("requests"), Some(3));
+        assert_eq!(j.get_i64("errors"), Some(1));
+        assert_eq!(
+            j.get("backends").unwrap().get("dd").unwrap().get_i64("count"),
+            Some(1)
+        );
+        assert_eq!(j.get("mean_batch_size").unwrap().as_f64(), Some(12.0));
+    }
+
+    #[test]
+    fn concurrent_observation_is_consistent() {
+        let m = std::sync::Arc::new(ServerMetrics::default());
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let m = m.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.observe(BackendKind::Dd, Duration::from_micros(7));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.requests.load(Ordering::Relaxed), 8000);
+        assert_eq!(m.backend(BackendKind::Dd).count(), 8000);
+    }
+}

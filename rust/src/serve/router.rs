@@ -1,0 +1,279 @@
+//! Request router: dispatches classification requests across backends.
+//!
+//! Single requests on the `xla` backend pass through the dynamic batcher,
+//! which coalesces concurrent traffic into PJRT executions; `forest`/`dd`
+//! requests are served inline (they are single-row walks with no batching
+//! benefit). Explicit batch requests bypass the batcher and chunk straight
+//! into the engine.
+
+use crate::error::{Error, Result};
+use crate::serve::batcher::{Batcher, BatcherConfig};
+use crate::serve::metrics::ServerMetrics;
+use crate::serve::xla_backend::XlaBackend;
+use crate::serve::{BackendKind, ClassifyRequest, ClassifyResponse, ModelBundle};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+type XlaJob = (Vec<f32>, Sender<Result<u32>>);
+
+/// The serving router (shared across HTTP workers).
+pub struct Router {
+    bundle: Arc<ModelBundle>,
+    metrics: Arc<ServerMetrics>,
+    default_backend: BackendKind,
+    xla: Option<Arc<XlaBackend>>,
+    xla_batcher: Option<Batcher<XlaJob>>,
+    reply_timeout: Duration,
+}
+
+impl Router {
+    /// Build a router. `xla` is optional — without it, `xla`-backend
+    /// requests fail cleanly and the serving path is fully native.
+    pub fn new(
+        bundle: Arc<ModelBundle>,
+        metrics: Arc<ServerMetrics>,
+        default_backend: BackendKind,
+        xla: Option<Arc<XlaBackend>>,
+        batch_cfg: BatcherConfig,
+    ) -> Router {
+        let xla_batcher = xla.as_ref().map(|backend| {
+            let backend = backend.clone();
+            let m = metrics.clone();
+            Batcher::start("xla", batch_cfg, move |jobs: Vec<XlaJob>| {
+                m.observe_batch(jobs.len());
+                let rows: Vec<Vec<f32>> = jobs.iter().map(|(r, _)| r.clone()).collect();
+                match backend.classify_batch(rows) {
+                    Ok(classes) => {
+                        for ((_, reply), class) in jobs.into_iter().zip(classes) {
+                            let _ = reply.send(Ok(class));
+                        }
+                    }
+                    Err(e) => {
+                        let msg = e.to_string();
+                        for (_, reply) in jobs {
+                            let _ = reply.send(Err(Error::Serve(msg.clone())));
+                        }
+                    }
+                }
+            })
+        });
+        Router {
+            bundle,
+            metrics,
+            default_backend,
+            xla,
+            xla_batcher,
+            reply_timeout: Duration::from_secs(5),
+        }
+    }
+
+    /// The model bundle served by this router.
+    pub fn bundle(&self) -> &Arc<ModelBundle> {
+        &self.bundle
+    }
+
+    /// The metrics registry.
+    pub fn metrics(&self) -> &Arc<ServerMetrics> {
+        &self.metrics
+    }
+
+    /// Default backend for requests without an override.
+    pub fn default_backend(&self) -> BackendKind {
+        self.default_backend
+    }
+
+    /// True when the XLA path is loaded.
+    pub fn has_xla(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// Serve one classification request.
+    pub fn classify(&self, req: &ClassifyRequest) -> Result<ClassifyResponse> {
+        let start = Instant::now();
+        let backend = req.backend.unwrap_or(self.default_backend);
+        let result = self.dispatch(backend, &req.features);
+        match result {
+            Ok((class, steps)) => {
+                let latency = start.elapsed();
+                self.metrics.observe(backend, latency);
+                Ok(ClassifyResponse {
+                    class,
+                    label: self.bundle.label(class),
+                    backend,
+                    steps,
+                    latency_us: latency.as_micros() as u64,
+                })
+            }
+            Err(e) => {
+                self.metrics.observe_error();
+                Err(e)
+            }
+        }
+    }
+
+    fn dispatch(&self, backend: BackendKind, features: &[f32]) -> Result<(u32, Option<usize>)> {
+        self.bundle.check_row(features)?;
+        match backend {
+            BackendKind::Forest => {
+                let (c, steps) = self.bundle.forest.predict_with_steps(features);
+                Ok((c, Some(steps)))
+            }
+            BackendKind::Dd => {
+                let (c, steps) = self.bundle.dd.classify_with_steps(features);
+                Ok((c, Some(steps)))
+            }
+            BackendKind::Xla => {
+                let batcher = self
+                    .xla_batcher
+                    .as_ref()
+                    .ok_or_else(|| Error::Serve("xla backend not loaded".into()))?;
+                let (tx, rx) = std::sync::mpsc::channel();
+                batcher.submit((features.to_vec(), tx))?;
+                let class = rx
+                    .recv_timeout(self.reply_timeout)
+                    .map_err(|_| Error::Serve("xla reply timed out".into()))??;
+                Ok((class, None))
+            }
+        }
+    }
+
+    /// Serve an explicit batch (bypasses the single-request batcher).
+    pub fn classify_batch(
+        &self,
+        rows: &[Vec<f32>],
+        backend: Option<BackendKind>,
+    ) -> Result<Vec<u32>> {
+        let backend = backend.unwrap_or(self.default_backend);
+        let start = Instant::now();
+        for r in rows {
+            self.bundle.check_row(r)?;
+        }
+        let out = match backend {
+            BackendKind::Forest => rows
+                .iter()
+                .map(|r| self.bundle.forest.predict(r))
+                .collect::<Vec<_>>(),
+            BackendKind::Dd => rows
+                .iter()
+                .map(|r| self.bundle.dd.classify(r))
+                .collect::<Vec<_>>(),
+            BackendKind::Xla => {
+                let xla = self
+                    .xla
+                    .as_ref()
+                    .ok_or_else(|| Error::Serve("xla backend not loaded".into()))?;
+                self.metrics.observe_batch(rows.len());
+                xla.classify_batch(rows.to_vec())?
+            }
+        };
+        self.metrics.observe(backend, start.elapsed());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::CompileOptions;
+    use crate::data::datasets;
+
+    fn router() -> (crate::data::Dataset, Router) {
+        let ds = datasets::iris();
+        let bundle =
+            Arc::new(ModelBundle::train(&ds, 12, 0, 2, CompileOptions::default()).unwrap());
+        let r = Router::new(
+            bundle,
+            Arc::new(ServerMetrics::default()),
+            BackendKind::Dd,
+            None,
+            BatcherConfig::default(),
+        );
+        (ds, r)
+    }
+
+    #[test]
+    fn native_backends_agree() {
+        let (ds, r) = router();
+        for i in (0..ds.n_rows()).step_by(11) {
+            let via_dd = r
+                .classify(&ClassifyRequest {
+                    features: ds.row(i).to_vec(),
+                    backend: Some(BackendKind::Dd),
+                })
+                .unwrap();
+            let via_rf = r
+                .classify(&ClassifyRequest {
+                    features: ds.row(i).to_vec(),
+                    backend: Some(BackendKind::Forest),
+                })
+                .unwrap();
+            assert_eq!(via_dd.class, via_rf.class, "row {i}");
+            assert!(via_dd.steps.unwrap() < via_rf.steps.unwrap());
+        }
+    }
+
+    #[test]
+    fn default_backend_applies() {
+        let (ds, r) = router();
+        let resp = r
+            .classify(&ClassifyRequest {
+                features: ds.row(0).to_vec(),
+                backend: None,
+            })
+            .unwrap();
+        assert_eq!(resp.backend, BackendKind::Dd);
+        assert!(!resp.label.is_empty());
+    }
+
+    #[test]
+    fn bad_rows_rejected_and_counted() {
+        let (_, r) = router();
+        let err = r
+            .classify(&ClassifyRequest {
+                features: vec![1.0],
+                backend: None,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("features"));
+        assert_eq!(
+            r.metrics().errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn xla_without_engine_fails_cleanly() {
+        let (ds, r) = router();
+        let err = r
+            .classify(&ClassifyRequest {
+                features: ds.row(0).to_vec(),
+                backend: Some(BackendKind::Xla),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn batch_endpoint_native() {
+        let (ds, r) = router();
+        let rows: Vec<Vec<f32>> = (0..30).map(|i| ds.row(i * 5).to_vec()).collect();
+        let dd = r.classify_batch(&rows, Some(BackendKind::Dd)).unwrap();
+        let rf = r.classify_batch(&rows, Some(BackendKind::Forest)).unwrap();
+        assert_eq!(dd, rf);
+        assert_eq!(dd.len(), 30);
+    }
+
+    #[test]
+    fn metrics_observe_served_requests() {
+        let (ds, r) = router();
+        for i in 0..5 {
+            r.classify(&ClassifyRequest {
+                features: ds.row(i).to_vec(),
+                backend: Some(BackendKind::Dd),
+            })
+            .unwrap();
+        }
+        assert_eq!(r.metrics().backend(BackendKind::Dd).count(), 5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Server assembly: trains the model, wires router + backends + HTTP
+//! workers, and manages lifecycle.
+
+use crate::compile::CompileOptions;
+use crate::data::{arff, csv, datasets, Dataset};
+use crate::error::{Error, Result};
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::config::ServeConfig;
+use crate::serve::http::handle_connection;
+use crate::serve::metrics::ServerMetrics;
+use crate::serve::router::Router;
+use crate::serve::xla_backend::XlaBackend;
+use crate::serve::ModelBundle;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Resolve a dataset spec: a built-in name, or a `.csv`/`.arff` path.
+pub fn resolve_dataset(spec: &str) -> Result<Dataset> {
+    if spec.ends_with(".csv") {
+        csv::load_file(spec)
+    } else if spec.ends_with(".arff") {
+        arff::load_file(spec)
+    } else {
+        datasets::load(spec)
+    }
+}
+
+/// A running server; dropping (or calling [`stop`](Self::stop)) shuts it
+/// down and joins all threads.
+pub struct ServerHandle {
+    /// The bound address (useful when the config asked for port 0).
+    pub addr: SocketAddr,
+    /// The shared router (tests can bypass HTTP).
+    pub router: Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    worker_threads: Vec<JoinHandle<()>>,
+}
+
+/// Build the model and start serving (returns once the socket is bound).
+pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
+    cfg.validate()?;
+    let data = resolve_dataset(&cfg.dataset)?;
+    crate::log_info!(
+        "serve: training {} trees on '{}' ({} rows)…",
+        cfg.trees,
+        data.name,
+        data.n_rows()
+    );
+    let bundle = Arc::new(ModelBundle::train(
+        &data,
+        cfg.trees,
+        cfg.max_depth,
+        cfg.seed,
+        CompileOptions::default(),
+    )?);
+    crate::log_info!(
+        "serve: forest {} nodes -> DD* {} nodes",
+        bundle.forest.n_nodes(),
+        bundle.dd.size().total()
+    );
+    let metrics = Arc::new(ServerMetrics::default());
+    let xla = if cfg.enable_xla {
+        match XlaBackend::start(&cfg.artifacts_dir, &cfg.variant, &bundle.forest) {
+            Ok(b) => Some(Arc::new(b)),
+            Err(e) => {
+                // Per DESIGN.md §7: incompatible forests fall back to the
+                // native DD backend rather than silently changing semantics.
+                crate::log_warn!("serve: xla backend unavailable, falling back to dd: {e}");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let router = Arc::new(Router::new(
+        bundle,
+        metrics,
+        cfg.default_backend,
+        xla,
+        BatcherConfig {
+            max_batch: cfg.batch_max,
+            max_wait: Duration::from_millis(cfg.batch_wait_ms),
+            queue_cap: (cfg.batch_max * 16).max(256),
+        },
+    ));
+
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    // Worker pool: accept thread feeds connections through a bounded queue.
+    let (conn_tx, conn_rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
+        mpsc::sync_channel(cfg.http_workers * 8);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+    let mut worker_threads = Vec::with_capacity(cfg.http_workers);
+    for w in 0..cfg.http_workers {
+        let rx = conn_rx.clone();
+        let router = router.clone();
+        worker_threads.push(
+            std::thread::Builder::new()
+                .name(format!("http-worker-{w}"))
+                .spawn(move || loop {
+                    let conn = rx.lock().unwrap().recv();
+                    match conn {
+                        Ok(stream) => handle_connection(stream, &router),
+                        Err(_) => return, // accept loop gone
+                    }
+                })
+                .map_err(|e| Error::Serve(format!("cannot spawn http worker: {e}")))?,
+        );
+    }
+    let accept_shutdown = shutdown.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("http-accept".into())
+        .spawn(move || {
+            while !accept_shutdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        // Blocking handoff applies backpressure when all
+                        // workers are busy.
+                        if conn_tx.send(stream).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => {
+                        crate::log_warn!("serve: accept error: {e}");
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                }
+            }
+            // dropping conn_tx stops the workers
+        })
+        .map_err(|e| Error::Serve(format!("cannot spawn accept thread: {e}")))?;
+
+    crate::log_info!("serve: listening on http://{addr}");
+    Ok(ServerHandle {
+        addr,
+        router,
+        shutdown,
+        accept_thread: Some(accept_thread),
+        worker_threads,
+    })
+}
+
+impl ServerHandle {
+    /// Stop accepting, drain workers, join threads.
+    pub fn stop(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.worker_threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_dataset_built_in_and_errors() {
+        assert_eq!(resolve_dataset("iris").unwrap().n_rows(), 150);
+        assert!(resolve_dataset("missing.csv").is_err());
+        assert!(resolve_dataset("not-a-dataset").is_err());
+    }
+
+    // Full server lifecycle is exercised over real sockets in
+    // rust/tests/integration_serve.rs.
+}

@@ -1,0 +1,177 @@
+//! XLA backend: a dedicated engine thread owning the PJRT executable.
+//!
+//! PJRT client handles are not `Send`, so the engine lives on one thread;
+//! batches arrive over a channel and replies return through per-batch
+//! channels. One engine per artifact variant (`one compiled executable per
+//! model variant`, DESIGN.md §2).
+
+use crate::error::{Error, Result};
+use crate::forest::RandomForest;
+use crate::runtime::{PackedForest, VariantMeta, XlaEngine};
+use std::sync::mpsc::{self, Receiver, Sender, SyncSender};
+use std::thread::JoinHandle;
+
+type BatchReply = Result<Vec<u32>>;
+
+enum Msg {
+    Batch(Vec<Vec<f32>>, Sender<BatchReply>),
+    Shutdown,
+}
+
+/// Handle to the engine thread.
+pub struct XlaBackend {
+    tx: SyncSender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    /// Shape contract of the loaded artifact.
+    pub meta: VariantMeta,
+}
+
+impl XlaBackend {
+    /// Pack `forest` and start the engine thread for `variant`.
+    ///
+    /// Loading errors (missing artifacts, incompatible forest) surface
+    /// immediately — the thread reports its startup result before this
+    /// constructor returns.
+    pub fn start(artifacts_dir: &str, variant: &str, forest: &RandomForest) -> Result<XlaBackend> {
+        let meta = VariantMeta::load(artifacts_dir, variant)?;
+        let packed = PackedForest::pack(forest, &meta)?;
+        let n_features = forest.schema.n_features();
+        let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = mpsc::sync_channel(64);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let dir = artifacts_dir.to_string();
+        let var = variant.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("xla-engine-{variant}"))
+            .spawn(move || {
+                let engine = match XlaEngine::load(&dir, &var) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Msg::Shutdown => return,
+                        Msg::Batch(rows, reply) => {
+                            let out = run_batch(&engine, &packed, n_features, rows);
+                            let _ = reply.send(out);
+                        }
+                    }
+                }
+            })
+            .expect("failed to spawn xla engine thread");
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("xla engine thread died during startup".into()))??;
+        Ok(XlaBackend {
+            tx,
+            handle: Some(handle),
+            meta,
+        })
+    }
+
+    /// Classify a batch of rows (blocking RPC to the engine thread).
+    /// Oversized batches are split into artifact-sized chunks.
+    pub fn classify_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<u32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.meta.batch) {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.tx
+                .send(Msg::Batch(chunk.to_vec(), reply_tx))
+                .map_err(|_| Error::Serve("xla engine has shut down".into()))?;
+            let classes = reply_rx
+                .recv()
+                .map_err(|_| Error::Serve("xla engine dropped a batch".into()))??;
+            out.extend(classes);
+        }
+        Ok(out)
+    }
+
+    /// Stop the engine thread.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for XlaBackend {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run_batch(
+    engine: &XlaEngine,
+    packed: &PackedForest,
+    n_features: usize,
+    rows: Vec<Vec<f32>>,
+) -> Result<Vec<u32>> {
+    for r in &rows {
+        if r.len() != n_features {
+            return Err(Error::SchemaMismatch(format!(
+                "row has {} features, model expects {n_features}",
+                r.len()
+            )));
+        }
+    }
+    engine.classify_rows(&rows, packed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    /// These tests need `make artifacts` to have run; they are exercised
+    /// again end-to-end in `rust/tests/integration_runtime.rs`.
+    fn artifacts_dir() -> Option<String> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("forest_small.meta.json").exists() {
+            Some(dir.to_string())
+        } else {
+            None
+        }
+    }
+
+    #[test]
+    fn startup_error_is_immediate() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(8).max_depth(4).seed(0).fit(&ds);
+        assert!(XlaBackend::start("/no/such/dir", "small", &forest).is_err());
+    }
+
+    #[test]
+    fn batch_classification_matches_forest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let ds = datasets::iris();
+        // small variant: T=32, D=6, F=8, C=4 — train a compatible forest
+        let forest = ForestLearner::default()
+            .trees(32)
+            .max_depth(6)
+            .seed(11)
+            .fit(&ds);
+        let backend = XlaBackend::start(&dir, "small", &forest).unwrap();
+        let rows: Vec<Vec<f32>> = (0..40).map(|i| ds.row(i * 3).to_vec()).collect();
+        let got = backend.classify_batch(rows.clone()).unwrap();
+        for (row, cls) in rows.iter().zip(&got) {
+            assert_eq!(*cls, forest.predict(row));
+        }
+        backend.shutdown();
+    }
+}

@@ -1,0 +1,377 @@
+//! CART decision-tree learner (Gini impurity, random feature subspace).
+//!
+//! This is the Weka-`RandomTree` substitute (DESIGN.md §Substitutions):
+//! unpruned trees, `K` randomly chosen candidate features per node
+//! (default `⌈√F⌉`), split thresholds at midpoints between distinct sorted
+//! values, leaves on purity / depth / minimum-size stopping conditions.
+
+use super::{DecisionTree, TreeNode};
+use crate::data::Dataset;
+use crate::util::rng::Rng;
+
+/// Hyper-parameters for a single tree.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    /// Maximum depth; `0` means unlimited (Weka RandomTree default).
+    pub max_depth: usize,
+    /// Minimum rows per leaf.
+    pub min_samples_leaf: usize,
+    /// Minimum rows required to attempt a split.
+    pub min_samples_split: usize,
+    /// Candidate features per node; `0` means `⌈√F⌉`.
+    pub k_features: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 0,
+            min_samples_leaf: 1,
+            min_samples_split: 2,
+            k_features: 0,
+        }
+    }
+}
+
+/// Learner state for one tree induction.
+pub struct TreeLearner<'a> {
+    data: &'a Dataset,
+    params: TreeParams,
+    rng: Rng,
+    nodes: Vec<TreeNode>,
+}
+
+/// Weighted Gini impurity of a class histogram with `total` rows.
+fn gini(hist: &[usize], total: usize) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let t = total as f64;
+    1.0 - hist
+        .iter()
+        .map(|&c| {
+            let p = c as f64 / t;
+            p * p
+        })
+        .sum::<f64>()
+}
+
+fn majority(hist: &[usize]) -> u32 {
+    hist.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0))) // ties -> lowest index
+        .map(|(i, _)| i as u32)
+        .unwrap_or(0)
+}
+
+struct Split {
+    feature: u32,
+    threshold: f32,
+    gain: f64,
+}
+
+impl<'a> TreeLearner<'a> {
+    /// New learner over `data` with a dedicated RNG stream.
+    pub fn new(data: &'a Dataset, params: TreeParams, rng: Rng) -> Self {
+        TreeLearner {
+            data,
+            params,
+            rng,
+            nodes: Vec::new(),
+        }
+    }
+
+    /// Induce a tree from the given row indices (duplicates allowed —
+    /// bootstrap samples pass their multiset directly).
+    pub fn fit(mut self, rows: &[usize]) -> DecisionTree {
+        debug_assert!(!rows.is_empty(), "cannot fit a tree on zero rows");
+        let mut rows = rows.to_vec();
+        self.grow(&mut rows, 0);
+        DecisionTree {
+            nodes: self.nodes,
+            n_features: self.data.n_features(),
+            n_classes: self.data.n_classes(),
+        }
+    }
+
+    fn histogram(&self, rows: &[usize]) -> Vec<usize> {
+        let mut h = vec![0usize; self.data.n_classes()];
+        for &r in rows {
+            h[self.data.label(r) as usize] += 1;
+        }
+        h
+    }
+
+    /// Grow a subtree over `rows`; returns its arena index.
+    fn grow(&mut self, rows: &mut [usize], depth: usize) -> u32 {
+        let hist = self.histogram(rows);
+        let total = rows.len();
+        let pure = hist.iter().filter(|&&c| c > 0).count() <= 1;
+        let depth_capped = self.params.max_depth > 0 && depth >= self.params.max_depth;
+        if pure || depth_capped || total < self.params.min_samples_split {
+            return self.push(TreeNode::Leaf {
+                class: majority(&hist),
+            });
+        }
+        let split = match self.best_split(rows, &hist) {
+            Some(s) => s,
+            None => {
+                return self.push(TreeNode::Leaf {
+                    class: majority(&hist),
+                })
+            }
+        };
+        // Partition rows in place: `< threshold` first.
+        let mut mid = 0;
+        for i in 0..rows.len() {
+            if self.data.row(rows[i])[split.feature as usize] < split.threshold {
+                rows.swap(i, mid);
+                mid += 1;
+            }
+        }
+        debug_assert!(mid > 0 && mid < rows.len(), "degenerate partition");
+        let idx = self.push(TreeNode::Leaf { class: 0 }); // placeholder, patched below
+        let (left_rows, right_rows) = rows.split_at_mut(mid);
+        let left = self.grow(left_rows, depth + 1);
+        let right = self.grow(right_rows, depth + 1);
+        self.nodes[idx as usize] = TreeNode::Split {
+            feature: split.feature,
+            threshold: split.threshold,
+            left,
+            right,
+        };
+        idx
+    }
+
+    fn push(&mut self, node: TreeNode) -> u32 {
+        self.nodes.push(node);
+        (self.nodes.len() - 1) as u32
+    }
+
+    /// Best Gini split over a random subset of features.
+    fn best_split(&mut self, rows: &[usize], hist: &[usize]) -> Option<Split> {
+        let nf = self.data.n_features();
+        let k = if self.params.k_features == 0 {
+            (nf as f64).sqrt().ceil() as usize
+        } else {
+            self.params.k_features.min(nf)
+        };
+        let candidates = self.rng.sample_indices(nf, k);
+        let parent_gini = gini(hist, rows.len());
+        let mut best: Option<Split> = None;
+        for f in candidates {
+            if let Some(s) = self.best_split_on(rows, f, hist, parent_gini) {
+                if best.as_ref().map(|b| s.gain > b.gain).unwrap_or(true) {
+                    best = Some(s);
+                }
+            }
+        }
+        best.filter(|b| b.gain > 1e-12)
+    }
+
+    /// Best threshold on one feature via a sorted sweep with incremental
+    /// class histograms (O(n log n) per feature).
+    fn best_split_on(
+        &self,
+        rows: &[usize],
+        feature: usize,
+        hist: &[usize],
+        parent_gini: f64,
+    ) -> Option<Split> {
+        let n = rows.len();
+        let min_leaf = self.params.min_samples_leaf;
+        let mut vals: Vec<(f32, u32)> = rows
+            .iter()
+            .map(|&r| (self.data.row(r)[feature], self.data.label(r)))
+            .collect();
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if vals[0].0 == vals[n - 1].0 {
+            return None; // constant feature
+        }
+        let mut left = vec![0usize; hist.len()];
+        let mut best_gain = 0.0;
+        let mut best_thr = None;
+        let mut i = 0;
+        while i < n {
+            // advance over a run of equal values
+            let v = vals[i].0;
+            while i < n && vals[i].0 == v {
+                left[vals[i].1 as usize] += 1;
+                i += 1;
+            }
+            if i >= n {
+                break;
+            }
+            let n_left = left.iter().sum::<usize>();
+            let n_right = n - n_left;
+            if n_left < min_leaf || n_right < min_leaf {
+                continue;
+            }
+            let right: Vec<usize> = hist.iter().zip(&left).map(|(&h, &l)| h - l).collect();
+            let g = (n_left as f64 * gini(&left, n_left)
+                + n_right as f64 * gini(&right, n_right))
+                / n as f64;
+            let gain = parent_gini - g;
+            if gain > best_gain {
+                best_gain = gain;
+                // midpoint between this run's value and the next distinct one
+                best_thr = Some((v + vals[i].0) / 2.0);
+            }
+        }
+        best_thr.map(|threshold| Split {
+            feature: feature as u32,
+            threshold,
+            gain: best_gain,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{datasets, synth};
+
+    fn fit_full(data: &Dataset, params: TreeParams, seed: u64) -> DecisionTree {
+        let rows: Vec<usize> = (0..data.n_rows()).collect();
+        TreeLearner::new(data, params, Rng::new(seed)).fit(&rows)
+    }
+
+    fn accuracy(tree: &DecisionTree, data: &Dataset) -> f64 {
+        let correct = data
+            .iter()
+            .filter(|(x, y)| tree.predict(x) == *y)
+            .count();
+        correct as f64 / data.n_rows() as f64
+    }
+
+    #[test]
+    fn gini_basics() {
+        assert_eq!(gini(&[10, 0], 10), 0.0);
+        assert!((gini(&[5, 5], 10) - 0.5).abs() < 1e-12);
+        assert!((gini(&[1, 1, 1], 3) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn majority_tie_breaks_low() {
+        assert_eq!(majority(&[3, 3, 1]), 0);
+        assert_eq!(majority(&[1, 3, 3]), 1);
+        assert_eq!(majority(&[0, 0, 4]), 2);
+    }
+
+    #[test]
+    fn fits_iris_with_high_training_accuracy() {
+        let ds = datasets::iris();
+        let tree = fit_full(
+            &ds,
+            TreeParams {
+                k_features: 4, // use all features -> plain CART
+                ..Default::default()
+            },
+            0,
+        );
+        tree.validate().unwrap();
+        assert!(accuracy(&tree, &ds) > 0.98, "acc {}", accuracy(&tree, &ds));
+    }
+
+    #[test]
+    fn learns_exact_rules_on_lenses() {
+        // Lenses is rule-defined; full unpruned CART must reach 100%.
+        let ds = datasets::lenses();
+        let tree = fit_full(
+            &ds,
+            TreeParams {
+                k_features: 4,
+                ..Default::default()
+            },
+            1,
+        );
+        assert_eq!(accuracy(&tree, &ds), 1.0);
+    }
+
+    #[test]
+    fn depth_cap_respected() {
+        let ds = datasets::iris();
+        for cap in [1, 2, 3] {
+            let tree = fit_full(
+                &ds,
+                TreeParams {
+                    max_depth: cap,
+                    k_features: 4,
+                    ..Default::default()
+                },
+                0,
+            );
+            assert!(tree.depth() <= cap, "depth {} > cap {cap}", tree.depth());
+        }
+    }
+
+    #[test]
+    fn min_leaf_respected() {
+        let ds = synth::blobs(&synth::BlobSpec {
+            rows: 120,
+            seed: 5,
+            ..Default::default()
+        })
+        .unwrap();
+        let tree = fit_full(
+            &ds,
+            TreeParams {
+                min_samples_leaf: 10,
+                k_features: 4,
+                ..Default::default()
+            },
+            0,
+        );
+        // every leaf must hold >= 10 training rows; verify by routing all rows
+        let mut counts = std::collections::HashMap::new();
+        for (x, _) in ds.iter() {
+            let mut i = 0u32;
+            loop {
+                match tree.nodes[i as usize] {
+                    TreeNode::Leaf { .. } => break,
+                    TreeNode::Split {
+                        feature,
+                        threshold,
+                        left,
+                        right,
+                    } => {
+                        i = if x[feature as usize] < threshold {
+                            left
+                        } else {
+                            right
+                        }
+                    }
+                }
+            }
+            *counts.entry(i).or_insert(0usize) += 1;
+        }
+        assert!(counts.values().all(|&c| c >= 10), "{counts:?}");
+    }
+
+    #[test]
+    fn pure_input_gives_single_leaf() {
+        let ds = datasets::iris();
+        let rows: Vec<usize> = (0..50).collect(); // all setosa
+        let tree = TreeLearner::new(&ds, TreeParams::default(), Rng::new(0)).fit(&rows);
+        assert_eq!(tree.n_nodes(), 1);
+        assert_eq!(tree.predict(ds.row(0)), 0);
+    }
+
+    #[test]
+    fn random_subspace_varies_with_seed() {
+        let ds = datasets::iris();
+        let a = fit_full(&ds, TreeParams::default(), 1);
+        let b = fit_full(&ds, TreeParams::default(), 2);
+        assert_ne!(a, b, "different seeds should explore different subspaces");
+        let a2 = fit_full(&ds, TreeParams::default(), 1);
+        assert_eq!(a, a2, "same seed must reproduce the same tree");
+    }
+
+    #[test]
+    fn bootstrap_multiset_supported() {
+        let ds = datasets::iris();
+        let rows = vec![0usize; 30]; // 30 copies of one row
+        let tree = TreeLearner::new(&ds, TreeParams::default(), Rng::new(0)).fit(&rows);
+        assert_eq!(tree.n_nodes(), 1); // pure by construction
+    }
+}

@@ -1,0 +1,312 @@
+//! Decision trees: structure, evaluation, serialization.
+//!
+//! Trees are stored as flat arenas (`Vec<TreeNode>`, root at index 0).
+//! The split convention throughout the system is the paper's: the predicate
+//! `x[feature] < threshold` routes **left** when true, right otherwise.
+
+pub mod learner;
+
+pub use learner::{TreeLearner, TreeParams};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// One node of a decision tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TreeNode {
+    /// Terminal: predicts a class index.
+    Leaf {
+        /// Predicted class index.
+        class: u32,
+    },
+    /// Internal: tests `x[feature] < threshold`.
+    Split {
+        /// Feature column tested.
+        feature: u32,
+        /// Threshold; `<` goes left, `>=` goes right.
+        threshold: f32,
+        /// Arena index of the `<` child.
+        left: u32,
+        /// Arena index of the `>=` child.
+        right: u32,
+    },
+}
+
+/// A decision tree over `n_features` columns predicting one of `n_classes`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionTree {
+    /// Flat node arena; index 0 is the root.
+    pub nodes: Vec<TreeNode>,
+    /// Number of feature columns the tree may test.
+    pub n_features: usize,
+    /// Number of classes in the co-domain.
+    pub n_classes: usize,
+}
+
+impl DecisionTree {
+    /// A single-leaf tree.
+    pub fn leaf(class: u32, n_features: usize, n_classes: usize) -> DecisionTree {
+        DecisionTree {
+            nodes: vec![TreeNode::Leaf { class }],
+            n_features,
+            n_classes,
+        }
+    }
+
+    /// Total node count (internal + leaves).
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Leaf count.
+    pub fn n_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, TreeNode::Leaf { .. }))
+            .count()
+    }
+
+    /// Maximum root-to-leaf depth (a single leaf has depth 0).
+    pub fn depth(&self) -> usize {
+        fn go(tree: &DecisionTree, i: u32) -> usize {
+            match tree.nodes[i as usize] {
+                TreeNode::Leaf { .. } => 0,
+                TreeNode::Split { left, right, .. } => 1 + go(tree, left).max(go(tree, right)),
+            }
+        }
+        go(self, 0)
+    }
+
+    /// Predict the class of one row.
+    pub fn predict(&self, x: &[f32]) -> u32 {
+        self.walk(x).0
+    }
+
+    /// Predict and count the steps taken (internal nodes visited) — the
+    /// paper's §6 cost metric for tree structures.
+    pub fn walk(&self, x: &[f32]) -> (u32, usize) {
+        debug_assert_eq!(x.len(), self.n_features);
+        let mut i = 0u32;
+        let mut steps = 0usize;
+        loop {
+            match self.nodes[i as usize] {
+                TreeNode::Leaf { class } => return (class, steps),
+                TreeNode::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    steps += 1;
+                    i = if x[feature as usize] < threshold {
+                        left
+                    } else {
+                        right
+                    };
+                }
+            }
+        }
+    }
+
+    /// Structural validation: indices in range, no cycles, all nodes
+    /// reachable, feature/class indices within bounds.
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes.is_empty() {
+            return Err(Error::invalid("tree has no nodes"));
+        }
+        let mut seen = vec![false; self.nodes.len()];
+        let mut stack = vec![0u32];
+        while let Some(i) = stack.pop() {
+            let idx = i as usize;
+            if idx >= self.nodes.len() {
+                return Err(Error::invalid(format!("child index {i} out of range")));
+            }
+            if seen[idx] {
+                return Err(Error::invalid(format!("node {i} reachable twice (not a tree)")));
+            }
+            seen[idx] = true;
+            match self.nodes[idx] {
+                TreeNode::Leaf { class } => {
+                    if class as usize >= self.n_classes {
+                        return Err(Error::invalid(format!("leaf class {class} out of range")));
+                    }
+                }
+                TreeNode::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => {
+                    if feature as usize >= self.n_features {
+                        return Err(Error::invalid(format!("feature {feature} out of range")));
+                    }
+                    if !threshold.is_finite() {
+                        return Err(Error::invalid("non-finite threshold"));
+                    }
+                    stack.push(left);
+                    stack.push(right);
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err(Error::invalid("unreachable nodes in arena"));
+        }
+        Ok(())
+    }
+
+    /// JSON encoding (model persistence).
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| match n {
+                TreeNode::Leaf { class } => json::obj(vec![("leaf", json::num(*class as f64))]),
+                TreeNode::Split {
+                    feature,
+                    threshold,
+                    left,
+                    right,
+                } => json::obj(vec![
+                    ("f", json::num(*feature as f64)),
+                    ("t", json::num(*threshold as f64)),
+                    ("l", json::num(*left as f64)),
+                    ("r", json::num(*right as f64)),
+                ]),
+            })
+            .collect();
+        json::obj(vec![
+            ("n_features", json::num(self.n_features as f64)),
+            ("n_classes", json::num(self.n_classes as f64)),
+            ("nodes", Json::Arr(nodes)),
+        ])
+    }
+
+    /// JSON decoding (validates the result).
+    pub fn from_json(v: &Json) -> Result<DecisionTree> {
+        let n_features = v
+            .get_i64("n_features")
+            .ok_or_else(|| Error::parse("tree: missing n_features"))? as usize;
+        let n_classes = v
+            .get_i64("n_classes")
+            .ok_or_else(|| Error::parse("tree: missing n_classes"))? as usize;
+        let nodes_json = v
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::parse("tree: missing nodes"))?;
+        let mut nodes = Vec::with_capacity(nodes_json.len());
+        for nj in nodes_json {
+            if let Some(c) = nj.get_i64("leaf") {
+                nodes.push(TreeNode::Leaf { class: c as u32 });
+            } else {
+                let f = nj.get_i64("f").ok_or_else(|| Error::parse("tree node: missing f"))?;
+                let t = nj
+                    .get("t")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| Error::parse("tree node: missing t"))?;
+                let l = nj.get_i64("l").ok_or_else(|| Error::parse("tree node: missing l"))?;
+                let r = nj.get_i64("r").ok_or_else(|| Error::parse("tree node: missing r"))?;
+                nodes.push(TreeNode::Split {
+                    feature: f as u32,
+                    threshold: t as f32,
+                    left: l as u32,
+                    right: r as u32,
+                });
+            }
+        }
+        let tree = DecisionTree {
+            nodes,
+            n_features,
+            n_classes,
+        };
+        tree.validate()?;
+        Ok(tree)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// x0 < 1.0 ? c0 : (x1 < -2.0 ? c1 : c2)
+    pub(crate) fn sample_tree() -> DecisionTree {
+        DecisionTree {
+            nodes: vec![
+                TreeNode::Split {
+                    feature: 0,
+                    threshold: 1.0,
+                    left: 1,
+                    right: 2,
+                },
+                TreeNode::Leaf { class: 0 },
+                TreeNode::Split {
+                    feature: 1,
+                    threshold: -2.0,
+                    left: 3,
+                    right: 4,
+                },
+                TreeNode::Leaf { class: 1 },
+                TreeNode::Leaf { class: 2 },
+            ],
+            n_features: 2,
+            n_classes: 3,
+        }
+    }
+
+    #[test]
+    fn predict_and_steps() {
+        let t = sample_tree();
+        assert_eq!(t.walk(&[0.0, 0.0]), (0, 1));
+        assert_eq!(t.walk(&[5.0, -3.0]), (1, 2));
+        assert_eq!(t.walk(&[5.0, 0.0]), (2, 2));
+        // boundary: equal goes right
+        assert_eq!(t.predict(&[1.0, 0.0]), 2);
+    }
+
+    #[test]
+    fn structure_stats() {
+        let t = sample_tree();
+        assert_eq!(t.n_nodes(), 5);
+        assert_eq!(t.n_leaves(), 3);
+        assert_eq!(t.depth(), 2);
+        assert_eq!(DecisionTree::leaf(0, 2, 2).depth(), 0);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut t = sample_tree();
+        t.validate().unwrap();
+        t.nodes[0] = TreeNode::Split {
+            feature: 9,
+            threshold: 0.0,
+            left: 1,
+            right: 2,
+        };
+        assert!(t.validate().is_err());
+        let mut t = sample_tree();
+        t.nodes[2] = TreeNode::Split {
+            feature: 0,
+            threshold: 0.0,
+            left: 0, // cycle back to root
+            right: 4,
+        };
+        assert!(t.validate().is_err());
+        let mut t = sample_tree();
+        t.nodes.push(TreeNode::Leaf { class: 0 }); // orphan
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample_tree();
+        let encoded = t.to_json().to_string_compact();
+        let decoded = DecisionTree::from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        assert_eq!(t, decoded);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(DecisionTree::from_json(&Json::parse("{}").unwrap()).is_err());
+        let bad = r#"{"n_features":1,"n_classes":1,"nodes":[{"f":0,"t":0,"l":5,"r":6}]}"#;
+        assert!(DecisionTree::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+}

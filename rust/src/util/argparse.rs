@@ -1,0 +1,324 @@
+//! Command-line argument parsing substrate (clap is unavailable offline).
+//!
+//! Declarative enough for this project's CLI: subcommands with typed flags
+//! (`--name value`, `--name=value`, boolean switches), positionals, defaults,
+//! and generated `--help` text.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Kind of a declared argument.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    /// `--flag` (no value, presence = true)
+    Switch,
+    /// `--opt <value>`
+    Value,
+    /// bare positional argument
+    Positional,
+}
+
+#[derive(Debug, Clone)]
+struct Spec {
+    name: &'static str,
+    kind: Kind,
+    help: &'static str,
+    default: Option<String>,
+    required: bool,
+}
+
+/// A declarative command-line parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    command: String,
+    about: &'static str,
+    specs: Vec<Spec>,
+}
+
+/// Parsed argument values.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: HashMap<&'static str, String>,
+    switches: HashMap<&'static str, bool>,
+}
+
+impl ArgSpec {
+    /// New spec for a command (used in help output).
+    pub fn new(command: impl Into<String>, about: &'static str) -> Self {
+        ArgSpec {
+            command: command.into(),
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    /// Declare a boolean switch `--name`.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            kind: Kind::Switch,
+            help,
+            default: None,
+            required: false,
+        });
+        self
+    }
+
+    /// Declare `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            kind: Kind::Value,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>`.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(Spec {
+            name,
+            kind: Kind::Value,
+            help,
+            default: None,
+            required: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (filled in declaration order).
+    pub fn positional(mut self, name: &'static str, help: &'static str, required: bool) -> Self {
+        self.specs.push(Spec {
+            name,
+            kind: Kind::Positional,
+            help,
+            default: None,
+            required,
+        });
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut out = format!("{}\n\n{}\n\nUSAGE:\n  {}", self.about, "", self.command);
+        for s in &self.specs {
+            if s.kind == Kind::Positional {
+                out.push_str(&format!(
+                    " {}",
+                    if s.required {
+                        format!("<{}>", s.name)
+                    } else {
+                        format!("[{}]", s.name)
+                    }
+                ));
+            }
+        }
+        out.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for s in &self.specs {
+            let left = match s.kind {
+                Kind::Switch => format!("--{}", s.name),
+                Kind::Value => format!("--{} <v>", s.name),
+                Kind::Positional => format!("<{}>", s.name),
+            };
+            let default = match &s.default {
+                Some(d) if !d.is_empty() => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  {left:<24} {}{}\n", s.help, default));
+        }
+        out
+    }
+
+    /// Parse a token list (without the program/subcommand names).
+    pub fn parse(&self, tokens: &[String]) -> Result<Args> {
+        let mut values: HashMap<&'static str, String> = HashMap::new();
+        let mut switches: HashMap<&'static str, bool> = HashMap::new();
+        for s in &self.specs {
+            if let Some(d) = &s.default {
+                values.insert(s.name, d.clone());
+            }
+            if s.kind == Kind::Switch {
+                switches.insert(s.name, false);
+            }
+        }
+        let positionals: Vec<&Spec> = self
+            .specs
+            .iter()
+            .filter(|s| s.kind == Kind::Positional)
+            .collect();
+        let mut next_positional = 0;
+
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::invalid(self.help_text()));
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name && s.kind != Kind::Positional)
+                    .ok_or_else(|| {
+                        Error::invalid(format!(
+                            "unknown option --{name} for '{}' (try --help)",
+                            self.command
+                        ))
+                    })?;
+                match spec.kind {
+                    Kind::Switch => {
+                        if inline.is_some() {
+                            return Err(Error::invalid(format!("--{name} takes no value")));
+                        }
+                        switches.insert(spec.name, true);
+                    }
+                    Kind::Value => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                tokens
+                                    .get(i)
+                                    .cloned()
+                                    .ok_or_else(|| Error::invalid(format!("--{name} needs a value")))?
+                            }
+                        };
+                        values.insert(spec.name, v);
+                    }
+                    Kind::Positional => unreachable!(),
+                }
+            } else {
+                let spec = positionals.get(next_positional).ok_or_else(|| {
+                    Error::invalid(format!("unexpected positional argument '{tok}'"))
+                })?;
+                values.insert(spec.name, tok.clone());
+                next_positional += 1;
+            }
+            i += 1;
+        }
+
+        for s in &self.specs {
+            if s.required && !values.contains_key(s.name) {
+                return Err(Error::invalid(format!(
+                    "missing required argument --{} (try --help)",
+                    s.name
+                )));
+            }
+        }
+        Ok(Args { values, switches })
+    }
+}
+
+impl Args {
+    /// String value (panics only on undeclared names — programmer error).
+    pub fn get(&self, name: &'static str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required-at-declaration or defaulted string value.
+    pub fn str(&self, name: &'static str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("argument --{name} was not declared with a default"))
+    }
+
+    /// Parsed integer value.
+    pub fn usize(&self, name: &'static str) -> Result<usize> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::invalid(format!("--{name} must be an unsigned integer")))
+    }
+
+    /// Parsed u64 value.
+    pub fn u64(&self, name: &'static str) -> Result<u64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::invalid(format!("--{name} must be an unsigned integer")))
+    }
+
+    /// Parsed float value.
+    pub fn f64(&self, name: &'static str) -> Result<f64> {
+        self.str(name)
+            .parse()
+            .map_err(|_| Error::invalid(format!("--{name} must be a number")))
+    }
+
+    /// Switch presence.
+    pub fn flag(&self, name: &'static str) -> bool {
+        *self.switches.get(name).unwrap_or(&false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("forest-add train", "Train a random forest")
+            .req("dataset", "dataset name")
+            .opt("trees", "100", "number of trees")
+            .opt("seed", "42", "rng seed")
+            .switch("quiet", "suppress logs")
+            .positional("out", "output path", false)
+    }
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_defaults_switches() {
+        let a = spec()
+            .parse(&toks(&["--dataset", "iris", "--trees=500", "--quiet", "model.json"]))
+            .unwrap();
+        assert_eq!(a.str("dataset"), "iris");
+        assert_eq!(a.usize("trees").unwrap(), 500);
+        assert_eq!(a.u64("seed").unwrap(), 42);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("model.json"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        let err = spec().parse(&toks(&["--trees", "5"])).unwrap_err();
+        assert!(err.to_string().contains("--dataset"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let err = spec()
+            .parse(&toks(&["--dataset", "iris", "--bogus", "1"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("--bogus"));
+    }
+
+    #[test]
+    fn bad_int_rejected() {
+        let a = spec()
+            .parse(&toks(&["--dataset", "iris", "--trees", "many"]))
+            .unwrap();
+        assert!(a.usize("trees").is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help_text();
+        assert!(h.contains("--trees"));
+        assert!(h.contains("[default: 100]"));
+        assert!(h.contains("--dataset <v>"));
+        assert!(h.contains("[out]"));
+    }
+
+    #[test]
+    fn extra_positional_rejected() {
+        let err = spec()
+            .parse(&toks(&["--dataset", "iris", "a", "b"]))
+            .unwrap_err();
+        assert!(err.to_string().contains("unexpected positional"));
+    }
+}

@@ -1,0 +1,113 @@
+//! FxHash: the Firefox/rustc multiply-xor hasher (public-domain algorithm,
+//! reimplemented — the `rustc-hash` crate is unavailable offline).
+//!
+//! The ADD manager's unique table and operation caches hash tens of
+//! millions of small fixed-size keys; SipHash (std's default, DoS-hardened)
+//! costs ~3× more than needed for these internal, attacker-free tables.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Multiply-rotate hasher for small keys (not DoS-resistant — internal use).
+#[derive(Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, v: u8) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, v: u16) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, v: u32) {
+        self.add(v as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add(v);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add(v as u64);
+    }
+}
+
+/// `HashMap` keyed with [`FxHasher`].
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+/// `HashSet` keyed with [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distributes_and_roundtrips() {
+        let mut m: FxHashMap<(u32, u32, u32), u32> = FxHashMap::default();
+        for i in 0..10_000u32 {
+            m.insert((i, i / 3, i % 7), i);
+        }
+        assert_eq!(m.len(), 10_000);
+        for i in (0..10_000u32).step_by(37) {
+            assert_eq!(m[&(i, i / 3, i % 7)], i);
+        }
+    }
+
+    #[test]
+    fn hashes_differ_for_similar_keys() {
+        use std::hash::{BuildHasher, BuildHasherDefault};
+        let b: BuildHasherDefault<FxHasher> = BuildHasherDefault::default();
+        let h1 = b.hash_one((1u32, 2u32, 3u32));
+        let h2 = b.hash_one((1u32, 2u32, 4u32));
+        let h3 = b.hash_one((2u32, 2u32, 3u32));
+        assert_ne!(h1, h2);
+        assert_ne!(h1, h3);
+    }
+
+    #[test]
+    fn byte_slices_and_strings() {
+        let mut s: FxHashSet<String> = FxHashSet::default();
+        for w in ["a", "ab", "abc", "abcdefgh", "abcdefghi", ""] {
+            s.insert(w.to_string());
+        }
+        assert_eq!(s.len(), 6);
+        assert!(s.contains("abcdefgh"));
+    }
+}

@@ -1,0 +1,12 @@
+//! General-purpose substrates built in-tree because the crates.io registry
+//! is unreachable in this environment: RNG, JSON, bitsets, CLI parsing,
+//! logging, a property-testing engine, and table formatting.
+
+pub mod argparse;
+pub mod bitset;
+pub mod fxhash;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,177 @@
+//! Tiny property-based testing engine (proptest is unavailable offline).
+//!
+//! A property is a closure over a [`Gen`]; the runner executes it for a
+//! configurable number of random cases and, on failure, retries the same
+//! seed with progressively smaller size budgets — a cheap stand-in for
+//! shrinking that in practice reproduces failures at the smallest size that
+//! still triggers them. Failures report the seed so a case can be replayed
+//! exactly (`FOREST_ADD_PROP_SEED=<n>`).
+
+use crate::util::rng::Rng;
+
+/// Case generator handed to properties: a seeded RNG plus a size budget.
+pub struct Gen {
+    /// Seeded random source for this case.
+    pub rng: Rng,
+    /// Size budget; generators should scale structure size with it.
+    pub size: usize,
+}
+
+impl Gen {
+    /// Integer in `[lo, hi]`.
+    pub fn int(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    /// usize in `[lo, hi]`.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    /// Float in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Vector with size-scaled length, elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let cap = max_len.min(self.size.max(1));
+        let len = self.rng.below_usize(cap + 1);
+        (0..len).map(|_| f(self)).collect()
+    }
+
+    /// One of the provided choices.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Maximum size budget (cases sweep sizes `1..=max_size` cyclically).
+    pub max_size: usize,
+    /// Base seed; `FOREST_ADD_PROP_SEED` overrides.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("FOREST_ADD_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xF0E2_57AD);
+        Config {
+            cases: 100,
+            max_size: 20,
+            seed,
+        }
+    }
+}
+
+/// Run a property; panics with the failing seed/size on the first failure.
+///
+/// The property returns `Err(description)` (or panics) to signal failure.
+pub fn check<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let size = 1 + case % cfg.max_size;
+        let mut g = Gen {
+            rng: Rng::new(case_seed),
+            size,
+        };
+        if let Err(msg) = prop(&mut g) {
+            // "Shrink": replay the same seed at smaller sizes, report the
+            // smallest size that still fails.
+            let mut smallest = (size, msg);
+            for s in 1..size {
+                let mut g = Gen {
+                    rng: Rng::new(case_seed),
+                    size: s,
+                };
+                if let Err(m) = prop(&mut g) {
+                    smallest = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, size {}):\n  {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// `check` with default configuration.
+pub fn quickcheck<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    check(name, Config::default(), prop)
+}
+
+/// Assertion helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut runs = 0;
+        check(
+            "addition commutes",
+            Config {
+                cases: 50,
+                ..Config::default()
+            },
+            |g| {
+                runs += 1;
+                let a = g.int(-1000, 1000);
+                let b = g.int(-1000, 1000);
+                prop_assert!(a + b == b + a, "a={a} b={b}");
+                Ok(())
+            },
+        );
+        assert_eq!(runs, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_seed() {
+        quickcheck("always fails", |g| {
+            let v = g.usize(0, 10);
+            prop_assert!(v > 100, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vec_respects_size_budget() {
+        check(
+            "vec size",
+            Config {
+                cases: 30,
+                max_size: 5,
+                seed: 1,
+            },
+            |g| {
+                let v = g.vec(100, |g| g.int(0, 1));
+                prop_assert!(v.len() <= 5, "len={}", v.len());
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,243 @@
+//! Console table formatting for the bench harness and CLI reports.
+//!
+//! Produces the aligned plain-text tables printed by `cargo bench` (the rows
+//! that mirror the paper's Tables 1/2 and the Fig. 6/7 series) plus CSV and
+//! Markdown renderings for EXPERIMENTS.md.
+
+/// Column alignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple text table builder.
+#[derive(Debug, Clone)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with column headers (all right-aligned except the first).
+    pub fn new(headers: &[&str]) -> Self {
+        let aligns = headers
+            .iter()
+            .enumerate()
+            .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+            .collect();
+        Table {
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            aligns,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Override column alignments.
+    pub fn aligns(mut self, aligns: &[Align]) -> Self {
+        assert_eq!(aligns.len(), self.headers.len());
+        self.aligns = aligns.to_vec();
+        self
+    }
+
+    /// Append a row (must match the header arity).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity does not match headers"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    fn fmt_cell(cell: &str, width: usize, align: Align) -> String {
+        let pad = width.saturating_sub(cell.chars().count());
+        match align {
+            Align::Left => format!("{cell}{}", " ".repeat(pad)),
+            Align::Right => format!("{}{cell}", " ".repeat(pad)),
+        }
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let render = |cells: &[String], out: &mut String| {
+            let line: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| Self::fmt_cell(c, w[i], self.aligns[i]))
+                .collect();
+            out.push_str(line.join("  ").trim_end());
+            out.push('\n');
+        };
+        render(&self.headers, &mut out);
+        out.push_str(&format!(
+            "{}\n",
+            w.iter()
+                .map(|n| "-".repeat(*n))
+                .collect::<Vec<_>>()
+                .join("  ")
+        ));
+        for row in &self.rows {
+            render(row, &mut out);
+        }
+        out
+    }
+
+    /// CSV rendering (quotes cells containing separators).
+    pub fn to_csv(&self) -> String {
+        let esc = |c: &str| {
+            if c.contains([',', '"', '\n']) {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavoured Markdown rendering.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        let seps: Vec<&str> = self
+            .aligns
+            .iter()
+            .map(|a| match a {
+                Align::Left => ":--",
+                Align::Right => "--:",
+            })
+            .collect();
+        out.push_str(&format!("| {} |\n", seps.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a float with thousands separators and `digits` decimals
+/// (e.g. `69,216.62` — the paper's table style).
+pub fn fmt_thousands(v: f64, digits: usize) -> String {
+    let neg = v < 0.0;
+    let s = format!("{:.*}", digits, v.abs());
+    let (int_part, frac) = match s.split_once('.') {
+        Some((i, f)) => (i.to_string(), Some(f.to_string())),
+        None => (s, None),
+    };
+    let mut grouped = String::new();
+    let chars: Vec<char> = int_part.chars().collect();
+    for (i, c) in chars.iter().enumerate() {
+        if i > 0 && (chars.len() - i) % 3 == 0 {
+            grouped.push(',');
+        }
+        grouped.push(*c);
+    }
+    let mut out = String::new();
+    if neg {
+        out.push('-');
+    }
+    out.push_str(&grouped);
+    if let Some(f) = frac {
+        out.push('.');
+        out.push_str(&f);
+    }
+    out
+}
+
+/// Percent-reduction cell in the paper's style, e.g. `-99.99%`.
+pub fn fmt_reduction(before: f64, after: f64) -> String {
+    if before <= 0.0 {
+        return "n/a".to_string();
+    }
+    let pct = (after - before) / before * 100.0;
+    format!("{pct:+.2}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_text() {
+        let mut t = Table::new(&["Dataset", "RF", "DD*"]);
+        t.row(vec!["Iris".into(), "42,860.96".into(), "7.01".into()]);
+        t.row(vec!["Vote".into(), "69,216.62".into(), "8.30".into()]);
+        let text = t.to_text();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("Dataset"));
+        assert!(lines[2].contains("42,860.96"));
+        // right alignment: numbers end at the same column
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        assert_eq!(t.to_csv(), "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row(vec!["a".into(), "1".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| k | v |\n| :-- | --: |\n| a | 1 |\n"));
+    }
+
+    #[test]
+    fn thousands_formatting() {
+        assert_eq!(fmt_thousands(69216.62, 2), "69,216.62");
+        assert_eq!(fmt_thousands(8.3, 2), "8.30");
+        assert_eq!(fmt_thousands(988358.0, 0), "988,358");
+        assert_eq!(fmt_thousands(-1234.5, 1), "-1,234.5");
+        assert_eq!(fmt_thousands(999.0, 0), "999");
+        assert_eq!(fmt_thousands(1000.0, 0), "1,000");
+    }
+
+    #[test]
+    fn reduction_formatting() {
+        assert_eq!(fmt_reduction(100.0, 0.01), "-99.99%");
+        assert_eq!(fmt_reduction(0.0, 5.0), "n/a");
+        assert_eq!(fmt_reduction(10.0, 15.0), "+50.00%");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only".into()]);
+    }
+}

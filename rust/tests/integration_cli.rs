@@ -1,0 +1,147 @@
+//! Integration: the `forest-add` binary end to end (spawned as a process).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_forest-add"))
+}
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("forest-add-it-{name}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = bin().output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("serve"));
+}
+
+#[test]
+fn datasets_lists_the_six_corpora() {
+    let out = bin().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in [
+        "iris",
+        "balance-scale",
+        "breast-cancer",
+        "lenses",
+        "tic-tac-toe",
+        "vote",
+    ] {
+        assert!(stdout.contains(name), "missing {name} in:\n{stdout}");
+    }
+    assert!(stdout.contains("958"), "tic-tac-toe row count");
+}
+
+#[test]
+fn train_compile_eval_workflow() {
+    let dir = tmpdir("workflow");
+    let model = dir.join("model.json");
+    let out = bin()
+        .args([
+            "train",
+            "--dataset",
+            "lenses",
+            "--trees",
+            "12",
+            "--out",
+            model.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(model.exists());
+
+    let dot = dir.join("dd.dot");
+    let out = bin()
+        .args([
+            "compile",
+            "--model",
+            model.to_str().unwrap(),
+            "--dot",
+            dot.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Most frequent class DD*"));
+    assert!(std::fs::read_to_string(&dot).unwrap().starts_with("digraph"));
+
+    let out = bin()
+        .args(["eval", "--dataset", "lenses", "--trees", "15"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Random Forest"));
+    assert!(stdout.contains("Most frequent class DD*"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compile_word_and_vector_variants() {
+    for (abstraction, expect) in [("word", "Class word DD*"), ("vector", "Class vector DD*")] {
+        let out = bin()
+            .args([
+                "compile",
+                "--dataset",
+                "lenses",
+                "--trees",
+                "10",
+                "--abstraction",
+                abstraction,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success());
+        assert!(String::from_utf8_lossy(&out.stdout).contains(expect));
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("bogus").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn artifacts_command_lists_variants() {
+    if !std::path::Path::new("artifacts/index.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let out = bin().args(["artifacts", "--dir", "artifacts"]).output().unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for v in ["small", "base", "wide"] {
+        assert!(stdout.contains(v), "{stdout}");
+    }
+}
+
+#[test]
+fn serve_dump_config() {
+    let out = bin()
+        .args(["serve", "--dataset", "vote", "--trees", "64", "--dump-config"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"dataset\": \"vote\""));
+    assert!(stdout.contains("\"trees\": 64"));
+}

@@ -1,0 +1,143 @@
+//! Integration: the AOT bridge — Rust loads the JAX/Pallas-lowered HLO
+//! artifacts via PJRT and the numerics match the native forest bit-for-bit.
+//!
+//! Requires `make artifacts` (skips with a notice otherwise, but the
+//! Makefile `test` target always builds artifacts first).
+
+use forest_add::data::datasets;
+use forest_add::forest::ForestLearner;
+use forest_add::runtime::{PackedForest, VariantMeta, XlaEngine};
+
+fn artifacts() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/index.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping runtime integration: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn index_lists_all_variants() {
+    let Some(dir) = artifacts() else { return };
+    let names = VariantMeta::available(dir).unwrap();
+    for expect in ["small", "base", "wide"] {
+        assert!(names.iter().any(|n| n == expect), "{names:?}");
+    }
+    for n in &names {
+        let m = VariantMeta::load(dir, n).unwrap();
+        assert_eq!(m.n_leaves, 1 << m.depth);
+    }
+}
+
+#[test]
+fn small_variant_matches_native_forest_everywhere() {
+    let Some(dir) = artifacts() else { return };
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default()
+        .trees(32)
+        .max_depth(6)
+        .seed(11)
+        .fit(&data);
+    let engine = XlaEngine::load(dir, "small").unwrap();
+    let packed = PackedForest::pack(&forest, &engine.meta).unwrap();
+
+    // run the entire dataset through fixed-size batches
+    let m = engine.meta.clone();
+    let mut checked = 0usize;
+    for chunk in (0..data.n_rows()).collect::<Vec<_>>().chunks(m.batch) {
+        let rows: Vec<Vec<f32>> = chunk.iter().map(|&i| data.row(i).to_vec()).collect();
+        let preds = engine.classify_rows(&rows, &packed).unwrap();
+        for (&i, &p) in chunk.iter().zip(&preds) {
+            assert_eq!(p, forest.predict(data.row(i)), "row {i}");
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, data.n_rows());
+}
+
+#[test]
+fn votes_match_packed_reference_and_forest() {
+    let Some(dir) = artifacts() else { return };
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default()
+        .trees(32)
+        .max_depth(6)
+        .seed(4)
+        .fit(&data);
+    let engine = XlaEngine::load(dir, "small").unwrap();
+    let m = engine.meta.clone();
+    let packed = PackedForest::pack(&forest, &m).unwrap();
+    let mut x = vec![0f32; m.batch * m.features];
+    for b in 0..m.batch {
+        let row = data.row(b * 4);
+        x[b * m.features..b * m.features + row.len()].copy_from_slice(row);
+    }
+    let (votes, preds) = engine.run(&x, &packed).unwrap();
+    assert_eq!(votes.len(), m.batch * m.classes);
+    for b in 0..m.batch {
+        let row = &x[b * m.features..b * m.features + 4];
+        // XLA votes == pure-Rust packed reference == native forest votes
+        let ref_votes = packed.eval_row(row, m.depth, m.classes);
+        let xla_votes: Vec<u32> = votes[b * m.classes..(b + 1) * m.classes]
+            .iter()
+            .map(|&v| v as u32)
+            .collect();
+        assert_eq!(xla_votes, ref_votes, "batch row {b}");
+        let native = forest.votes(row);
+        assert_eq!(&xla_votes[..native.len()], &native[..], "batch row {b}");
+        // pred is the argmax with lowest-index ties
+        let argmax = xla_votes
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0;
+        assert_eq!(preds[b] as usize, argmax, "batch row {b}");
+    }
+}
+
+#[test]
+fn base_variant_with_replication() {
+    let Some(dir) = artifacts() else { return };
+    let data = datasets::load("breast-cancer").unwrap();
+    // base: 128 tree slots; 32 trees -> 4x replication; F=16 >= 9, C=8 >= 2
+    let forest = ForestLearner::default()
+        .trees(32)
+        .max_depth(8)
+        .seed(21)
+        .fit(&data);
+    let engine = XlaEngine::load(dir, "base").unwrap();
+    let packed = PackedForest::pack(&forest, &engine.meta).unwrap();
+    assert_eq!(packed.replication, 4);
+    let rows: Vec<Vec<f32>> = (0..engine.meta.batch)
+        .map(|i| data.row(i * 2).to_vec())
+        .collect();
+    let preds = engine.classify_rows(&rows, &packed).unwrap();
+    for (row, &p) in rows.iter().zip(&preds) {
+        assert_eq!(p, forest.predict(row));
+    }
+}
+
+#[test]
+fn engine_rejects_shape_violations() {
+    let Some(dir) = artifacts() else { return };
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default()
+        .trees(32)
+        .max_depth(6)
+        .seed(0)
+        .fit(&data);
+    let engine = XlaEngine::load(dir, "small").unwrap();
+    let packed = PackedForest::pack(&forest, &engine.meta).unwrap();
+    // wrong flat input size
+    assert!(engine.run(&[0.0; 7], &packed).is_err());
+    // too many rows
+    let rows = vec![vec![0f32; 4]; engine.meta.batch + 1];
+    assert!(engine.classify_rows(&rows, &packed).is_err());
+    // row wider than the artifact
+    let rows = vec![vec![0f32; engine.meta.features + 1]];
+    assert!(engine.classify_rows(&rows, &packed).is_err());
+    // unknown variant
+    assert!(XlaEngine::load(dir, "huge").is_err());
+}

@@ -1,0 +1,194 @@
+//! Integration: the serving coordinator over real sockets — lifecycle,
+//! every endpoint, backend agreement, concurrency, and error handling.
+
+use forest_add::serve::config::ServeConfig;
+use forest_add::serve::http::http_request;
+use forest_add::serve::server;
+use forest_add::data::datasets;
+use forest_add::util::json::{self, Json};
+
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        variant: "small".into(),
+        enable_xla: std::path::Path::new("artifacts/index.json").exists(),
+        http_workers: 3,
+        ..Default::default()
+    }
+}
+
+fn row_json(row: &[f32]) -> Json {
+    Json::Arr(row.iter().map(|&v| json::num(v as f64)).collect())
+}
+
+#[test]
+fn full_server_lifecycle_and_endpoints() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+
+    // healthz
+    let (st, body) = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(body.get("ok").and_then(Json::as_bool), Some(true));
+
+    // model info
+    let (st, model) = http_request(&addr, "GET", "/model", None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(model.get_i64("trees"), Some(32));
+    assert!(model.get_i64("dd_nodes").unwrap() > 0);
+    // (the size crossover below the forest happens at larger tree counts —
+    // Fig. 7; here we only require a sane envelope)
+    assert!(model.get_i64("dd_nodes").unwrap() < model.get_i64("forest_nodes").unwrap() * 20);
+
+    // classify on both native backends, agreement with the local forest
+    for backend in ["forest", "dd"] {
+        for i in [0usize, 60, 149] {
+            let body = json::obj(vec![
+                ("features", row_json(data.row(i))),
+                ("backend", json::s(backend)),
+            ]);
+            let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+            assert_eq!(st, 200, "{resp:?}");
+            let class = resp.get_i64("class").unwrap() as u32;
+            assert_eq!(
+                class,
+                handle.router.bundle().forest.predict(data.row(i)),
+                "backend {backend} row {i}"
+            );
+            assert!(resp.get_i64("steps").is_some());
+            assert!(!resp.get_str("label").unwrap().is_empty());
+        }
+    }
+
+    // xla backend end-to-end when artifacts exist
+    if handle.router.has_xla() {
+        let body = json::obj(vec![
+            ("features", row_json(data.row(25))),
+            ("backend", json::s("xla")),
+        ]);
+        let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+        assert_eq!(st, 200, "{resp:?}");
+        assert_eq!(
+            resp.get_i64("class").unwrap() as u32,
+            handle.router.bundle().forest.predict(data.row(25))
+        );
+        assert_eq!(resp.get("steps"), Some(&Json::Null));
+    }
+
+    // batch endpoint
+    let rows: Vec<Json> = (0..10).map(|i| row_json(data.row(i * 14))).collect();
+    let body = json::obj(vec![("rows", Json::Arr(rows))]);
+    let (st, resp) = http_request(&addr, "POST", "/classify_batch", Some(&body)).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(resp.get("classes").unwrap().as_arr().unwrap().len(), 10);
+    assert_eq!(resp.get("labels").unwrap().as_arr().unwrap().len(), 10);
+
+    // metrics reflect the traffic
+    let (st, metrics) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(st, 200);
+    assert!(metrics.get_i64("requests").unwrap() >= 7);
+    assert_eq!(metrics.get_i64("errors"), Some(0));
+
+    handle.stop();
+}
+
+#[test]
+fn error_handling_over_http() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+
+    // wrong arity
+    let body = json::obj(vec![("features", row_json(&[1.0, 2.0]))]);
+    let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 400);
+    assert!(resp.get_str("error").unwrap().contains("features"));
+
+    // malformed JSON
+    let mut stream = std::net::TcpStream::connect(&addr).unwrap();
+    use std::io::{Read, Write};
+    let junk = "POST /classify HTTP/1.1\r\nContent-Length: 5\r\n\r\n{{{{{";
+    stream.write_all(junk.as_bytes()).unwrap();
+    let mut out = String::new();
+    stream.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+
+    // unknown path and wrong method
+    let (st, _) = http_request(&addr, "GET", "/nope", None).unwrap();
+    assert_eq!(st, 404);
+    let (st, _) = http_request(&addr, "DELETE", "/classify", None).unwrap();
+    assert_eq!(st, 405);
+
+    // unknown backend string
+    let data = datasets::load("iris").unwrap();
+    let body = json::obj(vec![
+        ("features", row_json(data.row(0))),
+        ("backend", json::s("quantum")),
+    ]);
+    let (st, _) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 400);
+
+    // empty batch
+    let body = json::obj(vec![("rows", Json::Arr(vec![]))]);
+    let (st, _) = http_request(&addr, "POST", "/classify_batch", Some(&body)).unwrap();
+    assert_eq!(st, 400);
+
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients_all_served_correctly() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+    let forest = &handle.router.bundle().forest;
+    let expected: Vec<u32> = (0..data.n_rows()).map(|i| forest.predict(data.row(i))).collect();
+
+    std::thread::scope(|scope| {
+        for c in 0..6 {
+            let addr = addr.clone();
+            let data = &data;
+            let expected = &expected;
+            scope.spawn(move || {
+                for i in (c..data.n_rows()).step_by(6) {
+                    let backend = if i % 2 == 0 { "dd" } else { "forest" };
+                    let body = json::obj(vec![
+                        ("features", row_json(data.row(i))),
+                        ("backend", json::s(backend)),
+                    ]);
+                    let (st, resp) =
+                        http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+                    assert_eq!(st, 200);
+                    assert_eq!(resp.get_i64("class").unwrap() as u32, expected[i], "row {i}");
+                }
+            });
+        }
+    });
+
+    let (_, metrics) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(metrics.get_i64("requests"), Some(150));
+    assert_eq!(metrics.get_i64("errors"), Some(0));
+    handle.stop();
+}
+
+#[test]
+fn xla_fallback_when_forest_incompatible() {
+    // 33 trees do not divide the small variant's 32 slots -> the server must
+    // fall back to native backends instead of failing or mis-serving.
+    let cfg = ServeConfig {
+        trees: 33,
+        ..test_config()
+    };
+    let handle = server::start(&cfg).unwrap();
+    assert!(!handle.router.has_xla());
+    let data = datasets::load("iris").unwrap();
+    let addr = handle.addr.to_string();
+    let body = json::obj(vec![("features", row_json(data.row(0)))]);
+    let (st, _) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 200, "dd backend still serves");
+    handle.stop();
+}

