@@ -2,17 +2,17 @@
 //! router (systems extension beyond the paper's step-count metric).
 //!
 //! Measures: single-request latency per backend (router-level, no HTTP
-//! overhead), batched XLA throughput vs batch size, and concurrent
-//! multi-client throughput. Env: FOREST_ADD_BENCH_SECONDS.
+//! overhead), batched throughput vs batch size, and concurrent
+//! multi-client throughput. All dispatch goes through `Classifier` trait
+//! objects resolved from the `ModelRegistry` — the same path production
+//! traffic takes. Env: FOREST_ADD_BENCH_SECONDS.
 
 use forest_add::bench_support::{measure_ns, report, BenchEnv};
-use forest_add::compile::CompileOptions;
-use forest_add::data::datasets;
+use forest_add::engine::Engine;
 use forest_add::serve::batcher::BatcherConfig;
 use forest_add::serve::metrics::ServerMetrics;
 use forest_add::serve::router::Router;
-use forest_add::serve::xla_backend::XlaBackend;
-use forest_add::serve::{BackendKind, ClassifyRequest, ModelBundle};
+use forest_add::serve::{BackendKind, ClassifyRequest};
 use forest_add::util::table::Table;
 use std::sync::Arc;
 use std::time::Duration;
@@ -20,28 +20,35 @@ use std::time::Duration;
 fn main() {
     let env = BenchEnv::load();
     let window = Duration::from_secs_f64(env.measure_secs);
-    let data = datasets::load("iris").unwrap();
-    // `small` artifact geometry: 32 trees, depth 6.
-    let bundle =
-        Arc::new(ModelBundle::train(&data, 32, 6, 7, CompileOptions::default()).unwrap());
-    let xla = match XlaBackend::start("artifacts", "small", &bundle.forest) {
-        Ok(b) => Some(Arc::new(b)),
-        Err(e) => {
-            eprintln!("[serving] xla unavailable ({e}); native backends only");
-            None
-        }
-    };
-    let has_xla = xla.is_some();
+    let data = forest_add::data::datasets::load("iris").unwrap();
+    // `small` artifact geometry: 32 trees, depth 6. The engine loads the
+    // XLA backend when artifacts exist and falls back to native otherwise.
+    let engine = Engine::builder()
+        .dataset(data.clone())
+        .trees(32)
+        .max_depth(6)
+        .seed(7)
+        .xla_artifacts("artifacts", "small")
+        .build()
+        .unwrap();
+    let has_xla = engine
+        .registry()
+        .get(None)
+        .map(|v| v.has(BackendKind::Xla))
+        .unwrap_or(false);
+    if !has_xla {
+        eprintln!("[serving] xla unavailable; native backends only");
+    }
     let router = Arc::new(Router::new(
-        bundle.clone(),
+        engine.registry().clone(),
         Arc::new(ServerMetrics::default()),
         BackendKind::Dd,
-        xla,
         BatcherConfig {
             max_batch: 16,
             max_wait: Duration::from_micros(200),
             queue_cap: 4096,
         },
+        Duration::from_secs(5),
     ));
 
     // --- single-request latency per backend -------------------------------
@@ -56,10 +63,7 @@ fn main() {
             let row = data.row(i % data.n_rows()).to_vec();
             i += 1;
             let resp = router
-                .classify(&ClassifyRequest {
-                    features: row,
-                    backend: Some(backend),
-                })
+                .classify(&ClassifyRequest::new(row).on_backend(backend))
                 .unwrap();
             std::hint::black_box(resp.class);
         });
@@ -94,10 +98,7 @@ fn main() {
                             let row = data.row(i % data.n_rows()).to_vec();
                             i += clients;
                             if router
-                                .classify(&ClassifyRequest {
-                                    features: row,
-                                    backend: Some(backend),
-                                })
+                                .classify(&ClassifyRequest::new(row).on_backend(backend))
                                 .is_ok()
                             {
                                 count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -131,7 +132,7 @@ fn main() {
                 .map(|i| data.row((i * 13) % data.n_rows()).to_vec())
                 .collect();
             let ns = measure_ns(window, || {
-                let out = router.classify_batch(&rows, Some(backend)).unwrap();
+                let (out, _) = router.classify_batch(&rows, Some(backend), None).unwrap();
                 std::hint::black_box(out.len());
             });
             t.row(vec![

@@ -7,7 +7,7 @@
 //! Then: `dot -Tpng figures/fig4_majority.dot -o fig4.png` (if graphviz is
 //! installed) — the .dot files are plain text either way.
 
-use anyhow::Result;
+use forest_add::Result;
 use forest_add::compile::{Abstraction, CompileOptions, ForestCompiler};
 use forest_add::data::datasets;
 use forest_add::forest::ForestLearner;

@@ -5,7 +5,7 @@
 //! trees for a quick pass; `FOREST_ADD_BENCH_TABLE_TREES=10000` reproduces
 //! the paper's setting — the full benches live in `cargo bench`).
 
-use anyhow::Result;
+use forest_add::Result;
 use forest_add::bench_support::{table_row_budgeted, BenchEnv};
 use forest_add::data::datasets;
 use forest_add::util::table::{fmt_reduction, fmt_thousands, Table};

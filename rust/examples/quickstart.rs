@@ -1,0 +1,68 @@
+//! Quickstart: train a Random Forest, compile it into a single decision
+//! diagram, and serve both through one backend-polymorphic API — the
+//! paper's core claim plus the crate's unified `Engine` in forty lines.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use forest_add::classifier::{self, BackendKind};
+use forest_add::engine::Engine;
+use forest_add::util::table::fmt_thousands;
+use forest_add::Result;
+
+fn main() -> Result<()> {
+    // 1. One builder call: load a dataset, train the forest baseline,
+    //    compile the paper's "Most frequent class DD*", and register both
+    //    as the versioned model "default".
+    let data = forest_add::data::datasets::load("iris")?;
+    let engine = Engine::builder()
+        .dataset(data.clone())
+        .trees(150)
+        .seed(7)
+        .build()?;
+
+    // 2. Every backend is a `Classifier` trait object in the registry;
+    //    inspect them through the same lens the serving router uses.
+    let version = engine.registry().get(None)?;
+    println!(
+        "model {} serves {} backends:",
+        version.id,
+        version.slots().len()
+    );
+    let mut steps = Vec::new();
+    for slot in version.slots() {
+        let info = slot.classifier.info();
+        let mean = classifier::mean_steps(slot.classifier.as_ref(), &data)?;
+        println!(
+            "  {:<10} {:<28} {:>8} nodes  mean steps {}",
+            info.backend.name(),
+            info.label,
+            fmt_thousands(info.size_nodes as f64, 0),
+            mean.map(|s| fmt_thousands(s, 2))
+                .unwrap_or_else(|| "n/a".into()),
+        );
+        steps.push(mean);
+    }
+
+    // 3. Same answers, orders of magnitude fewer steps.
+    let (_, rf) = engine.registry().resolve(None, Some(BackendKind::Forest))?;
+    let (_, dd) = engine.registry().resolve(None, Some(BackendKind::Dd))?;
+    let agree = classifier::agreement(rf.classifier.as_ref(), dd.classifier.as_ref(), &data)?;
+    assert_eq!(agree, 1.0, "semantics preserved");
+    if let (Some(Some(rf_steps)), Some(Some(dd_steps))) = (steps.first(), steps.get(1)) {
+        println!(
+            "semantic agreement {agree}: forest {} vs diagram {} steps ({:.0}x faster)",
+            fmt_thousands(*rf_steps, 2),
+            fmt_thousands(*dd_steps, 2),
+            rf_steps / dd_steps
+        );
+    }
+
+    // 4. Classify a fresh measurement on the default backend (the DD),
+    //    then pin the baseline backend explicitly — identical answer.
+    let sample = vec![6.1f32, 2.9, 4.7, 1.4];
+    let class = engine.classify(None, None, &sample)?;
+    let baseline = engine.classify(None, Some(BackendKind::Forest), &sample)?;
+    assert_eq!(class, baseline);
+    println!("sample {sample:?} -> {}", version.label_of(class));
+    Ok(())
+}

@@ -12,7 +12,7 @@
 //! Run: `make artifacts && cargo run --release --example serve_forest`
 //! The measured numbers are recorded in EXPERIMENTS.md §Serving.
 
-use anyhow::Result;
+use forest_add::Result;
 use forest_add::data::datasets;
 use forest_add::serve::config::ServeConfig;
 use forest_add::serve::http::http_request;

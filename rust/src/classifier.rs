@@ -1,0 +1,212 @@
+//! The backend-polymorphic classification API.
+//!
+//! The paper's whole point is that one compiled decision diagram is
+//! *semantically equivalent* to the `n`-tree forest it came from. This
+//! module makes that equivalence a first-class contract: every evaluator —
+//! the naive forest walker, the compiled ADD in all three
+//! [`Abstraction`](crate::compile::Abstraction) variants, and the XLA/PJRT
+//! tensorised batch engine — implements the same [`Classifier`] trait, so
+//! the serving router, the CLI, benches, and conformance tests dispatch
+//! uniformly through trait objects instead of hard-coding a backend.
+//!
+//! The trait is **batch-first by default**: `classify_with_steps` is the
+//! one required evaluation method, and `classify`/`classify_batch` come
+//! for free, so a new backend (sharded DD, quantised forest, …) is a
+//! drop-in impl. Batch-native engines (XLA) override `classify_batch`
+//! with their fused path and advertise it via
+//! [`CostModel::preferred_batch`], which the router's dynamic batcher
+//! uses to decide which traffic to coalesce.
+
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+
+/// Which execution backend a classifier represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Naive forest walk (baseline).
+    Forest,
+    /// Compiled decision diagram (the paper's system).
+    Dd,
+    /// Batched XLA/PJRT tensorised evaluator.
+    Xla,
+}
+
+impl BackendKind {
+    /// Parse from a request/config string.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "forest" | "rf" => Ok(BackendKind::Forest),
+            "dd" | "add" | "diagram" => Ok(BackendKind::Dd),
+            "xla" | "pjrt" => Ok(BackendKind::Xla),
+            other => Err(Error::invalid(format!(
+                "unknown backend '{other}' (forest|dd|xla)"
+            ))),
+        }
+    }
+
+    /// Stable name for metrics/JSON.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Forest => "forest",
+            BackendKind::Dd => "dd",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Static cost model of a backend, in the paper's §6 units where they
+/// apply. Lets callers reason about a backend without probing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostModel {
+    /// Upper bound on §6 steps for one classification (`None` when the
+    /// backend cannot meter steps, e.g. tensorised evaluation).
+    pub max_steps: Option<usize>,
+    /// Aggregation reads still paid at runtime per classification: `n`
+    /// for class-word DDs and the forest vote, `|C|` for class-vector
+    /// DDs, `0` after the majority abstraction.
+    pub aggregation_reads: usize,
+    /// Batch size at which the backend is most efficient (`1` =
+    /// single-row evaluator; `>1` means the router should coalesce
+    /// traffic through the dynamic batcher).
+    pub preferred_batch: usize,
+}
+
+/// Metadata describing a classifier: backend kind, size statistics, and
+/// cost model. Returned by [`Classifier::info`].
+#[derive(Debug, Clone)]
+pub struct ClassifierInfo {
+    /// Execution backend.
+    pub backend: BackendKind,
+    /// Human-readable description (paper-style series label where one
+    /// exists, e.g. `Most frequent class DD*`).
+    pub label: String,
+    /// Feature arity the classifier expects.
+    pub n_features: usize,
+    /// Number of classes it can emit.
+    pub n_classes: usize,
+    /// Structure size in nodes (Fig. 7 / Table 2 measure; `0` when the
+    /// backend is not node-based).
+    pub size_nodes: usize,
+    /// Static cost model.
+    pub cost: CostModel,
+}
+
+/// A classification backend: forest walker, compiled DD, or tensorised
+/// engine — anything that maps a feature row to a class index with the
+/// forest's majority-vote semantics.
+///
+/// `Send + Sync` is required: classifiers are shared across serving
+/// threads as `Arc<dyn Classifier>` and hot-swapped through the
+/// [`ModelRegistry`](crate::engine::ModelRegistry).
+pub trait Classifier: Send + Sync {
+    /// Backend metadata: kind, label, size stats, cost model.
+    fn info(&self) -> ClassifierInfo;
+
+    /// Classify one row, reporting the §6 step count when the backend can
+    /// meter it. This is the one required evaluation method.
+    fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)>;
+
+    /// Classify one row.
+    fn classify(&self, x: &[f32]) -> Result<u32> {
+        Ok(self.classify_with_steps(x)?.0)
+    }
+
+    /// Classify a batch of rows. The default loops `classify`, so every
+    /// backend gets batched evaluation for free; batch-native engines
+    /// override this with their fused path.
+    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+        rows.iter().map(|r| self.classify(r)).collect()
+    }
+}
+
+/// Mean §6 step count over a dataset; `None` when the backend cannot
+/// meter steps.
+pub fn mean_steps(c: &dyn Classifier, data: &Dataset) -> Result<Option<f64>> {
+    let mut total = 0usize;
+    for i in 0..data.n_rows() {
+        match c.classify_with_steps(data.row(i))?.1 {
+            Some(s) => total += s,
+            None => return Ok(None),
+        }
+    }
+    Ok(Some(total as f64 / data.n_rows() as f64))
+}
+
+/// Classification accuracy against dataset labels.
+pub fn accuracy(c: &dyn Classifier, data: &Dataset) -> Result<f64> {
+    let mut ok = 0usize;
+    for i in 0..data.n_rows() {
+        if c.classify(data.row(i))? == data.label(i) {
+            ok += 1;
+        }
+    }
+    Ok(ok as f64 / data.n_rows() as f64)
+}
+
+/// Fraction of rows on which two classifiers agree — the
+/// semantics-preservation check (must be 1.0 for backends compiled from
+/// the same forest).
+pub fn agreement(a: &dyn Classifier, b: &dyn Classifier, data: &Dataset) -> Result<f64> {
+    let mut ok = 0usize;
+    for i in 0..data.n_rows() {
+        if a.classify(data.row(i))? == b.classify(data.row(i))? {
+            ok += 1;
+        }
+    }
+    Ok(ok as f64 / data.n_rows() as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(BackendKind::parse("dd").unwrap(), BackendKind::Dd);
+        assert_eq!(BackendKind::parse("RF").unwrap(), BackendKind::Forest);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::Xla.name(), "xla");
+    }
+
+    /// A fixed-answer classifier for exercising the default methods.
+    struct Constant {
+        class: u32,
+        features: usize,
+    }
+
+    impl Classifier for Constant {
+        fn info(&self) -> ClassifierInfo {
+            ClassifierInfo {
+                backend: BackendKind::Forest,
+                label: "constant".into(),
+                n_features: self.features,
+                n_classes: 2,
+                size_nodes: 1,
+                cost: CostModel {
+                    max_steps: Some(0),
+                    aggregation_reads: 0,
+                    preferred_batch: 1,
+                },
+            }
+        }
+
+        fn classify_with_steps(&self, _x: &[f32]) -> Result<(u32, Option<usize>)> {
+            Ok((self.class, Some(0)))
+        }
+    }
+
+    #[test]
+    fn default_methods_derive_from_classify_with_steps() {
+        let c = Constant {
+            class: 1,
+            features: 2,
+        };
+        assert_eq!(c.classify(&[0.0, 0.0]).unwrap(), 1);
+        let batch = c
+            .classify_batch(&[vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 2.0]])
+            .unwrap();
+        assert_eq!(batch, vec![1, 1, 1]);
+    }
+
+}

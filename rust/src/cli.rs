@@ -7,10 +7,17 @@
 //! - `eval`     — steps/size/accuracy comparison table for one dataset
 //! - `serve`    — start the HTTP serving coordinator
 //! - `classify` — client convenience: send one request to a running server
+//! - `models`   — client convenience: list models on a running server
 //! - `artifacts`— inspect compiled XLA artifact variants
+//!
+//! Every evaluation the CLI performs goes through [`Classifier`] trait
+//! objects resolved from a [`ModelRegistry`] — the CLI never dispatches
+//! on a concrete evaluator type.
 
+use crate::classifier::{self, Classifier};
 use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
 use crate::data::datasets;
+use crate::engine::ModelRegistry;
 use crate::error::{Error, Result};
 use crate::forest::{ForestLearner, RandomForest};
 use crate::predicate::PredicateOrder;
@@ -20,6 +27,7 @@ use crate::serve::{server, BackendKind};
 use crate::util::argparse::{ArgSpec, Args};
 use crate::util::json::{self, Json};
 use crate::util::table::{fmt_thousands, Table};
+use std::sync::Arc;
 
 const USAGE: &str = "forest-add — Large Random Forests, optimised for rapid evaluation
 
@@ -33,6 +41,7 @@ COMMANDS:
   eval       Compare RF vs DD steps/size/accuracy on a dataset
   serve      Start the HTTP serving coordinator
   classify   Send one classification request to a running server
+  models     List the models registered on a running server
   artifacts  List compiled XLA artifact variants
 
 Run `forest-add <COMMAND> --help` for per-command options.
@@ -52,6 +61,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "eval" => cmd_eval(&rest),
         "serve" => cmd_serve(&rest),
         "classify" => cmd_classify(&rest),
+        "models" => cmd_models(&rest),
         "artifacts" => cmd_artifacts(&rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -90,7 +100,7 @@ fn train_spec() -> ArgSpec {
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let a = train_spec().parse(args)?;
-    let ds = server::resolve_dataset(a.str("dataset"))?;
+    let ds = crate::data::resolve(a.str("dataset"))?;
     let forest = ForestLearner::default()
         .trees(a.usize("trees")?)
         .seed(a.u64("seed")?)
@@ -103,7 +113,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         forest.n_trees(),
         ds.name,
         forest.n_nodes(),
-        forest.accuracy(&ds)
+        classifier::accuracy(&forest, &ds)?
     );
     Ok(())
 }
@@ -152,7 +162,7 @@ fn load_or_train(a: &Args) -> Result<(RandomForest, Option<crate::data::Dataset>
     if dataset.is_empty() {
         return Err(Error::invalid("need --model or --dataset"));
     }
-    let ds = server::resolve_dataset(dataset)?;
+    let ds = crate::data::resolve(dataset)?;
     let forest = ForestLearner::default()
         .trees(a.usize("trees")?)
         .seed(a.u64("seed")?)
@@ -190,11 +200,19 @@ fn cmd_compile(args: &[String]) -> Result<()> {
         100.0 * (1.0 - s.total() as f64 / forest.n_nodes() as f64)
     );
     if let Some(ds) = &ds {
+        // Both structures are measured through the Classifier trait — the
+        // same dispatch path the serving router uses.
+        let rf_steps = classifier::mean_steps(&forest, ds)?;
+        let dd_steps = classifier::mean_steps(&dd, ds)?;
         println!(
             "mean steps: forest {} vs DD {} | agreement {:.4}",
-            fmt_thousands(forest.mean_steps(ds), 2),
-            fmt_thousands(dd.mean_steps(ds), 2),
-            dd.agreement(&forest, ds)
+            rf_steps
+                .map(|s| fmt_thousands(s, 2))
+                .unwrap_or_else(|| "—".into()),
+            dd_steps
+                .map(|s| fmt_thousands(s, 2))
+                .unwrap_or_else(|| "—".into()),
+            classifier::agreement(&forest, &dd, ds)?
         );
     }
     let dot = a.str("dot");
@@ -223,48 +241,74 @@ fn eval_spec() -> ArgSpec {
 
 fn cmd_eval(args: &[String]) -> Result<()> {
     let a = eval_spec().parse(args)?;
-    let ds = server::resolve_dataset(a.str("dataset"))?;
+    let ds = crate::data::resolve(a.str("dataset"))?;
     let forest = ForestLearner::default()
         .trees(a.usize("trees")?)
         .seed(a.u64("seed")?)
         .fit(&ds);
-    let mut t = Table::new(&["structure", "mean steps", "size (nodes)", "accuracy"]);
-    t.row(vec![
-        "Random Forest".into(),
-        fmt_thousands(forest.mean_steps(&ds), 2),
-        fmt_thousands(forest.n_nodes() as f64, 0),
-        format!("{:.4}", forest.accuracy(&ds)),
-    ]);
-    for (abstraction, unsat) in [
-        (Abstraction::Word, true),
-        (Abstraction::Vector, true),
-        (Abstraction::Majority, true),
+    let schema = forest.schema.clone();
+    // Every structure is registered as a named model and measured through
+    // the Classifier trait object resolved from the registry — the exact
+    // dispatch path the serving router uses.
+    let registry = ModelRegistry::new();
+    registry.register(
+        "forest",
+        schema.clone(),
+        vec![(
+            BackendKind::Forest,
+            Arc::new(forest.clone()) as Arc<dyn Classifier>,
+        )],
+    )?;
+    let mut names: Vec<&str> = vec!["forest"];
+    let mut cutoffs: Vec<(String, String)> = Vec::new();
+    for (name, abstraction) in [
+        ("word-dd", Abstraction::Word),
+        ("vector-dd", Abstraction::Vector),
+        ("majority-dd", Abstraction::Majority),
     ] {
         let opts = CompileOptions {
             abstraction,
-            unsat_elim: unsat,
+            unsat_elim: true,
             node_budget: a.usize("budget")?,
             ..Default::default()
         };
         match ForestCompiler::new(opts).compile(&forest) {
             Ok(dd) => {
-                t.row(vec![
-                    dd.label(),
-                    fmt_thousands(dd.mean_steps(&ds), 2),
-                    fmt_thousands(dd.size().total() as f64, 0),
-                    format!("{:.4}", dd.accuracy(&ds)),
-                ]);
+                registry.register(
+                    name,
+                    schema.clone(),
+                    vec![(BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>)],
+                )?;
+                names.push(name);
             }
-            Err(Error::Capacity(msg)) => {
-                t.row(vec![
-                    format!("{} (cut off)", abstraction.label(unsat)),
-                    "—".into(),
-                    msg,
-                    "—".into(),
-                ]);
-            }
+            Err(Error::Capacity(msg)) => cutoffs.push((abstraction.label(true), msg)),
             Err(e) => return Err(e),
         }
+    }
+    let mut t = Table::new(&["model", "structure", "mean steps", "size (nodes)", "accuracy"]);
+    for name in names {
+        let (_, slot) = registry.resolve(Some(name), None)?;
+        let c = slot.classifier.as_ref();
+        let info = c.info();
+        let steps = classifier::mean_steps(c, &ds)?;
+        t.row(vec![
+            name.to_string(),
+            info.label,
+            steps
+                .map(|s| fmt_thousands(s, 2))
+                .unwrap_or_else(|| "—".into()),
+            fmt_thousands(info.size_nodes as f64, 0),
+            format!("{:.4}", classifier::accuracy(c, &ds)?),
+        ]);
+    }
+    for (label, msg) in cutoffs {
+        t.row(vec![
+            "—".into(),
+            format!("{label} (cut off)"),
+            "—".into(),
+            msg,
+            "—".into(),
+        ]);
     }
     print!("{}", t.to_text());
     Ok(())
@@ -280,6 +324,7 @@ fn serve_spec() -> ArgSpec {
         .opt("backend", "", "default backend: forest | dd | xla")
         .opt("artifacts", "", "artifacts directory")
         .opt("variant", "", "artifact variant (small | base | wide)")
+        .opt("reply-timeout-ms", "", "batched-reply timeout in milliseconds")
         .switch("no-xla", "do not load the XLA backend")
         .switch("dump-config", "print the effective config and exit")
 }
@@ -312,6 +357,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if !a.str("variant").is_empty() {
         cfg.variant = a.str("variant").to_string();
     }
+    if !a.str("reply-timeout-ms").is_empty() {
+        cfg.reply_timeout_ms = a.u64("reply-timeout-ms")?;
+    }
     if a.flag("no-xla") {
         cfg.enable_xla = false;
     }
@@ -332,6 +380,7 @@ fn classify_spec() -> ArgSpec {
         .req("addr", "server address, e.g. 127.0.0.1:7878")
         .req("features", "comma-separated feature values")
         .opt("backend", "", "forest | dd | xla")
+        .opt("model", "", "named model (server default otherwise)")
 }
 
 fn cmd_classify(args: &[String]) -> Result<()> {
@@ -350,8 +399,26 @@ fn cmd_classify(args: &[String]) -> Result<()> {
     if !a.str("backend").is_empty() {
         fields.push(("backend", json::s(a.str("backend"))));
     }
+    if !a.str("model").is_empty() {
+        fields.push(("model", json::s(a.str("model"))));
+    }
     let body = json::obj(fields);
     let (status, resp) = http_request(a.str("addr"), "POST", "/classify", Some(&body))?;
+    println!("{}", resp.to_string_pretty());
+    if status != 200 {
+        return Err(Error::Serve(format!("server returned {status}")));
+    }
+    Ok(())
+}
+
+fn models_spec() -> ArgSpec {
+    ArgSpec::new("forest-add models", "List models on a running server")
+        .req("addr", "server address, e.g. 127.0.0.1:7878")
+}
+
+fn cmd_models(args: &[String]) -> Result<()> {
+    let a = models_spec().parse(args)?;
+    let (status, resp) = http_request(a.str("addr"), "GET", "/models", None)?;
     println!("{}", resp.to_string_pretty());
     if status != 200 {
         return Err(Error::Serve(format!("server returned {status}")));

@@ -27,6 +27,7 @@ pub mod persist;
 
 use crate::add::reduce::{reduce_feasible, FusedCombiner, Reducer};
 use crate::add::{ClassLabel, ClassVector, ClassWord, Manager, Monoid, NodeId, SizeStats};
+use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::data::{Dataset, Schema};
 use crate::error::{Error, Result};
 use crate::forest::RandomForest;
@@ -194,27 +195,36 @@ impl CompiledDD {
         }
     }
 
-    /// Mean §6 step count over a dataset.
+    /// Mean §6 step count over a dataset. Delegates to
+    /// [`crate::classifier::mean_steps`] — the single implementation of
+    /// the §6 accounting.
     pub fn mean_steps(&self, data: &Dataset) -> f64 {
-        let total: usize = (0..data.n_rows())
-            .map(|i| self.classify_with_steps(data.row(i)).1)
-            .sum();
-        total as f64 / data.n_rows() as f64
+        crate::classifier::mean_steps(self, data)
+            .expect("diagram evaluation is infallible")
+            .expect("diagram steps are always meterable")
     }
 
     /// Accuracy against dataset labels.
     pub fn accuracy(&self, data: &Dataset) -> f64 {
-        let ok = data.iter().filter(|(x, y)| self.classify(x) == *y).count();
-        ok as f64 / data.n_rows() as f64
+        crate::classifier::accuracy(self, data).expect("diagram evaluation is infallible")
     }
 
     /// Fraction of rows where this diagram and `forest` agree — the
     /// semantics-preservation check (must be 1.0).
     pub fn agreement(&self, forest: &RandomForest, data: &Dataset) -> f64 {
-        let ok = (0..data.n_rows())
-            .filter(|&i| self.classify(data.row(i)) == forest.predict(data.row(i)))
-            .count();
-        ok as f64 / data.n_rows() as f64
+        crate::classifier::agreement(self, forest, data)
+            .expect("native evaluation is infallible")
+    }
+
+    /// Aggregation reads the abstraction still pays per classification at
+    /// runtime: `n` for class words, `|C|` for class vectors, `0` after
+    /// the majority abstraction (§3–§4).
+    pub fn aggregation_reads(&self) -> usize {
+        match self.abstraction() {
+            Abstraction::Word => self.stats.trees,
+            Abstraction::Vector => self.schema.n_classes(),
+            Abstraction::Majority => 0,
+        }
     }
 
     /// Graphviz rendering (Figs. 2–5 style).
@@ -236,6 +246,34 @@ impl CompiledDD {
                 })
             }
         }
+    }
+}
+
+/// The paper's backend: one root-to-terminal walk through the compiled
+/// diagram, identical in all three [`Abstraction`] variants up to the
+/// aggregation reads still paid at runtime.
+impl Classifier for CompiledDD {
+    fn info(&self) -> ClassifierInfo {
+        let size = self.size();
+        ClassifierInfo {
+            backend: BackendKind::Dd,
+            label: self.label(),
+            n_features: self.schema.n_features(),
+            n_classes: self.n_classes(),
+            size_nodes: size.total(),
+            cost: CostModel {
+                // One decision per distinct predicate level at most, plus
+                // the abstraction's runtime aggregation reads.
+                max_steps: Some(self.stats.predicates + self.aggregation_reads()),
+                aggregation_reads: self.aggregation_reads(),
+                preferred_batch: 1,
+            },
+        }
+    }
+
+    fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
+        let (class, steps) = CompiledDD::classify_with_steps(self, x);
+        Ok((class, Some(steps)))
     }
 }
 
@@ -734,6 +772,32 @@ mod tests {
         assert!(dd.stats.peak_live > 0);
         assert!(dd.stats.final_size.total() > 0);
         assert_eq!(dd.label(), "Most frequent class DD*");
+    }
+
+    #[test]
+    fn classifier_trait_covers_all_abstractions() {
+        let (ds, forest) = iris_forest(10);
+        for (abstraction, reads) in [
+            (Abstraction::Word, 10),
+            (Abstraction::Vector, 3),
+            (Abstraction::Majority, 0),
+        ] {
+            let dd = ForestCompiler::new(opts(abstraction, true))
+                .compile(&forest)
+                .unwrap();
+            assert_eq!(dd.aggregation_reads(), reads, "{abstraction:?}");
+            let info = Classifier::info(&dd);
+            assert_eq!(info.backend, BackendKind::Dd);
+            assert_eq!(info.label, dd.label());
+            assert_eq!(info.size_nodes, dd.size().total());
+            assert_eq!(info.cost.aggregation_reads, reads);
+            let c: &dyn Classifier = &dd;
+            for i in (0..ds.n_rows()).step_by(31) {
+                let (class, steps) = c.classify_with_steps(ds.row(i)).unwrap();
+                let (want_c, want_s) = dd.classify_with_steps(ds.row(i));
+                assert_eq!((class, steps), (want_c, Some(want_s)));
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,17 @@ pub mod synth;
 
 use crate::error::{Error, Result};
 
+/// Resolve a dataset spec: a built-in name, or a `.csv`/`.arff` path.
+pub fn resolve(spec: &str) -> Result<Dataset> {
+    if spec.ends_with(".csv") {
+        csv::load_file(spec)
+    } else if spec.ends_with(".arff") {
+        arff::load_file(spec)
+    } else {
+        datasets::load(spec)
+    }
+}
+
 /// The kind of a feature column.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FeatureKind {

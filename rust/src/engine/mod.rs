@@ -1,0 +1,395 @@
+//! The engine facade: one entry point that owns the model registry and
+//! builds classifiers for every backend.
+//!
+//! [`Engine::builder`] is the quickstart path — give it a dataset and it
+//! trains the forest, compiles the paper's DD, optionally loads the
+//! XLA/PJRT artifact, and registers everything as one named model:
+//!
+//! ```no_run
+//! use forest_add::engine::Engine;
+//!
+//! let data = forest_add::data::datasets::load("iris").unwrap();
+//! let engine = Engine::builder()
+//!     .dataset(data.clone())
+//!     .trees(100)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! let class = engine.classify(None, None, data.row(0)).unwrap();
+//! # let _ = class;
+//! ```
+//!
+//! Beyond the builder, the engine exposes the [`ModelRegistry`] directly:
+//! register additional named models, hot-swap a retrained version under
+//! the same name, and select model + backend per request. The serving
+//! router shares the same registry, so a swap through the engine is
+//! immediately visible to HTTP traffic.
+
+pub mod registry;
+
+pub use registry::{BackendSlot, ModelId, ModelRegistry, ModelVersion};
+
+use crate::classifier::{BackendKind, Classifier, ClassifierInfo};
+use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
+use crate::data::Dataset;
+use crate::error::{Error, Result};
+use crate::forest::{ForestLearner, RandomForest};
+use crate::serve::xla_backend::XlaBackend;
+use std::sync::Arc;
+
+/// The classification engine: a facade over a [`ModelRegistry`] of
+/// versioned models whose backends all speak [`Classifier`].
+pub struct Engine {
+    registry: Arc<ModelRegistry>,
+}
+
+impl Default for Engine {
+    fn default() -> Self {
+        Engine::new()
+    }
+}
+
+impl Engine {
+    /// An engine with an empty registry (register models manually).
+    pub fn new() -> Engine {
+        Engine {
+            registry: Arc::new(ModelRegistry::new()),
+        }
+    }
+
+    /// An engine wrapping an existing (possibly shared) registry.
+    pub fn with_registry(registry: Arc<ModelRegistry>) -> Engine {
+        Engine { registry }
+    }
+
+    /// Builder: train + compile + register one model.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// The shared model registry.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Train a forest on `data`, compile it under `opts`, and register
+    /// the forest + DD pair under `name` (hot-swapping any existing
+    /// version). Returns the issued [`ModelId`].
+    pub fn train_and_register(
+        &self,
+        name: &str,
+        data: &Dataset,
+        trees: usize,
+        max_depth: usize,
+        seed: u64,
+        opts: CompileOptions,
+    ) -> Result<ModelId> {
+        let (forest, dd) = train_forest_and_dd(data, trees, max_depth, seed, opts)?;
+        let schema = forest.schema.clone();
+        self.registry.register(
+            name,
+            schema,
+            vec![
+                (BackendKind::Forest, Arc::new(forest) as Arc<dyn Classifier>),
+                (BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>),
+            ],
+        )
+    }
+
+    /// Classify one row on `model`/`backend` (`None` = defaults).
+    pub fn classify(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        x: &[f32],
+    ) -> Result<u32> {
+        let (version, slot) = self.registry.resolve(model, backend)?;
+        version.check_row(x)?;
+        slot.classifier.classify(x)
+    }
+
+    /// Classify a batch of rows on `model`/`backend`.
+    pub fn classify_batch(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        rows: &[Vec<f32>],
+    ) -> Result<Vec<u32>> {
+        let (version, slot) = self.registry.resolve(model, backend)?;
+        for r in rows {
+            version.check_row(r)?;
+        }
+        slot.classifier.classify_batch(rows)
+    }
+
+    /// Per-backend metadata for a model (`None` = default model).
+    pub fn info(&self, model: Option<&str>) -> Result<Vec<ClassifierInfo>> {
+        let version = self.registry.get(model)?;
+        Ok(version.slots().iter().map(|s| s.classifier.info()).collect())
+    }
+}
+
+/// Builder for [`Engine`]: dataset in, trained + compiled + registered
+/// model out.
+#[derive(Debug, Clone)]
+pub struct EngineBuilder {
+    name: String,
+    dataset: Option<Dataset>,
+    dataset_spec: Option<String>,
+    trees: usize,
+    max_depth: usize,
+    seed: u64,
+    compile: CompileOptions,
+    xla: Option<(String, String)>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            name: "default".into(),
+            dataset: None,
+            dataset_spec: None,
+            trees: 100,
+            max_depth: 0,
+            seed: 42,
+            compile: CompileOptions::default(),
+            xla: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Name the registered model (default `"default"`).
+    pub fn model_name(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    /// Train on this in-memory dataset.
+    pub fn dataset(mut self, data: Dataset) -> Self {
+        self.dataset = Some(data);
+        self
+    }
+
+    /// Train on a dataset spec: a built-in name or a `.csv`/`.arff` path
+    /// (resolved at [`build`](Self::build) time).
+    pub fn dataset_spec(mut self, spec: impl Into<String>) -> Self {
+        self.dataset_spec = Some(spec.into());
+        self
+    }
+
+    /// Forest size (default 100).
+    pub fn trees(mut self, n: usize) -> Self {
+        self.trees = n;
+        self
+    }
+
+    /// Per-tree depth cap (`0` = unlimited; the XLA path needs a cap that
+    /// fits the artifact depth).
+    pub fn max_depth(mut self, d: usize) -> Self {
+        self.max_depth = d;
+        self
+    }
+
+    /// Training seed (default 42).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Abstraction of the compiled diagram (default majority, the
+    /// paper's `Most frequent class DD*`).
+    pub fn abstraction(mut self, a: Abstraction) -> Self {
+        self.compile.abstraction = a;
+        self
+    }
+
+    /// Enable/disable unsatisfiable-path elimination (default on).
+    pub fn unsat_elim(mut self, on: bool) -> Self {
+        self.compile.unsat_elim = on;
+        self
+    }
+
+    /// Replace the full compiler configuration.
+    pub fn compile_options(mut self, opts: CompileOptions) -> Self {
+        self.compile = opts;
+        self
+    }
+
+    /// Also load the XLA/PJRT backend from `artifacts_dir`/`variant`.
+    /// Load failures fall back to the native backends with a warning
+    /// (DESIGN.md §7) — they never fail the build.
+    pub fn xla_artifacts(mut self, artifacts_dir: impl Into<String>, variant: impl Into<String>) -> Self {
+        self.xla = Some((artifacts_dir.into(), variant.into()));
+        self
+    }
+
+    /// Train, compile, optionally load XLA, and register the model.
+    pub fn build(self) -> Result<Engine> {
+        let data = match (self.dataset, self.dataset_spec) {
+            (Some(d), _) => d,
+            (None, Some(spec)) => crate::data::resolve(&spec)?,
+            (None, None) => {
+                return Err(Error::invalid(
+                    "EngineBuilder needs a dataset (use .dataset(..) or .dataset_spec(..))",
+                ))
+            }
+        };
+        let (forest, dd) =
+            train_forest_and_dd(&data, self.trees, self.max_depth, self.seed, self.compile)?;
+        let schema = forest.schema.clone();
+        let mut backends: Vec<(BackendKind, Arc<dyn Classifier>)> = Vec::new();
+        let xla = match &self.xla {
+            Some((dir, variant)) => match XlaBackend::start(dir, variant, &forest) {
+                Ok(b) => Some(b),
+                Err(e) => {
+                    // Per DESIGN.md §7: incompatible forests fall back to
+                    // the native DD backend rather than silently changing
+                    // semantics.
+                    crate::log_warn!("engine: xla backend unavailable, falling back to dd: {e}");
+                    None
+                }
+            },
+            None => None,
+        };
+        backends.push((BackendKind::Forest, Arc::new(forest) as Arc<dyn Classifier>));
+        backends.push((BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>));
+        if let Some(b) = xla {
+            backends.push((BackendKind::Xla, Arc::new(b) as Arc<dyn Classifier>));
+        }
+        let engine = Engine::new();
+        engine.registry.register(self.name.as_str(), schema, backends)?;
+        Ok(engine)
+    }
+}
+
+/// Shared train→compile step of [`EngineBuilder::build`] and
+/// [`Engine::train_and_register`].
+fn train_forest_and_dd(
+    data: &Dataset,
+    trees: usize,
+    max_depth: usize,
+    seed: u64,
+    opts: CompileOptions,
+) -> Result<(RandomForest, crate::compile::CompiledDD)> {
+    if trees == 0 {
+        return Err(Error::invalid("trees must be positive"));
+    }
+    let forest = ForestLearner::default()
+        .trees(trees)
+        .max_depth(max_depth)
+        .seed(seed)
+        .fit(data);
+    let dd = ForestCompiler::new(opts).compile(&forest)?;
+    Ok((forest, dd))
+}
+
+/// Register a standalone forest as a single-backend model (helper for
+/// tools that evaluate the baseline through the registry).
+pub fn register_forest(
+    registry: &ModelRegistry,
+    name: &str,
+    forest: RandomForest,
+) -> Result<ModelId> {
+    let schema = forest.schema.clone();
+    registry.register(
+        name,
+        schema,
+        vec![(BackendKind::Forest, Arc::new(forest) as Arc<dyn Classifier>)],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::datasets;
+
+    #[test]
+    fn builder_trains_compiles_and_registers() {
+        let data = datasets::iris();
+        let engine = Engine::builder()
+            .dataset(data.clone())
+            .trees(12)
+            .seed(3)
+            .build()
+            .unwrap();
+        let version = engine.registry().get(None).unwrap();
+        assert_eq!(version.id.to_string(), "default@v1");
+        assert_eq!(version.default_backend, BackendKind::Dd);
+        assert!(version.has(BackendKind::Forest));
+        assert!(version.has(BackendKind::Dd));
+        // forest and dd agree through the facade on every row
+        for i in (0..data.n_rows()).step_by(17) {
+            let rf = engine
+                .classify(None, Some(BackendKind::Forest), data.row(i))
+                .unwrap();
+            let dd = engine
+                .classify(None, Some(BackendKind::Dd), data.row(i))
+                .unwrap();
+            assert_eq!(rf, dd, "row {i}");
+        }
+    }
+
+    #[test]
+    fn builder_validates_inputs() {
+        assert!(Engine::builder().build().is_err(), "dataset required");
+        assert!(Engine::builder()
+            .dataset(datasets::iris())
+            .trees(0)
+            .build()
+            .is_err());
+        assert!(Engine::builder()
+            .dataset_spec("no-such-dataset")
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn builder_resolves_dataset_specs() {
+        let engine = Engine::builder()
+            .dataset_spec("lenses")
+            .trees(5)
+            .build()
+            .unwrap();
+        assert_eq!(engine.registry().len(), 1);
+    }
+
+    #[test]
+    fn engine_batch_and_info() {
+        let data = datasets::iris();
+        let engine = Engine::builder()
+            .dataset(data.clone())
+            .trees(8)
+            .seed(1)
+            .build()
+            .unwrap();
+        let rows: Vec<Vec<f32>> = (0..12).map(|i| data.row(i * 11).to_vec()).collect();
+        let batch = engine.classify_batch(None, None, &rows).unwrap();
+        assert_eq!(batch.len(), 12);
+        for (row, &c) in rows.iter().zip(&batch) {
+            assert_eq!(c, engine.classify(None, None, row).unwrap());
+        }
+        let infos = engine.info(None).unwrap();
+        assert_eq!(infos.len(), 2);
+        assert!(infos.iter().any(|i| i.backend == BackendKind::Forest));
+        assert!(infos.iter().any(|i| i.backend == BackendKind::Dd));
+        // arity violations are rejected at the facade
+        assert!(engine.classify(None, None, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn train_and_register_hot_swaps_named_models() {
+        let data = datasets::lenses();
+        let engine = Engine::new();
+        let id1 = engine
+            .train_and_register("lenses", &data, 6, 0, 1, CompileOptions::default())
+            .unwrap();
+        assert_eq!(id1.version, 1);
+        let id2 = engine
+            .train_and_register("lenses", &data, 10, 0, 2, CompileOptions::default())
+            .unwrap();
+        assert_eq!(id2.version, 2);
+        let version = engine.registry().get(Some("lenses")).unwrap();
+        assert_eq!(version.id.version, 2);
+    }
+}

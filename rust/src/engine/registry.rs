@@ -1,0 +1,477 @@
+//! Versioned model registry: named models, monotonic versions, atomic
+//! hot-swap, per-request backend selection.
+//!
+//! The registry is the serving layer's source of truth. Each *name* maps
+//! to the current [`ModelVersion`]; registering under an existing name
+//! atomically replaces it with a bumped version (requests already holding
+//! the old `Arc` finish against the old version — classic RCU). Every
+//! backend of a version is a [`Classifier`] trait object, so the router
+//! never touches a concrete evaluator type.
+
+use crate::classifier::{BackendKind, Classifier};
+use crate::data::Schema;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, RwLock};
+
+/// Identity of one registered model version: name + monotonic version.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelId {
+    /// Registry name (request-addressable).
+    pub name: String,
+    /// Monotonic version, starting at 1 and bumped by every hot-swap of
+    /// the same name (never reset, even across remove/re-register).
+    pub version: u64,
+}
+
+impl fmt::Display for ModelId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@v{}", self.name, self.version)
+    }
+}
+
+/// One backend of a model version: the classifier trait object plus
+/// routing metadata cached at registration time (so the request hot path
+/// never calls [`Classifier::info`], which allocates).
+#[derive(Clone)]
+pub struct BackendSlot {
+    /// Execution backend kind.
+    pub kind: BackendKind,
+    /// The evaluator.
+    pub classifier: Arc<dyn Classifier>,
+    /// True when the backend prefers batched dispatch
+    /// (`info().cost.preferred_batch > 1`) — the router coalesces such
+    /// traffic through the dynamic batcher.
+    pub batch_first: bool,
+}
+
+impl fmt::Debug for BackendSlot {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("BackendSlot")
+            .field("kind", &self.kind)
+            .field("batch_first", &self.batch_first)
+            .finish()
+    }
+}
+
+/// An immutable, atomically-swappable model version: schema plus one
+/// classifier per available backend.
+pub struct ModelVersion {
+    /// Identity (name + version).
+    pub id: ModelId,
+    /// Schema of the training data (feature arity, class labels).
+    pub schema: Schema,
+    /// Backend used when a request names none (`dd` when present,
+    /// otherwise the first registered backend).
+    pub default_backend: BackendKind,
+    slots: Vec<BackendSlot>,
+}
+
+impl fmt::Debug for ModelVersion {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ModelVersion")
+            .field("id", &self.id)
+            .field("default_backend", &self.default_backend)
+            .field("slots", &self.slots)
+            .finish()
+    }
+}
+
+impl ModelVersion {
+    /// All backends of this version.
+    pub fn slots(&self) -> &[BackendSlot] {
+        &self.slots
+    }
+
+    /// The slot for a backend kind.
+    pub fn slot(&self, kind: BackendKind) -> Result<&BackendSlot> {
+        self.slots.iter().find(|s| s.kind == kind).ok_or_else(|| {
+            Error::Serve(format!(
+                "backend '{}' not available for model '{}'",
+                kind.name(),
+                self.id
+            ))
+        })
+    }
+
+    /// Whether a backend kind is available.
+    pub fn has(&self, kind: BackendKind) -> bool {
+        self.slots.iter().any(|s| s.kind == kind)
+    }
+
+    /// Human-readable class label for a class index.
+    pub fn label_of(&self, class: u32) -> String {
+        self.schema
+            .classes
+            .get(class as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("class-{class}"))
+    }
+
+    /// Validate a request row against the model schema.
+    pub fn check_row(&self, features: &[f32]) -> Result<()> {
+        let want = self.schema.n_features();
+        if features.len() != want {
+            return Err(Error::Serve(format!(
+                "request has {} features, model expects {want}",
+                features.len()
+            )));
+        }
+        if features.iter().any(|v| !v.is_finite()) {
+            return Err(Error::Serve("request contains non-finite features".into()));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Default)]
+struct RegistryState {
+    models: HashMap<String, Arc<ModelVersion>>,
+    /// Last version issued per name; survives removal so re-registering a
+    /// name keeps the version monotonic.
+    versions: HashMap<String, u64>,
+    /// Model served when a request names none (first registered, unless
+    /// overridden with [`ModelRegistry::set_default`]).
+    default_model: Option<String>,
+}
+
+/// Thread-safe registry of named, versioned models.
+#[derive(Default)]
+pub struct ModelRegistry {
+    inner: RwLock<RegistryState>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register (or atomically hot-swap) a model under `name`.
+    ///
+    /// Backends must agree with the schema on arity and class count —
+    /// that is the semantic-equivalence contract this API is built on.
+    /// Returns the issued [`ModelId`].
+    pub fn register(
+        &self,
+        name: impl Into<String>,
+        schema: Schema,
+        backends: Vec<(BackendKind, Arc<dyn Classifier>)>,
+    ) -> Result<ModelId> {
+        let name = name.into();
+        if name.is_empty() {
+            return Err(Error::invalid("model name must be non-empty"));
+        }
+        if backends.is_empty() {
+            return Err(Error::invalid(format!(
+                "model '{name}' needs at least one backend"
+            )));
+        }
+        let mut slots = Vec::with_capacity(backends.len());
+        for (kind, classifier) in backends {
+            let info = classifier.info();
+            if info.n_features != schema.n_features() || info.n_classes != schema.n_classes() {
+                return Err(Error::SchemaMismatch(format!(
+                    "model '{name}' backend '{}' is {}x{} but the schema is {}x{}",
+                    kind.name(),
+                    info.n_features,
+                    info.n_classes,
+                    schema.n_features(),
+                    schema.n_classes()
+                )));
+            }
+            if slots.iter().any(|s: &BackendSlot| s.kind == kind) {
+                return Err(Error::invalid(format!(
+                    "model '{name}' registers backend '{}' twice",
+                    kind.name()
+                )));
+            }
+            slots.push(BackendSlot {
+                kind,
+                batch_first: info.cost.preferred_batch > 1,
+                classifier,
+            });
+        }
+        let default_backend = if slots.iter().any(|s| s.kind == BackendKind::Dd) {
+            BackendKind::Dd
+        } else {
+            slots[0].kind
+        };
+        let mut state = self.inner.write().unwrap();
+        let version = state.versions.get(&name).copied().unwrap_or(0) + 1;
+        state.versions.insert(name.clone(), version);
+        let id = ModelId {
+            name: name.clone(),
+            version,
+        };
+        let entry = Arc::new(ModelVersion {
+            id: id.clone(),
+            schema,
+            default_backend,
+            slots,
+        });
+        state.models.insert(name.clone(), entry);
+        if state.default_model.is_none() {
+            state.default_model = Some(name);
+        }
+        Ok(id)
+    }
+
+    /// Fetch a model by name (`None` = the default model).
+    pub fn get(&self, model: Option<&str>) -> Result<Arc<ModelVersion>> {
+        let state = self.inner.read().unwrap();
+        let name = match model {
+            Some(n) => n,
+            None => state
+                .default_model
+                .as_deref()
+                .ok_or_else(|| Error::Serve("no models registered".into()))?,
+        };
+        state
+            .models
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Serve(format!("unknown model '{name}'")))
+    }
+
+    /// Resolve a model + backend selection to a classifier slot.
+    ///
+    /// `model = None` uses the default model; `backend = None` uses the
+    /// model's default backend. This is the single dispatch point the
+    /// router and the CLI go through.
+    pub fn resolve(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+    ) -> Result<(Arc<ModelVersion>, BackendSlot)> {
+        let version = self.get(model)?;
+        let kind = backend.unwrap_or(version.default_backend);
+        let slot = version.slot(kind)?.clone();
+        Ok((version, slot))
+    }
+
+    /// Make `name` the default model for requests that name none.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let mut state = self.inner.write().unwrap();
+        if !state.models.contains_key(name) {
+            return Err(Error::Serve(format!("unknown model '{name}'")));
+        }
+        state.default_model = Some(name.to_string());
+        Ok(())
+    }
+
+    /// Remove a model; returns its id. The default-model pointer moves to
+    /// any remaining model (or clears).
+    pub fn remove(&self, name: &str) -> Result<ModelId> {
+        let mut state = self.inner.write().unwrap();
+        let entry = state
+            .models
+            .remove(name)
+            .ok_or_else(|| Error::Serve(format!("unknown model '{name}'")))?;
+        if state.default_model.as_deref() == Some(name) {
+            state.default_model = state.models.keys().next().cloned();
+        }
+        Ok(entry.id.clone())
+    }
+
+    /// Snapshot of all registered models, sorted by name.
+    pub fn list(&self) -> Vec<Arc<ModelVersion>> {
+        let state = self.inner.read().unwrap();
+        let mut out: Vec<_> = state.models.values().cloned().collect();
+        out.sort_by(|a, b| a.id.name.cmp(&b.id.name));
+        out
+    }
+
+    /// Name of the default model, if any.
+    pub fn default_model(&self) -> Option<String> {
+        self.inner.read().unwrap().default_model.clone()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.inner.read().unwrap().models.len()
+    }
+
+    /// True when no models are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::classifier::{ClassifierInfo, CostModel};
+
+    struct Fixed {
+        class: u32,
+        features: usize,
+        classes: usize,
+        batch: usize,
+    }
+
+    impl Classifier for Fixed {
+        fn info(&self) -> ClassifierInfo {
+            ClassifierInfo {
+                backend: BackendKind::Forest,
+                label: format!("fixed-{}", self.class),
+                n_features: self.features,
+                n_classes: self.classes,
+                size_nodes: 1,
+                cost: CostModel {
+                    max_steps: Some(0),
+                    aggregation_reads: 0,
+                    preferred_batch: self.batch,
+                },
+            }
+        }
+
+        fn classify_with_steps(&self, _x: &[f32]) -> crate::error::Result<(u32, Option<usize>)> {
+            Ok((self.class, Some(0)))
+        }
+    }
+
+    fn schema(features: usize, classes: usize) -> Schema {
+        Schema {
+            features: (0..features)
+                .map(|i| crate::data::Feature {
+                    name: format!("f{i}"),
+                    kind: crate::data::FeatureKind::Numeric,
+                })
+                .collect(),
+            classes: (0..classes).map(|c| format!("c{c}")).collect(),
+        }
+    }
+
+    fn fixed(class: u32, batch: usize) -> Arc<dyn Classifier> {
+        Arc::new(Fixed {
+            class,
+            features: 2,
+            classes: 3,
+            batch,
+        })
+    }
+
+    #[test]
+    fn register_resolve_and_default_model() {
+        let reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert!(reg.get(None).is_err());
+        let id = reg
+            .register(
+                "alpha",
+                schema(2, 3),
+                vec![(BackendKind::Forest, fixed(1, 1))],
+            )
+            .unwrap();
+        assert_eq!(id.to_string(), "alpha@v1");
+        assert_eq!(reg.default_model().as_deref(), Some("alpha"));
+        let (version, slot) = reg.resolve(None, None).unwrap();
+        assert_eq!(version.id, id);
+        assert_eq!(slot.kind, BackendKind::Forest);
+        assert!(!slot.batch_first);
+        assert_eq!(slot.classifier.classify(&[0.0, 0.0]).unwrap(), 1);
+        assert_eq!(version.label_of(1), "c1");
+        assert_eq!(version.label_of(99), "class-99");
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_serves_new_model() {
+        let reg = ModelRegistry::new();
+        reg.register("m", schema(2, 3), vec![(BackendKind::Forest, fixed(0, 1))])
+            .unwrap();
+        let held = reg.get(Some("m")).unwrap(); // in-flight request holds v1
+        let id2 = reg
+            .register("m", schema(2, 3), vec![(BackendKind::Forest, fixed(2, 1))])
+            .unwrap();
+        assert_eq!(id2.version, 2);
+        // new resolutions see v2; the held Arc still answers as v1
+        let (_, slot) = reg.resolve(Some("m"), None).unwrap();
+        assert_eq!(slot.classifier.classify(&[0.0, 0.0]).unwrap(), 2);
+        let old = held.slot(BackendKind::Forest).unwrap();
+        assert_eq!(old.classifier.classify(&[0.0, 0.0]).unwrap(), 0);
+        // versions stay monotonic across remove/re-register
+        reg.remove("m").unwrap();
+        let id3 = reg
+            .register("m", schema(2, 3), vec![(BackendKind::Forest, fixed(1, 1))])
+            .unwrap();
+        assert_eq!(id3.version, 3);
+    }
+
+    #[test]
+    fn backend_selection_and_batch_first_flag() {
+        let reg = ModelRegistry::new();
+        reg.register(
+            "m",
+            schema(2, 3),
+            vec![
+                (BackendKind::Forest, fixed(0, 1)),
+                (BackendKind::Xla, fixed(0, 64)),
+            ],
+        )
+        .unwrap();
+        let (_, xla) = reg.resolve(Some("m"), Some(BackendKind::Xla)).unwrap();
+        assert!(xla.batch_first);
+        let err = reg.resolve(Some("m"), Some(BackendKind::Dd)).unwrap_err();
+        assert!(err.to_string().contains("not available"));
+        // no dd backend -> default falls back to the first registered
+        let (version, slot) = reg.resolve(Some("m"), None).unwrap();
+        assert_eq!(version.default_backend, BackendKind::Forest);
+        assert_eq!(slot.kind, BackendKind::Forest);
+    }
+
+    #[test]
+    fn registration_validates_contracts() {
+        let reg = ModelRegistry::new();
+        assert!(reg.register("", schema(2, 3), vec![]).is_err());
+        assert!(reg.register("m", schema(2, 3), vec![]).is_err());
+        // arity mismatch between backend and schema
+        let err = reg
+            .register("m", schema(5, 3), vec![(BackendKind::Forest, fixed(0, 1))])
+            .unwrap_err();
+        assert!(matches!(err, Error::SchemaMismatch(_)), "{err}");
+        // duplicate backend kind
+        let err = reg
+            .register(
+                "m",
+                schema(2, 3),
+                vec![
+                    (BackendKind::Forest, fixed(0, 1)),
+                    (BackendKind::Forest, fixed(1, 1)),
+                ],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("twice"));
+        assert!(reg.is_empty(), "failed registrations must not partially apply");
+    }
+
+    #[test]
+    fn check_row_enforces_arity_and_finiteness() {
+        let reg = ModelRegistry::new();
+        reg.register("m", schema(2, 3), vec![(BackendKind::Forest, fixed(0, 1))])
+            .unwrap();
+        let version = reg.get(None).unwrap();
+        assert!(version.check_row(&[1.0, 2.0]).is_ok());
+        assert!(version.check_row(&[1.0]).is_err());
+        assert!(version.check_row(&[f32::NAN, 0.0]).is_err());
+        assert!(version.check_row(&[f32::INFINITY, 0.0]).is_err());
+    }
+
+    #[test]
+    fn list_and_default_transfer_on_remove() {
+        let reg = ModelRegistry::new();
+        reg.register("b", schema(2, 3), vec![(BackendKind::Forest, fixed(0, 1))])
+            .unwrap();
+        reg.register("a", schema(2, 3), vec![(BackendKind::Forest, fixed(1, 1))])
+            .unwrap();
+        let names: Vec<String> = reg.list().iter().map(|m| m.id.name.clone()).collect();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(reg.default_model().as_deref(), Some("b"));
+        reg.set_default("a").unwrap();
+        assert!(reg.set_default("zzz").is_err());
+        reg.remove("a").unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("b"));
+        assert_eq!(reg.len(), 1);
+    }
+}

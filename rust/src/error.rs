@@ -1,40 +1,64 @@
 //! Library-wide error type.
 //!
 //! Every fallible public API in `forest_add` returns [`Result`] with this
-//! error. Binaries and examples wrap it in `anyhow` at the edge.
+//! error. `Display`/`Error` are hand-implemented because the crates.io
+//! registry (and therefore `thiserror`) is unreachable in the build
+//! environment.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the `forest_add` library.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Malformed input data (CSV/ARFF/JSON parse failures, bad values).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// A request, configuration, or argument violates a documented contract.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// Schema mismatch between a model and the data it is applied to.
-    #[error("schema mismatch: {0}")]
     SchemaMismatch(String),
 
     /// A capacity or structural limit was exceeded (e.g. DD node budget).
-    #[error("capacity exceeded: {0}")]
     Capacity(String),
 
     /// The XLA/PJRT runtime reported an error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// The serving layer failed (queue closed, worker died, bad request).
-    #[error("serving error: {0}")]
     Serve(String),
 
     /// Underlying I/O failure.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Parse(msg) => write!(f, "parse error: {msg}"),
+            Error::InvalidArgument(msg) => write!(f, "invalid argument: {msg}"),
+            Error::SchemaMismatch(msg) => write!(f, "schema mismatch: {msg}"),
+            Error::Capacity(msg) => write!(f, "capacity exceeded: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Serve(msg) => write!(f, "serving error: {msg}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -75,5 +99,13 @@ mod tests {
         let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = io.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn xla_error_converts_to_runtime() {
+        let e: Error = xla::Error("pjrt gone".into()).into();
+        assert!(matches!(e, Error::Runtime(_)));
+        assert!(e.to_string().contains("pjrt gone"));
     }
 }

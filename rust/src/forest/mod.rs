@@ -5,6 +5,7 @@
 //! evaluates **all** trees — cost linear in the forest size, which is
 //! exactly what the ADD aggregation removes.
 
+use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::data::{Dataset, Schema};
 use crate::error::{Error, Result};
 use crate::tree::{DecisionTree, TreeLearner, TreeParams};
@@ -161,20 +162,17 @@ impl RandomForest {
     }
 
     /// Mean step count over a dataset (the paper's reported measure).
+    /// Delegates to [`crate::classifier::mean_steps`] — the single
+    /// implementation of the §6 accounting.
     pub fn mean_steps(&self, data: &Dataset) -> f64 {
-        let total: usize = (0..data.n_rows())
-            .map(|i| self.predict_with_steps(data.row(i)).1)
-            .sum();
-        total as f64 / data.n_rows() as f64
+        crate::classifier::mean_steps(self, data)
+            .expect("forest evaluation is infallible")
+            .expect("forest steps are always meterable")
     }
 
     /// Classification accuracy on a dataset.
     pub fn accuracy(&self, data: &Dataset) -> f64 {
-        let correct = data
-            .iter()
-            .filter(|(x, y)| self.predict(x) == *y)
-            .count();
-        correct as f64 / data.n_rows() as f64
+        crate::classifier::accuracy(self, data).expect("forest evaluation is infallible")
     }
 
     /// Prefix sub-forest (first `n` trees) — used for the Fig. 6/7 sweeps so
@@ -284,6 +282,32 @@ impl RandomForest {
     }
 }
 
+/// The baseline backend: every classification walks all `n` trees and
+/// pays `n` extra reads for the majority vote (§6).
+impl Classifier for RandomForest {
+    fn info(&self) -> ClassifierInfo {
+        ClassifierInfo {
+            backend: BackendKind::Forest,
+            label: format!("Random Forest ({} trees)", self.n_trees()),
+            n_features: self.schema.n_features(),
+            n_classes: self.n_classes(),
+            size_nodes: self.n_nodes(),
+            cost: CostModel {
+                max_steps: Some(
+                    self.trees.iter().map(DecisionTree::depth).sum::<usize>() + self.n_trees(),
+                ),
+                aggregation_reads: self.n_trees(),
+                preferred_batch: 1,
+            },
+        }
+    }
+
+    fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
+        let (class, steps) = self.predict_with_steps(x);
+        Ok((class, Some(steps)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -372,6 +396,24 @@ mod tests {
             assert_eq!(forest.predict(ds.row(i)), back.predict(ds.row(i)));
         }
         assert_eq!(forest.schema, back.schema);
+    }
+
+    #[test]
+    fn classifier_trait_matches_inherent_predict() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(9).seed(6).fit(&ds);
+        let info = Classifier::info(&forest);
+        assert_eq!(info.backend, BackendKind::Forest);
+        assert_eq!(info.n_features, 4);
+        assert_eq!(info.n_classes, 3);
+        assert_eq!(info.size_nodes, forest.n_nodes());
+        assert_eq!(info.cost.aggregation_reads, 9);
+        for i in (0..ds.n_rows()).step_by(23) {
+            let (c, steps) = forest.classify_with_steps(ds.row(i)).unwrap();
+            let (want_c, want_s) = forest.predict_with_steps(ds.row(i));
+            assert_eq!((c, steps), (want_c, Some(want_s)));
+            assert!(steps.unwrap() <= info.cost.max_steps.unwrap());
+        }
     }
 
     #[test]

@@ -15,24 +15,46 @@
 //!   (JAX + Pallas) AOT-lowered to HLO text, executed from Rust via PJRT
 //!   (`runtime`). Python never runs on the request path.
 //!
-//! Quickstart (see `examples/quickstart.rs`):
-//! ```no_run
-//! use forest_add::data::datasets;
-//! use forest_add::forest::ForestLearner;
-//! use forest_add::compile::{CompileOptions, ForestCompiler};
+//! ## The unified API
 //!
-//! let data = datasets::load("iris").unwrap();
-//! let forest = ForestLearner::default().trees(100).seed(7).fit(&data);
-//! let dd = ForestCompiler::new(CompileOptions::default()).compile(&forest).unwrap();
-//! let pred = dd.classify(data.row(0));
-//! # let _ = pred;
+//! Every evaluator — the naive forest walker, the compiled ADD in all
+//! three abstractions, and the XLA/PJRT batch engine — implements the
+//! [`classifier::Classifier`] trait, and the [`engine::Engine`] facade
+//! owns a [`engine::ModelRegistry`] of named, versioned models with
+//! atomic hot-swap. The serving router, the CLI, and the benches all
+//! dispatch through the registry; no caller hard-codes a backend.
+//!
+//! Quickstart (see `examples/quickstart.rs` for the full tour):
+//! ```no_run
+//! use forest_add::classifier::BackendKind;
+//! use forest_add::engine::Engine;
+//!
+//! // Train a forest, compile the paper's `Most frequent class DD*`, and
+//! // register both backends as the model "default" (version 1).
+//! let data = forest_add::data::datasets::load("iris").unwrap();
+//! let engine = Engine::builder()
+//!     .dataset(data.clone())
+//!     .trees(100)
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//!
+//! // Classify on the default backend (the compiled diagram) …
+//! let class = engine.classify(None, None, data.row(0)).unwrap();
+//! // … and on the baseline forest walker: same answer, guaranteed.
+//! let rf = engine
+//!     .classify(None, Some(BackendKind::Forest), data.row(0))
+//!     .unwrap();
+//! assert_eq!(class, rf);
 //! ```
 
 pub mod add;
 pub mod bench_support;
+pub mod classifier;
 pub mod cli;
 pub mod compile;
 pub mod data;
+pub mod engine;
 pub mod error;
 pub mod feas;
 pub mod forest;
@@ -42,6 +64,8 @@ pub mod serve;
 pub mod tree;
 pub mod util;
 
+pub use classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
+pub use engine::{Engine, ModelId, ModelRegistry};
 pub use error::{Error, Result};
 
 /// CLI entrypoint (see [`cli`]).

@@ -24,6 +24,9 @@ pub struct ServeConfig {
     pub batch_max: usize,
     /// Dynamic batcher: max wait in milliseconds.
     pub batch_wait_ms: u64,
+    /// How long a coalesced single request waits for its batch reply
+    /// before timing out, in milliseconds.
+    pub reply_timeout_ms: u64,
     /// HTTP worker threads.
     pub http_workers: usize,
     /// Artifacts directory (XLA path).
@@ -45,6 +48,7 @@ impl Default for ServeConfig {
             default_backend: BackendKind::Dd,
             batch_max: 64,
             batch_wait_ms: 2,
+            reply_timeout_ms: 5_000,
             http_workers: 4,
             artifacts_dir: "artifacts".into(),
             variant: "base".into(),
@@ -81,6 +85,9 @@ impl ServeConfig {
         if let Some(n) = v.get_i64("batch_wait_ms") {
             cfg.batch_wait_ms = n as u64;
         }
+        if let Some(n) = v.get_i64("reply_timeout_ms") {
+            cfg.reply_timeout_ms = n as u64;
+        }
         if let Some(n) = v.get_i64("http_workers") {
             cfg.http_workers = n as usize;
         }
@@ -114,6 +121,9 @@ impl ServeConfig {
         if self.http_workers == 0 {
             return Err(Error::invalid("http_workers must be positive"));
         }
+        if self.reply_timeout_ms == 0 {
+            return Err(Error::invalid("reply_timeout_ms must be positive"));
+        }
         Ok(())
     }
 
@@ -128,6 +138,7 @@ impl ServeConfig {
             ("default_backend", json::s(self.default_backend.name())),
             ("batch_max", json::num(self.batch_max as f64)),
             ("batch_wait_ms", json::num(self.batch_wait_ms as f64)),
+            ("reply_timeout_ms", json::num(self.reply_timeout_ms as f64)),
             ("http_workers", json::num(self.http_workers as f64)),
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
             ("variant", json::s(self.variant.clone())),
@@ -151,12 +162,14 @@ mod tests {
             trees: 500,
             default_backend: BackendKind::Xla,
             enable_xla: false,
+            reply_timeout_ms: 250,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.trees, 500);
         assert_eq!(back.default_backend, BackendKind::Xla);
         assert!(!back.enable_xla);
+        assert_eq!(back.reply_timeout_ms, 250);
     }
 
     #[test]
@@ -170,6 +183,9 @@ mod tests {
     #[test]
     fn invalid_rejected() {
         assert!(ServeConfig::from_json(&Json::parse(r#"{"trees": 0}"#).unwrap()).is_err());
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"reply_timeout_ms": 0}"#).unwrap()).is_err()
+        );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"default_backend": "gpu"}"#).unwrap())
                 .is_err()

@@ -5,9 +5,10 @@
 //! Endpoints:
 //! - `GET  /healthz`          → `{"ok": true}`
 //! - `GET  /metrics`          → server metrics snapshot
-//! - `GET  /model`            → model/bundle description
-//! - `POST /classify`         → `{"features": [...], "backend": "dd"?}`
-//! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?}`
+//! - `GET  /model`            → default-model description (per-backend info)
+//! - `GET  /models`           → all registered models (name, version, backends)
+//! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?}`
+//! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?}`
 
 use crate::error::{Error, Result};
 use crate::serve::router::Router;
@@ -101,7 +102,11 @@ fn route(req: &Request, router: &Arc<Router>) -> (u16, Json) {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => (200, json::obj(vec![("ok", Json::Bool(true))])),
         ("GET", "/metrics") => (200, router.metrics().to_json()),
-        ("GET", "/model") => (200, model_info(router)),
+        ("GET", "/model") => match model_info(router) {
+            Ok(j) => (200, j),
+            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
+        },
+        ("GET", "/models") => (200, model_list(router)),
         ("POST", "/classify") => match classify(req, router) {
             Ok(j) => (200, j),
             Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
@@ -121,19 +126,42 @@ fn route(req: &Request, router: &Arc<Router>) -> (u16, Json) {
     }
 }
 
-fn model_info(router: &Arc<Router>) -> Json {
-    let b = router.bundle();
-    let size = b.dd.size();
-    json::obj(vec![
-        ("dataset", json::s(b.forest.schema.classes.join("/"))),
-        ("trees", json::num(b.forest.n_trees() as f64)),
-        ("forest_nodes", json::num(b.forest.n_nodes() as f64)),
-        ("dd_nodes", json::num(size.total() as f64)),
-        ("dd_label", json::s(b.dd.label())),
+fn model_info(router: &Arc<Router>) -> Result<Json> {
+    let version = router.registry().get(None)?;
+    let backends: Vec<Json> = version
+        .slots()
+        .iter()
+        .map(|slot| {
+            let info = slot.classifier.info();
+            json::obj(vec![
+                ("backend", json::s(info.backend.name())),
+                ("label", json::s(info.label)),
+                ("size_nodes", json::num(info.size_nodes as f64)),
+                (
+                    "max_steps",
+                    info.cost
+                        .max_steps
+                        .map(|s| json::num(s as f64))
+                        .unwrap_or(Json::Null),
+                ),
+                (
+                    "aggregation_reads",
+                    json::num(info.cost.aggregation_reads as f64),
+                ),
+                (
+                    "preferred_batch",
+                    json::num(info.cost.preferred_batch as f64),
+                ),
+            ])
+        })
+        .collect();
+    Ok(json::obj(vec![
+        ("model", json::s(version.id.name.clone())),
+        ("version", json::num(version.id.version as f64)),
         (
             "classes",
             Json::Arr(
-                b.forest
+                version
                     .schema
                     .classes
                     .iter()
@@ -141,8 +169,44 @@ fn model_info(router: &Arc<Router>) -> Json {
                     .collect(),
             ),
         ),
+        ("backends", Json::Arr(backends)),
         ("default_backend", json::s(router.default_backend().name())),
         ("xla_loaded", Json::Bool(router.has_xla())),
+    ]))
+}
+
+fn model_list(router: &Arc<Router>) -> Json {
+    let models: Vec<Json> = router
+        .registry()
+        .list()
+        .iter()
+        .map(|v| {
+            json::obj(vec![
+                ("name", json::s(v.id.name.clone())),
+                ("version", json::num(v.id.version as f64)),
+                (
+                    "backends",
+                    Json::Arr(
+                        v.slots()
+                            .iter()
+                            .map(|s| json::s(s.kind.name()))
+                            .collect(),
+                    ),
+                ),
+                ("default_backend", json::s(v.default_backend.name())),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("models", Json::Arr(models)),
+        (
+            "default_model",
+            router
+                .registry()
+                .default_model()
+                .map(json::s)
+                .unwrap_or(Json::Null),
+        ),
     ])
 }
 
@@ -177,11 +241,17 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
             .ok_or_else(|| Error::Serve("missing 'features'".into()))?,
     )?;
     let backend = parse_backend(&v)?;
-    let resp = router.classify(&ClassifyRequest { features, backend })?;
+    let model = v.get_str("model").map(String::from);
+    let resp = router.classify(&ClassifyRequest {
+        features,
+        backend,
+        model,
+    })?;
     Ok(json::obj(vec![
         ("class", json::num(resp.class as f64)),
         ("label", json::s(resp.label)),
         ("backend", json::s(resp.backend.name())),
+        ("model", json::s(resp.model)),
         (
             "steps",
             resp.steps.map(|s| json::num(s as f64)).unwrap_or(Json::Null),
@@ -203,8 +273,8 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
         return Err(Error::Serve("empty batch".into()));
     }
     let backend = parse_backend(&v)?;
-    let classes = router.classify_batch(&rows, backend)?;
-    let bundle = router.bundle();
+    let model = v.get_str("model").map(String::from);
+    let (classes, version) = router.classify_batch(&rows, backend, model.as_deref())?;
     Ok(json::obj(vec![
         (
             "classes",
@@ -212,8 +282,14 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
         ),
         (
             "labels",
-            Json::Arr(classes.iter().map(|&c| json::s(bundle.label(c))).collect()),
+            Json::Arr(
+                classes
+                    .iter()
+                    .map(|&c| json::s(version.label_of(c)))
+                    .collect(),
+            ),
         ),
+        ("model", json::s(version.id.to_string())),
     ]))
 }
 

@@ -2,8 +2,10 @@
 //! compile-time optimisation deployable.
 //!
 //! Requests flow: HTTP front-end ([`http`]) → [`router::Router`] →
-//! backend. Three backends expose the same classification semantics at
-//! different cost profiles:
+//! [`Classifier`](crate::classifier::Classifier) trait object resolved
+//! from the shared [`ModelRegistry`](crate::engine::ModelRegistry).
+//! Three backends expose the same classification semantics at different
+//! cost profiles:
 //!
 //! - **forest** — the baseline: walk all `n` trees (linear in forest size);
 //! - **dd** — the paper's contribution: one root-to-terminal walk through
@@ -11,8 +13,14 @@
 //! - **xla** — the L2/L1 tensorised evaluator via PJRT, fed by the dynamic
 //!   batcher ([`batcher`]) for throughput-oriented batched traffic.
 //!
-//! All state is owned by Rust; Python exists only in the artifact build
-//! path. Metrics ([`metrics`]) track per-backend latency histograms.
+//! The router never names a concrete evaluator type: backends whose
+//! [`CostModel`](crate::classifier::CostModel) prefers batching are
+//! coalesced through the batcher, everything else is served inline.
+//! Models are named and versioned; registering under an existing name
+//! hot-swaps atomically, and requests may select `model` and `backend`
+//! per call. All state is owned by Rust; Python exists only in the
+//! artifact build path. Metrics ([`metrics`]) track per-backend latency
+//! histograms.
 
 pub mod batcher;
 pub mod config;
@@ -22,52 +30,40 @@ pub mod router;
 pub mod server;
 pub mod xla_backend;
 
-use crate::compile::{CompileOptions, CompiledDD, ForestCompiler};
-use crate::data::Dataset;
-use crate::error::{Error, Result};
-use crate::forest::{ForestLearner, RandomForest};
-
-/// Which execution backend serves a request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum BackendKind {
-    /// Naive forest walk (baseline).
-    Forest,
-    /// Compiled decision diagram (the paper's system).
-    Dd,
-    /// Batched XLA/PJRT tensorised evaluator.
-    Xla,
-}
-
-impl BackendKind {
-    /// Parse from a request/config string.
-    pub fn parse(s: &str) -> Result<BackendKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "forest" | "rf" => Ok(BackendKind::Forest),
-            "dd" | "add" | "diagram" => Ok(BackendKind::Dd),
-            "xla" | "pjrt" => Ok(BackendKind::Xla),
-            other => Err(Error::invalid(format!(
-                "unknown backend '{other}' (forest|dd|xla)"
-            ))),
-        }
-    }
-
-    /// Stable name for metrics/JSON.
-    pub fn name(&self) -> &'static str {
-        match self {
-            BackendKind::Forest => "forest",
-            BackendKind::Dd => "dd",
-            BackendKind::Xla => "xla",
-        }
-    }
-}
+pub use crate::classifier::BackendKind;
 
 /// One classification request.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ClassifyRequest {
     /// Feature row (must match the model schema arity).
     pub features: Vec<f32>,
     /// Backend override (router default otherwise).
     pub backend: Option<BackendKind>,
+    /// Model-name override (the registry's default model otherwise).
+    pub model: Option<String>,
+}
+
+impl ClassifyRequest {
+    /// A request for the default model/backend.
+    pub fn new(features: Vec<f32>) -> ClassifyRequest {
+        ClassifyRequest {
+            features,
+            backend: None,
+            model: None,
+        }
+    }
+
+    /// Select a backend.
+    pub fn on_backend(mut self, backend: BackendKind) -> ClassifyRequest {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Select a named model.
+    pub fn on_model(mut self, model: impl Into<String>) -> ClassifyRequest {
+        self.model = Some(model.into());
+        self
+    }
 }
 
 /// One classification response.
@@ -79,89 +75,27 @@ pub struct ClassifyResponse {
     pub label: String,
     /// Backend that served the request.
     pub backend: BackendKind,
+    /// Model version that served the request (`name@vN`).
+    pub model: String,
     /// §6 step count (native backends; `None` for XLA).
     pub steps: Option<usize>,
     /// Service latency in microseconds.
     pub latency_us: u64,
 }
 
-/// A trained model pair: the baseline forest and its compiled diagram.
-#[derive(Debug)]
-pub struct ModelBundle {
-    /// Baseline Random Forest.
-    pub forest: RandomForest,
-    /// Compiled `DD*` for the same forest.
-    pub dd: CompiledDD,
-}
-
-impl ModelBundle {
-    /// Train a forest on `data` and compile it.
-    pub fn train(
-        data: &Dataset,
-        trees: usize,
-        max_depth: usize,
-        seed: u64,
-        compile_opts: CompileOptions,
-    ) -> Result<ModelBundle> {
-        let forest = ForestLearner::default()
-            .trees(trees)
-            .max_depth(max_depth)
-            .seed(seed)
-            .fit(data);
-        let dd = ForestCompiler::new(compile_opts).compile(&forest)?;
-        Ok(ModelBundle { forest, dd })
-    }
-
-    /// Validate a request row against the model schema.
-    pub fn check_row(&self, features: &[f32]) -> Result<()> {
-        let want = self.forest.schema.n_features();
-        if features.len() != want {
-            return Err(Error::Serve(format!(
-                "request has {} features, model expects {want}",
-                features.len()
-            )));
-        }
-        if features.iter().any(|v| !v.is_finite()) {
-            return Err(Error::Serve("request contains non-finite features".into()));
-        }
-        Ok(())
-    }
-
-    /// Class label for an index.
-    pub fn label(&self, class: u32) -> String {
-        self.forest
-            .schema
-            .classes
-            .get(class as usize)
-            .cloned()
-            .unwrap_or_else(|| format!("class-{class}"))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::datasets;
 
     #[test]
-    fn backend_parse_and_names() {
-        assert_eq!(BackendKind::parse("dd").unwrap(), BackendKind::Dd);
-        assert_eq!(BackendKind::parse("RF").unwrap(), BackendKind::Forest);
-        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
-        assert!(BackendKind::parse("gpu").is_err());
-        assert_eq!(BackendKind::Xla.name(), "xla");
-    }
-
-    #[test]
-    fn bundle_trains_and_validates_rows() {
-        let ds = datasets::iris();
-        let b = ModelBundle::train(&ds, 10, 0, 1, CompileOptions::default()).unwrap();
-        assert!(b.check_row(ds.row(0)).is_ok());
-        assert!(b.check_row(&[1.0, 2.0]).is_err());
-        assert!(b.check_row(&[f32::NAN, 0.0, 0.0, 0.0]).is_err());
-        assert_eq!(b.label(0), "setosa");
-        assert_eq!(b.label(99), "class-99");
-        // dd and forest agree everywhere
-        assert_eq!(b.dd.agreement(&b.forest, &ds), 1.0);
+    fn request_builders_compose() {
+        let req = ClassifyRequest::new(vec![1.0, 2.0])
+            .on_backend(BackendKind::Forest)
+            .on_model("canary");
+        assert_eq!(req.features, vec![1.0, 2.0]);
+        assert_eq!(req.backend, Some(BackendKind::Forest));
+        assert_eq!(req.model.as_deref(), Some("canary"));
+        let plain = ClassifyRequest::new(vec![0.0]);
+        assert!(plain.backend.is_none() && plain.model.is_none());
     }
 }

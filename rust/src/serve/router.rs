@@ -1,76 +1,110 @@
-//! Request router: dispatches classification requests across backends.
+//! Request router: resolves `(model, backend)` to a [`Classifier`] trait
+//! object in the shared [`ModelRegistry`] and dispatches.
 //!
-//! Single requests on the `xla` backend pass through the dynamic batcher,
-//! which coalesces concurrent traffic into PJRT executions; `forest`/`dd`
-//! requests are served inline (they are single-row walks with no batching
-//! benefit). Explicit batch requests bypass the batcher and chunk straight
-//! into the engine.
+//! Backends that advertise a batch-oriented cost model
+//! (`preferred_batch > 1`, i.e. the XLA engine) have single requests
+//! coalesced through the dynamic batcher, which groups concurrent
+//! traffic per classifier instance and executes one fused
+//! `classify_batch` per group; single-row walkers (`forest`/`dd`) are
+//! served inline. Explicit batch requests bypass the batcher and go
+//! straight to the backend's batch path.
+//!
+//! The router holds no model state of its own: a hot-swap in the
+//! registry is visible to the very next request, while requests already
+//! dispatched finish against the version they resolved (RCU via `Arc`).
 
+use crate::classifier::Classifier;
+use crate::engine::ModelRegistry;
 use crate::error::{Error, Result};
 use crate::serve::batcher::{Batcher, BatcherConfig};
 use crate::serve::metrics::ServerMetrics;
-use crate::serve::xla_backend::XlaBackend;
-use crate::serve::{BackendKind, ClassifyRequest, ClassifyResponse, ModelBundle};
+use crate::serve::{BackendKind, ClassifyRequest, ClassifyResponse};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
-type XlaJob = (Vec<f32>, Sender<Result<u32>>);
+/// A coalesced single-request job: the resolved classifier, the feature
+/// row (moved, never copied, on the hot path), and the reply channel.
+type BatchJob = (Arc<dyn Classifier>, Vec<f32>, Sender<Result<u32>>);
 
 /// The serving router (shared across HTTP workers).
 pub struct Router {
-    bundle: Arc<ModelBundle>,
+    registry: Arc<ModelRegistry>,
     metrics: Arc<ServerMetrics>,
     default_backend: BackendKind,
-    xla: Option<Arc<XlaBackend>>,
-    xla_batcher: Option<Batcher<XlaJob>>,
+    /// Started lazily on the first batch-first dispatch: a build without
+    /// any batch-native backend (e.g. against the offline `xla` stub)
+    /// never pays the batcher thread or its queue.
+    batcher: OnceLock<Batcher<BatchJob>>,
+    batch_cfg: BatcherConfig,
     reply_timeout: Duration,
 }
 
-impl Router {
-    /// Build a router. `xla` is optional — without it, `xla`-backend
-    /// requests fail cleanly and the serving path is fully native.
-    pub fn new(
-        bundle: Arc<ModelBundle>,
-        metrics: Arc<ServerMetrics>,
-        default_backend: BackendKind,
-        xla: Option<Arc<XlaBackend>>,
-        batch_cfg: BatcherConfig,
-    ) -> Router {
-        let xla_batcher = xla.as_ref().map(|backend| {
-            let backend = backend.clone();
-            let m = metrics.clone();
-            Batcher::start("xla", batch_cfg, move |jobs: Vec<XlaJob>| {
-                m.observe_batch(jobs.len());
-                let rows: Vec<Vec<f32>> = jobs.iter().map(|(r, _)| r.clone()).collect();
-                match backend.classify_batch(rows) {
-                    Ok(classes) => {
-                        for ((_, reply), class) in jobs.into_iter().zip(classes) {
-                            let _ = reply.send(Ok(class));
-                        }
-                    }
-                    Err(e) => {
-                        let msg = e.to_string();
-                        for (_, reply) in jobs {
-                            let _ = reply.send(Err(Error::Serve(msg.clone())));
-                        }
+/// Batcher worker: groups a window's jobs per classifier instance
+/// (several models/versions may interleave) and runs one fused
+/// `classify_batch` per group.
+fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<BatchJob> {
+    Batcher::start("router", cfg, move |jobs: Vec<BatchJob>| {
+        metrics.observe_batch(jobs.len());
+        let mut jobs = jobs;
+        while !jobs.is_empty() {
+            let clf = jobs[0].0.clone();
+            let (group, rest): (Vec<BatchJob>, Vec<BatchJob>) = jobs
+                .into_iter()
+                .partition(|(c, _, _)| Arc::ptr_eq(c, &clf));
+            jobs = rest;
+            let mut rows = Vec::with_capacity(group.len());
+            let mut replies = Vec::with_capacity(group.len());
+            for (_, row, reply) in group {
+                rows.push(row); // moved out of the job, not cloned
+                replies.push(reply);
+            }
+            match clf.classify_batch(&rows) {
+                Ok(classes) => {
+                    for (reply, class) in replies.into_iter().zip(classes) {
+                        let _ = reply.send(Ok(class));
                     }
                 }
-            })
-        });
+                Err(e) => {
+                    let msg = e.to_string();
+                    for reply in replies {
+                        let _ = reply.send(Err(Error::Serve(msg.clone())));
+                    }
+                }
+            }
+        }
+    })
+}
+
+impl Router {
+    /// Build a router over a model registry. `reply_timeout` bounds how
+    /// long a coalesced request waits for its batch to execute
+    /// (configurable via `serve::config::ServeConfig::reply_timeout_ms`).
+    pub fn new(
+        registry: Arc<ModelRegistry>,
+        metrics: Arc<ServerMetrics>,
+        default_backend: BackendKind,
+        batch_cfg: BatcherConfig,
+        reply_timeout: Duration,
+    ) -> Router {
         Router {
-            bundle,
+            registry,
             metrics,
             default_backend,
-            xla,
-            xla_batcher,
-            reply_timeout: Duration::from_secs(5),
+            batcher: OnceLock::new(),
+            batch_cfg,
+            reply_timeout,
         }
     }
 
-    /// The model bundle served by this router.
-    pub fn bundle(&self) -> &Arc<ModelBundle> {
-        &self.bundle
+    fn batcher(&self) -> &Batcher<BatchJob> {
+        self.batcher
+            .get_or_init(|| start_batcher(self.metrics.clone(), self.batch_cfg.clone()))
+    }
+
+    /// The model registry served by this router.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
     }
 
     /// The metrics registry.
@@ -83,24 +117,47 @@ impl Router {
         self.default_backend
     }
 
-    /// True when the XLA path is loaded.
+    /// True when the default model has the XLA backend loaded.
     pub fn has_xla(&self) -> bool {
-        self.xla.is_some()
+        self.registry
+            .get(None)
+            .map(|v| v.has(BackendKind::Xla))
+            .unwrap_or(false)
+    }
+
+    /// Pick the backend for a request. An explicit backend override wins
+    /// (and errors if the model lacks it). Otherwise the router-wide
+    /// default applies when the resolved model has it, falling back to
+    /// the model's own default backend when it doesn't — uniformly for
+    /// tagged and untagged traffic, so a forest-only model serves either
+    /// way. Deploy-time misconfiguration (e.g. `--backend xla` with
+    /// broken artifacts) is surfaced by the startup warning and the
+    /// `/model` endpoint's `xla_loaded`/`default_backend` fields, not by
+    /// per-request failures.
+    fn pick_backend(
+        &self,
+        version: &crate::engine::ModelVersion,
+        requested: Option<BackendKind>,
+    ) -> BackendKind {
+        match requested {
+            Some(kind) => kind,
+            None if version.has(self.default_backend) => self.default_backend,
+            None => version.default_backend,
+        }
     }
 
     /// Serve one classification request.
     pub fn classify(&self, req: &ClassifyRequest) -> Result<ClassifyResponse> {
         let start = Instant::now();
-        let backend = req.backend.unwrap_or(self.default_backend);
-        let result = self.dispatch(backend, &req.features);
-        match result {
-            Ok((class, steps)) => {
+        match self.dispatch(req.model.as_deref(), req.backend, &req.features) {
+            Ok((backend, model, class, steps, label)) => {
                 let latency = start.elapsed();
                 self.metrics.observe(backend, latency);
                 Ok(ClassifyResponse {
                     class,
-                    label: self.bundle.label(class),
+                    label,
                     backend,
+                    model,
                     steps,
                     latency_us: latency.as_micros() as u64,
                 })
@@ -112,82 +169,91 @@ impl Router {
         }
     }
 
-    fn dispatch(&self, backend: BackendKind, features: &[f32]) -> Result<(u32, Option<usize>)> {
-        self.bundle.check_row(features)?;
-        match backend {
-            BackendKind::Forest => {
-                let (c, steps) = self.bundle.forest.predict_with_steps(features);
-                Ok((c, Some(steps)))
-            }
-            BackendKind::Dd => {
-                let (c, steps) = self.bundle.dd.classify_with_steps(features);
-                Ok((c, Some(steps)))
-            }
-            BackendKind::Xla => {
-                let batcher = self
-                    .xla_batcher
-                    .as_ref()
-                    .ok_or_else(|| Error::Serve("xla backend not loaded".into()))?;
-                let (tx, rx) = std::sync::mpsc::channel();
-                batcher.submit((features.to_vec(), tx))?;
-                let class = rx
-                    .recv_timeout(self.reply_timeout)
-                    .map_err(|_| Error::Serve("xla reply timed out".into()))??;
-                Ok((class, None))
-            }
-        }
+    fn dispatch(
+        &self,
+        model: Option<&str>,
+        requested: Option<BackendKind>,
+        features: &[f32],
+    ) -> Result<(BackendKind, String, u32, Option<usize>, String)> {
+        let version = self.registry.get(model)?;
+        let backend = self.pick_backend(&version, requested);
+        let slot = version.slot(backend)?.clone();
+        version.check_row(features)?;
+        let (class, steps) = if slot.batch_first {
+            let (tx, rx) = std::sync::mpsc::channel();
+            self.batcher()
+                .submit((slot.classifier.clone(), features.to_vec(), tx))?;
+            let class = rx
+                .recv_timeout(self.reply_timeout)
+                .map_err(|_| Error::Serve("batched backend reply timed out".into()))??;
+            (class, None)
+        } else {
+            slot.classifier.classify_with_steps(features)?
+        };
+        Ok((
+            backend,
+            version.id.to_string(),
+            class,
+            steps,
+            version.label_of(class),
+        ))
     }
 
-    /// Serve an explicit batch (bypasses the single-request batcher).
+    /// Serve an explicit batch (bypasses the single-request batcher and
+    /// uses the backend's native batch path directly). Returns the classes
+    /// plus the model version that served them, so callers render labels
+    /// against the exact version that classified (not a later hot-swap).
     pub fn classify_batch(
         &self,
         rows: &[Vec<f32>],
         backend: Option<BackendKind>,
-    ) -> Result<Vec<u32>> {
-        let backend = backend.unwrap_or(self.default_backend);
+        model: Option<&str>,
+    ) -> Result<(Vec<u32>, Arc<crate::engine::ModelVersion>)> {
         let start = Instant::now();
-        for r in rows {
-            self.bundle.check_row(r)?;
-        }
-        let out = match backend {
-            BackendKind::Forest => rows
-                .iter()
-                .map(|r| self.bundle.forest.predict(r))
-                .collect::<Vec<_>>(),
-            BackendKind::Dd => rows
-                .iter()
-                .map(|r| self.bundle.dd.classify(r))
-                .collect::<Vec<_>>(),
-            BackendKind::Xla => {
-                let xla = self
-                    .xla
-                    .as_ref()
-                    .ok_or_else(|| Error::Serve("xla backend not loaded".into()))?;
-                self.metrics.observe_batch(rows.len());
-                xla.classify_batch(rows.to_vec())?
+        let result = (|| {
+            let version = self.registry.get(model)?;
+            let backend = self.pick_backend(&version, backend);
+            let slot = version.slot(backend)?.clone();
+            for r in rows {
+                version.check_row(r)?;
             }
-        };
-        self.metrics.observe(backend, start.elapsed());
-        Ok(out)
+            if slot.batch_first {
+                self.metrics.observe_batch(rows.len());
+            }
+            Ok((backend, slot.classifier.classify_batch(rows)?, version))
+        })();
+        match result {
+            Ok((backend, out, version)) => {
+                self.metrics.observe(backend, start.elapsed());
+                Ok((out, version))
+            }
+            Err(e) => {
+                self.metrics.observe_error();
+                Err(e)
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compile::CompileOptions;
-    use crate::data::datasets;
+    use crate::engine::Engine;
 
     fn router() -> (crate::data::Dataset, Router) {
-        let ds = datasets::iris();
-        let bundle =
-            Arc::new(ModelBundle::train(&ds, 12, 0, 2, CompileOptions::default()).unwrap());
+        let ds = crate::data::datasets::iris();
+        let engine = Engine::builder()
+            .dataset(ds.clone())
+            .trees(12)
+            .seed(2)
+            .build()
+            .unwrap();
         let r = Router::new(
-            bundle,
+            engine.registry().clone(),
             Arc::new(ServerMetrics::default()),
             BackendKind::Dd,
-            None,
             BatcherConfig::default(),
+            Duration::from_secs(5),
         );
         (ds, r)
     }
@@ -197,31 +263,23 @@ mod tests {
         let (ds, r) = router();
         for i in (0..ds.n_rows()).step_by(11) {
             let via_dd = r
-                .classify(&ClassifyRequest {
-                    features: ds.row(i).to_vec(),
-                    backend: Some(BackendKind::Dd),
-                })
+                .classify(&ClassifyRequest::new(ds.row(i).to_vec()).on_backend(BackendKind::Dd))
                 .unwrap();
             let via_rf = r
-                .classify(&ClassifyRequest {
-                    features: ds.row(i).to_vec(),
-                    backend: Some(BackendKind::Forest),
-                })
+                .classify(
+                    &ClassifyRequest::new(ds.row(i).to_vec()).on_backend(BackendKind::Forest),
+                )
                 .unwrap();
             assert_eq!(via_dd.class, via_rf.class, "row {i}");
             assert!(via_dd.steps.unwrap() < via_rf.steps.unwrap());
+            assert_eq!(via_dd.model, "default@v1");
         }
     }
 
     #[test]
     fn default_backend_applies() {
         let (ds, r) = router();
-        let resp = r
-            .classify(&ClassifyRequest {
-                features: ds.row(0).to_vec(),
-                backend: None,
-            })
-            .unwrap();
+        let resp = r.classify(&ClassifyRequest::new(ds.row(0).to_vec())).unwrap();
         assert_eq!(resp.backend, BackendKind::Dd);
         assert!(!resp.label.is_empty());
     }
@@ -229,12 +287,7 @@ mod tests {
     #[test]
     fn bad_rows_rejected_and_counted() {
         let (_, r) = router();
-        let err = r
-            .classify(&ClassifyRequest {
-                features: vec![1.0],
-                backend: None,
-            })
-            .unwrap_err();
+        let err = r.classify(&ClassifyRequest::new(vec![1.0])).unwrap_err();
         assert!(err.to_string().contains("features"));
         assert_eq!(
             r.metrics().errors.load(std::sync::atomic::Ordering::Relaxed),
@@ -246,33 +299,103 @@ mod tests {
     fn xla_without_engine_fails_cleanly() {
         let (ds, r) = router();
         let err = r
-            .classify(&ClassifyRequest {
-                features: ds.row(0).to_vec(),
-                backend: Some(BackendKind::Xla),
-            })
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_backend(BackendKind::Xla))
             .unwrap_err();
-        assert!(err.to_string().contains("not loaded"));
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn unknown_model_fails_cleanly() {
+        let (ds, r) = router();
+        let err = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_model("nope"))
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown model"));
     }
 
     #[test]
     fn batch_endpoint_native() {
         let (ds, r) = router();
         let rows: Vec<Vec<f32>> = (0..30).map(|i| ds.row(i * 5).to_vec()).collect();
-        let dd = r.classify_batch(&rows, Some(BackendKind::Dd)).unwrap();
-        let rf = r.classify_batch(&rows, Some(BackendKind::Forest)).unwrap();
+        let (dd, version) = r
+            .classify_batch(&rows, Some(BackendKind::Dd), None)
+            .unwrap();
+        let (rf, _) = r
+            .classify_batch(&rows, Some(BackendKind::Forest), None)
+            .unwrap();
         assert_eq!(dd, rf);
         assert_eq!(dd.len(), 30);
+        assert_eq!(version.id.to_string(), "default@v1");
+    }
+
+    #[test]
+    fn untagged_requests_fall_back_to_the_model_default_backend() {
+        let (ds, r) = router();
+        // a forest-only model lacks the router-wide default backend (dd)
+        crate::engine::register_forest(
+            r.registry(),
+            "baseline",
+            crate::forest::ForestLearner::default().trees(4).seed(1).fit(&ds),
+        )
+        .unwrap();
+        let resp = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_model("baseline"))
+            .unwrap();
+        assert_eq!(resp.backend, BackendKind::Forest);
+        // an explicit override still errors cleanly
+        let err = r
+            .classify(
+                &ClassifyRequest::new(ds.row(0).to_vec())
+                    .on_model("baseline")
+                    .on_backend(BackendKind::Dd),
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("not available"));
+    }
+
+    #[test]
+    fn per_request_model_selection_and_hot_swap() {
+        let (ds, r) = router();
+        // register a second, smaller model under another name
+        let engine = Engine::with_registry(r.registry().clone());
+        engine
+            .train_and_register(
+                "canary",
+                &ds,
+                4,
+                0,
+                9,
+                crate::compile::CompileOptions::default(),
+            )
+            .unwrap();
+        let resp = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_model("canary"))
+            .unwrap();
+        assert_eq!(resp.model, "canary@v1");
+        // hot-swap the canary; the next request sees v2 without rebuilding
+        // the router
+        engine
+            .train_and_register(
+                "canary",
+                &ds,
+                6,
+                0,
+                10,
+                crate::compile::CompileOptions::default(),
+            )
+            .unwrap();
+        let resp = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_model("canary"))
+            .unwrap();
+        assert_eq!(resp.model, "canary@v2");
     }
 
     #[test]
     fn metrics_observe_served_requests() {
         let (ds, r) = router();
         for i in 0..5 {
-            r.classify(&ClassifyRequest {
-                features: ds.row(i).to_vec(),
-                backend: Some(BackendKind::Dd),
-            })
-            .unwrap();
+            r.classify(&ClassifyRequest::new(ds.row(i).to_vec()).on_backend(BackendKind::Dd))
+                .unwrap();
         }
         assert_eq!(r.metrics().backend(BackendKind::Dd).count(), 5);
     }

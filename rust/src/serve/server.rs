@@ -1,33 +1,19 @@
 //! Server assembly: trains the model, wires router + backends + HTTP
 //! workers, and manages lifecycle.
 
-use crate::compile::CompileOptions;
-use crate::data::{arff, csv, datasets, Dataset};
+use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::serve::batcher::BatcherConfig;
 use crate::serve::config::ServeConfig;
 use crate::serve::http::handle_connection;
 use crate::serve::metrics::ServerMetrics;
 use crate::serve::router::Router;
-use crate::serve::xla_backend::XlaBackend;
-use crate::serve::ModelBundle;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
-
-/// Resolve a dataset spec: a built-in name, or a `.csv`/`.arff` path.
-pub fn resolve_dataset(spec: &str) -> Result<Dataset> {
-    if spec.ends_with(".csv") {
-        csv::load_file(spec)
-    } else if spec.ends_with(".arff") {
-        arff::load_file(spec)
-    } else {
-        datasets::load(spec)
-    }
-}
 
 /// A running server; dropping (or calling [`stop`](Self::stop)) shuts it
 /// down and joins all threads.
@@ -44,49 +30,43 @@ pub struct ServerHandle {
 /// Build the model and start serving (returns once the socket is bound).
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
-    let data = resolve_dataset(&cfg.dataset)?;
+    let data = crate::data::resolve(&cfg.dataset)?;
     crate::log_info!(
         "serve: training {} trees on '{}' ({} rows)…",
         cfg.trees,
         data.name,
         data.n_rows()
     );
-    let bundle = Arc::new(ModelBundle::train(
-        &data,
-        cfg.trees,
-        cfg.max_depth,
-        cfg.seed,
-        CompileOptions::default(),
-    )?);
-    crate::log_info!(
-        "serve: forest {} nodes -> DD* {} nodes",
-        bundle.forest.n_nodes(),
-        bundle.dd.size().total()
-    );
+    let mut builder = Engine::builder()
+        .dataset(data)
+        .trees(cfg.trees)
+        .max_depth(cfg.max_depth)
+        .seed(cfg.seed);
+    if cfg.enable_xla {
+        // Load failures fall back to the native backends inside the
+        // builder (DESIGN.md §7) — the server still comes up.
+        builder = builder.xla_artifacts(cfg.artifacts_dir.as_str(), cfg.variant.as_str());
+    }
+    let engine = builder.build()?;
+    for info in engine.info(None)? {
+        crate::log_info!(
+            "serve: backend '{}' ready — {} ({} nodes)",
+            info.backend.name(),
+            info.label,
+            info.size_nodes
+        );
+    }
     let metrics = Arc::new(ServerMetrics::default());
-    let xla = if cfg.enable_xla {
-        match XlaBackend::start(&cfg.artifacts_dir, &cfg.variant, &bundle.forest) {
-            Ok(b) => Some(Arc::new(b)),
-            Err(e) => {
-                // Per DESIGN.md §7: incompatible forests fall back to the
-                // native DD backend rather than silently changing semantics.
-                crate::log_warn!("serve: xla backend unavailable, falling back to dd: {e}");
-                None
-            }
-        }
-    } else {
-        None
-    };
     let router = Arc::new(Router::new(
-        bundle,
+        engine.registry().clone(),
         metrics,
         cfg.default_backend,
-        xla,
         BatcherConfig {
             max_batch: cfg.batch_max,
             max_wait: Duration::from_millis(cfg.batch_wait_ms),
             queue_cap: (cfg.batch_max * 16).max(256),
         },
+        Duration::from_millis(cfg.reply_timeout_ms),
     ));
 
     let listener = TcpListener::bind(&cfg.addr)?;
@@ -174,17 +154,6 @@ impl Drop for ServerHandle {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn resolve_dataset_built_in_and_errors() {
-        assert_eq!(resolve_dataset("iris").unwrap().n_rows(), 150);
-        assert!(resolve_dataset("missing.csv").is_err());
-        assert!(resolve_dataset("not-a-dataset").is_err());
-    }
-
-    // Full server lifecycle is exercised over real sockets in
-    // rust/tests/integration_serve.rs.
-}
+// Full server lifecycle is exercised over real sockets in
+// rust/tests/integration_serve.rs; dataset-spec resolution is tested in
+// `data::tests`.

@@ -4,7 +4,13 @@
 //! batches arrive over a channel and replies return through per-batch
 //! channels. One engine per artifact variant (`one compiled executable per
 //! model variant`, DESIGN.md §2).
+//!
+//! The backend speaks [`Classifier`] like every other evaluator; its
+//! [`CostModel::preferred_batch`] advertises the artifact batch size, so
+//! the router's dynamic batcher coalesces single-request traffic into
+//! full executions.
 
+use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::error::{Error, Result};
 use crate::forest::RandomForest;
 use crate::runtime::{PackedForest, VariantMeta, XlaEngine};
@@ -24,6 +30,13 @@ pub struct XlaBackend {
     handle: Option<JoinHandle<()>>,
     /// Shape contract of the loaded artifact.
     pub meta: VariantMeta,
+    /// Feature arity of the packed forest (≤ the artifact's padded width).
+    n_features: usize,
+    /// Class count of the packed forest (≤ the artifact's padded count).
+    n_classes: usize,
+    /// Node count of the source forest (the Fig. 7 size measure — not
+    /// the artifact's padded capacity).
+    forest_nodes: usize,
 }
 
 impl XlaBackend {
@@ -36,6 +49,8 @@ impl XlaBackend {
         let meta = VariantMeta::load(artifacts_dir, variant)?;
         let packed = PackedForest::pack(forest, &meta)?;
         let n_features = forest.schema.n_features();
+        let n_classes = forest.n_classes();
+        let forest_nodes = forest.n_nodes();
         let (tx, rx): (SyncSender<Msg>, Receiver<Msg>) = mpsc::sync_channel(64);
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let dir = artifacts_dir.to_string();
@@ -71,27 +86,21 @@ impl XlaBackend {
             tx,
             handle: Some(handle),
             meta,
+            n_features,
+            n_classes,
+            forest_nodes,
         })
     }
 
-    /// Classify a batch of rows (blocking RPC to the engine thread).
-    /// Oversized batches are split into artifact-sized chunks.
-    pub fn classify_batch(&self, rows: Vec<Vec<f32>>) -> Result<Vec<u32>> {
-        if rows.is_empty() {
-            return Ok(Vec::new());
-        }
-        let mut out = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(self.meta.batch) {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            self.tx
-                .send(Msg::Batch(chunk.to_vec(), reply_tx))
-                .map_err(|_| Error::Serve("xla engine has shut down".into()))?;
-            let classes = reply_rx
-                .recv()
-                .map_err(|_| Error::Serve("xla engine dropped a batch".into()))??;
-            out.extend(classes);
-        }
-        Ok(out)
+    /// Blocking RPC of one artifact-sized chunk to the engine thread.
+    fn submit_chunk(&self, rows: Vec<Vec<f32>>) -> Result<Vec<u32>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Batch(rows, reply_tx))
+            .map_err(|_| Error::Serve("xla engine has shut down".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Serve("xla engine dropped a batch".into()))?
     }
 
     /// Stop the engine thread.
@@ -100,6 +109,47 @@ impl XlaBackend {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+/// The tensorised backend: batch-native, step counts unavailable.
+impl Classifier for XlaBackend {
+    fn info(&self) -> ClassifierInfo {
+        ClassifierInfo {
+            backend: BackendKind::Xla,
+            label: format!(
+                "XLA/PJRT tensorised forest ('{}' artifact, batch {})",
+                self.meta.name, self.meta.batch
+            ),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            size_nodes: self.forest_nodes,
+            cost: CostModel {
+                max_steps: None,
+                aggregation_reads: 0,
+                preferred_batch: self.meta.batch,
+            },
+        }
+    }
+
+    fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
+        let out = self.submit_chunk(vec![x.to_vec()])?;
+        out.first()
+            .map(|&c| (c, None))
+            .ok_or_else(|| Error::Serve("xla engine returned an empty batch".into()))
+    }
+
+    /// Native batch path: oversized batches are split into artifact-sized
+    /// chunks, each one PJRT execution.
+    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.meta.batch) {
+            out.extend(self.submit_chunk(chunk.to_vec())?);
+        }
+        Ok(out)
     }
 }
 
@@ -167,11 +217,21 @@ mod tests {
             .seed(11)
             .fit(&ds);
         let backend = XlaBackend::start(&dir, "small", &forest).unwrap();
+        let info = backend.info();
+        assert_eq!(info.backend, BackendKind::Xla);
+        assert_eq!(info.n_features, 4);
+        assert_eq!(info.n_classes, 3);
+        assert!(info.cost.preferred_batch > 1);
         let rows: Vec<Vec<f32>> = (0..40).map(|i| ds.row(i * 3).to_vec()).collect();
-        let got = backend.classify_batch(rows.clone()).unwrap();
+        let got = backend.classify_batch(&rows).unwrap();
         for (row, cls) in rows.iter().zip(&got) {
             assert_eq!(*cls, forest.predict(row));
         }
+        // single-row path goes through a batch of one
+        assert_eq!(
+            backend.classify(ds.row(5)).unwrap(),
+            forest.predict(ds.row(5))
+        );
         backend.shutdown();
     }
 }

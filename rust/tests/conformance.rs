@@ -1,0 +1,203 @@
+//! Backend conformance: every evaluator registered behind the
+//! `Classifier` trait must produce identical labels — the paper's
+//! semantic-equivalence guarantee, enforced across the whole backend
+//! matrix through the exact dispatch path production traffic uses
+//! (trait objects resolved from the `ModelRegistry`).
+
+use forest_add::classifier::{self, Classifier};
+use forest_add::compile::{Abstraction, CompileOptions, ForestCompiler};
+use forest_add::data::synth::{blobs, BlobSpec};
+use forest_add::data::{datasets, Dataset};
+use forest_add::engine::ModelRegistry;
+use forest_add::forest::ForestLearner;
+use forest_add::serve::BackendKind;
+use forest_add::util::prop::{check, Config, Gen};
+use std::sync::Arc;
+
+/// Build a registry holding the forest baseline plus one model per DD
+/// abstraction (± unsatisfiable-path elimination), all compiled from the
+/// same forest.
+fn registry_for(
+    data: &Dataset,
+    trees: usize,
+    seed: u64,
+) -> Result<(ModelRegistry, Vec<String>), String> {
+    let forest = ForestLearner::default()
+        .trees(trees)
+        .seed(seed)
+        .fit(data);
+    let registry = ModelRegistry::new();
+    let schema = data.schema.clone();
+    registry
+        .register(
+            "forest",
+            schema.clone(),
+            vec![(
+                BackendKind::Forest,
+                Arc::new(forest.clone()) as Arc<dyn Classifier>,
+            )],
+        )
+        .map_err(|e| e.to_string())?;
+    let mut names = vec!["forest".to_string()];
+    for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+        for unsat in [false, true] {
+            let dd = ForestCompiler::new(CompileOptions {
+                abstraction,
+                unsat_elim: unsat,
+                ..Default::default()
+            })
+            .compile(&forest)
+            .map_err(|e| format!("{abstraction:?} unsat={unsat}: {e}"))?;
+            let name = format!("{abstraction:?}-{unsat}").to_lowercase();
+            registry
+                .register(
+                    name.as_str(),
+                    schema.clone(),
+                    vec![(BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>)],
+                )
+                .map_err(|e| e.to_string())?;
+            names.push(name);
+        }
+    }
+    Ok((registry, names))
+}
+
+/// Property: on random synthetic datasets, the forest walker and all six
+/// DD variants agree row-for-row through the trait, and each backend's
+/// batch path agrees with its own single-row path.
+#[test]
+fn prop_backends_agree_through_classifier_trait() {
+    check(
+        "backend conformance",
+        Config {
+            cases: 10,
+            ..Config::default()
+        },
+        |g: &mut Gen| {
+            let spec = BlobSpec {
+                rows: g.usize(20, 60),
+                features: g.usize(2, 4),
+                classes: g.usize(2, 4),
+                separation: g.f64(1.0, 4.0),
+                noise: 1.0,
+                seed: g.int(0, 1 << 30) as u64,
+            };
+            let data = blobs(&spec).map_err(|e| e.to_string())?;
+            let trees = g.usize(3, 14);
+            let (registry, names) = registry_for(&data, trees, spec.seed ^ 0xA5)?;
+            let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+
+            // reference labels from the forest baseline, via the trait
+            let (_, baseline) = registry
+                .resolve(Some("forest"), None)
+                .map_err(|e| e.to_string())?;
+            let reference = baseline
+                .classifier
+                .classify_batch(&rows)
+                .map_err(|e| e.to_string())?;
+
+            for name in &names {
+                let (_, slot) = registry
+                    .resolve(Some(name.as_str()), None)
+                    .map_err(|e| e.to_string())?;
+                let c = slot.classifier.as_ref();
+                let batch = c.classify_batch(&rows).map_err(|e| e.to_string())?;
+                if batch != reference {
+                    return Err(format!(
+                        "model '{name}' diverges from the forest baseline ({} trees, seed {})",
+                        trees, spec.seed
+                    ));
+                }
+                for (i, row) in rows.iter().enumerate() {
+                    let single = c.classify(row).map_err(|e| e.to_string())?;
+                    if single != batch[i] {
+                        return Err(format!(
+                            "model '{name}' row {i}: batch={} single={single}",
+                            batch[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The agreement helper reports exactly 1.0 across the registry on a
+/// fixed dataset (cheap smoke version of the property above).
+#[test]
+fn agreement_helper_is_exactly_one_on_iris() {
+    let data = datasets::iris();
+    let (registry, names) = registry_for(&data, 12, 42).unwrap();
+    let (_, baseline) = registry.resolve(Some("forest"), None).unwrap();
+    for name in &names {
+        let (_, slot) = registry.resolve(Some(name.as_str()), None).unwrap();
+        let agree = classifier::agreement(
+            baseline.classifier.as_ref(),
+            slot.classifier.as_ref(),
+            &data,
+        )
+        .unwrap();
+        assert_eq!(agree, 1.0, "{name}");
+    }
+}
+
+/// When XLA artifacts exist, the tensorised backend joins the same
+/// conformance check through the same trait object path.
+#[test]
+fn xla_backend_conforms_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/index.json").exists() {
+        eprintln!("skipping xla conformance: run `make artifacts` first");
+        return;
+    }
+    let data = datasets::iris();
+    // small variant geometry: 32 trees, depth 6
+    let forest = ForestLearner::default()
+        .trees(32)
+        .max_depth(6)
+        .seed(11)
+        .fit(&data);
+    let dd = ForestCompiler::new(CompileOptions::default())
+        .compile(&forest)
+        .unwrap();
+    let xla = match forest_add::serve::xla_backend::XlaBackend::start("artifacts", "small", &forest)
+    {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("skipping xla conformance: backend unavailable: {e}");
+            return;
+        }
+    };
+    let registry = ModelRegistry::new();
+    registry
+        .register(
+            "default",
+            data.schema.clone(),
+            vec![
+                (
+                    BackendKind::Forest,
+                    Arc::new(forest) as Arc<dyn Classifier>,
+                ),
+                (BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>),
+                (BackendKind::Xla, Arc::new(xla) as Arc<dyn Classifier>),
+            ],
+        )
+        .unwrap();
+    let version = registry.get(None).unwrap();
+    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+    let reference = version
+        .slot(BackendKind::Forest)
+        .unwrap()
+        .classifier
+        .classify_batch(&rows)
+        .unwrap();
+    for kind in [BackendKind::Dd, BackendKind::Xla] {
+        let got = version
+            .slot(kind)
+            .unwrap()
+            .classifier
+            .classify_batch(&rows)
+            .unwrap();
+        assert_eq!(got, reference, "backend {}", kind.name());
+    }
+}

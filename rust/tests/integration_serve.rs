@@ -1,11 +1,15 @@
 //! Integration: the serving coordinator over real sockets — lifecycle,
-//! every endpoint, backend agreement, concurrency, and error handling.
+//! every endpoint, backend agreement, model hot-swap, concurrency, and
+//! error handling.
 
+use forest_add::classifier::Classifier;
+use forest_add::data::datasets;
+use forest_add::engine::Engine;
 use forest_add::serve::config::ServeConfig;
 use forest_add::serve::http::http_request;
-use forest_add::serve::server;
-use forest_add::data::datasets;
+use forest_add::serve::{server, BackendKind};
 use forest_add::util::json::{self, Json};
+use std::sync::Arc;
 
 fn test_config() -> ServeConfig {
     ServeConfig {
@@ -25,27 +29,57 @@ fn row_json(row: &[f32]) -> Json {
     Json::Arr(row.iter().map(|&v| json::num(v as f64)).collect())
 }
 
+/// The forest backend of the default model, resolved the way every
+/// request is: as a `Classifier` trait object from the registry.
+fn forest_of(handle: &server::ServerHandle) -> Arc<dyn Classifier> {
+    let (_, slot) = handle
+        .router
+        .registry()
+        .resolve(None, Some(BackendKind::Forest))
+        .unwrap();
+    slot.classifier
+}
+
 #[test]
 fn full_server_lifecycle_and_endpoints() {
     let handle = server::start(&test_config()).unwrap();
     let addr = handle.addr.to_string();
     let data = datasets::load("iris").unwrap();
+    let reference = forest_of(&handle);
 
     // healthz
     let (st, body) = http_request(&addr, "GET", "/healthz", None).unwrap();
     assert_eq!(st, 200);
     assert_eq!(body.get("ok").and_then(Json::as_bool), Some(true));
 
-    // model info
+    // model info: name@version plus per-backend size/cost metadata
     let (st, model) = http_request(&addr, "GET", "/model", None).unwrap();
     assert_eq!(st, 200);
-    assert_eq!(model.get_i64("trees"), Some(32));
-    assert!(model.get_i64("dd_nodes").unwrap() > 0);
+    assert_eq!(model.get_str("model"), Some("default"));
+    assert_eq!(model.get_i64("version"), Some(1));
+    let backends = model.get("backends").and_then(Json::as_arr).unwrap();
+    assert!(backends.len() >= 2);
+    let size_of = |name: &str| {
+        backends
+            .iter()
+            .find(|b| b.get_str("backend") == Some(name))
+            .and_then(|b| b.get_i64("size_nodes"))
+            .unwrap()
+    };
+    assert!(size_of("forest") > 0);
+    assert!(size_of("dd") > 0);
     // (the size crossover below the forest happens at larger tree counts —
     // Fig. 7; here we only require a sane envelope)
-    assert!(model.get_i64("dd_nodes").unwrap() < model.get_i64("forest_nodes").unwrap() * 20);
+    assert!(size_of("dd") < size_of("forest") * 20);
 
-    // classify on both native backends, agreement with the local forest
+    // models listing
+    let (st, models) = http_request(&addr, "GET", "/models", None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(models.get_str("default_model"), Some("default"));
+    assert_eq!(models.get("models").and_then(Json::as_arr).unwrap().len(), 1);
+
+    // classify on both native backends, agreement with the reference
+    // forest classifier
     for backend in ["forest", "dd"] {
         for i in [0usize, 60, 149] {
             let body = json::obj(vec![
@@ -57,11 +91,12 @@ fn full_server_lifecycle_and_endpoints() {
             let class = resp.get_i64("class").unwrap() as u32;
             assert_eq!(
                 class,
-                handle.router.bundle().forest.predict(data.row(i)),
+                reference.classify(data.row(i)).unwrap(),
                 "backend {backend} row {i}"
             );
             assert!(resp.get_i64("steps").is_some());
             assert!(!resp.get_str("label").unwrap().is_empty());
+            assert_eq!(resp.get_str("model"), Some("default@v1"));
         }
     }
 
@@ -75,7 +110,7 @@ fn full_server_lifecycle_and_endpoints() {
         assert_eq!(st, 200, "{resp:?}");
         assert_eq!(
             resp.get_i64("class").unwrap() as u32,
-            handle.router.bundle().forest.predict(data.row(25))
+            reference.classify(data.row(25)).unwrap()
         );
         assert_eq!(resp.get("steps"), Some(&Json::Null));
     }
@@ -132,6 +167,15 @@ fn error_handling_over_http() {
     let (st, _) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
     assert_eq!(st, 400);
 
+    // unknown model name
+    let body = json::obj(vec![
+        ("features", row_json(data.row(0))),
+        ("model", json::s("phantom")),
+    ]);
+    let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 400);
+    assert!(resp.get_str("error").unwrap().contains("phantom"));
+
     // empty batch
     let body = json::obj(vec![("rows", Json::Arr(vec![]))]);
     let (st, _) = http_request(&addr, "POST", "/classify_batch", Some(&body)).unwrap();
@@ -141,12 +185,73 @@ fn error_handling_over_http() {
 }
 
 #[test]
+fn model_hot_swap_is_visible_to_live_traffic() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+
+    // register a second version of "default" and a named canary model on
+    // the running server's registry — no restart
+    let engine = Engine::with_registry(handle.router.registry().clone());
+    engine
+        .train_and_register(
+            "default",
+            &data,
+            16,
+            0,
+            99,
+            forest_add::compile::CompileOptions::default(),
+        )
+        .unwrap();
+    engine
+        .train_and_register(
+            "canary",
+            &data,
+            8,
+            0,
+            5,
+            forest_add::compile::CompileOptions::default(),
+        )
+        .unwrap();
+
+    // untagged traffic now lands on default@v2
+    let body = json::obj(vec![("features", row_json(data.row(3)))]);
+    let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 200, "{resp:?}");
+    assert_eq!(resp.get_str("model"), Some("default@v2"));
+
+    // tagged traffic reaches the canary
+    let body = json::obj(vec![
+        ("features", row_json(data.row(3))),
+        ("model", json::s("canary")),
+    ]);
+    let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 200, "{resp:?}");
+    assert_eq!(resp.get_str("model"), Some("canary@v1"));
+
+    // the listing shows both
+    let (_, models) = http_request(&addr, "GET", "/models", None).unwrap();
+    let names: Vec<&str> = models
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|m| m.get_str("name"))
+        .collect();
+    assert!(names.contains(&"default") && names.contains(&"canary"), "{names:?}");
+
+    handle.stop();
+}
+
+#[test]
 fn concurrent_clients_all_served_correctly() {
     let handle = server::start(&test_config()).unwrap();
     let addr = handle.addr.to_string();
     let data = datasets::load("iris").unwrap();
-    let forest = &handle.router.bundle().forest;
-    let expected: Vec<u32> = (0..data.n_rows()).map(|i| forest.predict(data.row(i))).collect();
+    let forest = forest_of(&handle);
+    let expected: Vec<u32> = (0..data.n_rows())
+        .map(|i| forest.classify(data.row(i)).unwrap())
+        .collect();
 
     std::thread::scope(|scope| {
         for c in 0..6 {

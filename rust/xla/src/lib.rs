@@ -1,0 +1,156 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The build environment has no network access and no prebuilt
+//! `xla_extension`, so the real bindings cannot be compiled here. This
+//! crate mirrors the subset of the `xla` API that `forest_add::runtime`
+//! uses; every entry point that would touch PJRT returns an
+//! "unavailable" error instead. The serving layer already treats XLA
+//! startup failures as a clean fallback to the native DD backend, so a
+//! binary built against this stub serves correctly — just without the
+//! tensorised batch path.
+//!
+//! On a machine with the real bindings, point the `xla` path dependency
+//! in `rust/Cargo.toml` at them; no `forest_add` source changes needed.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error` (message-only in the stub).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring `xla::Result`.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT/XLA runtime is not linked into this build (offline `xla` stub); \
+         use the native forest/dd backends or rebuild against the real bindings"
+    )))
+}
+
+/// Host literal (tensor value). The stub carries no data.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Parsed HLO module.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Transfer the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled, loaded PJRT executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given argument literals.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client handle.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub — this is the single
+    /// gate every runtime path passes through first.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_runtime_gate_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<i32>().is_err());
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
