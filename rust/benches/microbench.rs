@@ -1,9 +1,10 @@
 //! Micro-benchmarks of the hot-path primitives — the before/after
 //! instrument for the EXPERIMENTS.md §Perf iteration log.
 //!
-//! Covers: DD evaluation walk, forest walk, ADD combine, unsat reduction,
-//! tree→ADD conversion, and the packed-tensor row evaluation that mirrors
-//! the L1 kernel.
+//! Covers: DD evaluation walk (pointer-walk vs frozen, single-row and
+//! batch), forest walk, ADD combine, unsat reduction, tree→ADD conversion,
+//! snapshot load, and the packed-tensor row evaluation that mirrors the L1
+//! kernel.
 
 use forest_add::add::reduce::reduce_feasible;
 use forest_add::add::{ClassVector, Manager};
@@ -40,14 +41,50 @@ fn main() {
         ]);
     };
 
-    // DD walk (the request-path primitive)
+    // DD walk (the request-path primitive): pointer-walk arena vs the
+    // frozen struct-of-arrays layout, then the two batch paths.
+    let frozen = dd.freeze();
     let mut i = 0usize;
     let ns = measure_ns(window, || {
         let x = data.row(i % data.n_rows());
         i += 1;
         std::hint::black_box(dd.classify(x));
     });
-    add_row(&mut t, "DD* classify (1 row)", ns);
+    add_row(&mut t, "DD* classify (1 row, pointer walk)", ns);
+
+    let mut i = 0usize;
+    let ns = measure_ns(window, || {
+        let x = data.row(i % data.n_rows());
+        i += 1;
+        std::hint::black_box(frozen.classify(x));
+    });
+    add_row(&mut t, "FrozenDD classify (1 row)", ns);
+
+    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+    let n_rows = rows.len() as f64;
+    let ns = measure_ns(window, || {
+        let out = forest_add::classifier::Classifier::classify_batch(&dd, &rows).unwrap();
+        std::hint::black_box(out.len());
+    });
+    add_row(
+        &mut t,
+        "DD* classify_batch row (150 rows, pointer walk)",
+        ns / n_rows,
+    );
+
+    let ns = measure_ns(window, || {
+        let out = frozen.classify_batch(&rows);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD classify_batch row (150 rows)", ns / n_rows);
+
+    // snapshot load (the replica-startup primitive)
+    let snapshot_bytes = frozen.to_bytes();
+    let ns = measure_ns(window, || {
+        let dd = forest_add::frozen::FrozenDD::from_bytes(&snapshot_bytes).unwrap();
+        std::hint::black_box(dd.size().total());
+    });
+    add_row(&mut t, "FrozenDD snapshot load (fdd-v1)", ns);
 
     // forest walk baseline
     let mut i = 0usize;

@@ -1,5 +1,6 @@
-//! Serving benchmark: latency/throughput of the three backends through the
-//! router (systems extension beyond the paper's step-count metric).
+//! Serving benchmark: latency/throughput of the native backends (and XLA
+//! when artifacts exist) through the router (systems extension beyond the
+//! paper's step-count metric).
 //!
 //! Measures: single-request latency per backend (router-level, no HTTP
 //! overhead), batched throughput vs batch size, and concurrent
@@ -53,7 +54,7 @@ fn main() {
 
     // --- single-request latency per backend -------------------------------
     let mut t = Table::new(&["backend", "mean latency", "throughput (req/s)"]);
-    let mut backends = vec![BackendKind::Forest, BackendKind::Dd];
+    let mut backends = vec![BackendKind::Forest, BackendKind::Dd, BackendKind::Frozen];
     if has_xla {
         backends.push(BackendKind::Xla);
     }

@@ -1,6 +1,8 @@
 //! Quickstart: train a Random Forest, compile it into a single decision
-//! diagram, and serve both through one backend-polymorphic API — the
-//! paper's core claim plus the crate's unified `Engine` in forty lines.
+//! diagram, serve both through one backend-polymorphic API, then freeze
+//! the diagram into an `fdd-v1` snapshot and reload it the way a serving
+//! replica would — the paper's core claim plus the crate's unified
+//! `Engine` in sixty lines.
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -64,5 +66,23 @@ fn main() -> Result<()> {
     let baseline = engine.classify(None, Some(BackendKind::Forest), &sample)?;
     assert_eq!(class, baseline);
     println!("sample {sample:?} -> {}", version.label_of(class));
+
+    // 5. Compile once, serve everywhere: export the engine's frozen
+    //    backend as an `fdd-v1` snapshot, then register it on a fresh
+    //    engine the way a serving replica does at startup — one
+    //    contiguous read, no training, bit-identical answers.
+    //    (CLI: `forest-add freeze` / `forest-add serve --snapshot`.)
+    let snapshot = std::env::temp_dir().join("quickstart-iris.fdd");
+    let snapshot = snapshot.to_str().expect("utf-8 temp path").to_string();
+    engine.save_snapshot(None, &snapshot)?;
+    let replica = Engine::new();
+    replica.register_snapshot("iris", &snapshot)?;
+    let from_snapshot = replica.classify(Some("iris"), None, &sample)?;
+    assert_eq!(from_snapshot, class);
+    println!(
+        "snapshot replica agrees: {} (reloaded from {snapshot})",
+        version.label_of(from_snapshot),
+    );
+    let _ = std::fs::remove_file(&snapshot);
     Ok(())
 }

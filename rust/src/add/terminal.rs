@@ -120,7 +120,9 @@ impl Monoid for ClassVector {
 /// Final class label after the majority-vote abstraction.
 pub type ClassLabel = u16;
 
-fn argmax(counts: &[u32]) -> u16 {
+/// Tie-to-lowest argmax — the single definition of the crate's vote
+/// semantics (`frozen` reuses it so the two layouts can never drift).
+pub(crate) fn argmax(counts: &[u32]) -> u16 {
     let mut best = 0usize;
     for (i, &c) in counts.iter().enumerate() {
         if c > counts[best] {

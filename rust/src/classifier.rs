@@ -25,8 +25,13 @@ use crate::error::{Error, Result};
 pub enum BackendKind {
     /// Naive forest walk (baseline).
     Forest,
-    /// Compiled decision diagram (the paper's system).
+    /// Compiled decision diagram (the paper's system) in its live,
+    /// arena-backed form.
     Dd,
+    /// The same diagram flattened into the immutable struct-of-arrays
+    /// serving form ([`FrozenDD`](crate::frozen::FrozenDD)) — identical
+    /// predictions, cache-friendly walk, snapshot startup.
+    Frozen,
     /// Batched XLA/PJRT tensorised evaluator.
     Xla,
 }
@@ -37,9 +42,10 @@ impl BackendKind {
         match s.to_ascii_lowercase().as_str() {
             "forest" | "rf" => Ok(BackendKind::Forest),
             "dd" | "add" | "diagram" => Ok(BackendKind::Dd),
+            "frozen" | "fdd" => Ok(BackendKind::Frozen),
             "xla" | "pjrt" => Ok(BackendKind::Xla),
             other => Err(Error::invalid(format!(
-                "unknown backend '{other}' (forest|dd|xla)"
+                "unknown backend '{other}' (forest|dd|frozen|xla)"
             ))),
         }
     }
@@ -49,6 +55,7 @@ impl BackendKind {
         match self {
             BackendKind::Forest => "forest",
             BackendKind::Dd => "dd",
+            BackendKind::Frozen => "frozen",
             BackendKind::Xla => "xla",
         }
     }
@@ -117,6 +124,14 @@ pub trait Classifier: Send + Sync {
     fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
         rows.iter().map(|r| self.classify(r)).collect()
     }
+
+    /// Concrete-type escape hatch for tooling that needs more than the
+    /// classification contract (e.g. exporting a registered frozen model
+    /// as a snapshot file). The default opts out; backends that want to be
+    /// downcastable return `Some(self)`.
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        None
+    }
 }
 
 /// Mean §6 step count over a dataset; `None` when the backend cannot
@@ -165,8 +180,11 @@ mod tests {
         assert_eq!(BackendKind::parse("dd").unwrap(), BackendKind::Dd);
         assert_eq!(BackendKind::parse("RF").unwrap(), BackendKind::Forest);
         assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Xla);
+        assert_eq!(BackendKind::parse("frozen").unwrap(), BackendKind::Frozen);
+        assert_eq!(BackendKind::parse("fdd").unwrap(), BackendKind::Frozen);
         assert!(BackendKind::parse("gpu").is_err());
         assert_eq!(BackendKind::Xla.name(), "xla");
+        assert_eq!(BackendKind::Frozen.name(), "frozen");
     }
 
     /// A fixed-answer classifier for exercising the default methods.

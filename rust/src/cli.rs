@@ -3,9 +3,13 @@
 //! Subcommands:
 //! - `datasets` — list built-in datasets
 //! - `train`    — train a Random Forest and save it as JSON
-//! - `compile`  — aggregate a forest into a decision diagram (+ DOT export)
+//! - `compile`  — aggregate a forest into a decision diagram (+ DOT export,
+//!   `--format fdd` for a binary snapshot)
+//! - `freeze`   — render a compiled diagram into an `fdd-v1` snapshot
+//! - `inspect`  — show an `fdd-v1` snapshot's header, sections and stats
 //! - `eval`     — steps/size/accuracy comparison table for one dataset
-//! - `serve`    — start the HTTP serving coordinator
+//! - `serve`    — start the HTTP serving coordinator (`--snapshot` serves a
+//!   pre-compiled artifact without training)
 //! - `classify` — client convenience: send one request to a running server
 //! - `models`   — client convenience: list models on a running server
 //! - `artifacts`— inspect compiled XLA artifact variants
@@ -15,11 +19,12 @@
 //! on a concrete evaluator type.
 
 use crate::classifier::{self, Classifier};
-use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
+use crate::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
 use crate::data::datasets;
 use crate::engine::ModelRegistry;
 use crate::error::{Error, Result};
 use crate::forest::{ForestLearner, RandomForest};
+use crate::frozen::{self, FrozenDD};
 use crate::predicate::PredicateOrder;
 use crate::serve::config::ServeConfig;
 use crate::serve::http::http_request;
@@ -38,6 +43,8 @@ COMMANDS:
   datasets   List built-in datasets
   train      Train a Random Forest and save it (JSON)
   compile    Compile a forest into a decision diagram
+  freeze     Freeze a compiled diagram into an fdd-v1 binary snapshot
+  inspect    Inspect an fdd-v1 snapshot (header, sections, stats)
   eval       Compare RF vs DD steps/size/accuracy on a dataset
   serve      Start the HTTP serving coordinator
   classify   Send one classification request to a running server
@@ -58,6 +65,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "datasets" => cmd_datasets(),
         "train" => cmd_train(&rest),
         "compile" => cmd_compile(&rest),
+        "freeze" => cmd_freeze(&rest),
+        "inspect" => cmd_inspect(&rest),
         "eval" => cmd_eval(&rest),
         "serve" => cmd_serve(&rest),
         "classify" => cmd_classify(&rest),
@@ -133,7 +142,8 @@ fn compile_spec() -> ArgSpec {
     .opt("order", "frequency", "predicate order: frequency | threshold")
     .opt("budget", "0", "live-node budget (0 = unlimited)")
     .opt("dot", "", "write Graphviz DOT of the final diagram")
-    .opt("out", "", "save the compiled diagram as deployable JSON")
+    .opt("out", "", "save the compiled diagram (see --format)")
+    .opt("format", "json", "output format for --out: json | fdd")
 }
 
 fn parse_abstraction(s: &str) -> Result<Abstraction> {
@@ -172,6 +182,12 @@ fn load_or_train(a: &Args) -> Result<(RandomForest, Option<crate::data::Dataset>
 
 fn cmd_compile(args: &[String]) -> Result<()> {
     let a = compile_spec().parse(args)?;
+    // Validate before the (potentially long) compile, and regardless of
+    // whether --out was given.
+    let format = a.str("format");
+    if format != "json" && format != "fdd" {
+        return Err(Error::invalid(format!("unknown format '{format}' (json|fdd)")));
+    }
     let (forest, ds) = load_or_train(&a)?;
     let opts = CompileOptions {
         abstraction: parse_abstraction(a.str("abstraction"))?,
@@ -222,9 +238,106 @@ fn cmd_compile(args: &[String]) -> Result<()> {
     }
     let out = a.str("out");
     if !out.is_empty() {
-        dd.save(out)?;
-        println!("wrote {out} (load on replicas with CompiledDD::load)");
+        if format == "fdd" {
+            dd.freeze().save(out)?;
+            let bytes = std::fs::metadata(out)?.len();
+            println!(
+                "wrote {out} ({bytes} bytes; serve with `forest-add serve --snapshot {out}`)"
+            );
+        } else {
+            dd.save(out)?;
+            println!("wrote {out} (load on replicas with CompiledDD::load)");
+        }
     }
+    Ok(())
+}
+
+fn freeze_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add freeze",
+        "Freeze a compiled diagram into an fdd-v1 binary snapshot",
+    )
+    .opt("dd", "", "compiled diagram JSON (from `compile --out`)")
+    .opt("model", "", "trained forest JSON (compiled first)")
+    .opt("dataset", "", "train in-place on this dataset instead")
+    .opt("trees", "100", "trees when training in-place")
+    .opt("seed", "42", "seed when training in-place")
+    .opt("abstraction", "majority", "word | vector | majority (ignored with --dd)")
+    .switch("no-unsat", "disable unsatisfiable-path elimination")
+    .opt("out", "model.fdd", "output snapshot path")
+}
+
+fn cmd_freeze(args: &[String]) -> Result<()> {
+    let a = freeze_spec().parse(args)?;
+    let dd = if !a.str("dd").is_empty() {
+        CompiledDD::load(a.str("dd"))?
+    } else {
+        let (forest, _) = load_or_train(&a)?;
+        let opts = CompileOptions {
+            abstraction: parse_abstraction(a.str("abstraction"))?,
+            unsat_elim: !a.flag("no-unsat"),
+            ..Default::default()
+        };
+        ForestCompiler::new(opts).compile(&forest)?
+    };
+    let frozen = dd.freeze();
+    let out = a.str("out");
+    frozen.save(out)?;
+    let s = frozen.size();
+    let bytes = std::fs::metadata(out)?.len();
+    println!(
+        "froze {}: {} nodes ({} decision + {} terminal), {} predicates -> {out} ({bytes} bytes)",
+        frozen.label(),
+        s.total(),
+        s.internal,
+        s.terminals,
+        frozen.n_preds()
+    );
+    println!("serve with `forest-add serve --snapshot {out}`");
+    Ok(())
+}
+
+fn inspect_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add inspect",
+        "Inspect an fdd-v1 snapshot (header, sections, stats)",
+    )
+    .req("snapshot", "snapshot path (from `freeze`)")
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let a = inspect_spec().parse(args)?;
+    let bytes = std::fs::read(a.str("snapshot"))?;
+    let s = frozen::snapshot::summarize(&bytes)?;
+    println!(
+        "format: {} (version {}), {} bytes, checksum {:#018x} (verified)",
+        frozen::snapshot::FORMAT_NAME,
+        s.version,
+        s.file_len,
+        s.checksum
+    );
+    // Full structural validation happens on load; reaching here with a
+    // FrozenDD in hand proves the artifact is servable.
+    let dd = FrozenDD::from_bytes(&bytes)?;
+    println!(
+        "{}: {} trees, {} features, {} classes, {} predicates",
+        dd.label(),
+        s.n_trees,
+        s.n_features,
+        s.n_classes,
+        s.n_preds
+    );
+    println!(
+        "diagram: {} decision nodes + {} terminals (root {})",
+        s.n_nodes,
+        s.n_terminals,
+        if s.n_nodes == 0 { "terminal" } else { "node 0" }
+    );
+    let mut t = Table::new(&["section", "offset", "bytes"]);
+    for (name, offset, len) in &s.sections {
+        t.row(vec![name.to_string(), offset.to_string(), len.to_string()]);
+    }
+    print!("{}", t.to_text());
     Ok(())
 }
 
@@ -274,12 +387,27 @@ fn cmd_eval(args: &[String]) -> Result<()> {
         };
         match ForestCompiler::new(opts).compile(&forest) {
             Ok(dd) => {
+                // The frozen form of the paper's headline variant rides
+                // along so the table shows the serving layout too.
+                if abstraction == Abstraction::Majority {
+                    registry.register(
+                        "frozen-dd",
+                        schema.clone(),
+                        vec![(
+                            BackendKind::Frozen,
+                            Arc::new(dd.freeze()) as Arc<dyn Classifier>,
+                        )],
+                    )?;
+                }
                 registry.register(
                     name,
                     schema.clone(),
                     vec![(BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>)],
                 )?;
                 names.push(name);
+                if abstraction == Abstraction::Majority {
+                    names.push("frozen-dd");
+                }
             }
             Err(Error::Capacity(msg)) => cutoffs.push((abstraction.label(true), msg)),
             Err(e) => return Err(e),
@@ -318,10 +446,11 @@ fn serve_spec() -> ArgSpec {
     ArgSpec::new("forest-add serve", "Start the HTTP serving coordinator")
         .opt("config", "", "JSON config file (CLI flags override)")
         .opt("addr", "", "bind address, e.g. 127.0.0.1:7878")
+        .opt("snapshot", "", "serve this fdd-v1 snapshot (skips training)")
         .opt("dataset", "", "dataset to train on")
         .opt("trees", "", "forest size")
         .opt("max-depth", "", "tree depth cap")
-        .opt("backend", "", "default backend: forest | dd | xla")
+        .opt("backend", "", "default backend: forest | dd | frozen | xla")
         .opt("artifacts", "", "artifacts directory")
         .opt("variant", "", "artifact variant (small | base | wide)")
         .opt("reply-timeout-ms", "", "batched-reply timeout in milliseconds")
@@ -338,6 +467,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     if !a.str("addr").is_empty() {
         cfg.addr = a.str("addr").to_string();
+    }
+    if !a.str("snapshot").is_empty() {
+        cfg.snapshot = a.str("snapshot").to_string();
     }
     if !a.str("dataset").is_empty() {
         cfg.dataset = a.str("dataset").to_string();
@@ -379,7 +511,7 @@ fn classify_spec() -> ArgSpec {
     ArgSpec::new("forest-add classify", "Classify one row via a running server")
         .req("addr", "server address, e.g. 127.0.0.1:7878")
         .req("features", "comma-separated feature values")
-        .opt("backend", "", "forest | dd | xla")
+        .opt("backend", "", "forest | dd | frozen | xla")
         .opt("model", "", "named model (server default otherwise)")
 }
 
@@ -503,6 +635,54 @@ mod tests {
             "10".into(),
         ])
         .unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn freeze_inspect_and_snapshot_compile_roundtrip() {
+        let dir = std::env::temp_dir().join("forest-add-cli-freeze-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("lenses.fdd");
+        let snap_s = snap.to_str().unwrap().to_string();
+        cmd_freeze(&[
+            "--dataset".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "7".into(),
+            "--out".into(),
+            snap_s.clone(),
+        ])
+        .unwrap();
+        assert!(snap.exists());
+        cmd_inspect(&["--snapshot".into(), snap_s.clone()]).unwrap();
+        // compile --format fdd writes a loadable snapshot too
+        let snap2 = dir.join("lenses2.fdd");
+        cmd_compile(&[
+            "--dataset".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "7".into(),
+            "--format".into(),
+            "fdd".into(),
+            "--out".into(),
+            snap2.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let a = FrozenDD::load(&snap_s).unwrap();
+        let b = FrozenDD::load(snap2.to_str().unwrap()).unwrap();
+        assert_eq!(a.to_bytes(), b.to_bytes(), "same forest, same snapshot");
+        // unknown formats are rejected
+        assert!(cmd_compile(&[
+            "--dataset".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "3".into(),
+            "--format".into(),
+            "cbor".into(),
+            "--out".into(),
+            dir.join("x").to_str().unwrap().into(),
+        ])
+        .is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

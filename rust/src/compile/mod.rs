@@ -22,6 +22,11 @@
 //! non-`*` variant explodes — the paper's own Fig. 6/7 cut those series
 //! off), and periodic arena compaction (hash-consed managers never free
 //! nodes; long aggregations rebuild the live cone into a fresh manager).
+//!
+//! The compiled diagram is the *build-time* artifact; for serving,
+//! [`CompiledDD::freeze`] (or [`ForestCompiler::compile_frozen`]) renders
+//! it into the flat [`FrozenDD`](crate::frozen::FrozenDD) form with its
+//! `fdd-v1` binary snapshot.
 
 pub mod persist;
 
@@ -31,6 +36,7 @@ use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::data::{Dataset, Schema};
 use crate::error::{Error, Result};
 use crate::forest::RandomForest;
+use crate::frozen::{builder::freeze_cone, FrozenDD, FrozenTerminals};
 use crate::predicate::{PredicateOrder, PredicatePool};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -227,6 +233,52 @@ impl CompiledDD {
         }
     }
 
+    /// Flatten into the immutable struct-of-arrays serving form.
+    ///
+    /// The [`FrozenDD`] carries the same diagram — identical predictions
+    /// and §6 step counts on every row — but stores it as topologically
+    /// ordered node arrays with inlined predicates and terminals, evaluates
+    /// without touching the arena, and serialises to the `fdd-v1` binary
+    /// snapshot ([`FrozenDD::save`]) that replicas load with a single
+    /// contiguous read.
+    pub fn freeze(&self) -> FrozenDD {
+        let trees = self.stats.trees;
+        let n_classes = self.schema.n_classes();
+        match &self.model {
+            Model::Word { mgr, root } => freeze_cone(
+                mgr,
+                *root,
+                &self.schema,
+                Abstraction::Word,
+                self.unsat_elim,
+                trees,
+                FrozenTerminals::empty_word(),
+                &mut |w: &ClassWord, t| t.push_word(&w.0),
+            ),
+            Model::Vector { mgr, root } => freeze_cone(
+                mgr,
+                *root,
+                &self.schema,
+                Abstraction::Vector,
+                self.unsat_elim,
+                trees,
+                FrozenTerminals::empty_vector(n_classes),
+                &mut |v: &ClassVector, t| t.push_vector(&v.0),
+            ),
+            Model::Majority { mgr, root } => freeze_cone(
+                mgr,
+                *root,
+                &self.schema,
+                Abstraction::Majority,
+                self.unsat_elim,
+                trees,
+                FrozenTerminals::empty_majority(),
+                &mut |c: &ClassLabel, t| t.push_class(*c),
+            ),
+        }
+        .expect("freezing a live diagram yields a structurally valid FrozenDD")
+    }
+
     /// Graphviz rendering (Figs. 2–5 style).
     pub fn to_dot(&self) -> String {
         let classes = &self.schema.classes;
@@ -308,6 +360,13 @@ impl ForestCompiler {
             )));
         }
         Ok(out.expect("sweep must produce the final checkpoint"))
+    }
+
+    /// Compile an entire forest straight to the frozen serving form
+    /// (`compile` + [`CompiledDD::freeze`]) — the artifact-build path
+    /// behind `forest-add freeze` and `compile --format fdd`.
+    pub fn compile_frozen(&self, forest: &RandomForest) -> Result<FrozenDD> {
+        Ok(self.compile(forest)?.freeze())
     }
 
     /// Aggregate incrementally, producing an independent [`CompiledDD`]
@@ -430,6 +489,10 @@ impl ForestCompiler {
         emit: &mut dyn FnMut(usize, CompiledDD),
     ) -> Result<SweepOutcome> {
         let start = Instant::now();
+        // The stats-trace flag is fixed for the process lifetime: read it
+        // once per compile instead of hitting the environment (and its
+        // lock) on every tree of the hot aggregation loop.
+        let trace_stats = std::env::var("FOREST_ADD_COMPILE_STATS").is_ok();
         let mut mgr: Manager<T> = Manager::new(pool.clone());
         // Persistent reducer: after `combine`, the diagram shares almost all
         // structure with the previously reduced one, so keeping the memo
@@ -528,7 +591,7 @@ impl ForestCompiler {
                     fc.clear();
                 }
             }
-            if std::env::var("FOREST_ADD_COMPILE_STATS").is_ok() && (i + 1) % 25 == 0 {
+            if trace_stats && (i + 1) % 25 == 0 {
                 if let Some(fc) = fused.as_ref() {
                     eprintln!(
                         "[compile] tree {}: visits {} hits {} skips {} arena {}",
@@ -797,6 +860,22 @@ mod tests {
                 let (want_c, want_s) = dd.classify_with_steps(ds.row(i));
                 assert_eq!((class, steps), (want_c, Some(want_s)));
             }
+        }
+    }
+
+    #[test]
+    fn compile_frozen_matches_compile_then_freeze() {
+        let (ds, forest) = iris_forest(6);
+        let compiler = ForestCompiler::new(opts(Abstraction::Majority, true));
+        let frozen = compiler.compile_frozen(&forest).unwrap();
+        let dd = compiler.compile(&forest).unwrap();
+        assert_eq!(frozen.size(), dd.size());
+        for i in (0..ds.n_rows()).step_by(17) {
+            assert_eq!(
+                frozen.classify_with_steps(ds.row(i)),
+                dd.classify_with_steps(ds.row(i)),
+                "row {i}"
+            );
         }
     }
 

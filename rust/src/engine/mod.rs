@@ -2,8 +2,11 @@
 //! builds classifiers for every backend.
 //!
 //! [`Engine::builder`] is the quickstart path — give it a dataset and it
-//! trains the forest, compiles the paper's DD, optionally loads the
-//! XLA/PJRT artifact, and registers everything as one named model:
+//! trains the forest, compiles the paper's DD, freezes it into the flat
+//! serving form, optionally loads the XLA/PJRT artifact, and registers
+//! everything as one named model ([`Engine::register_snapshot`] is the
+//! training-free alternative for replicas that start from an `fdd-v1`
+//! artifact):
 //!
 //! ```no_run
 //! use forest_add::engine::Engine;
@@ -34,6 +37,7 @@ use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::forest::{ForestLearner, RandomForest};
+use crate::frozen::FrozenDD;
 use crate::serve::xla_backend::XlaBackend;
 use std::sync::Arc;
 
@@ -73,8 +77,8 @@ impl Engine {
     }
 
     /// Train a forest on `data`, compile it under `opts`, and register
-    /// the forest + DD pair under `name` (hot-swapping any existing
-    /// version). Returns the issued [`ModelId`].
+    /// the forest + DD + frozen-DD trio under `name` (hot-swapping any
+    /// existing version). Returns the issued [`ModelId`].
     pub fn train_and_register(
         &self,
         name: &str,
@@ -85,6 +89,7 @@ impl Engine {
         opts: CompileOptions,
     ) -> Result<ModelId> {
         let (forest, dd) = train_forest_and_dd(data, trees, max_depth, seed, opts)?;
+        let frozen = dd.freeze();
         let schema = forest.schema.clone();
         self.registry.register(
             name,
@@ -92,8 +97,42 @@ impl Engine {
             vec![
                 (BackendKind::Forest, Arc::new(forest) as Arc<dyn Classifier>),
                 (BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>),
+                (BackendKind::Frozen, Arc::new(frozen) as Arc<dyn Classifier>),
             ],
         )
+    }
+
+    /// Register a model straight from an `fdd-v1` snapshot file — the
+    /// replica-startup path: no training, no compilation, no JSON; one
+    /// contiguous read plus checksum and structural validation.
+    /// Hot-swaps any existing version under `name`.
+    pub fn register_snapshot(&self, name: &str, path: &str) -> Result<ModelId> {
+        let frozen = FrozenDD::load(path)?;
+        let schema = frozen.schema().clone();
+        self.registry.register(
+            name,
+            schema,
+            vec![(BackendKind::Frozen, Arc::new(frozen) as Arc<dyn Classifier>)],
+        )
+    }
+
+    /// Write the frozen backend of a registered model (`None` = default
+    /// model) to an `fdd-v1` snapshot file — the build-pipeline
+    /// counterpart of [`Engine::register_snapshot`], so callers never
+    /// re-train a model the engine already owns.
+    pub fn save_snapshot(&self, model: Option<&str>, path: &str) -> Result<()> {
+        let (version, slot) = self.registry.resolve(model, Some(BackendKind::Frozen))?;
+        let frozen = slot
+            .classifier
+            .as_any()
+            .and_then(|a| a.downcast_ref::<FrozenDD>())
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "model '{}' frozen backend is not a FrozenDD",
+                    version.id
+                ))
+            })?;
+        frozen.save(path)
     }
 
     /// Classify one row on `model`/`backend` (`None` = defaults).
@@ -252,8 +291,10 @@ impl EngineBuilder {
             },
             None => None,
         };
+        let frozen = dd.freeze();
         backends.push((BackendKind::Forest, Arc::new(forest) as Arc<dyn Classifier>));
         backends.push((BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>));
+        backends.push((BackendKind::Frozen, Arc::new(frozen) as Arc<dyn Classifier>));
         if let Some(b) = xla {
             backends.push((BackendKind::Xla, Arc::new(b) as Arc<dyn Classifier>));
         }
@@ -318,7 +359,8 @@ mod tests {
         assert_eq!(version.default_backend, BackendKind::Dd);
         assert!(version.has(BackendKind::Forest));
         assert!(version.has(BackendKind::Dd));
-        // forest and dd agree through the facade on every row
+        assert!(version.has(BackendKind::Frozen));
+        // all native backends agree through the facade on every row
         for i in (0..data.n_rows()).step_by(17) {
             let rf = engine
                 .classify(None, Some(BackendKind::Forest), data.row(i))
@@ -326,7 +368,11 @@ mod tests {
             let dd = engine
                 .classify(None, Some(BackendKind::Dd), data.row(i))
                 .unwrap();
+            let frozen = engine
+                .classify(None, Some(BackendKind::Frozen), data.row(i))
+                .unwrap();
             assert_eq!(rf, dd, "row {i}");
+            assert_eq!(dd, frozen, "row {i}");
         }
     }
 
@@ -370,11 +416,52 @@ mod tests {
             assert_eq!(c, engine.classify(None, None, row).unwrap());
         }
         let infos = engine.info(None).unwrap();
-        assert_eq!(infos.len(), 2);
+        assert_eq!(infos.len(), 3);
         assert!(infos.iter().any(|i| i.backend == BackendKind::Forest));
         assert!(infos.iter().any(|i| i.backend == BackendKind::Dd));
+        assert!(infos.iter().any(|i| i.backend == BackendKind::Frozen));
         // arity violations are rejected at the facade
         assert!(engine.classify(None, None, &[1.0]).is_err());
+    }
+
+    #[test]
+    fn register_snapshot_serves_without_training() {
+        let data = datasets::lenses();
+        // Offline: build and freeze the artifact.
+        let builder_engine = Engine::builder()
+            .dataset(data.clone())
+            .trees(9)
+            .seed(4)
+            .build()
+            .unwrap();
+        let (_, dd) = builder_engine
+            .registry()
+            .resolve(None, Some(BackendKind::Dd))
+            .unwrap();
+        let path = std::env::temp_dir().join(format!("engine-snap-{}.fdd", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        let expected: Vec<u32> = (0..data.n_rows())
+            .map(|i| dd.classifier.classify(data.row(i)).unwrap())
+            .collect();
+        // export the engine's own frozen backend — no re-training
+        builder_engine.save_snapshot(None, &path_s).unwrap();
+
+        // Replica: snapshot in, answers out — no dataset, no compiler.
+        let replica = Engine::new();
+        let id = replica.register_snapshot("lenses", &path_s).unwrap();
+        assert_eq!(id.to_string(), "lenses@v1");
+        for (i, &want) in expected.iter().enumerate() {
+            assert_eq!(
+                replica.classify(Some("lenses"), None, data.row(i)).unwrap(),
+                want,
+                "row {i}"
+            );
+        }
+        // hot-swap: re-registering the snapshot bumps the version
+        let id2 = replica.register_snapshot("lenses", &path_s).unwrap();
+        assert_eq!(id2.version, 2);
+        assert!(replica.register_snapshot("lenses", "/no/such/file.fdd").is_err());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

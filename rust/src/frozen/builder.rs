@@ -1,0 +1,140 @@
+//! Freezing: flatten a live [`Manager`] cone into [`FrozenDD`] arrays.
+//!
+//! The builder walks the cone once, assigns node indices in reverse
+//! post-order — a topological order of the DAG, so the root gets index 0
+//! and every edge points to a strictly greater index — and interns
+//! terminals in first-reference order. Indices are dense: the frozen
+//! arrays contain exactly the live cone, never arena garbage.
+
+use crate::add::{Manager, NodeId, Terminal};
+use crate::compile::Abstraction;
+use crate::data::Schema;
+use crate::error::Result;
+use crate::frozen::{FrozenDD, FrozenTerminals, RawFrozen, TERM_BIT};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
+
+/// Intern a terminal id, returning its [`TERM_BIT`]-tagged reference.
+fn term_ref(
+    id: NodeId,
+    ids: &mut Vec<NodeId>,
+    index: &mut FxHashMap<NodeId, u32>,
+) -> u32 {
+    if let Some(&t) = index.get(&id) {
+        return t | TERM_BIT;
+    }
+    let t = ids.len() as u32;
+    ids.push(id);
+    index.insert(id, t);
+    t | TERM_BIT
+}
+
+/// Flatten the cone under `root` into a [`FrozenDD`].
+///
+/// `terms` must be the empty [`FrozenTerminals`] variant matching
+/// `abstraction`; `encode` appends one terminal payload per distinct
+/// terminal node, in the interned order. `n_trees` comes from the compile
+/// stats (`0` = unknown; the builder then recovers it from the payloads
+/// where the abstraction preserves it).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn freeze_cone<T: Terminal>(
+    mgr: &Manager<T>,
+    root: NodeId,
+    schema: &Schema,
+    abstraction: Abstraction,
+    unsat_elim: bool,
+    n_trees: usize,
+    mut terms: FrozenTerminals,
+    encode: &mut dyn FnMut(&T, &mut FrozenTerminals),
+) -> Result<FrozenDD> {
+    // Post-order over the internal nodes of the cone …
+    let mut post: Vec<NodeId> = Vec::new();
+    let mut seen: FxHashSet<NodeId> = FxHashSet::default();
+    if !root.is_terminal() {
+        let mut stack = vec![(root, false)];
+        while let Some((id, expanded)) = stack.pop() {
+            if expanded {
+                post.push(id);
+                continue;
+            }
+            if !seen.insert(id) {
+                continue;
+            }
+            let n = mgr.internal(id);
+            stack.push((id, true));
+            if !n.hi.is_terminal() {
+                stack.push((n.hi, false));
+            }
+            if !n.lo.is_terminal() {
+                stack.push((n.lo, false));
+            }
+        }
+    }
+    // … reversed = topological: parents strictly before children, root
+    // first. This is what lets the batch path sweep the arrays in order.
+    let order: Vec<NodeId> = post.into_iter().rev().collect();
+    let index: FxHashMap<NodeId, u32> = order
+        .iter()
+        .enumerate()
+        .map(|(i, &id)| (id, i as u32))
+        .collect();
+
+    let mut term_ids: Vec<NodeId> = Vec::new();
+    let mut term_index: FxHashMap<NodeId, u32> = FxHashMap::default();
+    let mut node_level = Vec::with_capacity(order.len());
+    let mut node_lo = Vec::with_capacity(order.len());
+    let mut node_hi = Vec::with_capacity(order.len());
+    for &id in &order {
+        let n = mgr.internal(id);
+        node_level.push(n.level);
+        node_lo.push(if n.lo.is_terminal() {
+            term_ref(n.lo, &mut term_ids, &mut term_index)
+        } else {
+            index[&n.lo]
+        });
+        node_hi.push(if n.hi.is_terminal() {
+            term_ref(n.hi, &mut term_ids, &mut term_index)
+        } else {
+            index[&n.hi]
+        });
+    }
+    let root_ref = if root.is_terminal() {
+        term_ref(root, &mut term_ids, &mut term_index)
+    } else {
+        0
+    };
+    for &id in &term_ids {
+        encode(mgr.terminal_value(id), &mut terms);
+    }
+    let n_trees = if n_trees == 0 {
+        terms.infer_trees()
+    } else {
+        n_trees as u32
+    };
+
+    let pool = mgr.pool();
+    let mut pred_feature = Vec::with_capacity(pool.len());
+    let mut pred_threshold = Vec::with_capacity(pool.len());
+    for level in 0..pool.len() as u32 {
+        let p = pool.pred(level);
+        pred_feature.push(p.feature);
+        pred_threshold.push(p.threshold);
+    }
+
+    FrozenDD::from_raw(RawFrozen {
+        schema: schema.clone(),
+        abstraction,
+        unsat_elim,
+        n_trees,
+        pred_feature,
+        pred_threshold,
+        node_level,
+        node_lo,
+        node_hi,
+        root: root_ref,
+        terminals: terms,
+    })
+}
+
+// Freezing is exercised end-to-end (against the live diagram, across all
+// abstractions and datasets) in `frozen::tests` and
+// `tests/conformance.rs`.

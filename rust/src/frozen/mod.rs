@@ -1,0 +1,576 @@
+//! FrozenDD: the flat, immutable serving form of a compiled diagram.
+//!
+//! A [`CompiledDD`](crate::compile::CompiledDD) lives in a hash-consed
+//! arena ([`add::Manager`](crate::add::Manager)) — ideal for aggregation,
+//! but every evaluation pays pointer-chasing through node ids, a predicate
+//! pool indirection per decision, and JSON parsing at replica startup.
+//! Post-compilation the diagram never changes, so the serving fleet runs
+//! this frozen rendering instead:
+//!
+//! - **Struct-of-arrays node storage** in topological order (the root is
+//!   node 0; every child sits at a strictly greater index), with the
+//!   predicate's feature index and threshold inlined per node — one
+//!   16-byte record per decision, no pool lookup on the walk.
+//! - **Terminals inlined per abstraction** (class words, vote vectors, or
+//!   bare labels), with the majority class and the §6 aggregation reads
+//!   precomputed per terminal, so evaluation never allocates.
+//! - **A true batch path** ([`FrozenDD::classify_batch`]): one forward
+//!   pass over the node arrays moves every row of the batch through the
+//!   diagram, loading each node once per pass instead of once per row.
+//! - **A binary snapshot** ([`snapshot`], format `forest-add/fdd-v1`)
+//!   that writes and reloads the whole structure with a single contiguous
+//!   read — replicas start from a pre-compiled artifact in milliseconds.
+//!
+//! Predictions and §6 step counts are bit-identical to the source
+//! `CompiledDD` (enforced by `tests/conformance.rs`): freezing is a
+//! memory-layout change, never a semantic one.
+
+pub mod snapshot;
+
+pub(crate) mod builder;
+mod validate;
+
+use crate::add::terminal::argmax;
+use crate::add::SizeStats;
+use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
+use crate::compile::Abstraction;
+use crate::data::Schema;
+use crate::error::Result;
+
+/// High bit of a child reference: set ⇒ the remaining bits index the
+/// terminal arrays, clear ⇒ they index the node arrays. Mirrors the
+/// [`add::NodeId`](crate::add::NodeId) tagging convention.
+pub const TERM_BIT: u32 = 1 << 31;
+
+/// One decision node in the frozen layout: the predicate `x[feat] <
+/// thresh` inlined, plus the two child references.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct FrozenNode {
+    /// Feature column tested.
+    feat: u32,
+    /// Strict upper-bound threshold.
+    thresh: f32,
+    /// Child when the predicate fails.
+    lo: u32,
+    /// Child when the predicate holds.
+    hi: u32,
+}
+
+/// Terminal storage, one variant per [`Abstraction`]. Payloads are kept
+/// verbatim (not just the precomputed class) so snapshots remain
+/// information-complete and `inspect` can show what a terminal carries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum FrozenTerminals {
+    /// Class words: terminal `i` is `symbols[offsets[i]..offsets[i + 1]]`.
+    Word { offsets: Vec<u32>, symbols: Vec<u16> },
+    /// Vote vectors: terminal `i` is `counts[i * stride..(i + 1) * stride]`.
+    Vector { stride: u32, counts: Vec<u32> },
+    /// Bare class labels.
+    Majority { classes: Vec<u16> },
+}
+
+impl FrozenTerminals {
+    pub(crate) fn empty_word() -> FrozenTerminals {
+        FrozenTerminals::Word {
+            offsets: vec![0],
+            symbols: Vec::new(),
+        }
+    }
+
+    pub(crate) fn empty_vector(n_classes: usize) -> FrozenTerminals {
+        FrozenTerminals::Vector {
+            stride: n_classes as u32,
+            counts: Vec::new(),
+        }
+    }
+
+    pub(crate) fn empty_majority() -> FrozenTerminals {
+        FrozenTerminals::Majority {
+            classes: Vec::new(),
+        }
+    }
+
+    pub(crate) fn push_word(&mut self, word: &[u16]) {
+        match self {
+            FrozenTerminals::Word { offsets, symbols } => {
+                symbols.extend_from_slice(word);
+                offsets.push(symbols.len() as u32);
+            }
+            _ => panic!("terminal kind mismatch: expected word storage"),
+        }
+    }
+
+    pub(crate) fn push_vector(&mut self, row: &[u32]) {
+        match self {
+            FrozenTerminals::Vector { stride, counts } => {
+                assert_eq!(row.len(), *stride as usize, "vote vector arity");
+                counts.extend_from_slice(row);
+            }
+            _ => panic!("terminal kind mismatch: expected vector storage"),
+        }
+    }
+
+    pub(crate) fn push_class(&mut self, class: u16) {
+        match self {
+            FrozenTerminals::Majority { classes } => classes.push(class),
+            _ => panic!("terminal kind mismatch: expected majority storage"),
+        }
+    }
+
+    /// Number of terminals stored.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            FrozenTerminals::Word { offsets, .. } => offsets.len() - 1,
+            FrozenTerminals::Vector { stride, counts } => {
+                if *stride == 0 {
+                    0
+                } else {
+                    counts.len() / *stride as usize
+                }
+            }
+            FrozenTerminals::Majority { classes } => classes.len(),
+        }
+    }
+
+    /// The abstraction this storage belongs to.
+    pub(crate) fn abstraction(&self) -> Abstraction {
+        match self {
+            FrozenTerminals::Word { .. } => Abstraction::Word,
+            FrozenTerminals::Vector { .. } => Abstraction::Vector,
+            FrozenTerminals::Majority { .. } => Abstraction::Majority,
+        }
+    }
+
+    /// Majority class of terminal `i`, via the crate's one `argmax`
+    /// (ties break to the lowest class index, like every other layout).
+    fn class_of(&self, i: usize, n_classes: usize) -> u16 {
+        match self {
+            FrozenTerminals::Word { offsets, symbols } => {
+                let mut counts = vec![0u32; n_classes];
+                for &s in &symbols[offsets[i] as usize..offsets[i + 1] as usize] {
+                    counts[s as usize] += 1;
+                }
+                argmax(&counts)
+            }
+            FrozenTerminals::Vector { stride, counts } => {
+                let s = *stride as usize;
+                argmax(&counts[i * s..(i + 1) * s])
+            }
+            FrozenTerminals::Majority { classes } => classes[i],
+        }
+    }
+
+    /// §6 aggregation reads still paid at runtime when terminal `i` is
+    /// reached: the word length for class words, `|C|` for vote vectors,
+    /// zero after the majority abstraction.
+    fn agg_reads_of(&self, i: usize, n_classes: usize) -> u32 {
+        match self {
+            FrozenTerminals::Word { offsets, .. } => offsets[i + 1] - offsets[i],
+            FrozenTerminals::Vector { .. } => n_classes as u32,
+            FrozenTerminals::Majority { .. } => 0,
+        }
+    }
+
+    /// Best-effort forest size recovered from the payloads (word length /
+    /// vote total), for diagrams whose compile stats were not persisted.
+    fn infer_trees(&self) -> u32 {
+        match self {
+            FrozenTerminals::Word { offsets, .. } => offsets
+                .windows(2)
+                .map(|w| w[1] - w[0])
+                .max()
+                .unwrap_or(0),
+            FrozenTerminals::Vector { stride, counts } => {
+                if *stride == 0 {
+                    0
+                } else {
+                    counts
+                        .chunks_exact(*stride as usize)
+                        .map(|row| row.iter().sum())
+                        .max()
+                        .unwrap_or(0)
+                }
+            }
+            FrozenTerminals::Majority { .. } => 0,
+        }
+    }
+}
+
+/// The raw (serialisable) fields of a [`FrozenDD`], before validation and
+/// derivation of the evaluation arrays. Built by [`builder::freeze_cone`]
+/// and by the [`snapshot`] loader.
+pub(crate) struct RawFrozen {
+    pub schema: Schema,
+    pub abstraction: Abstraction,
+    pub unsat_elim: bool,
+    pub n_trees: u32,
+    /// Predicate tables, indexed by level (the global variable order).
+    pub pred_feature: Vec<u32>,
+    pub pred_threshold: Vec<f32>,
+    /// Node arrays in topological order (root first, children strictly
+    /// after parents).
+    pub node_level: Vec<u32>,
+    pub node_lo: Vec<u32>,
+    pub node_hi: Vec<u32>,
+    /// Root reference ([`TERM_BIT`]-tagged when the diagram is a single
+    /// terminal; otherwise always node 0).
+    pub root: u32,
+    pub terminals: FrozenTerminals,
+}
+
+/// An immutable, cache-friendly snapshot of a compiled decision diagram.
+///
+/// Built with [`CompiledDD::freeze`](crate::compile::CompiledDD::freeze)
+/// (or loaded from an `fdd-v1` snapshot via [`FrozenDD::load`]) and served
+/// through the [`Classifier`] trait as [`BackendKind::Frozen`].
+#[derive(Debug, Clone)]
+pub struct FrozenDD {
+    schema: Schema,
+    abstraction: Abstraction,
+    unsat_elim: bool,
+    n_trees: u32,
+    pred_feature: Vec<u32>,
+    pred_threshold: Vec<f32>,
+    node_level: Vec<u32>,
+    root: u32,
+    terminals: FrozenTerminals,
+    /// Derived at build/load time, never serialised: the walk-ready node
+    /// records (predicate inlined) …
+    nodes: Vec<FrozenNode>,
+    /// … and the per-terminal majority class / §6 aggregation reads.
+    term_class: Vec<u16>,
+    term_agg_reads: Vec<u32>,
+}
+
+impl FrozenDD {
+    /// Validate raw fields and derive the evaluation arrays.
+    pub(crate) fn from_raw(raw: RawFrozen) -> Result<FrozenDD> {
+        validate::validate(&raw)?;
+        let RawFrozen {
+            schema,
+            abstraction,
+            unsat_elim,
+            n_trees,
+            pred_feature,
+            pred_threshold,
+            node_level,
+            node_lo,
+            node_hi,
+            root,
+            terminals,
+        } = raw;
+        let nodes = node_level
+            .iter()
+            .zip(node_lo.iter().zip(&node_hi))
+            .map(|(&level, (&lo, &hi))| FrozenNode {
+                feat: pred_feature[level as usize],
+                thresh: pred_threshold[level as usize],
+                lo,
+                hi,
+            })
+            .collect();
+        let n_classes = schema.n_classes();
+        let term_class = (0..terminals.len())
+            .map(|i| terminals.class_of(i, n_classes))
+            .collect();
+        let term_agg_reads = (0..terminals.len())
+            .map(|i| terminals.agg_reads_of(i, n_classes))
+            .collect();
+        Ok(FrozenDD {
+            schema,
+            abstraction,
+            unsat_elim,
+            n_trees,
+            pred_feature,
+            pred_threshold,
+            node_level,
+            root,
+            terminals,
+            nodes,
+            term_class,
+            term_agg_reads,
+        })
+    }
+
+    /// Schema of the training data.
+    pub fn schema(&self) -> &Schema {
+        &self.schema
+    }
+
+    /// Which abstraction the terminals carry.
+    pub fn abstraction(&self) -> Abstraction {
+        self.abstraction
+    }
+
+    /// Whether unsatisfiable-path elimination was applied at compile time.
+    pub fn unsat_elim(&self) -> bool {
+        self.unsat_elim
+    }
+
+    /// Forest size the diagram was compiled from (`0` when unknown).
+    pub fn n_trees(&self) -> usize {
+        self.n_trees as usize
+    }
+
+    /// Number of distinct predicates (= diagram levels).
+    pub fn n_preds(&self) -> usize {
+        self.pred_feature.len()
+    }
+
+    /// Series label, paper style plus the layout tag
+    /// (e.g. `Most frequent class DD* [frozen]`).
+    pub fn label(&self) -> String {
+        format!("{} [frozen]", self.abstraction.label(self.unsat_elim))
+    }
+
+    /// Diagram size (same Fig. 7 / Table 2 measure as
+    /// [`CompiledDD::size`](crate::compile::CompiledDD::size)).
+    pub fn size(&self) -> SizeStats {
+        SizeStats {
+            internal: self.nodes.len(),
+            terminals: self.terminals.len(),
+        }
+    }
+
+    /// §6 aggregation reads per classification (`n` for class words,
+    /// `|C|` for vote vectors, `0` after the majority abstraction).
+    pub fn aggregation_reads(&self) -> usize {
+        match self.abstraction {
+            Abstraction::Word => self.n_trees as usize,
+            Abstraction::Vector => self.schema.n_classes(),
+            Abstraction::Majority => 0,
+        }
+    }
+
+    /// Classify one row (majority-vote semantics in every abstraction).
+    pub fn classify(&self, x: &[f32]) -> u32 {
+        self.classify_with_steps(x).0
+    }
+
+    /// Classify with the §6 step metric — bit-identical to
+    /// [`CompiledDD::classify_with_steps`](crate::compile::CompiledDD::classify_with_steps)
+    /// on the source diagram.
+    pub fn classify_with_steps(&self, x: &[f32]) -> (u32, usize) {
+        let mut id = self.root;
+        let mut steps = 0usize;
+        while id & TERM_BIT == 0 {
+            let n = &self.nodes[id as usize];
+            steps += 1;
+            // One 16-byte record per decision; the compare feeds a select,
+            // not a data-dependent pointer chase through an arena.
+            id = if x[n.feat as usize] < n.thresh {
+                n.hi
+            } else {
+                n.lo
+            };
+        }
+        let t = (id & !TERM_BIT) as usize;
+        (
+            u32::from(self.term_class[t]),
+            steps + self.term_agg_reads[t] as usize,
+        )
+    }
+
+    /// Classify a batch with one forward pass over the node arrays.
+    ///
+    /// Nodes are stored topologically (children strictly after parents),
+    /// so a row parked at node `i` only ever moves to a node `> i` or to a
+    /// terminal: a single in-order sweep completes every row, and each
+    /// node's predicate is loaded once per pass instead of once per row —
+    /// the cache behaviour single-row walks cannot get.
+    #[allow(clippy::needless_range_loop)] // the loop mutates `parked` at two indices
+    pub fn classify_batch(&self, rows: &[Vec<f32>]) -> Vec<u32> {
+        // The sweep costs O(n_nodes) regardless of batch size; for batches
+        // small relative to the diagram, plain walks win — don't sweep
+        // half a million nodes to serve two rows.
+        if rows.len().saturating_mul(32) < self.nodes.len() {
+            return rows.iter().map(|r| self.classify(r)).collect();
+        }
+        let mut out = vec![0u32; rows.len()];
+        if self.root & TERM_BIT != 0 {
+            out.fill(u32::from(
+                self.term_class[(self.root & !TERM_BIT) as usize],
+            ));
+            return out;
+        }
+        let mut parked: Vec<Vec<u32>> = vec![Vec::new(); self.nodes.len()];
+        parked[0] = (0..rows.len() as u32).collect();
+        for i in 0..self.nodes.len() {
+            if parked[i].is_empty() {
+                continue;
+            }
+            let here = std::mem::take(&mut parked[i]);
+            let n = self.nodes[i];
+            for r in here {
+                let x = rows[r as usize].as_slice();
+                let next = if x[n.feat as usize] < n.thresh {
+                    n.hi
+                } else {
+                    n.lo
+                };
+                if next & TERM_BIT != 0 {
+                    out[r as usize] =
+                        u32::from(self.term_class[(next & !TERM_BIT) as usize]);
+                } else {
+                    parked[next as usize].push(r);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// The deployment backend: the paper's diagram in its flat serving form.
+/// Same predictions and step counts as [`BackendKind::Dd`], different
+/// memory layout and startup story.
+impl Classifier for FrozenDD {
+    fn info(&self) -> ClassifierInfo {
+        ClassifierInfo {
+            backend: BackendKind::Frozen,
+            label: self.label(),
+            n_features: self.schema.n_features(),
+            n_classes: self.schema.n_classes(),
+            size_nodes: self.size().total(),
+            cost: CostModel {
+                // One decision per distinct predicate level at most, plus
+                // the abstraction's runtime aggregation reads.
+                max_steps: Some(self.n_preds() + self.aggregation_reads()),
+                aggregation_reads: self.aggregation_reads(),
+                // The frozen walk is allocation-free and microseconds-fast:
+                // coalescing single requests through the dynamic batcher
+                // would cost more than the node-array pass saves. Explicit
+                // batches still hit the native pass via `classify_batch`.
+                preferred_batch: 1,
+            },
+        }
+    }
+
+    fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
+        let (class, steps) = FrozenDD::classify_with_steps(self, x);
+        Ok((class, Some(steps)))
+    }
+
+    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+        Ok(FrozenDD::classify_batch(self, rows))
+    }
+
+    fn as_any(&self) -> Option<&dyn std::any::Any> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::{CompileOptions, ForestCompiler};
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn frozen_iris(abstraction: Abstraction) -> (crate::data::Dataset, crate::compile::CompiledDD) {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(10).seed(21).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        (ds, dd)
+    }
+
+    #[test]
+    fn freeze_is_bit_identical_to_the_live_diagram() {
+        for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+            let (ds, dd) = frozen_iris(abstraction);
+            let frozen = dd.freeze();
+            assert_eq!(frozen.abstraction(), abstraction);
+            assert_eq!(frozen.size(), dd.size(), "{abstraction:?}");
+            for i in 0..ds.n_rows() {
+                assert_eq!(
+                    frozen.classify_with_steps(ds.row(i)),
+                    dd.classify_with_steps(ds.row(i)),
+                    "{abstraction:?} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_pass_matches_single_row_walks() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let frozen = dd.freeze();
+        let rows: Vec<Vec<f32>> = (0..ds.n_rows()).map(|i| ds.row(i).to_vec()).collect();
+        let batch = frozen.classify_batch(&rows);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(batch[i], frozen.classify(row), "row {i}");
+        }
+        assert!(frozen.classify_batch(&[]).is_empty());
+        // Tiny batches take the per-row fallback; answers must not change.
+        assert_eq!(
+            frozen.classify_batch(&rows[..1]),
+            vec![frozen.classify(&rows[0])]
+        );
+    }
+
+    #[test]
+    fn classifier_trait_reports_frozen_backend() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let frozen = dd.freeze();
+        let info = Classifier::info(&frozen);
+        assert_eq!(info.backend, BackendKind::Frozen);
+        assert_eq!(info.label, "Most frequent class DD* [frozen]");
+        assert_eq!(info.size_nodes, dd.size().total());
+        assert_eq!(info.cost.aggregation_reads, 0);
+        assert_eq!(info.cost.preferred_batch, 1);
+        let c: &dyn Classifier = &frozen;
+        let (class, steps) = c.classify_with_steps(ds.row(0)).unwrap();
+        assert_eq!((class, steps.unwrap()), dd.classify_with_steps(ds.row(0)));
+    }
+
+    #[test]
+    fn word_and_vector_keep_their_aggregation_reads() {
+        let (_, word) = frozen_iris(Abstraction::Word);
+        let (_, vector) = frozen_iris(Abstraction::Vector);
+        assert_eq!(word.freeze().aggregation_reads(), 10);
+        assert_eq!(vector.freeze().aggregation_reads(), 3);
+        assert_eq!(word.freeze().n_trees(), 10);
+    }
+
+    #[test]
+    fn single_terminal_diagram_freezes() {
+        // A one-tree forest on a trivial dataset can collapse to a single
+        // terminal after the majority abstraction; the frozen form must
+        // handle a TERM_BIT-tagged root.
+        let ds = datasets::lenses();
+        let forest = ForestLearner::default().trees(1).max_depth(1).seed(3).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+        let frozen = dd.freeze();
+        let rows: Vec<Vec<f32>> = (0..ds.n_rows()).map(|i| ds.row(i).to_vec()).collect();
+        let batch = frozen.classify_batch(&rows);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(frozen.classify_with_steps(row), dd.classify_with_steps(row));
+            assert_eq!(batch[i], dd.classify(row));
+        }
+    }
+
+    #[test]
+    fn terminal_majority_ties_break_low() {
+        let mut t = FrozenTerminals::empty_vector(3);
+        t.push_vector(&[2, 2, 1]);
+        t.push_vector(&[0, 1, 1]);
+        assert_eq!(t.class_of(0, 3), 0, "tie must break to the lowest class");
+        assert_eq!(t.class_of(1, 3), 1);
+        assert_eq!(t.agg_reads_of(0, 3), 3);
+        assert_eq!(t.infer_trees(), 5);
+        let mut w = FrozenTerminals::empty_word();
+        w.push_word(&[1, 0, 1]);
+        w.push_word(&[]);
+        assert_eq!(w.len(), 2);
+        assert_eq!(w.class_of(0, 2), 1);
+        assert_eq!(w.class_of(1, 2), 0, "empty word votes for class 0");
+        assert_eq!(w.agg_reads_of(0, 2), 3);
+        assert_eq!(w.agg_reads_of(1, 2), 0);
+    }
+}

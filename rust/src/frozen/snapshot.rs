@@ -1,0 +1,679 @@
+//! The `forest-add/fdd-v1` binary snapshot format.
+//!
+//! A snapshot is the deployable artifact of the frozen runtime: replicas
+//! `fs::read` one file (a single contiguous read), verify the checksum,
+//! and bulk-convert the sections into the [`FrozenDD`] arrays — no JSON
+//! parsing, no per-node allocation, no training. Writing is fully
+//! deterministic, so `write → load → re-write` is byte-identical (the
+//! conformance tests and the checked-in fixture both pin this).
+//!
+//! All integers are **little-endian**. Layout:
+//!
+//! ```text
+//! Header (40 bytes)
+//!   [0..8)    magic            b"FADD.FDD"
+//!   [8..12)   version          u32 = 1
+//!   [12..16)  section_count    u32
+//!   [16..24)  payload_len      u64   (= file length - 40)
+//!   [24..32)  checksum         u64   FNV-1a 64 over bytes [40..end)
+//!   [32..40)  reserved         u64 = 0
+//! Section table (section_count × 24 bytes, ascending id)
+//!   id u32, reserved u32 = 0, offset u64 (absolute), len u64
+//! Sections (each 8-byte aligned, zero padding between):
+//!   1 META (36 bytes): abstraction u8 (0 word / 1 vector / 2 majority),
+//!     unsat_elim u8, reserved u16, n_trees u32, n_features u32,
+//!     n_classes u32, n_preds u32, n_nodes u32, n_terminals u32,
+//!     root u32 (bit 31 = terminal), reserved u32
+//!   2 SCHEMA: n_classes × str, then n_features × { name str, kind u8
+//!     (0 numeric / 1 categorical), categorical: count u32 + count × str }
+//!     where str = len u32 + UTF-8 bytes
+//!   3 PREDS: n_preds × u32 feature, then n_preds × f32 threshold
+//!   4 NODES (struct-of-arrays, topological order, root first):
+//!     n_nodes × u32 level, n_nodes × u32 lo, n_nodes × u32 hi
+//!   5 TERMS: word → (n_terminals + 1) × u32 offsets + symbols × u16;
+//!     vector → n_terminals × n_classes × u32; majority → n_terminals × u16
+//! ```
+//!
+//! Unknown section ids are ignored (a v1 reader skips what it does not
+//! know); an unknown `version` is rejected outright. The checked-in
+//! fixture under `tests/fixtures/` trips on any accidental change to this
+//! layout.
+
+use crate::compile::Abstraction;
+use crate::data::{Feature, FeatureKind, Schema};
+use crate::error::{Error, Result};
+use crate::frozen::{FrozenDD, FrozenTerminals, RawFrozen};
+
+/// Human-readable format name (CLI `inspect` output).
+pub const FORMAT_NAME: &str = "forest-add/fdd-v1";
+
+const MAGIC: [u8; 8] = *b"FADD.FDD";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 40;
+const TABLE_ENTRY_LEN: usize = 24;
+
+const SEC_META: u32 = 1;
+const SEC_SCHEMA: u32 = 2;
+const SEC_PREDS: u32 = 3;
+const SEC_NODES: u32 = 4;
+const SEC_TERMS: u32 = 5;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::parse(format!("fdd snapshot: {}", msg.into()))
+}
+
+/// FNV-1a 64 over a byte slice (dependency-free integrity check).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn abstraction_code(a: Abstraction) -> u8 {
+    match a {
+        Abstraction::Word => 0,
+        Abstraction::Vector => 1,
+        Abstraction::Majority => 2,
+    }
+}
+
+fn abstraction_from_code(c: u8) -> Result<Abstraction> {
+    match c {
+        0 => Ok(Abstraction::Word),
+        1 => Ok(Abstraction::Vector),
+        2 => Ok(Abstraction::Majority),
+        other => Err(err(format!("unknown abstraction code {other}"))),
+    }
+}
+
+// ---------------------------------------------------------------- writing
+
+fn push_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_str(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn meta_bytes(dd: &FrozenDD) -> Vec<u8> {
+    let mut b = Vec::with_capacity(36);
+    b.push(abstraction_code(dd.abstraction));
+    b.push(u8::from(dd.unsat_elim));
+    push_u16(&mut b, 0);
+    push_u32(&mut b, dd.n_trees);
+    push_u32(&mut b, dd.schema.n_features() as u32);
+    push_u32(&mut b, dd.schema.n_classes() as u32);
+    push_u32(&mut b, dd.pred_feature.len() as u32);
+    push_u32(&mut b, dd.nodes.len() as u32);
+    push_u32(&mut b, dd.terminals.len() as u32);
+    push_u32(&mut b, dd.root);
+    push_u32(&mut b, 0);
+    b
+}
+
+fn schema_bytes(schema: &Schema) -> Vec<u8> {
+    let mut b = Vec::new();
+    for class in &schema.classes {
+        push_str(&mut b, class);
+    }
+    for f in &schema.features {
+        push_str(&mut b, &f.name);
+        match &f.kind {
+            FeatureKind::Numeric => b.push(0),
+            FeatureKind::Categorical { values } => {
+                b.push(1);
+                push_u32(&mut b, values.len() as u32);
+                for v in values {
+                    push_str(&mut b, v);
+                }
+            }
+        }
+    }
+    b
+}
+
+fn preds_bytes(dd: &FrozenDD) -> Vec<u8> {
+    let mut b = Vec::with_capacity(dd.pred_feature.len() * 8);
+    for &f in &dd.pred_feature {
+        push_u32(&mut b, f);
+    }
+    for &t in &dd.pred_threshold {
+        push_u32(&mut b, t.to_bits());
+    }
+    b
+}
+
+fn nodes_bytes(dd: &FrozenDD) -> Vec<u8> {
+    let mut b = Vec::with_capacity(dd.nodes.len() * 12);
+    for &level in &dd.node_level {
+        push_u32(&mut b, level);
+    }
+    for n in &dd.nodes {
+        push_u32(&mut b, n.lo);
+    }
+    for n in &dd.nodes {
+        push_u32(&mut b, n.hi);
+    }
+    b
+}
+
+fn terms_bytes(terminals: &FrozenTerminals) -> Vec<u8> {
+    let mut b = Vec::new();
+    match terminals {
+        FrozenTerminals::Word { offsets, symbols } => {
+            for &o in offsets {
+                push_u32(&mut b, o);
+            }
+            for &s in symbols {
+                push_u16(&mut b, s);
+            }
+        }
+        FrozenTerminals::Vector { counts, .. } => {
+            for &c in counts {
+                push_u32(&mut b, c);
+            }
+        }
+        FrozenTerminals::Majority { classes } => {
+            for &c in classes {
+                push_u16(&mut b, c);
+            }
+        }
+    }
+    b
+}
+
+/// Serialise to the canonical `fdd-v1` byte sequence.
+pub(crate) fn to_bytes(dd: &FrozenDD) -> Vec<u8> {
+    let sections = [
+        (SEC_META, meta_bytes(dd)),
+        (SEC_SCHEMA, schema_bytes(&dd.schema)),
+        (SEC_PREDS, preds_bytes(dd)),
+        (SEC_NODES, nodes_bytes(dd)),
+        (SEC_TERMS, terms_bytes(&dd.terminals)),
+    ];
+    // Payload = section table + 8-aligned section data; offsets absolute.
+    let mut payload = vec![0u8; sections.len() * TABLE_ENTRY_LEN];
+    let mut table = Vec::with_capacity(sections.len());
+    for (id, bytes) in &sections {
+        while (HEADER_LEN + payload.len()) % 8 != 0 {
+            payload.push(0);
+        }
+        table.push((*id, (HEADER_LEN + payload.len()) as u64, bytes.len() as u64));
+        payload.extend_from_slice(bytes);
+    }
+    let mut entry = Vec::with_capacity(sections.len() * TABLE_ENTRY_LEN);
+    for (id, offset, len) in table {
+        push_u32(&mut entry, id);
+        push_u32(&mut entry, 0);
+        push_u64(&mut entry, offset);
+        push_u64(&mut entry, len);
+    }
+    payload[..entry.len()].copy_from_slice(&entry);
+
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    push_u32(&mut out, VERSION);
+    push_u32(&mut out, sections.len() as u32);
+    push_u64(&mut out, payload.len() as u64);
+    push_u64(&mut out, fnv1a64(&payload));
+    push_u64(&mut out, 0);
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- reading
+
+/// Bounds-checked little-endian cursor over a byte slice.
+struct Cur<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| err("truncated section"))?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| err("string is not UTF-8"))
+    }
+
+    fn u16_array(&mut self, n: usize) -> Result<Vec<u16>> {
+        let bytes = self.take(n.checked_mul(2).ok_or_else(|| err("array too large"))?)?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32_array(&mut self, n: usize) -> Result<Vec<u32>> {
+        let bytes = self.take(n.checked_mul(4).ok_or_else(|| err("array too large"))?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos == self.b.len() {
+            Ok(())
+        } else {
+            Err(err("trailing bytes in section"))
+        }
+    }
+}
+
+/// Parsed META section.
+struct Meta {
+    abstraction: Abstraction,
+    unsat_elim: bool,
+    n_trees: u32,
+    n_features: u32,
+    n_classes: u32,
+    n_preds: u32,
+    n_nodes: u32,
+    n_terminals: u32,
+    root: u32,
+}
+
+fn parse_meta(bytes: &[u8]) -> Result<Meta> {
+    let mut c = Cur::new(bytes);
+    let abstraction = abstraction_from_code(c.u8()?)?;
+    let unsat_elim = c.u8()? != 0;
+    let _reserved = c.u16()?;
+    let meta = Meta {
+        abstraction,
+        unsat_elim,
+        n_trees: c.u32()?,
+        n_features: c.u32()?,
+        n_classes: c.u32()?,
+        n_preds: c.u32()?,
+        n_nodes: c.u32()?,
+        n_terminals: c.u32()?,
+        root: c.u32()?,
+    };
+    let _reserved = c.u32()?;
+    c.done()?;
+    Ok(meta)
+}
+
+fn parse_schema(bytes: &[u8], meta: &Meta) -> Result<Schema> {
+    // META counts are untrusted until the section bytes back them up:
+    // grow these vectors as strings actually parse instead of
+    // preallocating from a (possibly crafted) count — a bogus
+    // n_features/n_classes then dies as "truncated section", not as a
+    // giant allocation.
+    let mut c = Cur::new(bytes);
+    let mut classes = Vec::new();
+    for _ in 0..meta.n_classes {
+        classes.push(c.str()?);
+    }
+    let mut features = Vec::new();
+    for _ in 0..meta.n_features {
+        let name = c.str()?;
+        let kind = match c.u8()? {
+            0 => FeatureKind::Numeric,
+            1 => {
+                let n = c.u32()? as usize;
+                FeatureKind::Categorical {
+                    values: (0..n).map(|_| c.str()).collect::<Result<Vec<_>>>()?,
+                }
+            }
+            other => return Err(err(format!("unknown feature kind {other}"))),
+        };
+        features.push(Feature { name, kind });
+    }
+    c.done()?;
+    Ok(Schema { features, classes })
+}
+
+/// Verify the envelope (magic, version, length, checksum) and return the
+/// section table as `(id, offset, len)` triples.
+fn parse_envelope(bytes: &[u8]) -> Result<Vec<(u32, usize, usize)>> {
+    if bytes.len() < HEADER_LEN {
+        return Err(err("file shorter than the header"));
+    }
+    if bytes[..8] != MAGIC {
+        return Err(err("bad magic (not an fdd snapshot)"));
+    }
+    let mut c = Cur::new(&bytes[8..HEADER_LEN]);
+    let version = c.u32()?;
+    if version != VERSION {
+        return Err(err(format!(
+            "unsupported version {version} (this build reads fdd-v{VERSION})"
+        )));
+    }
+    let section_count = c.u32()? as usize;
+    let payload_len = c.u64()? as usize;
+    let checksum = c.u64()?;
+    if payload_len != bytes.len() - HEADER_LEN {
+        return Err(err("payload length does not match the file size"));
+    }
+    if checksum != fnv1a64(&bytes[HEADER_LEN..]) {
+        return Err(err("checksum mismatch (corrupt or truncated snapshot)"));
+    }
+    if c.u64()? != 0 {
+        return Err(err("reserved header bytes must be zero in fdd-v1"));
+    }
+    let table_len = section_count
+        .checked_mul(TABLE_ENTRY_LEN)
+        .filter(|&l| HEADER_LEN + l <= bytes.len())
+        .ok_or_else(|| err("section table out of bounds"))?;
+    let mut t = Cur::new(&bytes[HEADER_LEN..HEADER_LEN + table_len]);
+    let mut sections = Vec::with_capacity(section_count);
+    for _ in 0..section_count {
+        let id = t.u32()?;
+        let _reserved = t.u32()?;
+        let offset = t.u64()? as usize;
+        let len = t.u64()? as usize;
+        let end = offset
+            .checked_add(len)
+            .ok_or_else(|| err(format!("section {id} out of bounds")))?;
+        if end > bytes.len() || offset < HEADER_LEN + table_len {
+            return Err(err(format!("section {id} out of bounds")));
+        }
+        sections.push((id, offset, len));
+    }
+    Ok(sections)
+}
+
+fn section<'a>(
+    bytes: &'a [u8],
+    table: &[(u32, usize, usize)],
+    id: u32,
+) -> Result<&'a [u8]> {
+    table
+        .iter()
+        .find(|(i, _, _)| *i == id)
+        .map(|&(_, off, len)| &bytes[off..off + len])
+        .ok_or_else(|| err(format!("missing section {id}")))
+}
+
+/// Deserialise an `fdd-v1` byte sequence (see [`FrozenDD::from_bytes`]).
+pub(crate) fn from_bytes(bytes: &[u8]) -> Result<FrozenDD> {
+    let table = parse_envelope(bytes)?;
+    let meta = parse_meta(section(bytes, &table, SEC_META)?)?;
+    let schema = parse_schema(section(bytes, &table, SEC_SCHEMA)?, &meta)?;
+    if schema.n_features() != meta.n_features as usize
+        || schema.n_classes() != meta.n_classes as usize
+    {
+        return Err(err("schema section disagrees with META counts"));
+    }
+
+    // Array reads go through `Cur::take` first, so a crafted count fails
+    // as a bounds error before anything is allocated.
+    let mut c = Cur::new(section(bytes, &table, SEC_PREDS)?);
+    let pred_feature = c.u32_array(meta.n_preds as usize)?;
+    let pred_threshold = c
+        .u32_array(meta.n_preds as usize)?
+        .into_iter()
+        .map(f32::from_bits)
+        .collect();
+    c.done()?;
+
+    let mut c = Cur::new(section(bytes, &table, SEC_NODES)?);
+    let n_nodes = meta.n_nodes as usize;
+    let node_level = c.u32_array(n_nodes)?;
+    let node_lo = c.u32_array(n_nodes)?;
+    let node_hi = c.u32_array(n_nodes)?;
+    c.done()?;
+
+    let mut c = Cur::new(section(bytes, &table, SEC_TERMS)?);
+    let n_terms = meta.n_terminals as usize;
+    let terminals = match meta.abstraction {
+        Abstraction::Word => {
+            let offsets = c.u32_array(n_terms + 1)?;
+            let total = *offsets.last().unwrap_or(&0) as usize;
+            let symbols = c.u16_array(total)?;
+            FrozenTerminals::Word { offsets, symbols }
+        }
+        Abstraction::Vector => FrozenTerminals::Vector {
+            stride: meta.n_classes,
+            counts: c.u32_array(n_terms * meta.n_classes as usize)?,
+        },
+        Abstraction::Majority => FrozenTerminals::Majority {
+            classes: c.u16_array(n_terms)?,
+        },
+    };
+    c.done()?;
+
+    FrozenDD::from_raw(RawFrozen {
+        schema,
+        abstraction: meta.abstraction,
+        unsat_elim: meta.unsat_elim,
+        n_trees: meta.n_trees,
+        pred_feature,
+        pred_threshold,
+        node_level,
+        node_lo,
+        node_hi,
+        root: meta.root,
+        terminals,
+    })
+}
+
+impl FrozenDD {
+    /// Serialise to the canonical `fdd-v1` byte sequence. Deterministic:
+    /// the same diagram always produces the same bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        to_bytes(self)
+    }
+
+    /// Deserialise from `fdd-v1` bytes (checksum-verified, then fully
+    /// structurally validated).
+    pub fn from_bytes(bytes: &[u8]) -> Result<FrozenDD> {
+        from_bytes(bytes)
+    }
+
+    /// Write a snapshot file.
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load a snapshot file — the replica-startup path: one contiguous
+    /// read, checksum verification, bulk array conversion.
+    pub fn load(path: &str) -> Result<FrozenDD> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// Parsed header/section overview of a snapshot (CLI `inspect`).
+#[derive(Debug, Clone)]
+pub struct SnapshotSummary {
+    /// Format version (always 1 for documents this build reads).
+    pub version: u32,
+    /// Total file length in bytes.
+    pub file_len: usize,
+    /// Verified FNV-1a 64 payload checksum.
+    pub checksum: u64,
+    /// `(name, offset, len)` per section, in table order.
+    pub sections: Vec<(&'static str, usize, usize)>,
+    /// META fields.
+    pub abstraction: Abstraction,
+    pub unsat_elim: bool,
+    pub n_trees: u32,
+    pub n_features: u32,
+    pub n_classes: u32,
+    pub n_preds: u32,
+    pub n_nodes: u32,
+    pub n_terminals: u32,
+}
+
+/// Summarise a snapshot's envelope and META without building a
+/// [`FrozenDD`] (the checksum is still verified).
+pub fn summarize(bytes: &[u8]) -> Result<SnapshotSummary> {
+    let table = parse_envelope(bytes)?;
+    let meta = parse_meta(section(bytes, &table, SEC_META)?)?;
+    let name_of = |id: u32| match id {
+        SEC_META => "meta",
+        SEC_SCHEMA => "schema",
+        SEC_PREDS => "predicates",
+        SEC_NODES => "nodes",
+        SEC_TERMS => "terminals",
+        _ => "unknown",
+    };
+    Ok(SnapshotSummary {
+        version: VERSION,
+        file_len: bytes.len(),
+        checksum: fnv1a64(&bytes[HEADER_LEN..]),
+        sections: table
+            .iter()
+            .map(|&(id, off, len)| (name_of(id), off, len))
+            .collect(),
+        abstraction: meta.abstraction,
+        unsat_elim: meta.unsat_elim,
+        n_trees: meta.n_trees,
+        n_features: meta.n_features,
+        n_classes: meta.n_classes,
+        n_preds: meta.n_preds,
+        n_nodes: meta.n_nodes,
+        n_terminals: meta.n_terminals,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::{CompileOptions, ForestCompiler};
+    use crate::data::datasets;
+    use crate::forest::ForestLearner;
+
+    fn frozen(abstraction: Abstraction) -> (crate::data::Dataset, FrozenDD) {
+        let ds = datasets::lenses();
+        let forest = ForestLearner::default().trees(9).seed(5).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        (ds, dd.freeze())
+    }
+
+    #[test]
+    fn roundtrip_is_byte_identical_for_all_abstractions() {
+        for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+            let (ds, dd) = frozen(abstraction);
+            let bytes = dd.to_bytes();
+            let back = FrozenDD::from_bytes(&bytes).unwrap();
+            assert_eq!(back.to_bytes(), bytes, "{abstraction:?}");
+            assert_eq!(back.abstraction(), abstraction);
+            assert_eq!(back.size(), dd.size());
+            assert_eq!(back.schema(), dd.schema());
+            for i in 0..ds.n_rows() {
+                assert_eq!(
+                    back.classify_with_steps(ds.row(i)),
+                    dd.classify_with_steps(ds.row(i)),
+                    "{abstraction:?} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn file_save_load() {
+        let (ds, dd) = frozen(Abstraction::Majority);
+        let path = std::env::temp_dir().join(format!("fdd-snap-{}.fdd", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        dd.save(&path).unwrap();
+        let back = FrozenDD::load(&path).unwrap();
+        for i in 0..ds.n_rows() {
+            assert_eq!(back.classify(ds.row(i)), dd.classify(ds.row(i)));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn every_corrupted_byte_is_detected() {
+        let (_, dd) = frozen(Abstraction::Majority);
+        let bytes = dd.to_bytes();
+        // Flipping any payload byte must fail the checksum; flipping the
+        // magic or version must fail the envelope. (Stride 7 keeps the
+        // test fast while touching every region of the file.)
+        for i in (0..bytes.len()).step_by(7) {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0xff;
+            assert!(
+                FrozenDD::from_bytes(&bad).is_err(),
+                "flipping byte {i} went unnoticed"
+            );
+        }
+        assert!(FrozenDD::from_bytes(&bytes[..bytes.len() - 1]).is_err());
+        assert!(FrozenDD::from_bytes(b"not a snapshot").is_err());
+    }
+
+    #[test]
+    fn summarize_reports_the_layout() {
+        let (_, dd) = frozen(Abstraction::Vector);
+        let bytes = dd.to_bytes();
+        let s = summarize(&bytes).unwrap();
+        assert_eq!(s.version, 1);
+        assert_eq!(s.file_len, bytes.len());
+        assert_eq!(s.abstraction, Abstraction::Vector);
+        assert_eq!(s.n_classes, 3);
+        assert_eq!(s.n_nodes as usize, dd.size().internal);
+        assert_eq!(s.n_terminals as usize, dd.size().terminals);
+        let names: Vec<&str> = s.sections.iter().map(|(n, _, _)| *n).collect();
+        assert_eq!(
+            names,
+            vec!["meta", "schema", "predicates", "nodes", "terminals"]
+        );
+        // sections are 8-aligned and in-bounds
+        for &(_, off, len) in &s.sections {
+            assert_eq!(off % 8, 0);
+            assert!(off + len <= bytes.len());
+        }
+    }
+
+    #[test]
+    fn future_versions_are_rejected_cleanly() {
+        let (_, dd) = frozen(Abstraction::Majority);
+        let mut bytes = dd.to_bytes();
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let e = FrozenDD::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("unsupported version 2"), "{e}");
+    }
+}

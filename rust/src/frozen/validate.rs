@@ -1,0 +1,261 @@
+//! Structural validation of frozen diagrams.
+//!
+//! Runs on every build and on every snapshot load: a [`FrozenDD`] that
+//! passes is guaranteed to be a well-formed, fully reachable, properly
+//! ordered diagram — the evaluation paths can then index without checks.
+//!
+//! [`FrozenDD`]: crate::frozen::FrozenDD
+
+use crate::error::{Error, Result};
+use crate::frozen::{FrozenTerminals, RawFrozen, TERM_BIT};
+
+fn err(msg: impl Into<String>) -> Error {
+    Error::parse(format!("frozen: {}", msg.into()))
+}
+
+#[allow(clippy::needless_range_loop)] // the node sweep indexes four parallel arrays
+pub(crate) fn validate(raw: &RawFrozen) -> Result<()> {
+    let n_features = raw.schema.n_features();
+    let n_classes = raw.schema.n_classes();
+    if n_classes == 0 {
+        return Err(err("schema has no classes"));
+    }
+    if raw.pred_feature.len() != raw.pred_threshold.len() {
+        return Err(err("predicate table arrays disagree on length"));
+    }
+    let n_preds = raw.pred_feature.len();
+    for (l, &f) in raw.pred_feature.iter().enumerate() {
+        if f as usize >= n_features {
+            return Err(err(format!(
+                "predicate {l} tests feature {f} but the schema has {n_features}"
+            )));
+        }
+    }
+
+    let n_nodes = raw.node_level.len();
+    if raw.node_lo.len() != n_nodes || raw.node_hi.len() != n_nodes {
+        return Err(err("node arrays disagree on length"));
+    }
+    if n_nodes as u64 >= u64::from(TERM_BIT) {
+        return Err(err("node array overflows the reference tag"));
+    }
+    let n_terms = raw.terminals.len();
+    if n_terms == 0 {
+        return Err(err("a diagram needs at least one terminal"));
+    }
+
+    if raw.terminals.abstraction() != raw.abstraction {
+        return Err(err("terminal storage does not match the abstraction"));
+    }
+    match &raw.terminals {
+        FrozenTerminals::Word { offsets, symbols } => {
+            if offsets.first() != Some(&0) {
+                return Err(err("word offsets must start at 0"));
+            }
+            if offsets.windows(2).any(|w| w[0] > w[1]) {
+                return Err(err("word offsets must be non-decreasing"));
+            }
+            if offsets.last().copied() != Some(symbols.len() as u32) {
+                return Err(err("word offsets do not cover the symbol array"));
+            }
+            if symbols.iter().any(|&s| s as usize >= n_classes) {
+                return Err(err("word symbol out of class range"));
+            }
+        }
+        FrozenTerminals::Vector { stride, counts } => {
+            if *stride as usize != n_classes {
+                return Err(err("vote vector stride does not match |C|"));
+            }
+            if counts.len() != n_terms * n_classes {
+                return Err(err("vote vector payload has the wrong arity"));
+            }
+        }
+        FrozenTerminals::Majority { classes } => {
+            if classes.iter().any(|&c| c as usize >= n_classes) {
+                return Err(err("terminal class out of range"));
+            }
+        }
+    }
+    // (`Abstraction::Word`'s aggregation reads are metered per terminal,
+    // so a zero `n_trees` is legal there — it only weakens the cost
+    // model, never the predictions.)
+
+    // Root: a terminal reference for the single-terminal diagram,
+    // otherwise node 0 — the batch pass sweeps the arrays in index order
+    // and must start at the root.
+    if raw.root & TERM_BIT != 0 {
+        if (raw.root & !TERM_BIT) as usize >= n_terms {
+            return Err(err("root terminal out of range"));
+        }
+        if n_nodes != 0 {
+            return Err(err("terminal root with non-empty node arrays"));
+        }
+    } else {
+        if n_nodes == 0 {
+            return Err(err("internal root with empty node arrays"));
+        }
+        if raw.root != 0 {
+            return Err(err("internal root must be node 0 (topological order)"));
+        }
+    }
+
+    // Per-node invariants + reachability in one forward sweep (children
+    // sit strictly after parents, so reachability propagates in order).
+    let mut node_reached = vec![false; n_nodes];
+    let mut term_reached = vec![false; n_terms];
+    if raw.root & TERM_BIT != 0 {
+        term_reached[(raw.root & !TERM_BIT) as usize] = true;
+    } else {
+        node_reached[0] = true;
+    }
+    for i in 0..n_nodes {
+        let level = raw.node_level[i];
+        if level as usize >= n_preds {
+            return Err(err(format!("node {i} level {level} out of range")));
+        }
+        let (lo, hi) = (raw.node_lo[i], raw.node_hi[i]);
+        if lo == hi {
+            return Err(err(format!("node {i} is redundant (lo == hi)")));
+        }
+        for child in [lo, hi] {
+            if child & TERM_BIT != 0 {
+                let t = (child & !TERM_BIT) as usize;
+                if t >= n_terms {
+                    return Err(err(format!("node {i} references terminal {t} out of range")));
+                }
+                if node_reached[i] {
+                    term_reached[t] = true;
+                }
+            } else {
+                let c = child as usize;
+                if c <= i || c >= n_nodes {
+                    return Err(err(format!(
+                        "node {i} child {c} breaks the topological order"
+                    )));
+                }
+                if raw.node_level[c] <= level {
+                    return Err(err(format!(
+                        "node {i} child {c} does not descend in the predicate order"
+                    )));
+                }
+                if node_reached[i] {
+                    node_reached[c] = true;
+                }
+            }
+        }
+    }
+    if node_reached.iter().any(|r| !r) {
+        return Err(err("unreachable node (the arrays must be exactly the cone)"));
+    }
+    if term_reached.iter().any(|r| !r) {
+        return Err(err("unreferenced terminal"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compile::Abstraction;
+    use crate::data::{Feature, FeatureKind, Schema};
+
+    fn schema() -> Schema {
+        Schema {
+            features: vec![
+                Feature {
+                    name: "x0".into(),
+                    kind: FeatureKind::Numeric,
+                },
+                Feature {
+                    name: "x1".into(),
+                    kind: FeatureKind::Numeric,
+                },
+            ],
+            classes: vec!["a".into(), "b".into()],
+        }
+    }
+
+    /// The fixture diagram: x0 < 0.5 ? a : (x1 < 0.5 ? b : a).
+    fn tiny() -> RawFrozen {
+        RawFrozen {
+            schema: schema(),
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            n_trees: 3,
+            pred_feature: vec![0, 1],
+            pred_threshold: vec![0.5, 0.5],
+            node_level: vec![0, 1],
+            node_lo: vec![1, TERM_BIT],
+            node_hi: vec![TERM_BIT, TERM_BIT | 1],
+            root: 0,
+            terminals: FrozenTerminals::Majority {
+                classes: vec![0, 1],
+            },
+        }
+    }
+
+    #[test]
+    fn accepts_the_fixture_shape() {
+        validate(&tiny()).unwrap();
+    }
+
+    #[test]
+    fn rejects_structural_corruption() {
+        let cases: Vec<(&str, Box<dyn Fn(&mut RawFrozen)>)> = vec![
+            ("level out of range", Box::new(|r| r.node_level[0] = 9)),
+            ("redundant node", Box::new(|r| r.node_hi[1] = TERM_BIT)),
+            ("topological break", Box::new(|r| r.node_lo[1] = 0)),
+            ("terminal out of range", Box::new(|r| r.node_hi[1] = TERM_BIT | 7)),
+            ("root not node 0", Box::new(|r| r.root = 1)),
+            ("class out of range", Box::new(|r| {
+                r.terminals = FrozenTerminals::Majority {
+                    classes: vec![0, 9],
+                };
+            })),
+            ("abstraction mismatch", Box::new(|r| r.abstraction = Abstraction::Vector)),
+            ("unreferenced terminal", Box::new(|r| {
+                r.terminals = FrozenTerminals::Majority {
+                    classes: vec![0, 1, 1],
+                };
+            })),
+            ("level order violation", Box::new(|r| r.node_level[1] = 0)),
+            ("predicate feature out of range", Box::new(|r| r.pred_feature[0] = 5)),
+        ];
+        for (what, corrupt) in cases {
+            let mut raw = tiny();
+            corrupt(&mut raw);
+            assert!(validate(&raw).is_err(), "{what} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_unreachable_nodes() {
+        let mut raw = tiny();
+        // Append a node nothing points to.
+        raw.node_level.push(1);
+        raw.node_lo.push(TERM_BIT);
+        raw.node_hi.push(TERM_BIT | 1);
+        assert!(validate(&raw).is_err());
+    }
+
+    #[test]
+    fn terminal_root_requires_empty_node_arrays() {
+        let raw = RawFrozen {
+            schema: schema(),
+            abstraction: Abstraction::Majority,
+            unsat_elim: false,
+            n_trees: 1,
+            pred_feature: vec![],
+            pred_threshold: vec![],
+            node_level: vec![],
+            node_lo: vec![],
+            node_hi: vec![],
+            root: TERM_BIT,
+            terminals: FrozenTerminals::Majority { classes: vec![1] },
+        };
+        validate(&raw).unwrap();
+        let mut bad = tiny();
+        bad.root = TERM_BIT;
+        assert!(validate(&bad).is_err(), "terminal root atop nodes");
+    }
+}

@@ -18,7 +18,8 @@
 //! ## The unified API
 //!
 //! Every evaluator — the naive forest walker, the compiled ADD in all
-//! three abstractions, and the XLA/PJRT batch engine — implements the
+//! three abstractions, its frozen struct-of-arrays serving form
+//! ([`frozen::FrozenDD`]), and the XLA/PJRT batch engine — implements the
 //! [`classifier::Classifier`] trait, and the [`engine::Engine`] facade
 //! owns a [`engine::ModelRegistry`] of named, versioned models with
 //! atomic hot-swap. The serving router, the CLI, and the benches all
@@ -47,6 +48,36 @@
 //!     .unwrap();
 //! assert_eq!(class, rf);
 //! ```
+//!
+//! ## Snapshots: compile once, serve from a frozen artifact
+//!
+//! Compilation is expensive; serving should not be. The frozen runtime
+//! ([`frozen`]) splits the two: compile → freeze → ship the `fdd-v1`
+//! binary snapshot, and every replica starts by loading it with a single
+//! contiguous read — no JSON parsing, no re-training, identical
+//! predictions (bit-for-bit, steps included). The same flow is available
+//! on the command line as `forest-add freeze` (or `compile --format fdd`),
+//! `forest-add inspect`, and `forest-add serve --snapshot <path>`.
+//!
+//! ```no_run
+//! use forest_add::compile::{CompileOptions, ForestCompiler};
+//! use forest_add::engine::Engine;
+//! use forest_add::forest::ForestLearner;
+//!
+//! // Offline, once: train, compile the paper's DD*, freeze.
+//! let data = forest_add::data::datasets::load("iris").unwrap();
+//! let forest = ForestLearner::default().trees(100).seed(7).fit(&data);
+//! let dd = ForestCompiler::new(CompileOptions::default())
+//!     .compile(&forest)
+//!     .unwrap();
+//! dd.freeze().save("iris.fdd").unwrap();
+//!
+//! // On every replica: register the snapshot and serve.
+//! let engine = Engine::new();
+//! engine.register_snapshot("iris", "iris.fdd").unwrap();
+//! let class = engine.classify(Some("iris"), None, data.row(0)).unwrap();
+//! # let _ = class;
+//! ```
 
 pub mod add;
 pub mod bench_support;
@@ -58,6 +89,7 @@ pub mod engine;
 pub mod error;
 pub mod feas;
 pub mod forest;
+pub mod frozen;
 pub mod predicate;
 pub mod runtime;
 pub mod serve;

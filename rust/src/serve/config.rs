@@ -9,6 +9,10 @@ use crate::util::json::{self, Json};
 pub struct ServeConfig {
     /// Bind address (`127.0.0.1:0` picks a free port).
     pub addr: String,
+    /// `fdd-v1` snapshot to serve (empty = train from `dataset` instead).
+    /// When set, the replica skips training entirely and registers the
+    /// frozen model as `default` — the millisecond startup path.
+    pub snapshot: String,
     /// Built-in dataset to train on (or a CSV/ARFF path).
     pub dataset: String,
     /// Forest size.
@@ -41,6 +45,7 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             addr: "127.0.0.1:7878".into(),
+            snapshot: String::new(),
             dataset: "iris".into(),
             trees: 128,
             max_depth: 8,
@@ -63,6 +68,9 @@ impl ServeConfig {
         let mut cfg = ServeConfig::default();
         if let Some(s) = v.get_str("addr") {
             cfg.addr = s.to_string();
+        }
+        if let Some(s) = v.get_str("snapshot") {
+            cfg.snapshot = s.to_string();
         }
         if let Some(s) = v.get_str("dataset") {
             cfg.dataset = s.to_string();
@@ -131,6 +139,7 @@ impl ServeConfig {
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("addr", json::s(self.addr.clone())),
+            ("snapshot", json::s(self.snapshot.clone())),
             ("dataset", json::s(self.dataset.clone())),
             ("trees", json::num(self.trees as f64)),
             ("max_depth", json::num(self.max_depth as f64)),
@@ -163,6 +172,7 @@ mod tests {
             default_backend: BackendKind::Xla,
             enable_xla: false,
             reply_timeout_ms: 250,
+            snapshot: "model.fdd".into(),
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -170,6 +180,7 @@ mod tests {
         assert_eq!(back.default_backend, BackendKind::Xla);
         assert!(!back.enable_xla);
         assert_eq!(back.reply_timeout_ms, 250);
+        assert_eq!(back.snapshot, "model.fdd");
     }
 
     #[test]

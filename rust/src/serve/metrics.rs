@@ -87,6 +87,7 @@ pub struct ServerMetrics {
     /// Per-backend latency histograms (indexed by `BackendKind`).
     forest: Histogram,
     dd: Histogram,
+    frozen: Histogram,
     xla: Histogram,
     /// Dynamic batcher: batches dispatched and total batched items.
     pub batches: AtomicU64,
@@ -102,6 +103,7 @@ impl Default for ServerMetrics {
             errors: AtomicU64::new(0),
             forest: Histogram::default(),
             dd: Histogram::default(),
+            frozen: Histogram::default(),
             xla: Histogram::default(),
             batches: AtomicU64::new(0),
             batched_items: AtomicU64::new(0),
@@ -115,6 +117,7 @@ impl ServerMetrics {
         match kind {
             BackendKind::Forest => &self.forest,
             BackendKind::Dd => &self.dd,
+            BackendKind::Frozen => &self.frozen,
             BackendKind::Xla => &self.xla,
         }
     }
@@ -172,6 +175,7 @@ impl ServerMetrics {
                 json::obj(vec![
                     ("forest", self.forest.to_json()),
                     ("dd", self.dd.to_json()),
+                    ("frozen", self.frozen.to_json()),
                     ("xla", self.xla.to_json()),
                 ]),
             ),

@@ -4,12 +4,16 @@
 //! Requests flow: HTTP front-end ([`http`]) → [`router::Router`] →
 //! [`Classifier`](crate::classifier::Classifier) trait object resolved
 //! from the shared [`ModelRegistry`](crate::engine::ModelRegistry).
-//! Three backends expose the same classification semantics at different
+//! Four backends expose the same classification semantics at different
 //! cost profiles:
 //!
 //! - **forest** — the baseline: walk all `n` trees (linear in forest size);
 //! - **dd** — the paper's contribution: one root-to-terminal walk through
 //!   the compiled ADD (`Most frequent class DD*`);
+//! - **frozen** — the same diagram in its flat, snapshot-loadable serving
+//!   form ([`crate::frozen::FrozenDD`]): identical predictions,
+//!   cache-friendly arrays, millisecond replica startup via
+//!   `serve --snapshot`;
 //! - **xla** — the L2/L1 tensorised evaluator via PJRT, fed by the dynamic
 //!   batcher ([`batcher`]) for throughput-oriented batched traffic.
 //!

@@ -28,26 +28,38 @@ pub struct ServerHandle {
 }
 
 /// Build the model and start serving (returns once the socket is bound).
+///
+/// Two startup paths: with [`ServeConfig::snapshot`] set, the replica
+/// registers a pre-compiled `fdd-v1` artifact (one contiguous read, no
+/// training); otherwise it trains and compiles from the configured
+/// dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
-    let data = crate::data::resolve(&cfg.dataset)?;
-    crate::log_info!(
-        "serve: training {} trees on '{}' ({} rows)…",
-        cfg.trees,
-        data.name,
-        data.n_rows()
-    );
-    let mut builder = Engine::builder()
-        .dataset(data)
-        .trees(cfg.trees)
-        .max_depth(cfg.max_depth)
-        .seed(cfg.seed);
-    if cfg.enable_xla {
-        // Load failures fall back to the native backends inside the
-        // builder (DESIGN.md §7) — the server still comes up.
-        builder = builder.xla_artifacts(cfg.artifacts_dir.as_str(), cfg.variant.as_str());
-    }
-    let engine = builder.build()?;
+    let engine = if !cfg.snapshot.is_empty() {
+        let engine = Engine::new();
+        let id = engine.register_snapshot("default", &cfg.snapshot)?;
+        crate::log_info!("serve: loaded snapshot '{}' as {id}", cfg.snapshot);
+        engine
+    } else {
+        let data = crate::data::resolve(&cfg.dataset)?;
+        crate::log_info!(
+            "serve: training {} trees on '{}' ({} rows)…",
+            cfg.trees,
+            data.name,
+            data.n_rows()
+        );
+        let mut builder = Engine::builder()
+            .dataset(data)
+            .trees(cfg.trees)
+            .max_depth(cfg.max_depth)
+            .seed(cfg.seed);
+        if cfg.enable_xla {
+            // Load failures fall back to the native backends inside the
+            // builder (DESIGN.md §7) — the server still comes up.
+            builder = builder.xla_artifacts(cfg.artifacts_dir.as_str(), cfg.variant.as_str());
+        }
+        builder.build()?
+    };
     for info in engine.info(None)? {
         crate::log_info!(
             "serve: backend '{}' ready — {} ({} nodes)",

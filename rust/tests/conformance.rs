@@ -5,18 +5,20 @@
 //! (trait objects resolved from the `ModelRegistry`).
 
 use forest_add::classifier::{self, Classifier};
-use forest_add::compile::{Abstraction, CompileOptions, ForestCompiler};
+use forest_add::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
 use forest_add::data::synth::{blobs, BlobSpec};
 use forest_add::data::{datasets, Dataset};
 use forest_add::engine::ModelRegistry;
 use forest_add::forest::ForestLearner;
+use forest_add::frozen::FrozenDD;
 use forest_add::serve::BackendKind;
+use forest_add::util::json::Json;
 use forest_add::util::prop::{check, Config, Gen};
 use std::sync::Arc;
 
 /// Build a registry holding the forest baseline plus one model per DD
-/// abstraction (± unsatisfiable-path elimination), all compiled from the
-/// same forest.
+/// abstraction (± unsatisfiable-path elimination) and the frozen
+/// rendering of each diagram, all compiled from the same forest.
 fn registry_for(
     data: &Dataset,
     trees: usize,
@@ -49,6 +51,19 @@ fn registry_for(
             .compile(&forest)
             .map_err(|e| format!("{abstraction:?} unsat={unsat}: {e}"))?;
             let name = format!("{abstraction:?}-{unsat}").to_lowercase();
+            // … and the frozen rendering of the same diagram as its own
+            // single-backend model, so the property covers it too.
+            let frozen_name = format!("{name}-frozen");
+            registry
+                .register(
+                    frozen_name.as_str(),
+                    schema.clone(),
+                    vec![(
+                        BackendKind::Frozen,
+                        Arc::new(dd.freeze()) as Arc<dyn Classifier>,
+                    )],
+                )
+                .map_err(|e| e.to_string())?;
             registry
                 .register(
                     name.as_str(),
@@ -57,6 +72,7 @@ fn registry_for(
                 )
                 .map_err(|e| e.to_string())?;
             names.push(name);
+            names.push(frozen_name);
         }
     }
     Ok((registry, names))
@@ -139,6 +155,76 @@ fn agreement_helper_is_exactly_one_on_iris() {
         )
         .unwrap();
         assert_eq!(agree, 1.0, "{name}");
+    }
+}
+
+/// Persistence conformance: on **every** built-in dataset and **every**
+/// abstraction, the JSON-persisted-then-reloaded diagram, the frozen
+/// form, and the snapshot-roundtripped frozen form must all be
+/// bit-identical to the live `CompiledDD` — class *and* §6 step count,
+/// single-row *and* batch paths — and must agree with the source forest
+/// on every row. Snapshot bytes must survive `write → load → re-write`
+/// unchanged.
+#[test]
+fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        let forest = ForestLearner::default().trees(8).seed(13).fit(&data);
+        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+        for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+            let tag = format!("{name}/{abstraction:?}");
+            let dd = ForestCompiler::new(CompileOptions {
+                abstraction,
+                ..Default::default()
+            })
+            .compile(&forest)
+            .unwrap();
+
+            // JSON round-trip (replica path before fdd-v1 existed).
+            let text = dd.to_persist_json().to_string_compact();
+            let from_json = CompiledDD::load_from_json(&Json::parse(&text).unwrap()).unwrap();
+
+            // Frozen + binary snapshot round-trip.
+            let frozen = dd.freeze();
+            assert_eq!(frozen.size(), dd.size(), "{tag}: freezing changed the size");
+            let bytes = frozen.to_bytes();
+            let from_snapshot = FrozenDD::from_bytes(&bytes).unwrap();
+            assert_eq!(
+                from_snapshot.to_bytes(),
+                bytes,
+                "{tag}: snapshot bytes must round-trip unchanged"
+            );
+
+            // Batch paths (trait default for the live DD, node-array pass
+            // for the frozen forms).
+            let dd_batch = Classifier::classify_batch(&dd, &rows).unwrap();
+            let frozen_batch = frozen.classify_batch(&rows);
+            let snapshot_batch = from_snapshot.classify_batch(&rows);
+
+            for (i, x) in rows.iter().enumerate() {
+                let want = forest.predict(x);
+                let live = dd.classify_with_steps(x);
+                assert_eq!(live.0, want, "{tag} row {i}: diagram vs forest");
+                assert_eq!(
+                    from_json.classify_with_steps(x),
+                    live,
+                    "{tag} row {i}: json round-trip"
+                );
+                assert_eq!(
+                    frozen.classify_with_steps(x),
+                    live,
+                    "{tag} row {i}: frozen"
+                );
+                assert_eq!(
+                    from_snapshot.classify_with_steps(x),
+                    live,
+                    "{tag} row {i}: snapshot round-trip"
+                );
+                assert_eq!(dd_batch[i], live.0, "{tag} row {i}: dd batch");
+                assert_eq!(frozen_batch[i], live.0, "{tag} row {i}: frozen batch");
+                assert_eq!(snapshot_batch[i], live.0, "{tag} row {i}: snapshot batch");
+            }
+        }
     }
 }
 

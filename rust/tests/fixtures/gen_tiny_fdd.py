@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Generate tests/fixtures/tiny-v1.fdd, the forward-compat tripwire.
+
+This is an *independent* implementation of the `forest-add/fdd-v1` binary
+snapshot format (see rust/src/frozen/snapshot.rs for the authoritative
+spec). The checked-in fixture is loaded by tests/snapshot_compat.rs; if
+the Rust reader or writer drifts from the documented layout, that test —
+not a customer's serving fleet — is what breaks.
+
+The diagram encoded here (majority abstraction, 2 features, classes
+["a", "b"]):
+
+    x0 < 0.5 ? "a" : (x1 < 0.5 ? "b" : "a")
+
+Node arrays (topological, root first):
+    node 0: level 0 (x0 < 0.5), hi -> terminal 0 ("a"), lo -> node 1
+    node 1: level 1 (x1 < 0.5), hi -> terminal 1 ("b"), lo -> terminal 0
+
+Run from anywhere:  python3 rust/tests/fixtures/gen_tiny_fdd.py
+"""
+
+import os
+import struct
+
+TERM_BIT = 1 << 31
+HEADER_LEN = 40
+TABLE_ENTRY_LEN = 24
+
+
+def fnv1a64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def string(s: str) -> bytes:
+    raw = s.encode("utf-8")
+    return struct.pack("<I", len(raw)) + raw
+
+
+def meta() -> bytes:
+    return struct.pack(
+        "<BBHIIIIIIII",
+        2,  # abstraction: majority
+        1,  # unsat_elim
+        0,  # reserved
+        3,  # n_trees
+        2,  # n_features
+        2,  # n_classes
+        2,  # n_preds
+        2,  # n_nodes
+        2,  # n_terminals
+        0,  # root = node 0
+        0,  # reserved
+    )
+
+
+def schema() -> bytes:
+    out = string("a") + string("b")  # classes
+    for name in ("x0", "x1"):  # numeric features
+        out += string(name) + b"\x00"
+    return out
+
+
+def preds() -> bytes:
+    out = struct.pack("<II", 0, 1)  # feature per level
+    out += struct.pack("<ff", 0.5, 0.5)  # threshold per level
+    return out
+
+
+def nodes() -> bytes:
+    out = struct.pack("<II", 0, 1)  # level
+    out += struct.pack("<II", 1, TERM_BIT)  # lo
+    out += struct.pack("<II", TERM_BIT, TERM_BIT | 1)  # hi
+    return out
+
+
+def terms() -> bytes:
+    return struct.pack("<HH", 0, 1)  # majority classes per terminal
+
+
+def build() -> bytes:
+    sections = [
+        (1, meta()),
+        (2, schema()),
+        (3, preds()),
+        (4, nodes()),
+        (5, terms()),
+    ]
+    payload = bytearray(len(sections) * TABLE_ENTRY_LEN)
+    table = []
+    for sec_id, data in sections:
+        while (HEADER_LEN + len(payload)) % 8:
+            payload.append(0)
+        table.append((sec_id, HEADER_LEN + len(payload), len(data)))
+        payload += data
+    entry = b"".join(
+        struct.pack("<IIQQ", sec_id, 0, offset, length)
+        for sec_id, offset, length in table
+    )
+    payload[: len(entry)] = entry
+    header = b"FADD.FDD" + struct.pack(
+        "<IIQQQ", 1, len(sections), len(payload), fnv1a64(bytes(payload)), 0
+    )
+    return header + bytes(payload)
+
+
+def main() -> None:
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tiny-v1.fdd")
+    data = build()
+    with open(out, "wb") as f:
+        f.write(data)
+    print(f"wrote {out}: {len(data)} bytes, checksum {fnv1a64(data[HEADER_LEN:]):#018x}")
+
+
+if __name__ == "__main__":
+    main()

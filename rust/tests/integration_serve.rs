@@ -68,6 +68,7 @@ fn full_server_lifecycle_and_endpoints() {
     };
     assert!(size_of("forest") > 0);
     assert!(size_of("dd") > 0);
+    assert_eq!(size_of("frozen"), size_of("dd"), "freezing preserves size");
     // (the size crossover below the forest happens at larger tree counts —
     // Fig. 7; here we only require a sane envelope)
     assert!(size_of("dd") < size_of("forest") * 20);
@@ -78,9 +79,9 @@ fn full_server_lifecycle_and_endpoints() {
     assert_eq!(models.get_str("default_model"), Some("default"));
     assert_eq!(models.get("models").and_then(Json::as_arr).unwrap().len(), 1);
 
-    // classify on both native backends, agreement with the reference
+    // classify on every native backend, agreement with the reference
     // forest classifier
-    for backend in ["forest", "dd"] {
+    for backend in ["forest", "dd", "frozen"] {
         for i in [0usize, 60, 149] {
             let body = json::obj(vec![
                 ("features", row_json(data.row(i))),
@@ -130,6 +131,64 @@ fn full_server_lifecycle_and_endpoints() {
     assert_eq!(metrics.get_i64("errors"), Some(0));
 
     handle.stop();
+}
+
+#[test]
+fn serve_from_snapshot_skips_training() {
+    // Build the artifact the way a deploy pipeline would …
+    let data = datasets::load("iris").unwrap();
+    let forest = forest_add::forest::ForestLearner::default()
+        .trees(24)
+        .seed(3)
+        .fit(&data);
+    let frozen = forest_add::compile::ForestCompiler::default()
+        .compile_frozen(&forest)
+        .unwrap();
+    let path = std::env::temp_dir().join(format!("serve-snap-{}.fdd", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    frozen.save(&path_s).unwrap();
+
+    // … then boot a replica from it: no dataset, no training.
+    let cfg = ServeConfig {
+        snapshot: path_s,
+        dataset: String::new(),
+        ..test_config()
+    };
+    let handle = server::start(&cfg).unwrap();
+    let addr = handle.addr.to_string();
+
+    // untagged traffic lands on the frozen backend (the model's only one)
+    for i in [0usize, 75, 149] {
+        let body = json::obj(vec![("features", row_json(data.row(i)))]);
+        let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+        assert_eq!(st, 200, "{resp:?}");
+        assert_eq!(resp.get_str("backend"), Some("frozen"));
+        assert_eq!(resp.get_i64("class").unwrap() as u32, frozen.classify(data.row(i)));
+        assert!(resp.get_i64("steps").is_some(), "frozen walks are metered");
+    }
+
+    // the batch endpoint exercises the node-array pass
+    let rows: Vec<Json> = (0..20).map(|i| row_json(data.row(i * 7))).collect();
+    let body = json::obj(vec![("rows", Json::Arr(rows))]);
+    let (st, resp) = http_request(&addr, "POST", "/classify_batch", Some(&body)).unwrap();
+    assert_eq!(st, 200);
+    let classes = resp.get("classes").unwrap().as_arr().unwrap();
+    for (k, c) in classes.iter().enumerate() {
+        assert_eq!(
+            c.as_i64().unwrap() as u32,
+            frozen.classify(data.row(k * 7)),
+            "batch row {k}"
+        );
+    }
+
+    // /model reports the frozen backend
+    let (_, model) = http_request(&addr, "GET", "/model", None).unwrap();
+    let backends = model.get("backends").and_then(Json::as_arr).unwrap();
+    assert_eq!(backends.len(), 1);
+    assert_eq!(backends[0].get_str("backend"), Some("frozen"));
+
+    handle.stop();
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]
