@@ -60,10 +60,10 @@ fn main() {
     });
     add_row(&mut t, "FrozenDD classify (1 row)", ns);
 
-    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
-    let n_rows = rows.len() as f64;
+    let rows = data.matrix();
+    let n_rows = rows.n_rows() as f64;
     let ns = measure_ns(window, || {
-        let out = forest_add::classifier::Classifier::classify_batch(&dd, &rows).unwrap();
+        let out = forest_add::classifier::Classifier::classify_batch(&dd, rows).unwrap();
         std::hint::black_box(out.len());
     });
     add_row(
@@ -73,10 +73,28 @@ fn main() {
     );
 
     let ns = measure_ns(window, || {
-        let out = frozen.classify_batch(&rows);
+        let out = frozen.classify_batch(rows);
         std::hint::black_box(out.len());
     });
     add_row(&mut t, "FrozenDD classify_batch row (150 rows)", ns / n_rows);
+
+    // the allocation-free steady state: warm scratch + reused output,
+    // tiled past the sweep crossover (the serving fleet's batch shape)
+    let tiled = forest_add::bench_support::tile_rows(&data, 4096, 1);
+    let big = tiled.as_matrix();
+    let mut scratch = forest_add::frozen::BatchScratch::new();
+    let mut out = Vec::new();
+    let ns = measure_ns(window, || {
+        frozen.classify_batch_into(big, &mut scratch, &mut out);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD sweep row (4096 rows, warm scratch, 1 thread)", ns / 4096.0);
+
+    let ns = measure_ns(window, || {
+        let out = frozen.classify_batch(big);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD sweep row (4096 rows, sharded)", ns / 4096.0);
 
     // snapshot load (the replica-startup primitive)
     let snapshot_bytes = frozen.to_bytes();

@@ -126,14 +126,16 @@ fn main() {
     );
 
     // --- batched endpoint scaling ------------------------------------------
+    // Small batches exercise the per-row fallbacks; the 1024/4096 points
+    // cross both the frozen sweep's batch-vs-walk threshold and the
+    // multi-core sharding crossover.
     let mut t = Table::new(&["backend", "batch", "rows/s"]);
     for &backend in &backends {
-        for batch in [1usize, 8, 16] {
-            let rows: Vec<Vec<f32>> = (0..batch)
-                .map(|i| data.row((i * 13) % data.n_rows()).to_vec())
-                .collect();
+        for batch in [1usize, 16, 256, 1024, 4096] {
+            let buf = forest_add::bench_support::tile_rows(&data, batch, 13);
+            let rows = buf.as_matrix();
             let ns = measure_ns(window, || {
-                let (out, _) = router.classify_batch(&rows, Some(backend), None).unwrap();
+                let (out, _) = router.classify_batch(rows, Some(backend), None).unwrap();
                 std::hint::black_box(out.len());
             });
             t.row(vec![

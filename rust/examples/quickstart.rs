@@ -67,7 +67,15 @@ fn main() -> Result<()> {
     assert_eq!(class, baseline);
     println!("sample {sample:?} -> {}", version.label_of(class));
 
-    // 5. Compile once, serve everywhere: export the engine's frozen
+    // 5. Batches are one flat zero-copy matrix end to end: the whole
+    //    dataset classifies as a single `RowMatrix` (sharded across cores
+    //    when large), bit-identical to the single-row walks above.
+    let batch = engine.classify_batch(None, None, data.matrix())?;
+    assert_eq!(batch.len(), data.n_rows());
+    assert_eq!(batch[0], engine.classify(None, None, data.row(0))?);
+    println!("batched {} rows through one flat matrix", batch.len());
+
+    // 6. Compile once, serve everywhere: export the engine's frozen
     //    backend as an `fdd-v1` snapshot, then register it on a fresh
     //    engine the way a serving replica does at startup — one
     //    contiguous read, no training, bit-identical answers.

@@ -1,0 +1,316 @@
+//! Flat row-major batch matrices: the zero-copy input type of every
+//! batch evaluation path.
+//!
+//! The batch pipeline used to pass `&[Vec<f32>]` around — one heap
+//! allocation per row, one pointer chase per row access, and a full
+//! re-materialisation at every layer boundary (HTTP parse → router →
+//! backend). [`RowMatrix`] replaces that with a borrowed view over one
+//! contiguous row-major buffer (`&[f32]` plus an `n_features` stride):
+//! building a batch is appending floats to one `Vec`, passing it anywhere
+//! is copying two words, and slicing a shard for a worker thread is
+//! pointer arithmetic.
+//!
+//! [`RowMatrixBuf`] is the owned builder: the HTTP/JSON layer pushes
+//! parsed cells straight into it (no intermediate per-row `Vec<f32>`),
+//! the router's dynamic batcher packs coalesced single requests into one,
+//! and [`Dataset::matrix`](crate::data::Dataset::matrix) exposes a whole
+//! dataset as a `RowMatrix` for free (datasets already store cells
+//! row-major).
+
+use crate::error::{Error, Result};
+
+/// A borrowed, row-major batch of feature rows: `data.len() ==
+/// n_rows * n_features`, row `i` at `data[i * n_features ..][.. n_features]`.
+///
+/// `Copy` (two words), so it is passed by value everywhere — including
+/// across the [`Classifier`](crate::classifier::Classifier) trait.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RowMatrix<'a> {
+    data: &'a [f32],
+    n_features: usize,
+    n_rows: usize,
+}
+
+impl<'a> RowMatrix<'a> {
+    /// View `data` as rows of `n_features` cells. Errors when the buffer
+    /// is not a whole number of rows (or `n_features == 0` with data).
+    pub fn new(data: &'a [f32], n_features: usize) -> Result<RowMatrix<'a>> {
+        if n_features == 0 {
+            if !data.is_empty() {
+                return Err(Error::invalid("RowMatrix with 0 features cannot hold data"));
+            }
+            return Ok(RowMatrix {
+                data,
+                n_features: 0,
+                n_rows: 0,
+            });
+        }
+        if data.len() % n_features != 0 {
+            return Err(Error::invalid(format!(
+                "buffer of {} cells is not a multiple of {n_features} features",
+                data.len()
+            )));
+        }
+        Ok(RowMatrix {
+            data,
+            n_features,
+            n_rows: data.len() / n_features,
+        })
+    }
+
+    /// The empty batch.
+    pub fn empty() -> RowMatrix<'static> {
+        RowMatrix {
+            data: &[],
+            n_features: 0,
+            n_rows: 0,
+        }
+    }
+
+    /// Number of rows.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Row stride (feature arity).
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// True when the batch holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    /// The underlying contiguous cell buffer (row-major).
+    pub fn data(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Feature row `i`.
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// Iterate the rows in order.
+    pub fn iter(&self) -> impl Iterator<Item = &'a [f32]> {
+        // `max(1)` keeps `chunks_exact` legal for the 0-feature empty
+        // matrix (whose data is empty, so the iterator yields nothing).
+        self.data.chunks_exact(self.n_features.max(1))
+    }
+
+    /// Contiguous sub-batch of `len` rows starting at `start` — the
+    /// zero-copy shard handed to each worker of a parallel sweep.
+    pub fn slice(&self, start: usize, len: usize) -> RowMatrix<'a> {
+        assert!(start + len <= self.n_rows, "shard out of bounds");
+        RowMatrix {
+            data: &self.data[start * self.n_features..(start + len) * self.n_features],
+            n_features: self.n_features,
+            n_rows: len,
+        }
+    }
+}
+
+/// The owned builder for [`RowMatrix`]: one growable flat buffer with a
+/// fixed row stride. Producers append cells or whole rows; `as_matrix`
+/// borrows the finished batch without copying.
+#[derive(Debug, Clone, Default)]
+pub struct RowMatrixBuf {
+    data: Vec<f32>,
+    n_features: usize,
+    /// Cells belonging to rows already closed (streaming producers may
+    /// hold a partial row beyond this watermark until `end_row`).
+    complete: usize,
+}
+
+impl RowMatrixBuf {
+    /// An empty buffer for rows of `n_features` cells.
+    pub fn new(n_features: usize) -> RowMatrixBuf {
+        RowMatrixBuf {
+            data: Vec::new(),
+            n_features,
+            complete: 0,
+        }
+    }
+
+    /// An empty buffer with capacity for `rows` rows.
+    pub fn with_capacity(n_features: usize, rows: usize) -> RowMatrixBuf {
+        RowMatrixBuf {
+            data: Vec::with_capacity(n_features * rows),
+            n_features,
+            complete: 0,
+        }
+    }
+
+    /// Copy a borrowed matrix into an owned buffer (one `memcpy`) — how
+    /// batches cross thread boundaries (e.g. into the XLA engine thread).
+    pub fn from_matrix(m: RowMatrix<'_>) -> RowMatrixBuf {
+        RowMatrixBuf {
+            data: m.data().to_vec(),
+            n_features: m.n_features(),
+            complete: m.data().len(),
+        }
+    }
+
+    /// Row stride.
+    pub fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    /// Completed rows.
+    pub fn n_rows(&self) -> usize {
+        if self.n_features == 0 {
+            0
+        } else {
+            self.complete / self.n_features
+        }
+    }
+
+    /// True when no cells have been pushed.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Append one whole row.
+    pub fn push_row(&mut self, row: &[f32]) -> Result<()> {
+        if self.n_features == 0 || row.len() != self.n_features {
+            return Err(Error::invalid(format!(
+                "row has {} features, batch stride is {}",
+                row.len(),
+                self.n_features
+            )));
+        }
+        self.data.extend_from_slice(row);
+        self.complete = self.data.len();
+        Ok(())
+    }
+
+    /// Append one cell of the row being built (streaming producers, e.g.
+    /// the HTTP JSON parser). Close the row with [`end_row`](Self::end_row).
+    pub fn push_cell(&mut self, v: f32) {
+        self.data.push(v);
+    }
+
+    /// Close the row being built; errors when its cell count does not
+    /// match the stride (the buffer is left unusable mid-row on error —
+    /// callers bail out of the whole batch).
+    pub fn end_row(&mut self) -> Result<()> {
+        if self.n_features == 0 || self.data.len() != self.complete + self.n_features {
+            return Err(Error::invalid(format!(
+                "rows must all have exactly {} features",
+                self.n_features
+            )));
+        }
+        self.complete = self.data.len();
+        Ok(())
+    }
+
+    /// Drop all rows, keeping the allocation (builder reuse).
+    pub fn clear(&mut self) {
+        self.data.clear();
+        self.complete = 0;
+    }
+
+    /// Borrow the finished batch as a [`RowMatrix`] (complete rows only;
+    /// a partial row pending `end_row` is not exposed).
+    pub fn as_matrix(&self) -> RowMatrix<'_> {
+        if self.n_features == 0 {
+            return RowMatrix::empty();
+        }
+        RowMatrix {
+            data: &self.data[..self.complete],
+            n_features: self.n_features,
+            n_rows: self.complete / self.n_features,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_views_rows_without_copying() {
+        let cells = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let m = RowMatrix::new(&cells, 3).unwrap();
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.n_features(), 3);
+        assert_eq!(m.row(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        let rows: Vec<&[f32]> = m.iter().collect();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], &[4.0, 5.0, 6.0]);
+        assert!(std::ptr::eq(m.data().as_ptr(), cells.as_ptr()));
+    }
+
+    #[test]
+    fn ragged_buffers_rejected() {
+        let cells = [1.0f32, 2.0, 3.0];
+        assert!(RowMatrix::new(&cells, 2).is_err());
+        assert!(RowMatrix::new(&cells, 0).is_err());
+        assert!(RowMatrix::new(&[], 0).is_ok());
+        let e = RowMatrix::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.iter().count(), 0);
+    }
+
+    #[test]
+    fn slicing_shards_share_the_buffer() {
+        let cells: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let m = RowMatrix::new(&cells, 2).unwrap();
+        let shard = m.slice(2, 3);
+        assert_eq!(shard.n_rows(), 3);
+        assert_eq!(shard.row(0), &[4.0, 5.0]);
+        assert_eq!(shard.row(2), &[8.0, 9.0]);
+        assert!(std::ptr::eq(shard.data().as_ptr(), &cells[4]));
+        assert_eq!(m.slice(6, 0).n_rows(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shard out of bounds")]
+    fn slicing_past_the_end_panics() {
+        let cells = [0.0f32; 4];
+        RowMatrix::new(&cells, 2).unwrap().slice(1, 2);
+    }
+
+    #[test]
+    fn buf_builds_by_rows_and_cells() {
+        let mut buf = RowMatrixBuf::with_capacity(2, 3);
+        buf.push_row(&[1.0, 2.0]).unwrap();
+        buf.push_cell(3.0);
+        buf.push_cell(4.0);
+        buf.end_row().unwrap();
+        assert_eq!(buf.n_rows(), 2);
+        let m = buf.as_matrix();
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        // stride violations are errors
+        assert!(buf.push_row(&[9.0]).is_err());
+        buf.push_cell(9.0);
+        assert!(buf.end_row().is_err());
+        buf.clear();
+        assert!(buf.is_empty());
+        assert_eq!(buf.as_matrix().n_rows(), 0);
+        // a "row" holding two rows' worth of cells is one bad row, not two
+        buf.push_cell(1.0);
+        buf.push_cell(2.0);
+        buf.push_cell(3.0);
+        buf.push_cell(4.0);
+        assert!(buf.end_row().is_err(), "double-width row must not pass");
+        // partial rows are never exposed through as_matrix
+        buf.clear();
+        buf.push_cell(7.0);
+        assert_eq!(buf.as_matrix().n_rows(), 0);
+    }
+
+    #[test]
+    fn from_matrix_copies_the_batch() {
+        let cells = [1.0f32, 2.0, 3.0, 4.0];
+        let m = RowMatrix::new(&cells, 2).unwrap();
+        let owned = RowMatrixBuf::from_matrix(m);
+        assert_eq!(owned.n_rows(), 2);
+        assert_eq!(owned.as_matrix().row(1), &[3.0, 4.0]);
+        // the degenerate empty batch round-trips to an empty matrix
+        let empty = RowMatrixBuf::from_matrix(RowMatrix::empty());
+        assert!(empty.as_matrix().is_empty());
+    }
+}

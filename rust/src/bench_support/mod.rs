@@ -7,12 +7,25 @@
 //! report output (aligned text to stdout + CSV/Markdown dumps under
 //! `bench_results/`).
 
+use crate::batch::RowMatrixBuf;
 use crate::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
 use crate::data::Dataset;
 use crate::forest::{ForestLearner, RandomForest};
 use crate::util::table::Table;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+/// Tile a dataset into an owned flat batch of `rows` rows, taking row
+/// `(i * step) % n_rows` for position `i` — the standard way benches and
+/// tests build deterministic batches past the sweep/sharding crossovers.
+pub fn tile_rows(data: &Dataset, rows: usize, step: usize) -> RowMatrixBuf {
+    let mut buf = RowMatrixBuf::with_capacity(data.n_features(), rows);
+    for i in 0..rows {
+        buf.push_row(data.row((i * step) % data.n_rows()))
+            .expect("dataset rows share one stride");
+    }
+    buf
+}
 
 /// Workload sizing, overridable via environment variables:
 /// `FOREST_ADD_BENCH_MAX_TREES`, `FOREST_ADD_BENCH_TABLE_TREES`,

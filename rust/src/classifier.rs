@@ -12,11 +12,16 @@
 //! The trait is **batch-first by default**: `classify_with_steps` is the
 //! one required evaluation method, and `classify`/`classify_batch` come
 //! for free, so a new backend (sharded DD, quantised forest, …) is a
-//! drop-in impl. Batch-native engines (XLA) override `classify_batch`
-//! with their fused path and advertise it via
+//! drop-in impl. Batches travel as one borrowed flat
+//! [`RowMatrix`](crate::batch::RowMatrix) — no per-row heap allocation
+//! anywhere on the pipeline. Batch-native engines (XLA) override
+//! `classify_batch` with their fused path and advertise it via
 //! [`CostModel::preferred_batch`], which the router's dynamic batcher
-//! uses to decide which traffic to coalesce.
+//! uses to decide which traffic to coalesce; the forest and frozen
+//! backends override it to shard large batches across the evaluation
+//! worker pool ([`crate::runtime::pool`]).
 
+use crate::batch::RowMatrix;
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 
@@ -118,10 +123,11 @@ pub trait Classifier: Send + Sync {
         Ok(self.classify_with_steps(x)?.0)
     }
 
-    /// Classify a batch of rows. The default loops `classify`, so every
-    /// backend gets batched evaluation for free; batch-native engines
-    /// override this with their fused path.
-    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+    /// Classify a batch of rows (borrowed flat row-major matrix). The
+    /// default loops `classify`, so every backend gets batched evaluation
+    /// for free; batch-native engines override this with their fused
+    /// and/or multi-core sharded path.
+    fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
         rows.iter().map(|r| self.classify(r)).collect()
     }
 
@@ -221,10 +227,12 @@ mod tests {
             features: 2,
         };
         assert_eq!(c.classify(&[0.0, 0.0]).unwrap(), 1);
+        let cells = [0.0f32, 0.0, 1.0, 1.0, 2.0, 2.0];
         let batch = c
-            .classify_batch(&[vec![0.0, 0.0], vec![1.0, 1.0], vec![2.0, 2.0]])
+            .classify_batch(RowMatrix::new(&cells, 2).unwrap())
             .unwrap();
         assert_eq!(batch, vec![1, 1, 1]);
+        assert!(c.classify_batch(RowMatrix::empty()).unwrap().is_empty());
     }
 
 }

@@ -8,6 +8,8 @@
 //! - `freeze`   — render a compiled diagram into an `fdd-v1` snapshot
 //! - `inspect`  — show an `fdd-v1` snapshot's header, sections and stats
 //! - `eval`     — steps/size/accuracy comparison table for one dataset
+//! - `bench`    — deterministic batch-throughput baseline (rows/sec per
+//!   backend × dataset × batch size, written to `BENCH_batch.json`)
 //! - `serve`    — start the HTTP serving coordinator (`--snapshot` serves a
 //!   pre-compiled artifact without training)
 //! - `classify` — client convenience: send one request to a running server
@@ -18,6 +20,7 @@
 //! objects resolved from a [`ModelRegistry`] — the CLI never dispatches
 //! on a concrete evaluator type.
 
+use crate::bench_support::measure_ns;
 use crate::classifier::{self, Classifier};
 use crate::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
 use crate::data::datasets;
@@ -33,6 +36,7 @@ use crate::util::argparse::{ArgSpec, Args};
 use crate::util::json::{self, Json};
 use crate::util::table::{fmt_thousands, Table};
 use std::sync::Arc;
+use std::time::Duration;
 
 const USAGE: &str = "forest-add — Large Random Forests, optimised for rapid evaluation
 
@@ -46,6 +50,7 @@ COMMANDS:
   freeze     Freeze a compiled diagram into an fdd-v1 binary snapshot
   inspect    Inspect an fdd-v1 snapshot (header, sections, stats)
   eval       Compare RF vs DD steps/size/accuracy on a dataset
+  bench      Batch-throughput baseline (writes BENCH_batch.json)
   serve      Start the HTTP serving coordinator
   classify   Send one classification request to a running server
   models     List the models registered on a running server
@@ -68,6 +73,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "freeze" => cmd_freeze(&rest),
         "inspect" => cmd_inspect(&rest),
         "eval" => cmd_eval(&rest),
+        "bench" => cmd_bench(&rest),
         "serve" => cmd_serve(&rest),
         "classify" => cmd_classify(&rest),
         "models" => cmd_models(&rest),
@@ -442,6 +448,121 @@ fn cmd_eval(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn bench_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add bench",
+        "Deterministic batch-throughput baseline (rows/sec per backend × dataset × batch size)",
+    )
+    .opt("datasets", "iris,tic-tac-toe", "comma-separated dataset specs")
+    .opt("trees", "64", "forest size")
+    .opt("seed", "42", "training seed")
+    .opt("batches", "64,256,1024,4096", "comma-separated batch sizes")
+    .opt("secs", "0.2", "measurement window per cell in seconds")
+    .opt(
+        "json",
+        "BENCH_batch.json",
+        "write the JSON report here (empty = table only)",
+    )
+}
+
+/// One measured bench cell: table row + JSON record.
+fn bench_cell(
+    t: &mut Table,
+    results: &mut Vec<Json>,
+    dataset: &str,
+    backend: &str,
+    batch: usize,
+    ns_per_batch: f64,
+) {
+    let rows_per_sec = batch as f64 * 1e9 / ns_per_batch;
+    t.row(vec![
+        dataset.to_string(),
+        backend.to_string(),
+        batch.to_string(),
+        fmt_thousands(rows_per_sec, 0),
+    ]);
+    results.push(json::obj(vec![
+        ("dataset", json::s(dataset)),
+        ("backend", json::s(backend)),
+        ("batch", json::num(batch as f64)),
+        ("rows_per_sec", json::num(rows_per_sec)),
+    ]));
+}
+
+/// The perf-trajectory baseline: a fixed workload (dataset × backend ×
+/// batch size, seeds pinned) measured through the same entry points the
+/// serving path uses, dumped as `BENCH_batch.json` so successive PRs can
+/// be compared. `frozen-1t` is the single-threaded scratch sweep — the
+/// gap to `frozen` is the multi-core sharding win.
+fn cmd_bench(args: &[String]) -> Result<()> {
+    let a = bench_spec().parse(args)?;
+    let window = Duration::from_secs_f64(a.f64("secs")?);
+    let trees = a.usize("trees")?;
+    let seed = a.u64("seed")?;
+    let batches: Vec<usize> = a
+        .str("batches")
+        .split(',')
+        .map(|b| {
+            b.trim()
+                .parse::<usize>()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| Error::invalid(format!("bad batch size '{b}'")))
+        })
+        .collect::<Result<_>>()?;
+    let mut t = Table::new(&["dataset", "backend", "batch", "rows/s"]);
+    let mut results: Vec<Json> = Vec::new();
+    for spec in a.str("datasets").split(',') {
+        let spec = spec.trim();
+        let ds = crate::data::resolve(spec)?;
+        let forest = ForestLearner::default().trees(trees).seed(seed).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions::default()).compile(&forest)?;
+        let frozen_dd = dd.freeze();
+        for &batch in &batches {
+            let buf = crate::bench_support::tile_rows(&ds, batch, 1);
+            let rows = buf.as_matrix();
+            let ns = measure_ns(window, || {
+                std::hint::black_box(forest.predict_batch(rows).len());
+            });
+            bench_cell(&mut t, &mut results, spec, "forest", batch, ns);
+            let ns = measure_ns(window, || {
+                let out = Classifier::classify_batch(&dd, rows).expect("dd batch");
+                std::hint::black_box(out.len());
+            });
+            bench_cell(&mut t, &mut results, spec, "dd", batch, ns);
+            let ns = measure_ns(window, || {
+                std::hint::black_box(frozen_dd.classify_batch(rows).len());
+            });
+            bench_cell(&mut t, &mut results, spec, "frozen", batch, ns);
+            let mut scratch = frozen::BatchScratch::new();
+            let mut out = Vec::new();
+            let ns = measure_ns(window, || {
+                frozen_dd.classify_batch_into(rows, &mut scratch, &mut out);
+                std::hint::black_box(out.len());
+            });
+            bench_cell(&mut t, &mut results, spec, "frozen-1t", batch, ns);
+        }
+    }
+    print!("{}", t.to_text());
+    let report = json::obj(vec![
+        ("bench", json::s("batch_throughput")),
+        ("trees", json::num(trees as f64)),
+        ("seed", json::num(seed as f64)),
+        (
+            "eval_threads",
+            json::num(crate::runtime::pool::eval_threads() as f64),
+        ),
+        ("window_secs", json::num(a.f64("secs")?)),
+        ("results", Json::Arr(results)),
+    ]);
+    let out_path = a.str("json");
+    if !out_path.is_empty() {
+        std::fs::write(out_path, report.to_string_pretty())?;
+        println!("wrote {out_path}");
+    }
+    Ok(())
+}
+
 fn serve_spec() -> ArgSpec {
     ArgSpec::new("forest-add serve", "Start the HTTP serving coordinator")
         .opt("config", "", "JSON config file (CLI flags override)")
@@ -454,6 +575,7 @@ fn serve_spec() -> ArgSpec {
         .opt("artifacts", "", "artifacts directory")
         .opt("variant", "", "artifact variant (small | base | wide)")
         .opt("reply-timeout-ms", "", "batched-reply timeout in milliseconds")
+        .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .switch("no-xla", "do not load the XLA backend")
         .switch("dump-config", "print the effective config and exit")
 }
@@ -491,6 +613,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("reply-timeout-ms").is_empty() {
         cfg.reply_timeout_ms = a.u64("reply-timeout-ms")?;
+    }
+    if !a.str("eval-threads").is_empty() {
+        cfg.eval_threads = a.usize("eval-threads")?;
     }
     if a.flag("no-xla") {
         cfg.enable_xla = false;
@@ -683,6 +808,37 @@ mod tests {
             dir.join("x").to_str().unwrap().into(),
         ])
         .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bench_writes_the_baseline_json() {
+        let dir = std::env::temp_dir().join("forest-add-cli-bench-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_batch.json");
+        cmd_bench(&[
+            "--datasets".into(),
+            "lenses".into(),
+            "--trees".into(),
+            "5".into(),
+            "--batches".into(),
+            "8,32".into(),
+            "--secs".into(),
+            "0.01".into(),
+            "--json".into(),
+            out.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let report = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(report.get_str("bench"), Some("batch_throughput"));
+        let results = report.get("results").and_then(Json::as_arr).unwrap();
+        // 1 dataset × 4 backends × 2 batch sizes
+        assert_eq!(results.len(), 8);
+        for r in results {
+            assert!(r.get("rows_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        // bad batch sizes are rejected up front
+        assert!(cmd_bench(&["--batches".into(), "0".into()]).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -187,6 +187,13 @@ impl Dataset {
         &self.cells[i * nf..(i + 1) * nf]
     }
 
+    /// The whole dataset as a zero-copy [`RowMatrix`](crate::batch::RowMatrix)
+    /// batch (cells are already stored row-major).
+    pub fn matrix(&self) -> crate::batch::RowMatrix<'_> {
+        crate::batch::RowMatrix::new(&self.cells, self.n_features())
+            .expect("dataset cells are rectangular by construction")
+    }
+
     /// Label of row `i` (class index).
     pub fn label(&self, i: usize) -> u32 {
         self.labels[i]

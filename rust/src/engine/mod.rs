@@ -32,6 +32,7 @@ pub mod registry;
 
 pub use registry::{BackendSlot, ModelId, ModelRegistry, ModelVersion};
 
+use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo};
 use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
 use crate::data::Dataset;
@@ -147,17 +148,15 @@ impl Engine {
         slot.classifier.classify(x)
     }
 
-    /// Classify a batch of rows on `model`/`backend`.
+    /// Classify a flat row-major batch on `model`/`backend`.
     pub fn classify_batch(
         &self,
         model: Option<&str>,
         backend: Option<BackendKind>,
-        rows: &[Vec<f32>],
+        rows: RowMatrix<'_>,
     ) -> Result<Vec<u32>> {
         let (version, slot) = self.registry.resolve(model, backend)?;
-        for r in rows {
-            version.check_row(r)?;
-        }
+        version.check_matrix(rows)?;
         slot.classifier.classify_batch(rows)
     }
 
@@ -409,12 +408,21 @@ mod tests {
             .seed(1)
             .build()
             .unwrap();
-        let rows: Vec<Vec<f32>> = (0..12).map(|i| data.row(i * 11).to_vec()).collect();
-        let batch = engine.classify_batch(None, None, &rows).unwrap();
+        let mut buf = crate::batch::RowMatrixBuf::with_capacity(data.n_features(), 12);
+        for i in 0..12 {
+            buf.push_row(data.row(i * 11)).unwrap();
+        }
+        let rows = buf.as_matrix();
+        let batch = engine.classify_batch(None, None, rows).unwrap();
         assert_eq!(batch.len(), 12);
         for (row, &c) in rows.iter().zip(&batch) {
             assert_eq!(c, engine.classify(None, None, row).unwrap());
         }
+        // batches are checked against the model schema at the facade too
+        let bad = [1.0f32, 2.0];
+        assert!(engine
+            .classify_batch(None, None, RowMatrix::new(&bad, 2).unwrap())
+            .is_err());
         let infos = engine.info(None).unwrap();
         assert_eq!(infos.len(), 3);
         assert!(infos.iter().any(|i| i.backend == BackendKind::Forest));

@@ -8,6 +8,7 @@
 //! backend of a version is a [`Classifier`] trait object, so the router
 //! never touches a concrete evaluator type.
 
+use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier};
 use crate::data::Schema;
 use crate::error::{Error, Result};
@@ -120,6 +121,26 @@ impl ModelVersion {
         }
         if features.iter().any(|v| !v.is_finite()) {
             return Err(Error::Serve("request contains non-finite features".into()));
+        }
+        Ok(())
+    }
+
+    /// Validate a flat batch against the model schema: one arity check
+    /// for the whole matrix plus one linear finiteness scan — no per-row
+    /// work on the batch hot path.
+    pub fn check_matrix(&self, rows: RowMatrix<'_>) -> Result<()> {
+        if rows.is_empty() {
+            return Ok(());
+        }
+        let want = self.schema.n_features();
+        if rows.n_features() != want {
+            return Err(Error::Serve(format!(
+                "batch rows have {} features, model expects {want}",
+                rows.n_features()
+            )));
+        }
+        if rows.data().iter().any(|v| !v.is_finite()) {
+            return Err(Error::Serve("batch contains non-finite features".into()));
         }
         Ok(())
     }
@@ -456,6 +477,17 @@ mod tests {
         assert!(version.check_row(&[1.0]).is_err());
         assert!(version.check_row(&[f32::NAN, 0.0]).is_err());
         assert!(version.check_row(&[f32::INFINITY, 0.0]).is_err());
+        // flat batches: one stride check + one finiteness scan
+        let good = [1.0f32, 2.0, 3.0, 4.0];
+        assert!(version
+            .check_matrix(RowMatrix::new(&good, 2).unwrap())
+            .is_ok());
+        assert!(version
+            .check_matrix(RowMatrix::new(&good, 4).unwrap())
+            .is_err());
+        let nan = [1.0f32, f32::NAN];
+        assert!(version.check_matrix(RowMatrix::new(&nan, 2).unwrap()).is_err());
+        assert!(version.check_matrix(RowMatrix::empty()).is_ok());
     }
 
     #[test]

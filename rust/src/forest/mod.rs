@@ -5,12 +5,22 @@
 //! evaluates **all** trees — cost linear in the forest size, which is
 //! exactly what the ADD aggregation removes.
 
+use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::data::{Dataset, Schema};
 use crate::error::{Error, Result};
+use crate::runtime::pool;
 use crate::tree::{DecisionTree, TreeLearner, TreeParams};
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
+
+/// Minimum batch size before forest evaluation is sharded across the
+/// worker pool (each row already costs a full walk of every tree, so the
+/// crossover is far lower than the frozen sweep's).
+const PAR_MIN_ROWS: usize = 64;
+
+/// Minimum rows per parallel shard.
+const PAR_ROWS_PER_SHARD: usize = 32;
 
 /// A trained Random Forest.
 #[derive(Debug, Clone)]
@@ -139,6 +149,27 @@ impl RandomForest {
             .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(&a.0)))
             .map(|(i, _)| i as u32)
             .unwrap_or(0)
+    }
+
+    /// Batch prediction over a flat row matrix, sharded across the
+    /// evaluation worker pool when the batch is large enough to amortise
+    /// the fan-out. Shards are contiguous row ranges writing disjoint
+    /// output slices, so the result is bit-identical to looping
+    /// [`predict`](Self::predict) regardless of thread count.
+    pub fn predict_batch(&self, rows: RowMatrix<'_>) -> Vec<u32> {
+        let mut out = vec![0u32; rows.n_rows()];
+        let sharded = rows.n_rows() >= PAR_MIN_ROWS
+            && pool::run_sharded(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
+                for (slot, row) in out_chunk.iter_mut().zip(shard.iter()) {
+                    *slot = self.predict(row);
+                }
+            });
+        if !sharded {
+            for (slot, row) in out.iter_mut().zip(rows.iter()) {
+                *slot = self.predict(row);
+            }
+        }
+        out
     }
 
     /// Prediction with the paper's §6 step count: internal nodes visited in
@@ -306,6 +337,10 @@ impl Classifier for RandomForest {
         let (class, steps) = self.predict_with_steps(x);
         Ok((class, Some(steps)))
     }
+
+    fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
+        Ok(self.predict_batch(rows))
+    }
 }
 
 #[cfg(test)]
@@ -414,6 +449,27 @@ mod tests {
             assert_eq!((c, steps), (want_c, Some(want_s)));
             assert!(steps.unwrap() <= info.cost.max_steps.unwrap());
         }
+    }
+
+    #[test]
+    fn predict_batch_matches_per_row_predict_at_every_scale() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(15).seed(8).fit(&ds);
+        // small batch: serial path
+        let small = ds.matrix().slice(0, 10);
+        let got = forest.predict_batch(small);
+        for (i, row) in small.iter().enumerate() {
+            assert_eq!(got[i], forest.predict(row), "row {i}");
+        }
+        // tiled batch past the parallel crossover: sharded path,
+        // bit-identical to the per-row walks
+        let tiled = crate::bench_support::tile_rows(&ds, 512, 11);
+        let big = tiled.as_matrix();
+        let got = forest.predict_batch(big);
+        for (i, row) in big.iter().enumerate() {
+            assert_eq!(got[i], forest.predict(row), "row {i}");
+        }
+        assert!(forest.predict_batch(crate::batch::RowMatrix::empty()).is_empty());
     }
 
     #[test]

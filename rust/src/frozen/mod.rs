@@ -14,9 +14,14 @@
 //! - **Terminals inlined per abstraction** (class words, vote vectors, or
 //!   bare labels), with the majority class and the §6 aggregation reads
 //!   precomputed per terminal, so evaluation never allocates.
-//! - **A true batch path** ([`FrozenDD::classify_batch`]): one forward
-//!   pass over the node arrays moves every row of the batch through the
-//!   diagram, loading each node once per pass instead of once per row.
+//! - **A true batch path** ([`FrozenDD::classify_batch`]): a node-ordered
+//!   sweep moves every row of a [`RowMatrix`] batch through the diagram
+//!   together, loading each node once per round instead of once per row.
+//!   Row parking is a reusable two-pass counting scatter ([`BatchScratch`]:
+//!   count arrivals per node → prefix-sum offsets → stable scatter into
+//!   one flat `Vec<u32>`), so steady-state batches allocate nothing, and
+//!   large batches are sharded across the evaluation worker pool
+//!   ([`crate::runtime::pool`]) behind a size-crossover heuristic.
 //! - **A binary snapshot** ([`snapshot`], format `forest-add/fdd-v1`)
 //!   that writes and reloads the whole structure with a single contiguous
 //!   read — replicas start from a pre-compiled artifact in milliseconds.
@@ -32,10 +37,25 @@ mod validate;
 
 use crate::add::terminal::argmax;
 use crate::add::SizeStats;
+use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::compile::Abstraction;
 use crate::data::Schema;
 use crate::error::Result;
+use crate::runtime::pool;
+use std::cell::RefCell;
+
+/// Batches with fewer rows than `nodes / WALK_FALLBACK_FACTOR` take
+/// per-row walks instead of the node-ordered sweep (the sweep's cost is
+/// dominated by the node span it touches, not the row count).
+const WALK_FALLBACK_FACTOR: usize = 32;
+
+/// Minimum batch size before the sweep is sharded across the worker pool.
+const PAR_MIN_ROWS: usize = 512;
+
+/// Minimum rows per parallel shard (below this, fan-out overhead eats
+/// the multi-core win).
+const PAR_ROWS_PER_SHARD: usize = 256;
 
 /// High bit of a child reference: set ⇒ the remaining bits index the
 /// terminal arrays, clear ⇒ they index the node arrays. Mirrors the
@@ -371,53 +391,192 @@ impl FrozenDD {
         )
     }
 
-    /// Classify a batch with one forward pass over the node arrays.
+    /// Classify a batch through the node-ordered sweep, sharding large
+    /// batches across the evaluation worker pool.
     ///
-    /// Nodes are stored topologically (children strictly after parents),
-    /// so a row parked at node `i` only ever moves to a node `> i` or to a
-    /// terminal: a single in-order sweep completes every row, and each
-    /// node's predicate is loaded once per pass instead of once per row —
-    /// the cache behaviour single-row walks cannot get.
-    #[allow(clippy::needless_range_loop)] // the loop mutates `parked` at two indices
-    pub fn classify_batch(&self, rows: &[Vec<f32>]) -> Vec<u32> {
-        // The sweep costs O(n_nodes) regardless of batch size; for batches
-        // small relative to the diagram, plain walks win — don't sweep
-        // half a million nodes to serve two rows.
-        if rows.len().saturating_mul(32) < self.nodes.len() {
-            return rows.iter().map(|r| self.classify(r)).collect();
-        }
-        let mut out = vec![0u32; rows.len()];
-        if self.root & TERM_BIT != 0 {
-            out.fill(u32::from(
-                self.term_class[(self.root & !TERM_BIT) as usize],
-            ));
-            return out;
-        }
-        let mut parked: Vec<Vec<u32>> = vec![Vec::new(); self.nodes.len()];
-        parked[0] = (0..rows.len() as u32).collect();
-        for i in 0..self.nodes.len() {
-            if parked[i].is_empty() {
-                continue;
-            }
-            let here = std::mem::take(&mut parked[i]);
-            let n = self.nodes[i];
-            for r in here {
-                let x = rows[r as usize].as_slice();
-                let next = if x[n.feat as usize] < n.thresh {
-                    n.hi
-                } else {
-                    n.lo
-                };
-                if next & TERM_BIT != 0 {
-                    out[r as usize] =
-                        u32::from(self.term_class[(next & !TERM_BIT) as usize]);
-                } else {
-                    parked[next as usize].push(r);
-                }
-            }
+    /// Shards are contiguous row ranges with disjoint output slices, so
+    /// the result is bit-identical to the single-threaded sweep (and to
+    /// per-row walks) regardless of thread count.
+    pub fn classify_batch(&self, rows: RowMatrix<'_>) -> Vec<u32> {
+        let mut out = vec![0u32; rows.n_rows()];
+        let sharded = rows.n_rows() >= PAR_MIN_ROWS
+            && pool::run_sharded(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
+                SCRATCH.with(|s| self.sweep_into(shard, &mut s.borrow_mut(), out_chunk));
+            });
+        if !sharded {
+            SCRATCH.with(|s| self.sweep_into(rows, &mut s.borrow_mut(), &mut out));
         }
         out
     }
+
+    /// Single-threaded batch classification with an explicit, reusable
+    /// [`BatchScratch`].
+    pub fn classify_batch_with(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch) -> Vec<u32> {
+        let mut out = vec![0u32; rows.n_rows()];
+        self.sweep_into(rows, scratch, &mut out);
+        out
+    }
+
+    /// Single-threaded batch classification into a caller-owned output
+    /// vector — with a warm `scratch` and `out`, the steady state
+    /// allocates nothing (asserted by `tests/alloc_frozen.rs`).
+    pub fn classify_batch_into(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<u32>,
+    ) {
+        out.clear();
+        out.resize(rows.n_rows(), 0);
+        self.sweep_into(rows, scratch, out);
+    }
+
+    /// The node-ordered sweep over one shard: nodes are stored
+    /// topologically (children strictly after parents), so rows parked at
+    /// node `i` only ever move to a node `> i` or to a terminal, and an
+    /// ascending pass over the touched node span completes every row —
+    /// each node record is loaded once per round instead of once per row.
+    ///
+    /// Parking uses the scratch's counting scatter: routing a round
+    /// counts arrivals per destination node, a prefix sum turns counts
+    /// into segment offsets, and a stable scatter packs the surviving
+    /// rows into one flat slot array for the next round. No per-node
+    /// `Vec`s, no allocation once the scratch is warm.
+    fn sweep_into(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), rows.n_rows());
+        if rows.is_empty() {
+            return;
+        }
+        if self.root & TERM_BIT != 0 {
+            out.fill(u32::from(self.term_class[(self.root & !TERM_BIT) as usize]));
+            return;
+        }
+        if rows.n_rows().saturating_mul(WALK_FALLBACK_FACTOR) < self.nodes.len() {
+            for (i, r) in rows.iter().enumerate() {
+                out[i] = self.classify(r);
+            }
+            return;
+        }
+        scratch.ensure(self.nodes.len(), rows.n_rows());
+        let BatchScratch {
+            count_a,
+            count_b,
+            off_a,
+            off_b,
+            slots_a,
+            slots_b,
+            pending,
+            dest,
+        } = scratch;
+        // Round 0: every row parked at the root (node 0).
+        count_a[0] = rows.n_rows() as u32;
+        off_a[0] = rows.n_rows() as u32; // segment *end* offset
+        for (i, slot) in slots_a[..rows.n_rows()].iter_mut().enumerate() {
+            *slot = i as u32;
+        }
+        let (mut lo, mut hi) = (0usize, 0usize);
+        loop {
+            pending.clear();
+            dest.clear();
+            let (mut next_lo, mut next_hi) = (usize::MAX, 0usize);
+            // Route the round node-by-node (ascending = sequential reads
+            // of the node records), counting arrivals per destination.
+            for node in lo..=hi {
+                let c = count_a[node] as usize;
+                if c == 0 {
+                    continue;
+                }
+                count_a[node] = 0; // restore the all-zero invariant
+                let end = off_a[node] as usize;
+                let rec = self.nodes[node];
+                for &r in &slots_a[end - c..end] {
+                    let x = rows.row(r as usize);
+                    let next = if x[rec.feat as usize] < rec.thresh {
+                        rec.hi
+                    } else {
+                        rec.lo
+                    };
+                    if next & TERM_BIT != 0 {
+                        out[r as usize] =
+                            u32::from(self.term_class[(next & !TERM_BIT) as usize]);
+                    } else {
+                        pending.push(r);
+                        dest.push(next);
+                        count_b[next as usize] += 1;
+                        next_lo = next_lo.min(next as usize);
+                        next_hi = next_hi.max(next as usize);
+                    }
+                }
+            }
+            if pending.is_empty() {
+                return;
+            }
+            // Prefix-sum the arrival counts into segment start offsets …
+            let mut running = 0u32;
+            for node in next_lo..=next_hi {
+                off_b[node] = running;
+                running += count_b[node];
+            }
+            // … and stable-scatter the survivors into the flat slot
+            // array. After the scatter `off_b` holds segment *end*
+            // offsets — exactly the form the next round reads.
+            for (&r, &d) in pending.iter().zip(dest.iter()) {
+                slots_b[off_b[d as usize] as usize] = r;
+                off_b[d as usize] += 1;
+            }
+            std::mem::swap(count_a, count_b);
+            std::mem::swap(off_a, off_b);
+            std::mem::swap(slots_a, slots_b);
+            lo = next_lo;
+            hi = next_hi;
+        }
+    }
+}
+
+/// Reusable state of the frozen batch sweep's counting scatter.
+///
+/// Two (count, offset) array pairs — one for the round being routed, one
+/// for the round being built, swapped each round — plus the flat row-slot
+/// arrays and the routing-order survivor buffers. Counts are kept
+/// all-zero between rounds and between calls, so a warm scratch can be
+/// reused across batches *and across diagrams* (buffers only ever grow).
+#[derive(Debug, Default)]
+pub struct BatchScratch {
+    count_a: Vec<u32>,
+    count_b: Vec<u32>,
+    off_a: Vec<u32>,
+    off_b: Vec<u32>,
+    slots_a: Vec<u32>,
+    slots_b: Vec<u32>,
+    pending: Vec<u32>,
+    dest: Vec<u32>,
+}
+
+impl BatchScratch {
+    /// Empty scratch (buffers grow on first use, then stay).
+    pub fn new() -> BatchScratch {
+        BatchScratch::default()
+    }
+
+    fn ensure(&mut self, n_nodes: usize, n_rows: usize) {
+        if self.count_a.len() < n_nodes {
+            self.count_a.resize(n_nodes, 0);
+            self.count_b.resize(n_nodes, 0);
+            self.off_a.resize(n_nodes, 0);
+            self.off_b.resize(n_nodes, 0);
+        }
+        if self.slots_a.len() < n_rows {
+            self.slots_a.resize(n_rows, 0);
+            self.slots_b.resize(n_rows, 0);
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread sweep scratch: serving threads and pool workers each
+    /// reuse their own buffers across batches (and across models), so the
+    /// steady-state sweep allocates nothing.
+    static SCRATCH: RefCell<BatchScratch> = RefCell::new(BatchScratch::new());
 }
 
 /// The deployment backend: the paper's diagram in its flat serving form.
@@ -450,7 +609,7 @@ impl Classifier for FrozenDD {
         Ok((class, Some(steps)))
     }
 
-    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+    fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
         Ok(FrozenDD::classify_batch(self, rows))
     }
 
@@ -499,17 +658,45 @@ mod tests {
     fn batch_pass_matches_single_row_walks() {
         let (ds, dd) = frozen_iris(Abstraction::Majority);
         let frozen = dd.freeze();
-        let rows: Vec<Vec<f32>> = (0..ds.n_rows()).map(|i| ds.row(i).to_vec()).collect();
-        let batch = frozen.classify_batch(&rows);
+        let rows = ds.matrix();
+        let batch = frozen.classify_batch(rows);
         for (i, row) in rows.iter().enumerate() {
             assert_eq!(batch[i], frozen.classify(row), "row {i}");
         }
-        assert!(frozen.classify_batch(&[]).is_empty());
+        assert!(frozen.classify_batch(RowMatrix::empty()).is_empty());
         // Tiny batches take the per-row fallback; answers must not change.
         assert_eq!(
-            frozen.classify_batch(&rows[..1]),
-            vec![frozen.classify(&rows[0])]
+            frozen.classify_batch(rows.slice(0, 1)),
+            vec![frozen.classify(rows.row(0))]
         );
+    }
+
+    #[test]
+    fn sweep_counting_scatter_and_sharded_path_match_walks() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let frozen = dd.freeze();
+        // Tile the dataset far past both the walk-fallback and the
+        // parallel crossover so the counting-scatter sweep and the
+        // sharded path genuinely run.
+        let tiled = crate::bench_support::tile_rows(&ds, 4096, 7);
+        let rows = tiled.as_matrix();
+        let want: Vec<u32> = rows.iter().map(|r| frozen.classify(r)).collect();
+
+        // explicit-scratch single-threaded sweep
+        let mut scratch = BatchScratch::new();
+        assert_eq!(frozen.classify_batch_with(rows, &mut scratch), want);
+        // warm-scratch reuse (the zero-invariant must survive a batch) …
+        let mut out = Vec::new();
+        frozen.classify_batch_into(rows, &mut scratch, &mut out);
+        assert_eq!(out, want);
+        // … and reuse across a *different* diagram
+        let (ds2, dd2) = frozen_iris(Abstraction::Word);
+        let frozen2 = dd2.freeze();
+        frozen2.classify_batch_into(ds2.matrix(), &mut scratch, &mut out);
+        let want2: Vec<u32> = ds2.matrix().iter().map(|r| frozen2.classify(r)).collect();
+        assert_eq!(out, want2);
+        // the auto path (possibly sharded across the pool) is bit-identical
+        assert_eq!(frozen.classify_batch(rows), want);
     }
 
     #[test]
@@ -547,12 +734,15 @@ mod tests {
             .compile(&forest)
             .unwrap();
         let frozen = dd.freeze();
-        let rows: Vec<Vec<f32>> = (0..ds.n_rows()).map(|i| ds.row(i).to_vec()).collect();
-        let batch = frozen.classify_batch(&rows);
+        let rows = ds.matrix();
+        let batch = frozen.classify_batch(rows);
         for (i, row) in rows.iter().enumerate() {
             assert_eq!(frozen.classify_with_steps(row), dd.classify_with_steps(row));
             assert_eq!(batch[i], dd.classify(row));
         }
+        // a single-terminal diagram must also survive the scratch path
+        let mut scratch = BatchScratch::new();
+        assert_eq!(frozen.classify_batch_with(rows, &mut scratch), batch);
     }
 
     #[test]

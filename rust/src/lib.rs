@@ -49,6 +49,41 @@
 //! assert_eq!(class, rf);
 //! ```
 //!
+//! ## Batches: one flat matrix, zero copies, every core
+//!
+//! Batch evaluation everywhere takes a [`batch::RowMatrix`] — a borrowed
+//! row-major `&[f32]` plus an `n_features` stride. No layer of the
+//! pipeline allocates per row: the HTTP layer parses straight into a
+//! [`batch::RowMatrixBuf`], [`data::Dataset::matrix`] views a whole
+//! dataset for free, and worker shards are pointer-arithmetic slices.
+//!
+//! ```no_run
+//! # let data = forest_add::data::datasets::load("iris").unwrap();
+//! # let engine = forest_add::engine::Engine::builder()
+//! #     .dataset(data.clone()).trees(20).seed(7).build().unwrap();
+//! // Classify the entire dataset as one zero-copy batch.
+//! let classes = engine.classify_batch(None, None, data.matrix()).unwrap();
+//! // Or build a batch cell-by-cell (what the HTTP layer does).
+//! let mut buf = forest_add::batch::RowMatrixBuf::new(4);
+//! buf.push_row(&[6.1, 2.9, 4.7, 1.4]).unwrap();
+//! let one = engine.classify_batch(None, None, buf.as_matrix()).unwrap();
+//! # let _ = (classes, one);
+//! ```
+//!
+//! Two crossovers govern how a batch executes:
+//!
+//! - **batch-vs-walk**: the frozen node-ordered sweep costs what the
+//!   diagram costs, not what the batch costs, so batches smaller than
+//!   `nodes / 32` fall back to plain per-row walks — identical answers,
+//!   better latency.
+//! - **multi-core sharding**: batches past a few hundred rows are cut
+//!   into contiguous shards across a spawn-once worker pool
+//!   ([`runtime::pool`]); parallelism defaults to
+//!   [`std::thread::available_parallelism`] and is configurable with
+//!   `ServeConfig::eval_threads` / `forest-add serve --eval-threads`.
+//!   Shards write disjoint output ranges, so results are bit-identical
+//!   to the single-threaded path at any thread count.
+//!
 //! ## Snapshots: compile once, serve from a frozen artifact
 //!
 //! Compilation is expensive; serving should not be. The frozen runtime
@@ -80,6 +115,7 @@
 //! ```
 
 pub mod add;
+pub mod batch;
 pub mod bench_support;
 pub mod classifier;
 pub mod cli;
@@ -96,6 +132,7 @@ pub mod serve;
 pub mod tree;
 pub mod util;
 
+pub use batch::{RowMatrix, RowMatrixBuf};
 pub use classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 pub use engine::{Engine, ModelId, ModelRegistry};
 pub use error::{Error, Result};

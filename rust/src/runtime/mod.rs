@@ -14,9 +14,11 @@
 //! binary is self-contained.
 
 pub mod packing;
+pub mod pool;
 
 pub use packing::PackedForest;
 
+use crate::batch::RowMatrix;
 use crate::error::{Error, Result};
 use crate::util::json::Json;
 use std::path::Path;
@@ -184,33 +186,33 @@ impl XlaEngine {
 
     /// Classify up to `batch` rows by padding the tail with the first row
     /// (fixed-shape executable); returns one class per input row.
-    pub fn classify_rows(&self, rows: &[Vec<f32>], forest: &PackedForest) -> Result<Vec<u32>> {
+    pub fn classify_rows(&self, rows: RowMatrix<'_>, forest: &PackedForest) -> Result<Vec<u32>> {
         let m = &self.meta;
-        if rows.is_empty() || rows.len() > m.batch {
+        if rows.is_empty() || rows.n_rows() > m.batch {
             return Err(Error::invalid(format!(
                 "row count {} not in 1..={}",
-                rows.len(),
+                rows.n_rows(),
                 m.batch
+            )));
+        }
+        if rows.n_features() > m.features {
+            return Err(Error::SchemaMismatch(format!(
+                "rows have {} features, artifact holds {}",
+                rows.n_features(),
+                m.features
             )));
         }
         let mut x = vec![0f32; m.batch * m.features];
         for (i, row) in rows.iter().enumerate() {
-            if row.len() > m.features {
-                return Err(Error::SchemaMismatch(format!(
-                    "row has {} features, artifact holds {}",
-                    row.len(),
-                    m.features
-                )));
-            }
             x[i * m.features..i * m.features + row.len()].copy_from_slice(row);
         }
         // pad remaining slots with row 0 (results discarded)
-        for i in rows.len()..m.batch {
+        for i in rows.n_rows()..m.batch {
             let (head, tail) = x.split_at_mut(i * m.features);
             tail[..m.features].copy_from_slice(&head[..m.features]);
         }
         let (_, preds) = self.run(&x, forest)?;
-        Ok(preds[..rows.len()].iter().map(|&p| p as u32).collect())
+        Ok(preds[..rows.n_rows()].iter().map(|&p| p as u32).collect())
     }
 }
 

@@ -1,0 +1,367 @@
+//! Std-only evaluation worker pool: spawn-once threads, channel fan-out,
+//! scoped (borrow-friendly) batch sharding.
+//!
+//! Large batches are embarrassingly parallel — every row's walk is
+//! independent — so the forest and frozen backends shard them across
+//! cores behind a size-crossover heuristic. The pool is deliberately
+//! minimal (no rayon offline): `N - 1` persistent worker threads drain a
+//! shared channel, and [`WorkerPool::run_scoped`] executes a set of
+//! borrowed closures with the caller's thread taking one shard, blocking
+//! until every shard finished. Blocking before returning is what makes
+//! lending non-`'static` closures to the long-lived workers sound: the
+//! borrowed batch provably outlives every job that references it.
+//!
+//! One process-wide pool ([`global`]) is shared by all backends; its
+//! size defaults to [`std::thread::available_parallelism`] and is
+//! configurable through `ServeConfig::eval_threads` ([`configure`]).
+
+use crate::batch::RowMatrix;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Queue depth of the job channel. Deep enough that `run_scoped` never
+/// blocks on submission in practice; if it ever fills, `send` blocking
+/// until a worker drains is still correct (workers never block on jobs).
+const QUEUE_DEPTH: usize = 4096;
+
+/// A borrowed shard job. `run_scoped` guarantees it completes before the
+/// call returns, so it may capture non-`'static` references.
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
+
+struct Task {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    latch: Arc<Latch>,
+}
+
+/// Completion latch: counts outstanding jobs, records panics.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Latch {
+        Latch {
+            state: Mutex::new((jobs, false)),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut s = self.state.lock().unwrap();
+        s.0 -= 1;
+        s.1 |= panicked;
+        if s.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every job finished; returns whether any panicked.
+    fn wait(&self) -> bool {
+        let mut s = self.state.lock().unwrap();
+        while s.0 > 0 {
+            s = self.cv.wait(s).unwrap();
+        }
+        s.1
+    }
+}
+
+/// A pool of spawn-once worker threads fed over one shared channel.
+pub struct WorkerPool {
+    tx: Option<SyncSender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads (0 = a pool that runs everything inline).
+    pub fn new(workers: usize) -> WorkerPool {
+        let (tx, rx): (SyncSender<Task>, Receiver<Task>) = mpsc::sync_channel(QUEUE_DEPTH);
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let rx = rx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("eval-worker-{w}"))
+                    .spawn(move || loop {
+                        // Holding the lock across `recv` is the classic
+                        // shared-receiver idiom: exactly one idle worker
+                        // parks in `recv`, the rest park on the mutex.
+                        let task = rx.lock().unwrap().recv();
+                        match task {
+                            Ok(Task { job, latch }) => {
+                                let r = catch_unwind(AssertUnwindSafe(job));
+                                latch.done(r.is_err());
+                            }
+                            Err(_) => return, // pool dropped
+                        }
+                    })
+                    .expect("failed to spawn eval worker"),
+            );
+        }
+        WorkerPool {
+            tx: Some(tx),
+            handles,
+        }
+    }
+
+    /// Number of worker threads (total parallelism is `workers() + 1`:
+    /// the calling thread always takes a shard).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run every job to completion, fanning all but one out to the
+    /// workers and executing the remaining one on the calling thread.
+    /// Panics (after all jobs finished) if any job panicked.
+    pub fn run_scoped(&self, mut jobs: Vec<ScopedJob<'_>>) {
+        let Some(inline) = jobs.pop() else { return };
+        if self.workers() == 0 || jobs.is_empty() {
+            inline();
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let latch = Arc::new(Latch::new(jobs.len()));
+        let tx = self.tx.as_ref().expect("pool channel alive while borrowed");
+        for job in jobs {
+            // SAFETY: only the lifetime is erased. `latch.wait()` below
+            // blocks until the job has run (or the send failed and it ran
+            // inline), so everything the job borrows outlives it.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            if let Err(mpsc::SendError(task)) = tx.send(Task {
+                job,
+                latch: latch.clone(),
+            }) {
+                (task.job)();
+                task.latch.done(false);
+            }
+        }
+        let inline_result = catch_unwind(AssertUnwindSafe(inline));
+        let workers_panicked = latch.wait();
+        if let Err(p) = inline_result {
+            resume_unwind(p);
+        }
+        if workers_panicked {
+            panic!("worker-pool shard panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // disconnect: workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Requested global parallelism (0 = auto). Read once when the global
+/// pool is first built.
+static REQUESTED: AtomicUsize = AtomicUsize::new(0);
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Parallelism the platform reports (≥ 1).
+pub fn default_parallelism() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Hard ceiling on configurable parallelism — a defence against wrapped
+/// or absurd requests reaching `WorkerPool::new` (ServeConfig::validate
+/// rejects them with a clean error first).
+const MAX_EVAL_THREADS: usize = 1024;
+
+/// Set the global pool's total evaluation parallelism (`0` = auto =
+/// [`default_parallelism`]) and build it. First effective call wins —
+/// the pool spawns once; later calls return the actual size. Called by
+/// server startup from `ServeConfig::eval_threads`.
+pub fn configure(requested: usize) -> usize {
+    if requested != 0 && GLOBAL.get().is_none() {
+        REQUESTED.store(requested.min(MAX_EVAL_THREADS), Ordering::Relaxed);
+    }
+    eval_threads()
+}
+
+/// The process-wide evaluation pool (built on first use).
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| {
+        let total = match REQUESTED.load(Ordering::Relaxed) {
+            0 => default_parallelism(),
+            n => n,
+        };
+        WorkerPool::new(total.saturating_sub(1))
+    })
+}
+
+/// Total evaluation parallelism of the global pool (workers + caller).
+pub fn eval_threads() -> usize {
+    global().workers() + 1
+}
+
+/// How many shards to cut a batch of `rows` into: at most one per
+/// evaluation thread, and never so many that a shard drops below
+/// `min_per_shard` rows (fan-out overhead would eat the win).
+pub fn shard_count(rows: usize, min_per_shard: usize) -> usize {
+    eval_threads().min(rows / min_per_shard.max(1)).max(1)
+}
+
+/// Shard a batch across the global pool: cut `rows` and its parallel
+/// output slice into contiguous per-shard chunks (disjoint output ranges
+/// ⇒ results bit-identical to the serial order at any thread count), run
+/// `body(shard, out_chunk)` for each with the calling thread taking one,
+/// and block until all finish. Returns `false` without touching `out`
+/// when the batch is too small to shard — callers then take their serial
+/// path. This is the one sharding scaffold every batch backend shares.
+pub fn run_sharded<'a, F>(
+    rows: RowMatrix<'a>,
+    out: &mut [u32],
+    min_per_shard: usize,
+    body: F,
+) -> bool
+where
+    F: Fn(RowMatrix<'a>, &mut [u32]) + Send + Sync,
+{
+    let shards = shard_count(rows.n_rows(), min_per_shard);
+    if shards <= 1 {
+        return false;
+    }
+    let chunk = rows.n_rows().div_ceil(shards);
+    let body = &body;
+    let jobs: Vec<ScopedJob<'_>> = out
+        .chunks_mut(chunk)
+        .enumerate()
+        .map(|(i, out_chunk)| {
+            let shard = rows.slice(i * chunk, out_chunk.len());
+            let job: ScopedJob<'_> = Box::new(move || body(shard, out_chunk));
+            job
+        })
+        .collect();
+    global().run_scoped(jobs);
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn shards_run_and_results_land() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        let mut out = vec![0u64; 16];
+        {
+            let jobs: Vec<ScopedJob<'_>> = out
+                .chunks_mut(4)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    let job: ScopedJob<'_> = Box::new(move || {
+                        for (k, slot) in chunk.iter_mut().enumerate() {
+                            *slot = (i * 4 + k) as u64 * 2;
+                        }
+                    });
+                    job
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        let want: Vec<u64> = (0..16).map(|v| v * 2).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let hits = AtomicU64::new(0);
+        let jobs: Vec<ScopedJob<'_>> = (0..5)
+            .map(|_| {
+                let job: ScopedJob<'_> = Box::new(|| {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                });
+                job
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        pool.run_scoped(Vec::new()); // empty job list is a no-op
+    }
+
+    #[test]
+    fn worker_panic_propagates_after_all_shards_finish() {
+        let pool = WorkerPool::new(2);
+        let finished = Arc::new(AtomicU64::new(0));
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let f1 = finished.clone();
+            let f2 = finished.clone();
+            let jobs: Vec<ScopedJob<'_>> = vec![
+                Box::new(|| panic!("shard boom")),
+                Box::new(move || {
+                    f1.fetch_add(1, Ordering::Relaxed);
+                }),
+                Box::new(move || {
+                    f2.fetch_add(1, Ordering::Relaxed);
+                }),
+            ];
+            pool.run_scoped(jobs);
+        }));
+        assert!(result.is_err(), "panic must propagate to the caller");
+        assert_eq!(finished.load(Ordering::Relaxed), 2, "other shards still ran");
+        // the pool survives a panicked job
+        let ok = AtomicU64::new(0);
+        let jobs: Vec<ScopedJob<'_>> = vec![
+            Box::new(|| {
+                ok.fetch_add(1, Ordering::Relaxed);
+            }),
+            Box::new(|| {
+                ok.fetch_add(1, Ordering::Relaxed);
+            }),
+        ];
+        pool.run_scoped(jobs);
+        assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn run_sharded_covers_every_row_or_declines() {
+        let cells: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let rows = RowMatrix::new(&cells, 1).unwrap();
+        let mut out = vec![0u32; 4096];
+        let did = run_sharded(rows, &mut out, 64, |shard, out_chunk| {
+            for (slot, row) in out_chunk.iter_mut().zip(shard.iter()) {
+                *slot = row[0] as u32 + 1;
+            }
+        });
+        if eval_threads() > 1 {
+            assert!(did, "4096 rows must shard on a multicore host");
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, i as u32 + 1, "row {i}");
+            }
+        } else {
+            assert!(!did);
+        }
+        // too small to shard: declines and leaves the output untouched
+        let mut small = vec![9u32; 4];
+        assert!(!run_sharded(rows.slice(0, 4), &mut small, 64, |_, _| {}));
+        assert_eq!(small, vec![9; 4]);
+    }
+
+    #[test]
+    fn global_pool_and_shard_heuristic() {
+        assert!(eval_threads() >= 1);
+        assert_eq!(shard_count(0, 256), 1);
+        assert_eq!(shard_count(255, 256), 1);
+        let k = shard_count(1 << 20, 256);
+        assert!((1..=eval_threads()).contains(&k));
+        if eval_threads() > 1 {
+            assert!(k > 1, "a million rows must shard on a multicore host");
+        }
+        // configure after the pool exists is a no-op report
+        assert_eq!(configure(0), eval_threads());
+    }
+}

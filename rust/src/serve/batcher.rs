@@ -7,7 +7,7 @@
 //! replies travel back through per-job channels.
 
 use crate::error::{Error, Result};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -65,6 +65,24 @@ impl<J: Send + 'static> Batcher<J> {
                     let mut batch = vec![first];
                     let deadline = Instant::now() + cfg.max_wait;
                     while batch.len() < cfg.max_batch {
+                        // Under load the queue already holds the next
+                        // jobs: drain them without a timed wait (one
+                        // timeout syscall per queued job adds up).
+                        match rx.try_recv() {
+                            Ok(Msg::Job(j)) => {
+                                batch.push(j);
+                                continue;
+                            }
+                            Ok(Msg::Shutdown) => {
+                                process(batch);
+                                return;
+                            }
+                            Err(TryRecvError::Empty) => {}
+                            Err(TryRecvError::Disconnected) => {
+                                process(batch);
+                                return;
+                            }
+                        }
                         let now = Instant::now();
                         if now >= deadline {
                             break;
@@ -191,6 +209,33 @@ mod tests {
         let batches = seen.lock().unwrap();
         let flat: Vec<u32> = batches.iter().flatten().copied().collect();
         assert_eq!(flat, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn queued_jobs_drain_without_waiting_for_the_deadline() {
+        // A pre-filled queue must form a full batch immediately — the
+        // drain loop may not stall on, drop, or duplicate queued jobs.
+        let (b, seen) = collect_batches(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_secs(30), // deadline must never matter
+            queue_cap: 64,
+        });
+        for i in 0..16 {
+            b.submit(i).unwrap();
+        }
+        let t0 = Instant::now();
+        while seen.lock().unwrap().iter().map(|v| v.len()).sum::<usize>() < 16 {
+            assert!(
+                t0.elapsed() < Duration::from_secs(5),
+                "queued jobs were not drained promptly"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        b.shutdown();
+        let batches = seen.lock().unwrap();
+        let flat: Vec<u32> = batches.iter().flatten().copied().collect();
+        assert_eq!(flat, (0..16).collect::<Vec<_>>());
+        assert_eq!(batches[0].len(), 8, "first batch should fill from the queue");
     }
 
     #[test]

@@ -33,6 +33,10 @@ pub struct ServeConfig {
     pub reply_timeout_ms: u64,
     /// HTTP worker threads.
     pub http_workers: usize,
+    /// Evaluation parallelism for sharded batch classification (`0` =
+    /// auto = [`std::thread::available_parallelism`]). The process-wide
+    /// worker pool is sized once at startup.
+    pub eval_threads: usize,
     /// Artifacts directory (XLA path).
     pub artifacts_dir: String,
     /// Artifact variant to load.
@@ -55,6 +59,7 @@ impl Default for ServeConfig {
             batch_wait_ms: 2,
             reply_timeout_ms: 5_000,
             http_workers: 4,
+            eval_threads: 0,
             artifacts_dir: "artifacts".into(),
             variant: "base".into(),
             enable_xla: true,
@@ -99,6 +104,9 @@ impl ServeConfig {
         if let Some(n) = v.get_i64("http_workers") {
             cfg.http_workers = n as usize;
         }
+        if let Some(n) = v.get_i64("eval_threads") {
+            cfg.eval_threads = n as usize;
+        }
         if let Some(s) = v.get_str("artifacts_dir") {
             cfg.artifacts_dir = s.to_string();
         }
@@ -132,6 +140,13 @@ impl ServeConfig {
         if self.reply_timeout_ms == 0 {
             return Err(Error::invalid("reply_timeout_ms must be positive"));
         }
+        // Negative JSON values wrap to huge usizes; either way a thread
+        // count past this bound is a misconfiguration, not a pool size.
+        if self.eval_threads > 1024 {
+            return Err(Error::invalid(
+                "eval_threads must be at most 1024 (0 = all cores)",
+            ));
+        }
         Ok(())
     }
 
@@ -149,6 +164,7 @@ impl ServeConfig {
             ("batch_wait_ms", json::num(self.batch_wait_ms as f64)),
             ("reply_timeout_ms", json::num(self.reply_timeout_ms as f64)),
             ("http_workers", json::num(self.http_workers as f64)),
+            ("eval_threads", json::num(self.eval_threads as f64)),
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
             ("variant", json::s(self.variant.clone())),
             ("enable_xla", Json::Bool(self.enable_xla)),
@@ -173,6 +189,7 @@ mod tests {
             enable_xla: false,
             reply_timeout_ms: 250,
             snapshot: "model.fdd".into(),
+            eval_threads: 6,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -181,6 +198,7 @@ mod tests {
         assert!(!back.enable_xla);
         assert_eq!(back.reply_timeout_ms, 250);
         assert_eq!(back.snapshot, "model.fdd");
+        assert_eq!(back.eval_threads, 6);
     }
 
     #[test]
@@ -194,6 +212,13 @@ mod tests {
     #[test]
     fn invalid_rejected() {
         assert!(ServeConfig::from_json(&Json::parse(r#"{"trees": 0}"#).unwrap()).is_err());
+        // negative wraps to a huge usize; both directions must be caught
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"eval_threads": -1}"#).unwrap()).is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"eval_threads": 500000}"#).unwrap()).is_err()
+        );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"reply_timeout_ms": 0}"#).unwrap()).is_err()
         );

@@ -10,6 +10,7 @@
 //! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?}`
 //! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?}`
 
+use crate::batch::RowMatrixBuf;
 use crate::error::{Error, Result};
 use crate::serve::router::Router;
 use crate::serve::{BackendKind, ClassifyRequest};
@@ -262,19 +263,39 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
 
 fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
     let v = parse_body(&req.body)?;
-    let rows: Vec<Vec<f32>> = v
+    let rows = v
         .get("rows")
         .and_then(Json::as_arr)
-        .ok_or_else(|| Error::Serve("missing 'rows' array".into()))?
-        .iter()
-        .map(parse_row)
-        .collect::<Result<_>>()?;
+        .ok_or_else(|| Error::Serve("missing 'rows' array".into()))?;
     if rows.is_empty() {
         return Err(Error::Serve("empty batch".into()));
     }
+    // Parse straight into one flat row-major buffer: the first row fixes
+    // the stride, every cell is appended in place — the request body is
+    // the only per-row representation that ever exists.
+    let first_len = rows[0].as_arr().map(|a| a.len()).unwrap_or(0);
+    if first_len == 0 {
+        return Err(Error::Serve("rows must be non-empty arrays of numbers".into()));
+    }
+    let mut batch = RowMatrixBuf::with_capacity(first_len, rows.len());
+    for row in rows {
+        let cells = row
+            .as_arr()
+            .ok_or_else(|| Error::Serve("rows must be arrays".into()))?;
+        for c in cells {
+            batch.push_cell(
+                c.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| Error::Serve("features must be numbers".into()))?,
+            );
+        }
+        batch
+            .end_row()
+            .map_err(|_| Error::Serve("rows must all have the same number of features".into()))?;
+    }
     let backend = parse_backend(&v)?;
     let model = v.get_str("model").map(String::from);
-    let (classes, version) = router.classify_batch(&rows, backend, model.as_deref())?;
+    let (classes, version) = router.classify_batch(batch.as_matrix(), backend, model.as_deref())?;
     Ok(json::obj(vec![
         (
             "classes",

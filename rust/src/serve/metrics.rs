@@ -18,14 +18,19 @@ pub struct Histogram {
 }
 
 impl Histogram {
-    /// Record one observation.
+    /// Record one duration observation.
     pub fn observe(&self, d: Duration) {
-        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
-        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.observe_value(d.as_micros().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Record one raw-valued observation (same log₂ buckets; used for
+    /// unit-less series like dispatched batch sizes).
+    pub fn observe_value(&self, v: u64) {
+        let idx = (64 - v.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.max_us.fetch_max(us, Ordering::Relaxed);
+        self.sum_us.fetch_add(v, Ordering::Relaxed);
+        self.max_us.fetch_max(v, Ordering::Relaxed);
     }
 
     /// Number of observations.
@@ -61,7 +66,7 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
-    /// JSON snapshot.
+    /// JSON snapshot with microsecond-suffixed keys (duration series).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
             ("count", json::num(self.count() as f64)),
@@ -70,6 +75,22 @@ impl Histogram {
             ("p99_us", json::num(self.quantile_us(0.99) as f64)),
             (
                 "max_us",
+                json::num(self.max_us.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// JSON snapshot with unit-neutral keys, for raw-valued series
+    /// recorded via [`observe_value`](Self::observe_value) (e.g. batch
+    /// sizes) — a `_us` suffix on row counts would misread as latency.
+    pub fn to_json_values(&self) -> Json {
+        json::obj(vec![
+            ("count", json::num(self.count() as f64)),
+            ("mean", json::num(self.mean_us())),
+            ("p50", json::num(self.quantile_us(0.5) as f64)),
+            ("p99", json::num(self.quantile_us(0.99) as f64)),
+            (
+                "max",
                 json::num(self.max_us.load(Ordering::Relaxed) as f64),
             ),
         ])
@@ -93,6 +114,14 @@ pub struct ServerMetrics {
     pub batches: AtomicU64,
     /// Total items across all dispatched batches.
     pub batched_items: AtomicU64,
+    /// Distribution of dispatched batch sizes (rows per batch; both the
+    /// dynamic batcher and the explicit batch endpoint record here).
+    pub batch_size: Histogram,
+    /// Per-batch evaluation time.
+    pub batch_eval_us: Histogram,
+    /// Configured evaluation parallelism (workers + caller; set by the
+    /// server at startup from `ServeConfig::eval_threads`).
+    pub eval_threads: AtomicU64,
 }
 
 impl Default for ServerMetrics {
@@ -107,6 +136,9 @@ impl Default for ServerMetrics {
             xla: Histogram::default(),
             batches: AtomicU64::new(0),
             batched_items: AtomicU64::new(0),
+            batch_size: Histogram::default(),
+            batch_eval_us: Histogram::default(),
+            eval_threads: AtomicU64::new(0),
         }
     }
 }
@@ -138,6 +170,12 @@ impl ServerMetrics {
     pub fn observe_batch(&self, n: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.batch_size.observe_value(n as u64);
+    }
+
+    /// Record the evaluation time of one dispatched batch.
+    pub fn observe_batch_eval(&self, d: Duration) {
+        self.batch_eval_us.observe(d);
     }
 
     /// Mean items per dispatched batch.
@@ -170,6 +208,12 @@ impl ServerMetrics {
                 }),
             ),
             ("mean_batch_size", json::num(self.mean_batch_size())),
+            ("batch_size", self.batch_size.to_json_values()),
+            ("batch_eval_us", self.batch_eval_us.to_json()),
+            (
+                "eval_threads",
+                json::num(self.eval_threads.load(Ordering::Relaxed) as f64),
+            ),
             (
                 "backends",
                 json::obj(vec![
@@ -215,6 +259,8 @@ mod tests {
         m.observe_error();
         m.observe_batch(16);
         m.observe_batch(8);
+        m.observe_batch_eval(Duration::from_micros(120));
+        m.eval_threads.store(4, Ordering::Relaxed);
         let j = m.to_json();
         assert_eq!(j.get_i64("requests"), Some(3));
         assert_eq!(j.get_i64("errors"), Some(1));
@@ -223,6 +269,23 @@ mod tests {
             Some(1)
         );
         assert_eq!(j.get("mean_batch_size").unwrap().as_f64(), Some(12.0));
+        let sizes = j.get("batch_size").unwrap();
+        assert_eq!(sizes.get_i64("count"), Some(2));
+        assert_eq!(sizes.get("mean").unwrap().as_f64(), Some(12.0));
+        assert!(sizes.get("mean_us").is_none(), "sizes are not latencies");
+        assert_eq!(j.get("batch_eval_us").unwrap().get_i64("count"), Some(1));
+        assert_eq!(j.get_i64("eval_threads"), Some(4));
+    }
+
+    #[test]
+    fn histogram_records_raw_values() {
+        let h = Histogram::default();
+        for n in [1u64, 8, 64, 1024] {
+            h.observe_value(n);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_us() - 274.25).abs() < 1e-9);
+        assert!(h.quantile_us(0.99) >= 1024);
     }
 
     #[test]

@@ -20,6 +20,12 @@
 //! The router never names a concrete evaluator type: backends whose
 //! [`CostModel`](crate::classifier::CostModel) prefers batching are
 //! coalesced through the batcher, everything else is served inline.
+//! Batches travel as one borrowed flat
+//! [`RowMatrix`](crate::batch::RowMatrix) end to end — the HTTP layer
+//! parses request rows straight into a
+//! [`RowMatrixBuf`](crate::batch::RowMatrixBuf), and the forest/frozen
+//! backends shard large batches across the process-wide evaluation pool
+//! (`ServeConfig::eval_threads`, surfaced in `/metrics`).
 //! Models are named and versioned; registering under an existing name
 //! hot-swaps atomically, and requests may select `model` and `backend`
 //! per call. All state is owned by Rust; Python exists only in the

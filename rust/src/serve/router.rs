@@ -13,6 +13,7 @@
 //! registry is visible to the very next request, while requests already
 //! dispatched finish against the version they resolved (RCU via `Arc`).
 
+use crate::batch::{RowMatrix, RowMatrixBuf};
 use crate::classifier::Classifier;
 use crate::engine::ModelRegistry;
 use crate::error::{Error, Result};
@@ -41,11 +42,12 @@ pub struct Router {
 }
 
 /// Batcher worker: groups a window's jobs per classifier instance
-/// (several models/versions may interleave) and runs one fused
-/// `classify_batch` per group.
+/// (several models/versions may interleave), packs each group's rows
+/// into one flat matrix, and runs one fused `classify_batch` per group.
 fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<BatchJob> {
     Batcher::start("router", cfg, move |jobs: Vec<BatchJob>| {
         metrics.observe_batch(jobs.len());
+        let eval_start = Instant::now();
         let mut jobs = jobs;
         while !jobs.is_empty() {
             let clf = jobs[0].0.clone();
@@ -53,13 +55,25 @@ fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<Bat
                 .into_iter()
                 .partition(|(c, _, _)| Arc::ptr_eq(c, &clf));
             jobs = rest;
-            let mut rows = Vec::with_capacity(group.len());
+            // Rows of one group share the model's arity (enforced by
+            // `check_row` before submission), so they pack into one flat
+            // matrix — a contiguous copy each, no per-row Vec downstream.
+            let mut rows = RowMatrixBuf::with_capacity(group[0].1.len(), group.len());
             let mut replies = Vec::with_capacity(group.len());
+            let mut pack_err = None;
             for (_, row, reply) in group {
-                rows.push(row); // moved out of the job, not cloned
+                if pack_err.is_none() {
+                    if let Err(e) = rows.push_row(&row) {
+                        pack_err = Some(e.to_string());
+                    }
+                }
                 replies.push(reply);
             }
-            match clf.classify_batch(&rows) {
+            let result = match pack_err {
+                Some(msg) => Err(Error::Serve(msg)),
+                None => clf.classify_batch(rows.as_matrix()),
+            };
+            match result {
                 Ok(classes) => {
                     for (reply, class) in replies.into_iter().zip(classes) {
                         let _ = reply.send(Ok(class));
@@ -73,6 +87,7 @@ fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<Bat
                 }
             }
         }
+        metrics.observe_batch_eval(eval_start.elapsed());
     })
 }
 
@@ -199,13 +214,14 @@ impl Router {
         ))
     }
 
-    /// Serve an explicit batch (bypasses the single-request batcher and
-    /// uses the backend's native batch path directly). Returns the classes
-    /// plus the model version that served them, so callers render labels
-    /// against the exact version that classified (not a later hot-swap).
+    /// Serve an explicit flat batch (bypasses the single-request batcher
+    /// and uses the backend's native batch path directly). Returns the
+    /// classes plus the model version that served them, so callers render
+    /// labels against the exact version that classified (not a later
+    /// hot-swap).
     pub fn classify_batch(
         &self,
-        rows: &[Vec<f32>],
+        rows: RowMatrix<'_>,
         backend: Option<BackendKind>,
         model: Option<&str>,
     ) -> Result<(Vec<u32>, Arc<crate::engine::ModelVersion>)> {
@@ -214,17 +230,15 @@ impl Router {
             let version = self.registry.get(model)?;
             let backend = self.pick_backend(&version, backend);
             let slot = version.slot(backend)?.clone();
-            for r in rows {
-                version.check_row(r)?;
-            }
-            if slot.batch_first {
-                self.metrics.observe_batch(rows.len());
-            }
+            version.check_matrix(rows)?;
             Ok((backend, slot.classifier.classify_batch(rows)?, version))
         })();
         match result {
             Ok((backend, out, version)) => {
-                self.metrics.observe(backend, start.elapsed());
+                let elapsed = start.elapsed();
+                self.metrics.observe(backend, elapsed);
+                self.metrics.observe_batch(rows.n_rows());
+                self.metrics.observe_batch_eval(elapsed);
                 Ok((out, version))
             }
             Err(e) => {
@@ -316,16 +330,25 @@ mod tests {
     #[test]
     fn batch_endpoint_native() {
         let (ds, r) = router();
-        let rows: Vec<Vec<f32>> = (0..30).map(|i| ds.row(i * 5).to_vec()).collect();
-        let (dd, version) = r
-            .classify_batch(&rows, Some(BackendKind::Dd), None)
-            .unwrap();
+        let mut buf = RowMatrixBuf::with_capacity(ds.n_features(), 30);
+        for i in 0..30 {
+            buf.push_row(ds.row(i * 5)).unwrap();
+        }
+        let rows = buf.as_matrix();
+        let (dd, version) = r.classify_batch(rows, Some(BackendKind::Dd), None).unwrap();
         let (rf, _) = r
-            .classify_batch(&rows, Some(BackendKind::Forest), None)
+            .classify_batch(rows, Some(BackendKind::Forest), None)
+            .unwrap();
+        let (frozen, _) = r
+            .classify_batch(rows, Some(BackendKind::Frozen), None)
             .unwrap();
         assert_eq!(dd, rf);
+        assert_eq!(dd, frozen);
         assert_eq!(dd.len(), 30);
         assert_eq!(version.id.to_string(), "default@v1");
+        // batch sizes and eval time land in the histograms
+        assert!(r.metrics().batch_size.count() >= 3);
+        assert!(r.metrics().batch_eval_us.count() >= 3);
     }
 
     #[test]

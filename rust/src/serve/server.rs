@@ -35,6 +35,10 @@ pub struct ServerHandle {
 /// dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
+    // Size the shared evaluation pool before any batch traffic exists
+    // (spawn-once; the first effective configuration wins process-wide).
+    let eval_threads = crate::runtime::pool::configure(cfg.eval_threads);
+    crate::log_info!("serve: evaluation parallelism {eval_threads}");
     let engine = if !cfg.snapshot.is_empty() {
         let engine = Engine::new();
         let id = engine.register_snapshot("default", &cfg.snapshot)?;
@@ -69,6 +73,9 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
         );
     }
     let metrics = Arc::new(ServerMetrics::default());
+    metrics
+        .eval_threads
+        .store(eval_threads as u64, std::sync::atomic::Ordering::Relaxed);
     let router = Arc::new(Router::new(
         engine.registry().clone(),
         metrics,

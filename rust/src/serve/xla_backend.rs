@@ -10,6 +10,7 @@
 //! the router's dynamic batcher coalesces single-request traffic into
 //! full executions.
 
+use crate::batch::{RowMatrix, RowMatrixBuf};
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::error::{Error, Result};
 use crate::forest::RandomForest;
@@ -20,7 +21,9 @@ use std::thread::JoinHandle;
 type BatchReply = Result<Vec<u32>>;
 
 enum Msg {
-    Batch(Vec<Vec<f32>>, Sender<BatchReply>),
+    /// One artifact-sized chunk, shipped to the engine thread as an owned
+    /// flat matrix (a single buffer copy, never per-row `Vec`s).
+    Batch(RowMatrixBuf, Sender<BatchReply>),
     Shutdown,
 }
 
@@ -72,7 +75,7 @@ impl XlaBackend {
                     match msg {
                         Msg::Shutdown => return,
                         Msg::Batch(rows, reply) => {
-                            let out = run_batch(&engine, &packed, n_features, rows);
+                            let out = run_batch(&engine, &packed, n_features, &rows);
                             let _ = reply.send(out);
                         }
                     }
@@ -93,7 +96,7 @@ impl XlaBackend {
     }
 
     /// Blocking RPC of one artifact-sized chunk to the engine thread.
-    fn submit_chunk(&self, rows: Vec<Vec<f32>>) -> Result<Vec<u32>> {
+    fn submit_chunk(&self, rows: RowMatrixBuf) -> Result<Vec<u32>> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .send(Msg::Batch(rows, reply_tx))
@@ -133,21 +136,28 @@ impl Classifier for XlaBackend {
     }
 
     fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
-        let out = self.submit_chunk(vec![x.to_vec()])?;
+        let mut one = RowMatrixBuf::with_capacity(x.len(), 1);
+        one.push_row(x)?;
+        let out = self.submit_chunk(one)?;
         out.first()
             .map(|&c| (c, None))
             .ok_or_else(|| Error::Serve("xla engine returned an empty batch".into()))
     }
 
     /// Native batch path: oversized batches are split into artifact-sized
-    /// chunks, each one PJRT execution.
-    fn classify_batch(&self, rows: &[Vec<f32>]) -> Result<Vec<u32>> {
+    /// chunks, each one PJRT execution (the chunk copy is one contiguous
+    /// `memcpy` into the owned buffer that crosses the engine thread).
+    fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
         if rows.is_empty() {
             return Ok(Vec::new());
         }
-        let mut out = Vec::with_capacity(rows.len());
-        for chunk in rows.chunks(self.meta.batch) {
-            out.extend(self.submit_chunk(chunk.to_vec())?);
+        let mut out = Vec::with_capacity(rows.n_rows());
+        let mut start = 0usize;
+        while start < rows.n_rows() {
+            let len = (rows.n_rows() - start).min(self.meta.batch);
+            let chunk = RowMatrixBuf::from_matrix(rows.slice(start, len));
+            out.extend(self.submit_chunk(chunk)?);
+            start += len;
         }
         Ok(out)
     }
@@ -166,17 +176,16 @@ fn run_batch(
     engine: &XlaEngine,
     packed: &PackedForest,
     n_features: usize,
-    rows: Vec<Vec<f32>>,
+    rows: &RowMatrixBuf,
 ) -> Result<Vec<u32>> {
-    for r in &rows {
-        if r.len() != n_features {
-            return Err(Error::SchemaMismatch(format!(
-                "row has {} features, model expects {n_features}",
-                r.len()
-            )));
-        }
+    let m = rows.as_matrix();
+    if m.n_features() != n_features {
+        return Err(Error::SchemaMismatch(format!(
+            "rows have {} features, model expects {n_features}",
+            m.n_features()
+        )));
     }
-    engine.classify_rows(&rows, packed)
+    engine.classify_rows(m, packed)
 }
 
 #[cfg(test)]
@@ -222,8 +231,12 @@ mod tests {
         assert_eq!(info.n_features, 4);
         assert_eq!(info.n_classes, 3);
         assert!(info.cost.preferred_batch > 1);
-        let rows: Vec<Vec<f32>> = (0..40).map(|i| ds.row(i * 3).to_vec()).collect();
-        let got = backend.classify_batch(&rows).unwrap();
+        let mut buf = crate::batch::RowMatrixBuf::with_capacity(ds.n_features(), 40);
+        for i in 0..40 {
+            buf.push_row(ds.row(i * 3)).unwrap();
+        }
+        let rows = buf.as_matrix();
+        let got = backend.classify_batch(rows).unwrap();
         for (row, cls) in rows.iter().zip(&got) {
             assert_eq!(*cls, forest.predict(row));
         }

@@ -1,0 +1,76 @@
+//! The frozen sweep's zero-allocation guarantee, enforced with a
+//! counting `GlobalAlloc`: once the [`BatchScratch`] and the output
+//! vector are warm, `classify_batch_into` must not touch the allocator —
+//! the steady-state serving loop runs entirely on reused buffers.
+//!
+//! This file deliberately holds a single `#[test]` so no concurrent test
+//! thread can allocate inside the measurement window.
+
+use forest_add::compile::{CompileOptions, ForestCompiler};
+use forest_add::data::datasets;
+use forest_add::forest::ForestLearner;
+use forest_add::frozen::BatchScratch;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn warm_frozen_sweep_allocates_nothing() {
+    let data = datasets::load("iris").unwrap();
+    let forest = ForestLearner::default().trees(30).seed(5).fit(&data);
+    let dd = ForestCompiler::new(CompileOptions::default())
+        .compile(&forest)
+        .unwrap();
+    let frozen = dd.freeze();
+
+    // Tile the dataset far past the batch-vs-walk crossover so the
+    // counting-scatter sweep (not the per-row fallback) runs.
+    let tiled = forest_add::bench_support::tile_rows(&data, 2048, 7);
+    let rows = tiled.as_matrix();
+
+    let mut scratch = BatchScratch::new();
+    let mut out = Vec::new();
+    // Warm-up: sizes the scratch node/slot arrays and the output vector.
+    frozen.classify_batch_into(rows, &mut scratch, &mut out);
+    let want = out.clone();
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..10 {
+        frozen.classify_batch_into(rows, &mut scratch, &mut out);
+        assert_eq!(out, want, "warm sweeps must stay bit-identical");
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "the warm frozen sweep must not allocate ({} allocations in 10 batches)",
+        after - before
+    );
+}

@@ -101,7 +101,7 @@ fn prop_backends_agree_through_classifier_trait() {
             let data = blobs(&spec).map_err(|e| e.to_string())?;
             let trees = g.usize(3, 14);
             let (registry, names) = registry_for(&data, trees, spec.seed ^ 0xA5)?;
-            let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+            let rows = data.matrix();
 
             // reference labels from the forest baseline, via the trait
             let (_, baseline) = registry
@@ -109,7 +109,7 @@ fn prop_backends_agree_through_classifier_trait() {
                 .map_err(|e| e.to_string())?;
             let reference = baseline
                 .classifier
-                .classify_batch(&rows)
+                .classify_batch(rows)
                 .map_err(|e| e.to_string())?;
 
             for name in &names {
@@ -117,7 +117,7 @@ fn prop_backends_agree_through_classifier_trait() {
                     .resolve(Some(name.as_str()), None)
                     .map_err(|e| e.to_string())?;
                 let c = slot.classifier.as_ref();
-                let batch = c.classify_batch(&rows).map_err(|e| e.to_string())?;
+                let batch = c.classify_batch(rows).map_err(|e| e.to_string())?;
                 if batch != reference {
                     return Err(format!(
                         "model '{name}' diverges from the forest baseline ({} trees, seed {})",
@@ -170,7 +170,7 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
     for name in datasets::names() {
         let data = datasets::load(name).unwrap();
         let forest = ForestLearner::default().trees(8).seed(13).fit(&data);
-        let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+        let rows = data.matrix();
         for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
             let tag = format!("{name}/{abstraction:?}");
             let dd = ForestCompiler::new(CompileOptions {
@@ -197,9 +197,9 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
 
             // Batch paths (trait default for the live DD, node-array pass
             // for the frozen forms).
-            let dd_batch = Classifier::classify_batch(&dd, &rows).unwrap();
-            let frozen_batch = frozen.classify_batch(&rows);
-            let snapshot_batch = from_snapshot.classify_batch(&rows);
+            let dd_batch = Classifier::classify_batch(&dd, rows).unwrap();
+            let frozen_batch = frozen.classify_batch(rows);
+            let snapshot_batch = from_snapshot.classify_batch(rows);
 
             for (i, x) in rows.iter().enumerate() {
                 let want = forest.predict(x);
@@ -270,20 +270,51 @@ fn xla_backend_conforms_when_artifacts_exist() {
         )
         .unwrap();
     let version = registry.get(None).unwrap();
-    let rows: Vec<Vec<f32>> = (0..data.n_rows()).map(|i| data.row(i).to_vec()).collect();
+    let rows = data.matrix();
     let reference = version
         .slot(BackendKind::Forest)
         .unwrap()
         .classifier
-        .classify_batch(&rows)
+        .classify_batch(rows)
         .unwrap();
     for kind in [BackendKind::Dd, BackendKind::Xla] {
         let got = version
             .slot(kind)
             .unwrap()
             .classifier
-            .classify_batch(&rows)
+            .classify_batch(rows)
             .unwrap();
         assert_eq!(got, reference, "backend {}", kind.name());
+    }
+}
+
+/// Sharded-parallel batch evaluation must be bit-identical to the
+/// single-threaded per-row path for every backend × abstraction ×
+/// dataset. Batches are tiled far past both the frozen sweep's
+/// batch-vs-walk threshold and the multi-core sharding crossover, so the
+/// parallel code genuinely runs (on multi-core hosts) and its contiguous
+/// shard/disjoint-output scheme is pinned against the serial truth.
+#[test]
+fn sharded_batches_are_bit_identical_to_single_thread() {
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        let (registry, names) = registry_for(&data, 6, 29).unwrap();
+        // Tile to 2048 rows (≥ every backend's parallel crossover).
+        let tiled = forest_add::bench_support::tile_rows(&data, 2048, 13);
+        let rows = tiled.as_matrix();
+        for model in &names {
+            let (_, slot) = registry.resolve(Some(model.as_str()), None).unwrap();
+            let c = slot.classifier.as_ref();
+            let batch = c.classify_batch(rows).unwrap();
+            assert_eq!(batch.len(), rows.n_rows());
+            // serial truth: one classify per row through the same trait
+            for (i, row) in rows.iter().enumerate() {
+                assert_eq!(
+                    batch[i],
+                    c.classify(row).unwrap(),
+                    "{name}/{model} row {i}: sharded batch diverged"
+                );
+            }
+        }
     }
 }

@@ -4,6 +4,7 @@
 //! Requires `make artifacts` (skips with a notice otherwise, but the
 //! Makefile `test` target always builds artifacts first).
 
+use forest_add::batch::RowMatrixBuf;
 use forest_add::data::datasets;
 use forest_add::forest::ForestLearner;
 use forest_add::runtime::{PackedForest, VariantMeta, XlaEngine};
@@ -46,8 +47,11 @@ fn small_variant_matches_native_forest_everywhere() {
     let m = engine.meta.clone();
     let mut checked = 0usize;
     for chunk in (0..data.n_rows()).collect::<Vec<_>>().chunks(m.batch) {
-        let rows: Vec<Vec<f32>> = chunk.iter().map(|&i| data.row(i).to_vec()).collect();
-        let preds = engine.classify_rows(&rows, &packed).unwrap();
+        let mut rows = RowMatrixBuf::with_capacity(data.n_features(), chunk.len());
+        for &i in chunk {
+            rows.push_row(data.row(i)).unwrap();
+        }
+        let preds = engine.classify_rows(rows.as_matrix(), &packed).unwrap();
         for (&i, &p) in chunk.iter().zip(&preds) {
             assert_eq!(p, forest.predict(data.row(i)), "row {i}");
             checked += 1;
@@ -110,11 +114,12 @@ fn base_variant_with_replication() {
     let engine = XlaEngine::load(dir, "base").unwrap();
     let packed = PackedForest::pack(&forest, &engine.meta).unwrap();
     assert_eq!(packed.replication, 4);
-    let rows: Vec<Vec<f32>> = (0..engine.meta.batch)
-        .map(|i| data.row(i * 2).to_vec())
-        .collect();
-    let preds = engine.classify_rows(&rows, &packed).unwrap();
-    for (row, &p) in rows.iter().zip(&preds) {
+    let mut rows = RowMatrixBuf::with_capacity(data.n_features(), engine.meta.batch);
+    for i in 0..engine.meta.batch {
+        rows.push_row(data.row(i * 2)).unwrap();
+    }
+    let preds = engine.classify_rows(rows.as_matrix(), &packed).unwrap();
+    for (row, &p) in rows.as_matrix().iter().zip(&preds) {
         assert_eq!(p, forest.predict(row));
     }
 }
@@ -133,11 +138,13 @@ fn engine_rejects_shape_violations() {
     // wrong flat input size
     assert!(engine.run(&[0.0; 7], &packed).is_err());
     // too many rows
-    let rows = vec![vec![0f32; 4]; engine.meta.batch + 1];
-    assert!(engine.classify_rows(&rows, &packed).is_err());
-    // row wider than the artifact
-    let rows = vec![vec![0f32; engine.meta.features + 1]];
-    assert!(engine.classify_rows(&rows, &packed).is_err());
+    let cells = vec![0f32; 4 * (engine.meta.batch + 1)];
+    let rows = forest_add::batch::RowMatrix::new(&cells, 4).unwrap();
+    assert!(engine.classify_rows(rows, &packed).is_err());
+    // rows wider than the artifact
+    let cells = vec![0f32; engine.meta.features + 1];
+    let rows = forest_add::batch::RowMatrix::new(&cells, engine.meta.features + 1).unwrap();
+    assert!(engine.classify_rows(rows, &packed).is_err());
     // unknown variant
     assert!(XlaEngine::load(dir, "huge").is_err());
 }
