@@ -96,13 +96,32 @@ fn main() {
     });
     add_row(&mut t, "FrozenDD sweep row (4096 rows, sharded)", ns / 4096.0);
 
-    // snapshot load (the replica-startup primitive)
+    // the cache-tiled chain sweep under a minimal budget (the shape big
+    // diagrams take; on this small diagram it measures tiling overhead)
+    let ns = measure_ns(window, || {
+        frozen.classify_batch_into_tiled(big, &mut scratch, &mut out, 1);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD tiled sweep row (4096 rows, min tiles)", ns / 4096.0);
+
+    // snapshot load (the replica-startup primitive): in-memory parse vs
+    // the mmap boot path replicas take
     let snapshot_bytes = frozen.to_bytes();
     let ns = measure_ns(window, || {
         let dd = forest_add::frozen::FrozenDD::from_bytes(&snapshot_bytes).unwrap();
         std::hint::black_box(dd.size().total());
     });
-    add_row(&mut t, "FrozenDD snapshot load (fdd-v1)", ns);
+    add_row(&mut t, "FrozenDD snapshot load (fdd-v2, from_bytes)", ns);
+
+    let snap_path = std::env::temp_dir().join(format!("microbench-{}.fdd", std::process::id()));
+    let snap_path = snap_path.to_str().unwrap().to_string();
+    frozen.save(&snap_path).unwrap();
+    let ns = measure_ns(window, || {
+        let dd = forest_add::frozen::FrozenDD::load(&snap_path).unwrap();
+        std::hint::black_box(dd.size().total());
+    });
+    add_row(&mut t, "FrozenDD snapshot boot (fdd-v2, mmap)", ns);
+    let _ = std::fs::remove_file(&snap_path);
 
     // forest walk baseline
     let mut i = 0usize;

@@ -135,7 +135,9 @@ fn main() {
             let buf = forest_add::bench_support::tile_rows(&data, batch, 13);
             let rows = buf.as_matrix();
             let ns = measure_ns(window, || {
-                let (out, _) = router.classify_batch(rows, Some(backend), None).unwrap();
+                let (out, _, _) = router
+                    .classify_batch(rows, Some(backend), None, false)
+                    .unwrap();
                 std::hint::black_box(out.len());
             });
             t.row(vec![

@@ -131,6 +131,33 @@ pub trait Classifier: Send + Sync {
         rows.iter().map(|r| self.classify(r)).collect()
     }
 
+    /// Classify a batch reporting the §6 step count per row, so cost
+    /// metering survives the batch path. Returns `None` steps when the
+    /// backend cannot meter (decided on the first row; its classes then
+    /// come from the native batch path). This default walks rows
+    /// serially — metering is a diagnostic surface, and only backends
+    /// whose batch pass can record steps natively (the frozen sweep)
+    /// override it to keep sharding; unmetered requests should use
+    /// [`Classifier::classify_batch`].
+    fn classify_batch_with_steps(&self, rows: RowMatrix<'_>) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+        if rows.is_empty() {
+            return Ok((Vec::new(), Some(Vec::new())));
+        }
+        // The cost model already says whether this backend meters; an
+        // unmetered one keeps its native batch path at zero extra cost.
+        if self.info().cost.max_steps.is_none() {
+            return Ok((self.classify_batch(rows)?, None));
+        }
+        let mut classes = Vec::with_capacity(rows.n_rows());
+        let mut steps = Vec::with_capacity(rows.n_rows());
+        for r in rows.iter() {
+            let (c, s) = self.classify_with_steps(r)?;
+            classes.push(c);
+            steps.push(s.unwrap_or(0) as u32);
+        }
+        Ok((classes, Some(steps)))
+    }
+
     /// Concrete-type escape hatch for tooling that needs more than the
     /// classification contract (e.g. exporting a registered frozen model
     /// as a snapshot file). The default opts out; backends that want to be
@@ -233,6 +260,46 @@ mod tests {
             .unwrap();
         assert_eq!(batch, vec![1, 1, 1]);
         assert!(c.classify_batch(RowMatrix::empty()).unwrap().is_empty());
+        // the default metered batch derives per-row steps
+        let (classes, steps) = c
+            .classify_batch_with_steps(RowMatrix::new(&cells, 2).unwrap())
+            .unwrap();
+        assert_eq!(classes, vec![1, 1, 1]);
+        assert_eq!(steps, Some(vec![0, 0, 0]));
+    }
+
+    /// A classifier that cannot meter steps (XLA-shaped).
+    struct Unmetered;
+
+    impl Classifier for Unmetered {
+        fn info(&self) -> ClassifierInfo {
+            ClassifierInfo {
+                backend: BackendKind::Xla,
+                label: "unmetered".into(),
+                n_features: 2,
+                n_classes: 2,
+                size_nodes: 0,
+                cost: CostModel {
+                    max_steps: None,
+                    aggregation_reads: 0,
+                    preferred_batch: 8,
+                },
+            }
+        }
+
+        fn classify_with_steps(&self, _x: &[f32]) -> Result<(u32, Option<usize>)> {
+            Ok((0, None))
+        }
+    }
+
+    #[test]
+    fn unmetered_backends_report_no_batch_steps() {
+        let cells = [0.0f32, 0.0, 1.0, 1.0];
+        let (classes, steps) = Unmetered
+            .classify_batch_with_steps(RowMatrix::new(&cells, 2).unwrap())
+            .unwrap();
+        assert_eq!(classes, vec![0, 0]);
+        assert_eq!(steps, None);
     }
 
 }

@@ -5,8 +5,8 @@
 //! - `train`    — train a Random Forest and save it as JSON
 //! - `compile`  — aggregate a forest into a decision diagram (+ DOT export,
 //!   `--format fdd` for a binary snapshot)
-//! - `freeze`   — render a compiled diagram into an `fdd-v1` snapshot
-//! - `inspect`  — show an `fdd-v1` snapshot's header, sections and stats
+//! - `freeze`   — render a compiled diagram into an `fdd-v2` snapshot
+//! - `inspect`  — show an `fdd` snapshot's header, sections and stats
 //! - `eval`     — steps/size/accuracy comparison table for one dataset
 //! - `bench`    — deterministic batch-throughput baseline (rows/sec per
 //!   backend × dataset × batch size, written to `BENCH_batch.json`)
@@ -47,8 +47,8 @@ COMMANDS:
   datasets   List built-in datasets
   train      Train a Random Forest and save it (JSON)
   compile    Compile a forest into a decision diagram
-  freeze     Freeze a compiled diagram into an fdd-v1 binary snapshot
-  inspect    Inspect an fdd-v1 snapshot (header, sections, stats)
+  freeze     Freeze a compiled diagram into an fdd-v2 binary snapshot
+  inspect    Inspect an fdd snapshot (header, sections, stats)
   eval       Compare RF vs DD steps/size/accuracy on a dataset
   bench      Batch-throughput baseline (writes BENCH_batch.json)
   serve      Start the HTTP serving coordinator
@@ -261,7 +261,7 @@ fn cmd_compile(args: &[String]) -> Result<()> {
 fn freeze_spec() -> ArgSpec {
     ArgSpec::new(
         "forest-add freeze",
-        "Freeze a compiled diagram into an fdd-v1 binary snapshot",
+        "Freeze a compiled diagram into an fdd-v2 binary snapshot",
     )
     .opt("dd", "", "compiled diagram JSON (from `compile --out`)")
     .opt("model", "", "trained forest JSON (compiled first)")
@@ -306,7 +306,7 @@ fn cmd_freeze(args: &[String]) -> Result<()> {
 fn inspect_spec() -> ArgSpec {
     ArgSpec::new(
         "forest-add inspect",
-        "Inspect an fdd-v1 snapshot (header, sections, stats)",
+        "Inspect an fdd snapshot (v1 or v2) (header, sections, stats)",
     )
     .req("snapshot", "snapshot path (from `freeze`)")
 }
@@ -316,11 +316,8 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     let bytes = std::fs::read(a.str("snapshot"))?;
     let s = frozen::snapshot::summarize(&bytes)?;
     println!(
-        "format: {} (version {}), {} bytes, checksum {:#018x} (verified)",
-        frozen::snapshot::FORMAT_NAME,
-        s.version,
-        s.file_len,
-        s.checksum
+        "format: forest-add/fdd-v{}, {} bytes, checksum {:#018x} (verified)",
+        s.version, s.file_len, s.checksum
     );
     // Full structural validation happens on load; reaching here with a
     // FrozenDD in hand proves the artifact is servable.
@@ -338,6 +335,35 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         s.n_nodes,
         s.n_terminals,
         if s.n_nodes == 0 { "terminal" } else { "node 0" }
+    );
+    // Memory footprint of the serving layout: hot bytes per decision and
+    // the node-plane total, plus whether this host boots it zero-copy.
+    // (A v1 artifact is upgraded on load, so its *runtime* hot record is
+    // whatever the schema re-derives — report that, not the 16-byte AoS
+    // layout the file was written for.)
+    let nodes = s.n_nodes.max(1) as f64;
+    let runtime_width = if s.version >= 2 {
+        s.feat_width
+    } else {
+        dd.feat_width().bytes()
+    };
+    println!(
+        "encoding: {} features{}, {} B hot record at runtime, {:.1} B/node on disk ({} B node sections)",
+        if runtime_width == 2 { "u16" } else { "u32" },
+        if s.version >= 2 { "" } else { " after upgrade (v1 file stores u32)" },
+        u32::from(runtime_width) + 4,
+        s.node_section_bytes() as f64 / nodes,
+        s.node_section_bytes()
+    );
+    println!(
+        "boot: {}",
+        if s.version >= 2 && crate::runtime::mmap::supported() {
+            "mmap zero-copy (sections back the runtime arrays in place)"
+        } else if s.version >= 2 {
+            "buffered read (mmap unsupported on this target)"
+        } else {
+            "upgrade-on-load (v1 artifact; re-save to write fdd-v2)"
+        }
     );
     let mut t = Table::new(&["section", "offset", "bytes"]);
     for (name, offset, len) in &s.sections {
@@ -541,6 +567,16 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 std::hint::black_box(out.len());
             });
             bench_cell(&mut t, &mut results, spec, "frozen-1t", batch, ns);
+            // the cache-tiled chain sweep forced via a budget of 1
+            // (= minimum-size tiles) — on diagrams that fit the LLC this
+            // reads as tiling overhead vs frozen-1t, on larger ones as
+            // the benefit; larger budgets would silently fall back to
+            // the rounds sweep and re-measure frozen-1t under a new name
+            let ns = measure_ns(window, || {
+                frozen_dd.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
+                std::hint::black_box(out.len());
+            });
+            bench_cell(&mut t, &mut results, spec, "frozen-tiled", batch, ns);
         }
     }
     print!("{}", t.to_text());
@@ -567,7 +603,7 @@ fn serve_spec() -> ArgSpec {
     ArgSpec::new("forest-add serve", "Start the HTTP serving coordinator")
         .opt("config", "", "JSON config file (CLI flags override)")
         .opt("addr", "", "bind address, e.g. 127.0.0.1:7878")
-        .opt("snapshot", "", "serve this fdd-v1 snapshot (skips training)")
+        .opt("snapshot", "", "serve this fdd snapshot (skips training)")
         .opt("dataset", "", "dataset to train on")
         .opt("trees", "", "forest size")
         .opt("max-depth", "", "tree depth cap")
@@ -576,6 +612,7 @@ fn serve_spec() -> ArgSpec {
         .opt("variant", "", "artifact variant (small | base | wide)")
         .opt("reply-timeout-ms", "", "batched-reply timeout in milliseconds")
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
+        .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
         .switch("no-xla", "do not load the XLA backend")
         .switch("dump-config", "print the effective config and exit")
 }
@@ -616,6 +653,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("eval-threads").is_empty() {
         cfg.eval_threads = a.usize("eval-threads")?;
+    }
+    if !a.str("tile-bytes").is_empty() {
+        cfg.tile_bytes = a.usize("tile-bytes")?;
     }
     if a.flag("no-xla") {
         cfg.enable_xla = false;
@@ -832,8 +872,8 @@ mod tests {
         let report = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(report.get_str("bench"), Some("batch_throughput"));
         let results = report.get("results").and_then(Json::as_arr).unwrap();
-        // 1 dataset × 4 backends × 2 batch sizes
-        assert_eq!(results.len(), 8);
+        // 1 dataset × 5 series × 2 batch sizes
+        assert_eq!(results.len(), 10);
         for r in results {
             assert!(r.get("rows_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         }

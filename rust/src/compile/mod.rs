@@ -26,7 +26,7 @@
 //! The compiled diagram is the *build-time* artifact; for serving,
 //! [`CompiledDD::freeze`] (or [`ForestCompiler::compile_frozen`]) renders
 //! it into the flat [`FrozenDD`](crate::frozen::FrozenDD) form with its
-//! `fdd-v1` binary snapshot.
+//! `fdd-v2` binary snapshot.
 
 pub mod persist;
 
@@ -238,7 +238,7 @@ impl CompiledDD {
     /// The [`FrozenDD`] carries the same diagram — identical predictions
     /// and §6 step counts on every row — but stores it as topologically
     /// ordered node arrays with inlined predicates and terminals, evaluates
-    /// without touching the arena, and serialises to the `fdd-v1` binary
+    /// without touching the arena, and serialises to the `fdd-v2` binary
     /// snapshot ([`FrozenDD::save`]) that replicas load with a single
     /// contiguous read.
     pub fn freeze(&self) -> FrozenDD {

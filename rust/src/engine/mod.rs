@@ -5,7 +5,7 @@
 //! trains the forest, compiles the paper's DD, freezes it into the flat
 //! serving form, optionally loads the XLA/PJRT artifact, and registers
 //! everything as one named model ([`Engine::register_snapshot`] is the
-//! training-free alternative for replicas that start from an `fdd-v1`
+//! training-free alternative for replicas that start from an `fdd`
 //! artifact):
 //!
 //! ```no_run
@@ -103,10 +103,14 @@ impl Engine {
         )
     }
 
-    /// Register a model straight from an `fdd-v1` snapshot file — the
-    /// replica-startup path: no training, no compilation, no JSON; one
-    /// contiguous read plus checksum and structural validation.
-    /// Hot-swaps any existing version under `name`.
+    /// Register a model straight from an `fdd` snapshot file — the
+    /// replica-startup path: no training, no compilation, no JSON. On
+    /// 64-bit unix the artifact is `mmap`ed and the v2 node/terminal
+    /// sections back the runtime arrays in place (zero copies, zero
+    /// per-node allocations — checksum and structural validation still
+    /// run); elsewhere one buffered read replaces the map, and legacy
+    /// `fdd-v1` artifacts upgrade on load. Hot-swaps any existing
+    /// version under `name`.
     pub fn register_snapshot(&self, name: &str, path: &str) -> Result<ModelId> {
         let frozen = FrozenDD::load(path)?;
         let schema = frozen.schema().clone();
@@ -118,7 +122,7 @@ impl Engine {
     }
 
     /// Write the frozen backend of a registered model (`None` = default
-    /// model) to an `fdd-v1` snapshot file — the build-pipeline
+    /// model) to an `fdd-v2` snapshot file — the build-pipeline
     /// counterpart of [`Engine::register_snapshot`], so callers never
     /// re-train a model the engine already owns.
     pub fn save_snapshot(&self, model: Option<&str>, path: &str) -> Result<()> {
@@ -158,6 +162,21 @@ impl Engine {
         let (version, slot) = self.registry.resolve(model, backend)?;
         version.check_matrix(rows)?;
         slot.classifier.classify_batch(rows)
+    }
+
+    /// Classify a batch *with the §6 step count per row* (`None` when
+    /// the backend cannot meter, e.g. XLA) — cost accounting over the
+    /// batch path, same semantics as per-row
+    /// [`Engine::classify`] + steps.
+    pub fn classify_batch_steps(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        rows: RowMatrix<'_>,
+    ) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+        let (version, slot) = self.registry.resolve(model, backend)?;
+        version.check_matrix(rows)?;
+        slot.classifier.classify_batch_with_steps(rows)
     }
 
     /// Per-backend metadata for a model (`None` = default model).
@@ -417,6 +436,17 @@ mod tests {
         assert_eq!(batch.len(), 12);
         for (row, &c) in rows.iter().zip(&batch) {
             assert_eq!(c, engine.classify(None, None, row).unwrap());
+        }
+        // §6 metering survives the facade's batch path on every native
+        // backend
+        for backend in [BackendKind::Forest, BackendKind::Dd, BackendKind::Frozen] {
+            let (classes, steps) = engine
+                .classify_batch_steps(None, Some(backend), rows)
+                .unwrap();
+            assert_eq!(classes, batch, "{backend:?}");
+            let steps = steps.expect("native backends meter steps");
+            assert_eq!(steps.len(), 12, "{backend:?}");
+            assert!(steps.iter().all(|&s| s > 0), "{backend:?}");
         }
         // batches are checked against the model schema at the facade too
         let bad = [1.0f32, 2.0];

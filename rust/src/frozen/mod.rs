@@ -7,33 +7,54 @@
 //! Post-compilation the diagram never changes, so the serving fleet runs
 //! this frozen rendering instead:
 //!
-//! - **Struct-of-arrays node storage** in topological order (the root is
-//!   node 0; every child sits at a strictly greater index), with the
-//!   predicate's feature index and threshold inlined per node — one
-//!   16-byte record per decision, no pool lookup on the walk.
-//! - **Terminals inlined per abstraction** (class words, vote vectors, or
-//!   bare labels), with the majority class and the §6 aggregation reads
-//!   precomputed per terminal, so evaluation never allocates.
-//! - **A true batch path** ([`FrozenDD::classify_batch`]): a node-ordered
-//!   sweep moves every row of a [`RowMatrix`] batch through the diagram
-//!   together, loading each node once per round instead of once per row.
-//!   Row parking is a reusable two-pass counting scatter ([`BatchScratch`]:
-//!   count arrivals per node → prefix-sum offsets → stable scatter into
-//!   one flat `Vec<u32>`), so steady-state batches allocate nothing, and
-//!   large batches are sharded across the evaluation worker pool
-//!   ([`crate::runtime::pool`]) behind a size-crossover heuristic.
-//! - **A binary snapshot** ([`snapshot`], format `forest-add/fdd-v1`)
-//!   that writes and reloads the whole structure with a single contiguous
-//!   read — replicas start from a pre-compiled artifact in milliseconds.
+//! - **Narrow hot/cold node encoding**: the walk reads a *hot plane* of
+//!   6-byte records ([`storage::Hot16`]: `u16` feature + `f32` threshold,
+//!   with a `u32` escape hatch past 65 536 features) plus two `u32` child
+//!   arrays holding **forward deltas** (children sit strictly after
+//!   parents in the topological order, so a child reference is `i +
+//!   delta`, or a [`TERM_BIT`]-tagged terminal index). Cold data —
+//!   levels, the predicate tables, full terminal payloads — lives in
+//!   separate planes the walk never touches. Hot bytes per decision: ≤ 8,
+//!   half the previous 16-byte AoS node.
+//! - **Zero-copy snapshot boot**: the `fdd-v2` snapshot ([`snapshot`])
+//!   writes every plane 64-byte-aligned and little-endian, so
+//!   [`FrozenDD::load`] `mmap`s the artifact
+//!   ([`crate::runtime::mmap`]) and the on-disk bytes *are* the runtime
+//!   arrays ([`storage::Plane`] borrows them from the shared
+//!   [`storage::SnapshotBuf`]). No copy, no per-node allocation — the
+//!   counting-allocator test `tests/alloc_frozen.rs` enforces it.
+//!   Legacy `fdd-v1` artifacts still load through an upgrade-on-load
+//!   path.
+//! - **A cache-tiled batch sweep** ([`FrozenDD::classify_batch`]):
+//!   batches move through the diagram in topological node *tiles* sized
+//!   to an LLC budget (`ServeConfig::tile_bytes`,
+//!   [`configure_tile_bytes`]; auto-default
+//!   [`DEFAULT_TILE_BYTES`]). Rows walk as far as the resident tile
+//!   allows, then park on the destination tile's intrusive chain
+//!   ([`BatchScratch`]) — each tile of a larger-than-LLC diagram is
+//!   streamed through cache once per batch instead of once per round.
+//!   Diagrams within the budget keep the round-based counting-scatter
+//!   sweep; batches small relative to the diagram fall back to plain
+//!   walks; large batches shard across the evaluation worker pool
+//!   ([`crate::runtime::pool`]). All paths are allocation-free once the
+//!   scratch is warm.
+//! - **Batch cost metering** ([`FrozenDD::classify_batch_steps`]): the
+//!   sweeps optionally record the §6 step count per row, bit-identical
+//!   to [`FrozenDD::classify_with_steps`], so cost accounting survives
+//!   the batch path.
 //!
 //! Predictions and §6 step counts are bit-identical to the source
-//! `CompiledDD` (enforced by `tests/conformance.rs`): freezing is a
+//! `CompiledDD` (enforced by `tests/conformance.rs`) across every
+//! encoding, tile size, thread count, and load path: freezing is a
 //! memory-layout change, never a semantic one.
 
 pub mod snapshot;
 
 pub(crate) mod builder;
+pub(crate) mod storage;
 mod validate;
+
+pub use storage::FeatWidth;
 
 use crate::add::terminal::argmax;
 use crate::add::SizeStats;
@@ -41,13 +62,16 @@ use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::compile::Abstraction;
 use crate::data::Schema;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::runtime::pool;
 use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use storage::{Hot16, Hot32, HotRec, Plane};
 
 /// Batches with fewer rows than `nodes / WALK_FALLBACK_FACTOR` take
-/// per-row walks instead of the node-ordered sweep (the sweep's cost is
-/// dominated by the node span it touches, not the row count).
+/// per-row walks instead of a sweep (a sweep's cost is dominated by the
+/// node span it touches, not the row count).
 const WALK_FALLBACK_FACTOR: usize = 32;
 
 /// Minimum batch size before the sweep is sharded across the worker pool.
@@ -57,28 +81,66 @@ const PAR_MIN_ROWS: usize = 512;
 /// the multi-core win).
 const PAR_ROWS_PER_SHARD: usize = 256;
 
+/// Default LLC budget of the tiled sweep: 4 MiB of hot node data —
+/// conservatively half of a typical last-level-cache slice. Diagrams
+/// whose hot planes fit the budget use the round-based sweep instead.
+pub const DEFAULT_TILE_BYTES: usize = 4 << 20;
+
+/// Smallest tile the sweep will cut, in nodes — a floor against
+/// degenerate budgets (`tile_bytes: 1` in a test still gives whole
+/// tiles, just many of them).
+const MIN_TILE_NODES: usize = 64;
+
+/// Chain terminator of the tiled sweep's per-tile row lists.
+const CHAIN_END: u32 = u32::MAX;
+
 /// High bit of a child reference: set ⇒ the remaining bits index the
-/// terminal arrays, clear ⇒ they index the node arrays. Mirrors the
+/// terminal arrays, clear ⇒ they hold the **forward delta** to the child
+/// node (`child = node + delta`). Mirrors the
 /// [`add::NodeId`](crate::add::NodeId) tagging convention.
 pub const TERM_BIT: u32 = 1 << 31;
 
-/// One decision node in the frozen layout: the predicate `x[feat] <
-/// thresh` inlined, plus the two child references.
-#[derive(Debug, Clone, Copy, PartialEq)]
-struct FrozenNode {
-    /// Feature column tested.
-    feat: u32,
-    /// Strict upper-bound threshold.
-    thresh: f32,
-    /// Child when the predicate fails.
-    lo: u32,
-    /// Child when the predicate holds.
-    hi: u32,
+/// Process-wide tile budget in bytes (0 = auto = [`DEFAULT_TILE_BYTES`]).
+static TILE_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the tiled sweep's LLC budget in bytes (`0` = auto). Called by
+/// server startup from `ServeConfig::tile_bytes`; returns the effective
+/// budget.
+pub fn configure_tile_bytes(bytes: usize) -> usize {
+    TILE_BYTES.store(bytes, Ordering::Relaxed);
+    tile_bytes()
 }
 
-/// Terminal storage, one variant per [`Abstraction`]. Payloads are kept
-/// verbatim (not just the precomputed class) so snapshots remain
-/// information-complete and `inspect` can show what a terminal carries.
+/// The effective tile budget in bytes.
+pub fn tile_bytes() -> usize {
+    match TILE_BYTES.load(Ordering::Relaxed) {
+        0 => DEFAULT_TILE_BYTES,
+        n => n,
+    }
+}
+
+/// Dispatch a body over the concrete hot-plane encoding, binding `$hot`
+/// to the record slice. Both arms monomorphise the same generic
+/// evaluator.
+macro_rules! with_hot {
+    ($dd:expr, $hot:ident, $body:block) => {
+        match &$dd.hot {
+            HotPlane::U16(plane) => {
+                let $hot: &[Hot16] = plane;
+                $body
+            }
+            HotPlane::U32(plane) => {
+                let $hot: &[Hot32] = plane;
+                $body
+            }
+        }
+    };
+}
+
+/// Raw terminal storage, one variant per [`Abstraction`] — the mutable,
+/// `Vec`-backed form the freezer and the v1 snapshot loader build.
+/// Payloads are kept verbatim (not just the precomputed class) so
+/// snapshots remain information-complete.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub(crate) enum FrozenTerminals {
     /// Class words: terminal `i` is `symbols[offsets[i]..offsets[i + 1]]`.
@@ -161,39 +223,9 @@ impl FrozenTerminals {
         }
     }
 
-    /// Majority class of terminal `i`, via the crate's one `argmax`
-    /// (ties break to the lowest class index, like every other layout).
-    fn class_of(&self, i: usize, n_classes: usize) -> u16 {
-        match self {
-            FrozenTerminals::Word { offsets, symbols } => {
-                let mut counts = vec![0u32; n_classes];
-                for &s in &symbols[offsets[i] as usize..offsets[i + 1] as usize] {
-                    counts[s as usize] += 1;
-                }
-                argmax(&counts)
-            }
-            FrozenTerminals::Vector { stride, counts } => {
-                let s = *stride as usize;
-                argmax(&counts[i * s..(i + 1) * s])
-            }
-            FrozenTerminals::Majority { classes } => classes[i],
-        }
-    }
-
-    /// §6 aggregation reads still paid at runtime when terminal `i` is
-    /// reached: the word length for class words, `|C|` for vote vectors,
-    /// zero after the majority abstraction.
-    fn agg_reads_of(&self, i: usize, n_classes: usize) -> u32 {
-        match self {
-            FrozenTerminals::Word { offsets, .. } => offsets[i + 1] - offsets[i],
-            FrozenTerminals::Vector { .. } => n_classes as u32,
-            FrozenTerminals::Majority { .. } => 0,
-        }
-    }
-
     /// Best-effort forest size recovered from the payloads (word length /
     /// vote total), for diagrams whose compile stats were not persisted.
-    fn infer_trees(&self) -> u32 {
+    pub(crate) fn infer_trees(&self) -> u32 {
         match self {
             FrozenTerminals::Word { offsets, .. } => offsets
                 .windows(2)
@@ -216,9 +248,111 @@ impl FrozenTerminals {
     }
 }
 
+/// Terminal payloads in their frozen plane form — borrowed straight from
+/// a v2 snapshot, or owned when built by the freezer.
+#[derive(Debug, Clone)]
+pub(crate) enum TermPlanes {
+    Word {
+        offsets: Plane<u32>,
+        symbols: Plane<u16>,
+    },
+    Vector {
+        stride: u32,
+        counts: Plane<u32>,
+    },
+    Majority {
+        classes: Plane<u16>,
+    },
+}
+
+impl TermPlanes {
+    pub(crate) fn from_raw(raw: FrozenTerminals) -> TermPlanes {
+        match raw {
+            FrozenTerminals::Word { offsets, symbols } => TermPlanes::Word {
+                offsets: Plane::Owned(offsets),
+                symbols: Plane::Owned(symbols),
+            },
+            FrozenTerminals::Vector { stride, counts } => TermPlanes::Vector {
+                stride,
+                counts: Plane::Owned(counts),
+            },
+            FrozenTerminals::Majority { classes } => TermPlanes::Majority {
+                classes: Plane::Owned(classes),
+            },
+        }
+    }
+
+    /// Number of terminals stored.
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            TermPlanes::Word { offsets, .. } => offsets.len().saturating_sub(1),
+            TermPlanes::Vector { stride, counts } => {
+                if *stride == 0 {
+                    0
+                } else {
+                    counts.len() / *stride as usize
+                }
+            }
+            TermPlanes::Majority { classes } => classes.len(),
+        }
+    }
+
+    /// The abstraction this storage belongs to.
+    pub(crate) fn abstraction(&self) -> Abstraction {
+        match self {
+            TermPlanes::Word { .. } => Abstraction::Word,
+            TermPlanes::Vector { .. } => Abstraction::Vector,
+            TermPlanes::Majority { .. } => Abstraction::Majority,
+        }
+    }
+
+    /// Majority class of terminal `i`, via the crate's one `argmax` (ties
+    /// break to the lowest class index, like every other layout).
+    /// `counts` is a caller-owned scratch buffer so validation and
+    /// derivation loops allocate once, not per terminal.
+    pub(crate) fn class_of_with(
+        &self,
+        i: usize,
+        n_classes: usize,
+        counts: &mut Vec<u32>,
+    ) -> u16 {
+        match self {
+            TermPlanes::Word { offsets, symbols } => {
+                counts.clear();
+                counts.resize(n_classes, 0);
+                for &s in &symbols[offsets[i] as usize..offsets[i + 1] as usize] {
+                    counts[s as usize] += 1;
+                }
+                argmax(counts)
+            }
+            TermPlanes::Vector {
+                stride,
+                counts: votes,
+            } => {
+                let s = *stride as usize;
+                argmax(&votes[i * s..(i + 1) * s])
+            }
+            TermPlanes::Majority { classes } => classes[i],
+        }
+    }
+
+    /// §6 aggregation reads still paid at runtime when terminal `i` is
+    /// reached: the word length for class words, `|C|` for vote vectors,
+    /// zero after the majority abstraction.
+    pub(crate) fn agg_reads_of(&self, i: usize, n_classes: usize) -> u32 {
+        match self {
+            TermPlanes::Word { offsets, .. } => offsets[i + 1] - offsets[i],
+            TermPlanes::Vector { .. } => n_classes as u32,
+            TermPlanes::Majority { .. } => 0,
+        }
+    }
+}
+
 /// The raw (serialisable) fields of a [`FrozenDD`], before validation and
-/// derivation of the evaluation arrays. Built by [`builder::freeze_cone`]
-/// and by the [`snapshot`] loader.
+/// derivation of the evaluation planes. Built by [`builder::freeze_cone`]
+/// and by the [`snapshot`] v1 (upgrade-on-load) parser. Child references
+/// here are **absolute** node indices; [`FrozenDD::from_raw`] converts
+/// them to the canonical forward-delta encoding.
 pub(crate) struct RawFrozen {
     pub schema: Schema,
     pub abstraction: Abstraction,
@@ -238,33 +372,111 @@ pub(crate) struct RawFrozen {
     pub terminals: FrozenTerminals,
 }
 
+/// The hot walk plane in its concrete encoding (chosen against the
+/// schema at freeze time, recorded in the snapshot META).
+#[derive(Debug, Clone)]
+pub(crate) enum HotPlane {
+    U16(Plane<Hot16>),
+    U32(Plane<Hot32>),
+}
+
+impl HotPlane {
+    pub(crate) fn len(&self) -> usize {
+        match self {
+            HotPlane::U16(p) => p.len(),
+            HotPlane::U32(p) => p.len(),
+        }
+    }
+
+    pub(crate) fn width(&self) -> FeatWidth {
+        match self {
+            HotPlane::U16(_) => FeatWidth::U16,
+            HotPlane::U32(_) => FeatWidth::U32,
+        }
+    }
+}
+
 /// An immutable, cache-friendly snapshot of a compiled decision diagram.
 ///
 /// Built with [`CompiledDD::freeze`](crate::compile::CompiledDD::freeze)
-/// (or loaded from an `fdd-v1` snapshot via [`FrozenDD::load`]) and served
-/// through the [`Classifier`] trait as [`BackendKind::Frozen`].
+/// or loaded from an `fdd` snapshot via [`FrozenDD::load`] — on 64-bit
+/// unix the v2 load is an `mmap` whose mapped bytes back the node and
+/// terminal planes directly. Served through the [`Classifier`] trait as
+/// [`BackendKind::Frozen`].
 #[derive(Debug, Clone)]
 pub struct FrozenDD {
     schema: Schema,
     abstraction: Abstraction,
     unsat_elim: bool,
     n_trees: u32,
-    pred_feature: Vec<u32>,
-    pred_threshold: Vec<f32>,
-    node_level: Vec<u32>,
+    /// Root reference ([`TERM_BIT`]-tagged for single-terminal diagrams,
+    /// otherwise node 0).
     root: u32,
-    terminals: FrozenTerminals,
-    /// Derived at build/load time, never serialised: the walk-ready node
-    /// records (predicate inlined) …
-    nodes: Vec<FrozenNode>,
-    /// … and the per-terminal majority class / §6 aggregation reads.
-    term_class: Vec<u16>,
-    term_agg_reads: Vec<u32>,
+    /// Cold planes: predicate tables and per-node levels — inspection,
+    /// validation and re-serialisation only; the walk never reads them.
+    pred_feature: Plane<u32>,
+    pred_threshold: Plane<f32>,
+    node_level: Plane<u32>,
+    /// Hot planes: the walk records plus the forward-delta child arrays.
+    hot: HotPlane,
+    lo: Plane<u32>,
+    hi: Plane<u32>,
+    /// Terminal payloads (cold) and the precomputed per-terminal majority
+    /// class / §6 aggregation reads (hot).
+    terminals: TermPlanes,
+    term_class: Plane<u16>,
+    term_agg_reads: Plane<u32>,
+    /// Whether the planes borrow an mmap'd snapshot (diagnostics only).
+    mapped: bool,
+}
+
+/// The single-row walk over the narrow planes: one ≤ 8-byte hot record
+/// and one child word per decision, child = `node + delta`. Returns the
+/// terminal index and the decision count.
+#[inline(always)]
+fn walk<H: HotRec>(hot: &[H], lo: &[u32], hi: &[u32], root: u32, x: &[f32]) -> (usize, u32) {
+    if root & TERM_BIT != 0 {
+        return ((root & !TERM_BIT) as usize, 0);
+    }
+    let mut n = 0usize;
+    let mut steps = 0u32;
+    loop {
+        let h = hot[n];
+        steps += 1;
+        let stored = if x[h.feat_ix()] < h.threshold() {
+            hi[n]
+        } else {
+            lo[n]
+        };
+        if stored & TERM_BIT != 0 {
+            return ((stored & !TERM_BIT) as usize, steps);
+        }
+        n += stored as usize;
+    }
+}
+
+/// Nodes per tile under a byte budget: one hot record plus the two child
+/// words is what the in-tile walk keeps resident.
+fn tile_span<H: HotRec>(tile_budget: usize) -> usize {
+    let per_node = std::mem::size_of::<H>() + 8;
+    (tile_budget / per_node).max(MIN_TILE_NODES)
 }
 
 impl FrozenDD {
-    /// Validate raw fields and derive the evaluation arrays.
+    /// Validate raw fields and derive the evaluation planes (hot records,
+    /// forward deltas, per-terminal class/aggregation reads).
     pub(crate) fn from_raw(raw: RawFrozen) -> Result<FrozenDD> {
+        Self::from_raw_with_width(raw, None)
+    }
+
+    /// [`FrozenDD::from_raw`] with an explicit feature-index width
+    /// (`None` = narrowest that fits the schema). The `u32` escape hatch
+    /// exists for schemas past 65 536 features; forcing `U16` onto a
+    /// wider schema errors.
+    pub(crate) fn from_raw_with_width(
+        raw: RawFrozen,
+        forced: Option<FeatWidth>,
+    ) -> Result<FrozenDD> {
         validate::validate(&raw)?;
         let RawFrozen {
             schema,
@@ -279,36 +491,71 @@ impl FrozenDD {
             root,
             terminals,
         } = raw;
-        let nodes = node_level
-            .iter()
-            .zip(node_lo.iter().zip(&node_hi))
-            .map(|(&level, (&lo, &hi))| FrozenNode {
-                feat: pred_feature[level as usize],
-                thresh: pred_threshold[level as usize],
-                lo,
-                hi,
-            })
-            .collect();
+        let width = forced.unwrap_or_else(|| FeatWidth::for_features(schema.n_features()));
+        if width == FeatWidth::U16 && pred_feature.iter().any(|&f| f > u32::from(u16::MAX)) {
+            return Err(Error::invalid(
+                "u16 feature encoding cannot index this schema (use the u32 escape hatch)",
+            ));
+        }
+        let hot = match width {
+            FeatWidth::U16 => HotPlane::U16(Plane::Owned(
+                node_level
+                    .iter()
+                    .map(|&l| Hot16 {
+                        feat: pred_feature[l as usize] as u16,
+                        thresh: pred_threshold[l as usize],
+                    })
+                    .collect(),
+            )),
+            FeatWidth::U32 => HotPlane::U32(Plane::Owned(
+                node_level
+                    .iter()
+                    .map(|&l| Hot32 {
+                        feat: pred_feature[l as usize],
+                        thresh: pred_threshold[l as usize],
+                    })
+                    .collect(),
+            )),
+        };
+        // Forward deltas: validate() proved every internal child sits
+        // strictly after its parent.
+        let to_delta = |refs: Vec<u32>| -> Vec<u32> {
+            refs.into_iter()
+                .enumerate()
+                .map(|(i, r)| if r & TERM_BIT != 0 { r } else { r - i as u32 })
+                .collect()
+        };
+        let lo = Plane::Owned(to_delta(node_lo));
+        let hi = Plane::Owned(to_delta(node_hi));
+        let terminals = TermPlanes::from_raw(terminals);
         let n_classes = schema.n_classes();
-        let term_class = (0..terminals.len())
-            .map(|i| terminals.class_of(i, n_classes))
-            .collect();
-        let term_agg_reads = (0..terminals.len())
-            .map(|i| terminals.agg_reads_of(i, n_classes))
-            .collect();
+        let mut counts = Vec::new();
+        let term_class = Plane::Owned(
+            (0..terminals.len())
+                .map(|i| terminals.class_of_with(i, n_classes, &mut counts))
+                .collect(),
+        );
+        let term_agg_reads = Plane::Owned(
+            (0..terminals.len())
+                .map(|i| terminals.agg_reads_of(i, n_classes))
+                .collect(),
+        );
         Ok(FrozenDD {
             schema,
             abstraction,
             unsat_elim,
             n_trees,
-            pred_feature,
-            pred_threshold,
-            node_level,
             root,
+            pred_feature: Plane::Owned(pred_feature),
+            pred_threshold: Plane::Owned(pred_threshold),
+            node_level: Plane::Owned(node_level),
+            hot,
+            lo,
+            hi,
             terminals,
-            nodes,
             term_class,
             term_agg_reads,
+            mapped: false,
         })
     }
 
@@ -337,6 +584,18 @@ impl FrozenDD {
         self.pred_feature.len()
     }
 
+    /// Feature-index width of the hot plane (`U16` unless the schema
+    /// needed the `u32` escape hatch).
+    pub fn feat_width(&self) -> FeatWidth {
+        self.hot.width()
+    }
+
+    /// Whether the planes borrow an mmap'd snapshot file (the zero-copy
+    /// boot path) rather than owned memory.
+    pub fn mapped(&self) -> bool {
+        self.mapped
+    }
+
     /// Series label, paper style plus the layout tag
     /// (e.g. `Most frequent class DD* [frozen]`).
     pub fn label(&self) -> String {
@@ -347,7 +606,7 @@ impl FrozenDD {
     /// [`CompiledDD::size`](crate::compile::CompiledDD::size)).
     pub fn size(&self) -> SizeStats {
         SizeStats {
-            internal: self.nodes.len(),
+            internal: self.hot.len(),
             terminals: self.terminals.len(),
         }
     }
@@ -371,49 +630,82 @@ impl FrozenDD {
     /// [`CompiledDD::classify_with_steps`](crate::compile::CompiledDD::classify_with_steps)
     /// on the source diagram.
     pub fn classify_with_steps(&self, x: &[f32]) -> (u32, usize) {
-        let mut id = self.root;
-        let mut steps = 0usize;
-        while id & TERM_BIT == 0 {
-            let n = &self.nodes[id as usize];
-            steps += 1;
-            // One 16-byte record per decision; the compare feeds a select,
-            // not a data-dependent pointer chase through an arena.
-            id = if x[n.feat as usize] < n.thresh {
-                n.hi
-            } else {
-                n.lo
-            };
-        }
-        let t = (id & !TERM_BIT) as usize;
+        let (t, steps) = with_hot!(self, hot, { walk(hot, &self.lo, &self.hi, self.root, x) });
         (
             u32::from(self.term_class[t]),
-            steps + self.term_agg_reads[t] as usize,
+            steps as usize + self.term_agg_reads[t] as usize,
         )
     }
 
-    /// Classify a batch through the node-ordered sweep, sharding large
+    /// Classify a batch through the tiled node sweep, sharding large
     /// batches across the evaluation worker pool.
     ///
     /// Shards are contiguous row ranges with disjoint output slices, so
     /// the result is bit-identical to the single-threaded sweep (and to
-    /// per-row walks) regardless of thread count.
+    /// per-row walks) regardless of thread count or tile budget.
     pub fn classify_batch(&self, rows: RowMatrix<'_>) -> Vec<u32> {
+        let tile = tile_bytes();
         let mut out = vec![0u32; rows.n_rows()];
         let sharded = rows.n_rows() >= PAR_MIN_ROWS
             && pool::run_sharded(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
-                SCRATCH.with(|s| self.sweep_into(shard, &mut s.borrow_mut(), out_chunk));
+                SCRATCH.with(|s| {
+                    self.sweep_dispatch::<false>(
+                        shard,
+                        &mut s.borrow_mut(),
+                        out_chunk,
+                        &mut [],
+                        tile,
+                    )
+                });
             });
         if !sharded {
-            SCRATCH.with(|s| self.sweep_into(rows, &mut s.borrow_mut(), &mut out));
+            SCRATCH.with(|s| {
+                self.sweep_dispatch::<false>(rows, &mut s.borrow_mut(), &mut out, &mut [], tile)
+            });
         }
         out
+    }
+
+    /// Classify a batch *with the §6 step count per row* — the batch
+    /// counterpart of [`FrozenDD::classify_with_steps`], so cost metering
+    /// survives the batch path. Sharded and tiled exactly like
+    /// [`FrozenDD::classify_batch`]; steps are bit-identical to the
+    /// single-row walk.
+    pub fn classify_batch_steps(&self, rows: RowMatrix<'_>) -> (Vec<u32>, Vec<u32>) {
+        let tile = tile_bytes();
+        let mut out = vec![0u32; rows.n_rows()];
+        let mut steps = vec![0u32; rows.n_rows()];
+        let sharded = rows.n_rows() >= PAR_MIN_ROWS
+            && pool::run_sharded2(
+                rows,
+                &mut out,
+                &mut steps,
+                PAR_ROWS_PER_SHARD,
+                |shard, out_chunk, steps_chunk| {
+                    SCRATCH.with(|s| {
+                        self.sweep_dispatch::<true>(
+                            shard,
+                            &mut s.borrow_mut(),
+                            out_chunk,
+                            steps_chunk,
+                            tile,
+                        )
+                    });
+                },
+            );
+        if !sharded {
+            SCRATCH.with(|s| {
+                self.sweep_dispatch::<true>(rows, &mut s.borrow_mut(), &mut out, &mut steps, tile)
+            });
+        }
+        (out, steps)
     }
 
     /// Single-threaded batch classification with an explicit, reusable
     /// [`BatchScratch`].
     pub fn classify_batch_with(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch) -> Vec<u32> {
         let mut out = vec![0u32; rows.n_rows()];
-        self.sweep_into(rows, scratch, &mut out);
+        self.sweep_dispatch::<false>(rows, scratch, &mut out, &mut [], tile_bytes());
         out
     }
 
@@ -426,38 +718,141 @@ impl FrozenDD {
         scratch: &mut BatchScratch,
         out: &mut Vec<u32>,
     ) {
-        out.clear();
-        out.resize(rows.n_rows(), 0);
-        self.sweep_into(rows, scratch, out);
+        self.classify_batch_into_tiled(rows, scratch, out, 0);
     }
 
-    /// The node-ordered sweep over one shard: nodes are stored
-    /// topologically (children strictly after parents), so rows parked at
-    /// node `i` only ever move to a node `> i` or to a terminal, and an
-    /// ascending pass over the touched node span completes every row —
-    /// each node record is loaded once per round instead of once per row.
+    /// [`FrozenDD::classify_batch_into`] with an explicit tile budget in
+    /// bytes (`0` = the configured global budget) — the hook benches and
+    /// conformance tests use to pin every tile size.
+    pub fn classify_batch_into_tiled(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<u32>,
+        tile_budget: usize,
+    ) {
+        out.clear();
+        out.resize(rows.n_rows(), 0);
+        let budget = if tile_budget == 0 {
+            tile_bytes()
+        } else {
+            tile_budget
+        };
+        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget);
+    }
+
+    /// Steps-metered single-threaded sweep with an explicit tile budget
+    /// (`0` = global) — conformance pins this against per-row walks.
+    pub fn classify_batch_steps_into_tiled(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<u32>,
+        steps: &mut Vec<u32>,
+        tile_budget: usize,
+    ) {
+        out.clear();
+        out.resize(rows.n_rows(), 0);
+        steps.clear();
+        steps.resize(rows.n_rows(), 0);
+        let budget = if tile_budget == 0 {
+            tile_bytes()
+        } else {
+            tile_budget
+        };
+        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget);
+    }
+
+    /// Monomorphise the sweep over the hot-plane encoding.
+    fn sweep_dispatch<const STEPS: bool>(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut [u32],
+        steps: &mut [u32],
+        tile_budget: usize,
+    ) {
+        with_hot!(self, hot, {
+            self.sweep_into::<_, STEPS>(hot, rows, scratch, out, steps, tile_budget)
+        })
+    }
+
+    /// The batch sweep front door: pick per-row walks (small batches),
+    /// the round-based counting scatter (diagram fits the tile budget) or
+    /// the cache-tiled chain sweep (diagram larger than the budget).
+    /// Every path writes identical classes (and, when `STEPS`, identical
+    /// §6 step counts) — only the memory traffic differs.
+    #[allow(clippy::too_many_arguments)]
+    fn sweep_into<H: HotRec, const STEPS: bool>(
+        &self,
+        hot: &[H],
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut [u32],
+        steps: &mut [u32],
+        tile_budget: usize,
+    ) {
+        debug_assert_eq!(out.len(), rows.n_rows());
+        debug_assert!(!STEPS || steps.len() == rows.n_rows());
+        if rows.is_empty() {
+            return;
+        }
+        if STEPS {
+            steps.fill(0);
+        }
+        let term_class = &self.term_class[..];
+        let term_agg = &self.term_agg_reads[..];
+        if self.root & TERM_BIT != 0 {
+            let t = (self.root & !TERM_BIT) as usize;
+            out.fill(u32::from(term_class[t]));
+            if STEPS {
+                steps.fill(term_agg[t]);
+            }
+            return;
+        }
+        let n_nodes = hot.len();
+        if rows.n_rows().saturating_mul(WALK_FALLBACK_FACTOR) < n_nodes {
+            let lo = &self.lo[..];
+            let hi = &self.hi[..];
+            for (i, r) in rows.iter().enumerate() {
+                let (t, s) = walk(hot, lo, hi, self.root, r);
+                out[i] = u32::from(term_class[t]);
+                if STEPS {
+                    steps[i] = s + term_agg[t];
+                }
+            }
+            return;
+        }
+        let tile_nodes = tile_span::<H>(tile_budget);
+        if tile_nodes >= n_nodes {
+            self.rounds_sweep::<H, STEPS>(hot, rows, scratch, out, steps);
+        } else {
+            self.tiled_sweep::<H, STEPS>(hot, rows, scratch, out, steps, tile_nodes);
+        }
+    }
+
+    /// The round-based node-ordered sweep for diagrams whose hot planes
+    /// fit the tile budget: each round routes every parked row one step,
+    /// reading the touched node span in ascending (sequential) order.
     ///
     /// Parking uses the scratch's counting scatter: routing a round
     /// counts arrivals per destination node, a prefix sum turns counts
     /// into segment offsets, and a stable scatter packs the surviving
     /// rows into one flat slot array for the next round. No per-node
     /// `Vec`s, no allocation once the scratch is warm.
-    fn sweep_into(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch, out: &mut [u32]) {
-        debug_assert_eq!(out.len(), rows.n_rows());
-        if rows.is_empty() {
-            return;
-        }
-        if self.root & TERM_BIT != 0 {
-            out.fill(u32::from(self.term_class[(self.root & !TERM_BIT) as usize]));
-            return;
-        }
-        if rows.n_rows().saturating_mul(WALK_FALLBACK_FACTOR) < self.nodes.len() {
-            for (i, r) in rows.iter().enumerate() {
-                out[i] = self.classify(r);
-            }
-            return;
-        }
-        scratch.ensure(self.nodes.len(), rows.n_rows());
+    fn rounds_sweep<H: HotRec, const STEPS: bool>(
+        &self,
+        hot: &[H],
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut [u32],
+        steps: &mut [u32],
+    ) {
+        let lo_arr = &self.lo[..];
+        let hi_arr = &self.hi[..];
+        let term_class = &self.term_class[..];
+        let term_agg = &self.term_agg_reads[..];
+        scratch.ensure_rounds(hot.len(), rows.n_rows());
         let BatchScratch {
             count_a,
             count_b,
@@ -467,6 +862,7 @@ impl FrozenDD {
             slots_b,
             pending,
             dest,
+            ..
         } = scratch;
         // Round 0: every row parked at the root (node 0).
         count_a[0] = rows.n_rows() as u32;
@@ -480,7 +876,7 @@ impl FrozenDD {
             dest.clear();
             let (mut next_lo, mut next_hi) = (usize::MAX, 0usize);
             // Route the round node-by-node (ascending = sequential reads
-            // of the node records), counting arrivals per destination.
+            // of the hot records), counting arrivals per destination.
             for node in lo..=hi {
                 let c = count_a[node] as usize;
                 if c == 0 {
@@ -488,23 +884,30 @@ impl FrozenDD {
                 }
                 count_a[node] = 0; // restore the all-zero invariant
                 let end = off_a[node] as usize;
-                let rec = self.nodes[node];
+                let rec = hot[node];
                 for &r in &slots_a[end - c..end] {
                     let x = rows.row(r as usize);
-                    let next = if x[rec.feat as usize] < rec.thresh {
-                        rec.hi
+                    if STEPS {
+                        steps[r as usize] += 1;
+                    }
+                    let stored = if x[rec.feat_ix()] < rec.threshold() {
+                        hi_arr[node]
                     } else {
-                        rec.lo
+                        lo_arr[node]
                     };
-                    if next & TERM_BIT != 0 {
-                        out[r as usize] =
-                            u32::from(self.term_class[(next & !TERM_BIT) as usize]);
+                    if stored & TERM_BIT != 0 {
+                        let t = (stored & !TERM_BIT) as usize;
+                        out[r as usize] = u32::from(term_class[t]);
+                        if STEPS {
+                            steps[r as usize] += term_agg[t];
+                        }
                     } else {
+                        let next = node + stored as usize; // delta decode
                         pending.push(r);
-                        dest.push(next);
-                        count_b[next as usize] += 1;
-                        next_lo = next_lo.min(next as usize);
-                        next_hi = next_hi.max(next as usize);
+                        dest.push(next as u32);
+                        count_b[next] += 1;
+                        next_lo = next_lo.min(next);
+                        next_hi = next_hi.max(next);
                     }
                 }
             }
@@ -531,15 +934,105 @@ impl FrozenDD {
             hi = next_hi;
         }
     }
+
+    /// The cache-tiled sweep for diagrams larger than the tile budget:
+    /// nodes are cut into contiguous topological tiles of `tile_nodes`,
+    /// processed in ascending order (children sit strictly after parents,
+    /// so each tile is visited exactly once per batch). A row walks as
+    /// far as the resident tile allows — every hot record it touches fits
+    /// the LLC budget — then parks on the destination tile's intrusive
+    /// chain (`head`/`next` in the scratch, O(1) insert, no counting
+    /// pass). The working set per tile is one tile of node data plus the
+    /// parked rows' features, instead of the whole diagram per round.
+    #[allow(clippy::too_many_arguments)]
+    fn tiled_sweep<H: HotRec, const STEPS: bool>(
+        &self,
+        hot: &[H],
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut [u32],
+        steps: &mut [u32],
+        tile_nodes: usize,
+    ) {
+        let lo_arr = &self.lo[..];
+        let hi_arr = &self.hi[..];
+        let term_class = &self.term_class[..];
+        let term_agg = &self.term_agg_reads[..];
+        let n_nodes = hot.len();
+        let n_tiles = n_nodes.div_ceil(tile_nodes);
+        let n_rows = rows.n_rows();
+        scratch.ensure_tiles(n_tiles, n_rows);
+        let BatchScratch {
+            head,
+            slots_a: next,
+            slots_b: node_of,
+            ..
+        } = scratch;
+        // Park every row at the root (node 0, tile 0), chained in row
+        // order for feature-buffer locality on the first tile.
+        for r in 0..n_rows {
+            next[r] = if r + 1 < n_rows {
+                (r + 1) as u32
+            } else {
+                CHAIN_END
+            };
+            node_of[r] = 0;
+        }
+        head[0] = 0;
+        for k in 0..n_tiles {
+            let mut r = head[k];
+            head[k] = CHAIN_END; // restore the all-empty invariant
+            let tile_end = ((k + 1) * tile_nodes).min(n_nodes);
+            while r != CHAIN_END {
+                let row = r as usize;
+                let follow = next[row];
+                let mut n = node_of[row] as usize;
+                let x = rows.row(row);
+                loop {
+                    let h = hot[n];
+                    if STEPS {
+                        steps[row] += 1;
+                    }
+                    let stored = if x[h.feat_ix()] < h.threshold() {
+                        hi_arr[n]
+                    } else {
+                        lo_arr[n]
+                    };
+                    if stored & TERM_BIT != 0 {
+                        let t = (stored & !TERM_BIT) as usize;
+                        out[row] = u32::from(term_class[t]);
+                        if STEPS {
+                            steps[row] += term_agg[t];
+                        }
+                        break;
+                    }
+                    n += stored as usize;
+                    if n >= tile_end {
+                        // Park on the destination tile's chain; it will be
+                        // routed when that tile becomes resident.
+                        let j = n / tile_nodes;
+                        node_of[row] = n as u32;
+                        next[row] = head[j];
+                        head[j] = r;
+                        break;
+                    }
+                }
+                r = follow;
+            }
+        }
+    }
 }
 
-/// Reusable state of the frozen batch sweep's counting scatter.
+/// Reusable state of the frozen batch sweeps.
 ///
-/// Two (count, offset) array pairs — one for the round being routed, one
-/// for the round being built, swapped each round — plus the flat row-slot
-/// arrays and the routing-order survivor buffers. Counts are kept
-/// all-zero between rounds and between calls, so a warm scratch can be
-/// reused across batches *and across diagrams* (buffers only ever grow).
+/// The round-based sweep uses two (count, offset) array pairs — one for
+/// the round being routed, one for the round being built, swapped each
+/// round — plus the flat row-slot arrays and the routing-order survivor
+/// buffers; counts are kept all-zero between rounds and between calls.
+/// The tiled sweep reuses the slot arrays as its `next`/`node` chain
+/// links plus a per-tile `head` array kept all-`CHAIN_END` between
+/// calls. A warm scratch can therefore be reused across batches, across
+/// diagrams, *and across sweep strategies* (buffers only ever grow).
 #[derive(Debug, Default)]
 pub struct BatchScratch {
     count_a: Vec<u32>,
@@ -550,6 +1043,7 @@ pub struct BatchScratch {
     slots_b: Vec<u32>,
     pending: Vec<u32>,
     dest: Vec<u32>,
+    head: Vec<u32>,
 }
 
 impl BatchScratch {
@@ -558,12 +1052,22 @@ impl BatchScratch {
         BatchScratch::default()
     }
 
-    fn ensure(&mut self, n_nodes: usize, n_rows: usize) {
+    fn ensure_rounds(&mut self, n_nodes: usize, n_rows: usize) {
         if self.count_a.len() < n_nodes {
             self.count_a.resize(n_nodes, 0);
             self.count_b.resize(n_nodes, 0);
             self.off_a.resize(n_nodes, 0);
             self.off_b.resize(n_nodes, 0);
+        }
+        if self.slots_a.len() < n_rows {
+            self.slots_a.resize(n_rows, 0);
+            self.slots_b.resize(n_rows, 0);
+        }
+    }
+
+    fn ensure_tiles(&mut self, n_tiles: usize, n_rows: usize) {
+        if self.head.len() < n_tiles {
+            self.head.resize(n_tiles, CHAIN_END);
         }
         if self.slots_a.len() < n_rows {
             self.slots_a.resize(n_rows, 0);
@@ -613,6 +1117,11 @@ impl Classifier for FrozenDD {
         Ok(FrozenDD::classify_batch(self, rows))
     }
 
+    fn classify_batch_with_steps(&self, rows: RowMatrix<'_>) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+        let (classes, steps) = FrozenDD::classify_batch_steps(self, rows);
+        Ok((classes, Some(steps)))
+    }
+
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         Some(self)
     }
@@ -644,6 +1153,8 @@ mod tests {
             let frozen = dd.freeze();
             assert_eq!(frozen.abstraction(), abstraction);
             assert_eq!(frozen.size(), dd.size(), "{abstraction:?}");
+            assert_eq!(frozen.feat_width(), FeatWidth::U16);
+            assert!(!frozen.mapped());
             for i in 0..ds.n_rows() {
                 assert_eq!(
                     frozen.classify_with_steps(ds.row(i)),
@@ -700,6 +1211,91 @@ mod tests {
     }
 
     #[test]
+    fn tiled_sweep_matches_walks_at_every_tile_size() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let frozen = dd.freeze();
+        let tiled = crate::bench_support::tile_rows(&ds, 4096, 5);
+        let rows = tiled.as_matrix();
+        let want: Vec<u32> = rows.iter().map(|r| frozen.classify(r)).collect();
+        let want_steps: Vec<u32> = rows
+            .iter()
+            .map(|r| frozen.classify_with_steps(r).1 as u32)
+            .collect();
+        let mut scratch = BatchScratch::new();
+        let mut out = Vec::new();
+        let mut steps = Vec::new();
+        // budget 1 forces MIN_TILE_NODES-sized tiles (the chain sweep);
+        // larger budgets cross back into the round sweep; 0 = global.
+        for tile_budget in [1usize, 600, 4096, 1 << 20, 0] {
+            frozen.classify_batch_into_tiled(rows, &mut scratch, &mut out, tile_budget);
+            assert_eq!(out, want, "tile budget {tile_budget}");
+            frozen.classify_batch_steps_into_tiled(
+                rows,
+                &mut scratch,
+                &mut out,
+                &mut steps,
+                tile_budget,
+            );
+            assert_eq!(out, want, "steps classes, tile budget {tile_budget}");
+            assert_eq!(steps, want_steps, "steps, tile budget {tile_budget}");
+        }
+        // the sharded steps API agrees too
+        let (classes, steps) = frozen.classify_batch_steps(rows);
+        assert_eq!(classes, want);
+        assert_eq!(steps, want_steps);
+        // Global tile budget configuration round-trips. Set and restore
+        // back-to-back: the budget is process-wide and other tests run
+        // concurrently (any budget still yields identical answers, so
+        // the brief window only shifts which sweep they exercise).
+        assert_eq!(configure_tile_bytes(123), 123);
+        assert_eq!(configure_tile_bytes(0), DEFAULT_TILE_BYTES);
+    }
+
+    #[test]
+    fn u32_escape_hatch_matches_u16_encoding() {
+        use crate::data::{Feature, FeatureKind};
+        let schema = Schema {
+            features: vec![
+                Feature {
+                    name: "x0".into(),
+                    kind: FeatureKind::Numeric,
+                },
+                Feature {
+                    name: "x1".into(),
+                    kind: FeatureKind::Numeric,
+                },
+            ],
+            classes: vec!["a".into(), "b".into()],
+        };
+        let raw = || RawFrozen {
+            schema: schema.clone(),
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            n_trees: 3,
+            pred_feature: vec![0, 1],
+            pred_threshold: vec![0.5, 0.5],
+            node_level: vec![0, 1],
+            node_lo: vec![1, TERM_BIT],
+            node_hi: vec![TERM_BIT, TERM_BIT | 1],
+            root: 0,
+            terminals: FrozenTerminals::Majority {
+                classes: vec![0, 1],
+            },
+        };
+        let narrow = FrozenDD::from_raw(raw()).unwrap();
+        let wide = FrozenDD::from_raw_with_width(raw(), Some(FeatWidth::U32)).unwrap();
+        assert_eq!(narrow.feat_width(), FeatWidth::U16);
+        assert_eq!(wide.feat_width(), FeatWidth::U32);
+        for x in [[0.4f32, 0.9], [0.6, 0.4], [0.6, 0.9]] {
+            assert_eq!(narrow.classify_with_steps(&x), wide.classify_with_steps(&x));
+        }
+        // both encodings survive a snapshot round-trip with their width
+        let back = FrozenDD::from_bytes(&wide.to_bytes()).unwrap();
+        assert_eq!(back.feat_width(), FeatWidth::U32);
+        assert_eq!(back.to_bytes(), wide.to_bytes());
+    }
+
+    #[test]
     fn classifier_trait_reports_frozen_backend() {
         let (ds, dd) = frozen_iris(Abstraction::Majority);
         let frozen = dd.freeze();
@@ -712,6 +1308,14 @@ mod tests {
         let c: &dyn Classifier = &frozen;
         let (class, steps) = c.classify_with_steps(ds.row(0)).unwrap();
         assert_eq!((class, steps.unwrap()), dd.classify_with_steps(ds.row(0)));
+        // the trait's metered batch path reports the same steps
+        let (classes, batch_steps) = c.classify_batch_with_steps(ds.matrix()).unwrap();
+        let batch_steps = batch_steps.unwrap();
+        for (i, row) in ds.matrix().iter().enumerate() {
+            let (want_c, want_s) = dd.classify_with_steps(row);
+            assert_eq!(classes[i], want_c, "row {i}");
+            assert_eq!(batch_steps[i] as usize, want_s, "row {i}");
+        }
     }
 
     #[test]
@@ -743,23 +1347,42 @@ mod tests {
         // a single-terminal diagram must also survive the scratch path
         let mut scratch = BatchScratch::new();
         assert_eq!(frozen.classify_batch_with(rows, &mut scratch), batch);
+        // … and the steps variant
+        let (classes, steps) = frozen.classify_batch_steps(rows);
+        assert_eq!(classes, batch);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(steps[i] as usize, frozen.classify_with_steps(row).1, "row {i}");
+        }
     }
 
     #[test]
     fn terminal_majority_ties_break_low() {
-        let mut t = FrozenTerminals::empty_vector(3);
-        t.push_vector(&[2, 2, 1]);
-        t.push_vector(&[0, 1, 1]);
-        assert_eq!(t.class_of(0, 3), 0, "tie must break to the lowest class");
-        assert_eq!(t.class_of(1, 3), 1);
+        let mut raw = FrozenTerminals::empty_vector(3);
+        raw.push_vector(&[2, 2, 1]);
+        raw.push_vector(&[0, 1, 1]);
+        assert_eq!(raw.infer_trees(), 5);
+        let t = TermPlanes::from_raw(raw);
+        let mut counts = Vec::new();
+        assert_eq!(
+            t.class_of_with(0, 3, &mut counts),
+            0,
+            "tie must break to the lowest class"
+        );
+        assert_eq!(t.class_of_with(1, 3, &mut counts), 1);
         assert_eq!(t.agg_reads_of(0, 3), 3);
-        assert_eq!(t.infer_trees(), 5);
-        let mut w = FrozenTerminals::empty_word();
-        w.push_word(&[1, 0, 1]);
-        w.push_word(&[]);
+        let mut raw = FrozenTerminals::empty_word();
+        raw.push_word(&[1, 0, 1]);
+        raw.push_word(&[]);
+        assert_eq!(raw.len(), 2);
+        assert_eq!(raw.infer_trees(), 3);
+        let w = TermPlanes::from_raw(raw);
         assert_eq!(w.len(), 2);
-        assert_eq!(w.class_of(0, 2), 1);
-        assert_eq!(w.class_of(1, 2), 0, "empty word votes for class 0");
+        assert_eq!(w.class_of_with(0, 2, &mut counts), 1);
+        assert_eq!(
+            w.class_of_with(1, 2, &mut counts),
+            0,
+            "empty word votes for class 0"
+        );
         assert_eq!(w.agg_reads_of(0, 2), 3);
         assert_eq!(w.agg_reads_of(1, 2), 0);
     }

@@ -1,0 +1,483 @@
+//! Borrowed-or-owned backing storage for the frozen runtime.
+//!
+//! An `fdd-v2` snapshot is laid out so its section bytes *are* the
+//! runtime arrays: little-endian, natural element layout, every section
+//! 64-byte aligned. This module provides the three pieces that make the
+//! zero-copy boot work:
+//!
+//! - [`SnapshotBuf`] — the one backing buffer behind a loaded snapshot:
+//!   either an mmap of the artifact file ([`crate::runtime::mmap`], the
+//!   replica-boot path) or an 8-byte-aligned owned copy ([`AlignedBuf`],
+//!   the `from_bytes` / non-unix fallback).
+//! - [`Plane<T>`] — one typed array of a [`FrozenDD`]: either a `Vec<T>`
+//!   built by the freezer, or a bounds- and alignment-checked view into a
+//!   shared [`SnapshotBuf`]. Evaluation only ever sees `&[T]` (via
+//!   `Deref`), so the two origins are indistinguishable on the hot path.
+//! - [`Pod`] — the little-endian byte contract each plane element obeys,
+//!   used by the snapshot writer (canonical bytes), by the big-endian
+//!   fallback parser, and as the witness that viewing the bytes in place
+//!   is sound on little-endian hosts.
+//!
+//! The hot walk records live here too: [`Hot16`] (6 bytes: `u16` feature
+//! + `f32` threshold, `repr(C, packed)`) and the [`Hot32`] escape hatch
+//! for schemas with more than 65 536 features (8 bytes). Both keep the
+//! bytes touched per decision at or under 8 — half the 16-byte AoS node
+//! this layout replaced.
+//!
+//! [`FrozenDD`]: crate::frozen::FrozenDD
+
+use crate::error::{Error, Result};
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+/// Feature-index width of the hot plane, chosen at freeze time against
+/// the schema (`u16` unless the schema cannot fit it) and recorded in the
+/// snapshot META section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatWidth {
+    /// 2-byte feature indices (schemas up to 65 536 features).
+    U16,
+    /// 4-byte escape hatch for wider schemas.
+    U32,
+}
+
+impl FeatWidth {
+    /// Narrowest width that can index every feature of an `n_features`
+    /// schema.
+    pub fn for_features(n_features: usize) -> FeatWidth {
+        if n_features <= (u16::MAX as usize) + 1 {
+            FeatWidth::U16
+        } else {
+            FeatWidth::U32
+        }
+    }
+
+    /// Byte width of one feature index (the META encoding of the width).
+    pub fn bytes(self) -> u8 {
+        match self {
+            FeatWidth::U16 => 2,
+            FeatWidth::U32 => 4,
+        }
+    }
+
+    /// Decode the META byte.
+    pub fn from_bytes_code(code: u8) -> Result<FeatWidth> {
+        match code {
+            2 => Ok(FeatWidth::U16),
+            4 => Ok(FeatWidth::U32),
+            other => Err(Error::parse(format!(
+                "fdd snapshot: unknown feature width code {other}"
+            ))),
+        }
+    }
+}
+
+/// A plane element: fixed-size, alignment ≤ 8, and a little-endian byte
+/// layout that matches its in-memory layout on little-endian hosts (which
+/// is what makes the in-place view sound there).
+pub(crate) trait Pod: Copy + 'static {
+    /// Serialized (= in-memory) size in bytes.
+    const SIZE: usize;
+
+    /// Decode one element from exactly `Self::SIZE` little-endian bytes.
+    fn from_le(bytes: &[u8]) -> Self;
+
+    /// Append the canonical little-endian bytes of `self`.
+    fn write_le(self, out: &mut Vec<u8>);
+}
+
+impl Pod for u16 {
+    const SIZE: usize = 2;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        u16::from_le_bytes(bytes.try_into().unwrap())
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl Pod for u32 {
+    const SIZE: usize = 4;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        u32::from_le_bytes(bytes.try_into().unwrap())
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl Pod for f32 {
+    const SIZE: usize = 4;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+/// One hot walk record, `u16` encoding: the predicate `x[feat] < thresh`
+/// in 6 bytes. `repr(C, packed)` so six on-disk bytes per node view
+/// directly as one record — the layout/size test pins `size_of == 6`.
+#[derive(Clone, Copy)]
+#[repr(C, packed)]
+pub(crate) struct Hot16 {
+    pub(crate) feat: u16,
+    pub(crate) thresh: f32,
+}
+
+impl fmt::Debug for Hot16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // copy out of the packed struct before formatting (no unaligned
+        // references)
+        let feat = self.feat;
+        let thresh = self.thresh;
+        write!(f, "Hot16(x[{feat}] < {thresh})")
+    }
+}
+
+impl Pod for Hot16 {
+    const SIZE: usize = 6;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        Hot16 {
+            feat: u16::from_le_bytes(bytes[0..2].try_into().unwrap()),
+            thresh: f32::from_le_bytes(bytes[2..6].try_into().unwrap()),
+        }
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.feat.to_le_bytes());
+        out.extend_from_slice(&self.thresh.to_le_bytes());
+    }
+}
+
+/// The `u32` escape-hatch walk record (schemas past 65 536 features):
+/// 8 bytes, naturally aligned.
+#[derive(Clone, Copy)]
+#[repr(C)]
+pub(crate) struct Hot32 {
+    pub(crate) feat: u32,
+    pub(crate) thresh: f32,
+}
+
+impl fmt::Debug for Hot32 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Hot32(x[{}] < {})", self.feat, self.thresh)
+    }
+}
+
+impl Pod for Hot32 {
+    const SIZE: usize = 8;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        Hot32 {
+            feat: u32::from_le_bytes(bytes[0..4].try_into().unwrap()),
+            thresh: f32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+        }
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.feat.to_le_bytes());
+        out.extend_from_slice(&self.thresh.to_le_bytes());
+    }
+}
+
+/// The walk-record contract shared by [`Hot16`] and [`Hot32`]: the
+/// single-row walk and the batch sweeps are generic over it, so both
+/// encodings share one (monomorphised) evaluator.
+pub(crate) trait HotRec: Pod {
+    fn feat_ix(self) -> usize;
+    fn threshold(self) -> f32;
+}
+
+impl HotRec for Hot16 {
+    #[inline(always)]
+    fn feat_ix(self) -> usize {
+        self.feat as usize
+    }
+
+    #[inline(always)]
+    fn threshold(self) -> f32 {
+        self.thresh
+    }
+}
+
+impl HotRec for Hot32 {
+    #[inline(always)]
+    fn feat_ix(self) -> usize {
+        self.feat as usize
+    }
+
+    #[inline(always)]
+    fn threshold(self) -> f32 {
+        self.thresh
+    }
+}
+
+/// An owned byte buffer with 8-byte base alignment (a `Vec<u8>` from
+/// `fs::read` only guarantees alignment 1, which would make typed views
+/// unsound). Used by `FrozenDD::from_bytes` and as the mmap fallback.
+pub(crate) struct AlignedBuf {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl AlignedBuf {
+    pub(crate) fn from_bytes(bytes: &[u8]) -> AlignedBuf {
+        let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        for (i, chunk) in bytes.chunks(8).enumerate() {
+            let mut tmp = [0u8; 8];
+            tmp[..chunk.len()].copy_from_slice(chunk);
+            // native-endian round-trips the bytes exactly
+            words[i] = u64::from_ne_bytes(tmp);
+        }
+        AlignedBuf {
+            words,
+            len: bytes.len(),
+        }
+    }
+
+    pub(crate) fn as_bytes(&self) -> &[u8] {
+        // SAFETY: the Vec owns at least `len` initialised bytes and u64
+        // storage is valid to reinterpret as bytes.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr() as *const u8, self.len) }
+    }
+}
+
+impl fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AlignedBuf({} bytes)", self.len)
+    }
+}
+
+/// The backing storage of a loaded snapshot: mapped (zero-copy replica
+/// boot) or an aligned owned copy (in-memory bytes / non-unix fallback).
+pub(crate) enum SnapshotBuf {
+    Owned(AlignedBuf),
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped(crate::runtime::mmap::Mmap),
+}
+
+impl SnapshotBuf {
+    /// Open a snapshot file: `mmap` where supported (falling back to a
+    /// buffered read if the map fails), `fs::read` elsewhere.
+    pub(crate) fn open(path: &str) -> Result<SnapshotBuf> {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            match crate::runtime::mmap::Mmap::map(path) {
+                Ok(m) => return Ok(SnapshotBuf::Mapped(m)),
+                Err(e) => {
+                    crate::log_debug!("frozen: mmap of '{path}' failed ({e}); reading instead");
+                }
+            }
+        }
+        Ok(SnapshotBuf::Owned(AlignedBuf::from_bytes(&std::fs::read(
+            path,
+        )?)))
+    }
+
+    /// Whether this buffer is a file mapping (diagnostics).
+    pub(crate) fn is_mapped(&self) -> bool {
+        match self {
+            SnapshotBuf::Owned(_) => false,
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            SnapshotBuf::Mapped(_) => true,
+        }
+    }
+
+    pub(crate) fn as_bytes(&self) -> &[u8] {
+        match self {
+            SnapshotBuf::Owned(b) => b.as_bytes(),
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            SnapshotBuf::Mapped(m) => m.as_bytes(),
+        }
+    }
+}
+
+impl fmt::Debug for SnapshotBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "SnapshotBuf({} bytes, {})",
+            self.as_bytes().len(),
+            if self.is_mapped() { "mapped" } else { "owned" }
+        )
+    }
+}
+
+/// One typed array of a frozen diagram: a `Vec<T>` when built live, or a
+/// validated view into the shared snapshot buffer when loaded. `Deref`s
+/// to `&[T]` so evaluation code never distinguishes the two.
+#[derive(Clone)]
+pub(crate) enum Plane<T: Pod> {
+    Owned(Vec<T>),
+    View {
+        buf: Arc<SnapshotBuf>,
+        /// Byte offset of element 0 within `buf`.
+        off: usize,
+        /// Element count.
+        n: usize,
+        _marker: PhantomData<T>,
+    },
+}
+
+impl<T: Pod> Plane<T> {
+    /// A plane over `n` elements of `buf` starting at byte `off`:
+    /// zero-copy on little-endian hosts, parsed into an owned `Vec` on
+    /// big-endian ones. Rejects out-of-bounds and misaligned ranges.
+    pub(crate) fn from_section(buf: &Arc<SnapshotBuf>, off: usize, n: usize) -> Result<Plane<T>> {
+        debug_assert_eq!(T::SIZE, std::mem::size_of::<T>());
+        let byte_len = n
+            .checked_mul(T::SIZE)
+            .ok_or_else(|| Error::parse("fdd snapshot: plane length overflows"))?;
+        let end = off
+            .checked_add(byte_len)
+            .filter(|&e| e <= buf.as_bytes().len())
+            .ok_or_else(|| Error::parse("fdd snapshot: plane out of bounds"))?;
+        if off % std::mem::align_of::<T>() != 0 {
+            return Err(Error::parse("fdd snapshot: misaligned plane"));
+        }
+        if cfg!(target_endian = "little") {
+            Ok(Plane::View {
+                buf: buf.clone(),
+                off,
+                n,
+                _marker: PhantomData,
+            })
+        } else {
+            // Big-endian fallback: parse element-wise; byte-for-byte
+            // identical semantics, one copy.
+            let bytes = &buf.as_bytes()[off..end];
+            Ok(Plane::Owned(
+                bytes.chunks_exact(T::SIZE).map(T::from_le).collect(),
+            ))
+        }
+    }
+
+    /// Append the canonical little-endian bytes of every element.
+    pub(crate) fn write_le(&self, out: &mut Vec<u8>) {
+        for &v in self.iter() {
+            v.write_le(out);
+        }
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Plane<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            Plane::Owned(v) => v,
+            Plane::View { buf, off, n, .. } => {
+                // SAFETY: `from_section` checked bounds and alignment, the
+                // buffer is immutable and kept alive by the Arc, and `Pod`
+                // guarantees the byte layout matches `T` on this (little-
+                // endian) host — the View variant is never constructed on
+                // big-endian ones.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        buf.as_bytes().as_ptr().add(*off) as *const T,
+                        *n,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> fmt::Debug for Plane<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Plane::Owned(v) => write!(f, "Plane::Owned[{}]", v.len()),
+            Plane::View { n, off, .. } => write!(f, "Plane::View[{n} @ {off}]"),
+        }
+    }
+}
+
+impl<T: Pod> Default for Plane<T> {
+    fn default() -> Self {
+        Plane::Owned(Vec::new())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hot_record_layout_is_narrow() {
+        // The acceptance bar: hot bytes per decision node ≤ 8 (u16
+        // encoding is 6, the u32 escape hatch exactly 8) — down from the
+        // 16-byte AoS node of the previous layout.
+        assert_eq!(std::mem::size_of::<Hot16>(), 6);
+        assert_eq!(std::mem::align_of::<Hot16>(), 1);
+        assert_eq!(std::mem::size_of::<Hot32>(), 8);
+        assert!(std::mem::size_of::<Hot16>() <= 8);
+        assert!(std::mem::size_of::<Hot32>() <= 8);
+    }
+
+    #[test]
+    fn feat_width_chooser_and_codes() {
+        assert_eq!(FeatWidth::for_features(0), FeatWidth::U16);
+        assert_eq!(FeatWidth::for_features(65_536), FeatWidth::U16);
+        assert_eq!(FeatWidth::for_features(65_537), FeatWidth::U32);
+        assert_eq!(FeatWidth::U16.bytes(), 2);
+        assert_eq!(FeatWidth::U32.bytes(), 4);
+        assert_eq!(FeatWidth::from_bytes_code(2).unwrap(), FeatWidth::U16);
+        assert_eq!(FeatWidth::from_bytes_code(4).unwrap(), FeatWidth::U32);
+        assert!(FeatWidth::from_bytes_code(3).is_err());
+    }
+
+    #[test]
+    fn pod_roundtrips() {
+        let mut out = Vec::new();
+        Hot16 {
+            feat: 7,
+            thresh: 1.25,
+        }
+        .write_le(&mut out);
+        assert_eq!(out.len(), 6);
+        let back = Hot16::from_le(&out);
+        assert_eq!(back.feat_ix(), 7);
+        assert_eq!(back.threshold(), 1.25);
+        let mut out = Vec::new();
+        Hot32 {
+            feat: 70_000,
+            thresh: -2.5,
+        }
+        .write_le(&mut out);
+        assert_eq!(out.len(), 8);
+        let back = Hot32::from_le(&out);
+        assert_eq!(back.feat_ix(), 70_000);
+        assert_eq!(back.threshold(), -2.5);
+    }
+
+    #[test]
+    fn planes_view_aligned_buffers() {
+        // 8 bytes: two u32 values, little-endian
+        let bytes: Vec<u8> = [1u32, 2u32]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let buf = Arc::new(SnapshotBuf::Owned(AlignedBuf::from_bytes(&bytes)));
+        let p: Plane<u32> = Plane::from_section(&buf, 0, 2).unwrap();
+        assert_eq!(&p[..], &[1, 2]);
+        // out of bounds and misaligned ranges are rejected
+        assert!(Plane::<u32>::from_section(&buf, 0, 3).is_err());
+        assert!(Plane::<u32>::from_section(&buf, 2, 1).is_err());
+        // Hot16 views tolerate any offset (align 1)
+        let p: Plane<Hot16> = Plane::from_section(&buf, 2, 1).unwrap();
+        assert_eq!(p.len(), 1);
+        // owned planes behave identically
+        let o: Plane<u32> = Plane::Owned(vec![1, 2]);
+        assert_eq!(&o[..], &[1, 2]);
+    }
+}

@@ -1,13 +1,26 @@
 //! Structural validation of frozen diagrams.
 //!
-//! Runs on every build and on every snapshot load: a [`FrozenDD`] that
-//! passes is guaranteed to be a well-formed, fully reachable, properly
-//! ordered diagram — the evaluation paths can then index without checks.
+//! Two entry points for the two input forms:
+//!
+//! - [`validate`] checks the **raw** form ([`RawFrozen`]: absolute child
+//!   references, `Vec`-backed arrays) — run by `FrozenDD::from_raw` on
+//!   every freeze and on every v1 upgrade-on-load.
+//! - [`validate_loaded`] checks the **canonical plane** form (forward-
+//!   delta children, hot records, precomputed terminal tables) — run by
+//!   the v2 zero-copy loader over the borrowed views before a
+//!   [`FrozenDD`] is ever evaluated. Beyond the structural rules it also
+//!   proves the derived planes (hot records, term class/agg tables)
+//!   consistent with the cold sections they were derived from, so a
+//!   tampered-but-checksummed snapshot cannot smuggle in a divergent
+//!   answer table.
+//!
+//! A diagram that passes is well-formed, fully reachable and properly
+//! ordered — the evaluation paths can then index without checks.
 //!
 //! [`FrozenDD`]: crate::frozen::FrozenDD
 
 use crate::error::{Error, Result};
-use crate::frozen::{FrozenTerminals, RawFrozen, TERM_BIT};
+use crate::frozen::{FrozenDD, FrozenTerminals, HotPlane, RawFrozen, TermPlanes, TERM_BIT};
 
 fn err(msg: impl Into<String>) -> Error {
     Error::parse(format!("frozen: {}", msg.into()))
@@ -134,6 +147,189 @@ pub(crate) fn validate(raw: &RawFrozen) -> Result<()> {
                     )));
                 }
                 if raw.node_level[c] <= level {
+                    return Err(err(format!(
+                        "node {i} child {c} does not descend in the predicate order"
+                    )));
+                }
+                if node_reached[i] {
+                    node_reached[c] = true;
+                }
+            }
+        }
+    }
+    if node_reached.iter().any(|r| !r) {
+        return Err(err("unreachable node (the arrays must be exactly the cone)"));
+    }
+    if term_reached.iter().any(|r| !r) {
+        return Err(err("unreferenced terminal"));
+    }
+    Ok(())
+}
+
+/// Validate the canonical plane form a v2 snapshot loads into (see the
+/// module docs). Works entirely over the borrowed views — no section is
+/// copied to be checked.
+pub(crate) fn validate_loaded(dd: &FrozenDD) -> Result<()> {
+    let n_features = dd.schema.n_features();
+    let n_classes = dd.schema.n_classes();
+    if n_classes == 0 {
+        return Err(err("schema has no classes"));
+    }
+    let n_preds = dd.pred_feature.len();
+    if dd.pred_threshold.len() != n_preds {
+        return Err(err("predicate table arrays disagree on length"));
+    }
+    for (l, &f) in dd.pred_feature.iter().enumerate() {
+        if f as usize >= n_features {
+            return Err(err(format!(
+                "predicate {l} tests feature {f} but the schema has {n_features}"
+            )));
+        }
+    }
+
+    let n_nodes = dd.node_level.len();
+    if dd.hot.len() != n_nodes || dd.lo.len() != n_nodes || dd.hi.len() != n_nodes {
+        return Err(err("node planes disagree on length"));
+    }
+    if n_nodes as u64 >= u64::from(TERM_BIT) {
+        return Err(err("node array overflows the reference tag"));
+    }
+    let n_terms = dd.terminals.len();
+    if n_terms == 0 {
+        return Err(err("a diagram needs at least one terminal"));
+    }
+    if dd.terminals.abstraction() != dd.abstraction {
+        return Err(err("terminal storage does not match the abstraction"));
+    }
+    match &dd.terminals {
+        TermPlanes::Word { offsets, symbols } => {
+            if offsets.len() != n_terms + 1 {
+                return Err(err("word offset table has the wrong arity"));
+            }
+            if offsets.first() != Some(&0) {
+                return Err(err("word offsets must start at 0"));
+            }
+            if offsets.windows(2).any(|w| w[0] > w[1]) {
+                return Err(err("word offsets must be non-decreasing"));
+            }
+            if offsets.last().copied() != Some(symbols.len() as u32) {
+                return Err(err("word offsets do not cover the symbol array"));
+            }
+            if symbols.iter().any(|&s| s as usize >= n_classes) {
+                return Err(err("word symbol out of class range"));
+            }
+        }
+        TermPlanes::Vector { stride, counts } => {
+            if *stride as usize != n_classes {
+                return Err(err("vote vector stride does not match |C|"));
+            }
+            if counts.len() != n_terms * n_classes {
+                return Err(err("vote vector payload has the wrong arity"));
+            }
+        }
+        TermPlanes::Majority { classes } => {
+            if classes.iter().any(|&c| c as usize >= n_classes) {
+                return Err(err("terminal class out of range"));
+            }
+        }
+    }
+    // The precomputed answer tables must agree with the payloads they
+    // were derived from (a checksummed-but-inconsistent snapshot is
+    // rejected, not served).
+    if dd.term_class.len() != n_terms || dd.term_agg_reads.len() != n_terms {
+        return Err(err("terminal class/aggregation tables have the wrong arity"));
+    }
+    let mut counts_buf = Vec::new();
+    for i in 0..n_terms {
+        if dd.term_class[i] != dd.terminals.class_of_with(i, n_classes, &mut counts_buf) {
+            return Err(err(format!(
+                "terminal {i} class table disagrees with its payload"
+            )));
+        }
+        if dd.term_agg_reads[i] != dd.terminals.agg_reads_of(i, n_classes) {
+            return Err(err(format!(
+                "terminal {i} aggregation table disagrees with its payload"
+            )));
+        }
+    }
+
+    // Root: a terminal reference for the single-terminal diagram,
+    // otherwise node 0.
+    if dd.root & TERM_BIT != 0 {
+        if (dd.root & !TERM_BIT) as usize >= n_terms {
+            return Err(err("root terminal out of range"));
+        }
+        if n_nodes != 0 {
+            return Err(err("terminal root with non-empty node arrays"));
+        }
+    } else {
+        if n_nodes == 0 {
+            return Err(err("internal root with empty node arrays"));
+        }
+        if dd.root != 0 {
+            return Err(err("internal root must be node 0 (topological order)"));
+        }
+    }
+
+    // Per-node invariants + reachability in one forward sweep. Children
+    // are forward deltas: child = i + delta, delta ≥ 1.
+    let mut node_reached = vec![false; n_nodes];
+    let mut term_reached = vec![false; n_terms];
+    if dd.root & TERM_BIT != 0 {
+        term_reached[(dd.root & !TERM_BIT) as usize] = true;
+    } else {
+        node_reached[0] = true;
+    }
+    for i in 0..n_nodes {
+        let level = dd.node_level[i] as usize;
+        if level >= n_preds {
+            return Err(err(format!("node {i} level {level} out of range")));
+        }
+        // Hot-plane consistency: the inlined walk record must match the
+        // predicate table bit-for-bit.
+        let (hot_feat, hot_thresh) = match &dd.hot {
+            HotPlane::U16(p) => {
+                let h = p[i];
+                (u32::from(h.feat), h.thresh)
+            }
+            HotPlane::U32(p) => {
+                let h = p[i];
+                (h.feat, h.thresh)
+            }
+        };
+        if hot_feat != dd.pred_feature[level]
+            || hot_thresh.to_bits() != dd.pred_threshold[level].to_bits()
+        {
+            return Err(err(format!(
+                "node {i} hot record disagrees with predicate {level}"
+            )));
+        }
+        let (lo, hi) = (dd.lo[i], dd.hi[i]);
+        if lo == hi {
+            return Err(err(format!("node {i} is redundant (lo == hi)")));
+        }
+        for stored in [lo, hi] {
+            if stored & TERM_BIT != 0 {
+                let t = (stored & !TERM_BIT) as usize;
+                if t >= n_terms {
+                    return Err(err(format!(
+                        "node {i} references terminal {t} out of range"
+                    )));
+                }
+                if node_reached[i] {
+                    term_reached[t] = true;
+                }
+            } else {
+                if stored == 0 {
+                    return Err(err(format!("node {i} has a zero forward delta")));
+                }
+                let c = i + stored as usize;
+                if c >= n_nodes {
+                    return Err(err(format!(
+                        "node {i} child {c} breaks the topological order"
+                    )));
+                }
+                if dd.node_level[c] as usize <= level {
                     return Err(err(format!(
                         "node {i} child {c} does not descend in the predicate order"
                     )));

@@ -70,29 +70,50 @@
 //! # let _ = (classes, one);
 //! ```
 //!
-//! Two crossovers govern how a batch executes:
+//! Three crossovers govern how a batch executes on the frozen backend:
 //!
-//! - **batch-vs-walk**: the frozen node-ordered sweep costs what the
-//!   diagram costs, not what the batch costs, so batches smaller than
-//!   `nodes / 32` fall back to plain per-row walks — identical answers,
-//!   better latency.
+//! - **batch-vs-walk**: a sweep costs what the diagram costs, not what
+//!   the batch costs, so batches smaller than `nodes / 32` fall back to
+//!   plain per-row walks — identical answers, better latency.
+//! - **cache tiling**: diagrams whose hot node planes exceed the LLC
+//!   budget (`ServeConfig::tile_bytes` / `serve --tile-bytes`, auto
+//!   4 MiB) are swept in topological node *tiles*: rows walk as far as
+//!   the resident tile allows, then park on the destination tile's
+//!   chain, so each tile streams through cache once per batch instead of
+//!   the whole diagram thrashing once per level. Smaller diagrams keep
+//!   the round-based counting-scatter sweep.
 //! - **multi-core sharding**: batches past a few hundred rows are cut
 //!   into contiguous shards across a spawn-once worker pool
 //!   ([`runtime::pool`]); parallelism defaults to
 //!   [`std::thread::available_parallelism`] and is configurable with
 //!   `ServeConfig::eval_threads` / `forest-add serve --eval-threads`.
 //!   Shards write disjoint output ranges, so results are bit-identical
-//!   to the single-threaded path at any thread count.
+//!   to the single-threaded path at any thread count and tile size.
 //!
-//! ## Snapshots: compile once, serve from a frozen artifact
+//! §6 cost metering survives every batch path:
+//! [`engine::Engine::classify_batch_steps`] (HTTP: `"steps": true` on
+//! `POST /classify_batch`) returns the per-row step counts the single-row
+//! walk would report, bit-identical.
+//!
+//! ## Snapshots: compile once, mmap everywhere
 //!
 //! Compilation is expensive; serving should not be. The frozen runtime
-//! ([`frozen`]) splits the two: compile → freeze → ship the `fdd-v1`
-//! binary snapshot, and every replica starts by loading it with a single
-//! contiguous read — no JSON parsing, no re-training, identical
-//! predictions (bit-for-bit, steps included). The same flow is available
-//! on the command line as `forest-add freeze` (or `compile --format fdd`),
-//! `forest-add inspect`, and `forest-add serve --snapshot <path>`.
+//! ([`frozen`]) splits the two: compile → freeze → ship the `fdd-v2`
+//! binary snapshot. The artifact's sections are 64-byte-aligned
+//! little-endian planes — the narrow hot walk records (6 bytes per
+//! decision node: `u16` feature + `f32` threshold, with a `u32` escape
+//! hatch past 65 536 features), forward-delta child arrays, and
+//! precomputed terminal tables — so a replica `mmap`s the file and the
+//! on-disk bytes *are* the runtime arrays: zero copies, zero per-node
+//! allocations, checksum + full structural validation still enforced,
+//! and the kernel shares the pages across every process serving the
+//! same model. Hosts without `mmap` (or `FrozenDD::from_bytes`) pay one
+//! aligned copy; legacy `fdd-v1` artifacts upgrade on load. Memory
+//! footprint and encoding are reported by `forest-add inspect`
+//! (bytes/node, per-section sizes, boot path). The same flow is
+//! available on the command line as `forest-add freeze` (or
+//! `compile --format fdd`), `forest-add inspect`, and
+//! `forest-add serve --snapshot <path>`.
 //!
 //! ```no_run
 //! use forest_add::compile::{CompileOptions, ForestCompiler};

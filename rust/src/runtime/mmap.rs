@@ -1,0 +1,145 @@
+//! Minimal read-only file mapping, std-only (raw `mmap(2)` FFI).
+//!
+//! The frozen snapshot loader uses this to boot replicas without copying
+//! the artifact: the kernel pages the file in on demand and shares the
+//! pages across every process serving the same snapshot. No external
+//! crate is available offline, so the two syscalls are declared here
+//! directly; the surface is deliberately tiny (read-only, whole-file,
+//! private mapping).
+//!
+//! Only built on 64-bit unix — `off_t` is pinned to `i64` there, which
+//! keeps the FFI declaration honest. Everywhere else
+//! [`supported`] reports `false` and callers fall back to `fs::read`
+//! (same bytes, one copy).
+
+/// Whether this build maps snapshot files. When `false`, snapshot loads
+/// fall back to a buffered read — identical semantics, one extra copy.
+pub const fn supported() -> bool {
+    cfg!(all(unix, target_pointer_width = "64"))
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod imp {
+    use crate::error::{Error, Result};
+    use std::fs::File;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+    use std::ptr::NonNull;
+
+    // Shared by Linux and the BSDs/macOS.
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    /// A read-only private mapping of one whole file, unmapped on drop.
+    pub struct Mmap {
+        ptr: NonNull<u8>,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) and owned
+    // exclusively by this value; sharing &Mmap across threads only ever
+    // reads the mapped bytes.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `path` read-only. The file descriptor is closed before
+        /// returning; POSIX keeps the mapping valid regardless.
+        pub fn map(path: &str) -> Result<Mmap> {
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            let len = usize::try_from(len)
+                .map_err(|_| Error::invalid(format!("'{path}' is too large to map")))?;
+            if len == 0 {
+                // mmap(2) rejects zero-length mappings; an empty file can
+                // never be a valid snapshot anyway.
+                return Err(Error::parse(format!("'{path}' is empty")));
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(Error::Io(std::io::Error::last_os_error()));
+            }
+            let ptr = NonNull::new(ptr as *mut u8)
+                .ok_or_else(|| Error::Runtime("mmap returned a null mapping".into()))?;
+            Ok(Mmap { ptr, len })
+        }
+
+        /// Mapped length in bytes (never 0).
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        /// Always `false` (zero-length mappings cannot be constructed);
+        /// present for API completeness.
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+
+        /// The mapped bytes.
+        pub fn as_bytes(&self) -> &[u8] {
+            // SAFETY: ptr/len describe a live PROT_READ mapping owned by
+            // self; the borrow cannot outlive the unmap in Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: exactly the range returned by mmap in `map`.
+            let _ = unsafe { munmap(self.ptr.as_ptr() as *mut c_void, self.len) };
+        }
+    }
+
+    impl std::fmt::Debug for Mmap {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Mmap({} bytes)", self.len)
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn maps_and_reads_a_file() {
+            let path = std::env::temp_dir().join(format!("mmap-test-{}", std::process::id()));
+            let path_s = path.to_str().unwrap().to_string();
+            std::fs::write(&path, b"hello mapping").unwrap();
+            let m = Mmap::map(&path_s).unwrap();
+            assert_eq!(m.len(), 13);
+            assert!(!m.is_empty());
+            assert_eq!(m.as_bytes(), b"hello mapping");
+            drop(m);
+            // empty and missing files error cleanly
+            std::fs::write(&path, b"").unwrap();
+            assert!(Mmap::map(&path_s).is_err());
+            let _ = std::fs::remove_file(&path);
+            assert!(Mmap::map(&path_s).is_err());
+            assert!(super::super::supported());
+        }
+    }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+pub use imp::Mmap;

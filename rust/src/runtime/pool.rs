@@ -247,6 +247,42 @@ where
     true
 }
 
+/// [`run_sharded`] with a second per-row output slice (classes + steps):
+/// both are cut into the same contiguous per-shard chunks, so the
+/// bit-identity guarantee covers the step counts too. `out_a` and
+/// `out_b` must be the same length as the batch.
+pub fn run_sharded2<'a, F>(
+    rows: RowMatrix<'a>,
+    out_a: &mut [u32],
+    out_b: &mut [u32],
+    min_per_shard: usize,
+    body: F,
+) -> bool
+where
+    F: Fn(RowMatrix<'a>, &mut [u32], &mut [u32]) + Send + Sync,
+{
+    debug_assert_eq!(out_a.len(), rows.n_rows());
+    debug_assert_eq!(out_b.len(), rows.n_rows());
+    let shards = shard_count(rows.n_rows(), min_per_shard);
+    if shards <= 1 {
+        return false;
+    }
+    let chunk = rows.n_rows().div_ceil(shards);
+    let body = &body;
+    let jobs: Vec<ScopedJob<'_>> = out_a
+        .chunks_mut(chunk)
+        .zip(out_b.chunks_mut(chunk))
+        .enumerate()
+        .map(|(i, (chunk_a, chunk_b))| {
+            let shard = rows.slice(i * chunk, chunk_a.len());
+            let job: ScopedJob<'_> = Box::new(move || body(shard, chunk_a, chunk_b));
+            job
+        })
+        .collect();
+    global().run_scoped(jobs);
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,6 +385,34 @@ mod tests {
         let mut small = vec![9u32; 4];
         assert!(!run_sharded(rows.slice(0, 4), &mut small, 64, |_, _| {}));
         assert_eq!(small, vec![9; 4]);
+    }
+
+    #[test]
+    fn run_sharded2_covers_both_outputs_or_declines() {
+        let cells: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let rows = RowMatrix::new(&cells, 1).unwrap();
+        let mut a = vec![0u32; 4096];
+        let mut b = vec![0u32; 4096];
+        let did = run_sharded2(rows, &mut a, &mut b, 64, |shard, ca, cb| {
+            for ((sa, sb), row) in ca.iter_mut().zip(cb.iter_mut()).zip(shard.iter()) {
+                *sa = row[0] as u32 + 1;
+                *sb = row[0] as u32 + 2;
+            }
+        });
+        if eval_threads() > 1 {
+            assert!(did, "4096 rows must shard on a multicore host");
+            for i in 0..4096 {
+                assert_eq!(a[i], i as u32 + 1, "row {i}");
+                assert_eq!(b[i], i as u32 + 2, "row {i}");
+            }
+        } else {
+            assert!(!did);
+        }
+        let mut sa = vec![9u32; 4];
+        let mut sb = vec![9u32; 4];
+        assert!(!run_sharded2(rows.slice(0, 4), &mut sa, &mut sb, 64, |_, _, _| {}));
+        assert_eq!(sa, vec![9; 4]);
+        assert_eq!(sb, vec![9; 4]);
     }
 
     #[test]

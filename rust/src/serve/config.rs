@@ -9,7 +9,7 @@ use crate::util::json::{self, Json};
 pub struct ServeConfig {
     /// Bind address (`127.0.0.1:0` picks a free port).
     pub addr: String,
-    /// `fdd-v1` snapshot to serve (empty = train from `dataset` instead).
+    /// `fdd` snapshot to serve (v1 or v2) (empty = train from `dataset` instead).
     /// When set, the replica skips training entirely and registers the
     /// frozen model as `default` — the millisecond startup path.
     pub snapshot: String,
@@ -37,6 +37,11 @@ pub struct ServeConfig {
     /// auto = [`std::thread::available_parallelism`]). The process-wide
     /// worker pool is sized once at startup.
     pub eval_threads: usize,
+    /// LLC budget of the frozen backend's cache-tiled batch sweep, in
+    /// bytes (`0` = auto, currently 4 MiB). Diagrams whose hot node
+    /// planes exceed the budget are swept in topological tiles of this
+    /// size so parked rows stay cache-resident.
+    pub tile_bytes: usize,
     /// Artifacts directory (XLA path).
     pub artifacts_dir: String,
     /// Artifact variant to load.
@@ -60,6 +65,7 @@ impl Default for ServeConfig {
             reply_timeout_ms: 5_000,
             http_workers: 4,
             eval_threads: 0,
+            tile_bytes: 0,
             artifacts_dir: "artifacts".into(),
             variant: "base".into(),
             enable_xla: true,
@@ -107,6 +113,9 @@ impl ServeConfig {
         if let Some(n) = v.get_i64("eval_threads") {
             cfg.eval_threads = n as usize;
         }
+        if let Some(n) = v.get_i64("tile_bytes") {
+            cfg.tile_bytes = n as usize;
+        }
         if let Some(s) = v.get_str("artifacts_dir") {
             cfg.artifacts_dir = s.to_string();
         }
@@ -147,6 +156,13 @@ impl ServeConfig {
                 "eval_threads must be at most 1024 (0 = all cores)",
             ));
         }
+        // Same wrap defence: no real LLC exceeds this, and a wrapped
+        // negative would otherwise disable tiling silently.
+        if self.tile_bytes > (1 << 30) {
+            return Err(Error::invalid(
+                "tile_bytes must be at most 1 GiB (0 = auto)",
+            ));
+        }
         Ok(())
     }
 
@@ -165,6 +181,7 @@ impl ServeConfig {
             ("reply_timeout_ms", json::num(self.reply_timeout_ms as f64)),
             ("http_workers", json::num(self.http_workers as f64)),
             ("eval_threads", json::num(self.eval_threads as f64)),
+            ("tile_bytes", json::num(self.tile_bytes as f64)),
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
             ("variant", json::s(self.variant.clone())),
             ("enable_xla", Json::Bool(self.enable_xla)),
@@ -190,6 +207,7 @@ mod tests {
             reply_timeout_ms: 250,
             snapshot: "model.fdd".into(),
             eval_threads: 6,
+            tile_bytes: 2 << 20,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -199,6 +217,7 @@ mod tests {
         assert_eq!(back.reply_timeout_ms, 250);
         assert_eq!(back.snapshot, "model.fdd");
         assert_eq!(back.eval_threads, 6);
+        assert_eq!(back.tile_bytes, 2 << 20);
     }
 
     #[test]
@@ -218,6 +237,9 @@ mod tests {
         );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"eval_threads": 500000}"#).unwrap()).is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"tile_bytes": -1}"#).unwrap()).is_err()
         );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"reply_timeout_ms": 0}"#).unwrap()).is_err()

@@ -8,7 +8,9 @@
 //! - `GET  /model`            → default-model description (per-backend info)
 //! - `GET  /models`           → all registered models (name, version, backends)
 //! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?}`
-//! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?}`
+//! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?,
+//!   "steps": true?}` — with `"steps": true` the response carries the §6
+//!   step count per row (`null` when the backend cannot meter)
 
 use crate::batch::RowMatrixBuf;
 use crate::error::{Error, Result};
@@ -295,8 +297,10 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
     }
     let backend = parse_backend(&v)?;
     let model = v.get_str("model").map(String::from);
-    let (classes, version) = router.classify_batch(batch.as_matrix(), backend, model.as_deref())?;
-    Ok(json::obj(vec![
+    let want_steps = v.get("steps").and_then(Json::as_bool).unwrap_or(false);
+    let (classes, steps, version) =
+        router.classify_batch(batch.as_matrix(), backend, model.as_deref(), want_steps)?;
+    let mut fields = vec![
         (
             "classes",
             Json::Arr(classes.iter().map(|&c| json::num(c as f64)).collect()),
@@ -311,7 +315,17 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
             ),
         ),
         ("model", json::s(version.id.to_string())),
-    ]))
+    ];
+    if want_steps {
+        fields.push((
+            "steps",
+            match steps {
+                Some(s) => Json::Arr(s.iter().map(|&n| json::num(n as f64)).collect()),
+                None => Json::Null,
+            },
+        ));
+    }
+    Ok(json::obj(fields))
 }
 
 /// Tiny blocking HTTP client for tests, examples and the bench harness.

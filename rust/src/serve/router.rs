@@ -215,31 +215,40 @@ impl Router {
     }
 
     /// Serve an explicit flat batch (bypasses the single-request batcher
-    /// and uses the backend's native batch path directly). Returns the
-    /// classes plus the model version that served them, so callers render
-    /// labels against the exact version that classified (not a later
-    /// hot-swap).
+    /// and uses the backend's native batch path directly). With
+    /// `want_steps`, metered backends also return the §6 step count per
+    /// row (`None` for backends that cannot meter, e.g. XLA) — the batch
+    /// counterpart of the single-request `steps` field. Returns the
+    /// classes (+ steps) plus the model version that served them, so
+    /// callers render labels against the exact version that classified
+    /// (not a later hot-swap).
     pub fn classify_batch(
         &self,
         rows: RowMatrix<'_>,
         backend: Option<BackendKind>,
         model: Option<&str>,
-    ) -> Result<(Vec<u32>, Arc<crate::engine::ModelVersion>)> {
+        want_steps: bool,
+    ) -> Result<(Vec<u32>, Option<Vec<u32>>, Arc<crate::engine::ModelVersion>)> {
         let start = Instant::now();
         let result = (|| {
             let version = self.registry.get(model)?;
             let backend = self.pick_backend(&version, backend);
             let slot = version.slot(backend)?.clone();
             version.check_matrix(rows)?;
-            Ok((backend, slot.classifier.classify_batch(rows)?, version))
+            let (classes, steps) = if want_steps {
+                slot.classifier.classify_batch_with_steps(rows)?
+            } else {
+                (slot.classifier.classify_batch(rows)?, None)
+            };
+            Ok((backend, classes, steps, version))
         })();
         match result {
-            Ok((backend, out, version)) => {
+            Ok((backend, out, steps, version)) => {
                 let elapsed = start.elapsed();
                 self.metrics.observe(backend, elapsed);
                 self.metrics.observe_batch(rows.n_rows());
                 self.metrics.observe_batch_eval(elapsed);
-                Ok((out, version))
+                Ok((out, steps, version))
             }
             Err(e) => {
                 self.metrics.observe_error();
@@ -335,17 +344,30 @@ mod tests {
             buf.push_row(ds.row(i * 5)).unwrap();
         }
         let rows = buf.as_matrix();
-        let (dd, version) = r.classify_batch(rows, Some(BackendKind::Dd), None).unwrap();
-        let (rf, _) = r
-            .classify_batch(rows, Some(BackendKind::Forest), None)
+        let (dd, no_steps, version) = r
+            .classify_batch(rows, Some(BackendKind::Dd), None, false)
             .unwrap();
-        let (frozen, _) = r
-            .classify_batch(rows, Some(BackendKind::Frozen), None)
+        assert!(no_steps.is_none(), "steps only on request");
+        let (rf, _, _) = r
+            .classify_batch(rows, Some(BackendKind::Forest), None, false)
+            .unwrap();
+        let (frozen, frozen_steps, _) = r
+            .classify_batch(rows, Some(BackendKind::Frozen), None, true)
             .unwrap();
         assert_eq!(dd, rf);
         assert_eq!(dd, frozen);
         assert_eq!(dd.len(), 30);
         assert_eq!(version.id.to_string(), "default@v1");
+        // §6 metering survives the explicit-batch path, row for row
+        let frozen_steps = frozen_steps.expect("frozen walks are metered");
+        for (i, row) in rows.iter().enumerate() {
+            let single = r
+                .classify(
+                    &ClassifyRequest::new(row.to_vec()).on_backend(BackendKind::Frozen),
+                )
+                .unwrap();
+            assert_eq!(frozen_steps[i] as usize, single.steps.unwrap(), "row {i}");
+        }
         // batch sizes and eval time land in the histograms
         assert!(r.metrics().batch_size.count() >= 3);
         assert!(r.metrics().batch_eval_us.count() >= 3);

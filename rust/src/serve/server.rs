@@ -30,7 +30,7 @@ pub struct ServerHandle {
 /// Build the model and start serving (returns once the socket is bound).
 ///
 /// Two startup paths: with [`ServeConfig::snapshot`] set, the replica
-/// registers a pre-compiled `fdd-v1` artifact (one contiguous read, no
+/// registers a pre-compiled `fdd` artifact (mmap'd zero-copy where supported, no
 /// training); otherwise it trains and compiles from the configured
 /// dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
@@ -38,7 +38,10 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     // Size the shared evaluation pool before any batch traffic exists
     // (spawn-once; the first effective configuration wins process-wide).
     let eval_threads = crate::runtime::pool::configure(cfg.eval_threads);
-    crate::log_info!("serve: evaluation parallelism {eval_threads}");
+    let tile_bytes = crate::frozen::configure_tile_bytes(cfg.tile_bytes);
+    crate::log_info!(
+        "serve: evaluation parallelism {eval_threads}, frozen tile budget {tile_bytes} bytes"
+    );
     let engine = if !cfg.snapshot.is_empty() {
         let engine = Engine::new();
         let id = engine.register_snapshot("default", &cfg.snapshot)?;

@@ -1,35 +1,48 @@
-//! The frozen sweep's zero-allocation guarantee, enforced with a
-//! counting `GlobalAlloc`: once the [`BatchScratch`] and the output
-//! vector are warm, `classify_batch_into` must not touch the allocator —
-//! the steady-state serving loop runs entirely on reused buffers.
+//! The frozen runtime's allocation guarantees, enforced with a counting
+//! `GlobalAlloc`:
+//!
+//! 1. **Warm sweeps allocate nothing.** Once the [`BatchScratch`] and the
+//!    output vector are warm, `classify_batch_into` (round-based and
+//!    cache-tiled, with and without step metering) must not touch the
+//!    allocator — the steady-state serving loop runs entirely on reused
+//!    buffers.
+//! 2. **Snapshot boot is zero-copy.** `FrozenDD::load` on the mmap path
+//!    must not copy or re-materialise node/terminal sections: total bytes
+//!    allocated during the load stay far below the node-plane size (a
+//!    single copied section would blow the bound), and the loaded model
+//!    reports `mapped()`.
 //!
 //! This file deliberately holds a single `#[test]` so no concurrent test
-//! thread can allocate inside the measurement window.
+//! thread can allocate inside the measurement windows.
 
 use forest_add::compile::{CompileOptions, ForestCompiler};
 use forest_add::data::datasets;
 use forest_add::forest::ForestLearner;
-use forest_add::frozen::BatchScratch;
+use forest_add::frozen::{BatchScratch, FrozenDD};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
 
 unsafe impl GlobalAlloc for CountingAlloc {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc(layout)
     }
 
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
@@ -41,8 +54,16 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn alloc_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
 #[test]
-fn warm_frozen_sweep_allocates_nothing() {
+fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     let data = datasets::load("iris").unwrap();
     let forest = ForestLearner::default().trees(30).seed(5).fit(&data);
     let dd = ForestCompiler::new(CompileOptions::default())
@@ -51,26 +72,88 @@ fn warm_frozen_sweep_allocates_nothing() {
     let frozen = dd.freeze();
 
     // Tile the dataset far past the batch-vs-walk crossover so the
-    // counting-scatter sweep (not the per-row fallback) runs.
+    // sweeps (not the per-row fallback) run.
     let tiled = forest_add::bench_support::tile_rows(&data, 2048, 7);
     let rows = tiled.as_matrix();
 
     let mut scratch = BatchScratch::new();
     let mut out = Vec::new();
-    // Warm-up: sizes the scratch node/slot arrays and the output vector.
+    let mut steps = Vec::new();
+    // Warm-up: sizes the scratch node/slot/chain arrays and the outputs,
+    // for every sweep strategy the measurement loop exercises.
     frozen.classify_batch_into(rows, &mut scratch, &mut out);
     let want = out.clone();
+    frozen.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
+    frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
+    let want_steps = steps.clone();
 
-    let before = ALLOCS.load(Ordering::Relaxed);
+    let before = allocs();
     for _ in 0..10 {
+        // round-based counting scatter (diagram fits the default budget)
         frozen.classify_batch_into(rows, &mut scratch, &mut out);
         assert_eq!(out, want, "warm sweeps must stay bit-identical");
+        // cache-tiled chain sweep (budget 1 forces minimum-size tiles)
+        frozen.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
+        assert_eq!(out, want, "warm tiled sweeps must stay bit-identical");
+        // steps-metered tiled sweep
+        frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
+        assert_eq!(out, want);
+        assert_eq!(steps, want_steps, "warm metered sweeps must stay bit-identical");
     }
-    let after = ALLOCS.load(Ordering::Relaxed);
+    let after = allocs();
     assert_eq!(
         after - before,
         0,
-        "the warm frozen sweep must not allocate ({} allocations in 10 batches)",
+        "the warm frozen sweeps must not allocate ({} allocations in 30 batches)",
         after - before
     );
+
+    // ---- snapshot boot: the mmap path must not copy node/terminal
+    // sections. Use a diagram big enough that copying even a single
+    // plane would blow the allocation bound. ----
+    let big_data = datasets::load("tic-tac-toe").unwrap();
+    let big_forest = ForestLearner::default().trees(16).seed(11).fit(&big_data);
+    let big_frozen = ForestCompiler::new(CompileOptions::default())
+        .compile(&big_forest)
+        .unwrap()
+        .freeze();
+    let path = std::env::temp_dir().join(format!("alloc-frozen-{}.fdd", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    big_frozen.save(&path_s).unwrap();
+    let file_len = std::fs::metadata(&path).unwrap().len();
+    let summary = forest_add::frozen::snapshot::summarize(&std::fs::read(&path).unwrap()).unwrap();
+    let node_bytes = summary.node_section_bytes() as u64;
+    assert!(
+        node_bytes > 2048,
+        "the fixture diagram must be big enough to make a copied section visible \
+         ({node_bytes} node bytes)"
+    );
+
+    let before_bytes = alloc_bytes();
+    let loaded = FrozenDD::load(&path_s).unwrap();
+    let loaded_bytes = alloc_bytes() - before_bytes;
+    if forest_add::runtime::mmap::supported() {
+        assert!(loaded.mapped(), "unix 64-bit loads must take the mmap path");
+        // Validation scratch (reachability bitmaps, ~1 byte/node), the
+        // schema strings and the section table allocate a little;
+        // copying even the smallest node plane (4 bytes/node of the
+        // 18 node-section bytes) would break this bound.
+        assert!(
+            loaded_bytes < node_bytes / 4,
+            "mmap load allocated {loaded_bytes} bytes against {node_bytes} node-section bytes \
+             (file {file_len} bytes) — a node/terminal section was copied"
+        );
+    } else {
+        assert!(!loaded.mapped());
+    }
+    // the zero-copy model serves the same answers as the in-memory one
+    for i in (0..big_data.n_rows()).step_by(37) {
+        assert_eq!(
+            loaded.classify_with_steps(big_data.row(i)),
+            big_frozen.classify_with_steps(big_data.row(i)),
+            "row {i}"
+        );
+    }
+    drop(loaded);
+    let _ = std::fs::remove_file(&path);
 }

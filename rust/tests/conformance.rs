@@ -160,10 +160,12 @@ fn agreement_helper_is_exactly_one_on_iris() {
 
 /// Persistence conformance: on **every** built-in dataset and **every**
 /// abstraction, the JSON-persisted-then-reloaded diagram, the frozen
-/// form, and the snapshot-roundtripped frozen form must all be
+/// form, the snapshot-roundtripped frozen form, the **mmap-loaded**
+/// snapshot, and the **v1-upgraded** legacy artifact must all be
 /// bit-identical to the live `CompiledDD` — class *and* §6 step count,
-/// single-row *and* batch paths — and must agree with the source forest
-/// on every row. Snapshot bytes must survive `write → load → re-write`
+/// single-row *and* batch paths (including the batch steps variant and
+/// every tile budget tested) — and must agree with the source forest on
+/// every row. Snapshot bytes must survive `write → load → re-write`
 /// unchanged.
 #[test]
 fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
@@ -195,11 +197,35 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
                 "{tag}: snapshot bytes must round-trip unchanged"
             );
 
-            // Batch paths (trait default for the live DD, node-array pass
-            // for the frozen forms).
+            // Legacy v1 artifact upgraded on load.
+            let from_v1 = FrozenDD::from_bytes(&forest_add::frozen::snapshot::to_bytes_v1(
+                &frozen,
+            ))
+            .unwrap();
+
+            // The replica boot path: save to disk, mmap back.
+            let path = std::env::temp_dir().join(format!(
+                "conf-{}-{}-{:?}.fdd",
+                std::process::id(),
+                name,
+                abstraction
+            ));
+            let path_s = path.to_str().unwrap().to_string();
+            frozen.save(&path_s).unwrap();
+            let mapped = FrozenDD::load(&path_s).unwrap();
+            assert_eq!(
+                mapped.mapped(),
+                forest_add::runtime::mmap::supported(),
+                "{tag}: snapshot load must map where supported"
+            );
+
+            // Batch paths (trait default for the live DD, sweeps for the
+            // frozen forms) + the steps-metered batch variant.
             let dd_batch = Classifier::classify_batch(&dd, rows).unwrap();
             let frozen_batch = frozen.classify_batch(rows);
             let snapshot_batch = from_snapshot.classify_batch(rows);
+            let (mapped_batch, mapped_steps) = mapped.classify_batch_steps(rows);
+            let (v1_batch, v1_steps) = from_v1.classify_batch_steps(rows);
 
             for (i, x) in rows.iter().enumerate() {
                 let want = forest.predict(x);
@@ -220,10 +246,52 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
                     live,
                     "{tag} row {i}: snapshot round-trip"
                 );
+                assert_eq!(
+                    mapped.classify_with_steps(x),
+                    live,
+                    "{tag} row {i}: mmap-loaded snapshot"
+                );
+                assert_eq!(
+                    from_v1.classify_with_steps(x),
+                    live,
+                    "{tag} row {i}: v1-upgraded snapshot"
+                );
                 assert_eq!(dd_batch[i], live.0, "{tag} row {i}: dd batch");
                 assert_eq!(frozen_batch[i], live.0, "{tag} row {i}: frozen batch");
                 assert_eq!(snapshot_batch[i], live.0, "{tag} row {i}: snapshot batch");
+                assert_eq!(mapped_batch[i], live.0, "{tag} row {i}: mmap batch");
+                assert_eq!(v1_batch[i], live.0, "{tag} row {i}: v1 batch");
+                assert_eq!(
+                    mapped_steps[i] as usize, live.1,
+                    "{tag} row {i}: mmap batch steps"
+                );
+                assert_eq!(
+                    v1_steps[i] as usize, live.1,
+                    "{tag} row {i}: v1 batch steps"
+                );
             }
+
+            // Every tile budget yields the same classes and steps as the
+            // single-row walk (1 forces minimum tiles, 0 = global auto).
+            let mut scratch = forest_add::frozen::BatchScratch::new();
+            let (mut out, mut steps) = (Vec::new(), Vec::new());
+            for tile_budget in [1usize, 4096, 0] {
+                mapped.classify_batch_steps_into_tiled(
+                    rows,
+                    &mut scratch,
+                    &mut out,
+                    &mut steps,
+                    tile_budget,
+                );
+                assert_eq!(out, mapped_batch, "{tag}: tile budget {tile_budget}");
+                assert_eq!(
+                    steps, mapped_steps,
+                    "{tag}: tile budget {tile_budget} steps"
+                );
+            }
+
+            drop(mapped);
+            let _ = std::fs::remove_file(&path);
         }
     }
 }
@@ -307,12 +375,21 @@ fn sharded_batches_are_bit_identical_to_single_thread() {
             let c = slot.classifier.as_ref();
             let batch = c.classify_batch(rows).unwrap();
             assert_eq!(batch.len(), rows.n_rows());
+            // the metered batch path shards identically
+            let (steps_batch, steps) = c.classify_batch_with_steps(rows).unwrap();
+            assert_eq!(steps_batch, batch, "{name}/{model}: steps batch classes");
+            let steps = steps.expect("native backends meter steps");
             // serial truth: one classify per row through the same trait
             for (i, row) in rows.iter().enumerate() {
+                let (want_class, want_steps) = c.classify_with_steps(row).unwrap();
                 assert_eq!(
-                    batch[i],
-                    c.classify(row).unwrap(),
+                    batch[i], want_class,
                     "{name}/{model} row {i}: sharded batch diverged"
+                );
+                assert_eq!(
+                    steps[i] as usize,
+                    want_steps.unwrap(),
+                    "{name}/{model} row {i}: sharded batch steps diverged"
                 );
             }
         }

@@ -1,20 +1,26 @@
 #!/usr/bin/env python3
-"""Generate tests/fixtures/tiny-v1.fdd, the forward-compat tripwire.
+"""Generate tests/fixtures/tiny-v1.fdd and tiny-v2.fdd, the
+forward-compat tripwires.
 
-This is an *independent* implementation of the `forest-add/fdd-v1` binary
-snapshot format (see rust/src/frozen/snapshot.rs for the authoritative
-spec). The checked-in fixture is loaded by tests/snapshot_compat.rs; if
-the Rust reader or writer drifts from the documented layout, that test —
-not a customer's serving fleet — is what breaks.
+This is an *independent* implementation of the `forest-add/fdd` binary
+snapshot formats (see rust/src/frozen/snapshot.rs for the authoritative
+spec). The checked-in fixtures are loaded by tests/snapshot_compat.rs; if
+the Rust reader or writer drifts from the documented layouts, those tests
+— not a customer's serving fleet — are what break.
 
-The diagram encoded here (majority abstraction, 2 features, classes
-["a", "b"]):
+The diagram encoded in both fixtures (majority abstraction, 2 features,
+classes ["a", "b"]):
 
     x0 < 0.5 ? "a" : (x1 < 0.5 ? "b" : "a")
 
 Node arrays (topological, root first):
     node 0: level 0 (x0 < 0.5), hi -> terminal 0 ("a"), lo -> node 1
     node 1: level 1 (x1 < 0.5), hi -> terminal 1 ("b"), lo -> terminal 0
+
+v1 stores absolute child references in a 12-byte-per-node AoS-ish
+section; v2 stores the narrow hot plane (u16 feat + f32 thresh, 6 bytes),
+forward-delta lo/hi arrays, the precomputed terminal class/aggregation
+tables, and 64-byte-aligned sections.
 
 Run from anywhere:  python3 rust/tests/fixtures/gen_tiny_fdd.py
 """
@@ -40,7 +46,42 @@ def string(s: str) -> bytes:
     return struct.pack("<I", len(raw)) + raw
 
 
-def meta() -> bytes:
+def schema() -> bytes:
+    out = string("a") + string("b")  # classes
+    for name in ("x0", "x1"):  # numeric features
+        out += string(name) + b"\x00"
+    return out
+
+
+def preds() -> bytes:
+    out = struct.pack("<II", 0, 1)  # feature per level
+    out += struct.pack("<ff", 0.5, 0.5)  # threshold per level
+    return out
+
+
+def assemble(version: int, align: int, sections) -> bytes:
+    payload = bytearray(len(sections) * TABLE_ENTRY_LEN)
+    table = []
+    for sec_id, data in sections:
+        while (HEADER_LEN + len(payload)) % align:
+            payload.append(0)
+        table.append((sec_id, HEADER_LEN + len(payload), len(data)))
+        payload += data
+    entry = b"".join(
+        struct.pack("<IIQQ", sec_id, 0, offset, length)
+        for sec_id, offset, length in table
+    )
+    payload[: len(entry)] = entry
+    header = b"FADD.FDD" + struct.pack(
+        "<IIQQQ", version, len(sections), len(payload), fnv1a64(bytes(payload)), 0
+    )
+    return header + bytes(payload)
+
+
+# ------------------------------------------------------------------- v1
+
+
+def meta_v1() -> bytes:
     return struct.pack(
         "<BBHIIIIIIII",
         2,  # abstraction: majority
@@ -57,62 +98,74 @@ def meta() -> bytes:
     )
 
 
-def schema() -> bytes:
-    out = string("a") + string("b")  # classes
-    for name in ("x0", "x1"):  # numeric features
-        out += string(name) + b"\x00"
-    return out
-
-
-def preds() -> bytes:
-    out = struct.pack("<II", 0, 1)  # feature per level
-    out += struct.pack("<ff", 0.5, 0.5)  # threshold per level
-    return out
-
-
-def nodes() -> bytes:
+def nodes_v1() -> bytes:
     out = struct.pack("<II", 0, 1)  # level
-    out += struct.pack("<II", 1, TERM_BIT)  # lo
-    out += struct.pack("<II", TERM_BIT, TERM_BIT | 1)  # hi
+    out += struct.pack("<II", 1, TERM_BIT)  # lo (absolute)
+    out += struct.pack("<II", TERM_BIT, TERM_BIT | 1)  # hi (absolute)
     return out
 
 
-def terms() -> bytes:
-    return struct.pack("<HH", 0, 1)  # majority classes per terminal
-
-
-def build() -> bytes:
+def build_v1() -> bytes:
     sections = [
-        (1, meta()),
+        (1, meta_v1()),
         (2, schema()),
         (3, preds()),
-        (4, nodes()),
-        (5, terms()),
+        (4, nodes_v1()),
+        (5, struct.pack("<HH", 0, 1)),  # majority classes per terminal
     ]
-    payload = bytearray(len(sections) * TABLE_ENTRY_LEN)
-    table = []
-    for sec_id, data in sections:
-        while (HEADER_LEN + len(payload)) % 8:
-            payload.append(0)
-        table.append((sec_id, HEADER_LEN + len(payload), len(data)))
-        payload += data
-    entry = b"".join(
-        struct.pack("<IIQQ", sec_id, 0, offset, length)
-        for sec_id, offset, length in table
+    return assemble(1, 8, sections)
+
+
+# ------------------------------------------------------------------- v2
+
+
+def meta_v2() -> bytes:
+    return struct.pack(
+        "<BBBBIIIIIIII",
+        2,  # abstraction: majority
+        1,  # unsat_elim
+        2,  # feat_width: u16
+        0,  # reserved
+        3,  # n_trees
+        2,  # n_features
+        2,  # n_classes
+        2,  # n_preds
+        2,  # n_nodes
+        2,  # n_terminals
+        0,  # root = node 0
+        0,  # reserved
     )
-    payload[: len(entry)] = entry
-    header = b"FADD.FDD" + struct.pack(
-        "<IIQQQ", 1, len(sections), len(payload), fnv1a64(bytes(payload)), 0
-    )
-    return header + bytes(payload)
+
+
+def build_v2() -> bytes:
+    hot = struct.pack("<Hf", 0, 0.5) + struct.pack("<Hf", 1, 0.5)
+    lo = struct.pack("<II", 1, TERM_BIT)  # node 0 -> node 1 is delta 1
+    hi = struct.pack("<II", TERM_BIT, TERM_BIT | 1)
+    sections = [
+        (1, meta_v2()),
+        (2, schema()),
+        (3, preds()),
+        (4, struct.pack("<II", 0, 1)),  # levels
+        (5, hot),
+        (6, lo),
+        (7, hi),
+        (8, struct.pack("<HH", 0, 1)),  # term class
+        (9, struct.pack("<II", 0, 0)),  # term aggregation reads
+        (10, struct.pack("<HH", 0, 1)),  # majority payload
+    ]
+    return assemble(2, 64, sections)
 
 
 def main() -> None:
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tiny-v1.fdd")
-    data = build()
-    with open(out, "wb") as f:
-        f.write(data)
-    print(f"wrote {out}: {len(data)} bytes, checksum {fnv1a64(data[HEADER_LEN:]):#018x}")
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name, data in (("tiny-v1.fdd", build_v1()), ("tiny-v2.fdd", build_v2())):
+        out = os.path.join(here, name)
+        with open(out, "wb") as f:
+            f.write(data)
+        print(
+            f"wrote {out}: {len(data)} bytes, "
+            f"checksum {fnv1a64(data[HEADER_LEN:]):#018x}"
+        )
 
 
 if __name__ == "__main__":

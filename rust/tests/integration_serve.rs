@@ -167,18 +167,22 @@ fn serve_from_snapshot_skips_training() {
         assert!(resp.get_i64("steps").is_some(), "frozen walks are metered");
     }
 
-    // the batch endpoint exercises the node-array pass
+    // the batch endpoint exercises the node-array pass; `steps: true`
+    // carries the §6 metering through the batch path
     let rows: Vec<Json> = (0..20).map(|i| row_json(data.row(i * 7))).collect();
-    let body = json::obj(vec![("rows", Json::Arr(rows))]);
+    let body = json::obj(vec![
+        ("rows", Json::Arr(rows)),
+        ("steps", Json::Bool(true)),
+    ]);
     let (st, resp) = http_request(&addr, "POST", "/classify_batch", Some(&body)).unwrap();
     assert_eq!(st, 200);
     let classes = resp.get("classes").unwrap().as_arr().unwrap();
-    for (k, c) in classes.iter().enumerate() {
-        assert_eq!(
-            c.as_i64().unwrap() as u32,
-            frozen.classify(data.row(k * 7)),
-            "batch row {k}"
-        );
+    let steps = resp.get("steps").unwrap().as_arr().unwrap();
+    assert_eq!(steps.len(), classes.len());
+    for (k, (c, s)) in classes.iter().zip(steps).enumerate() {
+        let (want_class, want_steps) = frozen.classify_with_steps(data.row(k * 7));
+        assert_eq!(c.as_i64().unwrap() as u32, want_class, "batch row {k}");
+        assert_eq!(s.as_i64().unwrap() as usize, want_steps, "batch row {k} steps");
     }
 
     // /model reports the frozen backend
