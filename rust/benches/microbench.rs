@@ -123,6 +123,31 @@ fn main() {
     add_row(&mut t, "FrozenDD snapshot boot (fdd-v2, mmap)", ns);
     let _ = std::fs::remove_file(&snap_path);
 
+    // bundle boot (the fleet-replica startup primitive): one mmap of a
+    // 4-model fab-v1 artifact, every entry booted zero-copy
+    use forest_add::frozen::bundle::{self, Bundle, BundleEntrySpec};
+    let fab_path = std::env::temp_dir().join(format!("microbench-{}.fab", std::process::id()));
+    let fab_path = fab_path.to_str().unwrap().to_string();
+    let specs: Vec<BundleEntrySpec<'_>> = (0..4)
+        .map(|i| BundleEntrySpec {
+            name: format!("model-{i}"),
+            version: 1,
+            shard: format!("shard-{i}"),
+            dd: &frozen,
+        })
+        .collect();
+    bundle::save(&fab_path, &bundle::pack(&specs).unwrap()).unwrap();
+    let ns = measure_ns(window, || {
+        let b = Bundle::load(&fab_path).unwrap();
+        let mut total = 0usize;
+        for i in 0..b.len() {
+            total += b.boot(i).unwrap().size().total();
+        }
+        std::hint::black_box(total);
+    });
+    add_row(&mut t, "fab bundle boot (fab-v1, 4 models, one mmap)", ns);
+    let _ = std::fs::remove_file(&fab_path);
+
     // forest walk baseline
     let mut i = 0usize;
     let ns = measure_ns(window, || {

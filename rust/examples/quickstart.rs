@@ -94,8 +94,44 @@ fn main() -> Result<()> {
     println!(
         "snapshot replica agrees: {} (reloaded from {snapshot}, mmap boot: {})",
         version.label_of(from_snapshot),
-        forest_add::runtime::mmap::supported(),
+        forest_add::runtime::mmap::enabled(),
     );
     let _ = std::fs::remove_file(&snapshot);
+
+    // 7. Fleets serve many models per process: pack every registered
+    //    model into one `fab-v1` bundle and boot a replica's whole
+    //    registry from it — one artifact, one mmap, every entry a
+    //    zero-copy model behind its manifest name, registered in one
+    //    atomic hot-swap. (CLI: `forest-add bundle pack` / `bundle ls` /
+    //    `serve --bundle fleet.fab`.)
+    let canary = forest_add::data::datasets::load("tic-tac-toe")?;
+    engine.train_and_register(
+        "canary",
+        &canary,
+        50,
+        0,
+        11,
+        forest_add::compile::CompileOptions::default(),
+    )?;
+    let fab = std::env::temp_dir().join("quickstart-fleet.fab");
+    let fab = fab.to_str().expect("utf-8 temp path").to_string();
+    engine.save_bundle(&[], &fab)?; // empty slice = every model
+    let fleet = Engine::new();
+    let ids = fleet.register_bundle(&fab)?;
+    println!(
+        "bundle replica booted {} models from {fab}: {}",
+        ids.len(),
+        ids.iter()
+            .map(|id| id.to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    let from_bundle = fleet.classify(Some("default"), None, &sample)?;
+    assert_eq!(from_bundle, class, "bundle entries stay bit-identical");
+    let canary_class = fleet.classify(Some("canary"), None, canary.row(0))?;
+    println!(
+        "per-request model routing: canary row 0 -> class {canary_class}"
+    );
+    let _ = std::fs::remove_file(&fab);
     Ok(())
 }

@@ -6,7 +6,10 @@
 //! - `compile`  — aggregate a forest into a decision diagram (+ DOT export,
 //!   `--format fdd` for a binary snapshot)
 //! - `freeze`   — render a compiled diagram into an `fdd-v2` snapshot
-//! - `inspect`  — show an `fdd` snapshot's header, sections and stats
+//! - `bundle`   — `pack` fdd snapshots into one `fab-v1` multi-model
+//!   bundle / `ls` a bundle's manifest
+//! - `inspect`  — show an `fdd` snapshot's (or `fab` bundle's) header,
+//!   sections and stats
 //! - `eval`     — steps/size/accuracy comparison table for one dataset
 //! - `bench`    — deterministic batch-throughput baseline (rows/sec per
 //!   backend × dataset × batch size, written to `BENCH_batch.json`)
@@ -48,7 +51,8 @@ COMMANDS:
   train      Train a Random Forest and save it (JSON)
   compile    Compile a forest into a decision diagram
   freeze     Freeze a compiled diagram into an fdd-v2 binary snapshot
-  inspect    Inspect an fdd snapshot (header, sections, stats)
+  bundle     Pack fdd snapshots into a fab-v1 multi-model bundle / list one
+  inspect    Inspect an fdd snapshot or fab bundle (header, sections, stats)
   eval       Compare RF vs DD steps/size/accuracy on a dataset
   bench      Batch-throughput baseline (writes BENCH_batch.json)
   serve      Start the HTTP serving coordinator
@@ -71,6 +75,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "train" => cmd_train(&rest),
         "compile" => cmd_compile(&rest),
         "freeze" => cmd_freeze(&rest),
+        "bundle" => cmd_bundle(&rest),
         "inspect" => cmd_inspect(&rest),
         "eval" => cmd_eval(&rest),
         "bench" => cmd_bench(&rest),
@@ -303,17 +308,145 @@ fn cmd_freeze(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn bundle_pack_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add bundle pack",
+        "Pack fdd snapshots into one fab-v1 multi-model bundle",
+    )
+    .req(
+        "entries",
+        "comma-separated name[@shard][#version]=path.fdd specs (e.g. 'iris@shard-0#3=iris.fdd,lenses=lenses.fdd'; version defaults to 1)",
+    )
+    .opt("out", "fleet.fab", "output bundle path")
+}
+
+fn bundle_ls_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add bundle ls",
+        "List the manifest of a fab-v1 bundle",
+    )
+    .req("bundle", "bundle path (from `bundle pack`)")
+}
+
+fn cmd_bundle(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("pack") => cmd_bundle_pack(&args[1..]),
+        Some("ls") => cmd_bundle_ls(&args[1..]),
+        _ => Err(Error::invalid(
+            "usage: forest-add bundle <pack|ls> [OPTIONS] (try `bundle pack --help`)",
+        )),
+    }
+}
+
+/// Parse one `name[@shard][#version]=path` entry spec (version defaults
+/// to 1 — the manifest's deploy-provenance stamp).
+fn parse_entry_spec(spec: &str) -> Result<(String, String, u64, String)> {
+    let bad = || Error::invalid(format!("bad entry spec '{spec}' (want name[@shard][#version]=path)"));
+    let (id, path) = spec.split_once('=').ok_or_else(bad)?;
+    let (id, version) = match id.split_once('#') {
+        Some((i, v)) => (i, v.parse::<u64>().map_err(|_| bad())?),
+        None => (id, 1),
+    };
+    let (name, shard) = match id.split_once('@') {
+        Some((n, s)) => (n, s),
+        None => (id, ""),
+    };
+    if name.is_empty() || path.is_empty() {
+        return Err(bad());
+    }
+    Ok((name.to_string(), shard.to_string(), version, path.to_string()))
+}
+
+fn cmd_bundle_pack(args: &[String]) -> Result<()> {
+    let a = bundle_pack_spec().parse(args)?;
+    let mut entries: Vec<(String, u64, String, Vec<u8>)> = Vec::new();
+    for spec in a.str("entries").split(',') {
+        let (name, shard, version, path) = parse_entry_spec(spec.trim())?;
+        let bytes = std::fs::read(&path)?;
+        // Full structural validation before anything is packed: a bundle
+        // member that cannot boot must fail the pipeline, not the fleet.
+        FrozenDD::from_bytes(&bytes)
+            .map_err(|e| Error::invalid(format!("entry '{name}' ({path}): {e}")))?;
+        entries.push((name, version, shard, bytes));
+    }
+    let bytes = frozen::bundle::pack_snapshots(&entries)?;
+    let out = a.str("out");
+    frozen::bundle::save(out, &bytes)?;
+    println!(
+        "packed {} models into {out} ({} bytes)",
+        entries.len(),
+        bytes.len()
+    );
+    for (name, _, shard, data) in &entries {
+        println!(
+            "  {name}{} ({} bytes)",
+            if shard.is_empty() {
+                String::new()
+            } else {
+                format!(" @{shard}")
+            },
+            data.len()
+        );
+    }
+    println!("serve with `forest-add serve --bundle {out}`");
+    Ok(())
+}
+
+fn cmd_bundle_ls(args: &[String]) -> Result<()> {
+    let a = bundle_ls_spec().parse(args)?;
+    let bytes = std::fs::read(a.str("bundle"))?;
+    print_bundle(&bytes)
+}
+
+/// Shared by `bundle ls` and `inspect` on a `fab` file.
+fn print_bundle(bytes: &[u8]) -> Result<()> {
+    let s = frozen::bundle::summarize(bytes)?;
+    println!(
+        "format: {}, {} bytes, checksum {:#018x} (verified), {} models",
+        frozen::bundle::FORMAT_NAME,
+        s.file_len,
+        s.checksum,
+        s.entries.len()
+    );
+    println!(
+        "boot: {}",
+        if crate::runtime::mmap::enabled() {
+            "one mmap for the whole fleet (entries borrow the shared mapping)"
+        } else {
+            "buffered read (mmap unsupported or disabled on this host)"
+        }
+    );
+    let mut t = Table::new(&["model", "version", "shard", "format", "offset", "bytes", "checksum"]);
+    for e in &s.entries {
+        let member = frozen::snapshot::summarize(&bytes[e.offset..e.offset + e.len])?;
+        t.row(vec![
+            e.name.clone(),
+            format!("v{}", e.version),
+            if e.shard.is_empty() { "—".into() } else { e.shard.clone() },
+            format!("fdd-v{}", member.version),
+            e.offset.to_string(),
+            e.len.to_string(),
+            format!("{:#018x}", e.checksum),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
 fn inspect_spec() -> ArgSpec {
     ArgSpec::new(
         "forest-add inspect",
-        "Inspect an fdd snapshot (v1 or v2) (header, sections, stats)",
+        "Inspect an fdd snapshot or fab bundle (header, sections, stats)",
     )
-    .req("snapshot", "snapshot path (from `freeze`)")
+    .req("snapshot", "snapshot or bundle path (from `freeze` / `bundle pack`)")
 }
 
 fn cmd_inspect(args: &[String]) -> Result<()> {
     let a = inspect_spec().parse(args)?;
     let bytes = std::fs::read(a.str("snapshot"))?;
+    if frozen::bundle::is_bundle(&bytes) {
+        return print_bundle(&bytes);
+    }
     let s = frozen::snapshot::summarize(&bytes)?;
     println!(
         "format: forest-add/fdd-v{}, {} bytes, checksum {:#018x} (verified)",
@@ -357,7 +490,7 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     );
     println!(
         "boot: {}",
-        if s.version >= 2 && crate::runtime::mmap::supported() {
+        if s.version >= 2 && crate::runtime::mmap::enabled() {
             "mmap zero-copy (sections back the runtime arrays in place)"
         } else if s.version >= 2 {
             "buffered read (mmap unsupported on this target)"
@@ -604,6 +737,7 @@ fn serve_spec() -> ArgSpec {
         .opt("config", "", "JSON config file (CLI flags override)")
         .opt("addr", "", "bind address, e.g. 127.0.0.1:7878")
         .opt("snapshot", "", "serve this fdd snapshot (skips training)")
+        .opt("bundle", "", "serve this fab-v1 multi-model bundle (skips training)")
         .opt("dataset", "", "dataset to train on")
         .opt("trees", "", "forest size")
         .opt("max-depth", "", "tree depth cap")
@@ -629,6 +763,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("snapshot").is_empty() {
         cfg.snapshot = a.str("snapshot").to_string();
+    }
+    if !a.str("bundle").is_empty() {
+        cfg.bundle = a.str("bundle").to_string();
     }
     if !a.str("dataset").is_empty() {
         cfg.dataset = a.str("dataset").to_string();
@@ -848,6 +985,64 @@ mod tests {
             dir.join("x").to_str().unwrap().into(),
         ])
         .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bundle_pack_ls_and_inspect_roundtrip() {
+        let dir = std::env::temp_dir().join("forest-add-cli-bundle-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("a.fdd");
+        let b = dir.join("b.fdd");
+        for (path, trees) in [(&a, 5usize), (&b, 9)] {
+            cmd_freeze(&[
+                "--dataset".into(),
+                "lenses".into(),
+                "--trees".into(),
+                trees.to_string(),
+                "--out".into(),
+                path.to_str().unwrap().into(),
+            ])
+            .unwrap();
+        }
+        let fab = dir.join("fleet.fab");
+        let fab_s = fab.to_str().unwrap().to_string();
+        cmd_bundle(&[
+            "pack".into(),
+            "--entries".into(),
+            format!(
+                "alpha@shard-0#7={},beta={}",
+                a.to_str().unwrap(),
+                b.to_str().unwrap()
+            ),
+            "--out".into(),
+            fab_s.clone(),
+        ])
+        .unwrap();
+        assert!(fab.exists());
+        cmd_bundle(&["ls".into(), "--bundle".into(), fab_s.clone()]).unwrap();
+        // inspect dispatches on the fab magic
+        cmd_inspect(&["--snapshot".into(), fab_s.clone()]).unwrap();
+        // the packed bundle loads and boots
+        let bundle = frozen::bundle::Bundle::load(&fab_s).unwrap();
+        assert_eq!(bundle.entries()[0].name, "alpha");
+        assert_eq!(bundle.entries()[0].shard, "shard-0");
+        assert_eq!(bundle.entries()[0].version, 7, "#version spec lands in the manifest");
+        assert_eq!(bundle.entries()[1].name, "beta");
+        assert_eq!(bundle.entries()[1].shard, "");
+        assert_eq!(bundle.entries()[1].version, 1, "version defaults to 1");
+        bundle.boot(0).unwrap();
+        bundle.boot(1).unwrap();
+        // bad specs and subcommands are rejected
+        assert!(cmd_bundle(&[
+            "pack".into(),
+            "--entries".into(),
+            "no-equals-sign".into()
+        ])
+        .is_err());
+        assert!(parse_entry_spec("m#x=path.fdd").is_err(), "non-numeric version");
+        assert!(cmd_bundle(&["frobnicate".into()]).is_err());
+        assert!(cmd_bundle(&[]).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -30,7 +30,7 @@
 
 pub mod registry;
 
-pub use registry::{BackendSlot, ModelId, ModelRegistry, ModelVersion};
+pub use registry::{BackendSlot, ModelId, ModelRegistry, ModelSpec, ModelVersion};
 
 use crate::batch::RowMatrix;
 use crate::classifier::{BackendKind, Classifier, ClassifierInfo};
@@ -38,6 +38,7 @@ use crate::compile::{Abstraction, CompileOptions, ForestCompiler};
 use crate::data::Dataset;
 use crate::error::{Error, Result};
 use crate::forest::{ForestLearner, RandomForest};
+use crate::frozen::bundle::{self, Bundle, BundleEntrySpec};
 use crate::frozen::FrozenDD;
 use crate::serve::xla_backend::XlaBackend;
 use std::sync::Arc;
@@ -138,6 +139,80 @@ impl Engine {
                 ))
             })?;
         frozen.save(path)
+    }
+
+    /// Register every model of a `fab-v1` artifact bundle — the
+    /// fleet-replica startup path. The file is mapped **once**
+    /// (`MADV_WILLNEED`-hinted) and each entry boots as a zero-copy
+    /// [`FrozenDD`] borrowing its slice of the shared mapping; names and
+    /// versions then land in the [`ModelRegistry`] in one atomic
+    /// hot-swap ([`ModelRegistry::register_many`]), so traffic never
+    /// observes half the bundle. Per-request `model` selection routes
+    /// straight into bundle entries; `GET /models` reports each entry's
+    /// bundle provenance. Returns the issued ids in manifest order (the
+    /// first entry becomes the default model on a fresh registry).
+    pub fn register_bundle(&self, path: &str) -> Result<Vec<ModelId>> {
+        let bundle = Bundle::load(path)?;
+        let mut specs = Vec::with_capacity(bundle.len());
+        for (i, entry) in bundle.entries().iter().enumerate() {
+            let frozen = bundle.boot(i)?;
+            let schema = frozen.schema().clone();
+            let shard = if entry.shard.is_empty() {
+                String::new()
+            } else {
+                format!(" shard={}", entry.shard)
+            };
+            specs.push(ModelSpec {
+                name: entry.name.clone(),
+                schema,
+                backends: vec![(BackendKind::Frozen, Arc::new(frozen) as Arc<dyn Classifier>)],
+                provenance: Some(format!("{path}#{}@v{}{shard}", entry.name, entry.version)),
+            });
+        }
+        self.registry.register_many(specs)
+    }
+
+    /// Pack the frozen backends of `models` (empty slice = every
+    /// registered model, in registry order) into a `fab-v1` bundle at
+    /// `path` — the build-pipeline counterpart of
+    /// [`Engine::register_bundle`]. Entry versions are the registry's
+    /// current versions; the write is atomic (temp file + rename).
+    pub fn save_bundle(&self, models: &[&str], path: &str) -> Result<()> {
+        let names: Vec<String> = if models.is_empty() {
+            self.registry.list().iter().map(|v| v.id.name.clone()).collect()
+        } else {
+            models.iter().map(|s| s.to_string()).collect()
+        };
+        if names.is_empty() {
+            return Err(Error::invalid("save_bundle: no models registered"));
+        }
+        // Hold every resolved classifier first so the specs below can
+        // borrow the concrete FrozenDDs.
+        let mut held: Vec<(String, u64, Arc<dyn Classifier>)> = Vec::with_capacity(names.len());
+        for name in &names {
+            let (version, slot) = self.registry.resolve(Some(name), Some(BackendKind::Frozen))?;
+            held.push((name.clone(), version.id.version, slot.classifier));
+        }
+        let specs: Vec<BundleEntrySpec<'_>> = held
+            .iter()
+            .map(|(name, version, classifier)| {
+                let dd = classifier
+                    .as_any()
+                    .and_then(|a| a.downcast_ref::<FrozenDD>())
+                    .ok_or_else(|| {
+                        Error::invalid(format!(
+                            "model '{name}' frozen backend is not a FrozenDD"
+                        ))
+                    })?;
+                Ok(BundleEntrySpec {
+                    name: name.clone(),
+                    version: *version,
+                    shard: String::new(),
+                    dd,
+                })
+            })
+            .collect::<Result<_>>()?;
+        bundle::save(path, &bundle::pack(&specs)?)
     }
 
     /// Classify one row on `model`/`backend` (`None` = defaults).
@@ -499,6 +574,53 @@ mod tests {
         let id2 = replica.register_snapshot("lenses", &path_s).unwrap();
         assert_eq!(id2.version, 2);
         assert!(replica.register_snapshot("lenses", "/no/such/file.fdd").is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bundle_roundtrip_through_the_engine() {
+        // Build two distinct models on one engine …
+        let iris = datasets::iris();
+        let lenses = datasets::lenses();
+        let engine = Engine::new();
+        engine
+            .train_and_register("iris", &iris, 8, 0, 3, CompileOptions::default())
+            .unwrap();
+        engine
+            .train_and_register("lenses", &lenses, 6, 0, 5, CompileOptions::default())
+            .unwrap();
+        let path = std::env::temp_dir().join(format!("engine-bundle-{}.fab", std::process::id()));
+        let path_s = path.to_str().unwrap().to_string();
+        engine.save_bundle(&[], &path_s).unwrap();
+
+        // … and boot a fleet replica from the single artifact: one file,
+        // both models, no training.
+        let replica = Engine::new();
+        let ids = replica.register_bundle(&path_s).unwrap();
+        assert_eq!(ids.len(), 2);
+        // save_bundle([]) walks the registry in name order
+        assert_eq!(ids[0].to_string(), "iris@v1");
+        assert_eq!(ids[1].to_string(), "lenses@v1");
+        for (ds, name) in [(&iris, "iris"), (&lenses, "lenses")] {
+            for i in (0..ds.n_rows()).step_by(7) {
+                assert_eq!(
+                    replica.classify(Some(name), None, ds.row(i)).unwrap(),
+                    engine
+                        .classify(Some(name), Some(BackendKind::Frozen), ds.row(i))
+                        .unwrap(),
+                    "{name} row {i}"
+                );
+            }
+        }
+        let version = replica.registry().get(Some("lenses")).unwrap();
+        let provenance = version.provenance.as_deref().unwrap();
+        assert!(provenance.contains(".fab#lenses@v1"), "{provenance}");
+        // explicit model subsets bundle too, and bad inputs fail cleanly
+        engine.save_bundle(&["lenses"], &path_s).unwrap();
+        assert_eq!(replica.register_bundle(&path_s).unwrap().len(), 1);
+        assert!(engine.save_bundle(&["nope"], &path_s).is_err());
+        assert!(Engine::new().save_bundle(&[], &path_s).is_err());
+        assert!(replica.register_bundle("/no/such/file.fab").is_err());
         let _ = std::fs::remove_file(&path);
     }
 

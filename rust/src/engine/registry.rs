@@ -66,6 +66,10 @@ pub struct ModelVersion {
     /// Backend used when a request names none (`dd` when present,
     /// otherwise the first registered backend).
     pub default_backend: BackendKind,
+    /// Where the model came from, when registered from an artifact (e.g.
+    /// the `fab` bundle path + entry + shard tag). Surfaced by
+    /// `GET /models`; `None` for models trained or registered in-process.
+    pub provenance: Option<String>,
     slots: Vec<BackendSlot>,
 }
 
@@ -163,24 +167,35 @@ pub struct ModelRegistry {
     inner: RwLock<RegistryState>,
 }
 
+/// Everything needed to register one model — the unit of
+/// [`ModelRegistry::register_many`], which lands a whole artifact
+/// bundle's worth of names and versions in one atomic hot-swap.
+pub struct ModelSpec {
+    /// Registry name (request-addressable; must be non-empty and unique
+    /// within one `register_many` batch).
+    pub name: String,
+    /// Schema every backend must agree with.
+    pub schema: Schema,
+    /// The backends, each a [`Classifier`] trait object.
+    pub backends: Vec<(BackendKind, Arc<dyn Classifier>)>,
+    /// Optional artifact provenance (surfaced by `GET /models`).
+    pub provenance: Option<String>,
+}
+
 impl ModelRegistry {
     /// Empty registry.
     pub fn new() -> ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Register (or atomically hot-swap) a model under `name`.
-    ///
-    /// Backends must agree with the schema on arity and class count —
-    /// that is the semantic-equivalence contract this API is built on.
-    /// Returns the issued [`ModelId`].
-    pub fn register(
-        &self,
-        name: impl Into<String>,
-        schema: Schema,
+    /// Validate one model's backends against its schema and derive the
+    /// routing slots + default backend (shared by [`Self::register`] and
+    /// [`Self::register_many`]; runs before any lock is taken).
+    fn prepare(
+        name: &str,
+        schema: &Schema,
         backends: Vec<(BackendKind, Arc<dyn Classifier>)>,
-    ) -> Result<ModelId> {
-        let name = name.into();
+    ) -> Result<(Vec<BackendSlot>, BackendKind)> {
         if name.is_empty() {
             return Err(Error::invalid("model name must be non-empty"));
         }
@@ -219,24 +234,74 @@ impl ModelRegistry {
         } else {
             slots[0].kind
         };
-        let mut state = self.inner.write().unwrap();
-        let version = state.versions.get(&name).copied().unwrap_or(0) + 1;
-        state.versions.insert(name.clone(), version);
-        let id = ModelId {
-            name: name.clone(),
-            version,
-        };
-        let entry = Arc::new(ModelVersion {
-            id: id.clone(),
+        Ok((slots, default_backend))
+    }
+
+    /// Register (or atomically hot-swap) a model under `name`.
+    ///
+    /// Backends must agree with the schema on arity and class count —
+    /// that is the semantic-equivalence contract this API is built on.
+    /// Returns the issued [`ModelId`].
+    pub fn register(
+        &self,
+        name: impl Into<String>,
+        schema: Schema,
+        backends: Vec<(BackendKind, Arc<dyn Classifier>)>,
+    ) -> Result<ModelId> {
+        let ids = self.register_many(vec![ModelSpec {
+            name: name.into(),
             schema,
-            default_backend,
-            slots,
-        });
-        state.models.insert(name.clone(), entry);
-        if state.default_model.is_none() {
-            state.default_model = Some(name);
+            backends,
+            provenance: None,
+        }])?;
+        Ok(ids.into_iter().next().expect("one spec yields one id"))
+    }
+
+    /// Register (or hot-swap) several models in **one** atomic step: all
+    /// specs are validated up front, then inserted under a single write
+    /// lock — the bundle boot path, where no request may ever observe
+    /// half a fleet swapped. All-or-nothing: any invalid spec fails the
+    /// whole batch before the registry changes.
+    pub fn register_many(&self, specs: Vec<ModelSpec>) -> Result<Vec<ModelId>> {
+        if specs.is_empty() {
+            return Err(Error::invalid("register_many needs at least one model"));
         }
-        Ok(id)
+        let mut prepared = Vec::with_capacity(specs.len());
+        let mut batch_names: Vec<String> = Vec::with_capacity(specs.len());
+        for spec in specs {
+            if batch_names.contains(&spec.name) {
+                return Err(Error::invalid(format!(
+                    "model '{}' appears twice in one registration",
+                    spec.name
+                )));
+            }
+            batch_names.push(spec.name.clone());
+            let (slots, default_backend) = Self::prepare(&spec.name, &spec.schema, spec.backends)?;
+            prepared.push((spec.name, spec.schema, spec.provenance, slots, default_backend));
+        }
+        let mut state = self.inner.write().unwrap();
+        let mut ids = Vec::with_capacity(prepared.len());
+        for (name, schema, provenance, slots, default_backend) in prepared {
+            let version = state.versions.get(&name).copied().unwrap_or(0) + 1;
+            state.versions.insert(name.clone(), version);
+            let id = ModelId {
+                name: name.clone(),
+                version,
+            };
+            let entry = Arc::new(ModelVersion {
+                id: id.clone(),
+                schema,
+                default_backend,
+                provenance,
+                slots,
+            });
+            state.models.insert(name.clone(), entry);
+            if state.default_model.is_none() {
+                state.default_model = Some(name);
+            }
+            ids.push(id);
+        }
+        Ok(ids)
     }
 
     /// Fetch a model by name (`None` = the default model).
@@ -465,6 +530,79 @@ mod tests {
             .unwrap_err();
         assert!(err.to_string().contains("twice"));
         assert!(reg.is_empty(), "failed registrations must not partially apply");
+    }
+
+    #[test]
+    fn register_many_is_atomic_and_records_provenance() {
+        let reg = ModelRegistry::new();
+        let ids = reg
+            .register_many(vec![
+                ModelSpec {
+                    name: "a".into(),
+                    schema: schema(2, 3),
+                    backends: vec![(BackendKind::Forest, fixed(0, 1))],
+                    provenance: Some("fleet.fab#a@v1".into()),
+                },
+                ModelSpec {
+                    name: "b".into(),
+                    schema: schema(2, 3),
+                    backends: vec![(BackendKind::Forest, fixed(1, 1))],
+                    provenance: None,
+                },
+            ])
+            .unwrap();
+        assert_eq!(ids.len(), 2);
+        assert_eq!(ids[0].to_string(), "a@v1");
+        assert_eq!(ids[1].to_string(), "b@v1");
+        assert_eq!(
+            reg.default_model().as_deref(),
+            Some("a"),
+            "the batch's first model becomes the default"
+        );
+        assert_eq!(
+            reg.get(Some("a")).unwrap().provenance.as_deref(),
+            Some("fleet.fab#a@v1")
+        );
+        assert!(reg.get(Some("b")).unwrap().provenance.is_none());
+        // a duplicate name within the batch fails the whole batch
+        let err = reg
+            .register_many(vec![
+                ModelSpec {
+                    name: "c".into(),
+                    schema: schema(2, 3),
+                    backends: vec![(BackendKind::Forest, fixed(0, 1))],
+                    provenance: None,
+                },
+                ModelSpec {
+                    name: "c".into(),
+                    schema: schema(2, 3),
+                    backends: vec![(BackendKind::Forest, fixed(1, 1))],
+                    provenance: None,
+                },
+            ])
+            .unwrap_err();
+        assert!(err.to_string().contains("appears twice"), "{err}");
+        assert!(reg.get(Some("c")).is_err(), "failed batches must not partially apply");
+        // one invalid spec rolls back the valid ones too
+        let err = reg
+            .register_many(vec![
+                ModelSpec {
+                    name: "d".into(),
+                    schema: schema(2, 3),
+                    backends: vec![(BackendKind::Forest, fixed(0, 1))],
+                    provenance: None,
+                },
+                ModelSpec {
+                    name: "e".into(),
+                    schema: schema(5, 3),
+                    backends: vec![(BackendKind::Forest, fixed(0, 1))],
+                    provenance: None,
+                },
+            ])
+            .unwrap_err();
+        assert!(matches!(err, Error::SchemaMismatch(_)), "{err}");
+        assert!(reg.get(Some("d")).is_err());
+        assert!(reg.register_many(vec![]).is_err(), "empty batch");
     }
 
     #[test]

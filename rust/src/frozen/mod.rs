@@ -25,6 +25,13 @@
 //!   counting-allocator test `tests/alloc_frozen.rs` enforces it.
 //!   Legacy `fdd-v1` artifacts still load through an upgrade-on-load
 //!   path.
+//! - **Multi-model artifact bundles** ([`bundle`]): a fleet's models pack
+//!   into one `fab-v1` file (manifest + 64-byte-aligned member
+//!   snapshots); [`bundle::Bundle::load`] maps the file once,
+//!   `MADV_WILLNEED`-hints it, and every entry boots as a zero-copy
+//!   [`FrozenDD`] borrowing its slice of the shared mapping —
+//!   `Engine::register_bundle` / `serve --bundle` turn that into a whole
+//!   registry per `mmap(2)`.
 //! - **A cache-tiled batch sweep** ([`FrozenDD::classify_batch`]):
 //!   batches move through the diagram in topological node *tiles* sized
 //!   to an LLC budget (`ServeConfig::tile_bytes`,
@@ -48,6 +55,7 @@
 //! encoding, tile size, thread count, and load path: freezing is a
 //! memory-layout change, never a semantic one.
 
+pub mod bundle;
 pub mod snapshot;
 
 pub(crate) mod builder;

@@ -267,11 +267,12 @@ pub(crate) enum SnapshotBuf {
 }
 
 impl SnapshotBuf {
-    /// Open a snapshot file: `mmap` where supported (falling back to a
-    /// buffered read if the map fails), `fs::read` elsewhere.
+    /// Open a snapshot file: `mmap` where enabled (falling back to a
+    /// buffered read if the map fails or `FOREST_ADD_NO_MMAP` is set),
+    /// `fs::read` elsewhere.
     pub(crate) fn open(path: &str) -> Result<SnapshotBuf> {
         #[cfg(all(unix, target_pointer_width = "64"))]
-        {
+        if crate::runtime::mmap::enabled() {
             match crate::runtime::mmap::Mmap::map(path) {
                 Ok(m) => return Ok(SnapshotBuf::Mapped(m)),
                 Err(e) => {
@@ -282,6 +283,15 @@ impl SnapshotBuf {
         Ok(SnapshotBuf::Owned(AlignedBuf::from_bytes(&std::fs::read(
             path,
         )?)))
+    }
+
+    /// Forward `MADV_WILLNEED` to a mapped buffer (no-op for owned
+    /// storage, whose bytes are resident by construction).
+    pub(crate) fn advise_willneed(&self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let SnapshotBuf::Mapped(m) = self {
+            m.advise_willneed();
+        }
     }
 
     /// Whether this buffer is a file mapping (diagnostics).

@@ -134,6 +134,36 @@
 //! let class = engine.classify(Some("iris"), None, data.row(0)).unwrap();
 //! # let _ = class;
 //! ```
+//!
+//! ## Bundles: N models, one artifact, one mmap
+//!
+//! A fleet serves *many* models per process. The `fab-v1` bundle
+//! ([`frozen::bundle`]) packs any number of `fdd` snapshots into one
+//! file behind a checksummed manifest (per-entry name, version, shard
+//! tag); [`engine::Engine::register_bundle`] maps the file **once**
+//! (`MADV_WILLNEED`-hinted), boots every entry as a zero-copy
+//! [`frozen::FrozenDD`] borrowing its slice of the shared mapping, and
+//! lands all names + versions in the registry in one atomic hot-swap —
+//! requests route into entries with the usual `model` field, and
+//! `GET /models` reports each entry's bundle provenance. On the command
+//! line: `forest-add bundle pack` / `bundle ls` /
+//! `serve --bundle fleet.fab`.
+//!
+//! ```no_run
+//! use forest_add::engine::Engine;
+//!
+//! // Build pipeline: pack every registered model into one artifact.
+//! # let data = forest_add::data::datasets::load("iris").unwrap();
+//! # let engine = forest_add::engine::Engine::builder()
+//! #     .dataset(data.clone()).trees(20).seed(7).model_name("iris").build().unwrap();
+//! engine.save_bundle(&[], "fleet.fab").unwrap();
+//!
+//! // Fleet replica: every model of the bundle, training-free, zero-copy.
+//! let replica = Engine::new();
+//! let ids = replica.register_bundle("fleet.fab").unwrap();
+//! let class = replica.classify(Some("iris"), None, data.row(0)).unwrap();
+//! # let _ = (ids, class);
+//! ```
 
 pub mod add;
 pub mod batch;

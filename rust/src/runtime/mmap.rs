@@ -18,6 +18,17 @@ pub const fn supported() -> bool {
     cfg!(all(unix, target_pointer_width = "64"))
 }
 
+/// Whether snapshot loads in this *process* take the mmap path:
+/// [`supported`] on this target and not disabled via the
+/// `FOREST_ADD_NO_MMAP` environment variable. The override exists so CI
+/// can exercise the buffered-read (`fs::read`) fallback storage path on
+/// hosts where the map would otherwise always succeed; tests that assert
+/// on [`crate::frozen::FrozenDD::mapped`] compare against this, not
+/// [`supported`].
+pub fn enabled() -> bool {
+    supported() && std::env::var_os("FOREST_ADD_NO_MMAP").is_none()
+}
+
 #[cfg(all(unix, target_pointer_width = "64"))]
 mod imp {
     use crate::error::{Error, Result};
@@ -29,6 +40,7 @@ mod imp {
     // Shared by Linux and the BSDs/macOS.
     const PROT_READ: c_int = 1;
     const MAP_PRIVATE: c_int = 2;
+    const MADV_WILLNEED: c_int = 3;
 
     extern "C" {
         fn mmap(
@@ -40,6 +52,7 @@ mod imp {
             offset: i64,
         ) -> *mut c_void;
         fn munmap(addr: *mut c_void, length: usize) -> c_int;
+        fn madvise(addr: *mut c_void, length: usize, advice: c_int) -> c_int;
     }
 
     /// A read-only private mapping of one whole file, unmapped on drop.
@@ -96,6 +109,18 @@ mod imp {
             self.len == 0
         }
 
+        /// Advise the kernel that the whole mapping will be read soon
+        /// (`MADV_WILLNEED`), so page-ins start before the first walk
+        /// touches them — the bundle boot path calls this once per file
+        /// instead of once per model. Purely advisory: failures are
+        /// ignored (the mapping stays valid either way).
+        pub fn advise_willneed(&self) {
+            // SAFETY: exactly the live range returned by mmap in `map`.
+            let _ = unsafe {
+                madvise(self.ptr.as_ptr() as *mut c_void, self.len, MADV_WILLNEED)
+            };
+        }
+
         /// The mapped bytes.
         pub fn as_bytes(&self) -> &[u8] {
             // SAFETY: ptr/len describe a live PROT_READ mapping owned by
@@ -129,6 +154,8 @@ mod imp {
             let m = Mmap::map(&path_s).unwrap();
             assert_eq!(m.len(), 13);
             assert!(!m.is_empty());
+            assert_eq!(m.as_bytes(), b"hello mapping");
+            m.advise_willneed(); // advisory: must not disturb the mapping
             assert_eq!(m.as_bytes(), b"hello mapping");
             drop(m);
             // empty and missing files error cleanly

@@ -13,6 +13,12 @@ pub struct ServeConfig {
     /// When set, the replica skips training entirely and registers the
     /// frozen model as `default` — the millisecond startup path.
     pub snapshot: String,
+    /// `fab-v1` multi-model bundle to serve (empty = none). One `mmap`
+    /// boots every entry as a named frozen model (manifest names,
+    /// per-request `model` routing, `GET /models` provenance); the first
+    /// entry becomes the default model. Mutually exclusive with
+    /// `snapshot`.
+    pub bundle: String,
     /// Built-in dataset to train on (or a CSV/ARFF path).
     pub dataset: String,
     /// Forest size.
@@ -55,6 +61,7 @@ impl Default for ServeConfig {
         ServeConfig {
             addr: "127.0.0.1:7878".into(),
             snapshot: String::new(),
+            bundle: String::new(),
             dataset: "iris".into(),
             trees: 128,
             max_depth: 8,
@@ -82,6 +89,9 @@ impl ServeConfig {
         }
         if let Some(s) = v.get_str("snapshot") {
             cfg.snapshot = s.to_string();
+        }
+        if let Some(s) = v.get_str("bundle") {
+            cfg.bundle = s.to_string();
         }
         if let Some(s) = v.get_str("dataset") {
             cfg.dataset = s.to_string();
@@ -140,6 +150,11 @@ impl ServeConfig {
         if self.trees == 0 {
             return Err(Error::invalid("trees must be positive"));
         }
+        if !self.snapshot.is_empty() && !self.bundle.is_empty() {
+            return Err(Error::invalid(
+                "snapshot and bundle are mutually exclusive (a bundle already carries its models)",
+            ));
+        }
         if self.batch_max == 0 {
             return Err(Error::invalid("batch_max must be positive"));
         }
@@ -171,6 +186,7 @@ impl ServeConfig {
         json::obj(vec![
             ("addr", json::s(self.addr.clone())),
             ("snapshot", json::s(self.snapshot.clone())),
+            ("bundle", json::s(self.bundle.clone())),
             ("dataset", json::s(self.dataset.clone())),
             ("trees", json::num(self.trees as f64)),
             ("max_depth", json::num(self.max_depth as f64)),
@@ -205,7 +221,7 @@ mod tests {
             default_backend: BackendKind::Xla,
             enable_xla: false,
             reply_timeout_ms: 250,
-            snapshot: "model.fdd".into(),
+            bundle: "fleet.fab".into(),
             eval_threads: 6,
             tile_bytes: 2 << 20,
             ..Default::default()
@@ -215,7 +231,8 @@ mod tests {
         assert_eq!(back.default_backend, BackendKind::Xla);
         assert!(!back.enable_xla);
         assert_eq!(back.reply_timeout_ms, 250);
-        assert_eq!(back.snapshot, "model.fdd");
+        assert_eq!(back.bundle, "fleet.fab");
+        assert!(back.snapshot.is_empty());
         assert_eq!(back.eval_threads, 6);
         assert_eq!(back.tile_bytes, 2 << 20);
     }
@@ -231,6 +248,11 @@ mod tests {
     #[test]
     fn invalid_rejected() {
         assert!(ServeConfig::from_json(&Json::parse(r#"{"trees": 0}"#).unwrap()).is_err());
+        // a replica serves a snapshot or a bundle, never both
+        assert!(ServeConfig::from_json(
+            &Json::parse(r#"{"snapshot": "m.fdd", "bundle": "f.fab"}"#).unwrap()
+        )
+        .is_err());
         // negative wraps to a huge usize; both directions must be caught
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"eval_threads": -1}"#).unwrap()).is_err()

@@ -6,7 +6,8 @@
 //! - `GET  /healthz`          → `{"ok": true}`
 //! - `GET  /metrics`          → server metrics snapshot
 //! - `GET  /model`            → default-model description (per-backend info)
-//! - `GET  /models`           → all registered models (name, version, backends)
+//! - `GET  /models`           → all registered models (name, version, backends,
+//!   `source` = artifact provenance for bundle-booted models)
 //! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?}`
 //! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?,
 //!   "steps": true?}` — with `"steps": true` the response carries the §6
@@ -197,6 +198,12 @@ fn model_list(router: &Arc<Router>) -> Json {
                     ),
                 ),
                 ("default_backend", json::s(v.default_backend.name())),
+                // artifact provenance (bundle path + entry + shard tag)
+                // for models booted from a fab bundle; null otherwise
+                (
+                    "source",
+                    v.provenance.clone().map(json::s).unwrap_or(Json::Null),
+                ),
             ])
         })
         .collect();

@@ -29,10 +29,12 @@ pub struct ServerHandle {
 
 /// Build the model and start serving (returns once the socket is bound).
 ///
-/// Two startup paths: with [`ServeConfig::snapshot`] set, the replica
-/// registers a pre-compiled `fdd` artifact (mmap'd zero-copy where supported, no
-/// training); otherwise it trains and compiles from the configured
-/// dataset.
+/// Three startup paths: with [`ServeConfig::bundle`] set, the replica
+/// maps a `fab-v1` multi-model bundle once and registers every entry as
+/// a named frozen model; with [`ServeConfig::snapshot`] set, it
+/// registers a single pre-compiled `fdd` artifact (mmap'd zero-copy
+/// where supported, no training); otherwise it trains and compiles from
+/// the configured dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
     // Size the shared evaluation pool before any batch traffic exists
@@ -42,7 +44,18 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     crate::log_info!(
         "serve: evaluation parallelism {eval_threads}, frozen tile budget {tile_bytes} bytes"
     );
-    let engine = if !cfg.snapshot.is_empty() {
+    let engine = if !cfg.bundle.is_empty() {
+        let engine = Engine::new();
+        let ids = engine.register_bundle(&cfg.bundle)?;
+        let names: Vec<String> = ids.iter().map(|id| id.to_string()).collect();
+        crate::log_info!(
+            "serve: loaded bundle '{}' — {} models ({})",
+            cfg.bundle,
+            ids.len(),
+            names.join(", ")
+        );
+        engine
+    } else if !cfg.snapshot.is_empty() {
         let engine = Engine::new();
         let id = engine.register_snapshot("default", &cfg.snapshot)?;
         crate::log_info!("serve: loaded snapshot '{}' as {id}", cfg.snapshot);

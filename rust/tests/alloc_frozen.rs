@@ -11,6 +11,12 @@
 //!    allocated during the load stay far below the node-plane size (a
 //!    single copied section would blow the bound), and the loaded model
 //!    reports `mapped()`.
+//! 3. **Bundle boot is zero-copy for every member.** A `fab-v1` bundle
+//!    packed from ≥ 2 distinct models boots through **one** mapping:
+//!    `Bundle::load` plus booting *all* entries stays under the same
+//!    allocation bound relative to the combined node-plane bytes, every
+//!    booted model reports `mapped()`, and answers are bit-identical to
+//!    the pre-pack diagrams.
 //!
 //! This file deliberately holds a single `#[test]` so no concurrent test
 //! thread can allocate inside the measurement windows.
@@ -18,6 +24,7 @@
 use forest_add::compile::{CompileOptions, ForestCompiler};
 use forest_add::data::datasets;
 use forest_add::forest::ForestLearner;
+use forest_add::frozen::bundle::{self, Bundle, BundleEntrySpec};
 use forest_add::frozen::{BatchScratch, FrozenDD};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -132,7 +139,7 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     let before_bytes = alloc_bytes();
     let loaded = FrozenDD::load(&path_s).unwrap();
     let loaded_bytes = alloc_bytes() - before_bytes;
-    if forest_add::runtime::mmap::supported() {
+    if forest_add::runtime::mmap::enabled() {
         assert!(loaded.mapped(), "unix 64-bit loads must take the mmap path");
         // Validation scratch (reachability bitmaps, ~1 byte/node), the
         // schema strings and the section table allocate a little;
@@ -156,4 +163,67 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     }
     drop(loaded);
     let _ = std::fs::remove_file(&path);
+
+    // ---- bundle boot: two distinct models, one mapping, zero copies of
+    // any member's node/terminal sections. ----
+    let fab_path = std::env::temp_dir().join(format!("alloc-fab-{}.fab", std::process::id()));
+    let fab_path_s = fab_path.to_str().unwrap().to_string();
+    let fab_bytes = bundle::pack(&[
+        BundleEntrySpec {
+            name: "iris".into(),
+            version: 1,
+            shard: "shard-0".into(),
+            dd: &frozen,
+        },
+        BundleEntrySpec {
+            name: "tic-tac-toe".into(),
+            version: 1,
+            shard: "shard-1".into(),
+            dd: &big_frozen,
+        },
+    ])
+    .unwrap();
+    bundle::save(&fab_path_s, &fab_bytes).unwrap();
+    let iris_node_bytes = forest_add::frozen::snapshot::summarize(&frozen.to_bytes())
+        .unwrap()
+        .node_section_bytes() as u64;
+    let total_node_bytes = node_bytes + iris_node_bytes;
+
+    let before_bytes = alloc_bytes();
+    let booted_bundle = Bundle::load(&fab_path_s).unwrap();
+    let m_iris = booted_bundle.boot(0).unwrap();
+    let m_ttt = booted_bundle.boot(1).unwrap();
+    let bundle_alloc = alloc_bytes() - before_bytes;
+    if forest_add::runtime::mmap::enabled() {
+        assert!(booted_bundle.mapped(), "bundle loads must take the mmap path");
+        assert!(m_iris.mapped(), "entry 0 must borrow the shared mapping");
+        assert!(m_ttt.mapped(), "entry 1 must borrow the shared mapping");
+        // Same bound as the single snapshot, over the combined planes:
+        // manifest strings + two validations allocate a little, copying
+        // any member's smallest node plane would break it.
+        assert!(
+            bundle_alloc < total_node_bytes / 4,
+            "bundle boot allocated {bundle_alloc} bytes against {total_node_bytes} combined \
+             node-section bytes — a member's node/terminal section was copied"
+        );
+    } else {
+        assert!(!booted_bundle.mapped());
+    }
+    // both members answer bit-identically to their pre-pack diagrams
+    for i in (0..data.n_rows()).step_by(13) {
+        assert_eq!(
+            m_iris.classify_with_steps(data.row(i)),
+            frozen.classify_with_steps(data.row(i)),
+            "iris row {i}"
+        );
+    }
+    for i in (0..big_data.n_rows()).step_by(37) {
+        assert_eq!(
+            m_ttt.classify_with_steps(big_data.row(i)),
+            big_frozen.classify_with_steps(big_data.row(i)),
+            "tic-tac-toe row {i}"
+        );
+    }
+    drop((m_iris, m_ttt, booted_bundle));
+    let _ = std::fs::remove_file(&fab_path);
 }

@@ -215,7 +215,7 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
             let mapped = FrozenDD::load(&path_s).unwrap();
             assert_eq!(
                 mapped.mapped(),
-                forest_add::runtime::mmap::supported(),
+                forest_add::runtime::mmap::enabled(),
                 "{tag}: snapshot load must map where supported"
             );
 
@@ -293,6 +293,97 @@ fn persisted_and_frozen_diagrams_conform_on_every_dataset() {
             drop(mapped);
             let _ = std::fs::remove_file(&path);
         }
+    }
+}
+
+/// Every entry of a `fab-v1` bundle must be *bit-identical* to its
+/// standalone `fdd-v2` snapshot — packing is packaging, never a
+/// re-encoding — and the booted entry must classify (class + §6 steps,
+/// single-row and batch) exactly like the standalone-loaded model.
+#[test]
+fn bundle_entries_conform_to_standalone_snapshots() {
+    // Distinct datasets AND abstractions, so the bundle mixes schemas,
+    // terminal layouts and section sizes in one file.
+    let members: Vec<(String, Dataset, Abstraction)> = vec![
+        ("iris".into(), datasets::load("iris").unwrap(), Abstraction::Majority),
+        ("ttt".into(), datasets::load("tic-tac-toe").unwrap(), Abstraction::Vector),
+        ("lenses".into(), datasets::load("lenses").unwrap(), Abstraction::Word),
+    ];
+    let mut frozen_models = Vec::new();
+    let mut fdd_paths = Vec::new();
+    for (name, data, abstraction) in &members {
+        let forest = ForestLearner::default().trees(9).seed(29).fit(data);
+        let frozen = ForestCompiler::new(CompileOptions {
+            abstraction: *abstraction,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap()
+        .freeze();
+        let path = std::env::temp_dir().join(format!(
+            "conf-bundle-{}-{name}.fdd",
+            std::process::id()
+        ));
+        let path_s = path.to_str().unwrap().to_string();
+        frozen.save(&path_s).unwrap();
+        frozen_models.push(frozen);
+        fdd_paths.push(path_s);
+    }
+    let specs: Vec<forest_add::frozen::bundle::BundleEntrySpec<'_>> = members
+        .iter()
+        .zip(&frozen_models)
+        .enumerate()
+        .map(|(i, ((name, _, _), dd))| forest_add::frozen::bundle::BundleEntrySpec {
+            name: name.clone(),
+            version: 1,
+            shard: format!("shard-{i}"),
+            dd,
+        })
+        .collect();
+    let fab_path = std::env::temp_dir().join(format!("conf-bundle-{}.fab", std::process::id()));
+    let fab_path_s = fab_path.to_str().unwrap().to_string();
+    forest_add::frozen::bundle::save(
+        &fab_path_s,
+        &forest_add::frozen::bundle::pack(&specs).unwrap(),
+    )
+    .unwrap();
+
+    let fab_bytes = std::fs::read(&fab_path).unwrap();
+    let bundle = forest_add::frozen::bundle::Bundle::load(&fab_path_s).unwrap();
+    assert_eq!(bundle.len(), members.len());
+    for (i, (name, data, _)) in members.iter().enumerate() {
+        let tag = format!("bundle/{name}");
+        let entry = &bundle.entries()[i];
+        assert_eq!(&entry.name, name, "{tag}: manifest order");
+        // bit-identity: the entry's bytes ARE the standalone artifact
+        let standalone_bytes = std::fs::read(&fdd_paths[i]).unwrap();
+        assert_eq!(
+            &fab_bytes[entry.offset..entry.offset + entry.len],
+            &standalone_bytes[..],
+            "{tag}: bundle entry diverges from the standalone fdd-v2 snapshot"
+        );
+        // and the booted entry conforms to the standalone-loaded model
+        let booted = bundle.boot(i).unwrap();
+        let standalone = FrozenDD::load(&fdd_paths[i]).unwrap();
+        let rows = data.matrix();
+        let (b_batch, b_steps) = booted.classify_batch_steps(rows);
+        let (s_batch, s_steps) = standalone.classify_batch_steps(rows);
+        assert_eq!(b_batch, s_batch, "{tag}: batch classes");
+        assert_eq!(b_steps, s_steps, "{tag}: batch steps");
+        for (r, x) in rows.iter().enumerate() {
+            let want = standalone.classify_with_steps(x);
+            assert_eq!(booted.classify_with_steps(x), want, "{tag} row {r}: single");
+            assert_eq!(
+                (b_batch[r], b_steps[r] as usize),
+                want,
+                "{tag} row {r}: batch vs single"
+            );
+        }
+    }
+    drop(bundle);
+    let _ = std::fs::remove_file(&fab_path);
+    for p in &fdd_paths {
+        let _ = std::fs::remove_file(p);
     }
 }
 

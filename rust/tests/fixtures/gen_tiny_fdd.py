@@ -1,15 +1,17 @@
 #!/usr/bin/env python3
-"""Generate tests/fixtures/tiny-v1.fdd and tiny-v2.fdd, the
+"""Generate tests/fixtures/tiny-v1.fdd, tiny-v2.fdd and tiny-v1.fab, the
 forward-compat tripwires.
 
 This is an *independent* implementation of the `forest-add/fdd` binary
-snapshot formats (see rust/src/frozen/snapshot.rs for the authoritative
-spec). The checked-in fixtures are loaded by tests/snapshot_compat.rs; if
-the Rust reader or writer drifts from the documented layouts, those tests
-— not a customer's serving fleet — are what break.
+snapshot formats and of the `forest-add/fab-v1` multi-model bundle
+format (see rust/src/frozen/snapshot.rs and rust/src/frozen/bundle.rs
+for the authoritative specs). The checked-in fixtures are loaded by
+tests/snapshot_compat.rs; if the Rust reader or writer drifts from the
+documented layouts, those tests — not a customer's serving fleet — are
+what break.
 
-The diagram encoded in both fixtures (majority abstraction, 2 features,
-classes ["a", "b"]):
+The diagram encoded in the fdd fixtures (majority abstraction, 2
+features, classes ["a", "b"]):
 
     x0 < 0.5 ? "a" : (x1 < 0.5 ? "b" : "a")
 
@@ -21,6 +23,17 @@ v1 stores absolute child references in a 12-byte-per-node AoS-ish
 section; v2 stores the narrow hot plane (u16 feat + f32 thresh, 6 bytes),
 forward-delta lo/hi arrays, the precomputed terminal class/aggregation
 tables, and 64-byte-aligned sections.
+
+The fab fixture bundles two *distinct* models: entry "tiny" is exactly
+the tiny-v2.fdd bytes above, entry "tiny-flip" is a second single-node
+diagram over the same schema:
+
+    x1 < 0.5 ? "b" : "a"
+
+fab-v1 layout: 40-byte header (magic FADD.FAB, version, entry count,
+payload length, whole-file FNV-1a-64, reserved) + manifest records
+(name str, version u64, shard str, offset u64, len u64, per-entry
+FNV-1a-64) + the member snapshots at 64-byte-aligned offsets.
 
 Run from anywhere:  python3 rust/tests/fixtures/gen_tiny_fdd.py
 """
@@ -156,9 +169,89 @@ def build_v2() -> bytes:
     return assemble(2, 64, sections)
 
 
+def meta_v2_flip() -> bytes:
+    return struct.pack(
+        "<BBBBIIIIIIII",
+        2,  # abstraction: majority
+        1,  # unsat_elim
+        2,  # feat_width: u16
+        0,  # reserved
+        1,  # n_trees
+        2,  # n_features
+        2,  # n_classes
+        1,  # n_preds
+        1,  # n_nodes
+        2,  # n_terminals
+        0,  # root = node 0
+        0,  # reserved
+    )
+
+
+def build_v2_flip() -> bytes:
+    """A second, distinct model for the bundle fixture:
+    x1 < 0.5 ? "b" : "a" (one node, two terminals, same schema)."""
+    sections = [
+        (1, meta_v2_flip()),
+        (2, schema()),
+        (3, struct.pack("<I", 1) + struct.pack("<f", 0.5)),  # preds
+        (4, struct.pack("<I", 0)),  # levels
+        (5, struct.pack("<Hf", 1, 0.5)),  # hot
+        (6, struct.pack("<I", TERM_BIT)),  # lo -> terminal 0 ("a")
+        (7, struct.pack("<I", TERM_BIT | 1)),  # hi -> terminal 1 ("b")
+        (8, struct.pack("<HH", 0, 1)),  # term class
+        (9, struct.pack("<II", 0, 0)),  # term aggregation reads
+        (10, struct.pack("<HH", 0, 1)),  # majority payload
+    ]
+    return assemble(2, 64, sections)
+
+
+# ------------------------------------------------------------------- fab
+
+
+def build_fab(entries) -> bytes:
+    """entries = [(name, version, shard, snapshot_bytes)]; mirrors the
+    Rust writer in rust/src/frozen/bundle.rs byte for byte."""
+    manifest_len = sum(
+        4 + len(name.encode()) + 8 + 4 + len(shard.encode()) + 8 + 8 + 8
+        for name, _, shard, _ in entries
+    )
+    pos = HEADER_LEN + manifest_len
+    offsets = []
+    for _, _, _, data in entries:
+        pos += (-pos) % 64
+        offsets.append(pos)
+        pos += len(data)
+    payload = bytearray()
+    for (name, version, shard, data), off in zip(entries, offsets):
+        payload += string(name)
+        payload += struct.pack("<Q", version)
+        payload += string(shard)
+        payload += struct.pack("<QQQ", off, len(data), fnv1a64(data))
+    assert len(payload) == manifest_len
+    for (_, _, _, data), off in zip(entries, offsets):
+        while HEADER_LEN + len(payload) < off:
+            payload.append(0)
+        payload += data
+    header = b"FADD.FAB" + struct.pack(
+        "<IIQQQ", 1, len(entries), len(payload), fnv1a64(bytes(payload)), 0
+    )
+    return header + bytes(payload)
+
+
 def main() -> None:
     here = os.path.dirname(os.path.abspath(__file__))
-    for name, data in (("tiny-v1.fdd", build_v1()), ("tiny-v2.fdd", build_v2())):
+    v2 = build_v2()
+    fab = build_fab(
+        [
+            ("tiny", 1, "shard-0", v2),
+            ("tiny-flip", 1, "shard-1", build_v2_flip()),
+        ]
+    )
+    for name, data in (
+        ("tiny-v1.fdd", build_v1()),
+        ("tiny-v2.fdd", v2),
+        ("tiny-v1.fab", fab),
+    ):
         out = os.path.join(here, name)
         with open(out, "wb") as f:
             f.write(data)

@@ -196,6 +196,107 @@ fn serve_from_snapshot_skips_training() {
 }
 
 #[test]
+fn serve_from_bundle_routes_per_model() {
+    // Deploy pipeline: two distinct models packed into one fab artifact.
+    let iris = datasets::load("iris").unwrap();
+    let lenses = datasets::load("lenses").unwrap();
+    let builder = Engine::new();
+    builder
+        .train_and_register(
+            "iris",
+            &iris,
+            16,
+            0,
+            3,
+            forest_add::compile::CompileOptions::default(),
+        )
+        .unwrap();
+    builder
+        .train_and_register(
+            "lenses",
+            &lenses,
+            8,
+            0,
+            5,
+            forest_add::compile::CompileOptions::default(),
+        )
+        .unwrap();
+    let path = std::env::temp_dir().join(format!("serve-bundle-{}.fab", std::process::id()));
+    let path_s = path.to_str().unwrap().to_string();
+    builder.save_bundle(&[], &path_s).unwrap();
+    let frozen_class = |model: &str, row: &[f32]| {
+        builder
+            .classify(Some(model), Some(BackendKind::Frozen), row)
+            .unwrap()
+    };
+
+    // Fleet replica: one artifact, every model, no training.
+    let cfg = ServeConfig {
+        bundle: path_s,
+        dataset: String::new(),
+        ..test_config()
+    };
+    let handle = server::start(&cfg).unwrap();
+    let addr = handle.addr.to_string();
+
+    // /models lists both entries with their bundle provenance
+    let (st, models) = http_request(&addr, "GET", "/models", None).unwrap();
+    assert_eq!(st, 200);
+    let list = models.get("models").and_then(Json::as_arr).unwrap();
+    assert_eq!(list.len(), 2);
+    for m in list {
+        let source = m.get_str("source").expect("bundle models carry provenance");
+        assert!(source.contains(".fab#"), "{source}");
+        let backends = m.get("backends").and_then(Json::as_arr).unwrap();
+        assert_eq!(backends.len(), 1);
+        assert_eq!(backends[0].as_str(), Some("frozen"));
+    }
+    // manifest order: the first entry is the default model
+    assert_eq!(models.get_str("default_model"), Some("iris"));
+
+    // per-request `model` routes into the right bundle entry
+    for (name, ds) in [("iris", &iris), ("lenses", &lenses)] {
+        for i in [0usize, ds.n_rows() / 2, ds.n_rows() - 1] {
+            let body = json::obj(vec![
+                ("features", row_json(ds.row(i))),
+                ("model", json::s(name)),
+            ]);
+            let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+            assert_eq!(st, 200, "{resp:?}");
+            assert_eq!(resp.get_str("model"), Some(format!("{name}@v1").as_str()));
+            assert_eq!(resp.get_str("backend"), Some("frozen"));
+            assert_eq!(
+                resp.get_i64("class").unwrap() as u32,
+                frozen_class(name, ds.row(i)),
+                "{name} row {i}"
+            );
+        }
+    }
+    // untagged traffic lands on the first bundle entry
+    let body = json::obj(vec![("features", row_json(iris.row(0)))]);
+    let (_, resp) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(resp.get_str("model"), Some("iris@v1"));
+    // wrong-arity requests against a named bundle model fail cleanly
+    let body = json::obj(vec![
+        ("features", row_json(iris.row(0))),
+        ("model", json::s("lenses")),
+    ]);
+    let (st, _) = http_request(&addr, "POST", "/classify", Some(&body)).unwrap();
+    assert_eq!(st, 400, "iris arity against the lenses model");
+
+    handle.stop();
+    let _ = std::fs::remove_file(&path);
+
+    // a config naming both snapshot and bundle is rejected up front
+    let bad = ServeConfig {
+        snapshot: "x.fdd".into(),
+        bundle: "y.fab".into(),
+        ..test_config()
+    };
+    assert!(server::start(&bad).is_err());
+}
+
+#[test]
 fn error_handling_over_http() {
     let handle = server::start(&test_config()).unwrap();
     let addr = handle.addr.to_string();
