@@ -10,10 +10,14 @@
 
 use forest_add::bench_support::{measure_ns, report, BenchEnv};
 use forest_add::engine::Engine;
+use forest_add::net::proto;
 use forest_add::serve::batcher::BatcherConfig;
+use forest_add::serve::config::{IoMode, ServeConfig};
+use forest_add::serve::http::HttpClient;
 use forest_add::serve::metrics::ServerMetrics;
 use forest_add::serve::router::Router;
-use forest_add::serve::{BackendKind, ClassifyRequest};
+use forest_add::serve::{server, BackendKind, ClassifyRequest};
+use forest_add::util::json::{self, Json};
 use forest_add::util::table::Table;
 use std::sync::Arc;
 use std::time::Duration;
@@ -150,6 +154,80 @@ fn main() {
     report(
         "serving_batch",
         "Serving — batched classification scaling",
+        &t,
+        &[],
+    );
+
+    // --- HTTP round trip: sync vs evented front-end -------------------------
+    // Full-stack latency for one keep-alive client (socket, incremental
+    // parser, router, serialiser); the binary frame measures the
+    // JSON-free row path end to end.
+    let mut t = Table::new(&["front-end", "request", "mean latency", "req/s"]);
+    let mut modes = vec![IoMode::Sync];
+    if forest_add::net::poll::supported() {
+        modes.push(IoMode::Evented);
+    }
+    for mode in modes {
+        let handle = server::start(&ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            dataset: "iris".into(),
+            trees: 32,
+            max_depth: 6,
+            seed: 7,
+            enable_xla: false,
+            io_mode: mode,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = handle.addr.to_string();
+        let mut client = HttpClient::connect(&addr).unwrap();
+        let bodies: Vec<Vec<u8>> = (0..data.n_rows())
+            .map(|i| {
+                let row = Json::Arr(data.row(i).iter().map(|&v| json::num(v as f64)).collect());
+                json::obj(vec![("features", row)])
+                    .to_string_compact()
+                    .into_bytes()
+            })
+            .collect();
+        let mut i = 0usize;
+        let ns = measure_ns(window, || {
+            let body = &bodies[i % bodies.len()];
+            i += 1;
+            let (st, _, resp) = client
+                .request_raw("POST", "/classify", "application/json", body)
+                .unwrap();
+            assert_eq!(st, 200);
+            std::hint::black_box(resp.len());
+        });
+        t.row(vec![
+            mode.name().to_string(),
+            "json /classify".to_string(),
+            format!("{:.1} us", ns / 1000.0),
+            format!("{:.0}", 1e9 / ns),
+        ]);
+        let buf = forest_add::bench_support::tile_rows(&data, 64, 13);
+        let frame = proto::encode_rows(buf.as_matrix()).unwrap();
+        let ns = measure_ns(window, || {
+            let (st, _, resp) = client
+                .request_raw("POST", "/classify_batch", proto::BINARY_ROWS, &frame)
+                .unwrap();
+            assert_eq!(st, 200);
+            std::hint::black_box(resp.len());
+        });
+        t.row(vec![
+            mode.name().to_string(),
+            "binary /classify_batch x64".to_string(),
+            format!("{:.1} us", ns / 1000.0),
+            format!("{:.0}", 1e9 / ns),
+        ]);
+        // hang up before stopping: a sync worker parked in a keep-alive
+        // read would otherwise pin the join until the read timeout
+        drop(client);
+        handle.stop();
+    }
+    report(
+        "serving_http",
+        "Serving — HTTP round trip, sync vs evented front-end",
         &t,
         &[],
     );

@@ -8,6 +8,9 @@
 
 use forest_add::classifier::{self, BackendKind};
 use forest_add::engine::Engine;
+use forest_add::serve::config::ServeConfig;
+use forest_add::serve::http::http_request;
+use forest_add::util::json::{self, Json};
 use forest_add::util::table::fmt_thousands;
 use forest_add::Result;
 
@@ -133,5 +136,37 @@ fn main() -> Result<()> {
         "per-request model routing: canary row 0 -> class {canary_class}"
     );
     let _ = std::fs::remove_file(&fab);
+
+    // 8. Serving: two interchangeable socket front-ends drive the same
+    //    endpoint layer — the sync thread-per-connection pool and the
+    //    epoll/kqueue evented loop (`serve --io sync|evented`, auto
+    //    picks evented wherever a poller exists). Keep-alive, binary row
+    //    frames, and `429` + `Retry-After` under overload come with
+    //    either; responses are bit-identical across the two. Boot one
+    //    and round-trip a classification over real HTTP.
+    let serving = forest_add::serve::server::start(&ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        enable_xla: false,
+        ..Default::default()
+    })?;
+    let addr = serving.addr.to_string();
+    let body = json::obj(vec![(
+        "features",
+        Json::Arr(sample.iter().map(|&v| json::num(v as f64)).collect()),
+    )]);
+    let (st, resp) = http_request(&addr, "POST", "/classify", Some(&body))?;
+    assert_eq!(st, 200);
+    let (_, metrics) = http_request(&addr, "GET", "/metrics", None)?;
+    println!(
+        "served over the {} front-end: backend {} -> {}",
+        metrics.get_str("io_mode").unwrap_or("?"),
+        resp.get_str("backend").unwrap_or("?"),
+        resp.get_str("label").unwrap_or("?"),
+    );
+    serving.stop();
     Ok(())
 }

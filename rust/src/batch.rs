@@ -185,6 +185,26 @@ impl RowMatrixBuf {
         Ok(())
     }
 
+    /// Append one whole row given as packed little-endian `f32` bytes
+    /// (the wire layout of the binary row frame — deserialisation goes
+    /// straight from the network buffer into batch cells).
+    pub fn push_row_le_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        if self.n_features == 0 || bytes.len() != self.n_features * 4 {
+            return Err(Error::invalid(format!(
+                "row frame has {} bytes, batch stride needs {}",
+                bytes.len(),
+                self.n_features * 4
+            )));
+        }
+        self.data.extend(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().expect("chunk of 4"))),
+        );
+        self.complete = self.data.len();
+        Ok(())
+    }
+
     /// Append one cell of the row being built (streaming producers, e.g.
     /// the HTTP JSON parser). Close the row with [`end_row`](Self::end_row).
     pub fn push_cell(&mut self, v: f32) {
@@ -300,6 +320,28 @@ mod tests {
         buf.clear();
         buf.push_cell(7.0);
         assert_eq!(buf.as_matrix().n_rows(), 0);
+    }
+
+    #[test]
+    fn buf_accepts_little_endian_row_bytes() {
+        let mut buf = RowMatrixBuf::with_capacity(2, 2);
+        let mut wire = Vec::new();
+        for v in [1.5f32, -2.0] {
+            wire.extend_from_slice(&v.to_le_bytes());
+        }
+        buf.push_row_le_bytes(&wire).unwrap();
+        assert_eq!(buf.n_rows(), 1);
+        assert_eq!(buf.as_matrix().row(0), &[1.5, -2.0]);
+        // a short frame is a stride violation, and must not consume cells
+        assert!(buf.push_row_le_bytes(&wire[..4]).is_err());
+        assert_eq!(buf.n_rows(), 1);
+        // NaN survives the wire bit-for-bit (policy: accepted, not mangled)
+        let nan_wire: Vec<u8> = [f32::NAN, 0.0]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        buf.push_row_le_bytes(&nan_wire).unwrap();
+        assert!(buf.as_matrix().row(1)[0].is_nan());
     }
 
     #[test]

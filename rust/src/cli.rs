@@ -14,15 +14,20 @@
 //! - `bench`    — deterministic batch-throughput baseline (rows/sec per
 //!   backend × dataset × batch size, written to `BENCH_batch.json`)
 //! - `serve`    — start the HTTP serving coordinator (`--snapshot` serves a
-//!   pre-compiled artifact without training)
+//!   pre-compiled artifact without training; `--io sync|evented` picks
+//!   the socket front-end)
 //! - `classify` — client convenience: send one request to a running server
 //! - `models`   — client convenience: list models on a running server
+//! - `loadgen`  — fire concurrent keep-alive traffic (JSON + binary row
+//!   frames) at a running server, optionally asserting bit-identical
+//!   responses against a reference server and nonzero latency quantiles
 //! - `artifacts`— inspect compiled XLA artifact variants
 //!
 //! Every evaluation the CLI performs goes through [`Classifier`] trait
 //! objects resolved from a [`ModelRegistry`] — the CLI never dispatches
 //! on a concrete evaluator type.
 
+use crate::batch::RowMatrixBuf;
 use crate::bench_support::measure_ns;
 use crate::classifier::{self, Classifier};
 use crate::compile::{Abstraction, CompileOptions, CompiledDD, ForestCompiler};
@@ -31,9 +36,10 @@ use crate::engine::ModelRegistry;
 use crate::error::{Error, Result};
 use crate::forest::{ForestLearner, RandomForest};
 use crate::frozen::{self, FrozenDD};
+use crate::net::proto;
 use crate::predicate::PredicateOrder;
-use crate::serve::config::ServeConfig;
-use crate::serve::http::http_request;
+use crate::serve::config::{IoMode, ServeConfig};
+use crate::serve::http::{http_request, HttpClient};
 use crate::serve::{server, BackendKind};
 use crate::util::argparse::{ArgSpec, Args};
 use crate::util::json::{self, Json};
@@ -58,6 +64,7 @@ COMMANDS:
   serve      Start the HTTP serving coordinator
   classify   Send one classification request to a running server
   models     List the models registered on a running server
+  loadgen    Fire concurrent keep-alive traffic at a running server
   artifacts  List compiled XLA artifact variants
 
 Run `forest-add <COMMAND> --help` for per-command options.
@@ -82,6 +89,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&rest),
         "classify" => cmd_classify(&rest),
         "models" => cmd_models(&rest),
+        "loadgen" => cmd_loadgen(&rest),
         "artifacts" => cmd_artifacts(&rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -745,6 +753,13 @@ fn serve_spec() -> ArgSpec {
         .opt("artifacts", "", "artifacts directory")
         .opt("variant", "", "artifact variant (small | base | wide)")
         .opt("reply-timeout-ms", "", "batched-reply timeout in milliseconds")
+        .opt("http-workers", "", "HTTP worker threads")
+        .opt("io", "", "socket front-end: auto | sync | evented")
+        .opt(
+            "read-timeout-ms",
+            "",
+            "per-connection read/idle timeout in milliseconds",
+        )
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
         .switch("no-xla", "do not load the XLA backend")
@@ -787,6 +802,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("reply-timeout-ms").is_empty() {
         cfg.reply_timeout_ms = a.u64("reply-timeout-ms")?;
+    }
+    if !a.str("http-workers").is_empty() {
+        cfg.http_workers = a.usize("http-workers")?;
+    }
+    if !a.str("io").is_empty() {
+        cfg.io_mode = IoMode::parse(a.str("io"))?;
+    }
+    if !a.str("read-timeout-ms").is_empty() {
+        cfg.read_timeout_ms = a.u64("read-timeout-ms")?;
     }
     if !a.str("eval-threads").is_empty() {
         cfg.eval_threads = a.usize("eval-threads")?;
@@ -857,6 +881,194 @@ fn cmd_models(args: &[String]) -> Result<()> {
     if status != 200 {
         return Err(Error::Serve(format!("server returned {status}")));
     }
+    Ok(())
+}
+
+fn loadgen_spec() -> ArgSpec {
+    ArgSpec::new(
+        "forest-add loadgen",
+        "Fire concurrent keep-alive traffic at a running server",
+    )
+    .req("addr", "target server address, e.g. 127.0.0.1:7878")
+    .opt(
+        "reference",
+        "",
+        "second server; assert bit-identical responses (latency field aside)",
+    )
+    .opt("dataset", "iris", "dataset supplying the feature rows")
+    .opt("conns", "64", "concurrent keep-alive connections")
+    .opt("requests", "8", "requests per connection (cycles JSON/binary, single/batch)")
+}
+
+/// A dataset row as a JSON array of numbers.
+fn loadgen_row_json(data: &crate::data::Dataset, r: usize) -> Json {
+    Json::Arr(data.row(r).iter().map(|&v| json::num(v as f64)).collect())
+}
+
+/// One of the four request shapes loadgen cycles through: JSON single,
+/// binary single, JSON batch, binary batch (with §6 steps).
+fn loadgen_request(
+    data: &crate::data::Dataset,
+    conn: usize,
+    seq: usize,
+) -> Result<(String, &'static str, Vec<u8>)> {
+    let n = data.n_rows();
+    let i = (conn * 31 + seq * 7) % n;
+    let j = (i + 1) % n;
+    Ok(match seq % 4 {
+        0 => (
+            "/classify".to_string(),
+            "application/json",
+            json::obj(vec![("features", loadgen_row_json(data, i))])
+                .to_string_compact()
+                .into_bytes(),
+        ),
+        1 => {
+            let mut buf = RowMatrixBuf::with_capacity(data.n_features(), 1);
+            buf.push_row(data.row(i))?;
+            (
+                "/classify".to_string(),
+                proto::BINARY_ROWS,
+                proto::encode_rows(buf.as_matrix())?,
+            )
+        }
+        2 => {
+            let rows = Json::Arr(vec![
+                loadgen_row_json(data, i),
+                loadgen_row_json(data, j),
+            ]);
+            (
+                "/classify_batch".to_string(),
+                "application/json",
+                json::obj(vec![("rows", rows)])
+                    .to_string_compact()
+                    .into_bytes(),
+            )
+        }
+        _ => {
+            let mut buf = RowMatrixBuf::with_capacity(data.n_features(), 2);
+            buf.push_row(data.row(i))?;
+            buf.push_row(data.row(j))?;
+            (
+                "/classify_batch?steps=true".to_string(),
+                proto::BINARY_ROWS,
+                proto::encode_rows(buf.as_matrix())?,
+            )
+        }
+    })
+}
+
+/// True when two response payloads agree once the per-request
+/// `latency_us` field is stripped.
+fn payloads_match(a: &[u8], b: &[u8]) -> Result<bool> {
+    let pa = Json::parse(&String::from_utf8_lossy(a))?;
+    let pb = Json::parse(&String::from_utf8_lossy(b))?;
+    Ok(json::strip_key(&pa, "latency_us") == json::strip_key(&pb, "latency_us"))
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    let a = loadgen_spec().parse(args)?;
+    let addr = a.str("addr").to_string();
+    let reference = a.str("reference").to_string();
+    let conns = a.usize("conns")?;
+    let requests = a.usize("requests")?;
+    if conns == 0 || requests == 0 {
+        return Err(Error::invalid("conns and requests must be positive"));
+    }
+    let data = Arc::new(crate::data::resolve(a.str("dataset"))?);
+    let t0 = std::time::Instant::now();
+    let mut workers = Vec::with_capacity(conns);
+    for c in 0..conns {
+        let addr = addr.clone();
+        let reference = reference.clone();
+        let data = data.clone();
+        workers.push(std::thread::spawn(move || -> Result<()> {
+            let mut target = HttpClient::connect(&addr)?;
+            let mut twin = if reference.is_empty() {
+                None
+            } else {
+                Some(HttpClient::connect(&reference)?)
+            };
+            for r in 0..requests {
+                let (path, content_type, body) = loadgen_request(&data, c, r)?;
+                let (status, _, payload) =
+                    target.request_raw("POST", &path, content_type, &body)?;
+                if status != 200 {
+                    return Err(Error::Serve(format!(
+                        "conn {c} req {r}: {path} returned {status}: {}",
+                        String::from_utf8_lossy(&payload)
+                    )));
+                }
+                if let Some(twin) = twin.as_mut() {
+                    let (twin_status, _, twin_payload) =
+                        twin.request_raw("POST", &path, content_type, &body)?;
+                    if twin_status != status || !payloads_match(&payload, &twin_payload)? {
+                        return Err(Error::Serve(format!(
+                            "conn {c} req {r}: {path} diverged between servers:\n  target:    {}\n  reference: {}",
+                            String::from_utf8_lossy(&payload),
+                            String::from_utf8_lossy(&twin_payload)
+                        )));
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    let mut failures = Vec::new();
+    for w in workers {
+        match w.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => failures.push(e.to_string()),
+            Err(_) => failures.push("loadgen worker panicked".into()),
+        }
+    }
+    let elapsed = t0.elapsed();
+    let total = conns * requests;
+    if !failures.is_empty() {
+        return Err(Error::Serve(format!(
+            "{} of {conns} connections failed; first failure: {}",
+            failures.len(),
+            failures[0]
+        )));
+    }
+    // the target must have measured every request we just sent
+    let (status, metrics) = http_request(&addr, "GET", "/metrics", None)?;
+    if status != 200 {
+        return Err(Error::Serve(format!("/metrics returned {status}")));
+    }
+    let req_us = metrics
+        .get("request_us")
+        .ok_or_else(|| Error::Serve("/metrics lacks request_us".into()))?;
+    let count = req_us.get_i64("count").unwrap_or(0);
+    if count < total as i64 {
+        return Err(Error::Serve(format!(
+            "request_us.count = {count}, expected at least {total}"
+        )));
+    }
+    for q in ["p50_us", "p95_us", "p99_us"] {
+        if req_us.get_i64(q).unwrap_or(0) <= 0 {
+            return Err(Error::Serve(format!(
+                "request_us.{q} is zero after {total} requests"
+            )));
+        }
+    }
+    println!(
+        "loadgen: {total} requests over {conns} keep-alive connections in {:.2}s ({:.0} req/s)",
+        elapsed.as_secs_f64(),
+        total as f64 / elapsed.as_secs_f64().max(1e-9),
+    );
+    println!(
+        "loadgen: server io_mode {}, request latency p50 {} µs, p95 {} µs, p99 {} µs{}",
+        metrics.get_str("io_mode").unwrap_or("?"),
+        req_us.get_i64("p50_us").unwrap_or(0),
+        req_us.get_i64("p95_us").unwrap_or(0),
+        req_us.get_i64("p99_us").unwrap_or(0),
+        if reference.is_empty() {
+            ""
+        } else {
+            " — responses bit-identical to the reference server"
+        }
+    );
     Ok(())
 }
 

@@ -28,6 +28,11 @@ pub enum Error {
     /// The serving layer failed (queue closed, worker died, bad request).
     Serve(String),
 
+    /// The server is at capacity right now and shed the request;
+    /// retrying shortly is expected to succeed (HTTP: `429` +
+    /// `Retry-After`, distinct from the hard failures above).
+    Overloaded(String),
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -41,6 +46,7 @@ impl fmt::Display for Error {
             Error::Capacity(msg) => write!(f, "capacity exceeded: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Serve(msg) => write!(f, "serving error: {msg}"),
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -164,6 +164,43 @@
 //! let class = replica.classify(Some("iris"), None, data.row(0)).unwrap();
 //! # let _ = (ids, class);
 //! ```
+//!
+//! ## Evented serving: one poller thread, thousands of connections
+//!
+//! The HTTP front-end has two interchangeable transports behind one
+//! protocol layer ([`net::proto`]), selected with `ServeConfig::io_mode`
+//! / `forest-add serve --io sync|evented` (auto-detected by default:
+//! evented wherever [`net::poll::supported`] is true — linux epoll and
+//! macos kqueue — sync thread-per-connection elsewhere). Both transports
+//! share the parser and serialiser, so their responses are
+//! **bit-identical** — an integration test drives 64 concurrent
+//! keep-alive connections through both and compares byte-for-byte.
+//!
+//! The evented path ([`net::event_loop`]) multiplexes every connection
+//! on one poller thread with HTTP/1.1 keep-alive and pipelining;
+//! complete requests dispatch to a worker pool through a *bounded*
+//! queue. When the queue (or the dynamic batcher behind
+//! `POST /classify_batch`) is full, the request is shed immediately with
+//! `429 Too Many Requests` + `Retry-After` — load spikes degrade into
+//! fast rejections, never unbounded queueing. `GET /metrics` exports
+//! end-to-end p50/p95/p99 request latency, open/total connection
+//! gauges, and the `429` shed count.
+//!
+//! Feature rows can skip JSON entirely: `POST /classify_batch` with
+//! `Content-Type: application/octet-stream` carries the compact binary
+//! row frame, deserialised straight into a [`batch::RowMatrixBuf`]
+//! (no JSON cell parsing on the hot path):
+//!
+//! | offset | size | field |
+//! |--------|------|-------|
+//! | 0 | 4 | `n_rows`, little-endian `u32` |
+//! | 4 | 4 | `n_features`, little-endian `u32` |
+//! | 8 | `4·n_rows·n_features` | row-major `f32` cells, little-endian |
+//!
+//! `POST /classify` accepts the same frame with `n_rows == 1`. Binary
+//! requests put what the JSON body would carry in the query string
+//! (`?backend=frozen&model=iris&steps=true`); responses are always the
+//! JSON documents described above, so clients mix formats freely.
 
 pub mod add;
 pub mod batch;
@@ -177,6 +214,7 @@ pub mod error;
 pub mod feas;
 pub mod forest;
 pub mod frozen;
+pub mod net;
 pub mod predicate;
 pub mod runtime;
 pub mod serve;

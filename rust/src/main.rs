@@ -1,4 +1,7 @@
-//! `forest-add` CLI — leader entrypoint (subcommands grow with the library).
+//! `forest-add` CLI — leader entrypoint (subcommands grow with the
+//! library; `serve --io sync|evented` picks the socket front-end, and
+//! `loadgen` drives a running server with concurrent keep-alive
+//! traffic).
 
 fn main() {
     if let Err(e) = forest_add::run_cli(std::env::args().skip(1).collect()) {

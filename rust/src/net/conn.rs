@@ -1,0 +1,217 @@
+//! Nonblocking per-connection state machine for the evented front-end.
+//!
+//! A connection cycles `Reading → InFlight → Writing → Reading` for each
+//! request it serves: the loop drains socket bytes into the incremental
+//! parser, a complete request goes in flight to the worker pool (read
+//! interest drops — one request per connection at a time keeps memory
+//! bounded), the response is flushed incrementally under write
+//! readiness, and a keep-alive connection returns to `Reading` (any
+//! pipelined bytes already buffered in the parser are served next).
+
+use crate::net::proto::{RequestParser, Response};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// Lifecycle phase of a connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConnState {
+    /// Waiting for (more of) a request.
+    Reading,
+    /// A request is being handled by a worker; no socket interest.
+    InFlight,
+    /// A response is being flushed.
+    Writing,
+}
+
+/// Outcome of draining the socket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// The peer is still connected (drained to `WouldBlock`).
+    Open,
+    /// The peer half-closed its write side (orderly EOF).
+    Eof,
+}
+
+/// One nonblocking connection: socket + parser + pending write buffer.
+#[derive(Debug)]
+pub struct Conn {
+    /// The nonblocking socket.
+    pub stream: TcpStream,
+    /// The incremental request parser (owns buffered request bytes).
+    pub parser: RequestParser,
+    /// Current lifecycle phase.
+    pub state: ConnState,
+    /// Close once the pending response is fully flushed.
+    pub close_after_write: bool,
+    /// The peer sent EOF; finish what is buffered, then close.
+    pub peer_eof: bool,
+    /// Keep-alive decision of the request currently in flight.
+    pub keep_alive_pending: bool,
+    /// Dispatch time of the request in flight / being written — cleared
+    /// by the loop when it records end-to-end latency after the flush.
+    pub served_t0: Option<Instant>,
+    /// Last socket activity (idle-timeout sweeps compare against this).
+    pub last_activity: Instant,
+    write_buf: Vec<u8>,
+    written: usize,
+}
+
+impl Conn {
+    /// Wrap an accepted socket (caller has already set nonblocking).
+    pub fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            parser: RequestParser::new(),
+            state: ConnState::Reading,
+            close_after_write: false,
+            peer_eof: false,
+            keep_alive_pending: true,
+            served_t0: None,
+            last_activity: Instant::now(),
+            write_buf: Vec::new(),
+            written: 0,
+        }
+    }
+
+    /// Drain everything the socket has into the parser (until
+    /// `WouldBlock`). `Err` means the connection is broken and must be
+    /// dropped.
+    pub fn fill(&mut self) -> std::io::Result<ReadOutcome> {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut buf) {
+                Ok(0) => {
+                    self.peer_eof = true;
+                    return Ok(ReadOutcome::Eof);
+                }
+                Ok(n) => {
+                    self.parser.push(&buf[..n]);
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(ReadOutcome::Open),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Queue a response for flushing and move to `Writing`.
+    pub fn queue_response(&mut self, resp: &Response, keep_alive: bool) {
+        self.write_buf = resp.to_bytes(keep_alive);
+        self.written = 0;
+        self.close_after_write = !keep_alive;
+        self.state = ConnState::Writing;
+    }
+
+    /// Push pending response bytes (until `WouldBlock`). `Ok(true)` once
+    /// everything is flushed; `Err` drops the connection.
+    pub fn flush(&mut self) -> std::io::Result<bool> {
+        while self.written < self.write_buf.len() {
+            match self.stream.write(&self.write_buf[self.written..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        ErrorKind::WriteZero,
+                        "socket accepted no bytes",
+                    ))
+                }
+                Ok(n) => {
+                    self.written += n;
+                    self.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        self.write_buf.clear();
+        self.written = 0;
+        Ok(true)
+    }
+
+    /// True while response bytes await flushing.
+    pub fn has_pending_write(&self) -> bool {
+        self.written < self.write_buf.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+    use std::io::{Read as _, Write as _};
+    use std::net::TcpListener;
+    use std::time::Duration;
+
+    /// A connected (client, nonblocking server-side Conn) pair.
+    fn pair() -> (TcpStream, Conn) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+        (client, Conn::new(server))
+    }
+
+    #[test]
+    fn reads_a_request_across_chunks_and_writes_the_response() {
+        let (mut client, mut conn) = pair();
+        client
+            .write_all(b"POST /classify HTTP/1.1\r\nContent-Le")
+            .unwrap();
+        client.flush().unwrap();
+        // wait until the first chunk is visible server-side
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while conn.parser.is_idle() {
+            assert_eq!(conn.fill().unwrap(), ReadOutcome::Open);
+            assert!(Instant::now() < deadline, "first chunk never arrived");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert!(conn.parser.try_next().unwrap().is_none(), "incomplete");
+        client.write_all(b"ngth: 2\r\n\r\nhi").unwrap();
+        client.flush().unwrap();
+        let req = loop {
+            conn.fill().unwrap();
+            if let Some(req) = conn.parser.try_next().unwrap() {
+                break req;
+            }
+            assert!(Instant::now() < deadline, "request never completed");
+            std::thread::sleep(Duration::from_millis(1));
+        };
+        assert_eq!(req.body, b"hi");
+        assert!(req.keep_alive);
+
+        let resp = Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]));
+        conn.queue_response(&resp, true);
+        assert_eq!(conn.state, ConnState::Writing);
+        assert!(conn.has_pending_write());
+        assert!(conn.flush().unwrap(), "small response flushes at once");
+        assert!(!conn.has_pending_write());
+
+        client
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let mut got = vec![0u8; 256];
+        let n = client.read(&mut got).unwrap();
+        let text = String::from_utf8_lossy(&got[..n]).to_string();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive"));
+    }
+
+    #[test]
+    fn detects_peer_eof() {
+        let (client, mut conn) = pair();
+        drop(client);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match conn.fill().unwrap() {
+                ReadOutcome::Eof => break,
+                ReadOutcome::Open => {
+                    assert!(Instant::now() < deadline, "EOF never surfaced");
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+        assert!(conn.peer_eof);
+        assert!(conn.parser.is_idle());
+    }
+}

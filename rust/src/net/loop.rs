@@ -1,0 +1,767 @@
+//! The evented serving front-end: event loop + acceptor + worker pool.
+//!
+//! One poller thread multiplexes the listener and every connection
+//! (module [`conn`](crate::net::conn) state machines). Complete requests
+//! are handed to a small worker pool through a *bounded* dispatch queue;
+//! a full queue is answered immediately with `429` + `Retry-After`
+//! (admission control — the loop never queues unboundedly, so a traffic
+//! spike degrades into fast rejections instead of collapse). Workers run
+//! the transport-independent handler and push `(token, response)`
+//! completions back; a self-pipe waker interrupts the poll wait so
+//! responses flush promptly.
+//!
+//! One request per connection is in flight at a time (read interest
+//! drops while a worker owns the request) — pipelined bytes wait in the
+//! parser and are served back-to-back after each response.
+
+use crate::error::{Error, Result};
+use crate::net::conn::{Conn, ConnState};
+use crate::net::poll::{Event, Poller};
+use crate::net::proto::{Request, Response};
+use crate::net::LoopObserver;
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// The listener's registration token.
+const TOK_LISTENER: u64 = 0;
+/// The waker pipe's registration token.
+const TOK_WAKER: u64 = 1;
+/// First token handed to an accepted connection.
+const TOK_FIRST_CONN: u64 = 2;
+
+/// The transport-independent request handler (the serving layer's
+/// `respond`, closed over its router).
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A dispatched request: connection token, request, parse-complete time.
+type Job = (u64, Request, Instant);
+
+/// A finished request travelling back to the loop.
+type Completion = (u64, Response, Instant);
+
+/// Event-loop policy.
+#[derive(Debug, Clone)]
+pub struct EventLoopConfig {
+    /// Worker threads running the handler.
+    pub workers: usize,
+    /// Bounded dispatch-queue capacity: requests parsed while all
+    /// workers are busy queue up to this depth, then shed with `429`.
+    pub dispatch_cap: usize,
+    /// Close connections with no socket activity for this long; a
+    /// connection stalled *mid-request* gets `408` first.
+    pub idle_timeout: Duration,
+    /// `Retry-After` seconds on `429` responses.
+    pub retry_after_s: u32,
+}
+
+impl Default for EventLoopConfig {
+    fn default() -> Self {
+        EventLoopConfig {
+            workers: 4,
+            dispatch_cap: 256,
+            idle_timeout: Duration::from_secs(10),
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// Wakes the poll wait from any thread (self-pipe: one byte down a
+/// nonblocking socketpair the loop watches).
+#[derive(Clone)]
+struct Waker {
+    tx: Arc<UnixStream>,
+}
+
+impl Waker {
+    fn wake(&self) {
+        // a full pipe already guarantees a pending wakeup
+        let _ = (&*self.tx).write(&[1]);
+    }
+}
+
+/// A running event loop; `wake` + `join` after setting the shared
+/// shutdown flag stops it.
+pub struct EventLoopHandle {
+    /// The bound address.
+    pub addr: SocketAddr,
+    waker: Waker,
+    loop_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EventLoopHandle {
+    /// Interrupt the poll wait (shutdown checks run on wakeup).
+    pub fn wake(&self) {
+        self.waker.wake();
+    }
+
+    /// Wake and join the loop and its workers (call after setting the
+    /// shutdown flag passed to [`start`]).
+    pub fn join(&mut self) {
+        self.wake();
+        if let Some(t) = self.loop_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.workers.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start the event loop on a bound listener. Returns once the poller is
+/// armed; `shutdown` + [`EventLoopHandle::join`] stops everything.
+pub fn start(
+    listener: TcpListener,
+    handler: Handler,
+    observer: Arc<dyn LoopObserver>,
+    cfg: EventLoopConfig,
+    shutdown: Arc<AtomicBool>,
+) -> Result<EventLoopHandle> {
+    listener.set_nonblocking(true)?;
+    let addr = listener.local_addr()?;
+    let poller = Poller::new()?;
+    let (wake_rx, wake_tx) = UnixStream::pair()?;
+    wake_rx.set_nonblocking(true)?;
+    wake_tx.set_nonblocking(true)?;
+    poller.register(listener.as_raw_fd(), TOK_LISTENER, true, false)?;
+    poller.register(wake_rx.as_raw_fd(), TOK_WAKER, true, false)?;
+    let (dispatch_tx, dispatch_rx): (SyncSender<Job>, Receiver<Job>) =
+        mpsc::sync_channel(cfg.dispatch_cap.max(1));
+    let dispatch_rx = Arc::new(Mutex::new(dispatch_rx));
+    let completions: Arc<Mutex<Vec<Completion>>> = Arc::new(Mutex::new(Vec::new()));
+    let waker = Waker {
+        tx: Arc::new(wake_tx),
+    };
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for w in 0..cfg.workers.max(1) {
+        let rx = dispatch_rx.clone();
+        let handler = handler.clone();
+        let completions = completions.clone();
+        let waker = waker.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("net-worker-{w}"))
+                .spawn(move || loop {
+                    let job = rx.lock().unwrap().recv();
+                    match job {
+                        Ok((token, req, t0)) => {
+                            let resp = handler(&req);
+                            completions.lock().unwrap().push((token, resp, t0));
+                            waker.wake();
+                        }
+                        Err(_) => return, // loop gone, queue drained
+                    }
+                })
+                .map_err(|e| Error::Serve(format!("cannot spawn net worker: {e}")))?,
+        );
+    }
+    let lp = Loop {
+        poller,
+        listener,
+        wake_rx,
+        conns: HashMap::new(),
+        next_token: TOK_FIRST_CONN,
+        dispatch_tx,
+        completions,
+        observer,
+        cfg,
+        shutdown,
+    };
+    let loop_thread = std::thread::Builder::new()
+        .name("net-loop".into())
+        .spawn(move || lp.run())
+        .map_err(|e| Error::Serve(format!("cannot spawn event loop: {e}")))?;
+    Ok(EventLoopHandle {
+        addr,
+        waker,
+        loop_thread: Some(loop_thread),
+        workers,
+    })
+}
+
+struct Loop {
+    poller: Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    dispatch_tx: SyncSender<Job>,
+    completions: Arc<Mutex<Vec<Completion>>>,
+    observer: Arc<dyn LoopObserver>,
+    cfg: EventLoopConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Loop {
+    fn run(mut self) {
+        // the wait timeout doubles as the idle-sweep cadence
+        let sweep = (self.cfg.idle_timeout / 4)
+            .clamp(Duration::from_millis(25), Duration::from_millis(500));
+        let mut events: Vec<Event> = Vec::new();
+        while !self.shutdown.load(Ordering::Relaxed) {
+            if let Err(e) = self.poller.wait(&mut events, Some(sweep)) {
+                crate::log_warn!("net: poll wait failed: {e}");
+                break;
+            }
+            for ev in &events {
+                match ev.token {
+                    TOK_LISTENER => self.accept_ready(),
+                    TOK_WAKER => self.drain_waker(),
+                    token => self.conn_ready(token, ev.readable, ev.writable),
+                }
+            }
+            // completions may coalesce under one waker byte: drain every turn
+            self.drain_completions();
+            self.sweep_idle();
+        }
+        // orderly teardown: drop every connection (dispatch_tx drops with
+        // self, which stops the workers once the queue drains)
+        for token in self.conns.keys().copied().collect::<Vec<_>>() {
+            self.close(token);
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue; // drop the stream; the client sees a reset
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if let Err(e) = self.poller.register(stream.as_raw_fd(), token, true, false) {
+                        crate::log_warn!("net: cannot register connection: {e}");
+                        continue;
+                    }
+                    self.conns.insert(token, Conn::new(stream));
+                    self.observer.conn_opened();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    crate::log_warn!("net: accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.wake_rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+
+    fn conn_ready(&mut self, token: u64, readable: bool, writable: bool) {
+        if writable {
+            let flushed = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if conn.state == ConnState::Writing {
+                    conn.flush()
+                } else {
+                    Ok(false)
+                }
+            };
+            match flushed {
+                Ok(true) => {
+                    if self.after_flush(token) {
+                        self.advance(token);
+                    }
+                }
+                Ok(false) => {}
+                Err(_) => {
+                    self.close(token);
+                    return;
+                }
+            }
+        }
+        if readable {
+            let filled = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if conn.state != ConnState::Reading {
+                    return; // bytes wait in the socket until this request is served
+                }
+                conn.fill()
+            };
+            match filled {
+                Ok(_) => self.advance(token),
+                Err(_) => self.close(token),
+            }
+        }
+    }
+
+    /// Parse-and-dispatch until the connection blocks: a dispatched
+    /// request, a partial request, or a pending partial write.
+    fn advance(&mut self, token: u64) {
+        loop {
+            let parsed = {
+                let Some(conn) = self.conns.get_mut(&token) else {
+                    return;
+                };
+                if conn.state != ConnState::Reading {
+                    return;
+                }
+                conn.parser.try_next()
+            };
+            match parsed {
+                Ok(Some(req)) => {
+                    let keep = req.keep_alive;
+                    let t0 = Instant::now();
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.keep_alive_pending = keep;
+                    }
+                    match self.dispatch_tx.try_send((token, req, t0)) {
+                        Ok(()) => {
+                            if let Some(conn) = self.conns.get_mut(&token) {
+                                conn.state = ConnState::InFlight;
+                            }
+                            // one request in flight per connection: no
+                            // read interest until its response is out
+                            self.set_interest(token, false, false);
+                            return;
+                        }
+                        Err(TrySendError::Full(_)) => {
+                            // admission control: shed instead of queueing
+                            self.observer.request_rejected();
+                            let resp = Response::overloaded(
+                                self.cfg.retry_after_s,
+                                "server overloaded: dispatch queue full — retry shortly",
+                            );
+                            if !self.send_response(token, &resp, keep, None) {
+                                return;
+                            }
+                            // flushed in full and still keep-alive: a
+                            // pipelined request may already be buffered
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            self.close(token);
+                            return;
+                        }
+                    }
+                }
+                Ok(None) => {
+                    let eof = self
+                        .conns
+                        .get(&token)
+                        .map(|c| c.peer_eof)
+                        .unwrap_or(true);
+                    if eof {
+                        // no further bytes can complete a request
+                        self.close(token);
+                    }
+                    return;
+                }
+                Err(e) => {
+                    // malformed stream: error out and hang up
+                    self.send_response(token, &Response::error(400, e.to_string()), false, None);
+                    return;
+                }
+            }
+        }
+    }
+
+    /// Queue a response and flush optimistically. Returns true when it
+    /// was fully flushed and the connection is back in `Reading`.
+    fn send_response(
+        &mut self,
+        token: u64,
+        resp: &Response,
+        keep_alive: bool,
+        served_t0: Option<Instant>,
+    ) -> bool {
+        let flushed = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return false;
+            };
+            conn.served_t0 = served_t0;
+            // error responses hang up (the seed server's behaviour): the
+            // client re-establishes state instead of guessing stream health
+            let keep = keep_alive && !conn.peer_eof && resp.status < 400;
+            conn.queue_response(resp, keep);
+            conn.flush()
+        };
+        match flushed {
+            Ok(true) => self.after_flush(token),
+            Ok(false) => {
+                self.set_interest(token, false, true);
+                false
+            }
+            Err(_) => {
+                self.close(token);
+                false
+            }
+        }
+    }
+
+    /// Bookkeeping once a response is fully out: record end-to-end
+    /// latency, then close or rearm for reading. Returns true when the
+    /// connection is readable again.
+    fn after_flush(&mut self, token: u64) -> bool {
+        let (close, t0) = {
+            let Some(conn) = self.conns.get_mut(&token) else {
+                return false;
+            };
+            conn.state = ConnState::Reading;
+            (conn.close_after_write, conn.served_t0.take())
+        };
+        if let Some(t0) = t0 {
+            self.observer.request_served(t0.elapsed());
+        }
+        if close {
+            self.close(token);
+            return false;
+        }
+        self.set_interest(token, true, false);
+        true
+    }
+
+    fn drain_completions(&mut self) {
+        let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
+        for (token, resp, t0) in done {
+            let keep = match self.conns.get(&token) {
+                Some(conn) => conn.keep_alive_pending,
+                None => continue, // client vanished mid-flight
+            };
+            if self.send_response(token, &resp, keep, Some(t0)) {
+                self.advance(token);
+            }
+        }
+    }
+
+    fn sweep_idle(&mut self) {
+        let now = Instant::now();
+        let stale: Vec<(u64, bool)> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| {
+                c.state != ConnState::InFlight
+                    && now.duration_since(c.last_activity) > self.cfg.idle_timeout
+            })
+            .map(|(&t, c)| (t, c.state == ConnState::Reading && !c.parser.is_idle()))
+            .collect();
+        for (token, mid_request) in stale {
+            if mid_request {
+                // stalled mid-request: say why before hanging up
+                self.send_response(
+                    token,
+                    &Response::error(408, "request read timed out"),
+                    false,
+                    None,
+                );
+            }
+            // idle-at-boundary (or still-unflushed 408): close silently
+            if self.conns.contains_key(&token) {
+                self.close(token);
+            }
+        }
+    }
+
+    fn set_interest(&mut self, token: u64, readable: bool, writable: bool) {
+        if let Some(conn) = self.conns.get(&token) {
+            if let Err(e) = self
+                .poller
+                .modify(conn.stream.as_raw_fd(), token, readable, writable)
+            {
+                crate::log_warn!("net: interest change failed: {e}");
+            }
+        }
+    }
+
+    fn close(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            self.poller.deregister(conn.stream.as_raw_fd());
+            self.observer.conn_closed();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Json};
+    use std::net::TcpStream;
+    use std::sync::atomic::AtomicUsize;
+
+    #[derive(Default)]
+    struct CountingObserver {
+        opened: AtomicUsize,
+        closed: AtomicUsize,
+        served: AtomicUsize,
+        rejected: AtomicUsize,
+    }
+
+    impl LoopObserver for CountingObserver {
+        fn conn_opened(&self) {
+            self.opened.fetch_add(1, Ordering::Relaxed);
+        }
+        fn conn_closed(&self) {
+            self.closed.fetch_add(1, Ordering::Relaxed);
+        }
+        fn request_served(&self, _latency: Duration) {
+            self.served.fetch_add(1, Ordering::Relaxed);
+        }
+        fn request_rejected(&self) {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Read exactly one HTTP response off a blocking stream.
+    fn read_response(stream: &mut TcpStream) -> (u16, String, Vec<u8>) {
+        use std::io::Read as _;
+        stream
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        let mut raw = Vec::new();
+        let mut buf = [0u8; 1024];
+        let head_end = loop {
+            if let Some(i) = raw.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            let n = stream.read(&mut buf).expect("response head");
+            assert!(n > 0, "EOF before response head");
+            raw.extend_from_slice(&buf[..n]);
+        };
+        let head = String::from_utf8(raw[..head_end].to_vec()).unwrap();
+        let status: u16 = head
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status code");
+        let content_length: usize = head
+            .lines()
+            .find_map(|l| {
+                l.to_ascii_lowercase()
+                    .strip_prefix("content-length:")
+                    .map(str::to_string)
+            })
+            .and_then(|v| v.trim().parse().ok())
+            .expect("content-length");
+        let mut body = raw[head_end + 4..].to_vec();
+        while body.len() < content_length {
+            let n = stream.read(&mut buf).expect("response body");
+            assert!(n > 0, "EOF mid-body");
+            body.extend_from_slice(&buf[..n]);
+        }
+        (status, head, body)
+    }
+
+    fn send_request(stream: &mut TcpStream, path: &str, body: &[u8], close: bool) {
+        let head = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            body.len(),
+            if close { "close" } else { "keep-alive" }
+        );
+        stream.write_all(head.as_bytes()).unwrap();
+        stream.write_all(body).unwrap();
+        stream.flush().unwrap();
+    }
+
+    fn echo_handler() -> Handler {
+        Arc::new(|req: &Request| {
+            Response::json(
+                200,
+                &json::obj(vec![
+                    ("path", json::s(req.path.clone())),
+                    ("len", json::num(req.body.len() as f64)),
+                ]),
+            )
+        })
+    }
+
+    #[test]
+    fn keep_alive_connection_serves_many_requests() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            echo_handler(),
+            observer.clone(),
+            EventLoopConfig::default(),
+            shutdown.clone(),
+        )
+        .unwrap();
+
+        let mut client = TcpStream::connect(handle.addr).unwrap();
+        for i in 0..3 {
+            send_request(&mut client, &format!("/r{i}"), b"abc", false);
+            let (status, head, body) = read_response(&mut client);
+            assert_eq!(status, 200);
+            assert!(head.contains("Connection: keep-alive"), "{head}");
+            let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(v.get_str("path"), Some(format!("/r{i}").as_str()));
+            assert_eq!(v.get_i64("len"), Some(3));
+        }
+        // Connection: close is honoured after the final response
+        send_request(&mut client, "/last", b"", true);
+        let (status, head, _) = read_response(&mut client);
+        assert_eq!(status, 200);
+        assert!(head.contains("Connection: close"), "{head}");
+        use std::io::Read as _;
+        let mut rest = Vec::new();
+        client.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server must close after Connection: close");
+
+        // wait for the close to be observed, then shut down
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while observer.closed.load(Ordering::Relaxed) < 1 {
+            assert!(Instant::now() < deadline, "close never observed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+        assert_eq!(observer.opened.load(Ordering::Relaxed), 1);
+        assert_eq!(observer.closed.load(Ordering::Relaxed), 1);
+        assert_eq!(observer.served.load(Ordering::Relaxed), 4);
+        assert_eq!(observer.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn malformed_request_gets_400_and_close() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            echo_handler(),
+            observer,
+            EventLoopConfig::default(),
+            shutdown.clone(),
+        )
+        .unwrap();
+        let mut client = TcpStream::connect(handle.addr).unwrap();
+        client.write_all(b"BOGUS\r\n\r\n").unwrap();
+        let (status, head, _) = read_response(&mut client);
+        assert_eq!(status, 400);
+        assert!(head.contains("Connection: close"));
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+    }
+
+    #[test]
+    fn full_dispatch_queue_sheds_with_429_retry_after() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let gate = Arc::new(AtomicBool::new(true));
+        let entered = Arc::new(AtomicUsize::new(0));
+        let handler: Handler = {
+            let gate = gate.clone();
+            let entered = entered.clone();
+            Arc::new(move |_req: &Request| {
+                entered.fetch_add(1, Ordering::SeqCst);
+                while gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]))
+            })
+        };
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            handler,
+            observer.clone(),
+            EventLoopConfig {
+                workers: 1,
+                dispatch_cap: 1,
+                ..Default::default()
+            },
+            shutdown.clone(),
+        )
+        .unwrap();
+
+        // A occupies the single worker…
+        let mut a = TcpStream::connect(handle.addr).unwrap();
+        send_request(&mut a, "/a", b"", false);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while entered.load(Ordering::SeqCst) < 1 {
+            assert!(Instant::now() < deadline, "worker never picked up A");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // …B fills the depth-1 dispatch queue…
+        let mut b = TcpStream::connect(handle.addr).unwrap();
+        send_request(&mut b, "/b", b"", false);
+        std::thread::sleep(Duration::from_millis(100)); // let the loop enqueue B
+        // …so C must be shed immediately with the backpressure contract.
+        let mut c = TcpStream::connect(handle.addr).unwrap();
+        send_request(&mut c, "/c", b"", false);
+        let (status, head, body) = read_response(&mut c);
+        assert_eq!(status, 429, "head: {head}");
+        assert!(head.contains("Retry-After: 1"), "{head}");
+        assert!(String::from_utf8_lossy(&body).contains("overloaded"));
+        assert_eq!(observer.rejected.load(Ordering::Relaxed), 1);
+
+        // opening the gate drains A then B with successes
+        gate.store(false, Ordering::SeqCst);
+        assert_eq!(read_response(&mut a).0, 200);
+        assert_eq!(read_response(&mut b).0, 200);
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+    }
+
+    #[test]
+    fn stalled_mid_request_connection_gets_408() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            echo_handler(),
+            observer,
+            EventLoopConfig {
+                idle_timeout: Duration::from_millis(200),
+                ..Default::default()
+            },
+            shutdown.clone(),
+        )
+        .unwrap();
+        let mut client = TcpStream::connect(handle.addr).unwrap();
+        // half a request, then silence
+        client.write_all(b"POST /classify HTTP/1.1\r\nConte").unwrap();
+        client.flush().unwrap();
+        let t0 = Instant::now();
+        let (status, _, _) = read_response(&mut client);
+        assert_eq!(status, 408);
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "timeout must fire promptly"
+        );
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+    }
+
+    #[test]
+    fn idle_connection_is_closed_silently() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            echo_handler(),
+            observer,
+            EventLoopConfig {
+                idle_timeout: Duration::from_millis(200),
+                ..Default::default()
+            },
+            shutdown.clone(),
+        )
+        .unwrap();
+        let mut client = TcpStream::connect(handle.addr).unwrap();
+        client
+            .set_read_timeout(Some(Duration::from_secs(10)))
+            .unwrap();
+        use std::io::Read as _;
+        let mut buf = Vec::new();
+        client.read_to_end(&mut buf).unwrap(); // EOF, nothing written
+        assert!(buf.is_empty(), "idle close sends no bytes");
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+    }
+}

@@ -1,0 +1,58 @@
+//! Std-only async networking substrate for the serving front-end.
+//!
+//! No async runtime is available offline, so this module builds the
+//! evented serving stack from first principles on `std::net` plus two
+//! raw readiness syscalls:
+//!
+//! - [`poll`] — epoll (linux) / kqueue (macos) readiness wrapper, FFI in
+//!   the style of [`crate::runtime::mmap`]: a tiny, level-triggered
+//!   surface with a [`poll::supported`] capability probe;
+//! - [`proto`] — transport-independent protocol layer: an incremental
+//!   HTTP/1.1 request parser (keep-alive, pipelining) and the compact
+//!   `application/octet-stream` row frame codec that deserialises
+//!   batches straight into [`crate::batch::RowMatrixBuf`];
+//! - [`conn`] — the nonblocking per-connection state machine (read →
+//!   in-flight → write), shared buffer management and partial-write
+//!   tracking;
+//! - [`event_loop`] — the event loop + acceptor: one poller thread
+//!   multiplexes every connection, parsed requests are dispatched to a
+//!   worker pool through a bounded queue (admission control: a full
+//!   queue is an immediate `429` + `Retry-After`, never unbounded
+//!   queueing), responses travel back via a completion list and a
+//!   self-pipe waker.
+//!
+//! The sync thread-per-connection server remains as the fallback where
+//! no poller exists ([`poll::supported`] is `false`); both front-ends
+//! share [`proto`], so they serve bit-identical responses.
+
+pub mod conn;
+pub mod poll;
+pub mod proto;
+
+#[cfg(any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64")))]
+#[path = "loop.rs"]
+pub mod event_loop;
+
+/// Observer of event-loop lifecycle: connection gauges and end-to-end
+/// request latency. Implemented by
+/// [`ServerMetrics`](crate::serve::metrics::ServerMetrics); the loop
+/// only ever sees this trait, so the net layer stays independent of the
+/// serving layer. All methods default to no-ops (tests can observe
+/// selectively).
+pub trait LoopObserver: Send + Sync {
+    /// A connection was accepted.
+    fn conn_opened(&self) {}
+    /// A connection was closed (any cause: EOF, error, idle timeout).
+    fn conn_closed(&self) {}
+    /// One request was fully served (response flushed to the socket);
+    /// `latency` spans parse-complete → last byte written.
+    fn request_served(&self, _latency: std::time::Duration) {}
+    /// One request was shed with `429` by admission control.
+    fn request_rejected(&self) {}
+}
+
+/// A no-op observer for tests and benches.
+#[derive(Debug, Default)]
+pub struct NullObserver;
+
+impl LoopObserver for NullObserver {}

@@ -1,0 +1,471 @@
+//! Readiness polling, std-only (raw `epoll(7)` / `kqueue(2)` FFI).
+//!
+//! No async runtime or polling crate is available offline, so the two
+//! syscall families are declared here directly, in the style of
+//! [`crate::runtime::mmap`]: a deliberately tiny, level-triggered
+//! surface (register / modify / deregister / wait) behind one portable
+//! type. Tokens are opaque `u64`s chosen by the caller and returned
+//! verbatim with each event.
+//!
+//! Linux uses epoll; macOS uses kqueue (gated to macOS only — other BSDs
+//! lay out `struct kevent` differently, and declaring a struct we cannot
+//! test would be a silent ABI hazard). Everywhere else
+//! [`supported`] reports `false` and the serving layer falls back to the
+//! sync thread-per-connection front-end.
+
+/// Whether this build has a readiness poller (and therefore the evented
+/// serving front-end). When `false`, `serve --io auto` resolves to the
+/// sync fallback and `--io evented` is a configuration error.
+pub const fn supported() -> bool {
+    cfg!(any(
+        target_os = "linux",
+        all(target_os = "macos", target_pointer_width = "64")
+    ))
+}
+
+/// One readiness event: the registration token plus the directions that
+/// are ready. Error/hangup conditions surface as readable+writable so
+/// the owning connection performs I/O and observes the failure directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// The caller-chosen registration token.
+    pub token: u64,
+    /// The fd can be read without blocking (or has hung up).
+    pub readable: bool,
+    /// The fd can be written without blocking (or has errored).
+    pub writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::Event;
+    use crate::error::{Error, Result};
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+    const EINTR: i32 = 4;
+
+    /// `struct epoll_event`: packed on x86-64 (the kernel ABI), natural
+    /// alignment elsewhere.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn os_err(call: &str) -> Error {
+        Error::Serve(format!("{call}: {}", std::io::Error::last_os_error()))
+    }
+
+    /// A level-triggered epoll instance, closed on drop.
+    pub struct Poller {
+        epfd: c_int,
+    }
+
+    impl Poller {
+        /// A fresh poller.
+        pub fn new() -> Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(os_err("epoll_create1"));
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(&self, op: c_int, fd: RawFd, token: u64, readable: bool, writable: bool) -> c_int {
+            let mut ev = EpollEvent {
+                events: (if readable { EPOLLIN } else { 0 })
+                    | (if writable { EPOLLOUT } else { 0 }),
+                data: token,
+            };
+            // SAFETY: `ev` is a live stack value for the duration of the
+            // call; the kernel copies it before returning.
+            unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) }
+        }
+
+        /// Start watching `fd` with the given interest.
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> Result<()> {
+            if self.ctl(EPOLL_CTL_ADD, fd, token, readable, writable) < 0 {
+                return Err(os_err("epoll_ctl(ADD)"));
+            }
+            Ok(())
+        }
+
+        /// Change the interest set of a registered fd.
+        pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+            if self.ctl(EPOLL_CTL_MOD, fd, token, readable, writable) < 0 {
+                return Err(os_err("epoll_ctl(MOD)"));
+            }
+            Ok(())
+        }
+
+        /// Stop watching `fd`. Best-effort: closing an fd drops its
+        /// registration anyway, so failures are ignored.
+        pub fn deregister(&self, fd: RawFd) {
+            let _ = self.ctl(EPOLL_CTL_DEL, fd, 0, false, false);
+        }
+
+        /// Wait for events (`None` = block indefinitely), appending them
+        /// to `out` (cleared first). EINTR retries transparently.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> Result<()> {
+            out.clear();
+            let mut evs = [EpollEvent { events: 0, data: 0 }; 256];
+            // round up so sub-millisecond timeouts never busy-spin
+            let ms: c_int = match timeout {
+                None => -1,
+                Some(d) => d.as_nanos().div_ceil(1_000_000).min(i32::MAX as u128) as c_int,
+            };
+            let n = loop {
+                // SAFETY: `evs` is a live buffer of 256 entries and the
+                // length passed matches.
+                let n = unsafe { epoll_wait(self.epfd, evs.as_mut_ptr(), evs.len() as c_int, ms) };
+                if n >= 0 {
+                    break n as usize;
+                }
+                if std::io::Error::last_os_error().raw_os_error() != Some(EINTR) {
+                    return Err(os_err("epoll_wait"));
+                }
+            };
+            for ev in &evs[..n] {
+                // copy out of the (possibly packed) struct before use
+                let events = { ev.events };
+                let token = { ev.data };
+                out.push(Event {
+                    token,
+                    readable: events & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: epfd is the live descriptor created in `new`.
+            let _ = unsafe { close(self.epfd) };
+        }
+    }
+
+    impl std::fmt::Debug for Poller {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Poller(epoll fd {})", self.epfd)
+        }
+    }
+}
+
+#[cfg(all(target_os = "macos", target_pointer_width = "64"))]
+mod imp {
+    use super::Event;
+    use crate::error::{Error, Result};
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x0001;
+    const EV_DELETE: u16 = 0x0002;
+    const EV_ENABLE: u16 = 0x0004;
+    const EV_DISABLE: u16 = 0x0008;
+    const EV_ERROR: u16 = 0x4000;
+    const EINTR: i32 = 4;
+
+    /// `struct kevent` on 64-bit macOS.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct KEvent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: *mut c_void,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: i64,
+        tv_nsec: i64,
+    }
+
+    extern "C" {
+        fn kqueue() -> c_int;
+        fn kevent(
+            kq: c_int,
+            changelist: *const KEvent,
+            nchanges: c_int,
+            eventlist: *mut KEvent,
+            nevents: c_int,
+            timeout: *const Timespec,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    fn os_err(call: &str) -> Error {
+        Error::Serve(format!("{call}: {}", std::io::Error::last_os_error()))
+    }
+
+    fn change(fd: RawFd, filter: i16, flags: u16, token: u64) -> KEvent {
+        KEvent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: token as *mut c_void,
+        }
+    }
+
+    /// A level-triggered kqueue instance, closed on drop. Both filters
+    /// are always added (one enabled, one disabled), so interest changes
+    /// are pure enable/disable toggles and deletes never race ENOENT.
+    pub struct Poller {
+        kq: c_int,
+    }
+
+    // SAFETY: `KEvent::udata` is only ever a token in disguise; the
+    // poller itself holds nothing but the kqueue descriptor.
+    unsafe impl Send for Poller {}
+    unsafe impl Sync for Poller {}
+
+    impl Poller {
+        /// A fresh poller.
+        pub fn new() -> Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(os_err("kqueue"));
+            }
+            Ok(Poller { kq })
+        }
+
+        fn apply(&self, changes: &[KEvent], call: &str) -> Result<()> {
+            // SAFETY: `changes` is a live slice; no eventlist is passed.
+            let rc = unsafe {
+                kevent(
+                    self.kq,
+                    changes.as_ptr(),
+                    changes.len() as c_int,
+                    std::ptr::null_mut(),
+                    0,
+                    std::ptr::null(),
+                )
+            };
+            if rc < 0 {
+                return Err(os_err(call));
+            }
+            Ok(())
+        }
+
+        /// Start watching `fd` with the given interest.
+        pub fn register(
+            &self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> Result<()> {
+            let r = if readable { EV_ENABLE } else { EV_DISABLE };
+            let w = if writable { EV_ENABLE } else { EV_DISABLE };
+            self.apply(
+                &[
+                    change(fd, EVFILT_READ, EV_ADD | r, token),
+                    change(fd, EVFILT_WRITE, EV_ADD | w, token),
+                ],
+                "kevent(ADD)",
+            )
+        }
+
+        /// Change the interest set of a registered fd.
+        pub fn modify(&self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+            self.register(fd, token, readable, writable)
+        }
+
+        /// Stop watching `fd`. Best-effort, as with epoll.
+        pub fn deregister(&self, fd: RawFd) {
+            let _ = self.apply(
+                &[
+                    change(fd, EVFILT_READ, EV_DELETE, 0),
+                    change(fd, EVFILT_WRITE, EV_DELETE, 0),
+                ],
+                "kevent(DELETE)",
+            );
+        }
+
+        /// Wait for events (`None` = block indefinitely), appending them
+        /// to `out` (cleared first). EINTR retries transparently.
+        pub fn wait(&self, out: &mut Vec<Event>, timeout: Option<Duration>) -> Result<()> {
+            out.clear();
+            let mut evs = [change(0, 0, 0, 0); 256];
+            let ts = timeout.map(|d| Timespec {
+                tv_sec: d.as_secs().min(i64::MAX as u64) as i64,
+                tv_nsec: d.subsec_nanos() as i64,
+            });
+            let ts_ptr = ts
+                .as_ref()
+                .map(|t| t as *const Timespec)
+                .unwrap_or(std::ptr::null());
+            let n = loop {
+                // SAFETY: `evs` is a live buffer of 256 entries, the
+                // length matches, and `ts_ptr` outlives the call.
+                let n = unsafe {
+                    kevent(
+                        self.kq,
+                        std::ptr::null(),
+                        0,
+                        evs.as_mut_ptr(),
+                        evs.len() as c_int,
+                        ts_ptr,
+                    )
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                if std::io::Error::last_os_error().raw_os_error() != Some(EINTR) {
+                    return Err(os_err("kevent(wait)"));
+                }
+            };
+            for ev in &evs[..n] {
+                let errored = ev.flags & EV_ERROR != 0;
+                out.push(Event {
+                    token: ev.udata as u64,
+                    readable: ev.filter == EVFILT_READ || errored,
+                    writable: ev.filter == EVFILT_WRITE || errored,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: kq is the live descriptor created in `new`.
+            let _ = unsafe { close(self.kq) };
+        }
+    }
+
+    impl std::fmt::Debug for Poller {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "Poller(kqueue fd {})", self.kq)
+        }
+    }
+}
+
+#[cfg(any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64")))]
+pub use imp::Poller;
+
+#[cfg(all(
+    test,
+    any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64"))
+))]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Duration;
+
+    #[test]
+    fn reports_listener_and_stream_readiness() {
+        assert!(supported());
+        let poller = Poller::new().unwrap();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        poller.register(listener.as_raw_fd(), 7, true, false).unwrap();
+
+        // idle poll times out with no events
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.is_empty(), "no readiness before a client connects");
+
+        // a connecting client makes the listener readable
+        let mut client = TcpStream::connect(addr).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(
+            events.iter().any(|e| e.token == 7 && e.readable),
+            "listener must report readable: {events:?}"
+        );
+        let (server_side, _) = listener.accept().unwrap();
+
+        // a connected stream is immediately writable; readable once the
+        // peer sends bytes
+        poller.register(server_side.as_raw_fd(), 9, true, true).unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable));
+        client.write_all(b"ping").unwrap();
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            poller.wait(&mut events, Some(Duration::from_millis(100))).unwrap();
+            if events.iter().any(|e| e.token == 9 && e.readable) {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "stream never readable");
+        }
+
+        // dropping write interest stops writable events (level-triggered:
+        // an idle readable-only stream with drained input reports nothing)
+        let mut buf = [0u8; 8];
+        use std::io::Read;
+        server_side.set_nonblocking(true).unwrap();
+        let _ = (&server_side).read(&mut buf);
+        poller.modify(server_side.as_raw_fd(), 9, true, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(
+            !events.iter().any(|e| e.token == 9 && e.writable),
+            "write interest was dropped: {events:?}"
+        );
+        poller.deregister(server_side.as_raw_fd());
+        poller.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+        assert!(events.iter().all(|e| e.token != 9), "deregistered fd is silent");
+    }
+
+    #[test]
+    fn self_pipe_wakeup() {
+        // the event loop's waker: one end registered, the other written
+        // from any thread to interrupt a blocking wait
+        let poller = Poller::new().unwrap();
+        let (rx, tx) = std::os::unix::net::UnixStream::pair().unwrap();
+        rx.set_nonblocking(true).unwrap();
+        poller.register(rx.as_raw_fd(), 1, true, false).unwrap();
+        let waker = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            (&tx).write_all(&[1]).unwrap();
+            tx // keep the write end alive past the wait
+        });
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+        assert!(events.iter().any(|e| e.token == 1 && e.readable));
+        let _tx = waker.join().unwrap();
+    }
+}

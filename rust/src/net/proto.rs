@@ -1,0 +1,537 @@
+//! Transport-independent protocol layer: incremental HTTP/1.1 request
+//! parsing and the binary row frame codec.
+//!
+//! Both serving front-ends (the sync thread-per-connection loop and the
+//! evented poller) feed raw socket bytes into [`RequestParser`] and
+//! serialise [`Response`] values back — one parser, one serialiser,
+//! bit-identical wire behaviour in both modes.
+//!
+//! ## The `application/octet-stream` row frame
+//!
+//! JSON cell parsing dominates request cost for large batches, so feature
+//! rows can travel as a packed little-endian frame that deserialises
+//! straight into a [`RowMatrixBuf`] without touching the JSON parser:
+//!
+//! | offset       | size              | content                          |
+//! |--------------|-------------------|----------------------------------|
+//! | 0            | 4                 | `n_rows` (u32, little-endian)    |
+//! | 4            | 4                 | `n_features` (u32, little-endian)|
+//! | 8            | `4·rows·features` | f32 cells, row-major, LE         |
+//!
+//! The frame must be exactly `8 + 4·n_rows·n_features` bytes; zero rows
+//! or features, dimension overflow, and length mismatches are parse
+//! errors (`400` over HTTP). NaN cells are accepted by policy — the
+//! predicate evaluators define total behaviour for every f32 bit
+//! pattern, so the wire layer does not second-guess them.
+
+use crate::batch::{RowMatrix, RowMatrixBuf};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Json};
+
+/// Maximum accepted request head (request line + headers).
+pub const MAX_HEAD: usize = 16 << 10;
+
+/// Maximum accepted request body (1 MiB — batches of a few thousand rows).
+pub const MAX_BODY: usize = 1 << 20;
+
+/// Content type of the binary row frame.
+pub const BINARY_ROWS: &str = "application/octet-stream";
+
+/// Bytes of the row frame header (`u32 n_rows` + `u32 n_features`).
+pub const ROW_FRAME_HEADER: usize = 8;
+
+/// A fully parsed HTTP request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Request method (`GET`, `POST`, …), uppercase as sent.
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string after `?` (empty when absent).
+    pub query: String,
+    /// Lowercased `Content-Type` with parameters stripped (empty when absent).
+    pub content_type: String,
+    /// Whether the connection survives this request (HTTP/1.1 default
+    /// true unless `Connection: close`; HTTP/1.0 default false unless
+    /// `Connection: keep-alive`).
+    pub keep_alive: bool,
+    /// Request body (exactly `Content-Length` bytes).
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// True when the body is a binary row frame.
+    pub fn is_binary(&self) -> bool {
+        self.content_type == BINARY_ROWS
+    }
+
+    /// Query parameter lookup (`?backend=dd&steps=true`). No percent
+    /// decoding — the served parameter values (backend/model names,
+    /// booleans) never need it.
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+            (k == key).then_some(v)
+        })
+    }
+}
+
+/// Parsed head awaiting its body.
+#[derive(Debug)]
+struct Head {
+    method: String,
+    path: String,
+    query: String,
+    content_type: String,
+    keep_alive: bool,
+    content_length: usize,
+    /// Bytes consumed by the head, including the `\r\n\r\n` terminator.
+    head_len: usize,
+}
+
+/// Incremental HTTP/1.1 request parser: push raw socket bytes in, take
+/// complete requests out. Bytes beyond one request stay buffered
+/// (pipelining / keep-alive), so a single parser serves a connection's
+/// whole lifetime.
+#[derive(Debug, Default)]
+pub struct RequestParser {
+    buf: Vec<u8>,
+    head: Option<Head>,
+}
+
+impl RequestParser {
+    /// A fresh parser.
+    pub fn new() -> RequestParser {
+        RequestParser::default()
+    }
+
+    /// Buffer more bytes from the transport.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// True between requests (nothing buffered, no partial head) — the
+    /// idle-timeout policy closes idle connections silently but answers
+    /// a stalled mid-request connection with `408`.
+    pub fn is_idle(&self) -> bool {
+        self.buf.is_empty() && self.head.is_none()
+    }
+
+    /// Try to take the next complete request. `Ok(None)` means more
+    /// bytes are needed; `Err` means the stream is malformed and the
+    /// connection must close after an error response.
+    pub fn try_next(&mut self) -> Result<Option<Request>> {
+        if self.head.is_none() {
+            let Some(head_end) = find_head_end(&self.buf) else {
+                if self.buf.len() > MAX_HEAD {
+                    return Err(Error::parse(format!(
+                        "request head exceeds {MAX_HEAD} bytes"
+                    )));
+                }
+                return Ok(None);
+            };
+            self.head = Some(parse_head(&self.buf[..head_end], head_end + 4)?);
+        }
+        let total = {
+            let head = self.head.as_ref().expect("head parsed above");
+            head.head_len + head.content_length
+        };
+        if self.buf.len() < total {
+            return Ok(None);
+        }
+        let head = self.head.take().expect("head parsed above");
+        let body = self.buf[head.head_len..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Some(Request {
+            method: head.method,
+            path: head.path,
+            query: head.query,
+            content_type: head.content_type,
+            keep_alive: head.keep_alive,
+            body,
+        }))
+    }
+}
+
+/// Position of the head terminator (`\r\n\r\n`), if buffered.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| Error::parse("request head is not UTF-8"))?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or_else(|| Error::parse("empty request line"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| Error::parse("request line missing path"))?;
+    let version = parts
+        .next()
+        .ok_or_else(|| Error::parse("request line missing HTTP version"))?;
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => {
+            return Err(Error::parse(format!(
+                "unsupported HTTP version '{other}'"
+            )))
+        }
+    };
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    let mut content_length = 0usize;
+    let mut content_type = String::new();
+    let mut connection = String::new();
+    for line in lines {
+        let Some((k, v)) = line.split_once(':') else {
+            continue;
+        };
+        let v = v.trim();
+        if k.eq_ignore_ascii_case("content-length") {
+            content_length = v
+                .parse()
+                .map_err(|_| Error::parse(format!("bad content-length '{v}'")))?;
+        } else if k.eq_ignore_ascii_case("content-type") {
+            // strip parameters (`; charset=...`) and normalise case
+            content_type = v
+                .split(';')
+                .next()
+                .unwrap_or("")
+                .trim()
+                .to_ascii_lowercase();
+        } else if k.eq_ignore_ascii_case("connection") {
+            connection = v.to_ascii_lowercase();
+        }
+    }
+    if content_length > MAX_BODY {
+        return Err(Error::parse(format!(
+            "body too large ({content_length} bytes, limit {MAX_BODY})"
+        )));
+    }
+    let keep_alive = match connection.as_str() {
+        "close" => false,
+        "keep-alive" => true,
+        _ => http11,
+    };
+    Ok(Head {
+        method,
+        path,
+        query,
+        content_type,
+        keep_alive,
+        content_length,
+        head_len,
+    })
+}
+
+/// Decode a binary row frame into an owned flat batch. See the module
+/// docs for the byte layout; every malformation is an `Err`, never a
+/// panic, and NaN cells pass through by policy.
+pub fn decode_rows(body: &[u8]) -> Result<RowMatrixBuf> {
+    if body.len() < ROW_FRAME_HEADER {
+        return Err(Error::parse(format!(
+            "row frame truncated: {} bytes, header alone is {ROW_FRAME_HEADER} (u32 n_rows, u32 n_features)",
+            body.len()
+        )));
+    }
+    let n_rows = u32::from_le_bytes(body[0..4].try_into().expect("4 bytes")) as usize;
+    let n_features = u32::from_le_bytes(body[4..8].try_into().expect("4 bytes")) as usize;
+    if n_rows == 0 {
+        return Err(Error::parse("row frame declares 0 rows"));
+    }
+    if n_features == 0 {
+        return Err(Error::parse("row frame declares 0 features"));
+    }
+    let cell_bytes = n_rows
+        .checked_mul(n_features)
+        .and_then(|c| c.checked_mul(4))
+        .filter(|&c| c <= MAX_BODY)
+        .ok_or_else(|| {
+            Error::parse(format!(
+                "row frame dimensions overflow: {n_rows} rows x {n_features} features"
+            ))
+        })?;
+    if body.len() - ROW_FRAME_HEADER != cell_bytes {
+        return Err(Error::parse(format!(
+            "row frame length mismatch: {n_rows} rows x {n_features} features needs {} bytes, got {}",
+            ROW_FRAME_HEADER + cell_bytes,
+            body.len()
+        )));
+    }
+    let mut buf = RowMatrixBuf::with_capacity(n_features, n_rows);
+    for row in body[ROW_FRAME_HEADER..].chunks_exact(4 * n_features) {
+        buf.push_row_le_bytes(row)?;
+    }
+    Ok(buf)
+}
+
+/// Encode a batch as a binary row frame (the client side of
+/// [`decode_rows`]; used by the keep-alive client, the loadgen command
+/// and tests).
+pub fn encode_rows(m: RowMatrix<'_>) -> Result<Vec<u8>> {
+    let n_rows = u32::try_from(m.n_rows())
+        .map_err(|_| Error::invalid("row frame holds at most u32::MAX rows"))?;
+    let n_features = u32::try_from(m.n_features())
+        .map_err(|_| Error::invalid("row frame holds at most u32::MAX features"))?;
+    let mut out = Vec::with_capacity(ROW_FRAME_HEADER + 4 * m.data().len());
+    out.extend_from_slice(&n_rows.to_le_bytes());
+    out.extend_from_slice(&n_features.to_le_bytes());
+    for cell in m.data() {
+        out.extend_from_slice(&cell.to_le_bytes());
+    }
+    Ok(out)
+}
+
+/// A response ready for serialisation. Always carries an explicit
+/// `Content-Length`, so keep-alive framing is unambiguous.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// HTTP status code.
+    pub status: u16,
+    /// Response body bytes.
+    pub body: Vec<u8>,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// `Retry-After` header in seconds (the `429` backpressure contract).
+    pub retry_after_s: Option<u32>,
+}
+
+impl Response {
+    /// A JSON response.
+    pub fn json(status: u16, body: &Json) -> Response {
+        Response {
+            status,
+            body: body.to_string_compact().into_bytes(),
+            content_type: "application/json",
+            retry_after_s: None,
+        }
+    }
+
+    /// A JSON error response (`{"error": msg}`).
+    pub fn error(status: u16, msg: impl Into<String>) -> Response {
+        Response::json(status, &json::obj(vec![("error", json::s(msg.into()))]))
+    }
+
+    /// A `429 Too Many Requests` with the `Retry-After` contract.
+    pub fn overloaded(retry_after_s: u32, msg: impl Into<String>) -> Response {
+        let mut r = Response::error(429, msg);
+        r.retry_after_s = Some(retry_after_s);
+        r
+    }
+
+    /// Reason phrase for a status code.
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            429 => "Too Many Requests",
+            _ => "Internal Server Error",
+        }
+    }
+
+    /// Serialise head + body. `keep_alive` decides the `Connection`
+    /// header — the caller owns connection policy, the response owns
+    /// everything else.
+    pub fn to_bytes(&self, keep_alive: bool) -> Vec<u8> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+            self.status,
+            Response::reason(self.status),
+            self.content_type,
+            self.body.len()
+        );
+        if let Some(s) = self.retry_after_s {
+            head.push_str(&format!("Retry-After: {s}\r\n"));
+        }
+        head.push_str(if keep_alive {
+            "Connection: keep-alive\r\n\r\n"
+        } else {
+            "Connection: close\r\n\r\n"
+        });
+        let mut out = head.into_bytes();
+        out.extend_from_slice(&self.body);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn push_str(p: &mut RequestParser, s: &str) {
+        p.push(s.as_bytes());
+    }
+
+    #[test]
+    fn parses_a_request_incrementally() {
+        let mut p = RequestParser::new();
+        push_str(&mut p, "POST /classify?backend=dd HTTP/1.1\r\nHost: x\r\n");
+        assert!(p.try_next().unwrap().is_none(), "head incomplete");
+        push_str(&mut p, "Content-Length: 4\r\nContent-Type: application/json\r\n\r\nab");
+        assert!(p.try_next().unwrap().is_none(), "body incomplete");
+        assert!(!p.is_idle());
+        push_str(&mut p, "cd");
+        let req = p.try_next().unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/classify");
+        assert_eq!(req.query, "backend=dd");
+        assert_eq!(req.param("backend"), Some("dd"));
+        assert_eq!(req.param("model"), None);
+        assert_eq!(req.content_type, "application/json");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.body, b"abcd");
+        assert!(p.is_idle());
+    }
+
+    #[test]
+    fn pipelined_requests_stay_buffered() {
+        let mut p = RequestParser::new();
+        push_str(
+            &mut p,
+            "GET /healthz HTTP/1.1\r\n\r\nGET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n",
+        );
+        let first = p.try_next().unwrap().unwrap();
+        assert_eq!(first.path, "/healthz");
+        assert!(first.keep_alive);
+        let second = p.try_next().unwrap().unwrap();
+        assert_eq!(second.path, "/metrics");
+        assert!(!second.keep_alive, "Connection: close wins");
+        assert!(p.try_next().unwrap().is_none());
+    }
+
+    #[test]
+    fn keep_alive_follows_http_version_defaults() {
+        for (head, expect) in [
+            ("GET / HTTP/1.0\r\n\r\n", false),
+            ("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n", true),
+            ("GET / HTTP/1.1\r\n\r\n", true),
+            ("GET / HTTP/1.1\r\nConnection: close\r\n\r\n", false),
+        ] {
+            let mut p = RequestParser::new();
+            push_str(&mut p, head);
+            let req = p.try_next().unwrap().unwrap();
+            assert_eq!(req.keep_alive, expect, "head: {head:?}");
+        }
+    }
+
+    #[test]
+    fn malformed_heads_are_errors() {
+        for head in [
+            "\r\n\r\n",                                       // empty request line
+            "GET\r\n\r\n",                                    // missing path
+            "GET /\r\n\r\n",                                  // missing version
+            "GET / HTTP/2\r\n\r\n",                           // unsupported version
+            "GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n", // bad length
+            "GET / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n", // over MAX_BODY
+        ] {
+            let mut p = RequestParser::new();
+            push_str(&mut p, head);
+            assert!(p.try_next().is_err(), "head must be rejected: {head:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_head_rejected_before_terminator() {
+        let mut p = RequestParser::new();
+        push_str(&mut p, "GET / HTTP/1.1\r\n");
+        p.push(&vec![b'a'; MAX_HEAD + 1]);
+        assert!(p.try_next().is_err());
+    }
+
+    #[test]
+    fn row_frame_roundtrip() {
+        let cells = [1.0f32, -2.5, 3.25, f32::MIN, f32::MAX, 0.0];
+        let m = RowMatrix::new(&cells, 3).unwrap();
+        let frame = encode_rows(m).unwrap();
+        assert_eq!(frame.len(), ROW_FRAME_HEADER + 24);
+        let back = decode_rows(&frame).unwrap();
+        assert_eq!(back.as_matrix(), m);
+    }
+
+    #[test]
+    fn row_frame_nan_cells_accepted_by_policy() {
+        let cells = [f32::NAN, 1.0];
+        let frame = encode_rows(RowMatrix::new(&cells, 2).unwrap()).unwrap();
+        let back = decode_rows(&frame).unwrap();
+        assert!(back.as_matrix().row(0)[0].is_nan());
+    }
+
+    #[test]
+    fn malformed_row_frames_table() {
+        let good = encode_rows(RowMatrix::new(&[1.0f32, 2.0], 2).unwrap()).unwrap();
+        // (name, frame bytes) — every case must be Err, never a panic
+        let cases: Vec<(&str, Vec<u8>)> = vec![
+            ("empty", vec![]),
+            ("truncated header", good[..7].to_vec()),
+            ("zero rows", {
+                let mut f = good.clone();
+                f[0..4].copy_from_slice(&0u32.to_le_bytes());
+                f
+            }),
+            ("zero features", {
+                let mut f = good.clone();
+                f[4..8].copy_from_slice(&0u32.to_le_bytes());
+                f
+            }),
+            ("row count overflow", {
+                let mut f = good.clone();
+                f[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+                f
+            }),
+            ("feature count overflow", {
+                let mut f = good.clone();
+                f[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+                f
+            }),
+            ("both dimensions overflow usize", {
+                let mut f = good.clone();
+                f[0..4].copy_from_slice(&u32::MAX.to_le_bytes());
+                f[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+                f
+            }),
+            ("body short of declared size", good[..good.len() - 1].to_vec()),
+            ("body past declared size", {
+                let mut f = good.clone();
+                f.push(0);
+                f
+            }),
+        ];
+        for (name, frame) in cases {
+            assert!(decode_rows(&frame).is_err(), "case '{name}' must be Err");
+        }
+        assert!(decode_rows(&good).is_ok(), "control case must decode");
+    }
+
+    #[test]
+    fn response_serialises_with_framing_headers() {
+        let r = Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]));
+        let text = String::from_utf8(r.to_bytes(true)).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Content-Length: 11\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
+        let text = String::from_utf8(r.to_bytes(false)).unwrap();
+        assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn overloaded_response_carries_retry_after() {
+        let r = Response::overloaded(1, "queue full");
+        let text = String::from_utf8(r.to_bytes(true)).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("queue full"));
+    }
+}

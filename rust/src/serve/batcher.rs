@@ -115,8 +115,10 @@ impl<J: Send + 'static> Batcher<J> {
     pub fn submit(&self, job: J) -> Result<()> {
         match self.tx.try_send(Msg::Job(job)) {
             Ok(()) => Ok(()),
-            Err(TrySendError::Full(_)) => Err(Error::Serve(
-                "batcher queue full — shed load or raise queue_cap".into(),
+            // admission control: a full queue sheds the request (HTTP
+            // maps this to 429 + Retry-After) instead of queueing it
+            Err(TrySendError::Full(_)) => Err(Error::Overloaded(
+                "batcher queue full — retry shortly or raise queue_cap".into(),
             )),
             Err(TrySendError::Disconnected(_)) => {
                 Err(Error::Serve("batcher has shut down".into()))

@@ -4,6 +4,60 @@ use crate::error::{Error, Result};
 use crate::serve::BackendKind;
 use crate::util::json::{self, Json};
 
+/// Which serving front-end handles sockets (`serve --io`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoMode {
+    /// Evented where a poller exists ([`crate::net::poll::supported`]:
+    /// linux epoll, macos kqueue), sync thread-per-connection elsewhere.
+    #[default]
+    Auto,
+    /// Force the sync thread-per-connection front-end.
+    Sync,
+    /// Force the evented front-end; startup fails where unsupported.
+    Evented,
+}
+
+impl IoMode {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Result<IoMode> {
+        match s {
+            "auto" => Ok(IoMode::Auto),
+            "sync" => Ok(IoMode::Sync),
+            "evented" => Ok(IoMode::Evented),
+            other => Err(Error::invalid(format!(
+                "unknown io mode '{other}' (expected auto | sync | evented)"
+            ))),
+        }
+    }
+
+    /// Canonical name (inverse of [`parse`](Self::parse)).
+    pub fn name(&self) -> &'static str {
+        match self {
+            IoMode::Auto => "auto",
+            IoMode::Sync => "sync",
+            IoMode::Evented => "evented",
+        }
+    }
+
+    /// Resolve to a concrete choice: `Ok(true)` = evented, `Ok(false)` =
+    /// sync; forcing `Evented` on a target without a poller is an error.
+    pub fn resolve(&self) -> Result<bool> {
+        match self {
+            IoMode::Auto => Ok(crate::net::poll::supported()),
+            IoMode::Sync => Ok(false),
+            IoMode::Evented => {
+                if crate::net::poll::supported() {
+                    Ok(true)
+                } else {
+                    Err(Error::invalid(
+                        "io_mode 'evented' needs epoll or kqueue, which this target lacks — use --io sync",
+                    ))
+                }
+            }
+        }
+    }
+}
+
 /// Full configuration of `forest-add serve`.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -37,8 +91,23 @@ pub struct ServeConfig {
     /// How long a coalesced single request waits for its batch reply
     /// before timing out, in milliseconds.
     pub reply_timeout_ms: u64,
-    /// HTTP worker threads.
+    /// HTTP worker threads (sync: connection handlers; evented: the
+    /// request-handler pool behind the event loop).
     pub http_workers: usize,
+    /// Serving front-end selection (see [`IoMode`]).
+    pub io_mode: IoMode,
+    /// Per-connection read/idle timeout in milliseconds. Sync mode: a
+    /// blocked read past this closes the connection (a stalled client
+    /// cannot pin a worker thread). Evented mode: connections idle this
+    /// long are swept (`408` when stalled mid-request).
+    pub read_timeout_ms: u64,
+    /// Dynamic batcher queue depth before requests are shed with `429`
+    /// (`0` = auto: `max(batch_max * 16, 256)`).
+    pub batch_queue_cap: usize,
+    /// Evented dispatch queue depth (parsed requests waiting for a
+    /// worker) before admission control sheds with `429` (`0` = auto:
+    /// `max(http_workers * 16, 128)`).
+    pub dispatch_cap: usize,
     /// Evaluation parallelism for sharded batch classification (`0` =
     /// auto = [`std::thread::available_parallelism`]). The process-wide
     /// worker pool is sized once at startup.
@@ -71,6 +140,10 @@ impl Default for ServeConfig {
             batch_wait_ms: 2,
             reply_timeout_ms: 5_000,
             http_workers: 4,
+            io_mode: IoMode::Auto,
+            read_timeout_ms: 10_000,
+            batch_queue_cap: 0,
+            dispatch_cap: 0,
             eval_threads: 0,
             tile_bytes: 0,
             artifacts_dir: "artifacts".into(),
@@ -120,6 +193,18 @@ impl ServeConfig {
         if let Some(n) = v.get_i64("http_workers") {
             cfg.http_workers = n as usize;
         }
+        if let Some(s) = v.get_str("io_mode") {
+            cfg.io_mode = IoMode::parse(s)?;
+        }
+        if let Some(n) = v.get_i64("read_timeout_ms") {
+            cfg.read_timeout_ms = n as u64;
+        }
+        if let Some(n) = v.get_i64("batch_queue_cap") {
+            cfg.batch_queue_cap = n as usize;
+        }
+        if let Some(n) = v.get_i64("dispatch_cap") {
+            cfg.dispatch_cap = n as usize;
+        }
         if let Some(n) = v.get_i64("eval_threads") {
             cfg.eval_threads = n as usize;
         }
@@ -164,6 +249,23 @@ impl ServeConfig {
         if self.reply_timeout_ms == 0 {
             return Err(Error::invalid("reply_timeout_ms must be positive"));
         }
+        if self.read_timeout_ms == 0 {
+            return Err(Error::invalid(
+                "read_timeout_ms must be positive (a connection must not block forever)",
+            ));
+        }
+        // Wrap defence, as for eval_threads below: a negative JSON value
+        // would otherwise become an effectively unbounded queue.
+        if self.batch_queue_cap > (1 << 24) {
+            return Err(Error::invalid(
+                "batch_queue_cap must be at most 2^24 (0 = auto)",
+            ));
+        }
+        if self.dispatch_cap > (1 << 24) {
+            return Err(Error::invalid(
+                "dispatch_cap must be at most 2^24 (0 = auto)",
+            ));
+        }
         // Negative JSON values wrap to huge usizes; either way a thread
         // count past this bound is a misconfiguration, not a pool size.
         if self.eval_threads > 1024 {
@@ -181,6 +283,24 @@ impl ServeConfig {
         Ok(())
     }
 
+    /// Batcher queue depth with the `0 = auto` default applied.
+    pub fn resolved_batch_queue_cap(&self) -> usize {
+        if self.batch_queue_cap == 0 {
+            (self.batch_max * 16).max(256)
+        } else {
+            self.batch_queue_cap
+        }
+    }
+
+    /// Evented dispatch queue depth with the `0 = auto` default applied.
+    pub fn resolved_dispatch_cap(&self) -> usize {
+        if self.dispatch_cap == 0 {
+            (self.http_workers * 16).max(128)
+        } else {
+            self.dispatch_cap
+        }
+    }
+
     /// Render to JSON (written by `forest-add serve --dump-config`).
     pub fn to_json(&self) -> Json {
         json::obj(vec![
@@ -196,6 +316,10 @@ impl ServeConfig {
             ("batch_wait_ms", json::num(self.batch_wait_ms as f64)),
             ("reply_timeout_ms", json::num(self.reply_timeout_ms as f64)),
             ("http_workers", json::num(self.http_workers as f64)),
+            ("io_mode", json::s(self.io_mode.name())),
+            ("read_timeout_ms", json::num(self.read_timeout_ms as f64)),
+            ("batch_queue_cap", json::num(self.batch_queue_cap as f64)),
+            ("dispatch_cap", json::num(self.dispatch_cap as f64)),
             ("eval_threads", json::num(self.eval_threads as f64)),
             ("tile_bytes", json::num(self.tile_bytes as f64)),
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
@@ -224,6 +348,10 @@ mod tests {
             bundle: "fleet.fab".into(),
             eval_threads: 6,
             tile_bytes: 2 << 20,
+            io_mode: IoMode::Sync,
+            read_timeout_ms: 750,
+            batch_queue_cap: 32,
+            dispatch_cap: 48,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -235,6 +363,45 @@ mod tests {
         assert!(back.snapshot.is_empty());
         assert_eq!(back.eval_threads, 6);
         assert_eq!(back.tile_bytes, 2 << 20);
+        assert_eq!(back.io_mode, IoMode::Sync);
+        assert_eq!(back.read_timeout_ms, 750);
+        assert_eq!(back.batch_queue_cap, 32);
+        assert_eq!(back.dispatch_cap, 48);
+    }
+
+    #[test]
+    fn io_mode_parses_and_resolves() {
+        assert_eq!(IoMode::parse("auto").unwrap(), IoMode::Auto);
+        assert_eq!(IoMode::parse("sync").unwrap(), IoMode::Sync);
+        assert_eq!(IoMode::parse("evented").unwrap(), IoMode::Evented);
+        assert!(IoMode::parse("tokio").is_err());
+        for mode in [IoMode::Auto, IoMode::Sync, IoMode::Evented] {
+            assert_eq!(IoMode::parse(mode.name()).unwrap(), mode);
+        }
+        // sync always resolves; auto follows the capability probe
+        assert!(!IoMode::Sync.resolve().unwrap());
+        assert_eq!(
+            IoMode::Auto.resolve().unwrap(),
+            crate::net::poll::supported()
+        );
+        match IoMode::Evented.resolve() {
+            Ok(evented) => assert!(evented, "Ok(evented) must mean a poller exists"),
+            Err(_) => assert!(!crate::net::poll::supported()),
+        }
+    }
+
+    #[test]
+    fn queue_caps_default_by_formula() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.resolved_batch_queue_cap(), (cfg.batch_max * 16).max(256));
+        assert_eq!(cfg.resolved_dispatch_cap(), (cfg.http_workers * 16).max(128));
+        let explicit = ServeConfig {
+            batch_queue_cap: 7,
+            dispatch_cap: 9,
+            ..Default::default()
+        };
+        assert_eq!(explicit.resolved_batch_queue_cap(), 7);
+        assert_eq!(explicit.resolved_dispatch_cap(), 9);
     }
 
     #[test]
@@ -266,6 +433,16 @@ mod tests {
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"reply_timeout_ms": 0}"#).unwrap()).is_err()
         );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"read_timeout_ms": 0}"#).unwrap()).is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"batch_queue_cap": -1}"#).unwrap()).is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"dispatch_cap": -1}"#).unwrap()).is_err()
+        );
+        assert!(ServeConfig::from_json(&Json::parse(r#"{"io_mode": "tokio"}"#).unwrap()).is_err());
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"default_backend": "gpu"}"#).unwrap())
                 .is_err()

@@ -1,10 +1,17 @@
-//! Minimal HTTP/1.1 front-end over `std::net` (no async runtime is
-//! available offline; a thread-pool accept loop serves the same purpose
-//! for this request shape).
+//! HTTP endpoint layer, shared by both serving front-ends.
+//!
+//! [`respond`] is the single transport-independent entry point: it takes
+//! a parsed [`Request`] and returns a [`Response`]. The sync
+//! thread-per-connection loop ([`handle_connection`]) and the evented
+//! front-end (`net::event_loop` via `serve::server`) both feed it
+//! through the same parser and serialiser (`net::proto`), which is what
+//! makes the two modes bit-identical on the wire.
 //!
 //! Endpoints:
 //! - `GET  /healthz`          → `{"ok": true}`
-//! - `GET  /metrics`          → server metrics snapshot
+//! - `GET  /metrics`          → server metrics snapshot (end-to-end
+//!   latency quantiles, connection gauges, `429` shed count, per-backend
+//!   histograms)
 //! - `GET  /model`            → default-model description (per-backend info)
 //! - `GET  /models`           → all registered models (name, version, backends,
 //!   `source` = artifact provenance for bundle-booted models)
@@ -12,121 +19,118 @@
 //! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?,
 //!   "steps": true?}` — with `"steps": true` the response carries the §6
 //!   step count per row (`null` when the backend cannot meter)
+//!
+//! Both `POST` endpoints also accept the compact binary row frame
+//! (`Content-Type: application/octet-stream`, see `net::proto`) that
+//! deserialises straight into a [`RowMatrixBuf`]; `backend`, `model` and
+//! `steps` then travel in the query string. Responses are always JSON.
+//!
+//! Backpressure: [`Error::Overloaded`] (a full batcher or dispatch
+//! queue) maps to `429 Too Many Requests` + `Retry-After: 1`; every
+//! other handler error maps to `400`.
 
 use crate::batch::RowMatrixBuf;
 use crate::error::{Error, Result};
+use crate::net::proto::{self, Request, RequestParser, Response};
 use crate::serve::router::Router;
 use crate::serve::{BackendKind, ClassifyRequest};
 use crate::util::json::{self, Json};
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-/// Maximum accepted request body (1 MiB — batches of a few thousand rows).
-const MAX_BODY: usize = 1 << 20;
+/// `Retry-After` seconds advertised on `429` responses.
+const RETRY_AFTER_S: u32 = 1;
 
-/// Parsed request.
-struct Request {
-    method: String,
-    path: String,
-    body: Vec<u8>,
+/// Route one parsed request to its response — the single entry point
+/// shared by both front-ends.
+pub fn respond(req: &Request, router: &Arc<Router>) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(200, &json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/metrics") => Response::json(200, &router.metrics().to_json()),
+        ("GET", "/model") => into_response(model_info(router), router),
+        ("GET", "/models") => Response::json(200, &model_list(router)),
+        ("POST", "/classify") => into_response(classify(req, router), router),
+        ("POST", "/classify_batch") => into_response(classify_batch(req, router), router),
+        ("GET", _) | ("POST", _) => Response::error(404, format!("no such path {}", req.path)),
+        _ => Response::error(405, "method not allowed"),
+    }
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<Request> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts
-        .next()
-        .ok_or_else(|| Error::Serve("empty request line".into()))?
-        .to_string();
-    let path = parts
-        .next()
-        .ok_or_else(|| Error::Serve("request line missing path".into()))?
-        .to_string();
-    let mut content_length = 0usize;
-    loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
-        let h = h.trim();
-        if h.is_empty() {
-            break;
+/// Map a handler result onto the wire contract: `Overloaded` is the
+/// backpressure signal (`429` + `Retry-After`), everything else `400`.
+fn into_response(result: Result<Json>, router: &Arc<Router>) -> Response {
+    match result {
+        Ok(j) => Response::json(200, &j),
+        Err(Error::Overloaded(msg)) => {
+            router.metrics().observe_rejected();
+            Response::overloaded(RETRY_AFTER_S, msg)
         }
-        if let Some((k, v)) = h.split_once(':') {
-            if k.eq_ignore_ascii_case("content-length") {
-                content_length = v
-                    .trim()
-                    .parse()
-                    .map_err(|_| Error::Serve("bad content-length".into()))?;
+        Err(e) => Response::error(400, e.to_string()),
+    }
+}
+
+/// Serve one sync-mode connection until it closes: keep-alive loop with
+/// a per-connection read timeout, so a stalled client cannot pin a
+/// worker thread forever (it gets `408` mid-request, silence between
+/// requests).
+pub fn handle_connection(stream: TcpStream, router: &Arc<Router>, read_timeout: Duration) {
+    router.metrics().connection_opened();
+    serve_blocking(stream, router, read_timeout);
+    router.metrics().connection_closed();
+}
+
+fn serve_blocking(mut stream: TcpStream, router: &Arc<Router>, read_timeout: Duration) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(read_timeout)).is_err() {
+        return;
+    }
+    let mut parser = RequestParser::new();
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        // serve every buffered request before touching the socket again
+        // (pipelined requests never wait on a read)
+        loop {
+            match parser.try_next() {
+                Ok(Some(req)) => {
+                    let t0 = Instant::now();
+                    let resp = respond(&req, router);
+                    // error responses hang up (the seed server's
+                    // behaviour) — matches the evented front-end
+                    let keep = req.keep_alive && resp.status < 400;
+                    if stream.write_all(&resp.to_bytes(keep)).is_err() {
+                        return;
+                    }
+                    let _ = stream.flush();
+                    router.metrics().observe_request(t0.elapsed());
+                    if !keep {
+                        return;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    let resp = Response::error(400, e.to_string());
+                    let _ = stream.write_all(&resp.to_bytes(false));
+                    return;
+                }
             }
         }
-    }
-    if content_length > MAX_BODY {
-        return Err(Error::Serve(format!("body too large ({content_length} bytes)")));
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Request { method, path, body })
-}
-
-fn write_response(stream: &mut TcpStream, status: u16, body: &Json) -> Result<()> {
-    let body = body.to_string_compact();
-    let reason = match status {
-        200 => "OK",
-        400 => "Bad Request",
-        404 => "Not Found",
-        405 => "Method Not Allowed",
-        _ => "Internal Server Error",
-    };
-    let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    stream.write_all(body.as_bytes())?;
-    stream.flush()?;
-    Ok(())
-}
-
-/// Handle one connection: parse, route, respond. Errors become JSON
-/// error bodies; connection-level failures are logged and dropped.
-pub fn handle_connection(mut stream: TcpStream, router: &Arc<Router>) {
-    let _ = stream.set_nodelay(true);
-    let response = match read_request(&mut stream) {
-        Ok(req) => route(&req, router),
-        Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
-    };
-    if let Err(e) = write_response(&mut stream, response.0, &response.1) {
-        crate::log_debug!("http: failed to write response: {e}");
-    }
-}
-
-fn route(req: &Request, router: &Arc<Router>) -> (u16, Json) {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => (200, json::obj(vec![("ok", Json::Bool(true))])),
-        ("GET", "/metrics") => (200, router.metrics().to_json()),
-        ("GET", "/model") => match model_info(router) {
-            Ok(j) => (200, j),
-            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
-        },
-        ("GET", "/models") => (200, model_list(router)),
-        ("POST", "/classify") => match classify(req, router) {
-            Ok(j) => (200, j),
-            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
-        },
-        ("POST", "/classify_batch") => match classify_batch(req, router) {
-            Ok(j) => (200, j),
-            Err(e) => (400, json::obj(vec![("error", json::s(e.to_string()))])),
-        },
-        ("GET", _) | ("POST", _) => (
-            404,
-            json::obj(vec![("error", json::s(format!("no such path {}", req.path)))]),
-        ),
-        _ => (
-            405,
-            json::obj(vec![("error", json::s("method not allowed"))]),
-        ),
+        match stream.read(&mut buf) {
+            Ok(0) => return, // orderly EOF
+            Ok(n) => parser.push(&buf[..n]),
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                // read timeout: answer a stalled mid-request client with
+                // 408, close an idle-at-boundary connection silently
+                if !parser.is_idle() {
+                    let resp = Response::error(408, "request read timed out");
+                    let _ = stream.write_all(&resp.to_bytes(false));
+                }
+                return;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
     }
 }
 
@@ -232,6 +236,21 @@ fn parse_backend(v: &Json) -> Result<Option<BackendKind>> {
     }
 }
 
+/// Backend selection for binary-frame requests (query string).
+fn backend_param(req: &Request) -> Result<Option<BackendKind>> {
+    match req.param("backend") {
+        Some(s) if !s.is_empty() => Ok(Some(BackendKind::parse(s)?)),
+        _ => Ok(None),
+    }
+}
+
+/// Model selection for binary-frame requests (query string).
+fn model_param(req: &Request) -> Option<String> {
+    req.param("model")
+        .filter(|m| !m.is_empty())
+        .map(String::from)
+}
+
 fn parse_row(v: &Json) -> Result<Vec<f32>> {
     v.as_arr()
         .ok_or_else(|| Error::Serve("features must be an array".into()))?
@@ -245,13 +264,27 @@ fn parse_row(v: &Json) -> Result<Vec<f32>> {
 }
 
 fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
-    let v = parse_body(&req.body)?;
-    let features = parse_row(
-        v.get("features")
-            .ok_or_else(|| Error::Serve("missing 'features'".into()))?,
-    )?;
-    let backend = parse_backend(&v)?;
-    let model = v.get_str("model").map(String::from);
+    let (features, backend, model) = if req.is_binary() {
+        let batch = proto::decode_rows(&req.body)?;
+        let m = batch.as_matrix();
+        if m.n_rows() != 1 {
+            return Err(Error::Serve(format!(
+                "binary /classify takes exactly 1 row, frame carries {}",
+                m.n_rows()
+            )));
+        }
+        (m.row(0).to_vec(), backend_param(req)?, model_param(req))
+    } else {
+        let v = parse_body(&req.body)?;
+        (
+            parse_row(
+                v.get("features")
+                    .ok_or_else(|| Error::Serve("missing 'features'".into()))?,
+            )?,
+            parse_backend(&v)?,
+            v.get_str("model").map(String::from),
+        )
+    };
     let resp = router.classify(&ClassifyRequest {
         features,
         backend,
@@ -271,40 +304,54 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
 }
 
 fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
-    let v = parse_body(&req.body)?;
-    let rows = v
-        .get("rows")
-        .and_then(Json::as_arr)
-        .ok_or_else(|| Error::Serve("missing 'rows' array".into()))?;
-    if rows.is_empty() {
-        return Err(Error::Serve("empty batch".into()));
-    }
-    // Parse straight into one flat row-major buffer: the first row fixes
-    // the stride, every cell is appended in place — the request body is
-    // the only per-row representation that ever exists.
-    let first_len = rows[0].as_arr().map(|a| a.len()).unwrap_or(0);
-    if first_len == 0 {
-        return Err(Error::Serve("rows must be non-empty arrays of numbers".into()));
-    }
-    let mut batch = RowMatrixBuf::with_capacity(first_len, rows.len());
-    for row in rows {
-        let cells = row
-            .as_arr()
-            .ok_or_else(|| Error::Serve("rows must be arrays".into()))?;
-        for c in cells {
-            batch.push_cell(
-                c.as_f64()
-                    .map(|f| f as f32)
-                    .ok_or_else(|| Error::Serve("features must be numbers".into()))?,
-            );
+    let (batch, backend, model, want_steps) = if req.is_binary() {
+        // the binary fast path: the body deserialises straight into the
+        // flat batch buffer, no JSON parser anywhere on the row path
+        (
+            proto::decode_rows(&req.body)?,
+            backend_param(req)?,
+            model_param(req),
+            matches!(req.param("steps"), Some("true") | Some("1")),
+        )
+    } else {
+        let v = parse_body(&req.body)?;
+        let rows = v
+            .get("rows")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Serve("missing 'rows' array".into()))?;
+        if rows.is_empty() {
+            return Err(Error::Serve("empty batch".into()));
         }
-        batch
-            .end_row()
-            .map_err(|_| Error::Serve("rows must all have the same number of features".into()))?;
-    }
-    let backend = parse_backend(&v)?;
-    let model = v.get_str("model").map(String::from);
-    let want_steps = v.get("steps").and_then(Json::as_bool).unwrap_or(false);
+        // Parse straight into one flat row-major buffer: the first row
+        // fixes the stride, every cell is appended in place — the request
+        // body is the only per-row representation that ever exists.
+        let first_len = rows[0].as_arr().map(|a| a.len()).unwrap_or(0);
+        if first_len == 0 {
+            return Err(Error::Serve("rows must be non-empty arrays of numbers".into()));
+        }
+        let mut batch = RowMatrixBuf::with_capacity(first_len, rows.len());
+        for row in rows {
+            let cells = row
+                .as_arr()
+                .ok_or_else(|| Error::Serve("rows must be arrays".into()))?;
+            for c in cells {
+                batch.push_cell(
+                    c.as_f64()
+                        .map(|f| f as f32)
+                        .ok_or_else(|| Error::Serve("features must be numbers".into()))?,
+                );
+            }
+            batch.end_row().map_err(|_| {
+                Error::Serve("rows must all have the same number of features".into())
+            })?;
+        }
+        (
+            batch,
+            parse_backend(&v)?,
+            v.get_str("model").map(String::from),
+            v.get("steps").and_then(Json::as_bool).unwrap_or(false),
+        )
+    };
     let (classes, steps, version) =
         router.classify_batch(batch.as_matrix(), backend, model.as_deref(), want_steps)?;
     let mut fields = vec![
@@ -335,7 +382,99 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
     Ok(json::obj(fields))
 }
 
-/// Tiny blocking HTTP client for tests, examples and the bench harness.
+/// Persistent keep-alive HTTP/1.1 client: one connection, many
+/// requests. Used by the `loadgen` CLI command, the benches, and the
+/// bit-identity integration tests (JSON and binary bodies alike).
+pub struct HttpClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Open a keep-alive connection.
+    pub fn connect(addr: &str) -> Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient {
+            reader: BufReader::new(stream),
+        })
+    }
+
+    /// One request/response round trip over the persistent connection.
+    /// Returns `(status, headers, body)`.
+    pub fn request_raw(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: client\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+            body.len()
+        );
+        let stream = self.reader.get_mut();
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(body)?;
+        stream.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Serve(format!("malformed status line {line:?}")))?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h)?;
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = h.split_once(':') {
+                let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v
+                        .parse()
+                        .map_err(|_| Error::Serve("bad content-length".into()))?;
+                }
+                headers.push((k, v));
+            }
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body)?;
+        Ok((status, headers, body))
+    }
+
+    /// A JSON request/response round trip.
+    pub fn request_json(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&Json>,
+    ) -> Result<(u16, Json)> {
+        let text = body.map(|b| b.to_string_compact()).unwrap_or_default();
+        let (status, _, body) =
+            self.request_raw(method, path, "application/json", text.as_bytes())?;
+        let text = String::from_utf8_lossy(&body);
+        let json = if text.trim().is_empty() {
+            Json::Null
+        } else {
+            Json::parse(text.trim())?
+        };
+        Ok((status, json))
+    }
+
+    /// A body-less GET.
+    pub fn get(&mut self, path: &str) -> Result<(u16, Json)> {
+        self.request_json("GET", path, None)
+    }
+}
+
+/// Tiny blocking one-shot HTTP client (`Connection: close`) for tests,
+/// examples and the bench harness.
 pub fn http_request(addr: &str, method: &str, path: &str, body: Option<&Json>) -> Result<(u16, Json)> {
     let mut stream = TcpStream::connect(addr)?;
     let body_text = body.map(|b| b.to_string_compact()).unwrap_or_default();

@@ -72,6 +72,7 @@ impl Histogram {
             ("count", json::num(self.count() as f64)),
             ("mean_us", json::num(self.mean_us())),
             ("p50_us", json::num(self.quantile_us(0.5) as f64)),
+            ("p95_us", json::num(self.quantile_us(0.95) as f64)),
             ("p99_us", json::num(self.quantile_us(0.99) as f64)),
             (
                 "max_us",
@@ -88,6 +89,7 @@ impl Histogram {
             ("count", json::num(self.count() as f64)),
             ("mean", json::num(self.mean_us())),
             ("p50", json::num(self.quantile_us(0.5) as f64)),
+            ("p95", json::num(self.quantile_us(0.95) as f64)),
             ("p99", json::num(self.quantile_us(0.99) as f64)),
             (
                 "max",
@@ -122,6 +124,18 @@ pub struct ServerMetrics {
     /// Configured evaluation parallelism (workers + caller; set by the
     /// server at startup from `ServeConfig::eval_threads`).
     pub eval_threads: AtomicU64,
+    /// End-to-end request latency (request parsed → response flushed),
+    /// across every endpoint and both front-ends.
+    pub request_us: Histogram,
+    /// Currently open connections (gauge).
+    pub connections_open: AtomicU64,
+    /// Connections accepted since startup.
+    pub connections_total: AtomicU64,
+    /// Requests shed with `429` by admission control (full dispatch or
+    /// batcher queue).
+    pub rejected: AtomicU64,
+    /// Front-end marker: 1 = evented, 0 = sync (set once at startup).
+    io_evented: AtomicU64,
 }
 
 impl Default for ServerMetrics {
@@ -139,6 +153,11 @@ impl Default for ServerMetrics {
             batch_size: Histogram::default(),
             batch_eval_us: Histogram::default(),
             eval_threads: AtomicU64::new(0),
+            request_us: Histogram::default(),
+            connections_open: AtomicU64::new(0),
+            connections_total: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            io_evented: AtomicU64::new(0),
         }
     }
 }
@@ -178,6 +197,37 @@ impl ServerMetrics {
         self.batch_eval_us.observe(d);
     }
 
+    /// Record the end-to-end latency of one served request.
+    pub fn observe_request(&self, latency: Duration) {
+        self.request_us.observe(latency);
+    }
+
+    /// Record a request shed with `429`.
+    pub fn observe_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was accepted (front-end connection gauges).
+    pub fn connection_opened(&self) {
+        self.connections_open.fetch_add(1, Ordering::Relaxed);
+        self.connections_total.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A connection was closed.
+    pub fn connection_closed(&self) {
+        // saturating: a miscounted close must not wrap the gauge
+        let _ = self.connections_open.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |n| n.checked_sub(1),
+        );
+    }
+
+    /// Record which front-end serves this process (shown in `/metrics`).
+    pub fn set_io_mode(&self, evented: bool) {
+        self.io_evented.store(u64::from(evented), Ordering::Relaxed);
+    }
+
     /// Mean items per dispatched batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -194,10 +244,36 @@ impl ServerMetrics {
         let requests = self.requests.load(Ordering::Relaxed);
         json::obj(vec![
             ("uptime_s", json::num(uptime)),
+            (
+                "io_mode",
+                json::s(if self.io_evented.load(Ordering::Relaxed) == 1 {
+                    "evented"
+                } else {
+                    "sync"
+                }),
+            ),
             ("requests", json::num(requests as f64)),
             (
                 "errors",
                 json::num(self.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rejected_429",
+                json::num(self.rejected.load(Ordering::Relaxed) as f64),
+            ),
+            ("request_us", self.request_us.to_json()),
+            (
+                "connections",
+                json::obj(vec![
+                    (
+                        "open",
+                        json::num(self.connections_open.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "total",
+                        json::num(self.connections_total.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
             ),
             (
                 "throughput_rps",
@@ -224,6 +300,23 @@ impl ServerMetrics {
                 ]),
             ),
         ])
+    }
+}
+
+/// The event loop reports lifecycle through this trait, keeping the net
+/// layer independent of the serving layer.
+impl crate::net::LoopObserver for ServerMetrics {
+    fn conn_opened(&self) {
+        self.connection_opened();
+    }
+    fn conn_closed(&self) {
+        self.connection_closed();
+    }
+    fn request_served(&self, latency: Duration) {
+        self.observe_request(latency);
+    }
+    fn request_rejected(&self) {
+        self.observe_rejected();
     }
 }
 
@@ -275,6 +368,51 @@ mod tests {
         assert!(sizes.get("mean_us").is_none(), "sizes are not latencies");
         assert_eq!(j.get("batch_eval_us").unwrap().get_i64("count"), Some(1));
         assert_eq!(j.get_i64("eval_threads"), Some(4));
+        assert_eq!(j.get_str("io_mode"), Some("sync"), "sync until set");
+        assert_eq!(j.get_i64("rejected_429"), Some(0));
+        assert_eq!(j.get("request_us").unwrap().get_i64("count"), Some(0));
+        let conns = j.get("connections").unwrap();
+        assert_eq!(conns.get_i64("open"), Some(0));
+        assert_eq!(conns.get_i64("total"), Some(0));
+    }
+
+    #[test]
+    fn histogram_reports_p95() {
+        let h = Histogram::default();
+        for us in [1u64, 2, 4, 8, 5000] {
+            h.observe(Duration::from_micros(us));
+        }
+        let j = h.to_json();
+        assert!(j.get_i64("p95_us").is_some());
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.quantile_us(0.95) <= h.quantile_us(0.99));
+        let v = h.to_json_values();
+        assert!(v.get_i64("p95").is_some());
+        assert!(v.get("p95_us").is_none());
+    }
+
+    #[test]
+    fn front_end_counters_flow_through_the_observer_trait() {
+        use crate::net::LoopObserver as _;
+        let m = ServerMetrics::default();
+        m.set_io_mode(true);
+        m.conn_opened();
+        m.conn_opened();
+        m.conn_closed();
+        m.request_served(Duration::from_micros(40));
+        m.request_rejected();
+        let j = m.to_json();
+        assert_eq!(j.get_str("io_mode"), Some("evented"));
+        let conns = j.get("connections").unwrap();
+        assert_eq!(conns.get_i64("open"), Some(1));
+        assert_eq!(conns.get_i64("total"), Some(2));
+        assert_eq!(j.get("request_us").unwrap().get_i64("count"), Some(1));
+        assert!(j.get("request_us").unwrap().get_i64("p95_us").unwrap() > 0);
+        assert_eq!(j.get_i64("rejected_429"), Some(1));
+        // the gauge saturates at zero instead of wrapping
+        m.conn_closed();
+        m.conn_closed();
+        assert_eq!(m.connections_open.load(Ordering::Relaxed), 0);
     }
 
     #[test]

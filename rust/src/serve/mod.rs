@@ -29,8 +29,19 @@
 //! Models are named and versioned; registering under an existing name
 //! hot-swaps atomically, and requests may select `model` and `backend`
 //! per call. All state is owned by Rust; Python exists only in the
-//! artifact build path. Metrics ([`metrics`]) track per-backend latency
-//! histograms.
+//! artifact build path.
+//!
+//! Two socket front-ends drive the same endpoint layer
+//! (`ServeConfig::io_mode` / `serve --io`): the evented loop
+//! ([`crate::net::event_loop`] — epoll/kqueue readiness, keep-alive,
+//! pipelining, bounded dispatch) where a poller exists, and the sync
+//! thread-per-connection pool (keep-alive with per-connection read
+//! timeouts) everywhere. Both parse with [`crate::net::proto`] and reply
+//! through [`http::respond`], so responses are bit-identical across
+//! modes. Overload is shed, never queued unboundedly: a full batcher or
+//! dispatch queue yields `429` + `Retry-After`. Metrics ([`metrics`])
+//! track per-backend and end-to-end latency histograms (p50/p95/p99),
+//! connection gauges, and the `429` shed count.
 
 pub mod batcher;
 pub mod config;

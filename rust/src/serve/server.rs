@@ -1,11 +1,26 @@
-//! Server assembly: trains the model, wires router + backends + HTTP
-//! workers, and manages lifecycle.
+//! Server assembly: trains the model, wires router + backends + the
+//! selected serving front-end, and manages lifecycle.
+//!
+//! Two interchangeable front-ends serve the same [`respond`] handler
+//! ([`crate::serve::http`]) and are therefore bit-identical on the wire:
+//!
+//! - **sync** — thread-per-connection: an accept thread feeds accepted
+//!   sockets through a bounded queue to `http_workers` blocking workers,
+//!   each serving its connection keep-alive with a per-connection read
+//!   timeout;
+//! - **evented** — one poller thread (`net::event_loop`) multiplexes
+//!   every connection with epoll/kqueue readiness, dispatching parsed
+//!   requests to `http_workers` handler workers through a bounded queue
+//!   (full queue → `429` + `Retry-After`).
+//!
+//! [`ServeConfig::io_mode`] picks the front-end (`auto` resolves to
+//! evented wherever a poller exists).
 
 use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::serve::batcher::BatcherConfig;
 use crate::serve::config::ServeConfig;
-use crate::serve::http::handle_connection;
+use crate::serve::http::{handle_connection, respond};
 use crate::serve::metrics::ServerMetrics;
 use crate::serve::router::Router;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -15,6 +30,18 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+/// The running front-end owned by a [`ServerHandle`].
+enum FrontEnd {
+    /// Thread-per-connection: accept thread + connection workers.
+    Sync {
+        accept_thread: JoinHandle<()>,
+        worker_threads: Vec<JoinHandle<()>>,
+    },
+    /// The evented loop (only constructed where a poller exists).
+    #[cfg(any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64")))]
+    Evented(crate::net::event_loop::EventLoopHandle),
+}
+
 /// A running server; dropping (or calling [`stop`](Self::stop)) shuts it
 /// down and joins all threads.
 pub struct ServerHandle {
@@ -23,8 +50,7 @@ pub struct ServerHandle {
     /// The shared router (tests can bypass HTTP).
     pub router: Arc<Router>,
     shutdown: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
-    worker_threads: Vec<JoinHandle<()>>,
+    front: Option<FrontEnd>,
 }
 
 /// Build the model and start serving (returns once the socket is bound).
@@ -37,6 +63,7 @@ pub struct ServerHandle {
 /// the configured dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
+    let evented = cfg.io_mode.resolve()?;
     // Size the shared evaluation pool before any batch traffic exists
     // (spawn-once; the first effective configuration wins process-wide).
     let eval_threads = crate::runtime::pool::configure(cfg.eval_threads);
@@ -92,23 +119,91 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     metrics
         .eval_threads
         .store(eval_threads as u64, std::sync::atomic::Ordering::Relaxed);
+    metrics.set_io_mode(evented);
     let router = Arc::new(Router::new(
         engine.registry().clone(),
-        metrics,
+        metrics.clone(),
         cfg.default_backend,
         BatcherConfig {
             max_batch: cfg.batch_max,
             max_wait: Duration::from_millis(cfg.batch_wait_ms),
-            queue_cap: (cfg.batch_max * 16).max(256),
+            queue_cap: cfg.resolved_batch_queue_cap(),
         },
         Duration::from_millis(cfg.reply_timeout_ms),
     ));
 
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
-    listener.set_nonblocking(true)?;
     let shutdown = Arc::new(AtomicBool::new(false));
+    let front = if evented {
+        start_evented(listener, cfg, &router, metrics, shutdown.clone())?
+    } else {
+        start_sync(listener, cfg, &router, shutdown.clone())?
+    };
+    crate::log_info!(
+        "serve: listening on http://{addr} ({} front-end)",
+        if evented { "evented" } else { "sync" }
+    );
+    Ok(ServerHandle {
+        addr,
+        router,
+        shutdown,
+        front: Some(front),
+    })
+}
 
+/// Boot the evented front-end on targets with a poller.
+#[cfg(any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64")))]
+fn start_evented(
+    listener: TcpListener,
+    cfg: &ServeConfig,
+    router: &Arc<Router>,
+    metrics: Arc<ServerMetrics>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<FrontEnd> {
+    use crate::net::event_loop::{self, EventLoopConfig, Handler};
+    let router = router.clone();
+    let handler: Handler = Arc::new(move |req| respond(req, &router));
+    let handle = event_loop::start(
+        listener,
+        handler,
+        metrics,
+        EventLoopConfig {
+            workers: cfg.http_workers,
+            dispatch_cap: cfg.resolved_dispatch_cap(),
+            idle_timeout: Duration::from_millis(cfg.read_timeout_ms),
+            retry_after_s: 1,
+        },
+        shutdown,
+    )?;
+    Ok(FrontEnd::Evented(handle))
+}
+
+/// No poller on this target — [`IoMode::resolve`] never returns evented
+/// here, so this is unreachable; it exists to keep the call site
+/// cfg-free.
+#[cfg(not(any(target_os = "linux", all(target_os = "macos", target_pointer_width = "64"))))]
+fn start_evented(
+    _listener: TcpListener,
+    _cfg: &ServeConfig,
+    _router: &Arc<Router>,
+    _metrics: Arc<ServerMetrics>,
+    _shutdown: Arc<AtomicBool>,
+) -> Result<FrontEnd> {
+    Err(Error::invalid(
+        "evented front-end is unavailable on this target",
+    ))
+}
+
+/// Boot the sync thread-per-connection front-end.
+fn start_sync(
+    listener: TcpListener,
+    cfg: &ServeConfig,
+    router: &Arc<Router>,
+    shutdown: Arc<AtomicBool>,
+) -> Result<FrontEnd> {
+    listener.set_nonblocking(true)?;
+    let read_timeout = Duration::from_millis(cfg.read_timeout_ms);
     // Worker pool: accept thread feeds connections through a bounded queue.
     let (conn_tx, conn_rx): (SyncSender<TcpStream>, Receiver<TcpStream>) =
         mpsc::sync_channel(cfg.http_workers * 8);
@@ -123,18 +218,17 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
                 .spawn(move || loop {
                     let conn = rx.lock().unwrap().recv();
                     match conn {
-                        Ok(stream) => handle_connection(stream, &router),
+                        Ok(stream) => handle_connection(stream, &router, read_timeout),
                         Err(_) => return, // accept loop gone
                     }
                 })
                 .map_err(|e| Error::Serve(format!("cannot spawn http worker: {e}")))?,
         );
     }
-    let accept_shutdown = shutdown.clone();
     let accept_thread = std::thread::Builder::new()
         .name("http-accept".into())
         .spawn(move || {
-            while !accept_shutdown.load(Ordering::Relaxed) {
+            while !shutdown.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         // Blocking handoff applies backpressure when all
@@ -155,13 +249,8 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
             // dropping conn_tx stops the workers
         })
         .map_err(|e| Error::Serve(format!("cannot spawn accept thread: {e}")))?;
-
-    crate::log_info!("serve: listening on http://{addr}");
-    Ok(ServerHandle {
-        addr,
-        router,
-        shutdown,
-        accept_thread: Some(accept_thread),
+    Ok(FrontEnd::Sync {
+        accept_thread,
         worker_threads,
     })
 }
@@ -174,11 +263,22 @@ impl ServerHandle {
 
     fn shutdown_inner(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-        for t in self.worker_threads.drain(..) {
-            let _ = t.join();
+        match self.front.take() {
+            Some(FrontEnd::Sync {
+                accept_thread,
+                worker_threads,
+            }) => {
+                let _ = accept_thread.join();
+                for t in worker_threads {
+                    let _ = t.join();
+                }
+            }
+            #[cfg(any(
+                target_os = "linux",
+                all(target_os = "macos", target_pointer_width = "64")
+            ))]
+            Some(FrontEnd::Evented(mut handle)) => handle.join(),
+            None => {}
         }
     }
 }
@@ -190,5 +290,5 @@ impl Drop for ServerHandle {
 }
 
 // Full server lifecycle is exercised over real sockets in
-// rust/tests/integration_serve.rs; dataset-spec resolution is tested in
-// `data::tests`.
+// rust/tests/integration_serve.rs and integration_net.rs; dataset-spec
+// resolution is tested in `data::tests`.

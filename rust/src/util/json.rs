@@ -427,9 +427,41 @@ pub fn obj_sorted(map: BTreeMap<String, Json>) -> Json {
     Json::Obj(map.into_iter().collect())
 }
 
+/// A copy with every occurrence of `key` removed from objects at any
+/// depth (e.g. dropping per-request `latency_us` before comparing
+/// responses for bit-identity).
+pub fn strip_key(v: &Json, key: &str) -> Json {
+    match v {
+        Json::Obj(fields) => Json::Obj(
+            fields
+                .iter()
+                .filter(|(k, _)| k != key)
+                .map(|(k, x)| (k.clone(), strip_key(x, key)))
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(|x| strip_key(x, key)).collect()),
+        other => other.clone(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn strip_key_removes_at_every_depth() {
+        let v = Json::parse(
+            r#"{"a": 1, "latency_us": 9, "nested": {"latency_us": 3, "b": [{"latency_us": 4, "c": 2}]}}"#,
+        )
+        .unwrap();
+        let stripped = strip_key(&v, "latency_us");
+        assert_eq!(
+            stripped.to_string_compact(),
+            r#"{"a":1,"nested":{"b":[{"c":2}]}}"#
+        );
+        // untouched values compare equal after stripping on both sides
+        assert_eq!(strip_key(&stripped, "latency_us"), stripped);
+    }
 
     #[test]
     fn parse_scalars() {

@@ -1,0 +1,350 @@
+//! Integration: the evented networking subsystem against the sync
+//! front-end over real sockets — bit-identity under concurrent
+//! keep-alive load, the binary row-frame contract, and admission
+//! control (`429` + `Retry-After`) when the batcher queue fills.
+
+use forest_add::batch::{RowMatrix, RowMatrixBuf};
+use forest_add::classifier::{Classifier, ClassifierInfo, CostModel};
+use forest_add::data::datasets;
+use forest_add::error::Result;
+use forest_add::net::proto;
+use forest_add::serve::config::{IoMode, ServeConfig};
+use forest_add::serve::http::{http_request, HttpClient};
+use forest_add::serve::{server, BackendKind};
+use forest_add::util::json::{self, strip_key, Json};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        enable_xla: false,
+        ..Default::default()
+    }
+}
+
+fn row_json(row: &[f32]) -> Json {
+    Json::Arr(row.iter().map(|&v| json::num(v as f64)).collect())
+}
+
+/// Encode `rows` (borrowed from the dataset) as a binary row frame.
+fn frame_of(rows: &[&[f32]]) -> Vec<u8> {
+    let mut buf = RowMatrixBuf::with_capacity(rows[0].len(), rows.len());
+    for row in rows {
+        buf.push_row(row).unwrap();
+    }
+    proto::encode_rows(buf.as_matrix()).unwrap()
+}
+
+/// One of the four request shapes the identity sweep cycles through.
+/// Returns `(path, content_type, body)`.
+fn mixed_request(
+    data: &forest_add::data::Dataset,
+    conn: usize,
+    seq: usize,
+) -> (String, &'static str, Vec<u8>) {
+    let n = data.n_rows();
+    let i = (conn * 31 + seq * 7) % n;
+    let j = (i + 1) % n;
+    match seq % 4 {
+        0 => (
+            "/classify".to_string(),
+            "application/json",
+            json::obj(vec![("features", row_json(data.row(i)))])
+                .to_string_compact()
+                .into_bytes(),
+        ),
+        1 => (
+            "/classify".to_string(),
+            proto::BINARY_ROWS,
+            frame_of(&[data.row(i)]),
+        ),
+        2 => {
+            let rows = Json::Arr(vec![row_json(data.row(i)), row_json(data.row(j))]);
+            (
+                "/classify_batch".to_string(),
+                "application/json",
+                json::obj(vec![("rows", rows), ("steps", Json::Bool(true))])
+                    .to_string_compact()
+                    .into_bytes(),
+            )
+        }
+        _ => (
+            "/classify_batch?steps=true".to_string(),
+            proto::BINARY_ROWS,
+            frame_of(&[data.row(i), data.row(j)]),
+        ),
+    }
+}
+
+/// The acceptance gate of the subsystem: the sync and evented
+/// front-ends serve bit-identical responses (latency field aside) to 64
+/// concurrent keep-alive connections mixing JSON and binary, single and
+/// batch requests.
+#[test]
+fn sync_and_evented_front_ends_are_bit_identical() {
+    if !forest_add::net::poll::supported() {
+        eprintln!("skipping: no epoll/kqueue on this target");
+        return;
+    }
+    const CONNS: usize = 64;
+    const REQUESTS: usize = 6;
+    // identical deterministic models; the sync pool needs one worker per
+    // concurrent keep-alive connection, the evented loop does not
+    let sync_handle = server::start(&ServeConfig {
+        io_mode: IoMode::Sync,
+        http_workers: CONNS + 8,
+        ..test_config()
+    })
+    .unwrap();
+    let evented_handle = server::start(&ServeConfig {
+        io_mode: IoMode::Evented,
+        http_workers: 8,
+        ..test_config()
+    })
+    .unwrap();
+    let sync_addr = sync_handle.addr.to_string();
+    let evented_addr = evented_handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+
+    std::thread::scope(|scope| {
+        for c in 0..CONNS {
+            let sync_addr = &sync_addr;
+            let evented_addr = &evented_addr;
+            let data = &data;
+            scope.spawn(move || {
+                let mut sync_client = HttpClient::connect(sync_addr).unwrap();
+                let mut evented_client = HttpClient::connect(evented_addr).unwrap();
+                for r in 0..REQUESTS {
+                    let (path, content_type, body) = mixed_request(data, c, r);
+                    let (st_s, _, body_s) = sync_client
+                        .request_raw("POST", &path, content_type, &body)
+                        .unwrap();
+                    let (st_e, _, body_e) = evented_client
+                        .request_raw("POST", &path, content_type, &body)
+                        .unwrap();
+                    assert_eq!(st_s, 200, "conn {c} req {r} {path} (sync)");
+                    assert_eq!(st_e, 200, "conn {c} req {r} {path} (evented)");
+                    let v_s = Json::parse(std::str::from_utf8(&body_s).unwrap()).unwrap();
+                    let v_e = Json::parse(std::str::from_utf8(&body_e).unwrap()).unwrap();
+                    assert_eq!(
+                        strip_key(&v_s, "latency_us"),
+                        strip_key(&v_e, "latency_us"),
+                        "conn {c} req {r} {path} diverged between front-ends"
+                    );
+                }
+            });
+        }
+    });
+
+    // both front-ends measured the sweep: end-to-end quantiles are live
+    for (addr, mode) in [(&sync_addr, "sync"), (&evented_addr, "evented")] {
+        let (st, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(m.get_str("io_mode"), Some(mode));
+        let req_us = m.get("request_us").unwrap();
+        assert!(
+            req_us.get_i64("count").unwrap() >= (CONNS * REQUESTS) as i64,
+            "{mode}: {req_us:?}"
+        );
+        for q in ["p50_us", "p95_us", "p99_us"] {
+            assert!(req_us.get_i64(q).unwrap() > 0, "{mode} {q}: {req_us:?}");
+        }
+        let conns = m.get("connections").unwrap();
+        assert!(
+            conns.get_i64("total").unwrap() >= CONNS as i64,
+            "{mode}: {conns:?}"
+        );
+        assert_eq!(m.get_i64("rejected_429"), Some(0), "{mode}");
+    }
+
+    sync_handle.stop();
+    evented_handle.stop();
+}
+
+/// The wire contract of the binary row frame over HTTP: every
+/// malformation is a clean `400` (never a dead server), NaN cells pass
+/// through by policy, and `/classify` enforces its exactly-one-row rule.
+#[test]
+fn malformed_binary_frames_get_400_over_http() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let frame = |n_rows: u32, n_features: u32, cells: &[f32]| -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&n_rows.to_le_bytes());
+        out.extend_from_slice(&n_features.to_le_bytes());
+        for c in cells {
+            out.extend_from_slice(&c.to_le_bytes());
+        }
+        out
+    };
+    let cases: Vec<(&str, &str, Vec<u8>)> = vec![
+        ("truncated header", "/classify_batch", vec![1, 0, 0]),
+        ("zero rows", "/classify_batch", frame(0, 4, &[])),
+        ("zero features", "/classify_batch", frame(3, 0, &[])),
+        (
+            "row-count overflow",
+            "/classify_batch",
+            frame(u32::MAX, u32::MAX, &[1.0]),
+        ),
+        (
+            "length mismatch",
+            "/classify_batch",
+            frame(2, 4, &[1.0, 2.0, 3.0, 4.0]),
+        ),
+        (
+            "arity mismatch vs model",
+            "/classify_batch",
+            frame(2, 2, &[1.0, 2.0, 3.0, 4.0]),
+        ),
+        (
+            "multi-row frame on /classify",
+            "/classify",
+            frame(2, 4, &[0.1; 8]),
+        ),
+    ];
+    for (name, path, body) in &cases {
+        let mut client = HttpClient::connect(&addr).unwrap();
+        let (st, _, resp) = client
+            .request_raw("POST", path, proto::BINARY_ROWS, body)
+            .unwrap();
+        assert_eq!(st, 400, "{name}: {}", String::from_utf8_lossy(&resp));
+    }
+    // NaN cells are accepted by policy (comparisons resolve them downward)
+    let mut client = HttpClient::connect(&addr).unwrap();
+    let (st, _, resp) = client
+        .request_raw(
+            "POST",
+            "/classify",
+            proto::BINARY_ROWS,
+            &frame(1, 4, &[f32::NAN, 0.0, 0.0, 0.0]),
+        )
+        .unwrap();
+    assert_eq!(st, 200, "{}", String::from_utf8_lossy(&resp));
+    drop(client); // hang up before stop: don't pin a sync worker
+    // the server survived every malformation
+    let (st, _) = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(st, 200);
+    handle.stop();
+}
+
+/// A batch-first classifier whose batch evaluation blocks until the
+/// gate opens — pins the batcher thread so the bounded queue fills.
+struct Gated {
+    n_features: usize,
+    n_classes: usize,
+    gate: Arc<AtomicBool>,
+}
+
+impl Classifier for Gated {
+    fn info(&self) -> ClassifierInfo {
+        ClassifierInfo {
+            backend: BackendKind::Xla,
+            label: "gated test backend".into(),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            size_nodes: 0,
+            cost: CostModel {
+                max_steps: None,
+                aggregation_reads: 0,
+                preferred_batch: 64,
+            },
+        }
+    }
+
+    fn classify_with_steps(&self, _x: &[f32]) -> Result<(u32, Option<usize>)> {
+        Ok((0, None))
+    }
+
+    fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
+        while self.gate.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(vec![0; rows.n_rows()])
+    }
+}
+
+/// Admission control end to end: a full batcher queue sheds overflow
+/// requests with `429` + `Retry-After: 1` instead of queueing them, and
+/// the shed count lands in `/metrics`.
+#[test]
+fn full_batcher_queue_sheds_with_429_and_retry_after() {
+    let handle = server::start(&ServeConfig {
+        batch_max: 1,
+        batch_queue_cap: 1,
+        reply_timeout_ms: 30_000,
+        http_workers: 16,
+        ..test_config()
+    })
+    .unwrap();
+    let addr = handle.addr.to_string();
+    // hot-register a batch-first model whose evaluation is gated shut
+    let schema = handle.router.registry().get(None).unwrap().schema.clone();
+    let gate = Arc::new(AtomicBool::new(true));
+    let gated: Arc<dyn Classifier> = Arc::new(Gated {
+        n_features: schema.n_features(),
+        n_classes: schema.n_classes(),
+        gate: gate.clone(),
+    });
+    handle
+        .router
+        .registry()
+        .register("gated", schema, vec![(BackendKind::Xla, gated)])
+        .unwrap();
+
+    let data = datasets::load("iris").unwrap();
+    let body = json::obj(vec![
+        ("features", row_json(data.row(0))),
+        ("model", json::s("gated")),
+    ])
+    .to_string_compact()
+    .into_bytes();
+
+    // 12 concurrent clients race a depth-1 queue behind the blocked
+    // batcher: one in flight, one queued, the rest must shed fast
+    let results: Vec<(u16, Vec<(String, String)>)> = std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..12)
+            .map(|_| {
+                let addr = &addr;
+                let body = &body;
+                scope.spawn(move || {
+                    let mut client = HttpClient::connect(addr).unwrap();
+                    let (st, headers, _) = client
+                        .request_raw("POST", "/classify", "application/json", body)
+                        .unwrap();
+                    (st, headers)
+                })
+            })
+            .collect();
+        // let every request land while the gate is shut, then drain
+        std::thread::sleep(Duration::from_millis(400));
+        gate.store(false, Ordering::SeqCst);
+        clients.into_iter().map(|c| c.join().unwrap()).collect()
+    });
+
+    let shed: Vec<_> = results.iter().filter(|(st, _)| *st == 429).collect();
+    let ok = results.iter().filter(|(st, _)| *st == 200).count();
+    assert!(ok >= 1, "in-flight and queued requests must drain: {results:?}");
+    assert!(!shed.is_empty(), "overflow must shed with 429: {results:?}");
+    for (_, headers) in &shed {
+        assert!(
+            headers
+                .iter()
+                .any(|(k, v)| k.eq_ignore_ascii_case("retry-after") && v == "1"),
+            "429 must carry the Retry-After contract: {headers:?}"
+        );
+    }
+
+    let (st, m) = http_request(&addr, "GET", "/metrics", None).unwrap();
+    assert_eq!(st, 200);
+    assert!(
+        m.get_i64("rejected_429").unwrap() >= shed.len() as i64,
+        "{m:?}"
+    );
+    handle.stop();
+}

@@ -445,6 +445,47 @@ fn concurrent_clients_all_served_correctly() {
 }
 
 #[test]
+fn sync_read_timeout_closes_stalled_connections() {
+    use std::io::{Read, Write};
+    let cfg = ServeConfig {
+        io_mode: forest_add::serve::config::IoMode::Sync,
+        read_timeout_ms: 300,
+        http_workers: 2,
+        ..test_config()
+    };
+    let handle = server::start(&cfg).unwrap();
+    let addr = handle.addr.to_string();
+
+    // a client stalled mid-request gets told why (408), promptly
+    let mut stalled = std::net::TcpStream::connect(&addr).unwrap();
+    stalled
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    stalled.write_all(b"POST /classify HTTP/1.1\r\nConte").unwrap();
+    let t0 = std::time::Instant::now();
+    let mut out = String::new();
+    stalled.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 408"), "{out}");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(8),
+        "timeout must fire promptly, not at the client's deadline"
+    );
+
+    // an idle connection at a request boundary is closed silently
+    let mut idle = std::net::TcpStream::connect(&addr).unwrap();
+    idle.set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut buf = Vec::new();
+    idle.read_to_end(&mut buf).unwrap();
+    assert!(buf.is_empty(), "idle close sends no bytes");
+
+    // with only 2 workers, neither stalled client pinned the pool
+    let (st, _) = http_request(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(st, 200);
+    handle.stop();
+}
+
+#[test]
 fn xla_fallback_when_forest_incompatible() {
     // 33 trees do not divide the small variant's 32 slots -> the server must
     // fall back to native backends instead of failing or mis-serving.
