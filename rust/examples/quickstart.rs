@@ -9,7 +9,7 @@
 use forest_add::classifier::{self, BackendKind};
 use forest_add::engine::Engine;
 use forest_add::serve::config::ServeConfig;
-use forest_add::serve::http::http_request;
+use forest_add::serve::http::{http_request, HttpClient};
 use forest_add::util::json::{self, Json};
 use forest_add::util::table::fmt_thousands;
 use forest_add::Result;
@@ -166,6 +166,51 @@ fn main() -> Result<()> {
         metrics.get_str("io_mode").unwrap_or("?"),
         resp.get_str("backend").unwrap_or("?"),
         resp.get_str("label").unwrap_or("?"),
+    );
+
+    // 9. Observability: every response echoes an `X-Request-Id` (yours or
+    //    a generated one), `"trace": true` returns the per-stage timing
+    //    breakdown inline, the last traces sit in `/debug/trace`, and
+    //    `/metrics?format=prometheus` renders every series for a scraper.
+    //    (CLI: `serve --log-level debug --log-json`.)
+    let mut client = HttpClient::connect(&addr)?;
+    let traced = json::obj(vec![
+        (
+            "features",
+            Json::Arr(sample.iter().map(|&v| json::num(v as f64)).collect()),
+        ),
+        ("trace", Json::Bool(true)),
+    ]);
+    let (st, headers, body) = client.request_raw_with_headers(
+        "POST",
+        "/classify",
+        "application/json",
+        &[("X-Request-Id", "00000000deadbeef")],
+        traced.to_string_compact().as_bytes(),
+    )?;
+    assert_eq!(st, 200);
+    let echoed = headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case("x-request-id"))
+        .map(|(_, v)| v.as_str())
+        .unwrap_or("?");
+    let traced_resp = Json::parse(std::str::from_utf8(&body).expect("utf-8 body"))?;
+    let eval_us = traced_resp
+        .get("trace")
+        .and_then(|t| t.get("stages"))
+        .and_then(|s| s.get_i64("eval"))
+        .unwrap_or(0);
+    let (_, ring) = client.get("/debug/trace?n=4")?;
+    let (st, _, prom) =
+        client.request_raw("GET", "/metrics?format=prometheus", "application/json", &[])?;
+    assert_eq!(st, 200);
+    println!(
+        "traced request {echoed}: eval {eval_us} µs, {} traces in the ring, \
+         {} Prometheus series lines",
+        ring.get("traces").and_then(|t| t.as_arr()).map_or(0, |a| a.len()),
+        std::str::from_utf8(&prom)
+            .map(|t| t.lines().filter(|l| !l.starts_with('#')).count())
+            .unwrap_or(0),
     );
     serving.stop();
     Ok(())

@@ -132,9 +132,10 @@ pub struct PaperSweep {
 /// variants run under `node_budget` and report their cutoff.
 pub fn paper_sweep(data: &Dataset, env: &BenchEnv, seed: u64) -> PaperSweep {
     let checkpoints = log_checkpoints(env.max_trees);
-    eprintln!(
+    crate::log_info!(
         "[sweep] training {} trees on '{}' …",
-        env.max_trees, data.name
+        env.max_trees,
+        data.name
     );
     let forest = ForestLearner::default()
         .trees(env.max_trees)
@@ -170,7 +171,7 @@ pub fn paper_sweep(data: &Dataset, env: &BenchEnv, seed: u64) -> PaperSweep {
         (Abstraction::Majority, true),
     ] {
         let label = abstraction.label(unsat);
-        eprintln!("[sweep] {label} …");
+        crate::log_info!("[sweep] {label} …");
         let opts = CompileOptions {
             abstraction,
             unsat_elim: unsat,
@@ -189,7 +190,7 @@ pub fn paper_sweep(data: &Dataset, env: &BenchEnv, seed: u64) -> PaperSweep {
                 steps: dd.mean_steps(data),
                 size: dd.size().total(),
             };
-            eprintln!(
+            crate::log_info!(
                 "[sweep]   n={n}: steps {:.2}, {} nodes ({:.1?} elapsed)",
                 p.steps,
                 p.size,

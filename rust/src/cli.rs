@@ -762,6 +762,12 @@ fn serve_spec() -> ArgSpec {
         )
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
+        .opt(
+            "log-level",
+            "",
+            "log verbosity: error | warn | info | debug | trace",
+        )
+        .switch("log-json", "emit logs as JSON lines on stderr")
         .switch("no-xla", "do not load the XLA backend")
         .switch("dump-config", "print the effective config and exit")
 }
@@ -817,6 +823,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("tile-bytes").is_empty() {
         cfg.tile_bytes = a.usize("tile-bytes")?;
+    }
+    if !a.str("log-level").is_empty() {
+        cfg.log_level = a.str("log-level").to_string();
+    }
+    if a.flag("log-json") {
+        cfg.log_json = true;
     }
     if a.flag("no-xla") {
         cfg.enable_xla = false;

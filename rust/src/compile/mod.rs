@@ -593,7 +593,7 @@ impl ForestCompiler {
             }
             if trace_stats && (i + 1) % 25 == 0 {
                 if let Some(fc) = fused.as_ref() {
-                    eprintln!(
+                    crate::log_info!(
                         "[compile] tree {}: visits {} hits {} skips {} arena {}",
                         i + 1,
                         fc.visits,

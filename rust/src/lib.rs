@@ -201,6 +201,35 @@
 //! requests put what the JSON body would carry in the query string
 //! (`?backend=frozen&model=iris&steps=true`); responses are always the
 //! JSON documents described above, so clients mix formats freely.
+//!
+//! ## Observability: trace every request, scrape every series
+//!
+//! The serving stack is instrumented end to end by the std-only [`obs`]
+//! subsystem, with zero allocations on the hot path when tracing is off
+//! (enforced by the counting-allocator test):
+//!
+//! - **Request ids.** Every response carries an `X-Request-Id` header —
+//!   echoed verbatim when the client sent one, a generated 64-bit hex id
+//!   otherwise — on both front-ends, so a request is greppable across
+//!   client logs, server logs, and the trace ring.
+//! - **Per-stage timing.** Each request records monotonic spans for
+//!   `parse`, `admission`, `queue`, `eval`, `serialize`, and `write`
+//!   (plus sampled per-shard eval timings on sharded batches). Add
+//!   `"trace": true` to a JSON body (or `?trace=true` on binary
+//!   requests) and the response embeds the breakdown inline; the last
+//!   256 finished traces are always available from
+//!   `GET /debug/trace?n=32` via a lock-free ring.
+//! - **Prometheus exposition.** `GET /metrics` still serves the JSON
+//!   snapshot; `GET /metrics?format=prometheus` renders every series in
+//!   the text format — the log₂ latency histograms become proper
+//!   cumulative `le` buckets with `_sum`/`_count`, alongside counters
+//!   for bytes read/written, queue-depth gauges, and per-shard eval
+//!   timing summaries. `GET /healthz` reports liveness plus the
+//!   registered-model count for fleet readiness probes.
+//! - **Structured logs.** The `log_*!` macros emit leveled records to
+//!   stderr as text or JSON lines: `serve --log-level debug
+//!   --log-json`, overridable with the `FOREST_ADD_LOG` environment
+//!   variable (`error|warn|info|debug|trace`).
 
 pub mod add;
 pub mod batch;
@@ -215,6 +244,7 @@ pub mod feas;
 pub mod forest;
 pub mod frozen;
 pub mod net;
+pub mod obs;
 pub mod predicate;
 pub mod runtime;
 pub mod serve;

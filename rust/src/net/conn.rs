@@ -9,6 +9,7 @@
 //! pipelined bytes already buffered in the parser are served next).
 
 use crate::net::proto::{RequestParser, Response};
+use crate::obs::trace::ReqTrace;
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
@@ -48,9 +49,20 @@ pub struct Conn {
     pub peer_eof: bool,
     /// Keep-alive decision of the request currently in flight.
     pub keep_alive_pending: bool,
-    /// Dispatch time of the request in flight / being written — cleared
-    /// by the loop when it records end-to-end latency after the flush.
-    pub served_t0: Option<Instant>,
+    /// Trace of the request in flight / being written: the loop stamps
+    /// the write span and commits it to the trace ring after the flush.
+    pub pending_trace: Option<ReqTrace>,
+    /// Whether the pending response counts into the served-latency
+    /// histogram (handler-completed requests; not sheds or 400s).
+    pub pending_served: bool,
+    /// Status of the pending response (stamped by
+    /// [`Conn::queue_response`]; the trace commits with it).
+    pub pending_status: u16,
+    /// Lifetime bytes drained from this socket (the loop reports deltas
+    /// to its observer after each [`Conn::fill`]).
+    pub bytes_read: u64,
+    /// Lifetime bytes flushed to this socket (delta-reported likewise).
+    pub bytes_written: u64,
     /// Last socket activity (idle-timeout sweeps compare against this).
     pub last_activity: Instant,
     write_buf: Vec<u8>,
@@ -67,7 +79,11 @@ impl Conn {
             close_after_write: false,
             peer_eof: false,
             keep_alive_pending: true,
-            served_t0: None,
+            pending_trace: None,
+            pending_served: false,
+            pending_status: 200,
+            bytes_read: 0,
+            bytes_written: 0,
             last_activity: Instant::now(),
             write_buf: Vec::new(),
             written: 0,
@@ -87,6 +103,7 @@ impl Conn {
                 }
                 Ok(n) => {
                     self.parser.push(&buf[..n]);
+                    self.bytes_read += n as u64;
                     self.last_activity = Instant::now();
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(ReadOutcome::Open),
@@ -101,6 +118,7 @@ impl Conn {
         self.write_buf = resp.to_bytes(keep_alive);
         self.written = 0;
         self.close_after_write = !keep_alive;
+        self.pending_status = resp.status;
         self.state = ConnState::Writing;
     }
 
@@ -117,6 +135,7 @@ impl Conn {
                 }
                 Ok(n) => {
                     self.written += n;
+                    self.bytes_written += n as u64;
                     self.last_activity = Instant::now();
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
@@ -179,6 +198,8 @@ mod tests {
         };
         assert_eq!(req.body, b"hi");
         assert!(req.keep_alive);
+        let wire_len = "POST /classify HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi".len();
+        assert_eq!(conn.bytes_read, wire_len as u64, "every wire byte counted");
 
         let resp = Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]));
         conn.queue_response(&resp, true);
@@ -186,6 +207,7 @@ mod tests {
         assert!(conn.has_pending_write());
         assert!(conn.flush().unwrap(), "small response flushes at once");
         assert!(!conn.has_pending_write());
+        assert_eq!(conn.bytes_written, resp.to_bytes(true).len() as u64);
 
         client
             .set_read_timeout(Some(Duration::from_secs(5)))

@@ -19,6 +19,7 @@ use crate::net::conn::{Conn, ConnState};
 use crate::net::poll::{Event, Poller};
 use crate::net::proto::{Request, Response};
 use crate::net::LoopObserver;
+use crate::obs::trace::{ReqTrace, Stage};
 use std::collections::HashMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener};
@@ -38,14 +39,16 @@ const TOK_WAKER: u64 = 1;
 const TOK_FIRST_CONN: u64 = 2;
 
 /// The transport-independent request handler (the serving layer's
-/// `respond`, closed over its router).
-pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+/// `respond`, closed over its router). The trace rides along so the
+/// handler can stamp its eval/serialize spans and honour inline-trace
+/// requests.
+pub type Handler = Arc<dyn Fn(&Request, &mut ReqTrace) -> Response + Send + Sync>;
 
-/// A dispatched request: connection token, request, parse-complete time.
-type Job = (u64, Request, Instant);
+/// A dispatched request: connection token, request, its trace.
+type Job = (u64, Request, ReqTrace);
 
 /// A finished request travelling back to the loop.
-type Completion = (u64, Response, Instant);
+type Completion = (u64, Response, ReqTrace);
 
 /// Event-loop policy.
 #[derive(Debug, Clone)]
@@ -146,15 +149,18 @@ pub fn start(
         let handler = handler.clone();
         let completions = completions.clone();
         let waker = waker.clone();
+        let observer = observer.clone();
         workers.push(
             std::thread::Builder::new()
                 .name(format!("net-worker-{w}"))
                 .spawn(move || loop {
                     let job = rx.lock().unwrap().recv();
                     match job {
-                        Ok((token, req, t0)) => {
-                            let resp = handler(&req);
-                            completions.lock().unwrap().push((token, resp, t0));
+                        Ok((token, req, mut trace)) => {
+                            observer.dispatch_dequeued();
+                            trace.record(Stage::Queue);
+                            let resp = handler(&req, &mut trace);
+                            completions.lock().unwrap().push((token, resp, trace));
                             waker.wake();
                         }
                         Err(_) => return, // loop gone, queue drained
@@ -263,16 +269,21 @@ impl Loop {
 
     fn conn_ready(&mut self, token: u64, readable: bool, writable: bool) {
         if writable {
-            let flushed = {
+            let (flushed, wrote) = {
                 let Some(conn) = self.conns.get_mut(&token) else {
                     return;
                 };
-                if conn.state == ConnState::Writing {
+                let before = conn.bytes_written;
+                let r = if conn.state == ConnState::Writing {
                     conn.flush()
                 } else {
                     Ok(false)
-                }
+                };
+                (r, conn.bytes_written - before)
             };
+            if wrote > 0 {
+                self.observer.bytes_written(wrote);
+            }
             match flushed {
                 Ok(true) => {
                     if self.after_flush(token) {
@@ -287,15 +298,20 @@ impl Loop {
             }
         }
         if readable {
-            let filled = {
+            let (filled, read) = {
                 let Some(conn) = self.conns.get_mut(&token) else {
                     return;
                 };
                 if conn.state != ConnState::Reading {
                     return; // bytes wait in the socket until this request is served
                 }
-                conn.fill()
+                let before = conn.bytes_read;
+                let r = conn.fill();
+                (r, conn.bytes_read - before)
             };
+            if read > 0 {
+                self.observer.bytes_read(read);
+            }
             match filled {
                 Ok(_) => self.advance(token),
                 Err(_) => self.close(token),
@@ -307,6 +323,9 @@ impl Loop {
     /// request, a partial request, or a pending partial write.
     fn advance(&mut self, token: u64) {
         loop {
+            // trace origin: the start of the *completing* parse call —
+            // socket wait between fills never counts against a request
+            let t_parse = Instant::now();
             let parsed = {
                 let Some(conn) = self.conns.get_mut(&token) else {
                     return;
@@ -319,12 +338,20 @@ impl Loop {
             match parsed {
                 Ok(Some(req)) => {
                     let keep = req.keep_alive;
-                    let t0 = Instant::now();
+                    let id = req
+                        .request_id
+                        .as_deref()
+                        .map(crate::obs::trace::id_from_header)
+                        .unwrap_or_else(crate::obs::trace::next_id);
+                    let mut trace = ReqTrace::new_at(id, t_parse);
+                    trace.record(Stage::Parse);
                     if let Some(conn) = self.conns.get_mut(&token) {
                         conn.keep_alive_pending = keep;
                     }
-                    match self.dispatch_tx.try_send((token, req, t0)) {
+                    trace.record(Stage::Admission);
+                    match self.dispatch_tx.try_send((token, req, trace)) {
                         Ok(()) => {
+                            self.observer.dispatch_enqueued();
                             if let Some(conn) = self.conns.get_mut(&token) {
                                 conn.state = ConnState::InFlight;
                             }
@@ -333,14 +360,18 @@ impl Loop {
                             self.set_interest(token, false, false);
                             return;
                         }
-                        Err(TrySendError::Full(_)) => {
+                        Err(TrySendError::Full((_, req, trace))) => {
                             // admission control: shed instead of queueing
                             self.observer.request_rejected();
-                            let resp = Response::overloaded(
+                            let mut resp = Response::overloaded(
                                 self.cfg.retry_after_s,
                                 "server overloaded: dispatch queue full — retry shortly",
                             );
-                            if !self.send_response(token, &resp, keep, None) {
+                            resp.request_id = Some(
+                                req.request_id
+                                    .unwrap_or_else(|| format!("{:016x}", trace.id)),
+                            );
+                            if !self.send_response(token, &resp, keep, Some(trace), false) {
                                 return;
                             }
                             // flushed in full and still keep-alive: a
@@ -366,7 +397,13 @@ impl Loop {
                 }
                 Err(e) => {
                     // malformed stream: error out and hang up
-                    self.send_response(token, &Response::error(400, e.to_string()), false, None);
+                    self.send_response(
+                        token,
+                        &Response::error(400, e.to_string()),
+                        false,
+                        None,
+                        false,
+                    );
                     return;
                 }
             }
@@ -375,24 +412,33 @@ impl Loop {
 
     /// Queue a response and flush optimistically. Returns true when it
     /// was fully flushed and the connection is back in `Reading`.
+    /// `count_served` gates the latency observation (handler-completed
+    /// requests only — sheds and protocol errors are counted separately).
     fn send_response(
         &mut self,
         token: u64,
         resp: &Response,
         keep_alive: bool,
-        served_t0: Option<Instant>,
+        trace: Option<ReqTrace>,
+        count_served: bool,
     ) -> bool {
-        let flushed = {
+        let (flushed, wrote) = {
             let Some(conn) = self.conns.get_mut(&token) else {
                 return false;
             };
-            conn.served_t0 = served_t0;
+            conn.pending_trace = trace;
+            conn.pending_served = count_served;
             // error responses hang up (the seed server's behaviour): the
             // client re-establishes state instead of guessing stream health
             let keep = keep_alive && !conn.peer_eof && resp.status < 400;
             conn.queue_response(resp, keep);
-            conn.flush()
+            let before = conn.bytes_written;
+            let r = conn.flush();
+            (r, conn.bytes_written - before)
         };
+        if wrote > 0 {
+            self.observer.bytes_written(wrote);
+        }
         match flushed {
             Ok(true) => self.after_flush(token),
             Ok(false) => {
@@ -406,19 +452,30 @@ impl Loop {
         }
     }
 
-    /// Bookkeeping once a response is fully out: record end-to-end
-    /// latency, then close or rearm for reading. Returns true when the
-    /// connection is readable again.
+    /// Bookkeeping once a response is fully out: stamp the write span,
+    /// commit the trace to the ring, record end-to-end latency, then
+    /// close or rearm for reading. Returns true when the connection is
+    /// readable again.
     fn after_flush(&mut self, token: u64) -> bool {
-        let (close, t0) = {
+        let (close, trace, count, status) = {
             let Some(conn) = self.conns.get_mut(&token) else {
                 return false;
             };
             conn.state = ConnState::Reading;
-            (conn.close_after_write, conn.served_t0.take())
+            (
+                conn.close_after_write,
+                conn.pending_trace.take(),
+                conn.pending_served,
+                conn.pending_status,
+            )
         };
-        if let Some(t0) = t0 {
-            self.observer.request_served(t0.elapsed());
+        if let Some(mut trace) = trace {
+            trace.record(Stage::Write);
+            let total_us = trace.commit(status);
+            if count {
+                self.observer
+                    .request_served(Duration::from_micros(total_us));
+            }
         }
         if close {
             self.close(token);
@@ -430,12 +487,12 @@ impl Loop {
 
     fn drain_completions(&mut self) {
         let done: Vec<Completion> = std::mem::take(&mut *self.completions.lock().unwrap());
-        for (token, resp, t0) in done {
+        for (token, resp, trace) in done {
             let keep = match self.conns.get(&token) {
                 Some(conn) => conn.keep_alive_pending,
                 None => continue, // client vanished mid-flight
             };
-            if self.send_response(token, &resp, keep, Some(t0)) {
+            if self.send_response(token, &resp, keep, Some(trace), true) {
                 self.advance(token);
             }
         }
@@ -460,6 +517,7 @@ impl Loop {
                     &Response::error(408, "request read timed out"),
                     false,
                     None,
+                    false,
                 );
             }
             // idle-at-boundary (or still-unflushed 408): close silently
@@ -570,7 +628,7 @@ mod tests {
     }
 
     fn echo_handler() -> Handler {
-        Arc::new(|req: &Request| {
+        Arc::new(|req: &Request, _trace: &mut ReqTrace| {
             Response::json(
                 200,
                 &json::obj(vec![
@@ -658,7 +716,7 @@ mod tests {
         let handler: Handler = {
             let gate = gate.clone();
             let entered = entered.clone();
-            Arc::new(move |_req: &Request| {
+            Arc::new(move |_req: &Request, _trace: &mut ReqTrace| {
                 entered.fetch_add(1, Ordering::SeqCst);
                 while gate.load(Ordering::SeqCst) {
                     std::thread::sleep(Duration::from_millis(2));
@@ -697,6 +755,10 @@ mod tests {
         let (status, head, body) = read_response(&mut c);
         assert_eq!(status, 429, "head: {head}");
         assert!(head.contains("Retry-After: 1"), "{head}");
+        assert!(
+            head.contains("X-Request-Id: "),
+            "sheds still carry a request id: {head}"
+        );
         assert!(String::from_utf8_lossy(&body).contains("overloaded"));
         assert_eq!(observer.rejected.load(Ordering::Relaxed), 1);
 

@@ -45,10 +45,18 @@ pub trait LoopObserver: Send + Sync {
     /// A connection was closed (any cause: EOF, error, idle timeout).
     fn conn_closed(&self) {}
     /// One request was fully served (response flushed to the socket);
-    /// `latency` spans parse-complete → last byte written.
+    /// `latency` spans parse-start → last byte written.
     fn request_served(&self, _latency: std::time::Duration) {}
     /// One request was shed with `429` by admission control.
     fn request_rejected(&self) {}
+    /// A request entered the bounded dispatch queue.
+    fn dispatch_enqueued(&self) {}
+    /// A worker pulled a request off the dispatch queue.
+    fn dispatch_dequeued(&self) {}
+    /// `n` bytes were read from a client socket.
+    fn bytes_read(&self, _n: u64) {}
+    /// `n` bytes were written to a client socket.
+    fn bytes_written(&self, _n: u64) {}
 }
 
 /// A no-op observer for tests and benches.

@@ -57,6 +57,9 @@ pub struct Request {
     pub keep_alive: bool,
     /// Request body (exactly `Content-Length` bytes).
     pub body: Vec<u8>,
+    /// Client-supplied `X-Request-Id` header, verbatim (None when
+    /// absent — the server then mints one for the trace).
+    pub request_id: Option<String>,
 }
 
 impl Request {
@@ -85,6 +88,7 @@ struct Head {
     content_type: String,
     keep_alive: bool,
     content_length: usize,
+    request_id: Option<String>,
     /// Bytes consumed by the head, including the `\r\n\r\n` terminator.
     head_len: usize,
 }
@@ -149,6 +153,7 @@ impl RequestParser {
             content_type: head.content_type,
             keep_alive: head.keep_alive,
             body,
+            request_id: head.request_id,
         }))
     }
 }
@@ -191,6 +196,7 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
     let mut content_length = 0usize;
     let mut content_type = String::new();
     let mut connection = String::new();
+    let mut request_id = None;
     for line in lines {
         let Some((k, v)) = line.split_once(':') else {
             continue;
@@ -210,6 +216,8 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
                 .to_ascii_lowercase();
         } else if k.eq_ignore_ascii_case("connection") {
             connection = v.to_ascii_lowercase();
+        } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
+            request_id = Some(v.to_string());
         }
     }
     if content_length > MAX_BODY {
@@ -229,6 +237,7 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
         content_type,
         keep_alive,
         content_length,
+        request_id,
         head_len,
     })
 }
@@ -303,6 +312,10 @@ pub struct Response {
     pub content_type: &'static str,
     /// `Retry-After` header in seconds (the `429` backpressure contract).
     pub retry_after_s: Option<u32>,
+    /// `X-Request-Id` header value: the client's id echoed verbatim, or
+    /// the server-minted trace id. Lives in the head only — bodies stay
+    /// bit-identical across front-ends and request ids.
+    pub request_id: Option<String>,
 }
 
 impl Response {
@@ -313,6 +326,7 @@ impl Response {
             body: body.to_string_compact().into_bytes(),
             content_type: "application/json",
             retry_after_s: None,
+            request_id: None,
         }
     }
 
@@ -354,6 +368,9 @@ impl Response {
         );
         if let Some(s) = self.retry_after_s {
             head.push_str(&format!("Retry-After: {s}\r\n"));
+        }
+        if let Some(id) = &self.request_id {
+            head.push_str(&format!("X-Request-Id: {id}\r\n"));
         }
         head.push_str(if keep_alive {
             "Connection: keep-alive\r\n\r\n"
@@ -524,6 +541,28 @@ mod tests {
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"));
         let text = String::from_utf8(r.to_bytes(false)).unwrap();
         assert!(text.contains("Connection: close\r\n"));
+    }
+
+    #[test]
+    fn request_id_header_is_captured_verbatim() {
+        let mut p = RequestParser::new();
+        push_str(
+            &mut p,
+            "GET /healthz HTTP/1.1\r\nX-Request-ID: Abc-123\r\n\r\nGET /healthz HTTP/1.1\r\n\r\n",
+        );
+        let with_id = p.try_next().unwrap().unwrap();
+        assert_eq!(with_id.request_id.as_deref(), Some("Abc-123"));
+        let without = p.try_next().unwrap().unwrap();
+        assert_eq!(without.request_id, None);
+    }
+
+    #[test]
+    fn response_echoes_request_id_in_head_only() {
+        let mut r = Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]));
+        r.request_id = Some("deadbeef00000001".to_string());
+        let text = String::from_utf8(r.to_bytes(true)).unwrap();
+        assert!(text.contains("X-Request-Id: deadbeef00000001\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "body untouched");
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Leveled structured logger — text or JSON lines on stderr.
+//!
+//! Std-only stand-in for the `log`/`env_logger` pairing (crates.io is
+//! unreachable in the build environment). One process-global level gate
+//! and format switch, initialised by [`init`] from `serve --log-level` /
+//! `--log-json`; the `FOREST_ADD_LOG` environment variable overrides the
+//! configured level when set to a valid name, `RUST_LOG`-style. Records
+//! carry elapsed-time stamps and the emitting module path; JSON mode
+//! emits one object per line so fleet log shippers ingest without a
+//! parser. The `log_*!` macros (exported at the crate root, expanding
+//! through the [`crate::util::logging`] shim) are the intended call
+//! sites.
+
+use crate::error::{Error, Result};
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    /// Parse a level name as used by `--log-level` and `FOREST_ADD_LOG`.
+    pub fn parse(s: &str) -> Result<Level> {
+        match s {
+            "error" => Ok(Level::Error),
+            "warn" => Ok(Level::Warn),
+            "info" => Ok(Level::Info),
+            "debug" => Ok(Level::Debug),
+            "trace" => Ok(Level::Trace),
+            _ => Err(Error::invalid(format!(
+                "unknown log level {s:?} (expected error|warn|info|debug|trace)"
+            ))),
+        }
+    }
+
+    /// The lowercase level name (`"info"`, …).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    fn from_env() -> Option<Level> {
+        std::env::var("FOREST_ADD_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s).ok())
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static JSON_LINES: AtomicBool = AtomicBool::new(false);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Install the configured level and output format (`serve` startup).
+/// The `FOREST_ADD_LOG` environment override wins over `level` when set
+/// to a valid name.
+pub fn init(level: Level, json: bool) {
+    set_max_level(Level::from_env().unwrap_or(level));
+    JSON_LINES.store(json, Ordering::Relaxed);
+}
+
+/// Current max level, lazily initialised from the environment.
+pub fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = Level::from_env().unwrap_or(Level::Info);
+        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+        lvl
+    } else {
+        match raw {
+            0 => Level::Error,
+            1 => Level::Warn,
+            2 => Level::Info,
+            3 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// Override the level programmatically (tests, `--quiet`).
+pub fn set_max_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True when `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Render one text record (pure, so the format is unit-testable).
+fn render_text(t_s: f64, level: Level, target: &str, msg: &str) -> String {
+    format!("[{:>8.3}s {} {}] {}", t_s, level.tag(), target, msg)
+}
+
+/// Render one JSON-lines record (pure; the escaping is the unit under
+/// test).
+fn render_json(t_s: f64, level: Level, target: &str, msg: &str) -> String {
+    let mut out = String::with_capacity(msg.len() + target.len() + 48);
+    out.push_str(&format!("{{\"t_s\":{t_s:.3},\"level\":\""));
+    out.push_str(level.name());
+    out.push_str("\",\"target\":\"");
+    escape_json_into(&mut out, target);
+    out.push_str("\",\"msg\":\"");
+    escape_json_into(&mut out, msg);
+    out.push_str("\"}");
+    out
+}
+
+fn escape_json_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+}
+
+/// Emit a record (used via the `log_*!` macros).
+pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t_s = start.elapsed().as_secs_f64();
+    let line = if JSON_LINES.load(Ordering::Relaxed) {
+        render_json(t_s, level, target, &msg.to_string())
+    } else {
+        render_text(t_s, level, target, &msg.to_string())
+    };
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "{line}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn parse_accepts_every_name_and_rejects_junk() {
+        for (name, want) in [
+            ("error", Level::Error),
+            ("warn", Level::Warn),
+            ("info", Level::Info),
+            ("debug", Level::Debug),
+            ("trace", Level::Trace),
+        ] {
+            assert_eq!(Level::parse(name).unwrap(), want);
+            assert_eq!(want.name(), name);
+        }
+        assert!(Level::parse("verbose").is_err());
+        assert!(Level::parse("").is_err());
+    }
+
+    #[test]
+    fn text_record_format_is_stable() {
+        let line = render_text(1.5, Level::Warn, "forest_add::serve", "queue full");
+        assert_eq!(line, "[   1.500s WARN  forest_add::serve] queue full");
+    }
+
+    #[test]
+    fn json_record_escapes_and_parses() {
+        let line = render_json(0.25, Level::Info, "a::b", "say \"hi\"\nback\\slash");
+        let v = crate::util::json::Json::parse(&line).unwrap();
+        assert_eq!(v.get_str("level"), Some("info"));
+        assert_eq!(v.get_str("target"), Some("a::b"));
+        assert_eq!(v.get_str("msg"), Some("say \"hi\"\nback\\slash"));
+        assert!((v.get("t_s").unwrap().as_f64().unwrap() - 0.25).abs() < 1e-9);
+    }
+
+    /// Global-state checks live in one test so they cannot race each
+    /// other across the parallel test harness.
+    #[test]
+    fn global_level_gates_and_macros() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Error);
+        crate::log_info!("hidden {}", 1);
+        crate::log_error!("shown {}", 2);
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

@@ -1,0 +1,25 @@
+//! Observability: structured logging, per-request tracing, and
+//! Prometheus exposition for the serving stack.
+//!
+//! Three std-only pieces, threaded through both socket front-ends:
+//!
+//! - [`log`] — the leveled text/JSON-lines logger behind the crate's
+//!   `log_*!` macros (`serve --log-level` / `--log-json`, with an
+//!   `FOREST_ADD_LOG` environment override that always wins);
+//! - [`trace`] — 64-bit request ids (accepted or generated as
+//!   `X-Request-Id` and echoed on every response), monotonic per-stage
+//!   spans recorded into a lock-free last-N ring (`GET /debug/trace?n=`,
+//!   inline via the `"trace": true` request field), plus the global
+//!   per-shard evaluation timing table fed by the worker pool;
+//! - [`prom`] — Prometheus text-format rendering used by
+//!   `GET /metrics?format=prometheus`.
+//!
+//! Layering: `obs` depends only on `util` and std; `net` may depend on
+//! `obs`; `serve` depends on both. Everything on the request hot path
+//! (stage recording, ring commits, shard timing) is fixed-size atomics
+//! and arrays — zero allocations, enforced by the counting-allocator
+//! test alongside the frozen sweep guarantees.
+
+pub mod log;
+pub mod prom;
+pub mod trace;

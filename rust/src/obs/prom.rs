@@ -1,0 +1,208 @@
+//! Prometheus text-format (version 0.0.4) rendering.
+//!
+//! A small, serve-agnostic text builder: callers stream `# HELP`/
+//! `# TYPE` headers and samples through a [`PromWriter`] and take the
+//! finished body. The one domain-aware piece is
+//! [`PromWriter::log2_histogram`], which renders the crate's log₂
+//! microsecond buckets (`bucket i` holds values in `[2^i, 2^(i+1)-1]`)
+//! as proper cumulative `le` buckets: the upper bound of bucket `i` is
+//! `2^(i+1)-1`, the final (overflow) bucket folds into `+Inf`, and
+//! `_sum`/`_count` ride along, so `histogram_quantile()` works
+//! server-side exactly as the JSON quantiles do in-process.
+
+/// Incremental Prometheus text-format builder.
+#[derive(Debug)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl Default for PromWriter {
+    fn default() -> Self {
+        PromWriter::new()
+    }
+}
+
+impl PromWriter {
+    /// An empty exposition body.
+    pub fn new() -> PromWriter {
+        PromWriter {
+            out: String::with_capacity(4096),
+        }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` header for a metric family. Call
+    /// once per family, before its samples.
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    /// Emit one sample line: `name{labels} value`.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                escape_label_into(&mut self.out, v);
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// Header + single unlabelled sample for a counter.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        self.header(name, "counter", help);
+        self.sample(name, &[], value as f64);
+    }
+
+    /// Header + single unlabelled sample for a gauge.
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.header(name, "gauge", help);
+        self.sample(name, &[], value);
+    }
+
+    /// Render one log₂-bucketed histogram series (`buckets[i]` counts
+    /// values in `[2^i, 2^(i+1)-1]`; the last bucket is the overflow
+    /// tail) as cumulative `_bucket{le=…}` samples plus `_sum`/`_count`.
+    /// The `# TYPE … histogram` header is the caller's (one per family,
+    /// shared across label sets).
+    pub fn log2_histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        buckets: &[u64],
+        count: u64,
+        sum: u64,
+    ) {
+        let bucket_name = format!("{name}_bucket");
+        let n_finite = buckets.len().saturating_sub(1).min(63);
+        let les: Vec<String> = (0..n_finite)
+            .map(|i| format!("{}", (1u64 << (i + 1)) - 1))
+            .collect();
+        let mut cumulative = 0u64;
+        for (i, &b) in buckets.iter().take(n_finite).enumerate() {
+            cumulative += b;
+            let mut with_le = labels.to_vec();
+            with_le.push(("le", les[i].as_str()));
+            self.sample(&bucket_name, &with_le, cumulative as f64);
+        }
+        let mut with_le = labels.to_vec();
+        with_le.push(("le", "+Inf"));
+        self.sample(&bucket_name, &with_le, count as f64);
+        self.sample(&format!("{name}_sum"), labels, sum as f64);
+        self.sample(&format!("{name}_count"), labels, count as f64);
+    }
+
+    /// The finished exposition body.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Integer-exact rendering for whole values, shortest float otherwise.
+fn fmt_value(v: f64) -> String {
+    if v.is_finite() && v == v.trunc() && v.abs() < 9_007_199_254_740_992.0 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_label_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_render_exact_lines() {
+        let mut w = PromWriter::new();
+        w.counter("forest_requests_total", "requests served", 42);
+        w.gauge("forest_uptime_seconds", "uptime", 1.5);
+        let body = w.finish();
+        assert!(body.contains("# HELP forest_requests_total requests served\n"));
+        assert!(body.contains("# TYPE forest_requests_total counter\n"));
+        assert!(body.contains("\nforest_requests_total 42\n"));
+        assert!(body.contains("# TYPE forest_uptime_seconds gauge\n"));
+        assert!(body.contains("forest_uptime_seconds 1.5\n"));
+    }
+
+    #[test]
+    fn labels_render_and_escape() {
+        let mut w = PromWriter::new();
+        w.sample(
+            "m",
+            &[("backend", "dd"), ("weird", "a\"b\\c\nd")],
+            3.0,
+        );
+        assert_eq!(
+            w.finish(),
+            "m{backend=\"dd\",weird=\"a\\\"b\\\\c\\nd\"} 3\n"
+        );
+    }
+
+    #[test]
+    fn log2_histogram_is_cumulative_with_power_of_two_bounds() {
+        // 4 finite buckets + overflow tail: [1,2), [2,4), [4,8), [8,16), [16,inf)
+        let buckets = [3u64, 1, 0, 2, 5];
+        let count = 11u64;
+        let mut w = PromWriter::new();
+        w.header("lat_us", "histogram", "latency");
+        w.log2_histogram("lat_us", &[], &buckets, count, 999);
+        let body = w.finish();
+        assert!(body.contains("lat_us_bucket{le=\"1\"} 3\n"));
+        assert!(body.contains("lat_us_bucket{le=\"3\"} 4\n"));
+        assert!(body.contains("lat_us_bucket{le=\"7\"} 4\n"));
+        assert!(body.contains("lat_us_bucket{le=\"15\"} 6\n"));
+        assert!(body.contains("lat_us_bucket{le=\"+Inf\"} 11\n"));
+        assert!(body.contains("lat_us_sum 999\n"));
+        assert!(body.contains("lat_us_count 11\n"));
+        // +Inf (count) dominates every finite bucket: monotone
+        let finite_max = 6.0;
+        assert!(count as f64 >= finite_max);
+    }
+
+    #[test]
+    fn labelled_histogram_keeps_base_labels_on_every_sample() {
+        let mut w = PromWriter::new();
+        w.log2_histogram("b_us", &[("backend", "frozen")], &[1, 1], 2, 3);
+        let body = w.finish();
+        assert!(body.contains("b_us_bucket{backend=\"frozen\",le=\"1\"} 1\n"));
+        assert!(body.contains("b_us_bucket{backend=\"frozen\",le=\"+Inf\"} 2\n"));
+        assert!(body.contains("b_us_sum{backend=\"frozen\"} 3\n"));
+        assert!(body.contains("b_us_count{backend=\"frozen\"} 2\n"));
+    }
+
+    #[test]
+    fn value_formatting_prefers_integers() {
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(42.0), "42");
+        assert_eq!(fmt_value(0.25), "0.25");
+    }
+}

@@ -239,10 +239,17 @@ where
         .enumerate()
         .map(|(i, out_chunk)| {
             let shard = rows.slice(i * chunk, out_chunk.len());
-            let job: ScopedJob<'_> = Box::new(move || body(shard, out_chunk));
+            let job: ScopedJob<'_> = Box::new(move || {
+                // Per-shard wall-clock lands in the process-wide shard
+                // table (atomics only — the sweep itself stays alloc-free).
+                let t0 = std::time::Instant::now();
+                body(shard, out_chunk);
+                crate::obs::trace::record_shard(i, t0.elapsed().as_micros() as u64);
+            });
             job
         })
         .collect();
+    crate::obs::trace::note_shard_run(jobs.len());
     global().run_scoped(jobs);
     true
 }
@@ -275,10 +282,15 @@ where
         .enumerate()
         .map(|(i, (chunk_a, chunk_b))| {
             let shard = rows.slice(i * chunk, chunk_a.len());
-            let job: ScopedJob<'_> = Box::new(move || body(shard, chunk_a, chunk_b));
+            let job: ScopedJob<'_> = Box::new(move || {
+                let t0 = std::time::Instant::now();
+                body(shard, chunk_a, chunk_b);
+                crate::obs::trace::record_shard(i, t0.elapsed().as_micros() as u64);
+            });
             job
         })
         .collect();
+    crate::obs::trace::note_shard_run(jobs.len());
     global().run_scoped(jobs);
     true
 }

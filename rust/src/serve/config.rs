@@ -123,6 +123,11 @@ pub struct ServeConfig {
     pub variant: String,
     /// Load the XLA backend at startup.
     pub enable_xla: bool,
+    /// Minimum log level emitted to stderr (`error` | `warn` | `info` |
+    /// `debug` | `trace`). The `FOREST_ADD_LOG` env var overrides.
+    pub log_level: String,
+    /// Emit log records as JSON lines instead of human-readable text.
+    pub log_json: bool,
 }
 
 impl Default for ServeConfig {
@@ -149,6 +154,8 @@ impl Default for ServeConfig {
             artifacts_dir: "artifacts".into(),
             variant: "base".into(),
             enable_xla: true,
+            log_level: "info".into(),
+            log_json: false,
         }
     }
 }
@@ -220,6 +227,12 @@ impl ServeConfig {
         if let Some(b) = v.get("enable_xla").and_then(Json::as_bool) {
             cfg.enable_xla = b;
         }
+        if let Some(s) = v.get_str("log_level") {
+            cfg.log_level = s.to_string();
+        }
+        if let Some(b) = v.get("log_json").and_then(Json::as_bool) {
+            cfg.log_json = b;
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -280,6 +293,7 @@ impl ServeConfig {
                 "tile_bytes must be at most 1 GiB (0 = auto)",
             ));
         }
+        crate::obs::log::Level::parse(&self.log_level)?;
         Ok(())
     }
 
@@ -325,6 +339,8 @@ impl ServeConfig {
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
             ("variant", json::s(self.variant.clone())),
             ("enable_xla", Json::Bool(self.enable_xla)),
+            ("log_level", json::s(self.log_level.clone())),
+            ("log_json", Json::Bool(self.log_json)),
         ])
     }
 }
@@ -352,6 +368,8 @@ mod tests {
             read_timeout_ms: 750,
             batch_queue_cap: 32,
             dispatch_cap: 48,
+            log_level: "debug".into(),
+            log_json: true,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -367,6 +385,8 @@ mod tests {
         assert_eq!(back.read_timeout_ms, 750);
         assert_eq!(back.batch_queue_cap, 32);
         assert_eq!(back.dispatch_cap, 48);
+        assert_eq!(back.log_level, "debug");
+        assert!(back.log_json);
     }
 
     #[test]
@@ -443,6 +463,9 @@ mod tests {
             ServeConfig::from_json(&Json::parse(r#"{"dispatch_cap": -1}"#).unwrap()).is_err()
         );
         assert!(ServeConfig::from_json(&Json::parse(r#"{"io_mode": "tokio"}"#).unwrap()).is_err());
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"log_level": "loud"}"#).unwrap()).is_err()
+        );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"default_backend": "gpu"}"#).unwrap())
                 .is_err()

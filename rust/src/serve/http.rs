@@ -8,10 +8,14 @@
 //! makes the two modes bit-identical on the wire.
 //!
 //! Endpoints:
-//! - `GET  /healthz`          → `{"ok": true}`
+//! - `GET  /healthz`          → `{"ok": true, "models": n}` (readiness:
+//!   the registry is booted and serving `n` models)
 //! - `GET  /metrics`          → server metrics snapshot (end-to-end
 //!   latency quantiles, connection gauges, `429` shed count, per-backend
-//!   histograms)
+//!   histograms); `?format=prometheus` renders the same series in
+//!   Prometheus text format
+//! - `GET  /debug/trace?n=`   → the last `n` committed request traces
+//!   (id, status, per-stage spans) from the in-process trace ring
 //! - `GET  /model`            → default-model description (per-backend info)
 //! - `GET  /models`           → all registered models (name, version, backends,
 //!   `source` = artifact provenance for bundle-booted models)
@@ -32,6 +36,7 @@
 use crate::batch::RowMatrixBuf;
 use crate::error::{Error, Result};
 use crate::net::proto::{self, Request, RequestParser, Response};
+use crate::obs::trace::{self as obs_trace, ReqTrace, Stage, MAX_TRACE_SHARDS};
 use crate::serve::router::Router;
 use crate::serve::{BackendKind, ClassifyRequest};
 use crate::util::json::{self, Json};
@@ -44,18 +49,57 @@ use std::time::{Duration, Instant};
 const RETRY_AFTER_S: u32 = 1;
 
 /// Route one parsed request to its response — the single entry point
-/// shared by both front-ends.
-pub fn respond(req: &Request, router: &Arc<Router>) -> Response {
-    match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Response::json(200, &json::obj(vec![("ok", Json::Bool(true))])),
-        ("GET", "/metrics") => Response::json(200, &router.metrics().to_json()),
+/// shared by both front-ends. Stamps the trace's `eval`/`serialize`
+/// spans and echoes the request id (client's verbatim, server-minted
+/// hex otherwise) as `X-Request-Id` on every response.
+pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Response {
+    let mut resp = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            &json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "models",
+                    json::num(router.registry().list().len() as f64),
+                ),
+            ]),
+        ),
+        ("GET", "/metrics") => match req.param("format") {
+            Some("prometheus") => Response {
+                status: 200,
+                body: router.metrics().to_prometheus().into_bytes(),
+                content_type: "text/plain; version=0.0.4",
+                retry_after_s: None,
+                request_id: None,
+            },
+            Some(other) => {
+                Response::error(400, format!("unknown metrics format '{other}'"))
+            }
+            None => Response::json(200, &router.metrics().to_json()),
+        },
+        ("GET", "/debug/trace") => {
+            let n = req
+                .param("n")
+                .and_then(|v| v.parse::<usize>().ok())
+                .unwrap_or(32);
+            Response::json(200, &json::obj(vec![("traces", obs_trace::recent(n))]))
+        }
         ("GET", "/model") => into_response(model_info(router), router),
         ("GET", "/models") => Response::json(200, &model_list(router)),
-        ("POST", "/classify") => into_response(classify(req, router), router),
-        ("POST", "/classify_batch") => into_response(classify_batch(req, router), router),
+        ("POST", "/classify") => into_response(classify(req, router, trace), router),
+        ("POST", "/classify_batch") => {
+            into_response(classify_batch(req, router, trace), router)
+        }
         ("GET", _) | ("POST", _) => Response::error(404, format!("no such path {}", req.path)),
         _ => Response::error(405, "method not allowed"),
-    }
+    };
+    trace.record(Stage::Serialize);
+    resp.request_id = Some(
+        req.request_id
+            .clone()
+            .unwrap_or_else(|| format!("{:016x}", trace.id)),
+    );
+    resp
 }
 
 /// Map a handler result onto the wire contract: `Overloaded` is the
@@ -92,18 +136,33 @@ fn serve_blocking(mut stream: TcpStream, router: &Arc<Router>, read_timeout: Dur
         // serve every buffered request before touching the socket again
         // (pipelined requests never wait on a read)
         loop {
+            // trace origin: the completing parse call, like the evented
+            // front-end — socket wait never counts against a request
+            let t_parse = Instant::now();
             match parser.try_next() {
                 Ok(Some(req)) => {
-                    let t0 = Instant::now();
-                    let resp = respond(&req, router);
+                    let id = req
+                        .request_id
+                        .as_deref()
+                        .map(obs_trace::id_from_header)
+                        .unwrap_or_else(obs_trace::next_id);
+                    let mut trace = ReqTrace::new_at(id, t_parse);
+                    trace.record(Stage::Parse);
+                    let resp = respond(&req, router, &mut trace);
                     // error responses hang up (the seed server's
                     // behaviour) — matches the evented front-end
                     let keep = req.keep_alive && resp.status < 400;
-                    if stream.write_all(&resp.to_bytes(keep)).is_err() {
+                    let bytes = resp.to_bytes(keep);
+                    if stream.write_all(&bytes).is_err() {
                         return;
                     }
                     let _ = stream.flush();
-                    router.metrics().observe_request(t0.elapsed());
+                    router.metrics().add_bytes_written(bytes.len() as u64);
+                    trace.record(Stage::Write);
+                    let total_us = trace.commit(resp.status);
+                    router
+                        .metrics()
+                        .observe_request(Duration::from_micros(total_us));
                     if !keep {
                         return;
                     }
@@ -118,7 +177,10 @@ fn serve_blocking(mut stream: TcpStream, router: &Arc<Router>, read_timeout: Dur
         }
         match stream.read(&mut buf) {
             Ok(0) => return, // orderly EOF
-            Ok(n) => parser.push(&buf[..n]),
+            Ok(n) => {
+                parser.push(&buf[..n]);
+                router.metrics().add_bytes_read(n as u64);
+            }
             Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                 // read timeout: answer a stalled mid-request client with
                 // 408, close an idle-at-boundary connection silently
@@ -263,8 +325,19 @@ fn parse_row(v: &Json) -> Result<Vec<f32>> {
         .collect()
 }
 
-fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
+/// Whether the request opted into the inline trace breakdown
+/// (`"trace": true` body field or `?trace=true` query parameter).
+fn wants_trace(req: &Request, body: Option<&Json>) -> bool {
+    matches!(req.param("trace"), Some("true") | Some("1"))
+        || body
+            .and_then(|v| v.get("trace"))
+            .and_then(Json::as_bool)
+            .unwrap_or(false)
+}
+
+fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result<Json> {
     let (features, backend, model) = if req.is_binary() {
+        trace.inline = wants_trace(req, None);
         let batch = proto::decode_rows(&req.body)?;
         let m = batch.as_matrix();
         if m.n_rows() != 1 {
@@ -276,6 +349,7 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
         (m.row(0).to_vec(), backend_param(req)?, model_param(req))
     } else {
         let v = parse_body(&req.body)?;
+        trace.inline = wants_trace(req, Some(&v));
         (
             parse_row(
                 v.get("features")
@@ -290,7 +364,8 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
         backend,
         model,
     })?;
-    Ok(json::obj(vec![
+    trace.record(Stage::Eval);
+    let mut fields = vec![
         ("class", json::num(resp.class as f64)),
         ("label", json::s(resp.label)),
         ("backend", json::s(resp.backend.name())),
@@ -300,11 +375,18 @@ fn classify(req: &Request, router: &Arc<Router>) -> Result<Json> {
             resp.steps.map(|s| json::num(s as f64)).unwrap_or(Json::Null),
         ),
         ("latency_us", json::num(resp.latency_us as f64)),
-    ]))
+    ];
+    if trace.inline {
+        // serialize/write spans postdate the body — they land in the
+        // trace ring (/debug/trace), not in their own payload
+        fields.push(("trace", trace.breakdown_json()));
+    }
+    Ok(json::obj(fields))
 }
 
-fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
+fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result<Json> {
     let (batch, backend, model, want_steps) = if req.is_binary() {
+        trace.inline = wants_trace(req, None);
         // the binary fast path: the body deserialises straight into the
         // flat batch buffer, no JSON parser anywhere on the row path
         (
@@ -315,6 +397,7 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
         )
     } else {
         let v = parse_body(&req.body)?;
+        trace.inline = wants_trace(req, Some(&v));
         let rows = v
             .get("rows")
             .and_then(Json::as_arr)
@@ -354,6 +437,14 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
     };
     let (classes, steps, version) =
         router.classify_batch(batch.as_matrix(), backend, model.as_deref(), want_steps)?;
+    trace.record(Stage::Eval);
+    if trace.inline {
+        // best-effort sample of the most recent sharded pool run — only
+        // large batches shard, so this is often empty
+        let mut shard_us = [0u64; MAX_TRACE_SHARDS];
+        let n = obs_trace::sample_last_run(&mut shard_us);
+        trace.set_shards(&shard_us[..n]);
+    }
     let mut fields = vec![
         (
             "classes",
@@ -378,6 +469,9 @@ fn classify_batch(req: &Request, router: &Arc<Router>) -> Result<Json> {
                 None => Json::Null,
             },
         ));
+    }
+    if trace.inline {
+        fields.push(("trace", trace.breakdown_json()));
     }
     Ok(json::obj(fields))
 }
@@ -409,10 +503,27 @@ impl HttpClient {
         content_type: &str,
         body: &[u8],
     ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
-        let head = format!(
-            "{method} {path} HTTP/1.1\r\nHost: client\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n\r\n",
+        self.request_raw_with_headers(method, path, content_type, &[], body)
+    }
+
+    /// Like [`HttpClient::request_raw`] with extra request headers
+    /// (e.g. `X-Request-Id` for trace-propagation tests).
+    pub fn request_raw_with_headers(
+        &mut self,
+        method: &str,
+        path: &str,
+        content_type: &str,
+        extra_headers: &[(&str, &str)],
+        body: &[u8],
+    ) -> Result<(u16, Vec<(String, String)>, Vec<u8>)> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: client\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
             body.len()
         );
+        for (k, v) in extra_headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str("\r\n");
         let stream = self.reader.get_mut();
         stream.write_all(head.as_bytes())?;
         stream.write_all(body)?;

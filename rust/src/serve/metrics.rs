@@ -1,12 +1,15 @@
-//! Server metrics: lock-free counters and log₂ latency histograms.
+//! Server metrics: lock-free counters and log₂ latency histograms,
+//! exported as a JSON snapshot (`GET /metrics`) and in Prometheus text
+//! format (`GET /metrics?format=prometheus`).
 
+use crate::obs::prom::PromWriter;
 use crate::serve::BackendKind;
 use crate::util::json::{self, Json};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Number of log₂ microsecond buckets (`2^0 .. 2^N` µs, last = overflow).
-const BUCKETS: usize = 24;
+pub const BUCKETS: usize = 24;
 
 /// A latency histogram with power-of-two microsecond buckets.
 #[derive(Debug, Default)]
@@ -48,8 +51,10 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the q-th observation).
+    /// Approximate quantile from bucket boundaries: the upper bound of
+    /// the bucket containing the q-th observation, clamped to the
+    /// largest observed value so a quantile can never exceed anything
+    /// actually recorded (one 5000 µs sample reports 5000, not 8192).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -60,9 +65,30 @@ impl Histogram {
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return 1u64 << (i + 1);
+                return (1u64 << (i + 1)).min(self.max_us.load(Ordering::Relaxed));
             }
         }
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Raw bucket counts: bucket `i` holds values in `[2^i, 2^(i+1)-1]`
+    /// (0 and 1 both land in bucket 0); the last bucket is the overflow
+    /// tail.
+    pub fn bucket_counts(&self) -> [u64; BUCKETS] {
+        let mut out = [0u64; BUCKETS];
+        for (dst, src) in out.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Sum of all observed values (µs for duration series).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Largest observed value (µs for duration series).
+    pub fn max_us(&self) -> u64 {
         self.max_us.load(Ordering::Relaxed)
     }
 
@@ -134,6 +160,14 @@ pub struct ServerMetrics {
     /// Requests shed with `429` by admission control (full dispatch or
     /// batcher queue).
     pub rejected: AtomicU64,
+    /// Total bytes read from client sockets (both front-ends).
+    pub bytes_read_total: AtomicU64,
+    /// Total bytes written to client sockets (both front-ends).
+    pub bytes_written_total: AtomicU64,
+    /// Requests currently queued for the evented dispatch pool (gauge).
+    pub dispatch_queue_depth: AtomicU64,
+    /// Jobs currently queued for the dynamic batcher (gauge).
+    pub batch_queue_depth: AtomicU64,
     /// Front-end marker: 1 = evented, 0 = sync (set once at startup).
     io_evented: AtomicU64,
 }
@@ -157,6 +191,10 @@ impl Default for ServerMetrics {
             connections_open: AtomicU64::new(0),
             connections_total: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            bytes_read_total: AtomicU64::new(0),
+            bytes_written_total: AtomicU64::new(0),
+            dispatch_queue_depth: AtomicU64::new(0),
+            batch_queue_depth: AtomicU64::new(0),
             io_evented: AtomicU64::new(0),
         }
     }
@@ -228,6 +266,31 @@ impl ServerMetrics {
         self.io_evented.store(u64::from(evented), Ordering::Relaxed);
     }
 
+    /// Account bytes read from a client socket.
+    pub fn add_bytes_read(&self, n: u64) {
+        self.bytes_read_total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Account bytes written to a client socket.
+    pub fn add_bytes_written(&self, n: u64) {
+        self.bytes_written_total.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// A job entered the dynamic batcher queue.
+    pub fn batch_enqueued(&self) {
+        self.batch_queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `n` jobs left the dynamic batcher queue (saturating: a miscount
+    /// must not wrap the gauge).
+    pub fn batch_dequeued(&self, n: u64) {
+        let _ = self.batch_queue_depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(n)),
+        );
+    }
+
     /// Mean items per dispatched batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
@@ -283,9 +346,36 @@ impl ServerMetrics {
                     0.0
                 }),
             ),
+            (
+                "bytes",
+                json::obj(vec![
+                    (
+                        "read",
+                        json::num(self.bytes_read_total.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "written",
+                        json::num(self.bytes_written_total.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "queue_depth",
+                json::obj(vec![
+                    (
+                        "dispatch",
+                        json::num(self.dispatch_queue_depth.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "batch",
+                        json::num(self.batch_queue_depth.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
             ("mean_batch_size", json::num(self.mean_batch_size())),
             ("batch_size", self.batch_size.to_json_values()),
             ("batch_eval_us", self.batch_eval_us.to_json()),
+            ("eval_shards", eval_shards_json()),
             (
                 "eval_threads",
                 json::num(self.eval_threads.load(Ordering::Relaxed) as f64),
@@ -301,6 +391,178 @@ impl ServerMetrics {
             ),
         ])
     }
+
+    /// Prometheus text-format snapshot
+    /// (`GET /metrics?format=prometheus`). Histograms render as
+    /// cumulative `le` buckets + `_sum`/`_count`; the per-shard eval
+    /// timing table comes from the process-wide pool instrumentation.
+    pub fn to_prometheus(&self) -> String {
+        let mut w = PromWriter::new();
+        w.gauge(
+            "forest_uptime_seconds",
+            "seconds since server start",
+            self.started.elapsed().as_secs_f64(),
+        );
+        w.gauge(
+            "forest_io_evented",
+            "1 when the evented front-end serves this process",
+            self.io_evented.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "forest_requests_total",
+            "requests accepted",
+            self.requests.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_errors_total",
+            "requests that failed",
+            self.errors.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_rejected_total",
+            "requests shed with 429 by admission control",
+            self.rejected.load(Ordering::Relaxed),
+        );
+        w.gauge(
+            "forest_connections_open",
+            "currently open connections",
+            self.connections_open.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "forest_connections_total",
+            "connections accepted since start",
+            self.connections_total.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_bytes_read_total",
+            "bytes read from client sockets",
+            self.bytes_read_total.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_bytes_written_total",
+            "bytes written to client sockets",
+            self.bytes_written_total.load(Ordering::Relaxed),
+        );
+        w.gauge(
+            "forest_dispatch_queue_depth",
+            "requests queued for the evented dispatch pool",
+            self.dispatch_queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        w.gauge(
+            "forest_batch_queue_depth",
+            "jobs queued for the dynamic batcher",
+            self.batch_queue_depth.load(Ordering::Relaxed) as f64,
+        );
+        w.gauge(
+            "forest_eval_threads",
+            "configured evaluation parallelism",
+            self.eval_threads.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "forest_batches_total",
+            "batches dispatched",
+            self.batches.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_batched_items_total",
+            "total rows across dispatched batches",
+            self.batched_items.load(Ordering::Relaxed),
+        );
+        prom_histogram(
+            &mut w,
+            "forest_request_us",
+            "end-to-end request latency in microseconds",
+            &self.request_us,
+        );
+        prom_histogram(
+            &mut w,
+            "forest_batch_size",
+            "rows per dispatched batch",
+            &self.batch_size,
+        );
+        prom_histogram(
+            &mut w,
+            "forest_batch_eval_us",
+            "per-batch evaluation time in microseconds",
+            &self.batch_eval_us,
+        );
+        w.header(
+            "forest_backend_us",
+            "histogram",
+            "per-backend evaluation latency in microseconds",
+        );
+        for kind in [
+            BackendKind::Forest,
+            BackendKind::Dd,
+            BackendKind::Frozen,
+            BackendKind::Xla,
+        ] {
+            let h = self.backend(kind);
+            w.log2_histogram(
+                "forest_backend_us",
+                &[("backend", kind.name())],
+                &h.bucket_counts(),
+                h.count(),
+                h.sum_us(),
+            );
+        }
+        let shards = crate::obs::trace::shard_stats();
+        w.header(
+            "forest_eval_shard_us",
+            "summary",
+            "per-shard evaluation time across sharded batches, microseconds",
+        );
+        for s in &shards {
+            let label = format!("{}", s.shard);
+            w.sample(
+                "forest_eval_shard_us_sum",
+                &[("shard", &label)],
+                s.sum_us as f64,
+            );
+            w.sample(
+                "forest_eval_shard_us_count",
+                &[("shard", &label)],
+                s.count as f64,
+            );
+        }
+        w.header(
+            "forest_eval_shard_max_us",
+            "gauge",
+            "slowest single evaluation per shard, microseconds",
+        );
+        for s in &shards {
+            let label = format!("{}", s.shard);
+            w.sample(
+                "forest_eval_shard_max_us",
+                &[("shard", &label)],
+                s.max_us as f64,
+            );
+        }
+        w.finish()
+    }
+}
+
+/// Header + series for one log₂ histogram family.
+fn prom_histogram(w: &mut PromWriter, name: &str, help: &str, h: &Histogram) {
+    w.header(name, "histogram", help);
+    w.log2_histogram(name, &[], &h.bucket_counts(), h.count(), h.sum_us());
+}
+
+/// Per-shard eval timing as JSON (shard index, count, mean, max).
+fn eval_shards_json() -> Json {
+    Json::Arr(
+        crate::obs::trace::shard_stats()
+            .iter()
+            .map(|s| {
+                json::obj(vec![
+                    ("shard", json::num(s.shard as f64)),
+                    ("count", json::num(s.count as f64)),
+                    ("mean_us", json::num(s.sum_us as f64 / s.count as f64)),
+                    ("max_us", json::num(s.max_us as f64)),
+                ])
+            })
+            .collect(),
+    )
 }
 
 /// The event loop reports lifecycle through this trait, keeping the net
@@ -318,6 +580,23 @@ impl crate::net::LoopObserver for ServerMetrics {
     fn request_rejected(&self) {
         self.observe_rejected();
     }
+    fn dispatch_enqueued(&self) {
+        self.dispatch_queue_depth.fetch_add(1, Ordering::Relaxed);
+    }
+    fn dispatch_dequeued(&self) {
+        // saturating: a miscounted dequeue must not wrap the gauge
+        let _ = self.dispatch_queue_depth.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |n| n.checked_sub(1),
+        );
+    }
+    fn bytes_read(&self, n: u64) {
+        self.add_bytes_read(n);
+    }
+    fn bytes_written(&self, n: u64) {
+        self.add_bytes_written(n);
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +613,33 @@ mod tests {
         assert!((h.mean_us() - 2222.2).abs() < 1.0);
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.quantile_us(0.99) >= 8192);
+    }
+
+    #[test]
+    fn quantiles_clamp_to_the_largest_observation() {
+        // regression: one 5000 µs sample used to report p50 = 8192 (the
+        // raw bucket upper bound, above anything ever observed)
+        let h = Histogram::default();
+        h.observe(Duration::from_micros(5000));
+        assert_eq!(h.quantile_us(0.5), 5000);
+        assert_eq!(h.quantile_us(0.99), 5000);
+        assert_eq!(h.max_us(), 5000);
+        // clamping never lifts a quantile: smaller samples keep their
+        // own bucket bounds
+        h.observe(Duration::from_micros(3));
+        assert!(h.quantile_us(0.5) <= 5000);
+        assert!(h.quantile_us(0.5) >= 3);
+    }
+
+    #[test]
+    fn bucket_counts_sum_to_count() {
+        let h = Histogram::default();
+        for us in [1u64, 2, 4, 8, 5000] {
+            h.observe(Duration::from_micros(us));
+        }
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets.iter().sum::<u64>(), h.count());
+        assert_eq!(h.sum_us(), 5015);
     }
 
     #[test]
@@ -374,6 +680,62 @@ mod tests {
         let conns = j.get("connections").unwrap();
         assert_eq!(conns.get_i64("open"), Some(0));
         assert_eq!(conns.get_i64("total"), Some(0));
+        let bytes = j.get("bytes").unwrap();
+        assert_eq!(bytes.get_i64("read"), Some(0));
+        assert_eq!(bytes.get_i64("written"), Some(0));
+        let depth = j.get("queue_depth").unwrap();
+        assert_eq!(depth.get_i64("dispatch"), Some(0));
+        assert_eq!(depth.get_i64("batch"), Some(0));
+        // shard timing is process-global; only the key's presence is
+        // assertable alongside concurrent pool tests
+        assert!(j.get("eval_shards").unwrap().as_arr().is_some());
+    }
+
+    #[test]
+    fn prometheus_exposition_renders_every_series() {
+        let m = ServerMetrics::default();
+        m.observe(BackendKind::Frozen, Duration::from_micros(90));
+        m.observe_request(Duration::from_micros(120));
+        m.add_bytes_read(10);
+        m.add_bytes_written(20);
+        let body = m.to_prometheus();
+        assert!(body.contains("# TYPE forest_request_us histogram\n"));
+        // 120 µs lands in bucket [64, 127]
+        assert!(body.contains("forest_request_us_bucket{le=\"127\"} 1\n"));
+        assert!(body.contains("forest_request_us_bucket{le=\"63\"} 0\n"));
+        assert!(body.contains("forest_request_us_bucket{le=\"+Inf\"} 1\n"));
+        assert!(body.contains("forest_request_us_sum 120\n"));
+        assert!(body.contains("forest_request_us_count 1\n"));
+        assert!(body.contains("forest_backend_us_bucket{backend=\"frozen\",le=\"127\"} 1\n"));
+        assert!(body.contains("forest_backend_us_count{backend=\"frozen\"} 1\n"));
+        assert!(body.contains("forest_requests_total 1\n"));
+        assert!(body.contains("forest_bytes_read_total 10\n"));
+        assert!(body.contains("forest_bytes_written_total 20\n"));
+        assert!(body.contains("forest_dispatch_queue_depth 0\n"));
+        assert!(body.contains("forest_batch_queue_depth 0\n"));
+        // shard family headers render even before any sharded batch ran
+        assert!(body.contains("# TYPE forest_eval_shard_us summary\n"));
+        assert!(body.contains("# TYPE forest_eval_shard_max_us gauge\n"));
+    }
+
+    #[test]
+    fn queue_depth_gauges_saturate_at_zero() {
+        use crate::net::LoopObserver as _;
+        let m = ServerMetrics::default();
+        m.dispatch_enqueued();
+        m.dispatch_enqueued();
+        m.dispatch_dequeued();
+        assert_eq!(m.dispatch_queue_depth.load(Ordering::Relaxed), 1);
+        m.dispatch_dequeued();
+        m.dispatch_dequeued(); // extra dequeue saturates instead of wrapping
+        assert_eq!(m.dispatch_queue_depth.load(Ordering::Relaxed), 0);
+        m.batch_enqueued();
+        m.batch_dequeued(5);
+        assert_eq!(m.batch_queue_depth.load(Ordering::Relaxed), 0);
+        m.bytes_read(7);
+        m.bytes_written(9);
+        assert_eq!(m.bytes_read_total.load(Ordering::Relaxed), 7);
+        assert_eq!(m.bytes_written_total.load(Ordering::Relaxed), 9);
     }
 
     #[test]

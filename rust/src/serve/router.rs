@@ -46,6 +46,7 @@ pub struct Router {
 /// into one flat matrix, and runs one fused `classify_batch` per group.
 fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<BatchJob> {
     Batcher::start("router", cfg, move |jobs: Vec<BatchJob>| {
+        metrics.batch_dequeued(jobs.len() as u64);
         metrics.observe_batch(jobs.len());
         let eval_start = Instant::now();
         let mut jobs = jobs;
@@ -196,8 +197,15 @@ impl Router {
         version.check_row(features)?;
         let (class, steps) = if slot.batch_first {
             let (tx, rx) = std::sync::mpsc::channel();
-            self.batcher()
-                .submit((slot.classifier.clone(), features.to_vec(), tx))?;
+            // depth gauge brackets the submit: a rejected job never counts
+            self.metrics.batch_enqueued();
+            if let Err(e) = self
+                .batcher()
+                .submit((slot.classifier.clone(), features.to_vec(), tx))
+            {
+                self.metrics.batch_dequeued(1);
+                return Err(e);
+            }
             let class = rx
                 .recv_timeout(self.reply_timeout)
                 .map_err(|_| Error::Serve("batched backend reply timed out".into()))??;

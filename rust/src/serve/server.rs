@@ -63,6 +63,12 @@ pub struct ServerHandle {
 /// the configured dataset.
 pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     cfg.validate()?;
+    // Logging policy first, so boot messages already honour it. The
+    // FOREST_ADD_LOG env override wins inside init.
+    crate::obs::log::init(
+        crate::obs::log::Level::parse(&cfg.log_level).unwrap_or(crate::obs::log::Level::Info),
+        cfg.log_json,
+    );
     let evented = cfg.io_mode.resolve()?;
     // Size the shared evaluation pool before any batch traffic exists
     // (spawn-once; the first effective configuration wins process-wide).
@@ -163,7 +169,7 @@ fn start_evented(
 ) -> Result<FrontEnd> {
     use crate::net::event_loop::{self, EventLoopConfig, Handler};
     let router = router.clone();
-    let handler: Handler = Arc::new(move |req| respond(req, &router));
+    let handler: Handler = Arc::new(move |req, trace| respond(req, &router, trace));
     let handle = event_loop::start(
         listener,
         handler,

@@ -1,95 +1,11 @@
-//! Minimal leveled logger (the `log`/`env_logger` pairing is unavailable
-//! offline; `log` alone ships no emitter).
-//!
-//! Level is controlled by the `FOREST_ADD_LOG` environment variable
-//! (`error|warn|info|debug|trace`, default `info`). Output goes to stderr
-//! with elapsed-time stamps so serving traces are greppable.
+//! Legacy home of the leveled logger — the implementation lives in
+//! [`crate::obs::log`] now (where it grew JSON-lines output and
+//! `serve --log-level` wiring). This shim keeps the `log_*!` macro
+//! expansion paths (`$crate::util::logging::emit`) and historical
+//! imports resolving; the macros themselves are still exported from
+//! here so every existing call site compiles unchanged.
 
-use std::io::Write;
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
-use std::time::Instant;
-
-/// Log severity, ordered.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Level {
-    Error = 0,
-    Warn = 1,
-    Info = 2,
-    Debug = 3,
-    Trace = 4,
-}
-
-impl Level {
-    fn from_env() -> Level {
-        match std::env::var("FOREST_ADD_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("warn") => Level::Warn,
-            Ok("debug") => Level::Debug,
-            Ok("trace") => Level::Trace,
-            _ => Level::Info,
-        }
-    }
-
-    fn tag(self) -> &'static str {
-        match self {
-            Level::Error => "ERROR",
-            Level::Warn => "WARN ",
-            Level::Info => "INFO ",
-            Level::Debug => "DEBUG",
-            Level::Trace => "TRACE",
-        }
-    }
-}
-
-static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
-static START: OnceLock<Instant> = OnceLock::new();
-
-/// Current max level, lazily initialised from the environment.
-pub fn max_level() -> Level {
-    let raw = MAX_LEVEL.load(Ordering::Relaxed);
-    if raw == u8::MAX {
-        let lvl = Level::from_env();
-        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
-        lvl
-    } else {
-        match raw {
-            0 => Level::Error,
-            1 => Level::Warn,
-            2 => Level::Info,
-            3 => Level::Debug,
-            _ => Level::Trace,
-        }
-    }
-}
-
-/// Override the level programmatically (tests, `--quiet`).
-pub fn set_max_level(level: Level) {
-    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
-}
-
-/// True when `level` would be emitted.
-pub fn enabled(level: Level) -> bool {
-    level <= max_level()
-}
-
-/// Emit a record (used via the `log_*!` macros).
-pub fn emit(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
-    if !enabled(level) {
-        return;
-    }
-    let start = START.get_or_init(Instant::now);
-    let t = start.elapsed();
-    let mut err = std::io::stderr().lock();
-    let _ = writeln!(
-        err,
-        "[{:>8.3}s {} {}] {}",
-        t.as_secs_f64(),
-        level.tag(),
-        target,
-        msg
-    );
-}
+pub use crate::obs::log::{emit, enabled, init, max_level, set_max_level, Level};
 
 /// Log at error level.
 #[macro_export]
@@ -106,32 +22,3 @@ macro_rules! log_debug { ($($arg:tt)*) => { $crate::util::logging::emit($crate::
 /// Log at trace level.
 #[macro_export]
 macro_rules! log_trace { ($($arg:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*)) } }
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn level_ordering() {
-        assert!(Level::Error < Level::Warn);
-        assert!(Level::Info < Level::Trace);
-    }
-
-    #[test]
-    fn set_level_gates() {
-        set_max_level(Level::Warn);
-        assert!(enabled(Level::Error));
-        assert!(enabled(Level::Warn));
-        assert!(!enabled(Level::Info));
-        set_max_level(Level::Info);
-        assert!(enabled(Level::Info));
-    }
-
-    #[test]
-    fn macros_compile_and_run() {
-        set_max_level(Level::Error);
-        log_info!("hidden {}", 1);
-        log_error!("shown {}", 2);
-        set_max_level(Level::Info);
-    }
-}

@@ -5,7 +5,10 @@
 //!    output vector are warm, `classify_batch_into` (round-based and
 //!    cache-tiled, with and without step metering) must not touch the
 //!    allocator — the steady-state serving loop runs entirely on reused
-//!    buffers.
+//!    buffers. The tracing hot path (`ReqTrace` record/commit into the
+//!    debug ring, per-shard timing atomics) runs inside the same counted
+//!    window: with the inline breakdown off, observability costs zero
+//!    allocations per request.
 //! 2. **Snapshot boot is zero-copy.** `FrozenDD::load` on the mmap path
 //!    must not copy or re-materialise node/terminal sections: total bytes
 //!    allocated during the load stay far below the node-plane size (a
@@ -93,9 +96,17 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     frozen.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
     frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
     let want_steps = steps.clone();
+    // Warm the trace-id generator (seeds a OnceLock on first use).
+    let _ = forest_add::obs::trace::next_id();
 
     let before = allocs();
     for _ in 0..10 {
+        // The per-request trace hot path brackets every sweep exactly as
+        // the serving loop does: stage records, shard-timing atomics and
+        // the seqlock ring commit must all stay allocation-free.
+        let mut trace =
+            forest_add::obs::trace::ReqTrace::new(forest_add::obs::trace::next_id());
+        trace.record(forest_add::obs::trace::Stage::Parse);
         // round-based counting scatter (diagram fits the default budget)
         frozen.classify_batch_into(rows, &mut scratch, &mut out);
         assert_eq!(out, want, "warm sweeps must stay bit-identical");
@@ -106,12 +117,19 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
         frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
         assert_eq!(out, want);
         assert_eq!(steps, want_steps, "warm metered sweeps must stay bit-identical");
+        trace.record(forest_add::obs::trace::Stage::Eval);
+        forest_add::obs::trace::record_shard(0, 7);
+        forest_add::obs::trace::note_shard_run(1);
+        trace.record(forest_add::obs::trace::Stage::Serialize);
+        let total = trace.commit(200);
+        assert!(trace.stages_total_us() <= total);
     }
     let after = allocs();
     assert_eq!(
         after - before,
         0,
-        "the warm frozen sweeps must not allocate ({} allocations in 30 batches)",
+        "the warm frozen sweeps plus the tracing hot path must not allocate \
+         ({} allocations in 30 batches)",
         after - before
     );
 

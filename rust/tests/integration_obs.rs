@@ -1,0 +1,277 @@
+//! Integration: the observability surface over real sockets — request-id
+//! propagation on both front-ends, inline `"trace": true` breakdowns
+//! against the `/debug/trace` ring, and the Prometheus text exposition
+//! agreeing with the JSON `/metrics` snapshot under live traffic.
+
+use forest_add::data::datasets;
+use forest_add::serve::config::{IoMode, ServeConfig};
+use forest_add::serve::http::HttpClient;
+use forest_add::serve::server;
+use forest_add::util::json::{self, Json};
+
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        enable_xla: false,
+        ..Default::default()
+    }
+}
+
+fn row_json(row: &[f32]) -> Json {
+    Json::Arr(row.iter().map(|&v| json::num(v as f64)).collect())
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// The exact-name sample value from a Prometheus text scrape (skips
+/// `_bucket{le=...}` lines and `# HELP`/`# TYPE` comments).
+fn prom_sample(text: &str, name: &str) -> f64 {
+    for l in text.lines() {
+        if let Some(rest) = l.strip_prefix(name) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                return v.trim().parse().unwrap();
+            }
+        }
+    }
+    panic!("series {name} absent from scrape");
+}
+
+/// The `(le, cumulative count)` bucket series of a histogram, in file
+/// order (ascending `le`, ending at `+Inf`).
+fn prom_buckets(text: &str, name: &str) -> Vec<(String, f64)> {
+    let prefix = format!("{name}_bucket{{le=\"");
+    text.lines()
+        .filter_map(|l| l.strip_prefix(prefix.as_str()))
+        .map(|rest| {
+            let (le, v) = rest.split_once("\"}").unwrap();
+            (le.to_string(), v.trim().parse().unwrap())
+        })
+        .collect()
+}
+
+/// Every response carries `X-Request-Id` on both front-ends: a
+/// client-supplied id echoes verbatim, an absent one is generated as a
+/// 16-hex-digit id. `/healthz` reports liveness plus the model count.
+#[test]
+fn request_id_echo_and_healthz_on_both_front_ends() {
+    let mut configs = vec![ServeConfig {
+        io_mode: IoMode::Sync,
+        ..test_config()
+    }];
+    if forest_add::net::poll::supported() {
+        configs.push(ServeConfig {
+            io_mode: IoMode::Evented,
+            ..test_config()
+        });
+    }
+    let data = datasets::load("iris").unwrap();
+    for cfg in configs {
+        let mode = format!("{:?}", cfg.io_mode);
+        let handle = server::start(&cfg).unwrap();
+        let addr = handle.addr.to_string();
+        let mut client = HttpClient::connect(&addr).unwrap();
+        let body = json::obj(vec![("features", row_json(data.row(0)))])
+            .to_string_compact()
+            .into_bytes();
+
+        let (st, headers, _) = client
+            .request_raw_with_headers(
+                "POST",
+                "/classify",
+                "application/json",
+                &[("X-Request-Id", "trace-me-42")],
+                &body,
+            )
+            .unwrap();
+        assert_eq!(st, 200, "{mode}");
+        assert_eq!(
+            header(&headers, "x-request-id"),
+            Some("trace-me-42"),
+            "{mode}: client id must echo verbatim: {headers:?}"
+        );
+
+        let (st, headers, _) = client
+            .request_raw("POST", "/classify", "application/json", &body)
+            .unwrap();
+        assert_eq!(st, 200, "{mode}");
+        let id = header(&headers, "x-request-id")
+            .unwrap_or_else(|| panic!("{mode}: generated id missing: {headers:?}"));
+        assert_eq!(id.len(), 16, "{mode}: {id:?}");
+        assert!(id.bytes().all(|b| b.is_ascii_hexdigit()), "{mode}: {id:?}");
+
+        let (st, h) = client.get("/healthz").unwrap();
+        assert_eq!(st, 200, "{mode}");
+        assert_eq!(h.get("ok").and_then(|v| v.as_bool()), Some(true), "{mode}");
+        assert!(h.get_i64("models").unwrap() >= 1, "{mode}: {h:?}");
+        handle.stop();
+    }
+}
+
+/// The inline `"trace": true` breakdown: stage spans are sequential
+/// slices of the measured total (their sum can never exceed the largest
+/// `request_us` observation), and the committed trace is retrievable
+/// from the `/debug/trace` ring by its id.
+#[test]
+fn inline_trace_breakdown_and_debug_ring() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+    let mut client = HttpClient::connect(&addr).unwrap();
+
+    // no trace requested -> the body stays trace-free (bit-identity)
+    let plain = json::obj(vec![("features", row_json(data.row(0)))]);
+    let (st, resp) = client.request_json("POST", "/classify", Some(&plain)).unwrap();
+    assert_eq!(st, 200);
+    assert!(resp.get("trace").is_none(), "{resp:?}");
+
+    // 16 hex digits parse verbatim: header echo, inline id, and the
+    // ring entry all agree on the same identifier
+    let wire_id = "00000000c0ffee42";
+    let body = json::obj(vec![
+        ("features", row_json(data.row(1))),
+        ("trace", Json::Bool(true)),
+    ])
+    .to_string_compact()
+    .into_bytes();
+    let (st, headers, raw) = client
+        .request_raw_with_headers(
+            "POST",
+            "/classify",
+            "application/json",
+            &[("X-Request-Id", wire_id)],
+            &body,
+        )
+        .unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(header(&headers, "x-request-id"), Some(wire_id));
+    let resp = Json::parse(std::str::from_utf8(&raw).unwrap()).unwrap();
+    let trace = resp.get("trace").unwrap_or_else(|| panic!("{resp:?}"));
+    assert_eq!(trace.get_str("id"), Some(wire_id));
+    let stages = trace.get("stages").unwrap();
+    let mut stage_sum = 0i64;
+    for name in ["parse", "admission", "queue", "eval", "serialize", "write"] {
+        stage_sum += stages
+            .get_i64(name)
+            .unwrap_or_else(|| panic!("stage {name} missing: {stages:?}"));
+    }
+
+    let (st, m) = client.get("/metrics").unwrap();
+    assert_eq!(st, 200);
+    let max_us = m.get("request_us").unwrap().get_i64("max_us").unwrap();
+    assert!(
+        stage_sum <= max_us,
+        "stage sum {stage_sum} exceeds the largest observed request_us {max_us}"
+    );
+
+    let (st, dbg) = client.get("/debug/trace?n=256").unwrap();
+    assert_eq!(st, 200);
+    let traces = dbg.get("traces").unwrap().as_arr().unwrap();
+    assert!(!traces.is_empty());
+    let ours = traces
+        .iter()
+        .find(|t| t.get_str("id") == Some(wire_id))
+        .unwrap_or_else(|| panic!("trace {wire_id} not in the ring"));
+    assert_eq!(ours.get_i64("status"), Some(200));
+    // the ring entry's total includes serialize + write, the inline
+    // breakdown stops at eval — total bounds the inline sum too
+    assert!(ours.get_i64("total_us").unwrap() >= stage_sum, "{ours:?}");
+    assert!(ours.get("stages").unwrap().get_i64("eval").is_some());
+
+    // a bounded request returns at most n entries
+    let (st, dbg) = client.get("/debug/trace?n=2").unwrap();
+    assert_eq!(st, 200);
+    assert!(dbg.get("traces").unwrap().as_arr().unwrap().len() <= 2);
+    handle.stop();
+}
+
+/// The Prometheus exposition under live traffic: required series
+/// present, cumulative buckets monotone and ending at `_count`, and
+/// `_count`/`_sum` agreeing exactly with the JSON snapshot for the
+/// batcher histograms (which a metrics scrape cannot advance).
+#[test]
+fn prometheus_scrape_agrees_with_json_under_traffic() {
+    let handle = server::start(&test_config()).unwrap();
+    let addr = handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+    const N: usize = 40;
+    let mut client = HttpClient::connect(&addr).unwrap();
+    for i in 0..N {
+        // alternate singles and batches so the request and batcher
+        // series all accumulate
+        let (st, _) = if i % 2 == 0 {
+            let body = json::obj(vec![("features", row_json(data.row(i % data.n_rows())))]);
+            client.request_json("POST", "/classify", Some(&body)).unwrap()
+        } else {
+            let rows = Json::Arr(vec![
+                row_json(data.row(i % data.n_rows())),
+                row_json(data.row((i + 1) % data.n_rows())),
+            ]);
+            let body = json::obj(vec![("rows", rows)]);
+            client
+                .request_json("POST", "/classify_batch", Some(&body))
+                .unwrap()
+        };
+        assert_eq!(st, 200, "request {i}");
+    }
+
+    let (st, _, prom_raw) = client
+        .request_raw("GET", "/metrics?format=prometheus", "application/json", &[])
+        .unwrap();
+    assert_eq!(st, 200);
+    let prom = String::from_utf8(prom_raw).unwrap();
+    let (st, m) = client.get("/metrics").unwrap();
+    assert_eq!(st, 200);
+
+    // an unknown format is a clean 400, not a dead server
+    let (st, _, _) = client
+        .request_raw("GET", "/metrics?format=xml", "application/json", &[])
+        .unwrap();
+    assert_eq!(st, 400);
+
+    assert!(prom_sample(&prom, "forest_request_us_count") >= N as f64);
+    assert!(prom_sample(&prom, "forest_requests_total") >= N as f64);
+    assert!(prom_sample(&prom, "forest_bytes_read_total") > 0.0);
+    assert!(prom_sample(&prom, "forest_bytes_written_total") > 0.0);
+    assert!(
+        prom.contains("# TYPE forest_eval_shard_us summary"),
+        "per-shard eval series header must always render"
+    );
+
+    let buckets = prom_buckets(&prom, "forest_request_us");
+    assert!(!buckets.is_empty());
+    let mut prev = 0.0;
+    for (le, v) in &buckets {
+        assert!(*v >= prev, "bucket le={le} decreased: {v} < {prev}");
+        prev = *v;
+    }
+    assert_eq!(buckets.last().unwrap().0, "+Inf");
+    assert_eq!(prev, prom_sample(&prom, "forest_request_us_count"));
+
+    // nothing between the two scrapes touches the batcher, so its
+    // histograms must agree exactly across the formats
+    for (prom_name, json_key, mean_key) in [
+        ("forest_batch_eval_us", "batch_eval_us", "mean_us"),
+        ("forest_batch_size", "batch_size", "mean"),
+    ] {
+        let j = m.get(json_key).unwrap();
+        let count = j.get_i64("count").unwrap() as f64;
+        assert!(count > 0.0, "{json_key}: batch traffic must have landed");
+        assert_eq!(prom_sample(&prom, &format!("{prom_name}_count")), count);
+        let sum = prom_sample(&prom, &format!("{prom_name}_sum"));
+        let want = j.get(mean_key).unwrap().as_f64().unwrap() * count;
+        assert!(
+            (sum - want).abs() <= 1.0,
+            "{prom_name}: sum {sum} vs mean*count {want}"
+        );
+    }
+    handle.stop();
+}
