@@ -12,6 +12,7 @@ use forest_add::bench_support::{measure_ns, report, BenchEnv};
 use forest_add::engine::Engine;
 use forest_add::net::proto;
 use forest_add::serve::batcher::BatcherConfig;
+use forest_add::serve::breaker::BreakerBoard;
 use forest_add::serve::config::{IoMode, ServeConfig};
 use forest_add::serve::http::HttpClient;
 use forest_add::serve::metrics::ServerMetrics;
@@ -54,6 +55,7 @@ fn main() {
             queue_cap: 4096,
         },
         Duration::from_secs(5),
+        BreakerBoard::new(3, Duration::from_secs(1)),
     ));
 
     // --- single-request latency per backend -------------------------------

@@ -212,6 +212,51 @@ fn main() -> Result<()> {
             .map(|t| t.lines().filter(|l| !l.starts_with('#')).count())
             .unwrap_or(0),
     );
+    // 10. Fault tolerance: every eval runs behind panic quarantine and a
+    //     per-model×backend circuit breaker, and the backends are
+    //     bit-identical — so failures degrade into rerouting, not wrong
+    //     answers. Arm the deterministic injection harness so every
+    //     frozen eval panics (`serve --fault eval_shard_panic:1:7` from
+    //     the CLI): requests still answer 200 via the dd backend
+    //     (announced with `X-Served-By`), three failures open the frozen
+    //     breaker, and `/readyz` goes red so balancers drain the replica
+    //     while `/healthz` keeps it alive. A cooldown later, one
+    //     successful half-open probe re-closes the breaker.
+    forest_add::runtime::fault::arm("eval_shard_panic:1:7").expect("valid fault spec");
+    let frozen_req = json::obj(vec![
+        (
+            "features",
+            Json::Arr(sample.iter().map(|&v| json::num(v as f64)).collect()),
+        ),
+        ("backend", json::s("frozen")),
+    ]);
+    let mut served_by = String::from("?");
+    for _ in 0..3 {
+        let mut c = HttpClient::connect(&addr)?;
+        let (st, headers, _) = c.request_raw(
+            "POST",
+            "/classify",
+            "application/json",
+            frozen_req.to_string_compact().as_bytes(),
+        )?;
+        assert_eq!(st, 200, "a quarantined panic degrades, never fails");
+        served_by = headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("x-served-by"))
+            .map(|(_, v)| v.clone())
+            .unwrap_or(served_by);
+    }
+    forest_add::runtime::fault::disarm_all();
+    let (ready_st, ready) = http_request(&addr, "GET", "/readyz", None)?;
+    assert_eq!(ready_st, 503, "an open breaker fails readiness");
+    println!(
+        "injected frozen panics: served by '{served_by}' instead, \
+         readyz {ready_st} with open breakers {}",
+        ready
+            .get("open_breakers")
+            .map(Json::to_string_compact)
+            .unwrap_or_default(),
+    );
     serving.stop();
     Ok(())
 }

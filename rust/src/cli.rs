@@ -763,6 +763,21 @@ fn serve_spec() -> ArgSpec {
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
         .opt(
+            "conn-max-inflight",
+            "",
+            "per-connection pipelining cap before 429 (0 = unlimited)",
+        )
+        .opt(
+            "breaker-threshold",
+            "",
+            "eval failures in 10s that open a backend breaker (0 = off)",
+        )
+        .opt(
+            "fault",
+            "",
+            "deterministic fault injection, point:rate:seed[,…]",
+        )
+        .opt(
             "log-level",
             "",
             "log verbosity: error | warn | info | debug | trace",
@@ -823,6 +838,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("tile-bytes").is_empty() {
         cfg.tile_bytes = a.usize("tile-bytes")?;
+    }
+    if !a.str("conn-max-inflight").is_empty() {
+        cfg.conn_max_inflight = a.usize("conn-max-inflight")?;
+    }
+    if !a.str("breaker-threshold").is_empty() {
+        cfg.breaker_threshold = a.usize("breaker-threshold")?;
+    }
+    if !a.str("fault").is_empty() {
+        cfg.fault = a.str("fault").to_string();
     }
     if !a.str("log-level").is_empty() {
         cfg.log_level = a.str("log-level").to_string();

@@ -33,6 +33,21 @@ pub enum Error {
     /// `Retry-After`, distinct from the hard failures above).
     Overloaded(String),
 
+    /// The request's deadline expired before evaluation finished
+    /// (HTTP: `504`). The work was dropped, not completed slowly.
+    DeadlineExceeded(String),
+
+    /// One or more evaluation shards panicked and were quarantined;
+    /// the rest of the batch completed (HTTP: `500` when no fallback
+    /// backend can re-serve the request). Carries the first failing
+    /// shard index and its panic message.
+    EvalPanic {
+        /// Index of the first shard that panicked.
+        shard: usize,
+        /// Panic payload rendered to text (`&str`/`String` payloads).
+        msg: String,
+    },
+
     /// Underlying I/O failure.
     Io(std::io::Error),
 }
@@ -47,6 +62,10 @@ impl fmt::Display for Error {
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Serve(msg) => write!(f, "serving error: {msg}"),
             Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
+            Error::DeadlineExceeded(msg) => write!(f, "deadline exceeded: {msg}"),
+            Error::EvalPanic { shard, msg } => {
+                write!(f, "eval shard {shard} panicked: {msg}")
+            }
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -98,6 +117,17 @@ mod tests {
         assert_eq!(e.to_string(), "parse error: line 3: expected number");
         let e = Error::invalid("trees must be > 0");
         assert!(e.to_string().contains("trees must be > 0"));
+    }
+
+    #[test]
+    fn fault_variants_name_the_failure() {
+        let e = Error::DeadlineExceeded("expired 3ms before eval".into());
+        assert_eq!(e.to_string(), "deadline exceeded: expired 3ms before eval");
+        let e = Error::EvalPanic {
+            shard: 2,
+            msg: "index out of bounds".into(),
+        };
+        assert_eq!(e.to_string(), "eval shard 2 panicked: index out of bounds");
     }
 
     #[test]

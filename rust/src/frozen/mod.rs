@@ -71,9 +71,10 @@ use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::compile::Abstraction;
 use crate::data::Schema;
 use crate::error::{Error, Result};
-use crate::runtime::pool;
+use crate::runtime::{fault, pool};
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
 
 use storage::{Hot16, Hot32, HotRec, Plane};
 
@@ -663,15 +664,80 @@ impl FrozenDD {
                         out_chunk,
                         &mut [],
                         tile,
+                        None,
                     )
                 });
             });
         if !sharded {
             SCRATCH.with(|s| {
-                self.sweep_dispatch::<false>(rows, &mut s.borrow_mut(), &mut out, &mut [], tile)
+                self.sweep_dispatch::<false>(
+                    rows,
+                    &mut s.borrow_mut(),
+                    &mut out,
+                    &mut [],
+                    tile,
+                    None,
+                )
             });
         }
         out
+    }
+
+    /// Serving-path batch classification with the fault-tolerance
+    /// guards: the `eval_shard_panic` / `eval_slow` injection points
+    /// fire per shard, shard panics are quarantined (the healthy shards
+    /// complete, the failure comes back as [`Error::EvalPanic`] naming
+    /// the shard and its row range), and `deadline` is checked between
+    /// sweep tiles/rounds so expired requests stop consuming cores.
+    /// Fault-free, deadline-less calls are bit-identical to
+    /// [`FrozenDD::classify_batch`].
+    pub fn classify_batch_guarded(
+        &self,
+        rows: RowMatrix<'_>,
+        deadline: Option<Instant>,
+    ) -> Result<Vec<u32>> {
+        let tile = tile_bytes();
+        let mut out = vec![0u32; rows.n_rows()];
+        let outcome = if rows.n_rows() >= PAR_MIN_ROWS {
+            pool::run_sharded_quarantined(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
+                fault::fire_eval_points();
+                SCRATCH.with(|s| {
+                    self.sweep_dispatch::<false>(
+                        shard,
+                        &mut s.borrow_mut(),
+                        out_chunk,
+                        &mut [],
+                        tile,
+                        deadline,
+                    )
+                });
+            })
+        } else {
+            pool::ShardedRun::TooSmall
+        };
+        match outcome {
+            pool::ShardedRun::Done => Ok(out),
+            pool::ShardedRun::TooSmall => {
+                // Serial path: the injection points still apply; a panic
+                // here unwinds into the router's catch_unwind guard.
+                fault::fire_eval_points();
+                SCRATCH.with(|s| {
+                    self.sweep_dispatch::<false>(
+                        rows,
+                        &mut s.borrow_mut(),
+                        &mut out,
+                        &mut [],
+                        tile,
+                        deadline,
+                    )
+                });
+                Ok(out)
+            }
+            pool::ShardedRun::Quarantined { panic, rows: range } => Err(Error::EvalPanic {
+                shard: panic.shard,
+                msg: format!("{} (rows {}..{})", panic.msg, range.start, range.end),
+            }),
+        }
     }
 
     /// Classify a batch *with the §6 step count per row* — the batch
@@ -697,23 +763,87 @@ impl FrozenDD {
                             out_chunk,
                             steps_chunk,
                             tile,
+                            None,
                         )
                     });
                 },
             );
         if !sharded {
             SCRATCH.with(|s| {
-                self.sweep_dispatch::<true>(rows, &mut s.borrow_mut(), &mut out, &mut steps, tile)
+                self.sweep_dispatch::<true>(
+                    rows,
+                    &mut s.borrow_mut(),
+                    &mut out,
+                    &mut steps,
+                    tile,
+                    None,
+                )
             });
         }
         (out, steps)
+    }
+
+    /// Steps-metered counterpart of [`FrozenDD::classify_batch_guarded`]
+    /// — same quarantine, injection, and deadline semantics.
+    pub fn classify_batch_steps_guarded(
+        &self,
+        rows: RowMatrix<'_>,
+        deadline: Option<Instant>,
+    ) -> Result<(Vec<u32>, Vec<u32>)> {
+        let tile = tile_bytes();
+        let mut out = vec![0u32; rows.n_rows()];
+        let mut steps = vec![0u32; rows.n_rows()];
+        let outcome = if rows.n_rows() >= PAR_MIN_ROWS {
+            pool::run_sharded2_quarantined(
+                rows,
+                &mut out,
+                &mut steps,
+                PAR_ROWS_PER_SHARD,
+                |shard, out_chunk, steps_chunk| {
+                    fault::fire_eval_points();
+                    SCRATCH.with(|s| {
+                        self.sweep_dispatch::<true>(
+                            shard,
+                            &mut s.borrow_mut(),
+                            out_chunk,
+                            steps_chunk,
+                            tile,
+                            deadline,
+                        )
+                    });
+                },
+            )
+        } else {
+            pool::ShardedRun::TooSmall
+        };
+        match outcome {
+            pool::ShardedRun::Done => Ok((out, steps)),
+            pool::ShardedRun::TooSmall => {
+                fault::fire_eval_points();
+                SCRATCH.with(|s| {
+                    self.sweep_dispatch::<true>(
+                        rows,
+                        &mut s.borrow_mut(),
+                        &mut out,
+                        &mut steps,
+                        tile,
+                        deadline,
+                    )
+                });
+                Ok((out, steps))
+            }
+            pool::ShardedRun::Quarantined { panic, rows: range } => Err(Error::EvalPanic {
+                shard: panic.shard,
+                msg: format!("{} (rows {}..{})", panic.msg, range.start, range.end),
+            }),
+        }
     }
 
     /// Single-threaded batch classification with an explicit, reusable
     /// [`BatchScratch`].
     pub fn classify_batch_with(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch) -> Vec<u32> {
         let mut out = vec![0u32; rows.n_rows()];
-        self.sweep_dispatch::<false>(rows, scratch, &mut out, &mut [], tile_bytes());
+        self.sweep_dispatch::<false>(rows, scratch, &mut out, &mut [], tile_bytes(), None);
         out
     }
 
@@ -746,7 +876,7 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget);
+        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget, None);
     }
 
     /// Steps-metered single-threaded sweep with an explicit tile budget
@@ -768,10 +898,11 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget);
+        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget, None);
     }
 
     /// Monomorphise the sweep over the hot-plane encoding.
+    #[allow(clippy::too_many_arguments)]
     fn sweep_dispatch<const STEPS: bool>(
         &self,
         rows: RowMatrix<'_>,
@@ -779,9 +910,10 @@ impl FrozenDD {
         out: &mut [u32],
         steps: &mut [u32],
         tile_budget: usize,
+        deadline: Option<Instant>,
     ) {
         with_hot!(self, hot, {
-            self.sweep_into::<_, STEPS>(hot, rows, scratch, out, steps, tile_budget)
+            self.sweep_into::<_, STEPS>(hot, rows, scratch, out, steps, tile_budget, deadline)
         })
     }
 
@@ -799,6 +931,7 @@ impl FrozenDD {
         out: &mut [u32],
         steps: &mut [u32],
         tile_budget: usize,
+        deadline: Option<Instant>,
     ) {
         debug_assert_eq!(out.len(), rows.n_rows());
         debug_assert!(!STEPS || steps.len() == rows.n_rows());
@@ -833,9 +966,9 @@ impl FrozenDD {
         }
         let tile_nodes = tile_span::<H>(tile_budget);
         if tile_nodes >= n_nodes {
-            self.rounds_sweep::<H, STEPS>(hot, rows, scratch, out, steps);
+            self.rounds_sweep::<H, STEPS>(hot, rows, scratch, out, steps, deadline);
         } else {
-            self.tiled_sweep::<H, STEPS>(hot, rows, scratch, out, steps, tile_nodes);
+            self.tiled_sweep::<H, STEPS>(hot, rows, scratch, out, steps, tile_nodes, deadline);
         }
     }
 
@@ -848,6 +981,7 @@ impl FrozenDD {
     /// into segment offsets, and a stable scatter packs the surviving
     /// rows into one flat slot array for the next round. No per-node
     /// `Vec`s, no allocation once the scratch is warm.
+    #[allow(clippy::too_many_arguments)]
     fn rounds_sweep<H: HotRec, const STEPS: bool>(
         &self,
         hot: &[H],
@@ -855,6 +989,7 @@ impl FrozenDD {
         scratch: &mut BatchScratch,
         out: &mut [u32],
         steps: &mut [u32],
+        deadline: Option<Instant>,
     ) {
         let lo_arr = &self.lo[..];
         let hi_arr = &self.hi[..];
@@ -940,6 +1075,16 @@ impl FrozenDD {
             std::mem::swap(slots_a, slots_b);
             lo = next_lo;
             hi = next_hi;
+            // Deadline check between rounds: an expired request stops
+            // consuming cores. Restore the all-zero count invariant so
+            // the scratch stays reusable; the partial output is
+            // discarded by the caller (504).
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                for node in lo..=hi {
+                    count_a[node] = 0;
+                }
+                return;
+            }
         }
     }
 
@@ -961,6 +1106,7 @@ impl FrozenDD {
         out: &mut [u32],
         steps: &mut [u32],
         tile_nodes: usize,
+        deadline: Option<Instant>,
     ) {
         let lo_arr = &self.lo[..];
         let hi_arr = &self.hi[..];
@@ -988,6 +1134,16 @@ impl FrozenDD {
         }
         head[0] = 0;
         for k in 0..n_tiles {
+            // Deadline check between tiles: a dead request's sweep bails
+            // instead of streaming the remaining tiles through cache.
+            // Restore the all-empty chain invariant before returning so
+            // the scratch stays reusable (output is discarded: 504).
+            if k > 0 && deadline.is_some_and(|d| Instant::now() >= d) {
+                for h in head[k..n_tiles].iter_mut() {
+                    *h = CHAIN_END;
+                }
+                return;
+            }
             let mut r = head[k];
             head[k] = CHAIN_END; // restore the all-empty invariant
             let tile_end = ((k + 1) * tile_nodes).min(n_nodes);
@@ -1117,16 +1273,22 @@ impl Classifier for FrozenDD {
     }
 
     fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
+        fault::fire_eval_points();
         let (class, steps) = FrozenDD::classify_with_steps(self, x);
         Ok((class, Some(steps)))
     }
 
     fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
-        Ok(FrozenDD::classify_batch(self, rows))
+        let deadline = crate::obs::trace::eval_deadline();
+        self.classify_batch_guarded(rows, deadline)
     }
 
-    fn classify_batch_with_steps(&self, rows: RowMatrix<'_>) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
-        let (classes, steps) = FrozenDD::classify_batch_steps(self, rows);
+    fn classify_batch_with_steps(
+        &self,
+        rows: RowMatrix<'_>,
+    ) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+        let deadline = crate::obs::trace::eval_deadline();
+        let (classes, steps) = self.classify_batch_steps_guarded(rows, deadline)?;
         Ok((classes, Some(steps)))
     }
 

@@ -230,6 +230,38 @@
 //!   stderr as text or JSON lines: `serve --log-level debug
 //!   --log-json`, overridable with the `FOREST_ADD_LOG` environment
 //!   variable (`error|warn|info|debug|trace`).
+//!
+//! ## Fault tolerance: degrade along the bit-identical chain
+//!
+//! The native backends answer every row identically (the conformance
+//! suite proves it), which turns fault handling into pure routing:
+//!
+//! - **Panic quarantine.** Every eval runs behind a panic guard — in
+//!   the sharded pool each shard is caught individually
+//!   ([`runtime::pool`]), single rows inline in the router. A panic
+//!   becomes an [`Error::EvalPanic`], counts in `eval_panics_total`,
+//!   and the surviving backends re-evaluate the request.
+//! - **Circuit breakers.** The router keeps one breaker per
+//!   model-version × backend ([`serve::breaker`]). Repeated failures
+//!   inside a sliding window open it; requests then route along the
+//!   degradation chain `frozen → dd → forest` and announce the actual
+//!   server with an `X-Served-By` header. After a cooldown a single
+//!   half-open probe re-closes the breaker. `GET /readyz` fails (`503`)
+//!   while any breaker is open, so balancers drain degraded replicas
+//!   that healthy `/healthz` keeps alive.
+//! - **Deadline propagation.** `ServeConfig::reply_timeout_ms` (or a
+//!   client `X-Deadline-Ms` header, capped by it) rides the request as
+//!   an absolute deadline: the batcher drops expired jobs before
+//!   grouping, the frozen sweep checks it between tiles, and an
+//!   expired request is a `504` counted in `deadline_dropped_total` —
+//!   never a worker pinned on an answer nobody is waiting for.
+//! - **Deterministic fault injection.** [`runtime::fault`] arms seeded
+//!   failure points (`eval_shard_panic`, `eval_slow`, `conn_read_err`,
+//!   `conn_write_short`, `snapshot_load`) via `serve
+//!   --fault point:rate:seed[,…]` or `FOREST_ADD_FAULT`. The same spec
+//!   replays the same fire sequence, so the chaos soak in
+//!   `tests/integration_fault.rs` is reproducible; disarmed points cost
+//!   one relaxed atomic load on the hot path.
 
 pub mod add;
 pub mod batch;

@@ -10,6 +10,7 @@
 
 use crate::net::proto::{RequestParser, Response};
 use crate::obs::trace::ReqTrace;
+use crate::runtime::fault::{self, Point};
 use std::io::{ErrorKind, Read, Write};
 use std::net::TcpStream;
 use std::time::Instant;
@@ -49,6 +50,9 @@ pub struct Conn {
     pub peer_eof: bool,
     /// Keep-alive decision of the request currently in flight.
     pub keep_alive_pending: bool,
+    /// Requests admitted from the current pipelined burst (cleared once
+    /// the parser drains; the loop's per-connection cap compares this).
+    pub burst: usize,
     /// Trace of the request in flight / being written: the loop stamps
     /// the write span and commits it to the trace ring after the flush.
     pub pending_trace: Option<ReqTrace>,
@@ -79,6 +83,7 @@ impl Conn {
             close_after_write: false,
             peer_eof: false,
             keep_alive_pending: true,
+            burst: 0,
             pending_trace: None,
             pending_served: false,
             pending_status: 200,
@@ -94,6 +99,12 @@ impl Conn {
     /// `WouldBlock`). `Err` means the connection is broken and must be
     /// dropped.
     pub fn fill(&mut self) -> std::io::Result<ReadOutcome> {
+        if fault::fires(Point::ConnReadErr) {
+            return Err(std::io::Error::new(
+                ErrorKind::ConnectionReset,
+                "injected connection read error",
+            ));
+        }
         let mut buf = [0u8; 16 * 1024];
         loop {
             match self.stream.read(&mut buf) {
@@ -126,7 +137,15 @@ impl Conn {
     /// everything is flushed; `Err` drops the connection.
     pub fn flush(&mut self) -> std::io::Result<bool> {
         while self.written < self.write_buf.len() {
-            match self.stream.write(&self.write_buf[self.written..]) {
+            let mut end = self.write_buf.len();
+            // Injected short write: offer only half the tail and report
+            // "would block", exercising the Writing-state resumption the
+            // caller re-arms write interest for. Never corrupts bytes.
+            let short = end - self.written > 1 && fault::fires(Point::ConnWriteShort);
+            if short {
+                end = self.written + (end - self.written) / 2;
+            }
+            match self.stream.write(&self.write_buf[self.written..end]) {
                 Ok(0) => {
                     return Err(std::io::Error::new(
                         ErrorKind::WriteZero,
@@ -137,6 +156,9 @@ impl Conn {
                     self.written += n;
                     self.bytes_written += n as u64;
                     self.last_activity = Instant::now();
+                    if short {
+                        return Ok(false);
+                    }
                 }
                 Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(false),
                 Err(e) if e.kind() == ErrorKind::Interrupted => {}

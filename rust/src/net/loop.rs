@@ -63,6 +63,12 @@ pub struct EventLoopConfig {
     pub idle_timeout: Duration,
     /// `Retry-After` seconds on `429` responses.
     pub retry_after_s: u32,
+    /// Per-connection pipelining cap: at most this many requests are
+    /// admitted from one connection per pipelined burst; the next one is
+    /// shed with `429` + `Retry-After` *before* the global dispatch
+    /// queue is consulted, so one greedy client cannot crowd out the
+    /// rest. `0` = unlimited.
+    pub conn_max_inflight: usize,
 }
 
 impl Default for EventLoopConfig {
@@ -72,6 +78,7 @@ impl Default for EventLoopConfig {
             dispatch_cap: 256,
             idle_timeout: Duration::from_secs(10),
             retry_after_s: 1,
+            conn_max_inflight: 0,
         }
     }
 }
@@ -349,11 +356,28 @@ impl Loop {
                         conn.keep_alive_pending = keep;
                     }
                     trace.record(Stage::Admission);
+                    let burst = self.conns.get(&token).map_or(0, |c| c.burst);
+                    if self.cfg.conn_max_inflight > 0 && burst >= self.cfg.conn_max_inflight {
+                        // per-connection cap: shed without consulting the
+                        // global dispatch queue
+                        self.observer.request_rejected_conn();
+                        let mut resp = Response::overloaded(
+                            self.cfg.retry_after_s,
+                            "connection pipelining cap reached — retry shortly",
+                        );
+                        resp.request_id = Some(
+                            req.request_id
+                                .unwrap_or_else(|| format!("{:016x}", trace.id)),
+                        );
+                        self.send_response(token, &resp, keep, Some(trace), false);
+                        return;
+                    }
                     match self.dispatch_tx.try_send((token, req, trace)) {
                         Ok(()) => {
                             self.observer.dispatch_enqueued();
                             if let Some(conn) = self.conns.get_mut(&token) {
                                 conn.state = ConnState::InFlight;
+                                conn.burst += 1;
                             }
                             // one request in flight per connection: no
                             // read interest until its response is out
@@ -462,6 +486,9 @@ impl Loop {
                 return false;
             };
             conn.state = ConnState::Reading;
+            if conn.parser.is_idle() {
+                conn.burst = 0; // the pipelined burst has drained
+            }
             (
                 conn.close_after_write,
                 conn.pending_trace.take(),
@@ -559,6 +586,7 @@ mod tests {
         closed: AtomicUsize,
         served: AtomicUsize,
         rejected: AtomicUsize,
+        conn_rejected: AtomicUsize,
     }
 
     impl LoopObserver for CountingObserver {
@@ -573,6 +601,9 @@ mod tests {
         }
         fn request_rejected(&self) {
             self.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        fn request_rejected_conn(&self) {
+            self.conn_rejected.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -766,6 +797,59 @@ mod tests {
         gate.store(false, Ordering::SeqCst);
         assert_eq!(read_response(&mut a).0, 200);
         assert_eq!(read_response(&mut b).0, 200);
+        shutdown.store(true, Ordering::Relaxed);
+        handle.join();
+    }
+
+    #[test]
+    fn per_connection_pipelining_cap_sheds_with_429() {
+        let observer = Arc::new(CountingObserver::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut handle = start(
+            TcpListener::bind("127.0.0.1:0").unwrap(),
+            echo_handler(),
+            observer.clone(),
+            EventLoopConfig {
+                conn_max_inflight: 2,
+                ..Default::default()
+            },
+            shutdown.clone(),
+        )
+        .unwrap();
+
+        // Pipeline four requests in ONE write syscall so the loop's first
+        // fill buffers the whole burst in the parser before any dispatch
+        // (the burst counter only resets once the parser drains).
+        let mut client = TcpStream::connect(handle.addr).unwrap();
+        let mut burst = Vec::new();
+        for i in 0..4 {
+            burst.extend_from_slice(
+                format!(
+                    "POST /p{i} HTTP/1.1\r\nHost: t\r\nContent-Length: 0\r\n\
+                     Connection: keep-alive\r\n\r\n"
+                )
+                .as_bytes(),
+            );
+        }
+        client.write_all(&burst).unwrap();
+        client.flush().unwrap();
+
+        // two requests fit the burst cap; the third is shed and hangs up
+        assert_eq!(read_response(&mut client).0, 200);
+        assert_eq!(read_response(&mut client).0, 200);
+        let (status, head, _) = read_response(&mut client);
+        assert_eq!(status, 429, "{head}");
+        assert!(head.contains("Retry-After: 1"), "{head}");
+        use std::io::Read as _;
+        let mut rest = Vec::new();
+        client.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "connection closes after the shed");
+        assert_eq!(observer.conn_rejected.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            observer.rejected.load(Ordering::Relaxed),
+            0,
+            "the global dispatch queue was never consulted"
+        );
         shutdown.store(true, Ordering::Relaxed);
         handle.join();
     }

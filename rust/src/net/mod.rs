@@ -49,6 +49,9 @@ pub trait LoopObserver: Send + Sync {
     fn request_served(&self, _latency: std::time::Duration) {}
     /// One request was shed with `429` by admission control.
     fn request_rejected(&self) {}
+    /// One request was shed with `429` by the per-connection pipelining
+    /// cap (the global dispatch queue was never consulted).
+    fn request_rejected_conn(&self) {}
     /// A request entered the bounded dispatch queue.
     fn dispatch_enqueued(&self) {}
     /// A worker pulled a request off the dispatch queue.

@@ -60,6 +60,12 @@ pub struct Request {
     /// Client-supplied `X-Request-Id` header, verbatim (None when
     /// absent — the server then mints one for the trace).
     pub request_id: Option<String>,
+    /// Client-supplied `X-Deadline-Ms` header: how long the client is
+    /// willing to wait, in milliseconds from admission. Admission caps
+    /// it at `ServeConfig::reply_timeout_ms`; expired requests answer
+    /// `504` without evaluating. Unparseable or zero values read as
+    /// absent (the server deadline still applies).
+    pub deadline_ms: Option<u64>,
 }
 
 impl Request {
@@ -89,6 +95,7 @@ struct Head {
     keep_alive: bool,
     content_length: usize,
     request_id: Option<String>,
+    deadline_ms: Option<u64>,
     /// Bytes consumed by the head, including the `\r\n\r\n` terminator.
     head_len: usize,
 }
@@ -154,6 +161,7 @@ impl RequestParser {
             keep_alive: head.keep_alive,
             body,
             request_id: head.request_id,
+            deadline_ms: head.deadline_ms,
         }))
     }
 }
@@ -197,6 +205,7 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
     let mut content_type = String::new();
     let mut connection = String::new();
     let mut request_id = None;
+    let mut deadline_ms = None;
     for line in lines {
         let Some((k, v)) = line.split_once(':') else {
             continue;
@@ -218,6 +227,10 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
             connection = v.to_ascii_lowercase();
         } else if k.eq_ignore_ascii_case("x-request-id") && !v.is_empty() {
             request_id = Some(v.to_string());
+        } else if k.eq_ignore_ascii_case("x-deadline-ms") {
+            // lenient by design: a garbled client hint must not 400 a
+            // request the server deadline would still bound
+            deadline_ms = v.parse::<u64>().ok().filter(|&ms| ms > 0);
         }
     }
     if content_length > MAX_BODY {
@@ -238,6 +251,7 @@ fn parse_head(head: &[u8], head_len: usize) -> Result<Head> {
         keep_alive,
         content_length,
         request_id,
+        deadline_ms,
         head_len,
     })
 }
@@ -316,6 +330,12 @@ pub struct Response {
     /// the server-minted trace id. Lives in the head only — bodies stay
     /// bit-identical across front-ends and request ids.
     pub request_id: Option<String>,
+    /// `X-Served-By` header value: set when a circuit breaker rerouted
+    /// the request to a fallback backend, naming the backend that
+    /// actually evaluated it. Head-only, like the request id — degraded
+    /// responses stay byte-identical in the body by the paper's
+    /// forest↔DD equivalence.
+    pub served_by: Option<&'static str>,
 }
 
 impl Response {
@@ -327,6 +347,7 @@ impl Response {
             content_type: "application/json",
             retry_after_s: None,
             request_id: None,
+            served_by: None,
         }
     }
 
@@ -351,6 +372,9 @@ impl Response {
             405 => "Method Not Allowed",
             408 => "Request Timeout",
             429 => "Too Many Requests",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Internal Server Error",
         }
     }
@@ -371,6 +395,9 @@ impl Response {
         }
         if let Some(id) = &self.request_id {
             head.push_str(&format!("X-Request-Id: {id}\r\n"));
+        }
+        if let Some(backend) = self.served_by {
+            head.push_str(&format!("X-Served-By: {backend}\r\n"));
         }
         head.push_str(if keep_alive {
             "Connection: keep-alive\r\n\r\n"
@@ -563,6 +590,42 @@ mod tests {
         let text = String::from_utf8(r.to_bytes(true)).unwrap();
         assert!(text.contains("X-Request-Id: deadbeef00000001\r\n"));
         assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "body untouched");
+    }
+
+    #[test]
+    fn deadline_header_parses_leniently() {
+        for (header, expect) in [
+            ("X-Deadline-Ms: 250", Some(250)),
+            ("x-deadline-ms: 1", Some(1)),
+            ("X-Deadline-Ms: 0", None),    // zero reads as absent
+            ("X-Deadline-Ms: nope", None), // garbled hint must not 400
+            ("X-Deadline-Ms: -5", None),
+            ("X-Unrelated: 250", None),
+        ] {
+            let mut p = RequestParser::new();
+            push_str(&mut p, &format!("GET /healthz HTTP/1.1\r\n{header}\r\n\r\n"));
+            let req = p.try_next().unwrap().unwrap();
+            assert_eq!(req.deadline_ms, expect, "header: {header:?}");
+        }
+    }
+
+    #[test]
+    fn served_by_header_emits_in_head_only() {
+        let mut r = Response::json(200, &json::obj(vec![("ok", Json::Bool(true))]));
+        assert!(!String::from_utf8(r.to_bytes(true))
+            .unwrap()
+            .contains("X-Served-By"));
+        r.served_by = Some("forest");
+        let text = String::from_utf8(r.to_bytes(true)).unwrap();
+        assert!(text.contains("X-Served-By: forest\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"ok\":true}"), "body untouched");
+    }
+
+    #[test]
+    fn fault_status_reasons_are_specific() {
+        assert_eq!(Response::reason(500), "Internal Server Error");
+        assert_eq!(Response::reason(503), "Service Unavailable");
+        assert_eq!(Response::reason(504), "Gateway Timeout");
     }
 
     #[test]

@@ -76,8 +76,13 @@ pub struct ReqTrace {
     pub id: u64,
     /// The client asked for the inline breakdown (`"trace": true`).
     pub inline: bool,
+    /// Set by the endpoint layer when a circuit breaker rerouted the
+    /// request: the backend that actually served it, echoed on the wire
+    /// as `X-Served-By`.
+    pub served_by: Option<&'static str>,
     t0: Instant,
     last: Instant,
+    deadline: Option<Instant>,
     stage_us: [u64; N_STAGES],
     shard_us: [u64; MAX_TRACE_SHARDS],
     n_shards: usize,
@@ -94,8 +99,10 @@ impl ReqTrace {
         ReqTrace {
             id,
             inline: false,
+            served_by: None,
             t0,
             last: t0,
+            deadline: None,
             stage_us: [0; N_STAGES],
             shard_us: [0; MAX_TRACE_SHARDS],
             n_shards: 0,
@@ -106,6 +113,25 @@ impl ReqTrace {
     /// stage (idle keep-alive time between pipelined requests).
     pub fn mark(&mut self) {
         self.last = Instant::now();
+    }
+
+    /// Attach the request's evaluation deadline (admission sets it from
+    /// `ServeConfig::reply_timeout_ms`, capped lower by a client
+    /// `X-Deadline-Ms` header). Rides the trace through the batcher and
+    /// dispatch queues so every later stage can drop expired work.
+    pub fn set_deadline(&mut self, deadline: Instant) {
+        self.deadline = Some(deadline);
+    }
+
+    /// The request's deadline, if one was set.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.deadline
+    }
+
+    /// True when the deadline has passed. Never true for deadline-less
+    /// traces. Allocation-free (one clock read).
+    pub fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
     }
 
     /// Attribute the time since the last record/mark to `stage`.
@@ -186,6 +212,29 @@ fn stages_json(stage_us: &[u64; N_STAGES]) -> Json {
             .map(|(&name, &us)| (name, json::num(us as f64)))
             .collect(),
     )
+}
+
+// ------------------------------------------------------ eval deadline
+
+thread_local! {
+    /// The deadline of the request currently evaluating on this thread.
+    /// The router publishes it just before calling into a classifier
+    /// (deadlines cannot ride the object-safe `Classifier` trait), and
+    /// backends read it once at batch entry — the `Instant` is `Copy`,
+    /// so shard closures capture it by value onto pool worker threads.
+    static EVAL_DEADLINE: std::cell::Cell<Option<Instant>> = const { std::cell::Cell::new(None) };
+}
+
+/// Publish (or clear, with `None`) the calling thread's eval deadline.
+/// Allocation-free. Callers must clear after the classifier returns so
+/// the next request on this thread starts clean.
+pub fn set_eval_deadline(deadline: Option<Instant>) {
+    EVAL_DEADLINE.with(|d| d.set(deadline));
+}
+
+/// The eval deadline published on this thread, if any.
+pub fn eval_deadline() -> Option<Instant> {
+    EVAL_DEADLINE.with(|d| d.get())
 }
 
 // ---------------------------------------------------------------- ring
@@ -436,6 +485,17 @@ mod tests {
         t.mark(); // the sleep above is keep-alive idle, not a stage
         t.record(Stage::Parse);
         assert!(t.stage_us(Stage::Parse) < 2_000, "{t:?}");
+    }
+
+    #[test]
+    fn deadlines_ride_the_trace_and_expire() {
+        let mut t = ReqTrace::new(1);
+        assert_eq!(t.deadline(), None);
+        assert!(!t.expired(), "no deadline never expires");
+        t.set_deadline(Instant::now() + std::time::Duration::from_secs(3600));
+        assert!(!t.expired());
+        t.set_deadline(Instant::now() - std::time::Duration::from_millis(1));
+        assert!(t.expired());
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Five named injection points cover the failure modes the fault-tolerance
+//! layer must absorb:
+//!
+//! | point              | effect when it fires                                  |
+//! |--------------------|-------------------------------------------------------|
+//! | `snapshot_load`    | snapshot/bundle load returns an I/O error             |
+//! | `eval_shard_panic` | one eval shard panics mid-sweep                       |
+//! | `eval_slow`        | one eval shard sleeps [`SLOW_SHARD_MS`] before running|
+//! | `conn_read_err`    | a socket read returns `ConnectionReset`               |
+//! | `conn_write_short` | a socket write is truncated to at most one byte       |
+//!
+//! Points are armed from `FOREST_ADD_FAULT` (or `serve --fault`) with a
+//! `point:rate:seed` spec, comma-separated for several points at once:
+//!
+//! ```text
+//! FOREST_ADD_FAULT=eval_shard_panic:0.05:42,conn_read_err:0.01:7
+//! ```
+//!
+//! Each point draws from its own counter-stepped splitmix64 stream, so a
+//! given `(rate, seed)` pair replays the exact same fire/no-fire sequence
+//! run after run — a crash found under injection is reproducible by
+//! re-arming the same spec. Draw order across threads is serialised per
+//! point by the atomic counter, so the Nth draw at a point is the same
+//! regardless of which thread makes it.
+//!
+//! When nothing is armed every [`fires`] call is a single relaxed atomic
+//! load and no allocation — cheap enough to leave the hooks in the warm
+//! eval path permanently (`tests/alloc_frozen.rs` pins this).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Milliseconds one shard sleeps when `eval_slow` fires.
+pub const SLOW_SHARD_MS: u64 = 25;
+
+/// Named injection points. Discriminants index the per-point state tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum Point {
+    /// Snapshot / bundle load fails with an I/O error.
+    SnapshotLoad = 0,
+    /// An eval shard panics at the start of its sweep.
+    EvalShardPanic = 1,
+    /// An eval shard sleeps [`SLOW_SHARD_MS`] before its sweep.
+    EvalSlow = 2,
+    /// A connection read errors with `ConnectionReset`.
+    ConnReadErr = 3,
+    /// A connection write is truncated (partial-write path exercise).
+    ConnWriteShort = 4,
+}
+
+/// Number of injection points (size of the state tables).
+pub const N_POINTS: usize = 5;
+
+/// Every point, in discriminant order.
+pub const ALL_POINTS: [Point; N_POINTS] = [
+    Point::SnapshotLoad,
+    Point::EvalShardPanic,
+    Point::EvalSlow,
+    Point::ConnReadErr,
+    Point::ConnWriteShort,
+];
+
+impl Point {
+    /// Spec / metrics name of the point.
+    pub fn name(self) -> &'static str {
+        match self {
+            Point::SnapshotLoad => "snapshot_load",
+            Point::EvalShardPanic => "eval_shard_panic",
+            Point::EvalSlow => "eval_slow",
+            Point::ConnReadErr => "conn_read_err",
+            Point::ConnWriteShort => "conn_write_short",
+        }
+    }
+
+    /// Inverse of [`Point::name`].
+    pub fn from_name(name: &str) -> Option<Point> {
+        ALL_POINTS.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+/// Bitmask of armed points. The only state the disarmed fast path reads.
+static ARMED: AtomicU64 = AtomicU64::new(0);
+
+/// Per-point fire probability, stored as `f64::to_bits`.
+static RATE_BITS: [AtomicU64; N_POINTS] = [const { AtomicU64::new(0) }; N_POINTS];
+
+/// Per-point draw counter; the Nth draw hashes `seed`-offset + N.
+static DRAWS: [AtomicU64; N_POINTS] = [const { AtomicU64::new(0) }; N_POINTS];
+
+/// Per-point seed, applied as a stream offset into splitmix64.
+static SEEDS: [AtomicU64; N_POINTS] = [const { AtomicU64::new(0) }; N_POINTS];
+
+/// Per-point count of draws that fired (exported to `/metrics`).
+static FIRED: [AtomicU64; N_POINTS] = [const { AtomicU64::new(0) }; N_POINTS];
+
+/// splitmix64 output function — the same mixer `obs::trace` uses for
+/// request ids, duplicated here so the fault stream needs no other module.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// True when `point` is armed at any rate. One relaxed load.
+#[inline]
+pub fn armed(point: Point) -> bool {
+    ARMED.load(Ordering::Relaxed) & (1u64 << point as usize) != 0
+}
+
+/// Draw the next value in `point`'s stream and report whether the fault
+/// fires. Disarmed points answer `false` from a single relaxed atomic
+/// load without consuming a draw; armed points never allocate either.
+#[inline]
+pub fn fires(point: Point) -> bool {
+    if !armed(point) {
+        return false;
+    }
+    fires_armed(point)
+}
+
+/// Cold half of [`fires`], split out so the disarmed fast path stays tiny.
+#[cold]
+fn fires_armed(point: Point) -> bool {
+    let i = point as usize;
+    let n = DRAWS[i].fetch_add(1, Ordering::Relaxed);
+    let seed = SEEDS[i].load(Ordering::Relaxed);
+    let z = splitmix64(seed.wrapping_add(n.wrapping_mul(0x9e37_79b9_7f4a_7c15)));
+    // Top 53 bits -> uniform [0, 1), exact in f64.
+    let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+    let rate = f64::from_bits(RATE_BITS[i].load(Ordering::Relaxed));
+    let fire = u < rate;
+    if fire {
+        FIRED[i].fetch_add(1, Ordering::Relaxed);
+    }
+    fire
+}
+
+/// Fire the eval-stage points on the calling eval thread: panic
+/// (`eval_shard_panic`) or stall for [`SLOW_SHARD_MS`] (`eval_slow`).
+/// Serving eval paths call this once per shard (and once per guarded
+/// serial batch); disarmed it costs two relaxed loads and never
+/// allocates.
+#[inline]
+pub fn fire_eval_points() {
+    if fires(Point::EvalShardPanic) {
+        panic!("injected fault: eval_shard_panic");
+    }
+    if fires(Point::EvalSlow) {
+        std::thread::sleep(std::time::Duration::from_millis(SLOW_SHARD_MS));
+    }
+}
+
+/// Return an injected I/O error for `snapshot_load` when it fires.
+/// Snapshot/bundle loaders call this before touching the file.
+pub fn snapshot_load_err(path: &str) -> std::io::Result<()> {
+    if fires(Point::SnapshotLoad) {
+        return Err(std::io::Error::other(format!(
+            "injected fault: snapshot_load ({path})"
+        )));
+    }
+    Ok(())
+}
+
+/// How many times `point` has fired since the last [`disarm_all`].
+pub fn fired(point: Point) -> u64 {
+    FIRED[point as usize].load(Ordering::Relaxed)
+}
+
+/// Total fires across every point (the `/metrics` `faults_injected` sum).
+pub fn fired_total() -> u64 {
+    FIRED.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+}
+
+/// Parse a `point:rate:seed[,point:rate:seed...]` spec without touching
+/// the global tables. Empty spec parses to an empty list.
+pub fn parse_spec(spec: &str) -> Result<Vec<(Point, f64, u64)>, String> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut it = part.splitn(3, ':');
+        let name = it.next().unwrap_or("");
+        let point = Point::from_name(name)
+            .ok_or_else(|| format!("unknown fault point {name:?} in {part:?}"))?;
+        let rate: f64 = it
+            .next()
+            .ok_or_else(|| format!("fault spec {part:?} missing rate (point:rate:seed)"))?
+            .parse()
+            .map_err(|_| format!("fault spec {part:?} has a non-numeric rate"))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(format!("fault rate {rate} out of [0, 1] in {part:?}"));
+        }
+        let seed: u64 = it
+            .next()
+            .ok_or_else(|| format!("fault spec {part:?} missing seed (point:rate:seed)"))?
+            .parse()
+            .map_err(|_| format!("fault spec {part:?} has a non-numeric seed"))?;
+        out.push((point, rate, seed));
+    }
+    Ok(out)
+}
+
+/// Arm every point named by `spec`, resetting those points' streams and
+/// fire counters so the sequence replays from draw zero. Other points
+/// keep their state. Errors leave the tables untouched.
+pub fn arm(spec: &str) -> Result<(), String> {
+    let parsed = parse_spec(spec)?;
+    for (point, rate, seed) in parsed {
+        let i = point as usize;
+        RATE_BITS[i].store(rate.to_bits(), Ordering::Relaxed);
+        SEEDS[i].store(seed, Ordering::Relaxed);
+        DRAWS[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+        ARMED.fetch_or(1u64 << i, Ordering::Relaxed);
+    }
+    Ok(())
+}
+
+/// Arm from the `FOREST_ADD_FAULT` environment variable, if set.
+/// Invalid specs are reported, not silently ignored.
+pub fn arm_from_env() -> Result<(), String> {
+    match std::env::var("FOREST_ADD_FAULT") {
+        Ok(spec) if !spec.trim().is_empty() => arm(&spec),
+        _ => Ok(()),
+    }
+}
+
+/// Disarm every point and zero all streams and counters.
+pub fn disarm_all() {
+    ARMED.store(0, Ordering::Relaxed);
+    for i in 0..N_POINTS {
+        RATE_BITS[i].store(0, Ordering::Relaxed);
+        SEEDS[i].store(0, Ordering::Relaxed);
+        DRAWS[i].store(0, Ordering::Relaxed);
+        FIRED[i].store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_multi_point_specs_and_rejects_bad_ones() {
+        let parsed = parse_spec("eval_shard_panic:0.05:42, conn_read_err:1:7").unwrap();
+        assert_eq!(
+            parsed,
+            vec![
+                (Point::EvalShardPanic, 0.05, 42),
+                (Point::ConnReadErr, 1.0, 7),
+            ]
+        );
+        assert_eq!(parse_spec("").unwrap(), vec![]);
+        assert!(parse_spec("warp_core_breach:0.5:1").is_err());
+        assert!(parse_spec("eval_slow:1.5:1").is_err());
+        assert!(parse_spec("eval_slow:0.5").is_err());
+        assert!(parse_spec("eval_slow:x:1").is_err());
+        assert!(parse_spec("eval_slow:0.5:y").is_err());
+    }
+
+    #[test]
+    fn point_names_round_trip() {
+        for p in ALL_POINTS {
+            assert_eq!(Point::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Point::from_name("nope"), None);
+    }
+
+    // The global tables are process-wide, so every test that arms them
+    // lives in this one function to stay race-free under the parallel
+    // test runner (no other test in the crate arms faults).
+    #[test]
+    fn armed_streams_replay_exactly_and_disarm_is_total() {
+        disarm_all();
+        assert!(!fires(Point::EvalShardPanic), "disarmed points never fire");
+        assert_eq!(fired_total(), 0);
+
+        arm("eval_shard_panic:0.25:42").unwrap();
+        let first: Vec<bool> = (0..256).map(|_| fires(Point::EvalShardPanic)).collect();
+        let fired_first = fired(Point::EvalShardPanic);
+        assert!(first.iter().any(|&f| f), "rate 0.25 fires within 256 draws");
+        assert!(!first.iter().all(|&f| f), "rate 0.25 also skips draws");
+        assert_eq!(fired_first, first.iter().filter(|&&f| f).count() as u64);
+
+        // Re-arming the same spec resets the stream: exact replay.
+        arm("eval_shard_panic:0.25:42").unwrap();
+        let second: Vec<bool> = (0..256).map(|_| fires(Point::EvalShardPanic)).collect();
+        assert_eq!(first, second, "same (rate, seed) replays the same draws");
+
+        // A different seed produces a different sequence.
+        arm("eval_shard_panic:0.25:43").unwrap();
+        let third: Vec<bool> = (0..256).map(|_| fires(Point::EvalShardPanic)).collect();
+        assert_ne!(first, third, "seed selects the stream");
+
+        // Rate 1 always fires; rate 0 never does even while armed.
+        arm("conn_read_err:1:7,conn_write_short:0:7").unwrap();
+        assert!((0..32).all(|_| fires(Point::ConnReadErr)));
+        assert!((0..32).all(|_| !fires(Point::ConnWriteShort)));
+        assert!(armed(Point::ConnWriteShort), "rate 0 still counts as armed");
+
+        disarm_all();
+        for p in ALL_POINTS {
+            assert!(!armed(p));
+            assert_eq!(fired(p), 0);
+        }
+    }
+}

@@ -13,6 +13,7 @@
 //! Python never runs at request time: after `make artifacts` the Rust
 //! binary is self-contained.
 
+pub mod fault;
 pub mod mmap;
 pub mod packing;
 pub mod pool;

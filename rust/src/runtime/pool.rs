@@ -16,7 +16,7 @@
 //! configurable through `ServeConfig::eval_threads` ([`configure`]).
 
 use crate::batch::RowMatrix;
-use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -31,41 +31,67 @@ const QUEUE_DEPTH: usize = 4096;
 /// call returns, so it may capture non-`'static` references.
 pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
 
+/// A quarantined shard failure: which shard panicked and what it said.
+#[derive(Debug, Clone)]
+pub struct ShardPanic {
+    /// Index of the failing shard in the submitted job list.
+    pub shard: usize,
+    /// Panic payload rendered to text (`&str`/`String` payloads kept
+    /// verbatim, anything else summarised).
+    pub msg: String,
+}
+
+/// Render a caught panic payload to text without dropping information
+/// for the common `panic!("...")` cases. Shared with the serving router,
+/// which catches panics that unwind out of serial (unsharded) eval paths.
+pub(crate) fn payload_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 struct Task {
+    shard: usize,
     job: Box<dyn FnOnce() + Send + 'static>,
     latch: Arc<Latch>,
 }
 
-/// Completion latch: counts outstanding jobs, records panics.
+/// Completion latch: counts outstanding jobs, records the first panic.
 struct Latch {
-    state: Mutex<(usize, bool)>,
+    state: Mutex<(usize, Option<ShardPanic>)>,
     cv: Condvar,
 }
 
 impl Latch {
     fn new(jobs: usize) -> Latch {
         Latch {
-            state: Mutex::new((jobs, false)),
+            state: Mutex::new((jobs, None)),
             cv: Condvar::new(),
         }
     }
 
-    fn done(&self, panicked: bool) {
+    fn done(&self, panic: Option<ShardPanic>) {
         let mut s = self.state.lock().unwrap();
         s.0 -= 1;
-        s.1 |= panicked;
+        if s.1.is_none() {
+            s.1 = panic;
+        }
         if s.0 == 0 {
             self.cv.notify_all();
         }
     }
 
-    /// Block until every job finished; returns whether any panicked.
-    fn wait(&self) -> bool {
+    /// Block until every job finished; returns the first recorded panic.
+    fn wait(&self) -> Option<ShardPanic> {
         let mut s = self.state.lock().unwrap();
         while s.0 > 0 {
             s = self.cv.wait(s).unwrap();
         }
-        s.1
+        s.1.take()
     }
 }
 
@@ -92,9 +118,12 @@ impl WorkerPool {
                         // parks in `recv`, the rest park on the mutex.
                         let task = rx.lock().unwrap().recv();
                         match task {
-                            Ok(Task { job, latch }) => {
+                            Ok(Task { shard, job, latch }) => {
                                 let r = catch_unwind(AssertUnwindSafe(job));
-                                latch.done(r.is_err());
+                                latch.done(r.err().map(|p| ShardPanic {
+                                    shard,
+                                    msg: payload_msg(&*p),
+                                }));
                             }
                             Err(_) => return, // pool dropped
                         }
@@ -116,38 +145,72 @@ impl WorkerPool {
 
     /// Run every job to completion, fanning all but one out to the
     /// workers and executing the remaining one on the calling thread.
-    /// Panics (after all jobs finished) if any job panicked.
-    pub fn run_scoped(&self, mut jobs: Vec<ScopedJob<'_>>) {
-        let Some(inline) = jobs.pop() else { return };
+    /// Panics (after all jobs finished) with a message naming the first
+    /// failing shard and its original payload if any job panicked.
+    pub fn run_scoped(&self, jobs: Vec<ScopedJob<'_>>) {
+        if let Some(p) = self.run_quarantined(jobs) {
+            panic!("eval shard {} panicked: {}", p.shard, p.msg);
+        }
+    }
+
+    /// [`run_scoped`](WorkerPool::run_scoped) with panic quarantine:
+    /// every shard panic is caught (including on the inline path), the
+    /// remaining shards still run to completion, and the first failure
+    /// comes back as a [`ShardPanic`] instead of unwinding the caller.
+    /// Shard index = the job's position in `jobs`.
+    pub fn run_quarantined(&self, mut jobs: Vec<ScopedJob<'_>>) -> Option<ShardPanic> {
+        let Some(inline) = jobs.pop() else {
+            return None;
+        };
+        let inline_shard = jobs.len();
         if self.workers() == 0 || jobs.is_empty() {
-            inline();
-            for job in jobs {
-                job();
+            let mut first: Option<ShardPanic> = None;
+            let mut run = |shard: usize, job: ScopedJob<'_>| {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(job)) {
+                    if first.is_none() {
+                        first = Some(ShardPanic {
+                            shard,
+                            msg: payload_msg(&*p),
+                        });
+                    }
+                }
+            };
+            run(inline_shard, inline);
+            for (shard, job) in jobs.into_iter().enumerate() {
+                run(shard, job);
             }
-            return;
+            return first;
         }
         let latch = Arc::new(Latch::new(jobs.len()));
         let tx = self.tx.as_ref().expect("pool channel alive while borrowed");
-        for job in jobs {
+        for (shard, job) in jobs.into_iter().enumerate() {
             // SAFETY: only the lifetime is erased. `latch.wait()` below
             // blocks until the job has run (or the send failed and it ran
             // inline), so everything the job borrows outlives it.
             let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
             if let Err(mpsc::SendError(task)) = tx.send(Task {
+                shard,
                 job,
                 latch: latch.clone(),
             }) {
-                (task.job)();
-                task.latch.done(false);
+                let r = catch_unwind(AssertUnwindSafe(task.job));
+                task.latch.done(r.err().map(|p| ShardPanic {
+                    shard: task.shard,
+                    msg: payload_msg(&*p),
+                }));
             }
         }
         let inline_result = catch_unwind(AssertUnwindSafe(inline));
-        let workers_panicked = latch.wait();
-        if let Err(p) = inline_result {
-            resume_unwind(p);
-        }
-        if workers_panicked {
-            panic!("worker-pool shard panicked");
+        let worker_panic = latch.wait();
+        match inline_result {
+            Err(p) => {
+                let inline_panic = ShardPanic {
+                    shard: inline_shard,
+                    msg: payload_msg(&*p),
+                };
+                Some(worker_panic.unwrap_or(inline_panic))
+            }
+            Ok(()) => worker_panic,
         }
     }
 }
@@ -212,6 +275,25 @@ pub fn shard_count(rows: usize, min_per_shard: usize) -> usize {
     eval_threads().min(rows / min_per_shard.max(1)).max(1)
 }
 
+/// Outcome of a quarantined sharded run
+/// ([`run_sharded_quarantined`] / [`run_sharded2_quarantined`]).
+#[derive(Debug)]
+pub enum ShardedRun {
+    /// Batch too small to shard — caller takes its serial path.
+    TooSmall,
+    /// Every shard completed.
+    Done,
+    /// A shard panicked and was quarantined; the other shards still
+    /// completed and their output ranges are valid.
+    Quarantined {
+        /// The first quarantined failure (shard index + panic text).
+        panic: ShardPanic,
+        /// Half-open row range whose output the failing shard owned
+        /// (its contents are unspecified — re-evaluate before use).
+        rows: std::ops::Range<usize>,
+    },
+}
+
 /// Shard a batch across the global pool: cut `rows` and its parallel
 /// output slice into contiguous per-shard chunks (disjoint output ranges
 /// ⇒ results bit-identical to the serial order at any thread count), run
@@ -219,6 +301,8 @@ pub fn shard_count(rows: usize, min_per_shard: usize) -> usize {
 /// and block until all finish. Returns `false` without touching `out`
 /// when the batch is too small to shard — callers then take their serial
 /// path. This is the one sharding scaffold every batch backend shares.
+/// A shard panic unwinds the caller, naming the shard; serving paths
+/// that must survive it use [`run_sharded_quarantined`] instead.
 pub fn run_sharded<'a, F>(
     rows: RowMatrix<'a>,
     out: &mut [u32],
@@ -228,11 +312,34 @@ pub fn run_sharded<'a, F>(
 where
     F: Fn(RowMatrix<'a>, &mut [u32]) + Send + Sync,
 {
-    let shards = shard_count(rows.n_rows(), min_per_shard);
-    if shards <= 1 {
-        return false;
+    match run_sharded_quarantined(rows, out, min_per_shard, body) {
+        ShardedRun::TooSmall => false,
+        ShardedRun::Done => true,
+        ShardedRun::Quarantined { panic, .. } => {
+            panic!("eval shard {} panicked: {}", panic.shard, panic.msg)
+        }
     }
-    let chunk = rows.n_rows().div_ceil(shards);
+}
+
+/// [`run_sharded`] with panic quarantine: a panicking shard is caught,
+/// the remaining shards complete (their disjoint output chunks stay
+/// bit-identical to the serial order), and the caller gets the failing
+/// shard's index, panic text, and output row range back as data.
+pub fn run_sharded_quarantined<'a, F>(
+    rows: RowMatrix<'a>,
+    out: &mut [u32],
+    min_per_shard: usize,
+    body: F,
+) -> ShardedRun
+where
+    F: Fn(RowMatrix<'a>, &mut [u32]) + Send + Sync,
+{
+    let n_rows = rows.n_rows();
+    let shards = shard_count(n_rows, min_per_shard);
+    if shards <= 1 {
+        return ShardedRun::TooSmall;
+    }
+    let chunk = n_rows.div_ceil(shards);
     let body = &body;
     let jobs: Vec<ScopedJob<'_>> = out
         .chunks_mut(chunk)
@@ -250,8 +357,17 @@ where
         })
         .collect();
     crate::obs::trace::note_shard_run(jobs.len());
-    global().run_scoped(jobs);
-    true
+    match global().run_quarantined(jobs) {
+        None => ShardedRun::Done,
+        Some(panic) => {
+            let start = (panic.shard * chunk).min(n_rows);
+            let end = (start + chunk).min(n_rows);
+            ShardedRun::Quarantined {
+                panic,
+                rows: start..end,
+            }
+        }
+    }
 }
 
 /// [`run_sharded`] with a second per-row output slice (classes + steps):
@@ -268,13 +384,35 @@ pub fn run_sharded2<'a, F>(
 where
     F: Fn(RowMatrix<'a>, &mut [u32], &mut [u32]) + Send + Sync,
 {
+    match run_sharded2_quarantined(rows, out_a, out_b, min_per_shard, body) {
+        ShardedRun::TooSmall => false,
+        ShardedRun::Done => true,
+        ShardedRun::Quarantined { panic, .. } => {
+            panic!("eval shard {} panicked: {}", panic.shard, panic.msg)
+        }
+    }
+}
+
+/// [`run_sharded2`] with panic quarantine — see
+/// [`run_sharded_quarantined`] for the contract.
+pub fn run_sharded2_quarantined<'a, F>(
+    rows: RowMatrix<'a>,
+    out_a: &mut [u32],
+    out_b: &mut [u32],
+    min_per_shard: usize,
+    body: F,
+) -> ShardedRun
+where
+    F: Fn(RowMatrix<'a>, &mut [u32], &mut [u32]) + Send + Sync,
+{
     debug_assert_eq!(out_a.len(), rows.n_rows());
     debug_assert_eq!(out_b.len(), rows.n_rows());
-    let shards = shard_count(rows.n_rows(), min_per_shard);
+    let n_rows = rows.n_rows();
+    let shards = shard_count(n_rows, min_per_shard);
     if shards <= 1 {
-        return false;
+        return ShardedRun::TooSmall;
     }
-    let chunk = rows.n_rows().div_ceil(shards);
+    let chunk = n_rows.div_ceil(shards);
     let body = &body;
     let jobs: Vec<ScopedJob<'_>> = out_a
         .chunks_mut(chunk)
@@ -291,8 +429,17 @@ where
         })
         .collect();
     crate::obs::trace::note_shard_run(jobs.len());
-    global().run_scoped(jobs);
-    true
+    match global().run_quarantined(jobs) {
+        None => ShardedRun::Done,
+        Some(panic) => {
+            let start = (panic.shard * chunk).min(n_rows);
+            let end = (start + chunk).min(n_rows);
+            ShardedRun::Quarantined {
+                panic,
+                rows: start..end,
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -359,7 +506,13 @@ mod tests {
             ];
             pool.run_scoped(jobs);
         }));
-        assert!(result.is_err(), "panic must propagate to the caller");
+        // Regression: the re-raised panic names the failing shard and
+        // carries the original payload text (it used to be a generic
+        // "worker-pool shard panicked").
+        let payload = result.expect_err("panic must propagate to the caller");
+        let msg = payload_msg(&*payload);
+        assert!(msg.contains("shard 0"), "message names the shard: {msg}");
+        assert!(msg.contains("shard boom"), "payload preserved: {msg}");
         assert_eq!(finished.load(Ordering::Relaxed), 2, "other shards still ran");
         // the pool survives a panicked job
         let ok = AtomicU64::new(0);
@@ -373,6 +526,105 @@ mod tests {
         ];
         pool.run_scoped(jobs);
         assert_eq!(ok.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn quarantine_reports_the_panic_as_data_and_completes_the_rest() {
+        let pool = WorkerPool::new(2);
+        let finished = Arc::new(AtomicU64::new(0));
+        let f1 = finished.clone();
+        let f2 = finished.clone();
+        let jobs: Vec<ScopedJob<'_>> = vec![
+            Box::new(move || {
+                f1.fetch_add(1, Ordering::Relaxed);
+            }),
+            Box::new(|| panic!("quarantine me")),
+            Box::new(move || {
+                f2.fetch_add(1, Ordering::Relaxed);
+            }),
+        ];
+        let p = pool.run_quarantined(jobs).expect("panic must be reported");
+        assert_eq!(p.shard, 1);
+        assert_eq!(p.msg, "quarantine me");
+        assert_eq!(finished.load(Ordering::Relaxed), 2, "other shards still ran");
+        // clean runs report nothing
+        assert!(pool.run_quarantined(vec![Box::new(|| {})]).is_none());
+        assert!(pool.run_quarantined(Vec::new()).is_none());
+        // the inline (last) job's panic is quarantined too, with a
+        // String payload preserved verbatim
+        let p = pool
+            .run_quarantined(vec![Box::new(|| {
+                std::panic::panic_any("inline 7".to_string())
+            })])
+            .expect("inline panic must be reported");
+        assert_eq!(p.shard, 0);
+        assert_eq!(p.msg, "inline 7");
+        // zero-worker pools quarantine on the inline-everything path
+        let inline_pool = WorkerPool::new(0);
+        let ran = AtomicU64::new(0);
+        let jobs: Vec<ScopedJob<'_>> = vec![
+            Box::new(|| panic!("first")),
+            Box::new(|| {
+                ran.fetch_add(1, Ordering::Relaxed);
+            }),
+            Box::new(|| panic!("last")),
+        ];
+        let p = inline_pool.run_quarantined(jobs).expect("panic reported");
+        assert_eq!(ran.load(Ordering::Relaxed), 1, "healthy shard still ran");
+        // the inline job (shard 2) runs first on this path, so it is
+        // the first recorded failure
+        assert_eq!((p.shard, p.msg.as_str()), (2, "last"));
+    }
+
+    #[test]
+    fn run_sharded_quarantined_names_the_failing_row_range() {
+        let cells: Vec<f32> = (0..4096).map(|i| i as f32).collect();
+        let rows = RowMatrix::new(&cells, 1).unwrap();
+        let mut out = vec![0u32; 4096];
+        let outcome = run_sharded_quarantined(rows, &mut out, 64, |shard, out_chunk| {
+            if shard.row(0)[0] == 0.0 {
+                panic!("poisoned shard");
+            }
+            for (slot, row) in out_chunk.iter_mut().zip(shard.iter()) {
+                *slot = row[0] as u32 + 1;
+            }
+        });
+        match outcome {
+            ShardedRun::TooSmall => assert_eq!(eval_threads(), 1),
+            ShardedRun::Done => panic!("shard 0 must be quarantined"),
+            ShardedRun::Quarantined { panic, rows: range } => {
+                assert_eq!(panic.shard, 0);
+                assert_eq!(panic.msg, "poisoned shard");
+                assert_eq!(range.start, 0);
+                assert!(!range.is_empty() && range.end <= 4096);
+                // every row outside the quarantined range still computed
+                for (i, &v) in out.iter().enumerate().skip(range.end) {
+                    assert_eq!(v, i as u32 + 1, "row {i}");
+                }
+            }
+        }
+        let mut a = vec![0u32; 4096];
+        let mut b = vec![0u32; 4096];
+        let outcome = run_sharded2_quarantined(rows, &mut a, &mut b, 64, |shard, ca, cb| {
+            if shard.row(0)[0] == 0.0 {
+                panic!("poisoned shard");
+            }
+            for ((sa, sb), row) in ca.iter_mut().zip(cb.iter_mut()).zip(shard.iter()) {
+                *sa = row[0] as u32 + 1;
+                *sb = row[0] as u32 + 2;
+            }
+        });
+        match outcome {
+            ShardedRun::TooSmall => assert_eq!(eval_threads(), 1),
+            ShardedRun::Done => panic!("shard 0 must be quarantined"),
+            ShardedRun::Quarantined { panic, rows: range } => {
+                assert_eq!((panic.shard, range.start), (0, 0));
+                for i in range.end..4096 {
+                    assert_eq!(a[i], i as u32 + 1, "row {i}");
+                    assert_eq!(b[i], i as u32 + 2, "row {i}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,295 @@
+//! Per-`(model, backend)` circuit breakers for the serving router.
+//!
+//! Every eval outcome feeds a small state machine keyed by the exact
+//! model version and backend that produced it:
+//!
+//! - **Closed** — traffic flows; failures are remembered in a sliding
+//!   window ([`FAILURE_WINDOW`]). Reaching the configured threshold
+//!   inside the window trips the breaker.
+//! - **Open** — the router routes around this backend (the degradation
+//!   chain `frozen → dd → forest` is bit-identical, so rerouting is
+//!   correctness-preserving). After the cooldown the next [`allow`]
+//!   call admits exactly one probe request.
+//! - **Half-open** — one probe is in flight; its success closes the
+//!   breaker, its failure re-opens it for another cooldown.
+//!
+//! The warm path is cheap by construction: [`allow`](BreakerBoard::allow)
+//! and [`record_success`](BreakerBoard::record_success) first check one
+//! relaxed atomic (`tracked`) and return immediately while no breaker
+//! has ever recorded a failure — a healthy server never takes the lock.
+//! Keys use the full version id (`name@vN`), so a hot-swap naturally
+//! starts the new version with fresh breakers.
+
+use crate::serve::BackendKind;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Sliding window over which failures are counted towards the trip
+/// threshold. Older failures age out and no longer count.
+pub const FAILURE_WINDOW: Duration = Duration::from_secs(10);
+
+/// One backend slot's breaker state.
+#[derive(Debug)]
+enum State {
+    /// Serving normally; recent failure instants ride along.
+    Closed { failures: Vec<Instant> },
+    /// Tripped at `since`; routed around until the cooldown elapses.
+    Open { since: Instant },
+    /// One probe in flight; everyone else is still routed around.
+    HalfOpen,
+}
+
+/// Breaker board shared by all router paths (single and batch).
+#[derive(Debug)]
+pub struct BreakerBoard {
+    /// Failures within [`FAILURE_WINDOW`] that trip a breaker
+    /// (`0` disables the board entirely: never trip, always allow).
+    threshold: usize,
+    /// How long an open breaker waits before admitting a probe.
+    cooldown: Duration,
+    slots: Mutex<HashMap<String, [Option<State>; 4]>>,
+    /// Entries holding any state at all — the warm-path gate: while
+    /// zero, `allow`/`record_success` return without locking.
+    tracked: AtomicU64,
+    /// Breakers currently open or half-open (gauge).
+    open: AtomicU64,
+    /// Times any breaker transitioned closed → open (counter).
+    trips: AtomicU64,
+}
+
+fn idx(kind: BackendKind) -> usize {
+    match kind {
+        BackendKind::Forest => 0,
+        BackendKind::Dd => 1,
+        BackendKind::Frozen => 2,
+        BackendKind::Xla => 3,
+    }
+}
+
+const KINDS: [BackendKind; 4] = [
+    BackendKind::Forest,
+    BackendKind::Dd,
+    BackendKind::Frozen,
+    BackendKind::Xla,
+];
+
+impl BreakerBoard {
+    /// A board that trips after `threshold` failures inside
+    /// [`FAILURE_WINDOW`] and probes after `cooldown`.
+    pub fn new(threshold: usize, cooldown: Duration) -> BreakerBoard {
+        BreakerBoard {
+            threshold,
+            cooldown,
+            slots: Mutex::new(HashMap::new()),
+            tracked: AtomicU64::new(0),
+            open: AtomicU64::new(0),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    /// May a request be routed to `(model, kind)` right now? An open
+    /// breaker past its cooldown flips to half-open here and admits the
+    /// calling request as its probe.
+    pub fn allow(&self, model: &str, kind: BackendKind) -> bool {
+        if self.threshold == 0 || self.tracked.load(Ordering::Relaxed) == 0 {
+            return true;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let Some(entry) = slots.get_mut(model) else {
+            return true;
+        };
+        match &entry[idx(kind)] {
+            None | Some(State::Closed { .. }) => true,
+            Some(State::Open { since }) => {
+                if since.elapsed() >= self.cooldown {
+                    entry[idx(kind)] = Some(State::HalfOpen);
+                    true // this caller is the probe
+                } else {
+                    false
+                }
+            }
+            Some(State::HalfOpen) => false, // a probe is already in flight
+        }
+    }
+
+    /// Record a successful eval: closes a half-open breaker, clears any
+    /// remembered failures.
+    pub fn record_success(&self, model: &str, kind: BackendKind) {
+        if self.threshold == 0 || self.tracked.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        let mut slots = self.slots.lock().unwrap();
+        let Some(entry) = slots.get_mut(model) else {
+            return;
+        };
+        let slot = &mut entry[idx(kind)];
+        match slot {
+            None => {}
+            Some(State::Closed { failures }) if failures.is_empty() => {}
+            Some(State::Closed { .. }) => {
+                *slot = Some(State::Closed { failures: Vec::new() });
+            }
+            Some(State::Open { .. }) | Some(State::HalfOpen) => {
+                *slot = Some(State::Closed { failures: Vec::new() });
+                // saturating: a spurious success must not wrap the gauge
+                let _ = self.open.fetch_update(
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                    |n| n.checked_sub(1),
+                );
+            }
+        }
+    }
+
+    /// Record a failed eval (error or quarantined panic). Enough of
+    /// these inside [`FAILURE_WINDOW`] trip the breaker; a failure while
+    /// half-open re-opens it immediately.
+    pub fn record_failure(&self, model: &str, kind: BackendKind) {
+        if self.threshold == 0 {
+            return;
+        }
+        let now = Instant::now();
+        let mut slots = self.slots.lock().unwrap();
+        let entry = slots.entry(model.to_string()).or_insert_with(|| {
+            self.tracked.fetch_add(1, Ordering::Relaxed);
+            [None, None, None, None]
+        });
+        let slot = &mut entry[idx(kind)];
+        match slot {
+            Some(State::Open { .. }) => {} // already routed around
+            Some(State::HalfOpen) => {
+                // the probe failed: straight back to open
+                *slot = Some(State::Open { since: now });
+            }
+            None | Some(State::Closed { .. }) => {
+                let mut failures = match slot.take() {
+                    Some(State::Closed { failures }) => failures,
+                    _ => Vec::new(),
+                };
+                failures.retain(|t| now.duration_since(*t) < FAILURE_WINDOW);
+                failures.push(now);
+                if failures.len() >= self.threshold {
+                    *slot = Some(State::Open { since: now });
+                    self.open.fetch_add(1, Ordering::Relaxed);
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    *slot = Some(State::Closed { failures });
+                }
+            }
+        }
+    }
+
+    /// Breakers currently open or half-open (the `/metrics` `degraded`
+    /// flag is `open_count() > 0`).
+    pub fn open_count(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// Total closed → open transitions since startup.
+    pub fn trips_total(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Every `(model, backend)` pair whose breaker is open or half-open,
+    /// for `/readyz` and diagnostics. Sorted for stable output.
+    pub fn open_breakers(&self) -> Vec<(String, BackendKind)> {
+        let slots = self.slots.lock().unwrap();
+        let mut out = Vec::new();
+        for (model, entry) in slots.iter() {
+            for kind in KINDS {
+                if matches!(
+                    entry[idx(kind)],
+                    Some(State::Open { .. }) | Some(State::HalfOpen)
+                ) {
+                    out.push((model.clone(), kind));
+                }
+            }
+        }
+        out.sort_by(|a, b| (&a.0, idx(a.1)).cmp(&(&b.0, idx(b.1))));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn board() -> BreakerBoard {
+        BreakerBoard::new(3, Duration::from_millis(40))
+    }
+
+    #[test]
+    fn trips_after_threshold_failures_and_reroutes() {
+        let b = board();
+        assert!(b.allow("m@v1", BackendKind::Frozen));
+        b.record_failure("m@v1", BackendKind::Frozen);
+        b.record_failure("m@v1", BackendKind::Frozen);
+        assert!(b.allow("m@v1", BackendKind::Frozen), "below threshold");
+        assert_eq!(b.open_count(), 0);
+        b.record_failure("m@v1", BackendKind::Frozen);
+        assert!(!b.allow("m@v1", BackendKind::Frozen), "tripped");
+        assert_eq!(b.open_count(), 1);
+        assert_eq!(b.trips_total(), 1);
+        // the sibling backend and other models are untouched
+        assert!(b.allow("m@v1", BackendKind::Dd));
+        assert!(b.allow("other@v1", BackendKind::Frozen));
+        assert_eq!(
+            b.open_breakers(),
+            vec![("m@v1".to_string(), BackendKind::Frozen)]
+        );
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success_and_reopens_on_failure() {
+        let b = board();
+        for _ in 0..3 {
+            b.record_failure("m@v1", BackendKind::Dd);
+        }
+        assert!(!b.allow("m@v1", BackendKind::Dd));
+        std::thread::sleep(Duration::from_millis(60));
+        // past cooldown: exactly one probe gets through
+        assert!(b.allow("m@v1", BackendKind::Dd), "probe admitted");
+        assert!(!b.allow("m@v1", BackendKind::Dd), "second probe held back");
+        assert_eq!(b.open_count(), 1, "half-open still counts as degraded");
+        // probe failure re-opens for another full cooldown
+        b.record_failure("m@v1", BackendKind::Dd);
+        assert!(!b.allow("m@v1", BackendKind::Dd));
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(b.allow("m@v1", BackendKind::Dd));
+        // probe success closes and clears history: three fresh failures
+        // are needed to trip again
+        b.record_success("m@v1", BackendKind::Dd);
+        assert_eq!(b.open_count(), 0);
+        assert!(b.open_breakers().is_empty());
+        b.record_failure("m@v1", BackendKind::Dd);
+        b.record_failure("m@v1", BackendKind::Dd);
+        assert!(b.allow("m@v1", BackendKind::Dd));
+        assert_eq!(b.trips_total(), 1, "trips count only closed → open");
+    }
+
+    #[test]
+    fn success_clears_the_failure_window() {
+        let b = board();
+        b.record_failure("m@v1", BackendKind::Forest);
+        b.record_failure("m@v1", BackendKind::Forest);
+        b.record_success("m@v1", BackendKind::Forest);
+        b.record_failure("m@v1", BackendKind::Forest);
+        b.record_failure("m@v1", BackendKind::Forest);
+        assert!(b.allow("m@v1", BackendKind::Forest), "window was cleared");
+        assert_eq!(b.open_count(), 0);
+    }
+
+    #[test]
+    fn zero_threshold_disables_the_board() {
+        let b = BreakerBoard::new(0, Duration::from_millis(1));
+        for _ in 0..100 {
+            b.record_failure("m@v1", BackendKind::Frozen);
+        }
+        assert!(b.allow("m@v1", BackendKind::Frozen));
+        assert_eq!(b.open_count(), 0);
+        assert_eq!(b.trips_total(), 0);
+        assert!(b.open_breakers().is_empty());
+    }
+}

@@ -128,6 +128,30 @@ pub struct ServeConfig {
     pub log_level: String,
     /// Emit log records as JSON lines instead of human-readable text.
     pub log_json: bool,
+    /// Per-connection in-flight request cap: a pipelining client with
+    /// more than this many parsed-but-unanswered requests on one
+    /// connection gets `429` + `Retry-After` for the excess, before the
+    /// global dispatch queue is touched (one greedy connection cannot
+    /// starve the rest). `0` = unlimited (the default: the global queue
+    /// caps alone apply).
+    pub conn_max_inflight: usize,
+    /// Eval failures (errors or quarantined panics) within the breaker's
+    /// 10 s sliding window that open a `(model, backend)` circuit
+    /// breaker. While open, requests are transparently served by the
+    /// next backend in the bit-identical chain `frozen → dd → forest`
+    /// (`X-Served-By` announces the reroute). `0` disables breakers.
+    pub breaker_threshold: usize,
+    /// How long an open breaker waits before admitting a half-open
+    /// probe request whose success re-closes it, in milliseconds.
+    pub breaker_cooldown_ms: u64,
+    /// Deterministic fault-injection spec, `point:rate:seed` entries
+    /// separated by commas (e.g. `eval_shard_panic:0.05:42`); empty =
+    /// disarmed. Points: `snapshot_load`, `eval_shard_panic`,
+    /// `eval_slow`, `conn_read_err`, `conn_write_short`. The
+    /// `FOREST_ADD_FAULT` env var arms additional points at startup.
+    /// Same spec + same request sequence = same faults (seeded,
+    /// counter-stepped draws) — the chaos harness, not a prod knob.
+    pub fault: String,
 }
 
 impl Default for ServeConfig {
@@ -156,6 +180,10 @@ impl Default for ServeConfig {
             enable_xla: true,
             log_level: "info".into(),
             log_json: false,
+            conn_max_inflight: 0,
+            breaker_threshold: 3,
+            breaker_cooldown_ms: 1_000,
+            fault: String::new(),
         }
     }
 }
@@ -233,6 +261,18 @@ impl ServeConfig {
         if let Some(b) = v.get("log_json").and_then(Json::as_bool) {
             cfg.log_json = b;
         }
+        if let Some(n) = v.get_i64("conn_max_inflight") {
+            cfg.conn_max_inflight = n as usize;
+        }
+        if let Some(n) = v.get_i64("breaker_threshold") {
+            cfg.breaker_threshold = n as usize;
+        }
+        if let Some(n) = v.get_i64("breaker_cooldown_ms") {
+            cfg.breaker_cooldown_ms = n as u64;
+        }
+        if let Some(s) = v.get_str("fault") {
+            cfg.fault = s.to_string();
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -293,6 +333,26 @@ impl ServeConfig {
                 "tile_bytes must be at most 1 GiB (0 = auto)",
             ));
         }
+        // Wrap defence, as above: a negative JSON value must read as a
+        // misconfiguration, not as "unlimited pipelining".
+        if self.conn_max_inflight > (1 << 24) {
+            return Err(Error::invalid(
+                "conn_max_inflight must be at most 2^24 (0 = unlimited)",
+            ));
+        }
+        if self.breaker_threshold > (1 << 24) {
+            return Err(Error::invalid(
+                "breaker_threshold must be at most 2^24 (0 = breakers disabled)",
+            ));
+        }
+        if self.breaker_cooldown_ms == 0 {
+            return Err(Error::invalid(
+                "breaker_cooldown_ms must be positive (an open breaker needs a probe interval)",
+            ));
+        }
+        if !self.fault.is_empty() {
+            crate::runtime::fault::parse_spec(&self.fault).map_err(Error::invalid)?;
+        }
         crate::obs::log::Level::parse(&self.log_level)?;
         Ok(())
     }
@@ -341,6 +401,13 @@ impl ServeConfig {
             ("enable_xla", Json::Bool(self.enable_xla)),
             ("log_level", json::s(self.log_level.clone())),
             ("log_json", Json::Bool(self.log_json)),
+            ("conn_max_inflight", json::num(self.conn_max_inflight as f64)),
+            ("breaker_threshold", json::num(self.breaker_threshold as f64)),
+            (
+                "breaker_cooldown_ms",
+                json::num(self.breaker_cooldown_ms as f64),
+            ),
+            ("fault", json::s(self.fault.clone())),
         ])
     }
 }
@@ -370,6 +437,10 @@ mod tests {
             dispatch_cap: 48,
             log_level: "debug".into(),
             log_json: true,
+            conn_max_inflight: 12,
+            breaker_threshold: 5,
+            breaker_cooldown_ms: 250,
+            fault: "eval_shard_panic:0.05:42,eval_slow:0.1:7".into(),
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -387,6 +458,10 @@ mod tests {
         assert_eq!(back.dispatch_cap, 48);
         assert_eq!(back.log_level, "debug");
         assert!(back.log_json);
+        assert_eq!(back.conn_max_inflight, 12);
+        assert_eq!(back.breaker_threshold, 5);
+        assert_eq!(back.breaker_cooldown_ms, 250);
+        assert_eq!(back.fault, "eval_shard_panic:0.05:42,eval_slow:0.1:7");
     }
 
     #[test]
@@ -463,6 +538,23 @@ mod tests {
             ServeConfig::from_json(&Json::parse(r#"{"dispatch_cap": -1}"#).unwrap()).is_err()
         );
         assert!(ServeConfig::from_json(&Json::parse(r#"{"io_mode": "tokio"}"#).unwrap()).is_err());
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"conn_max_inflight": -1}"#).unwrap())
+                .is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"breaker_cooldown_ms": 0}"#).unwrap())
+                .is_err()
+        );
+        // the fault spec is validated up front, not at arming time
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"fault": "warp_core:0.5:1"}"#).unwrap())
+                .is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"fault": "eval_slow:1.5:1"}"#).unwrap())
+                .is_err()
+        );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"log_level": "loud"}"#).unwrap()).is_err()
         );

@@ -8,8 +8,12 @@
 //! makes the two modes bit-identical on the wire.
 //!
 //! Endpoints:
-//! - `GET  /healthz`          → `{"ok": true, "models": n}` (readiness:
+//! - `GET  /healthz`          → `{"ok": true, "models": n}` (liveness:
 //!   the registry is booted and serving `n` models)
+//! - `GET  /readyz`           → readiness: `200` when models are loaded
+//!   and no circuit breaker is open, `503` + the open `(model, backend)`
+//!   pairs otherwise (a degraded-but-serving replica keeps `/healthz`
+//!   green while load balancers drain on `/readyz`)
 //! - `GET  /metrics`          → server metrics snapshot (end-to-end
 //!   latency quantiles, connection gauges, `429` shed count, per-backend
 //!   histograms); `?format=prometheus` renders the same series in
@@ -30,8 +34,13 @@
 //! `steps` then travel in the query string. Responses are always JSON.
 //!
 //! Backpressure: [`Error::Overloaded`] (a full batcher or dispatch
-//! queue) maps to `429 Too Many Requests` + `Retry-After: 1`; every
-//! other handler error maps to `400`.
+//! queue) maps to `429 Too Many Requests` + `Retry-After: 1`. Fault
+//! containment: an expired deadline ([`Error::DeadlineExceeded`] — the
+//! configured reply timeout, capped lower by a client `X-Deadline-Ms`
+//! header) maps to `504`, a quarantined eval panic with no healthy
+//! fallback ([`Error::EvalPanic`]) to `500`, and a breaker-rerouted
+//! request announces its actual backend via `X-Served-By`. Every other
+//! handler error maps to `400`.
 
 use crate::batch::RowMatrixBuf;
 use crate::error::{Error, Result};
@@ -53,6 +62,20 @@ const RETRY_AFTER_S: u32 = 1;
 /// spans and echoes the request id (client's verbatim, server-minted
 /// hex otherwise) as `X-Request-Id` on every response.
 pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Response {
+    // Every request gets a deadline: the configured reply timeout,
+    // capped lower by the client's `X-Deadline-Ms`. It is published
+    // thread-locally so the router and the frozen sweep (which run on
+    // this thread) can enforce it without threading a parameter through
+    // the object-safe `Classifier` trait; batcher jobs carry it
+    // explicitly across the thread hop.
+    let cap = router.reply_timeout();
+    let budget = req
+        .deadline_ms
+        .map(Duration::from_millis)
+        .unwrap_or(cap)
+        .min(cap);
+    trace.set_deadline(Instant::now() + budget);
+    obs_trace::set_eval_deadline(trace.deadline());
     let mut resp = match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => Response::json(
             200,
@@ -64,6 +87,7 @@ pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Res
                 ),
             ]),
         ),
+        ("GET", "/readyz") => readyz(router),
         ("GET", "/metrics") => match req.param("format") {
             Some("prometheus") => Response {
                 status: 200,
@@ -71,6 +95,7 @@ pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Res
                 content_type: "text/plain; version=0.0.4",
                 retry_after_s: None,
                 request_id: None,
+                served_by: None,
             },
             Some(other) => {
                 Response::error(400, format!("unknown metrics format '{other}'"))
@@ -93,7 +118,11 @@ pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Res
         ("GET", _) | ("POST", _) => Response::error(404, format!("no such path {}", req.path)),
         _ => Response::error(405, "method not allowed"),
     };
+    // clear the thread-local so the next request on this worker thread
+    // (or a non-request caller) starts without a stale deadline
+    obs_trace::set_eval_deadline(None);
     trace.record(Stage::Serialize);
+    resp.served_by = trace.served_by;
     resp.request_id = Some(
         req.request_id
             .clone()
@@ -102,8 +131,34 @@ pub fn respond(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Res
     resp
 }
 
+/// Readiness probe: `200` only while models are loaded and every
+/// circuit breaker is closed. A degraded replica (open breaker) keeps
+/// serving — `/healthz` stays green — but reports `503` here so load
+/// balancers can drain it until the breakers re-close.
+fn readyz(router: &Arc<Router>) -> Response {
+    let models = router.registry().list().len();
+    let open = router.breakers().open_breakers();
+    let ready = models > 0 && open.is_empty();
+    let body = json::obj(vec![
+        ("ready", Json::Bool(ready)),
+        ("models", json::num(models as f64)),
+        ("degraded", Json::Bool(!open.is_empty())),
+        (
+            "open_breakers",
+            Json::Arr(
+                open.iter()
+                    .map(|(model, kind)| json::s(format!("{model}/{}", kind.name())))
+                    .collect(),
+            ),
+        ),
+    ]);
+    Response::json(if ready { 200 } else { 503 }, &body)
+}
+
 /// Map a handler result onto the wire contract: `Overloaded` is the
-/// backpressure signal (`429` + `Retry-After`), everything else `400`.
+/// backpressure signal (`429` + `Retry-After`), an expired deadline is
+/// `504`, a quarantined eval panic that no fallback could absorb is
+/// `500`, everything else `400`.
 fn into_response(result: Result<Json>, router: &Arc<Router>) -> Response {
     match result {
         Ok(j) => Response::json(200, &j),
@@ -111,6 +166,11 @@ fn into_response(result: Result<Json>, router: &Arc<Router>) -> Response {
             router.metrics().observe_rejected();
             Response::overloaded(RETRY_AFTER_S, msg)
         }
+        Err(e @ Error::DeadlineExceeded(_)) => {
+            router.metrics().observe_deadline_dropped();
+            Response::error(504, e.to_string())
+        }
+        Err(e @ Error::EvalPanic { .. }) => Response::error(500, e.to_string()),
         Err(e) => Response::error(400, e.to_string()),
     }
 }
@@ -174,6 +234,9 @@ fn serve_blocking(mut stream: TcpStream, router: &Arc<Router>, read_timeout: Dur
                     return;
                 }
             }
+        }
+        if crate::runtime::fault::fires(crate::runtime::fault::Point::ConnReadErr) {
+            return; // injected read error: drop the connection, like evented
         }
         match stream.read(&mut buf) {
             Ok(0) => return, // orderly EOF
@@ -365,6 +428,7 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
         model,
     })?;
     trace.record(Stage::Eval);
+    trace.served_by = resp.served_by.map(|k| k.name());
     let mut fields = vec![
         ("class", json::num(resp.class as f64)),
         ("label", json::s(resp.label)),
@@ -376,6 +440,10 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
         ),
         ("latency_us", json::num(resp.latency_us as f64)),
     ];
+    if let Some(kind) = resp.served_by {
+        // only degraded responses carry the field (and the header)
+        fields.push(("served_by", json::s(kind.name())));
+    }
     if trace.inline {
         // serialize/write spans postdate the body — they land in the
         // trace ring (/debug/trace), not in their own payload
@@ -435,9 +503,11 @@ fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> 
             v.get("steps").and_then(Json::as_bool).unwrap_or(false),
         )
     };
-    let (classes, steps, version) =
+    let routed =
         router.classify_batch(batch.as_matrix(), backend, model.as_deref(), want_steps)?;
+    let (classes, steps, version) = (routed.classes, routed.steps, routed.version);
     trace.record(Stage::Eval);
+    trace.served_by = routed.rerouted.map(|k| k.name());
     if trace.inline {
         // best-effort sample of the most recent sharded pool run — only
         // large batches shard, so this is often empty
@@ -461,6 +531,9 @@ fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> 
         ),
         ("model", json::s(version.id.to_string())),
     ];
+    if let Some(kind) = routed.rerouted {
+        fields.push(("served_by", json::s(kind.name())));
+    }
     if want_steps {
         fields.push((
             "steps",

@@ -160,6 +160,23 @@ pub struct ServerMetrics {
     /// Requests shed with `429` by admission control (full dispatch or
     /// batcher queue).
     pub rejected: AtomicU64,
+    /// Requests shed with `429` by the per-connection in-flight cap
+    /// (`ServeConfig::conn_max_inflight`; also included in `rejected`).
+    pub conn_rejected: AtomicU64,
+    /// Eval panics caught and quarantined (the request got `500` or was
+    /// rerouted; the process kept serving).
+    pub eval_panics: AtomicU64,
+    /// Requests answered `504` because their deadline expired (at
+    /// admission, in the batch queue, or during eval).
+    pub deadline_dropped: AtomicU64,
+    /// Requests transparently served by a fallback backend because a
+    /// circuit breaker was open.
+    pub degraded_requests: AtomicU64,
+    /// Circuit breakers currently open or half-open (gauge, mirrored
+    /// from the router's breaker board).
+    pub breakers_open: AtomicU64,
+    /// Total closed → open breaker transitions (mirrored counter).
+    pub breaker_trips: AtomicU64,
     /// Total bytes read from client sockets (both front-ends).
     pub bytes_read_total: AtomicU64,
     /// Total bytes written to client sockets (both front-ends).
@@ -191,6 +208,12 @@ impl Default for ServerMetrics {
             connections_open: AtomicU64::new(0),
             connections_total: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            conn_rejected: AtomicU64::new(0),
+            eval_panics: AtomicU64::new(0),
+            deadline_dropped: AtomicU64::new(0),
+            degraded_requests: AtomicU64::new(0),
+            breakers_open: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
             bytes_read_total: AtomicU64::new(0),
             bytes_written_total: AtomicU64::new(0),
             dispatch_queue_depth: AtomicU64::new(0),
@@ -243,6 +266,35 @@ impl ServerMetrics {
     /// Record a request shed with `429`.
     pub fn observe_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request shed with `429` by the per-connection cap
+    /// (counts in both `rejected` and `conn_rejected`).
+    pub fn observe_conn_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.conn_rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a quarantined eval panic.
+    pub fn observe_eval_panic(&self) {
+        self.eval_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request dropped because its deadline expired (`504`).
+    pub fn observe_deadline_dropped(&self) {
+        self.deadline_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request served by a fallback backend (breaker open).
+    pub fn observe_degraded(&self) {
+        self.degraded_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Mirror the breaker board's gauges into the snapshot (called by
+    /// the router after every recorded eval outcome).
+    pub fn sync_breakers(&self, open: u64, trips: u64) {
+        self.breakers_open.store(open, Ordering::Relaxed);
+        self.breaker_trips.store(trips, Ordering::Relaxed);
     }
 
     /// A connection was accepted (front-end connection gauges).
@@ -323,6 +375,48 @@ impl ServerMetrics {
             (
                 "rejected_429",
                 json::num(self.rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "conn_rejected_429",
+                json::num(self.conn_rejected.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "degraded",
+                Json::Bool(self.breakers_open.load(Ordering::Relaxed) > 0),
+            ),
+            (
+                "breakers",
+                json::obj(vec![
+                    (
+                        "open",
+                        json::num(self.breakers_open.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "trips",
+                        json::num(self.breaker_trips.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "fault",
+                json::obj(vec![
+                    (
+                        "eval_panics",
+                        json::num(self.eval_panics.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "deadline_dropped",
+                        json::num(self.deadline_dropped.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "degraded_requests",
+                        json::num(self.degraded_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "injected",
+                        json::num(crate::runtime::fault::fired_total() as f64),
+                    ),
+                ]),
             ),
             ("request_us", self.request_us.to_json()),
             (
@@ -422,6 +516,41 @@ impl ServerMetrics {
             "forest_rejected_total",
             "requests shed with 429 by admission control",
             self.rejected.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_conn_rejected_total",
+            "requests shed with 429 by the per-connection in-flight cap",
+            self.conn_rejected.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_eval_panics_total",
+            "eval panics caught and quarantined",
+            self.eval_panics.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_deadline_dropped_total",
+            "requests answered 504 after their deadline expired",
+            self.deadline_dropped.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_degraded_requests_total",
+            "requests served by a fallback backend while a breaker was open",
+            self.degraded_requests.load(Ordering::Relaxed),
+        );
+        w.gauge(
+            "forest_breakers_open",
+            "circuit breakers currently open or half-open",
+            self.breakers_open.load(Ordering::Relaxed) as f64,
+        );
+        w.counter(
+            "forest_breaker_trips_total",
+            "circuit breaker closed-to-open transitions",
+            self.breaker_trips.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_faults_injected_total",
+            "faults fired by the deterministic injection harness",
+            crate::runtime::fault::fired_total(),
         );
         w.gauge(
             "forest_connections_open",
@@ -580,6 +709,9 @@ impl crate::net::LoopObserver for ServerMetrics {
     fn request_rejected(&self) {
         self.observe_rejected();
     }
+    fn request_rejected_conn(&self) {
+        self.observe_conn_rejected();
+    }
     fn dispatch_enqueued(&self) {
         self.dispatch_queue_depth.fetch_add(1, Ordering::Relaxed);
     }
@@ -676,6 +808,18 @@ mod tests {
         assert_eq!(j.get_i64("eval_threads"), Some(4));
         assert_eq!(j.get_str("io_mode"), Some("sync"), "sync until set");
         assert_eq!(j.get_i64("rejected_429"), Some(0));
+        assert_eq!(j.get_i64("conn_rejected_429"), Some(0));
+        assert_eq!(j.get("degraded").and_then(Json::as_bool), Some(false));
+        let breakers = j.get("breakers").unwrap();
+        assert_eq!(breakers.get_i64("open"), Some(0));
+        assert_eq!(breakers.get_i64("trips"), Some(0));
+        let fault = j.get("fault").unwrap();
+        assert_eq!(fault.get_i64("eval_panics"), Some(0));
+        assert_eq!(fault.get_i64("deadline_dropped"), Some(0));
+        assert_eq!(fault.get_i64("degraded_requests"), Some(0));
+        // the injected-fault counter is process-global (other tests may
+        // arm the harness); only its presence is assertable here
+        assert!(fault.get_i64("injected").is_some());
         assert_eq!(j.get("request_us").unwrap().get_i64("count"), Some(0));
         let conns = j.get("connections").unwrap();
         assert_eq!(conns.get_i64("open"), Some(0));
@@ -698,6 +842,11 @@ mod tests {
         m.observe_request(Duration::from_micros(120));
         m.add_bytes_read(10);
         m.add_bytes_written(20);
+        m.observe_eval_panic();
+        m.observe_deadline_dropped();
+        m.observe_conn_rejected();
+        m.observe_degraded();
+        m.sync_breakers(1, 2);
         let body = m.to_prometheus();
         assert!(body.contains("# TYPE forest_request_us histogram\n"));
         // 120 µs lands in bucket [64, 127]
@@ -713,6 +862,14 @@ mod tests {
         assert!(body.contains("forest_bytes_written_total 20\n"));
         assert!(body.contains("forest_dispatch_queue_depth 0\n"));
         assert!(body.contains("forest_batch_queue_depth 0\n"));
+        assert!(body.contains("forest_eval_panics_total 1\n"));
+        assert!(body.contains("forest_deadline_dropped_total 1\n"));
+        assert!(body.contains("forest_conn_rejected_total 1\n"));
+        assert!(body.contains("forest_rejected_total 1\n"));
+        assert!(body.contains("forest_degraded_requests_total 1\n"));
+        assert!(body.contains("forest_breakers_open 1\n"));
+        assert!(body.contains("forest_breaker_trips_total 2\n"));
+        assert!(body.contains("forest_faults_injected_total "));
         // shard family headers render even before any sharded batch ran
         assert!(body.contains("# TYPE forest_eval_shard_us summary\n"));
         assert!(body.contains("# TYPE forest_eval_shard_max_us gauge\n"));

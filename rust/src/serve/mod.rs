@@ -42,8 +42,19 @@
 //! dispatch queue yields `429` + `Retry-After`. Metrics ([`metrics`])
 //! track per-backend and end-to-end latency histograms (p50/p95/p99),
 //! connection gauges, and the `429` shed count.
+//!
+//! Faults are contained, not fatal: a panicking eval shard is
+//! quarantined by the pool and surfaced as a per-request error, circuit
+//! breakers ([`breaker`]) route repeated failures around a sick backend
+//! along the bit-identical chain `frozen → dd → forest` (the reroute is
+//! announced via `X-Served-By`), and every request carries a deadline
+//! (`reply_timeout_ms`, capped lower by a client `X-Deadline-Ms`
+//! header) that is enforced from admission through the batcher into the
+//! tiled frozen sweep (`504` on expiry). `GET /readyz` reports `503`
+//! while any breaker is open.
 
 pub mod batcher;
+pub mod breaker;
 pub mod config;
 pub mod http;
 pub mod metrics;
@@ -102,6 +113,11 @@ pub struct ClassifyResponse {
     pub steps: Option<usize>,
     /// Service latency in microseconds.
     pub latency_us: u64,
+    /// Set when a circuit breaker rerouted the request around its picked
+    /// backend: the backend that actually served it (same value as
+    /// `backend`, kept separate so transports can emit `X-Served-By`
+    /// only on degraded responses). `None` on the normal path.
+    pub served_by: Option<BackendKind>,
 }
 
 #[cfg(test)]

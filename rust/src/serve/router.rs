@@ -12,21 +12,39 @@
 //! The router holds no model state of its own: a hot-swap in the
 //! registry is visible to the very next request, while requests already
 //! dispatched finish against the version they resolved (RCU via `Arc`).
+//!
+//! Fault handling lives here too: every eval attempt runs behind a
+//! panic guard (a shard panic quarantined by the pool, or an unwind out
+//! of a serial walk, becomes [`Error::EvalPanic`] for that request
+//! only), outcomes feed per-`(model, backend)` circuit breakers
+//! ([`BreakerBoard`]), and an open breaker reroutes along the
+//! bit-identical chain `frozen → dd → forest`. The per-request deadline
+//! (published thread-locally by the HTTP layer) is checked before and
+//! after eval and rides each coalesced job into the batcher, which
+//! answers expired jobs with `504` instead of evaluating them.
 
 use crate::batch::{RowMatrix, RowMatrixBuf};
 use crate::classifier::Classifier;
-use crate::engine::ModelRegistry;
+use crate::engine::{ModelRegistry, ModelVersion};
 use crate::error::{Error, Result};
 use crate::serve::batcher::{Batcher, BatcherConfig};
+use crate::serve::breaker::BreakerBoard;
 use crate::serve::metrics::ServerMetrics;
 use crate::serve::{BackendKind, ClassifyRequest, ClassifyResponse};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// A coalesced single-request job: the resolved classifier, the feature
-/// row (moved, never copied, on the hot path), and the reply channel.
-type BatchJob = (Arc<dyn Classifier>, Vec<f32>, Sender<Result<u32>>);
+/// row (moved, never copied, on the hot path), the request deadline,
+/// and the reply channel.
+type BatchJob = (
+    Arc<dyn Classifier>,
+    Vec<f32>,
+    Option<Instant>,
+    Sender<Result<u32>>,
+);
 
 /// The serving router (shared across HTTP workers).
 pub struct Router {
@@ -39,6 +57,47 @@ pub struct Router {
     batcher: OnceLock<Batcher<BatchJob>>,
     batch_cfg: BatcherConfig,
     reply_timeout: Duration,
+    breakers: BreakerBoard,
+}
+
+/// The outcome of one routed single-row dispatch, before response
+/// shaping.
+struct Routed {
+    backend: BackendKind,
+    model: String,
+    class: u32,
+    steps: Option<usize>,
+    label: String,
+    /// `Some(backend)` when a circuit breaker rerouted the request off
+    /// its picked backend.
+    rerouted: Option<BackendKind>,
+}
+
+/// The outcome of a routed explicit-batch dispatch.
+pub struct BatchRouted {
+    /// Per-row predicted classes.
+    pub classes: Vec<u32>,
+    /// Per-row §6 step counts (when requested and the backend meters).
+    pub steps: Option<Vec<u32>>,
+    /// The model version that served the batch — callers render labels
+    /// against the exact version that classified, not a later hot-swap.
+    pub version: Arc<ModelVersion>,
+    /// `Some(backend)` when a circuit breaker rerouted the batch.
+    pub rerouted: Option<BackendKind>,
+}
+
+/// Clone an eval error for fan-out to every reply of a failed batch,
+/// preserving the variants the HTTP layer maps to dedicated statuses
+/// (`504` for expired deadlines, `500` for quarantined panics).
+fn clone_eval_err(e: &Error) -> Error {
+    match e {
+        Error::DeadlineExceeded(msg) => Error::DeadlineExceeded(msg.clone()),
+        Error::EvalPanic { shard, msg } => Error::EvalPanic {
+            shard: *shard,
+            msg: msg.clone(),
+        },
+        other => Error::Serve(other.to_string()),
+    }
 }
 
 /// Batcher worker: groups a window's jobs per classifier instance
@@ -47,14 +106,29 @@ pub struct Router {
 fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<BatchJob> {
     Batcher::start("router", cfg, move |jobs: Vec<BatchJob>| {
         metrics.batch_dequeued(jobs.len() as u64);
-        metrics.observe_batch(jobs.len());
+        // Deadline-expired jobs are answered (the HTTP layer maps this
+        // to 504) and dropped before grouping: a reply nobody is
+        // waiting for any more must not cost an eval slot.
+        let now = Instant::now();
+        let (live, dead): (Vec<BatchJob>, Vec<BatchJob>) = jobs
+            .into_iter()
+            .partition(|(_, _, deadline, _)| !deadline.is_some_and(|d| now >= d));
+        for (_, _, _, reply) in dead {
+            let _ = reply.send(Err(Error::DeadlineExceeded(
+                "request expired in the batch queue".into(),
+            )));
+        }
+        if live.is_empty() {
+            return;
+        }
+        metrics.observe_batch(live.len());
         let eval_start = Instant::now();
-        let mut jobs = jobs;
+        let mut jobs = live;
         while !jobs.is_empty() {
             let clf = jobs[0].0.clone();
             let (group, rest): (Vec<BatchJob>, Vec<BatchJob>) = jobs
                 .into_iter()
-                .partition(|(c, _, _)| Arc::ptr_eq(c, &clf));
+                .partition(|(c, _, _, _)| Arc::ptr_eq(c, &clf));
             jobs = rest;
             // Rows of one group share the model's arity (enforced by
             // `check_row` before submission), so they pack into one flat
@@ -62,7 +136,7 @@ fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<Bat
             let mut rows = RowMatrixBuf::with_capacity(group[0].1.len(), group.len());
             let mut replies = Vec::with_capacity(group.len());
             let mut pack_err = None;
-            for (_, row, reply) in group {
+            for (_, row, _, reply) in group {
                 if pack_err.is_none() {
                     if let Err(e) = rows.push_row(&row) {
                         pack_err = Some(e.to_string());
@@ -72,7 +146,18 @@ fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<Bat
             }
             let result = match pack_err {
                 Some(msg) => Err(Error::Serve(msg)),
-                None => clf.classify_batch(rows.as_matrix()),
+                None => {
+                    // a backend panic must not take down the batcher
+                    // thread (and with it every future coalesced job)
+                    let matrix = rows.as_matrix();
+                    match catch_unwind(AssertUnwindSafe(|| clf.classify_batch(matrix))) {
+                        Ok(r) => r,
+                        Err(p) => Err(Error::EvalPanic {
+                            shard: 0,
+                            msg: crate::runtime::pool::payload_msg(&*p),
+                        }),
+                    }
+                }
             };
             match result {
                 Ok(classes) => {
@@ -81,9 +166,8 @@ fn start_batcher(metrics: Arc<ServerMetrics>, cfg: BatcherConfig) -> Batcher<Bat
                     }
                 }
                 Err(e) => {
-                    let msg = e.to_string();
                     for reply in replies {
-                        let _ = reply.send(Err(Error::Serve(msg.clone())));
+                        let _ = reply.send(Err(clone_eval_err(&e)));
                     }
                 }
             }
@@ -102,6 +186,7 @@ impl Router {
         default_backend: BackendKind,
         batch_cfg: BatcherConfig,
         reply_timeout: Duration,
+        breakers: BreakerBoard,
     ) -> Router {
         Router {
             registry,
@@ -110,6 +195,7 @@ impl Router {
             batcher: OnceLock::new(),
             batch_cfg,
             reply_timeout,
+            breakers,
         }
     }
 
@@ -126,6 +212,17 @@ impl Router {
     /// The metrics registry.
     pub fn metrics(&self) -> &Arc<ServerMetrics> {
         &self.metrics
+    }
+
+    /// The circuit-breaker board (`/readyz` reads open breakers here).
+    pub fn breakers(&self) -> &BreakerBoard {
+        &self.breakers
+    }
+
+    /// The per-request time budget: how long a coalesced request waits
+    /// for its batch, and the default (and cap) for request deadlines.
+    pub fn reply_timeout(&self) -> Duration {
+        self.reply_timeout
     }
 
     /// Default backend for requests without an override.
@@ -166,16 +263,17 @@ impl Router {
     pub fn classify(&self, req: &ClassifyRequest) -> Result<ClassifyResponse> {
         let start = Instant::now();
         match self.dispatch(req.model.as_deref(), req.backend, &req.features) {
-            Ok((backend, model, class, steps, label)) => {
+            Ok(routed) => {
                 let latency = start.elapsed();
-                self.metrics.observe(backend, latency);
+                self.metrics.observe(routed.backend, latency);
                 Ok(ClassifyResponse {
-                    class,
-                    label,
-                    backend,
-                    model,
-                    steps,
+                    class: routed.class,
+                    label: routed.label,
+                    backend: routed.backend,
+                    model: routed.model,
+                    steps: routed.steps,
                     latency_us: latency.as_micros() as u64,
+                    served_by: routed.rerouted,
                 })
             }
             Err(e) => {
@@ -185,23 +283,69 @@ impl Router {
         }
     }
 
-    fn dispatch(
+    /// Backend attempt order for one request: the picked backend first,
+    /// then the bit-identical degradation chain `frozen → dd → forest`
+    /// restricted to backends the model actually has — all filtered by
+    /// breaker state. When every breaker in the chain is open (probes
+    /// already in flight), the picked backend is attempted anyway: the
+    /// backends are interchangeable, so failing open keeps serving and
+    /// the outcome feeds the breaker either way.
+    fn candidates(
         &self,
-        model: Option<&str>,
-        requested: Option<BackendKind>,
+        version: &ModelVersion,
+        primary: BackendKind,
+        model_key: &str,
+    ) -> Vec<BackendKind> {
+        let mut chain = vec![primary];
+        for kind in [BackendKind::Frozen, BackendKind::Dd, BackendKind::Forest] {
+            if kind != primary && version.has(kind) {
+                chain.push(kind);
+            }
+        }
+        let allowed: Vec<BackendKind> = chain
+            .iter()
+            .copied()
+            .filter(|&kind| self.breakers.allow(model_key, kind))
+            .collect();
+        if allowed.is_empty() {
+            vec![primary]
+        } else {
+            allowed
+        }
+    }
+
+    /// Feed one eval outcome to the breaker board and mirror its gauges
+    /// into the metrics snapshot.
+    fn note_outcome(&self, model_key: &str, kind: BackendKind, ok: bool) {
+        if ok {
+            self.breakers.record_success(model_key, kind);
+        } else {
+            self.breakers.record_failure(model_key, kind);
+        }
+        self.metrics
+            .sync_breakers(self.breakers.open_count(), self.breakers.trips_total());
+    }
+
+    /// One eval attempt against one backend: batch-first backends go
+    /// through the dynamic batcher, single-row walkers run inline behind
+    /// a panic guard. A result computed after the deadline is discarded
+    /// — the frozen sweep may have bailed out mid-batch, so a late
+    /// answer is not guaranteed complete.
+    fn eval_single(
+        &self,
+        version: &ModelVersion,
+        kind: BackendKind,
         features: &[f32],
-    ) -> Result<(BackendKind, String, u32, Option<usize>, String)> {
-        let version = self.registry.get(model)?;
-        let backend = self.pick_backend(&version, requested);
-        let slot = version.slot(backend)?.clone();
-        version.check_row(features)?;
-        let (class, steps) = if slot.batch_first {
+        deadline: Option<Instant>,
+    ) -> Result<(u32, Option<usize>)> {
+        let slot = version.slot(kind)?.clone();
+        let out = if slot.batch_first {
             let (tx, rx) = std::sync::mpsc::channel();
             // depth gauge brackets the submit: a rejected job never counts
             self.metrics.batch_enqueued();
             if let Err(e) = self
                 .batcher()
-                .submit((slot.classifier.clone(), features.to_vec(), tx))
+                .submit((slot.classifier.clone(), features.to_vec(), deadline, tx))
             {
                 self.metrics.batch_dequeued(1);
                 return Err(e);
@@ -211,52 +355,175 @@ impl Router {
                 .map_err(|_| Error::Serve("batched backend reply timed out".into()))??;
             (class, None)
         } else {
-            slot.classifier.classify_with_steps(features)?
+            match catch_unwind(AssertUnwindSafe(|| {
+                slot.classifier.classify_with_steps(features)
+            })) {
+                Ok(r) => r?,
+                Err(p) => {
+                    return Err(Error::EvalPanic {
+                        shard: 0,
+                        msg: crate::runtime::pool::payload_msg(&*p),
+                    })
+                }
+            }
         };
-        Ok((
-            backend,
-            version.id.to_string(),
-            class,
-            steps,
-            version.label_of(class),
-        ))
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(Error::DeadlineExceeded(
+                "deadline expired during evaluation".into(),
+            ));
+        }
+        Ok(out)
+    }
+
+    fn dispatch(
+        &self,
+        model: Option<&str>,
+        requested: Option<BackendKind>,
+        features: &[f32],
+    ) -> Result<Routed> {
+        let deadline = crate::obs::trace::eval_deadline();
+        let version = self.registry.get(model)?;
+        let primary = self.pick_backend(&version, requested);
+        // an explicitly requested backend the model lacks is a client
+        // error, surfaced before any fallback logic runs
+        version.slot(primary)?;
+        version.check_row(features)?;
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(Error::DeadlineExceeded(
+                "request expired before evaluation".into(),
+            ));
+        }
+        let model_key = version.id.to_string();
+        let mut last_err = None;
+        for kind in self.candidates(&version, primary, &model_key) {
+            match self.eval_single(&version, kind, features, deadline) {
+                Ok((class, steps)) => {
+                    self.note_outcome(&model_key, kind, true);
+                    let rerouted = (kind != primary).then_some(kind);
+                    if rerouted.is_some() {
+                        self.metrics.observe_degraded();
+                    }
+                    return Ok(Routed {
+                        backend: kind,
+                        model: model_key,
+                        class,
+                        steps,
+                        label: version.label_of(class),
+                        rerouted,
+                    });
+                }
+                // no fallback can beat an expired clock, and overload is
+                // shed (429), never rerouted around admission control
+                Err(e @ (Error::DeadlineExceeded(_) | Error::Overloaded(_))) => return Err(e),
+                Err(e) => {
+                    if matches!(e, Error::EvalPanic { .. }) {
+                        self.metrics.observe_eval_panic();
+                    }
+                    self.note_outcome(&model_key, kind, false);
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(last_err.unwrap_or_else(|| Error::Serve("no backend available".into())))
+    }
+
+    /// One batch eval attempt against one backend, behind the same panic
+    /// guard and post-eval deadline check as [`eval_single`](Self::eval_single)
+    /// (the frozen sweep may bail out mid-batch on expiry, so a late
+    /// result is discarded rather than returned incomplete).
+    fn eval_batch(
+        &self,
+        version: &ModelVersion,
+        kind: BackendKind,
+        rows: RowMatrix<'_>,
+        want_steps: bool,
+        deadline: Option<Instant>,
+    ) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+        let slot = version.slot(kind)?.clone();
+        let out = match catch_unwind(AssertUnwindSafe(|| {
+            if want_steps {
+                slot.classifier.classify_batch_with_steps(rows)
+            } else {
+                slot.classifier.classify_batch(rows).map(|c| (c, None))
+            }
+        })) {
+            Ok(r) => r?,
+            Err(p) => {
+                return Err(Error::EvalPanic {
+                    shard: 0,
+                    msg: crate::runtime::pool::payload_msg(&*p),
+                })
+            }
+        };
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(Error::DeadlineExceeded(
+                "deadline expired during evaluation".into(),
+            ));
+        }
+        Ok(out)
     }
 
     /// Serve an explicit flat batch (bypasses the single-request batcher
     /// and uses the backend's native batch path directly). With
     /// `want_steps`, metered backends also return the §6 step count per
     /// row (`None` for backends that cannot meter, e.g. XLA) — the batch
-    /// counterpart of the single-request `steps` field. Returns the
-    /// classes (+ steps) plus the model version that served them, so
-    /// callers render labels against the exact version that classified
-    /// (not a later hot-swap).
+    /// counterpart of the single-request `steps` field. Breakers and the
+    /// degradation chain apply exactly as on the single-request path.
     pub fn classify_batch(
         &self,
         rows: RowMatrix<'_>,
         backend: Option<BackendKind>,
         model: Option<&str>,
         want_steps: bool,
-    ) -> Result<(Vec<u32>, Option<Vec<u32>>, Arc<crate::engine::ModelVersion>)> {
+    ) -> Result<BatchRouted> {
         let start = Instant::now();
+        let deadline = crate::obs::trace::eval_deadline();
         let result = (|| {
             let version = self.registry.get(model)?;
-            let backend = self.pick_backend(&version, backend);
-            let slot = version.slot(backend)?.clone();
+            let primary = self.pick_backend(&version, backend);
+            version.slot(primary)?;
             version.check_matrix(rows)?;
-            let (classes, steps) = if want_steps {
-                slot.classifier.classify_batch_with_steps(rows)?
-            } else {
-                (slot.classifier.classify_batch(rows)?, None)
-            };
-            Ok((backend, classes, steps, version))
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(Error::DeadlineExceeded(
+                    "request expired before evaluation".into(),
+                ));
+            }
+            let model_key = version.id.to_string();
+            let mut last_err = None;
+            for kind in self.candidates(&version, primary, &model_key) {
+                match self.eval_batch(&version, kind, rows, want_steps, deadline) {
+                    Ok((classes, steps)) => {
+                        self.note_outcome(&model_key, kind, true);
+                        let rerouted = (kind != primary).then_some(kind);
+                        if rerouted.is_some() {
+                            self.metrics.observe_degraded();
+                        }
+                        return Ok((kind, classes, steps, version, rerouted));
+                    }
+                    Err(e @ Error::DeadlineExceeded(_)) => return Err(e),
+                    Err(e) => {
+                        if matches!(e, Error::EvalPanic { .. }) {
+                            self.metrics.observe_eval_panic();
+                        }
+                        self.note_outcome(&model_key, kind, false);
+                        last_err = Some(e);
+                    }
+                }
+            }
+            Err(last_err.unwrap_or_else(|| Error::Serve("no backend available".into())))
         })();
         match result {
-            Ok((backend, out, steps, version)) => {
+            Ok((backend, classes, steps, version, rerouted)) => {
                 let elapsed = start.elapsed();
                 self.metrics.observe(backend, elapsed);
                 self.metrics.observe_batch(rows.n_rows());
                 self.metrics.observe_batch_eval(elapsed);
-                Ok((out, steps, version))
+                Ok(BatchRouted {
+                    classes,
+                    steps,
+                    version,
+                    rerouted,
+                })
             }
             Err(e) => {
                 self.metrics.observe_error();
@@ -285,6 +552,7 @@ mod tests {
             BackendKind::Dd,
             BatcherConfig::default(),
             Duration::from_secs(5),
+            BreakerBoard::new(3, Duration::from_millis(100)),
         );
         (ds, r)
     }
@@ -352,22 +620,23 @@ mod tests {
             buf.push_row(ds.row(i * 5)).unwrap();
         }
         let rows = buf.as_matrix();
-        let (dd, no_steps, version) = r
+        let dd = r
             .classify_batch(rows, Some(BackendKind::Dd), None, false)
             .unwrap();
-        assert!(no_steps.is_none(), "steps only on request");
-        let (rf, _, _) = r
+        assert!(dd.steps.is_none(), "steps only on request");
+        assert!(dd.rerouted.is_none(), "healthy path never reroutes");
+        let rf = r
             .classify_batch(rows, Some(BackendKind::Forest), None, false)
             .unwrap();
-        let (frozen, frozen_steps, _) = r
+        let frozen = r
             .classify_batch(rows, Some(BackendKind::Frozen), None, true)
             .unwrap();
-        assert_eq!(dd, rf);
-        assert_eq!(dd, frozen);
-        assert_eq!(dd.len(), 30);
-        assert_eq!(version.id.to_string(), "default@v1");
+        assert_eq!(dd.classes, rf.classes);
+        assert_eq!(dd.classes, frozen.classes);
+        assert_eq!(dd.classes.len(), 30);
+        assert_eq!(dd.version.id.to_string(), "default@v1");
         // §6 metering survives the explicit-batch path, row for row
-        let frozen_steps = frozen_steps.expect("frozen walks are metered");
+        let frozen_steps = frozen.steps.expect("frozen walks are metered");
         for (i, row) in rows.iter().enumerate() {
             let single = r
                 .classify(
@@ -451,5 +720,60 @@ mod tests {
                 .unwrap();
         }
         assert_eq!(r.metrics().backend(BackendKind::Dd).count(), 5);
+    }
+
+    #[test]
+    fn breaker_reroutes_along_the_bit_identical_chain() {
+        let (ds, r) = router();
+        let row = ds.row(0).to_vec();
+        let healthy = r
+            .classify(&ClassifyRequest::new(row.clone()).on_backend(BackendKind::Dd))
+            .unwrap();
+        assert!(healthy.served_by.is_none());
+        // trip dd's breaker (threshold 3 on the test board)
+        for _ in 0..3 {
+            r.breakers().record_failure("default@v1", BackendKind::Dd);
+        }
+        assert_eq!(r.breakers().open_count(), 1);
+        let degraded = r.classify(&ClassifyRequest::new(row.clone())).unwrap();
+        assert_eq!(degraded.backend, BackendKind::Frozen, "next in the chain");
+        assert_eq!(degraded.served_by, Some(BackendKind::Frozen));
+        assert_eq!(degraded.class, healthy.class, "the reroute is bit-identical");
+        assert_eq!(
+            r.metrics()
+                .degraded_requests
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        // dd stays open until its cooldown admits a probe…
+        assert_eq!(r.breakers().open_count(), 1);
+        std::thread::sleep(Duration::from_millis(150));
+        // …whose success re-closes the breaker and restores the primary
+        let recovered = r.classify(&ClassifyRequest::new(row)).unwrap();
+        assert_eq!(recovered.backend, BackendKind::Dd);
+        assert!(recovered.served_by.is_none());
+        assert_eq!(r.breakers().open_count(), 0);
+    }
+
+    #[test]
+    fn expired_deadlines_fail_fast_with_a_deadline_error() {
+        let (ds, r) = router();
+        crate::obs::trace::set_eval_deadline(Some(Instant::now() - Duration::from_millis(5)));
+        let err = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()))
+            .unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+        // the explicit batch path enforces the same budget
+        let mut buf = RowMatrixBuf::with_capacity(ds.n_features(), 1);
+        buf.push_row(ds.row(0)).unwrap();
+        let err = r
+            .classify_batch(buf.as_matrix(), None, None, false)
+            .unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+        // clearing the deadline restores service on this thread
+        crate::obs::trace::set_eval_deadline(None);
+        assert!(r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()))
+            .is_ok());
     }
 }

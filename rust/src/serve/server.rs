@@ -19,6 +19,7 @@
 use crate::engine::Engine;
 use crate::error::{Error, Result};
 use crate::serve::batcher::BatcherConfig;
+use crate::serve::breaker::BreakerBoard;
 use crate::serve::config::ServeConfig;
 use crate::serve::http::{handle_connection, respond};
 use crate::serve::metrics::ServerMetrics;
@@ -70,6 +71,13 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
         cfg.log_json,
     );
     let evented = cfg.io_mode.resolve()?;
+    // Arm deterministic fault injection before any request can run; the
+    // spec was already validated, so failures here are config races.
+    if !cfg.fault.is_empty() {
+        crate::runtime::fault::arm(&cfg.fault).map_err(Error::invalid)?;
+        crate::log_warn!("serve: fault injection armed ({})", cfg.fault);
+    }
+    crate::runtime::fault::arm_from_env().map_err(Error::invalid)?;
     // Size the shared evaluation pool before any batch traffic exists
     // (spawn-once; the first effective configuration wins process-wide).
     let eval_threads = crate::runtime::pool::configure(cfg.eval_threads);
@@ -136,6 +144,10 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
             queue_cap: cfg.resolved_batch_queue_cap(),
         },
         Duration::from_millis(cfg.reply_timeout_ms),
+        BreakerBoard::new(
+            cfg.breaker_threshold,
+            Duration::from_millis(cfg.breaker_cooldown_ms),
+        ),
     ));
 
     let listener = TcpListener::bind(&cfg.addr)?;
@@ -179,6 +191,7 @@ fn start_evented(
             dispatch_cap: cfg.resolved_dispatch_cap(),
             idle_timeout: Duration::from_millis(cfg.read_timeout_ms),
             retry_after_s: 1,
+            conn_max_inflight: cfg.conn_max_inflight,
         },
         shutdown,
     )?;

@@ -8,7 +8,9 @@
 //!    buffers. The tracing hot path (`ReqTrace` record/commit into the
 //!    debug ring, per-shard timing atomics) runs inside the same counted
 //!    window: with the inline breakdown off, observability costs zero
-//!    allocations per request.
+//!    allocations per request. The fault-tolerance plumbing rides in the
+//!    same window: an *armed but never-firing* injection point and the
+//!    per-request deadline load/compare must also cost zero allocations.
 //! 2. **Snapshot boot is zero-copy.** `FrozenDD::load` on the mmap path
 //!    must not copy or re-materialise node/terminal sections: total bytes
 //!    allocated during the load stay far below the node-plane size (a
@@ -98,6 +100,11 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     let want_steps = steps.clone();
     // Warm the trace-id generator (seeds a OnceLock on first use).
     let _ = forest_add::obs::trace::next_id();
+    // Arm an injection point at rate 0: the armed-but-silent draw path is
+    // exactly what a production replica pays while a chaos spec targets a
+    // different point. (This test binary holds a single #[test], so the
+    // process-global fault tables are ours alone.)
+    forest_add::runtime::fault::arm("eval_slow:0:9").unwrap();
 
     let before = allocs();
     for _ in 0..10 {
@@ -107,6 +114,19 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
         let mut trace =
             forest_add::obs::trace::ReqTrace::new(forest_add::obs::trace::next_id());
         trace.record(forest_add::obs::trace::Stage::Parse);
+        // Deadline stamping + the expiry compare the serving loop runs
+        // around every eval, and the armed-at-rate-0 fault draw the
+        // guarded sweeps run per shard.
+        trace.set_deadline(std::time::Instant::now() + std::time::Duration::from_secs(60));
+        forest_add::obs::trace::set_eval_deadline(trace.deadline());
+        let d = forest_add::obs::trace::eval_deadline();
+        assert!(!d.is_some_and(|d| std::time::Instant::now() >= d));
+        assert!(!forest_add::runtime::fault::fires(
+            forest_add::runtime::fault::Point::EvalSlow
+        ));
+        assert!(!forest_add::runtime::fault::fires(
+            forest_add::runtime::fault::Point::EvalShardPanic
+        ));
         // round-based counting scatter (diagram fits the default budget)
         frozen.classify_batch_into(rows, &mut scratch, &mut out);
         assert_eq!(out, want, "warm sweeps must stay bit-identical");
@@ -121,10 +141,12 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
         forest_add::obs::trace::record_shard(0, 7);
         forest_add::obs::trace::note_shard_run(1);
         trace.record(forest_add::obs::trace::Stage::Serialize);
+        forest_add::obs::trace::set_eval_deadline(None);
         let total = trace.commit(200);
         assert!(trace.stages_total_us() <= total);
     }
     let after = allocs();
+    forest_add::runtime::fault::disarm_all();
     assert_eq!(
         after - before,
         0,

@@ -447,6 +447,106 @@ fn xla_backend_conforms_when_artifacts_exist() {
     }
 }
 
+/// A tripped backend breaker must degrade *bit-identically*: with the
+/// primary backend's breaker open, the router's frozen → dd → forest
+/// fallback chain serves the same class, label and §6 step count the
+/// primary would have served — single-row and batch paths, on every
+/// built-in dataset. Degradation is a routing change, never a semantic
+/// one.
+#[test]
+fn breaker_fallback_serves_bit_identical_answers() {
+    use forest_add::serve::batcher::BatcherConfig;
+    use forest_add::serve::breaker::BreakerBoard;
+    use forest_add::serve::metrics::ServerMetrics;
+    use forest_add::serve::router::Router;
+    use forest_add::serve::ClassifyRequest;
+    use std::time::Duration;
+
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        let forest = ForestLearner::default().trees(8).seed(31).fit(&data);
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+        let frozen = dd.freeze();
+        let registry = Arc::new(ModelRegistry::new());
+        registry
+            .register(
+                "default",
+                data.schema.clone(),
+                vec![
+                    (
+                        BackendKind::Forest,
+                        Arc::new(forest) as Arc<dyn Classifier>,
+                    ),
+                    (BackendKind::Dd, Arc::new(dd) as Arc<dyn Classifier>),
+                    (
+                        BackendKind::Frozen,
+                        Arc::new(frozen) as Arc<dyn Classifier>,
+                    ),
+                ],
+            )
+            .unwrap();
+        // threshold 1, hour-long cooldown: one recorded failure keeps the
+        // dd breaker open for the whole sweep (no half-open probes).
+        let router = Router::new(
+            registry,
+            Arc::new(ServerMetrics::default()),
+            BackendKind::Dd,
+            BatcherConfig::default(),
+            Duration::from_secs(5),
+            BreakerBoard::new(1, Duration::from_secs(3600)),
+        );
+        let rows = data.matrix();
+
+        // healthy answers off the primary path first
+        let healthy: Vec<_> = rows
+            .iter()
+            .map(|row| router.classify(&ClassifyRequest::new(row.to_vec())).unwrap())
+            .collect();
+        for (i, r) in healthy.iter().enumerate() {
+            assert_eq!(r.backend, BackendKind::Dd, "{name} row {i}: primary");
+            assert_eq!(r.served_by, None, "{name} row {i}: not degraded yet");
+        }
+        let healthy_batch = router.classify_batch(rows, None, None, true).unwrap();
+        assert!(healthy_batch.rerouted.is_none(), "{name}: healthy batch");
+
+        router.breakers().record_failure("default@v1", BackendKind::Dd);
+        assert_eq!(router.breakers().open_count(), 1, "{name}: breaker open");
+
+        for (i, row) in rows.iter().enumerate() {
+            let got = router.classify(&ClassifyRequest::new(row.to_vec())).unwrap();
+            assert_eq!(
+                got.backend,
+                BackendKind::Frozen,
+                "{name} row {i}: fallback backend"
+            );
+            assert_eq!(
+                got.served_by,
+                Some(BackendKind::Frozen),
+                "{name} row {i}: degraded marker"
+            );
+            assert_eq!(got.class, healthy[i].class, "{name} row {i}: class");
+            assert_eq!(got.steps, healthy[i].steps, "{name} row {i}: §6 steps");
+            assert_eq!(got.label, healthy[i].label, "{name} row {i}: label");
+        }
+        let degraded = router.classify_batch(rows, None, None, true).unwrap();
+        assert_eq!(
+            degraded.rerouted,
+            Some(BackendKind::Frozen),
+            "{name}: degraded batch marker"
+        );
+        assert_eq!(
+            degraded.classes, healthy_batch.classes,
+            "{name}: degraded batch classes"
+        );
+        assert_eq!(
+            degraded.steps, healthy_batch.steps,
+            "{name}: degraded batch steps"
+        );
+    }
+}
+
 /// Sharded-parallel batch evaluation must be bit-identical to the
 /// single-threaded per-row path for every backend × abstraction ×
 /// dataset. Batches are tiled far past both the frozen sweep's

@@ -1,0 +1,387 @@
+//! Fault-tolerance integration: the deterministic injection harness
+//! drives shard panics, connection read errors, short writes and slow
+//! shards through both serving front-ends over real sockets, and the
+//! process must degrade — never die:
+//!
+//! 1. **Chaos soak.** 64 keep-alive connections sweep both front-ends
+//!    while `eval_shard_panic` / `eval_slow` / `conn_read_err` /
+//!    `conn_write_short` are armed. Every response that completes with
+//!    `200` is bit-identical (latency and routing metadata aside) to the
+//!    fault-free reference — degradation is a routing change, never a
+//!    semantic one — and both servers stay healthy.
+//! 2. **Breaker lifecycle, deterministically.** At panic rate 1.0 the
+//!    frozen backend fails every eval: three failures trip its breaker
+//!    (`/readyz` → `503` naming `default@v1/frozen`, `/metrics` reports
+//!    `degraded`), requests transparently reroute to the bit-identical
+//!    dd backend with `X-Served-By`, and after disarm + cooldown the
+//!    half-open probe re-closes the breaker (`/readyz` → `200`).
+//! 3. **Deadline propagation.** With a 25 ms stall injected, a 5 ms
+//!    `X-Deadline-Ms` budget comes back `504` (and lands in
+//!    `deadline_dropped`), a generous budget absorbs the stall.
+//! 4. **Replay.** Re-arming the same `point:rate:seed` spec replays the
+//!    exact same fire/no-fire sequence.
+//!
+//! The fault tables are process-global, so this file holds a single
+//! `#[test]` (the parallel runner must not interleave another arming).
+
+use forest_add::data::datasets;
+use forest_add::runtime::fault::{self, Point};
+use forest_add::serve::config::{IoMode, ServeConfig};
+use forest_add::serve::http::{http_request, HttpClient};
+use forest_add::serve::server;
+use forest_add::util::json::{self, strip_key, Json};
+use std::time::Duration;
+
+const CONNS: usize = 64;
+const REQUESTS: usize = 4;
+
+fn test_config() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        dataset: "iris".into(),
+        trees: 32,
+        max_depth: 6,
+        seed: 7,
+        enable_xla: false,
+        breaker_threshold: 3,
+        breaker_cooldown_ms: 400,
+        ..Default::default()
+    }
+}
+
+fn row_json(row: &[f32]) -> Json {
+    Json::Arr(row.iter().map(|&v| json::num(v as f64)).collect())
+}
+
+/// The deterministic request schedule: half the sweep targets the frozen
+/// backend (where the eval injection points live), half the default.
+fn soak_request(data: &forest_add::data::Dataset, conn: usize, seq: usize) -> (String, Vec<u8>) {
+    let n = data.n_rows();
+    let i = (conn * 31 + seq * 7) % n;
+    let j = (i + 1) % n;
+    let rows = || Json::Arr(vec![row_json(data.row(i)), row_json(data.row(j))]);
+    let body = match seq % 4 {
+        0 => json::obj(vec![
+            ("features", row_json(data.row(i))),
+            ("backend", json::s("frozen")),
+        ]),
+        1 => json::obj(vec![("features", row_json(data.row(i)))]),
+        2 => json::obj(vec![
+            ("rows", rows()),
+            ("backend", json::s("frozen")),
+            ("steps", Json::Bool(true)),
+        ]),
+        _ => json::obj(vec![("rows", rows())]),
+    };
+    let path = if seq % 4 < 2 {
+        "/classify"
+    } else {
+        "/classify_batch"
+    };
+    (path.to_string(), body.to_string_compact().into_bytes())
+}
+
+/// Strip the fields a legitimate degradation is allowed to change:
+/// latency, the serving backend, and the reroute marker.
+fn sanitize(v: &Json) -> Json {
+    strip_key(&strip_key(&strip_key(v, "latency_us"), "backend"), "served_by")
+}
+
+/// One request that survives injected connection drops: on a transport
+/// error (or an error response, which hangs up) the connection is
+/// re-established and the request retried.
+fn resilient_request(
+    addr: &str,
+    client: &mut Option<HttpClient>,
+    path: &str,
+    body: &[u8],
+) -> (u16, Vec<u8>) {
+    for _ in 0..20 {
+        if client.is_none() {
+            match HttpClient::connect(addr) {
+                Ok(c) => *client = Some(c),
+                Err(_) => {
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+            }
+        }
+        match client
+            .as_mut()
+            .unwrap()
+            .request_raw("POST", path, "application/json", body)
+        {
+            Ok((status, _, resp)) => {
+                if status >= 400 {
+                    *client = None; // error responses hang up
+                }
+                return (status, resp);
+            }
+            Err(_) => *client = None, // injected read error dropped the conn
+        }
+    }
+    panic!("request to {addr} {path} never completed in 20 attempts");
+}
+
+#[test]
+fn injected_faults_degrade_but_never_kill_the_servers() {
+    if !forest_add::net::poll::supported() {
+        eprintln!("skipping: no epoll/kqueue on this target");
+        return;
+    }
+    fault::disarm_all(); // a clean slate regardless of FOREST_ADD_FAULT
+    let sync_handle = server::start(&ServeConfig {
+        io_mode: IoMode::Sync,
+        http_workers: CONNS + 8,
+        ..test_config()
+    })
+    .unwrap();
+    let evented_handle = server::start(&ServeConfig {
+        io_mode: IoMode::Evented,
+        http_workers: 8,
+        ..test_config()
+    })
+    .unwrap();
+    let sync_addr = sync_handle.addr.to_string();
+    let evented_addr = evented_handle.addr.to_string();
+    let data = datasets::load("iris").unwrap();
+
+    // --- fault-free reference: both servers, every scheduled request ---
+    for addr in [&sync_addr, &evented_addr] {
+        let (st, r) = http_request(addr, "GET", "/readyz", None).unwrap();
+        assert_eq!(st, 200, "fresh server must be ready: {r:?}");
+    }
+    let reference: Vec<Vec<Json>> = {
+        let mut sync_client = HttpClient::connect(&sync_addr).unwrap();
+        let mut evented_client = HttpClient::connect(&evented_addr).unwrap();
+        (0..CONNS)
+            .map(|c| {
+                (0..REQUESTS)
+                    .map(|r| {
+                        let (path, body) = soak_request(&data, c, r);
+                        let (st_s, _, b_s) = sync_client
+                            .request_raw("POST", &path, "application/json", &body)
+                            .unwrap();
+                        let (st_e, _, b_e) = evented_client
+                            .request_raw("POST", &path, "application/json", &body)
+                            .unwrap();
+                        assert_eq!(st_s, 200, "reference {c}/{r} (sync)");
+                        assert_eq!(st_e, 200, "reference {c}/{r} (evented)");
+                        let v_s = Json::parse(std::str::from_utf8(&b_s).unwrap()).unwrap();
+                        let v_e = Json::parse(std::str::from_utf8(&b_e).unwrap()).unwrap();
+                        let want = sanitize(&v_s);
+                        assert_eq!(want, sanitize(&v_e), "reference {c}/{r} diverges");
+                        want
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+
+    // --- chaos soak: 64 connections per front-end under armed faults ---
+    fault::arm(
+        "eval_shard_panic:0.3:42,eval_slow:0.1:11,conn_read_err:0.05:7,conn_write_short:0.2:3",
+    )
+    .unwrap();
+    std::thread::scope(|scope| {
+        for c in 0..CONNS {
+            let sync_addr = &sync_addr;
+            let evented_addr = &evented_addr;
+            let data = &data;
+            let reference = &reference;
+            scope.spawn(move || {
+                let mut sync_client = None;
+                let mut evented_client = None;
+                for r in 0..REQUESTS {
+                    let (path, body) = soak_request(data, c, r);
+                    for (addr, client) in [
+                        (sync_addr.as_str(), &mut sync_client),
+                        (evented_addr.as_str(), &mut evented_client),
+                    ] {
+                        let (status, resp) = resilient_request(addr, client, &path, &body);
+                        assert!(
+                            matches!(status, 200 | 429 | 500 | 503 | 504),
+                            "conn {c} req {r} {addr}: unexpected status {status}"
+                        );
+                        if status == 200 {
+                            let v = Json::parse(std::str::from_utf8(&resp).unwrap()).unwrap();
+                            assert_eq!(
+                                sanitize(&v),
+                                reference[c][r],
+                                "conn {c} req {r} {addr}: a served answer diverged under faults"
+                            );
+                        }
+                    }
+                }
+            });
+        }
+    });
+    // both processes survived, counted their injections, and expose them
+    for addr in [&sync_addr, &evented_addr] {
+        let (st, _) = http_request(addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(st, 200, "{addr} must survive the soak");
+        let (st, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(st, 200);
+        let f = m.get("fault").unwrap();
+        assert!(
+            f.get_i64("injected").unwrap() > 0,
+            "{addr}: no fault ever fired: {m:?}"
+        );
+        let mut c = HttpClient::connect(addr).unwrap();
+        let (st, _, text) = c
+            .request_raw("GET", "/metrics?format=prometheus", "text/plain", &[])
+            .unwrap();
+        assert_eq!(st, 200);
+        let text = String::from_utf8(text).unwrap();
+        assert!(text.contains("forest_eval_panics_total"), "{addr}");
+        assert!(text.contains("forest_faults_injected_total"), "{addr}");
+    }
+
+    // --- quiesce: heal whatever state the chaos left behind ------------
+    // The soak trips frozen breakers nondeterministically; before the
+    // deterministic lifecycle phase below, let any open breaker reach
+    // its cooldown and send one healthy frozen eval per server — the
+    // success re-closes a tripped breaker and clears the residual
+    // failure window, so the next phase starts from a clean slate.
+    let frozen_body = json::obj(vec![
+        ("features", row_json(data.row(0))),
+        ("backend", json::s("frozen")),
+    ])
+    .to_string_compact()
+    .into_bytes();
+    fault::disarm_all();
+    std::thread::sleep(Duration::from_millis(600)); // > breaker_cooldown_ms
+    for addr in [&sync_addr, &evented_addr] {
+        let mut client = HttpClient::connect(addr).unwrap();
+        let (st, _, _) = client
+            .request_raw("POST", "/classify", "application/json", &frozen_body)
+            .unwrap();
+        assert_eq!(st, 200, "{addr}: quiesce probe");
+        let (st, r) = http_request(addr, "GET", "/readyz", None).unwrap();
+        assert_eq!(st, 200, "{addr}: quiesced server must be ready: {r:?}");
+    }
+
+    // --- breaker lifecycle, deterministically: rate 1.0 panics ---------
+    fault::arm("eval_shard_panic:1:99").unwrap();
+    for addr in [&sync_addr, &evented_addr] {
+        let panics_before = {
+            let (_, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+            m.get("fault").unwrap().get_i64("eval_panics").unwrap()
+        };
+        for k in 0..4 {
+            let mut client = HttpClient::connect(addr).unwrap();
+            let (st, headers, body) = client
+                .request_raw("POST", "/classify", "application/json", &frozen_body)
+                .unwrap();
+            assert_eq!(
+                st,
+                200,
+                "{addr} req {k}: a shard panic must degrade, not fail: {}",
+                String::from_utf8_lossy(&body)
+            );
+            assert!(
+                headers
+                    .iter()
+                    .any(|(k2, v)| k2.eq_ignore_ascii_case("x-served-by") && v == "dd"),
+                "{addr} req {k}: degraded response must announce its backend: {headers:?}"
+            );
+        }
+        // three failures tripped the frozen breaker; the fourth request
+        // was routed straight to dd without another panic
+        let (st, r) = http_request(addr, "GET", "/readyz", None).unwrap();
+        assert_eq!(st, 503, "{addr}: open breaker must fail readiness: {r:?}");
+        assert!(
+            r.to_string_compact().contains("default@v1/frozen"),
+            "{addr}: readyz must name the open breaker: {r:?}"
+        );
+        let (_, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(m.get("degraded"), Some(&Json::Bool(true)), "{addr}: {m:?}");
+        let b = m.get("breakers").unwrap();
+        assert!(b.get_i64("open").unwrap() >= 1, "{addr}: {m:?}");
+        assert!(b.get_i64("trips").unwrap() >= 1, "{addr}: {m:?}");
+        let panics = m.get("fault").unwrap().get_i64("eval_panics").unwrap();
+        assert_eq!(
+            panics - panics_before,
+            3,
+            "{addr}: exactly the three pre-trip evals panic"
+        );
+    }
+
+    // --- recovery: disarm, wait out the cooldown, probe re-closes ------
+    fault::disarm_all();
+    std::thread::sleep(Duration::from_millis(600)); // > breaker_cooldown_ms
+    for addr in [&sync_addr, &evented_addr] {
+        let mut client = HttpClient::connect(addr).unwrap();
+        let (st, headers, _) = client
+            .request_raw("POST", "/classify", "application/json", &frozen_body)
+            .unwrap();
+        assert_eq!(st, 200, "{addr}: half-open probe");
+        assert!(
+            !headers
+                .iter()
+                .any(|(k, _)| k.eq_ignore_ascii_case("x-served-by")),
+            "{addr}: the successful probe must re-close and serve primary: {headers:?}"
+        );
+        let (st, r) = http_request(addr, "GET", "/readyz", None).unwrap();
+        assert_eq!(st, 200, "{addr}: recovered server must be ready: {r:?}");
+        let (_, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+        assert_eq!(m.get("degraded"), Some(&Json::Bool(false)), "{addr}: {m:?}");
+        assert_eq!(
+            m.get("breakers").unwrap().get_i64("open"),
+            Some(0),
+            "{addr}: {m:?}"
+        );
+    }
+
+    // --- deadline propagation under an injected 25 ms stall ------------
+    fault::arm("eval_slow:1:5").unwrap();
+    for addr in [&sync_addr, &evented_addr] {
+        let mut client = HttpClient::connect(addr).unwrap();
+        let (st, _, body) = client
+            .request_raw_with_headers(
+                "POST",
+                "/classify",
+                "application/json",
+                &[("X-Deadline-Ms", "5")],
+                &frozen_body,
+            )
+            .unwrap();
+        assert_eq!(
+            st,
+            504,
+            "{addr}: a 5 ms budget cannot absorb the stall: {}",
+            String::from_utf8_lossy(&body)
+        );
+        let mut client = HttpClient::connect(addr).unwrap();
+        let (st, _, _) = client
+            .request_raw_with_headers(
+                "POST",
+                "/classify",
+                "application/json",
+                &[("X-Deadline-Ms", "5000")],
+                &frozen_body,
+            )
+            .unwrap();
+        assert_eq!(st, 200, "{addr}: a generous budget absorbs the stall");
+        let (_, m) = http_request(addr, "GET", "/metrics", None).unwrap();
+        assert!(
+            m.get("fault").unwrap().get_i64("deadline_dropped").unwrap() >= 1,
+            "{addr}: {m:?}"
+        );
+    }
+    fault::disarm_all();
+    sync_handle.stop();
+    evented_handle.stop();
+
+    // --- replay: the same spec fires the same deterministic sequence ---
+    fault::arm("conn_write_short:0.5:77").unwrap();
+    let first: Vec<bool> = (0..64).map(|_| fault::fires(Point::ConnWriteShort)).collect();
+    fault::arm("conn_write_short:0.5:77").unwrap();
+    let second: Vec<bool> = (0..64).map(|_| fault::fires(Point::ConnWriteShort)).collect();
+    assert_eq!(first, second, "same point:rate:seed must replay exactly");
+    assert!(
+        first.iter().any(|&b| b) && first.iter().any(|&b| !b),
+        "rate 0.5 over 64 draws mixes fires and passes: {first:?}"
+    );
+    fault::disarm_all();
+}
