@@ -104,6 +104,39 @@ fn main() {
     });
     add_row(&mut t, "FrozenDD tiled sweep row (4096 rows, min tiles)", ns / 4096.0);
 
+    // kernel-pinned pair on the same sweep: the scalar walk vs the best
+    // SIMD kernel this host detects (identical rows on hosts with none)
+    use forest_add::runtime::simd;
+    let ns = measure_ns(window, || {
+        frozen.classify_batch_kernel_into(big, &mut scratch, &mut out, 0, simd::Kernel::Scalar);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD sweep row (4096 rows, scalar kernel)", ns / 4096.0);
+
+    let kernel = simd::kernel();
+    let ns = measure_ns(window, || {
+        frozen.classify_batch_kernel_into(big, &mut scratch, &mut out, 0, kernel);
+        std::hint::black_box(out.len());
+    });
+    add_row(
+        &mut t,
+        &format!("FrozenDD sweep row (4096 rows, {} kernel)", kernel.name()),
+        ns / 4096.0,
+    );
+
+    // the quantised + column-packed freeze on the same workload
+    let opt = dd
+        .freeze_with(forest_add::frozen::FreezeOpts {
+            quantize_f16: true,
+            pack_features: true,
+        })
+        .unwrap();
+    let ns = measure_ns(window, || {
+        opt.classify_batch_into(big, &mut scratch, &mut out);
+        std::hint::black_box(out.len());
+    });
+    add_row(&mut t, "FrozenDD sweep row (4096 rows, f16 + packed)", ns / 4096.0);
+
     // snapshot load (the replica-startup primitive): in-memory parse vs
     // the mmap boot path replicas take
     let snapshot_bytes = frozen.to_bytes();

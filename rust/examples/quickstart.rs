@@ -101,7 +101,45 @@ fn main() -> Result<()> {
     );
     let _ = std::fs::remove_file(&snapshot);
 
-    // 7. Fleets serve many models per process: pack every registered
+    // 7. Rapid evaluation, squared: the frozen sweeps route 4–8 parked
+    //    rows per decision node through explicit SIMD kernels, chosen
+    //    once at startup by runtime feature detection (SSE2/AVX2 on
+    //    x86-64, NEON on aarch64, portable scalar elsewhere — kill
+    //    switch: `FOREST_ADD_NO_SIMD=1` or `serve --no-simd`). Freeze
+    //    can additionally pack feature columns by test frequency and
+    //    quantise thresholds to f16 (halving the hot plane; refused if
+    //    lossy) — every combination is bit-identical to the scalar
+    //    single-row walk. (CLI: `freeze --pack-features --quantize-f16`,
+    //    benched as the `frozen-scalar`/`frozen-simd`/`frozen-f16`
+    //    series of `forest-add bench`.)
+    let kernel = forest_add::runtime::simd::kernel();
+    let dd = forest_add::compile::ForestCompiler::new(
+        forest_add::compile::CompileOptions::default(),
+    )
+    .compile(
+        &forest_add::forest::ForestLearner::default()
+            .trees(50)
+            .seed(7)
+            .fit(&data),
+    )?;
+    let optimised = dd.freeze_with(forest_add::frozen::FreezeOpts {
+        pack_features: true,
+        quantize_f16: true,
+    })?;
+    assert_eq!(
+        optimised.classify_batch(data.matrix()),
+        dd.freeze().classify_batch(data.matrix()),
+        "layout transforms never change answers"
+    );
+    println!(
+        "simd kernel '{}' ({} lanes); optimised freeze: f16 thresholds {}, packed columns {}",
+        kernel.name(),
+        forest_add::runtime::simd::LANES,
+        optimised.thresh_quant() == forest_add::frozen::ThreshQuant::F16,
+        optimised.packed_features(),
+    );
+
+    // 8. Fleets serve many models per process: pack every registered
     //    model into one `fab-v1` bundle and boot a replica's whole
     //    registry from it — one artifact, one mmap, every entry a
     //    zero-copy model behind its manifest name, registered in one
@@ -137,7 +175,7 @@ fn main() -> Result<()> {
     );
     let _ = std::fs::remove_file(&fab);
 
-    // 8. Serving: two interchangeable socket front-ends drive the same
+    // 9. Serving: two interchangeable socket front-ends drive the same
     //    endpoint layer — the sync thread-per-connection pool and the
     //    epoll/kqueue evented loop (`serve --io sync|evented`, auto
     //    picks evented wherever a poller exists). Keep-alive, binary row
@@ -168,7 +206,7 @@ fn main() -> Result<()> {
         resp.get_str("label").unwrap_or("?"),
     );
 
-    // 9. Observability: every response echoes an `X-Request-Id` (yours or
+    // 10. Observability: every response echoes an `X-Request-Id` (yours or
     //    a generated one), `"trace": true` returns the per-stage timing
     //    breakdown inline, the last traces sit in `/debug/trace`, and
     //    `/metrics?format=prometheus` renders every series for a scraper.
@@ -212,7 +250,7 @@ fn main() -> Result<()> {
             .map(|t| t.lines().filter(|l| !l.starts_with('#')).count())
             .unwrap_or(0),
     );
-    // 10. Fault tolerance: every eval runs behind panic quarantine and a
+    // 11. Fault tolerance: every eval runs behind panic quarantine and a
     //     per-model×backend circuit breaker, and the backends are
     //     bit-identical — so failures degrade into rerouting, not wrong
     //     answers. Arm the deterministic injection harness so every

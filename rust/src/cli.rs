@@ -283,6 +283,14 @@ fn freeze_spec() -> ArgSpec {
     .opt("seed", "42", "seed when training in-place")
     .opt("abstraction", "majority", "word | vector | majority (ignored with --dd)")
     .switch("no-unsat", "disable unsatisfiable-path elimination")
+    .switch(
+        "quantize-f16",
+        "quantise thresholds to f16 (halves the hot plane; fails if lossy)",
+    )
+    .switch(
+        "pack-features",
+        "reorder feature columns by test frequency for batch-gather locality",
+    )
     .opt("out", "model.fdd", "output snapshot path")
 }
 
@@ -299,7 +307,10 @@ fn cmd_freeze(args: &[String]) -> Result<()> {
         };
         ForestCompiler::new(opts).compile(&forest)?
     };
-    let frozen = dd.freeze();
+    let frozen = dd.freeze_with(frozen::FreezeOpts {
+        quantize_f16: a.flag("quantize-f16"),
+        pack_features: a.flag("pack-features"),
+    })?;
     let out = a.str("out");
     frozen.save(out)?;
     let s = frozen.size();
@@ -312,6 +323,17 @@ fn cmd_freeze(args: &[String]) -> Result<()> {
         s.terminals,
         frozen.n_preds()
     );
+    if a.flag("quantize-f16") || a.flag("pack-features") {
+        println!(
+            "layout: {} thresholds, feature columns {}",
+            if a.flag("quantize-f16") { "f16" } else { "f32" },
+            if a.flag("pack-features") {
+                "packed by frequency"
+            } else {
+                "in schema order"
+            }
+        );
+    }
     println!("serve with `forest-add serve --snapshot {out}`");
     Ok(())
 }
@@ -488,13 +510,30 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     } else {
         dd.feat_width().bytes()
     };
+    let thresh_bytes: u32 = if s.thresh_quant == frozen::ThreshQuant::F16 { 2 } else { 4 };
     println!(
         "encoding: {} features{}, {} B hot record at runtime, {:.1} B/node on disk ({} B node sections)",
         if runtime_width == 2 { "u16" } else { "u32" },
         if s.version >= 2 { "" } else { " after upgrade (v1 file stores u32)" },
-        u32::from(runtime_width) + 4,
+        u32::from(runtime_width) + thresh_bytes,
         s.node_section_bytes() as f64 / nodes,
         s.node_section_bytes()
+    );
+    println!(
+        "thresholds: {}",
+        if s.thresh_quant == frozen::ThreshQuant::F16 {
+            "f16 quantised (predicate table stores the widened values)"
+        } else {
+            "f32"
+        }
+    );
+    println!(
+        "feature columns: {}",
+        if s.packed_features {
+            "packed by test frequency (permutation applied on load)"
+        } else {
+            "schema order"
+        }
     );
     println!(
         "boot: {}",
@@ -660,7 +699,10 @@ fn bench_cell(
 /// batch size, seeds pinned) measured through the same entry points the
 /// serving path uses, dumped as `BENCH_batch.json` so successive PRs can
 /// be compared. `frozen-1t` is the single-threaded scratch sweep — the
-/// gap to `frozen` is the multi-core sharding win.
+/// gap to `frozen` is the multi-core sharding win. `frozen-scalar` vs
+/// `frozen-simd` pin the kernel explicitly on the same sweep — the gap
+/// is the lane win on this host (identical on machines with no SIMD).
+/// `frozen-f16` runs the quantised + column-packed freeze.
 fn cmd_bench(args: &[String]) -> Result<()> {
     let a = bench_spec().parse(args)?;
     let window = Duration::from_secs_f64(a.f64("secs")?);
@@ -685,6 +727,20 @@ fn cmd_bench(args: &[String]) -> Result<()> {
         let forest = ForestLearner::default().trees(trees).seed(seed).fit(&ds);
         let dd = ForestCompiler::new(CompileOptions::default()).compile(&forest)?;
         let frozen_dd = dd.freeze();
+        // The optimised freeze can legitimately refuse a dataset (f16
+        // range / per-feature collisions) — report and skip the series
+        // rather than failing the whole baseline.
+        let frozen_f16 = match dd.freeze_with(frozen::FreezeOpts {
+            quantize_f16: true,
+            pack_features: true,
+        }) {
+            Ok(q) => Some(q),
+            Err(e) => {
+                eprintln!("bench: skipping frozen-f16 for '{spec}': {e}");
+                None
+            }
+        };
+        let kernel = crate::runtime::simd::kernel();
         for &batch in &batches {
             let buf = crate::bench_support::tile_rows(&ds, batch, 1);
             let rows = buf.as_matrix();
@@ -718,6 +774,31 @@ fn cmd_bench(args: &[String]) -> Result<()> {
                 std::hint::black_box(out.len());
             });
             bench_cell(&mut t, &mut results, spec, "frozen-tiled", batch, ns);
+            // kernel-pinned pair: same single-threaded rounds sweep,
+            // scalar walk vs the best kernel this host detects
+            let ns = measure_ns(window, || {
+                frozen_dd.classify_batch_kernel_into(
+                    rows,
+                    &mut scratch,
+                    &mut out,
+                    0,
+                    crate::runtime::simd::Kernel::Scalar,
+                );
+                std::hint::black_box(out.len());
+            });
+            bench_cell(&mut t, &mut results, spec, "frozen-scalar", batch, ns);
+            let ns = measure_ns(window, || {
+                frozen_dd.classify_batch_kernel_into(rows, &mut scratch, &mut out, 0, kernel);
+                std::hint::black_box(out.len());
+            });
+            bench_cell(&mut t, &mut results, spec, "frozen-simd", batch, ns);
+            if let Some(q) = &frozen_f16 {
+                let ns = measure_ns(window, || {
+                    q.classify_batch_into(rows, &mut scratch, &mut out);
+                    std::hint::black_box(out.len());
+                });
+                bench_cell(&mut t, &mut results, spec, "frozen-f16", batch, ns);
+            }
         }
     }
     print!("{}", t.to_text());
@@ -762,6 +843,7 @@ fn serve_spec() -> ArgSpec {
         )
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
+        .switch("no-simd", "force the scalar frozen sweep (FOREST_ADD_NO_SIMD=1 also wins)")
         .opt(
             "conn-max-inflight",
             "",
@@ -838,6 +920,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     if !a.str("tile-bytes").is_empty() {
         cfg.tile_bytes = a.usize("tile-bytes")?;
+    }
+    if a.flag("no-simd") {
+        cfg.simd = false;
     }
     if !a.str("conn-max-inflight").is_empty() {
         cfg.conn_max_inflight = a.usize("conn-max-inflight")?;
@@ -1237,6 +1322,39 @@ mod tests {
     }
 
     #[test]
+    fn freeze_quantized_packed_inspect_roundtrip() {
+        let dir = std::env::temp_dir().join("forest-add-cli-freeze-q-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let plain = dir.join("plain.fdd");
+        let opt = dir.join("opt.fdd");
+        for (path, extra) in [(&plain, &[][..]), (&opt, &["--quantize-f16", "--pack-features"][..])]
+        {
+            let mut args = vec![
+                "--dataset".to_string(),
+                "lenses".into(),
+                "--trees".into(),
+                "7".into(),
+                "--out".into(),
+                path.to_str().unwrap().into(),
+            ];
+            args.extend(extra.iter().map(|s| s.to_string()));
+            cmd_freeze(&args).unwrap();
+        }
+        // inspect reports the new layout lines without erroring
+        cmd_inspect(&["--snapshot".into(), opt.to_str().unwrap().into()]).unwrap();
+        let a = FrozenDD::load(plain.to_str().unwrap()).unwrap();
+        let b = FrozenDD::load(opt.to_str().unwrap()).unwrap();
+        assert_eq!(b.thresh_quant(), frozen::ThreshQuant::F16);
+        assert!(b.packed_features());
+        // the optimised layout is an encoding change only — predictions
+        // over the whole dataset stay bit-identical
+        let ds = crate::data::resolve("lenses").unwrap();
+        let rows = ds.matrix();
+        assert_eq!(a.classify_batch(rows), b.classify_batch(rows));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn bundle_pack_ls_and_inspect_roundtrip() {
         let dir = std::env::temp_dir().join("forest-add-cli-bundle-test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -1315,8 +1433,9 @@ mod tests {
         let report = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(report.get_str("bench"), Some("batch_throughput"));
         let results = report.get("results").and_then(Json::as_arr).unwrap();
-        // 1 dataset × 5 series × 2 batch sizes
-        assert_eq!(results.len(), 10);
+        // 1 dataset × 8 series × 2 batch sizes (lenses quantises cleanly,
+        // so the frozen-f16 series is present)
+        assert_eq!(results.len(), 16);
         for r in results {
             assert!(r.get("rows_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
         }

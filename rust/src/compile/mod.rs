@@ -279,6 +279,15 @@ impl CompiledDD {
         .expect("freezing a live diagram yields a structurally valid FrozenDD")
     }
 
+    /// [`CompiledDD::freeze`] plus the optional layout transforms:
+    /// feature-column packing and/or f16 threshold quantisation (the
+    /// `freeze --pack-features` / `--quantize-f16` flags). Falls back to
+    /// an error — never a silently different diagram — when a transform
+    /// cannot preserve bit-identical predictions.
+    pub fn freeze_with(&self, opts: crate::frozen::FreezeOpts) -> Result<FrozenDD> {
+        self.freeze().apply_freeze_opts(opts)
+    }
+
     /// Graphviz rendering (Figs. 2–5 style).
     pub fn to_dot(&self) -> String {
         let classes = &self.schema.classes;

@@ -135,6 +135,39 @@ pub(crate) fn freeze_cone<T: Terminal>(
     })
 }
 
+/// Feature-column packing order for `freeze --pack-features`: original
+/// feature ids sorted by descending node-test frequency (ties break on
+/// the lower id, so the order — and the snapshot — is deterministic).
+/// `perm[slot]` is the original feature served by packed column `slot`;
+/// features the diagram never tests sort last but are still present, so
+/// the result is always a true permutation of `0..n_features`.
+pub(crate) fn feature_permutation(
+    n_features: usize,
+    node_feats: impl Iterator<Item = usize>,
+) -> Vec<u32> {
+    let mut freq = vec![0u64; n_features];
+    for f in node_feats {
+        freq[f] += 1;
+    }
+    let mut perm: Vec<u32> = (0..n_features as u32).collect();
+    perm.sort_by_key(|&f| (std::cmp::Reverse(freq[f as usize]), f));
+    perm
+}
+
 // Freezing is exercised end-to-end (against the live diagram, across all
 // abstractions and datasets) in `frozen::tests` and
 // `tests/conformance.rs`.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_permutation_orders_by_frequency_then_id() {
+        // feature 2 tested 3×, feature 0 tested 1×, features 1 and 3
+        // untested (tie → id order).
+        let perm = feature_permutation(4, [2, 0, 2, 2].into_iter());
+        assert_eq!(perm, vec![2, 0, 1, 3]);
+        assert_eq!(feature_permutation(0, std::iter::empty()), Vec::<u32>::new());
+    }
+}

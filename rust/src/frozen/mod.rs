@@ -49,6 +49,19 @@
 //!   sweeps optionally record the §6 step count per row, bit-identical
 //!   to [`FrozenDD::classify_with_steps`], so cost accounting survives
 //!   the batch path.
+//! - **Explicit-SIMD branchless kernels** ([`crate::runtime::simd`]):
+//!   the round-based sweep evaluates up to 8 parked rows per hot record
+//!   with masked `<` compares and a blend-select of the lo/hi delta
+//!   words (AVX2/SSE2/NEON behind one-time runtime detection; the tiled
+//!   sweep adds software prefetch of the next parked row's node data).
+//!   `FOREST_ADD_NO_SIMD` / `ServeConfig::simd = false` force the scalar
+//!   walk, and [`FrozenDD::classify_batch_kernel_into`] pins any kernel
+//!   explicitly. Two freeze-time transforms keep the lanes fed:
+//!   [`FreezeOpts::pack_features`] reorders feature columns by node-test
+//!   frequency (the permutation rides in the snapshot and is applied
+//!   transparently on load) and [`FreezeOpts::quantize_f16`] narrows
+//!   thresholds to IEEE-754 binary16 ([`storage::HotQ16`], 4-byte hot
+//!   records). All of it is bit-identity-pinned against the scalar walk.
 //!
 //! Predictions and §6 step counts are bit-identical to the source
 //! `CompiledDD` (enforced by `tests/conformance.rs`) across every
@@ -62,7 +75,7 @@ pub(crate) mod builder;
 pub(crate) mod storage;
 mod validate;
 
-pub use storage::FeatWidth;
+pub use storage::{FeatWidth, ThreshQuant};
 
 use crate::add::terminal::argmax;
 use crate::add::SizeStats;
@@ -71,12 +84,12 @@ use crate::classifier::{BackendKind, Classifier, ClassifierInfo, CostModel};
 use crate::compile::Abstraction;
 use crate::data::Schema;
 use crate::error::{Error, Result};
-use crate::runtime::{fault, pool};
+use crate::runtime::{fault, pool, simd};
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
-use storage::{Hot16, Hot32, HotRec, Plane};
+use storage::{Hot16, Hot32, HotQ16, HotRec, Plane};
 
 /// Batches with fewer rows than `nodes / WALK_FALLBACK_FACTOR` take
 /// per-row walks instead of a sweep (a sweep's cost is dominated by the
@@ -129,7 +142,7 @@ pub fn tile_bytes() -> usize {
 }
 
 /// Dispatch a body over the concrete hot-plane encoding, binding `$hot`
-/// to the record slice. Both arms monomorphise the same generic
+/// to the record slice. All arms monomorphise the same generic
 /// evaluator.
 macro_rules! with_hot {
     ($dd:expr, $hot:ident, $body:block) => {
@@ -140,6 +153,10 @@ macro_rules! with_hot {
             }
             HotPlane::U32(plane) => {
                 let $hot: &[Hot32] = plane;
+                $body
+            }
+            HotPlane::Q16(plane) => {
+                let $hot: &[HotQ16] = plane;
                 $body
             }
         }
@@ -387,6 +404,9 @@ pub(crate) struct RawFrozen {
 pub(crate) enum HotPlane {
     U16(Plane<Hot16>),
     U32(Plane<Hot32>),
+    /// `u16` features with f16-quantised thresholds
+    /// (`freeze --quantize-f16`).
+    Q16(Plane<HotQ16>),
 }
 
 impl HotPlane {
@@ -394,15 +414,76 @@ impl HotPlane {
         match self {
             HotPlane::U16(p) => p.len(),
             HotPlane::U32(p) => p.len(),
+            HotPlane::Q16(p) => p.len(),
         }
     }
 
     pub(crate) fn width(&self) -> FeatWidth {
         match self {
-            HotPlane::U16(_) => FeatWidth::U16,
+            HotPlane::U16(_) | HotPlane::Q16(_) => FeatWidth::U16,
             HotPlane::U32(_) => FeatWidth::U32,
         }
     }
+
+    pub(crate) fn quant(&self) -> ThreshQuant {
+        match self {
+            HotPlane::Q16(_) => ThreshQuant::F16,
+            _ => ThreshQuant::F32,
+        }
+    }
+}
+
+/// Freeze-time feature-column packing (`freeze --pack-features`):
+/// `perm[slot]` is the original feature id served by packed column
+/// `slot`, ordered by descending node-test frequency so the features the
+/// sweep gathers most share cache lines; `rank` is the inverse map
+/// (original id → packed column) the gather uses. The hot plane keeps
+/// **original** feature ids on disk and in memory, so single-row walks
+/// and readers that ignore the permutation section stay correct — only
+/// the batch sweeps, which copy rows into packed scratch cells, consult
+/// `rank`.
+#[derive(Debug, Clone)]
+pub(crate) struct FeatPack {
+    pub(crate) perm: Plane<u32>,
+    pub(crate) rank: Vec<u32>,
+}
+
+impl FeatPack {
+    /// Build the inverse map, rejecting anything that is not a true
+    /// permutation of `0..perm.len()` (a forged snapshot section must
+    /// fail here, not scramble gathers).
+    pub(crate) fn from_perm(perm: Plane<u32>) -> Result<FeatPack> {
+        let n = perm.len();
+        let mut rank = vec![u32::MAX; n];
+        for (slot, &f) in perm.iter().enumerate() {
+            if f as usize >= n || rank[f as usize] != u32::MAX {
+                return Err(Error::parse(
+                    "fdd snapshot: feature permutation is not a permutation",
+                ));
+            }
+            rank[f as usize] = slot as u32;
+        }
+        Ok(FeatPack { perm, rank })
+    }
+}
+
+/// Optional freeze-time layout transforms, applied by
+/// [`CompiledDD::freeze_with`](crate::compile::CompiledDD::freeze_with)
+/// after the structural freeze. Both default off; the default snapshot
+/// bytes are unchanged.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FreezeOpts {
+    /// Reorder feature columns by descending node-test frequency so the
+    /// batch gather's hot columns share cache lines. The permutation is
+    /// stored in its own snapshot section and applied transparently on
+    /// load; predictions are bit-identical.
+    pub pack_features: bool,
+    /// Quantise thresholds to IEEE-754 binary16 (ties round away from
+    /// zero), halving the hot plane to 4 bytes/node. The predicate table
+    /// is rewritten to the widened values so every plane stays
+    /// self-consistent; freezing fails if a threshold falls outside the
+    /// f16 range or two thresholds of one feature would collide.
+    pub quantize_f16: bool,
 }
 
 /// An immutable, cache-friendly snapshot of a compiled decision diagram.
@@ -430,6 +511,8 @@ pub struct FrozenDD {
     hot: HotPlane,
     lo: Plane<u32>,
     hi: Plane<u32>,
+    /// Freeze-time feature-column packing (`None` = natural order).
+    pack: Option<FeatPack>,
     /// Terminal payloads (cold) and the precomputed per-terminal majority
     /// class / §6 aggregation reads (hot).
     terminals: TermPlanes,
@@ -561,6 +644,7 @@ impl FrozenDD {
             hot,
             lo,
             hi,
+            pack: None,
             terminals,
             term_class,
             term_agg_reads,
@@ -597,6 +681,95 @@ impl FrozenDD {
     /// needed the `u32` escape hatch).
     pub fn feat_width(&self) -> FeatWidth {
         self.hot.width()
+    }
+
+    /// Threshold encoding of the hot plane (`F16` after
+    /// `freeze --quantize-f16`).
+    pub fn thresh_quant(&self) -> ThreshQuant {
+        self.hot.quant()
+    }
+
+    /// Whether a freeze-time feature-column permutation rides with this
+    /// diagram (`freeze --pack-features`).
+    pub fn packed_features(&self) -> bool {
+        self.pack.is_some()
+    }
+
+    /// Apply the optional freeze-time layout transforms (the second half
+    /// of [`CompiledDD::freeze_with`](crate::compile::CompiledDD::freeze_with)).
+    pub fn apply_freeze_opts(mut self, opts: FreezeOpts) -> Result<FrozenDD> {
+        if opts.pack_features {
+            let perm = builder::feature_permutation(
+                self.schema.n_features(),
+                self.node_level
+                    .iter()
+                    .map(|&l| self.pred_feature[l as usize] as usize),
+            );
+            self.pack = Some(FeatPack::from_perm(Plane::Owned(perm))?);
+        }
+        if opts.quantize_f16 {
+            self = self.quantize_f16()?;
+        }
+        Ok(self)
+    }
+
+    /// Narrow the hot plane to f16 thresholds. The predicate table is
+    /// rewritten to the widened (decoded) values, so the hot records,
+    /// the cold planes and every evaluation path agree bit-for-bit on
+    /// what each node compares against.
+    fn quantize_f16(mut self) -> Result<FrozenDD> {
+        if !matches!(self.hot, HotPlane::U16(_)) {
+            return Err(Error::invalid(
+                "f16 threshold quantisation requires the u16 feature encoding",
+            ));
+        }
+        let mut qbits = Vec::with_capacity(self.pred_threshold.len());
+        for &t in self.pred_threshold.iter() {
+            if !t.is_finite() || t.abs() > storage::F16_MAX {
+                return Err(Error::invalid(format!(
+                    "threshold {t} is outside the f16 range; freeze without --quantize-f16"
+                )));
+            }
+            qbits.push(storage::f32_to_f16_bits(t));
+        }
+        // Two distinct thresholds of one feature collapsing onto one f16
+        // value would merge predicates the diagram orders strictly —
+        // refuse instead of shipping a diagram whose level order lies.
+        let mut keys: Vec<(u32, u16, u32)> = self
+            .pred_feature
+            .iter()
+            .zip(self.pred_threshold.iter())
+            .zip(qbits.iter())
+            .map(|((&f, &t), &q)| (f, q, t.to_bits()))
+            .collect();
+        keys.sort_unstable();
+        for w in keys.windows(2) {
+            if w[0].0 == w[1].0 && w[0].1 == w[1].1 && w[0].2 != w[1].2 {
+                return Err(Error::invalid(format!(
+                    "feature {} thresholds {} and {} collide in f16; freeze without --quantize-f16",
+                    w[0].0,
+                    f32::from_bits(w[0].2),
+                    f32::from_bits(w[1].2),
+                )));
+            }
+        }
+        let hot = HotPlane::Q16(Plane::Owned(
+            self.node_level
+                .iter()
+                .map(|&l| HotQ16 {
+                    feat: self.pred_feature[l as usize] as u16,
+                    qthresh: qbits[l as usize],
+                })
+                .collect(),
+        ));
+        self.hot = hot;
+        self.pred_threshold = Plane::Owned(
+            qbits
+                .iter()
+                .map(|&q| storage::f16_bits_to_f32(q))
+                .collect(),
+        );
+        Ok(self)
     }
 
     /// Whether the planes borrow an mmap'd snapshot file (the zero-copy
@@ -654,6 +827,7 @@ impl FrozenDD {
     /// per-row walks) regardless of thread count or tile budget.
     pub fn classify_batch(&self, rows: RowMatrix<'_>) -> Vec<u32> {
         let tile = tile_bytes();
+        let kernel = simd::kernel();
         let mut out = vec![0u32; rows.n_rows()];
         let sharded = rows.n_rows() >= PAR_MIN_ROWS
             && pool::run_sharded(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
@@ -664,6 +838,7 @@ impl FrozenDD {
                         out_chunk,
                         &mut [],
                         tile,
+                        kernel,
                         None,
                     )
                 });
@@ -676,6 +851,7 @@ impl FrozenDD {
                     &mut out,
                     &mut [],
                     tile,
+                    kernel,
                     None,
                 )
             });
@@ -697,6 +873,7 @@ impl FrozenDD {
         deadline: Option<Instant>,
     ) -> Result<Vec<u32>> {
         let tile = tile_bytes();
+        let kernel = simd::kernel();
         let mut out = vec![0u32; rows.n_rows()];
         let outcome = if rows.n_rows() >= PAR_MIN_ROWS {
             pool::run_sharded_quarantined(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
@@ -708,6 +885,7 @@ impl FrozenDD {
                         out_chunk,
                         &mut [],
                         tile,
+                        kernel,
                         deadline,
                     )
                 });
@@ -728,6 +906,7 @@ impl FrozenDD {
                         &mut out,
                         &mut [],
                         tile,
+                        kernel,
                         deadline,
                     )
                 });
@@ -747,6 +926,7 @@ impl FrozenDD {
     /// single-row walk.
     pub fn classify_batch_steps(&self, rows: RowMatrix<'_>) -> (Vec<u32>, Vec<u32>) {
         let tile = tile_bytes();
+        let kernel = simd::kernel();
         let mut out = vec![0u32; rows.n_rows()];
         let mut steps = vec![0u32; rows.n_rows()];
         let sharded = rows.n_rows() >= PAR_MIN_ROWS
@@ -763,6 +943,7 @@ impl FrozenDD {
                             out_chunk,
                             steps_chunk,
                             tile,
+                            kernel,
                             None,
                         )
                     });
@@ -776,6 +957,7 @@ impl FrozenDD {
                     &mut out,
                     &mut steps,
                     tile,
+                    kernel,
                     None,
                 )
             });
@@ -791,6 +973,7 @@ impl FrozenDD {
         deadline: Option<Instant>,
     ) -> Result<(Vec<u32>, Vec<u32>)> {
         let tile = tile_bytes();
+        let kernel = simd::kernel();
         let mut out = vec![0u32; rows.n_rows()];
         let mut steps = vec![0u32; rows.n_rows()];
         let outcome = if rows.n_rows() >= PAR_MIN_ROWS {
@@ -808,6 +991,7 @@ impl FrozenDD {
                             out_chunk,
                             steps_chunk,
                             tile,
+                            kernel,
                             deadline,
                         )
                     });
@@ -827,6 +1011,7 @@ impl FrozenDD {
                         &mut out,
                         &mut steps,
                         tile,
+                        kernel,
                         deadline,
                     )
                 });
@@ -843,7 +1028,15 @@ impl FrozenDD {
     /// [`BatchScratch`].
     pub fn classify_batch_with(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch) -> Vec<u32> {
         let mut out = vec![0u32; rows.n_rows()];
-        self.sweep_dispatch::<false>(rows, scratch, &mut out, &mut [], tile_bytes(), None);
+        self.sweep_dispatch::<false>(
+            rows,
+            scratch,
+            &mut out,
+            &mut [],
+            tile_bytes(),
+            simd::kernel(),
+            None,
+        );
         out
     }
 
@@ -869,6 +1062,22 @@ impl FrozenDD {
         out: &mut Vec<u32>,
         tile_budget: usize,
     ) {
+        self.classify_batch_kernel_into(rows, scratch, out, tile_budget, simd::kernel());
+    }
+
+    /// [`FrozenDD::classify_batch_into_tiled`] with an explicit SIMD
+    /// kernel — the hook benches and conformance tests use to pin every
+    /// kernel against the scalar walk (and what the `frozen-simd` /
+    /// `frozen-scalar` bench series run). Kernels the host cannot execute
+    /// are downgraded via [`simd::Kernel::supported`], never trapped on.
+    pub fn classify_batch_kernel_into(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<u32>,
+        tile_budget: usize,
+        kernel: simd::Kernel,
+    ) {
         out.clear();
         out.resize(rows.n_rows(), 0);
         let budget = if tile_budget == 0 {
@@ -876,7 +1085,7 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget, None);
+        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget, kernel.supported(), None);
     }
 
     /// Steps-metered single-threaded sweep with an explicit tile budget
@@ -889,6 +1098,21 @@ impl FrozenDD {
         steps: &mut Vec<u32>,
         tile_budget: usize,
     ) {
+        self.classify_batch_steps_kernel_into(rows, scratch, out, steps, tile_budget, simd::kernel());
+    }
+
+    /// Steps-metered counterpart of
+    /// [`FrozenDD::classify_batch_kernel_into`]: §6 step counts must
+    /// survive every kernel bit-identically too.
+    pub fn classify_batch_steps_kernel_into(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        out: &mut Vec<u32>,
+        steps: &mut Vec<u32>,
+        tile_budget: usize,
+        kernel: simd::Kernel,
+    ) {
         out.clear();
         out.resize(rows.n_rows(), 0);
         steps.clear();
@@ -898,7 +1122,7 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget, None);
+        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget, kernel.supported(), None);
     }
 
     /// Monomorphise the sweep over the hot-plane encoding.
@@ -910,10 +1134,20 @@ impl FrozenDD {
         out: &mut [u32],
         steps: &mut [u32],
         tile_budget: usize,
+        kernel: simd::Kernel,
         deadline: Option<Instant>,
     ) {
         with_hot!(self, hot, {
-            self.sweep_into::<_, STEPS>(hot, rows, scratch, out, steps, tile_budget, deadline)
+            self.sweep_into::<_, STEPS>(
+                hot,
+                rows,
+                scratch,
+                out,
+                steps,
+                tile_budget,
+                kernel,
+                deadline,
+            )
         })
     }
 
@@ -931,6 +1165,7 @@ impl FrozenDD {
         out: &mut [u32],
         steps: &mut [u32],
         tile_budget: usize,
+        kernel: simd::Kernel,
         deadline: Option<Instant>,
     ) {
         debug_assert_eq!(out.len(), rows.n_rows());
@@ -953,6 +1188,8 @@ impl FrozenDD {
         }
         let n_nodes = hot.len();
         if rows.n_rows().saturating_mul(WALK_FALLBACK_FACTOR) < n_nodes {
+            // Small batches walk the raw rows directly: no packing copy,
+            // no scratch traffic — the per-row walk is latency-bound.
             let lo = &self.lo[..];
             let hi = &self.hi[..];
             for (i, r) in rows.iter().enumerate() {
@@ -964,12 +1201,33 @@ impl FrozenDD {
             }
             return;
         }
+        // The batch sweeps gather feature cells by flat index. When the
+        // snapshot carries a freeze-time feature permutation, copy the
+        // shard's rows into the scratch's packed matrix once (hot columns
+        // adjacent → the lane gathers share cache lines) and translate
+        // node feature ids through `rank`. `mem::take` sidesteps the
+        // scratch borrow while the sweeps hold `&mut scratch`; capacity
+        // is preserved, so the warm path stays allocation-free.
+        let nf = rows.n_features();
+        let mut packed = std::mem::take(&mut scratch.packed);
+        let (cells, rank): (&[f32], Option<&[u32]>) = match &self.pack {
+            Some(p) => {
+                pack_rows(rows, &p.rank, &mut packed);
+                (&packed[..], Some(&p.rank[..]))
+            }
+            None => (rows.data(), None),
+        };
         let tile_nodes = tile_span::<H>(tile_budget);
         if tile_nodes >= n_nodes {
-            self.rounds_sweep::<H, STEPS>(hot, rows, scratch, out, steps, deadline);
+            self.rounds_sweep::<H, STEPS>(
+                hot, rows, cells, nf, rank, scratch, out, steps, kernel, deadline,
+            );
         } else {
-            self.tiled_sweep::<H, STEPS>(hot, rows, scratch, out, steps, tile_nodes, deadline);
+            self.tiled_sweep::<H, STEPS>(
+                hot, rows, cells, nf, rank, scratch, out, steps, tile_nodes, kernel, deadline,
+            );
         }
+        scratch.packed = packed;
     }
 
     /// The round-based node-ordered sweep for diagrams whose hot planes
@@ -986,9 +1244,13 @@ impl FrozenDD {
         &self,
         hot: &[H],
         rows: RowMatrix<'_>,
+        cells: &[f32],
+        nf: usize,
+        rank: Option<&[u32]>,
         scratch: &mut BatchScratch,
         out: &mut [u32],
         steps: &mut [u32],
+        kernel: simd::Kernel,
         deadline: Option<Instant>,
     ) {
         let lo_arr = &self.lo[..];
@@ -1028,29 +1290,71 @@ impl FrozenDD {
                 count_a[node] = 0; // restore the all-zero invariant
                 let end = off_a[node] as usize;
                 let rec = hot[node];
-                for &r in &slots_a[end - c..end] {
-                    let x = rows.row(r as usize);
-                    if STEPS {
-                        steps[r as usize] += 1;
-                    }
-                    let stored = if x[rec.feat_ix()] < rec.threshold() {
-                        hi_arr[node]
-                    } else {
-                        lo_arr[node]
-                    };
-                    if stored & TERM_BIT != 0 {
-                        let t = (stored & !TERM_BIT) as usize;
-                        out[r as usize] = u32::from(term_class[t]);
-                        if STEPS {
-                            steps[r as usize] += term_agg[t];
+                let col = match rank {
+                    Some(rk) => rk[rec.feat_ix()] as usize,
+                    None => rec.feat_ix(),
+                };
+                let thresh = rec.threshold();
+                let (lo_w, hi_w) = (lo_arr[node], hi_arr[node]);
+                let seg = &slots_a[end - c..end];
+                // Park or finish one routed row given its stored child
+                // word — shared by the lane path and the scalar tail so
+                // both write through the exact same bookkeeping.
+                macro_rules! route {
+                    ($r:expr, $stored:expr) => {{
+                        let stored: u32 = $stored;
+                        if stored & TERM_BIT != 0 {
+                            let t = (stored & !TERM_BIT) as usize;
+                            out[$r as usize] = u32::from(term_class[t]);
+                            if STEPS {
+                                steps[$r as usize] += term_agg[t];
+                            }
+                        } else {
+                            let next = node + stored as usize; // delta decode
+                            pending.push($r);
+                            dest.push(next as u32);
+                            count_b[next] += 1;
+                            next_lo = next_lo.min(next);
+                            next_hi = next_hi.max(next);
                         }
-                    } else {
-                        let next = node + stored as usize; // delta decode
-                        pending.push(r);
-                        dest.push(next as u32);
-                        count_b[next] += 1;
-                        next_lo = next_lo.min(next);
-                        next_hi = next_hi.max(next);
+                    }};
+                }
+                if kernel != simd::Kernel::Scalar {
+                    // Lane path: gather LANES parked rows' feature cells,
+                    // compare+blend the raw lo/hi words branchlessly, then
+                    // route each selected word. The ordered `<` compare is
+                    // false on NaN in every kernel, so the selected word —
+                    // and therefore the class and step count — is
+                    // bit-identical to the scalar walk.
+                    let mut chunks = seg.chunks_exact(simd::LANES);
+                    for chunk in &mut chunks {
+                        let mut xs = [0f32; simd::LANES];
+                        for (x, &r) in xs.iter_mut().zip(chunk) {
+                            *x = cells[r as usize * nf + col];
+                            if STEPS {
+                                steps[r as usize] += 1;
+                            }
+                        }
+                        let mut sel = [0u32; simd::LANES];
+                        simd::select_deltas(kernel, thresh, lo_w, hi_w, &xs, &mut sel);
+                        for (&r, &stored) in chunk.iter().zip(sel.iter()) {
+                            route!(r, stored);
+                        }
+                    }
+                    for &r in chunks.remainder() {
+                        if STEPS {
+                            steps[r as usize] += 1;
+                        }
+                        let x = cells[r as usize * nf + col];
+                        route!(r, if x < thresh { hi_w } else { lo_w });
+                    }
+                } else {
+                    for &r in seg {
+                        if STEPS {
+                            steps[r as usize] += 1;
+                        }
+                        let x = cells[r as usize * nf + col];
+                        route!(r, if x < thresh { hi_w } else { lo_w });
                     }
                 }
             }
@@ -1102,10 +1406,14 @@ impl FrozenDD {
         &self,
         hot: &[H],
         rows: RowMatrix<'_>,
+        cells: &[f32],
+        nf: usize,
+        rank: Option<&[u32]>,
         scratch: &mut BatchScratch,
         out: &mut [u32],
         steps: &mut [u32],
         tile_nodes: usize,
+        kernel: simd::Kernel,
         deadline: Option<Instant>,
     ) {
         let lo_arr = &self.lo[..];
@@ -1150,14 +1458,30 @@ impl FrozenDD {
             while r != CHAIN_END {
                 let row = r as usize;
                 let follow = next[row];
+                // Software prefetch: while this row walks the resident
+                // tile, pull the *next* chained row's parked node data
+                // and feature cells toward L1 — the chain order is the
+                // one access pattern the hardware prefetcher cannot see.
+                if kernel != simd::Kernel::Scalar && follow != CHAIN_END {
+                    let nrow = follow as usize;
+                    let pn = node_of[nrow] as usize;
+                    simd::prefetch(&hot[pn]);
+                    simd::prefetch(&lo_arr[pn]);
+                    simd::prefetch(&hi_arr[pn]);
+                    simd::prefetch(&cells[nrow * nf]);
+                }
                 let mut n = node_of[row] as usize;
-                let x = rows.row(row);
+                let x = &cells[row * nf..row * nf + nf];
                 loop {
                     let h = hot[n];
                     if STEPS {
                         steps[row] += 1;
                     }
-                    let stored = if x[h.feat_ix()] < h.threshold() {
+                    let col = match rank {
+                        Some(rk) => rk[h.feat_ix()] as usize,
+                        None => h.feat_ix(),
+                    };
+                    let stored = if x[col] < h.threshold() {
                         hi_arr[n]
                     } else {
                         lo_arr[n]
@@ -1197,6 +1521,8 @@ impl FrozenDD {
 /// links plus a per-tile `head` array kept all-`CHAIN_END` between
 /// calls. A warm scratch can therefore be reused across batches, across
 /// diagrams, *and across sweep strategies* (buffers only ever grow).
+/// `packed` holds the feature-permuted copy of the shard's row matrix
+/// when the frozen snapshot carries a freeze-time column packing.
 #[derive(Debug, Default)]
 pub struct BatchScratch {
     count_a: Vec<u32>,
@@ -1208,6 +1534,7 @@ pub struct BatchScratch {
     pending: Vec<u32>,
     dest: Vec<u32>,
     head: Vec<u32>,
+    packed: Vec<f32>,
 }
 
 impl BatchScratch {
@@ -1236,6 +1563,22 @@ impl BatchScratch {
         if self.slots_a.len() < n_rows {
             self.slots_a.resize(n_rows, 0);
             self.slots_b.resize(n_rows, 0);
+        }
+    }
+}
+
+/// Copy a shard's rows into `packed` with columns reordered by `rank`
+/// (original feature id → packed slot): hot features land adjacent, so
+/// the sweeps' cell gathers share cache lines. `clear` + `resize` keep
+/// a warm buffer allocation-free.
+fn pack_rows(rows: RowMatrix<'_>, rank: &[u32], packed: &mut Vec<f32>) {
+    let nf = rows.n_features();
+    packed.clear();
+    packed.resize(rows.n_rows() * nf, 0.0);
+    for (r, row) in rows.iter().enumerate() {
+        let dst = &mut packed[r * nf..(r + 1) * nf];
+        for (f, &v) in row.iter().enumerate() {
+            dst[rank[f] as usize] = v;
         }
     }
 }
@@ -1555,5 +1898,178 @@ mod tests {
         );
         assert_eq!(w.agg_reads_of(0, 2), 3);
         assert_eq!(w.agg_reads_of(1, 2), 0);
+    }
+
+    /// Big NaN-bearing row block: iris tiled past both the walk-fallback
+    /// and parallel crossovers, with a sprinkling of NaN cells (which must
+    /// route to `lo` in every kernel — ordered `<` is false on NaN).
+    fn nan_bearing_rows(ds: &crate::data::Dataset) -> Vec<f32> {
+        let nf = ds.n_features();
+        let mut data = Vec::with_capacity(4096 * nf);
+        for i in 0..4096 {
+            data.extend_from_slice(ds.row(i % ds.n_rows()));
+            if i % 17 == 0 {
+                let cell = data.len() - 1 - (i % nf);
+                data[cell] = f32::NAN;
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn every_available_kernel_matches_the_scalar_walk() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let frozen = dd.freeze();
+        let data = nan_bearing_rows(&ds);
+        let rows = RowMatrix::new(&data, ds.n_features()).unwrap();
+        let want: Vec<u32> = rows.iter().map(|r| frozen.classify(r)).collect();
+        let want_steps: Vec<u32> = rows
+            .iter()
+            .map(|r| frozen.classify_with_steps(r).1 as u32)
+            .collect();
+        let mut scratch = BatchScratch::new();
+        let (mut out, mut steps) = (Vec::new(), Vec::new());
+        for kernel in simd::available() {
+            for tile_budget in [1usize, 4096, 0] {
+                frozen.classify_batch_kernel_into(rows, &mut scratch, &mut out, tile_budget, kernel);
+                assert_eq!(out, want, "{} classes, tile budget {tile_budget}", kernel.name());
+                frozen.classify_batch_steps_kernel_into(
+                    rows,
+                    &mut scratch,
+                    &mut out,
+                    &mut steps,
+                    tile_budget,
+                    kernel,
+                );
+                assert_eq!(out, want, "{} steps classes, {tile_budget}", kernel.name());
+                assert_eq!(steps, want_steps, "{} steps, {tile_budget}", kernel.name());
+            }
+        }
+        // Unsupported kernel requests downgrade instead of trapping.
+        frozen.classify_batch_kernel_into(rows, &mut scratch, &mut out, 0, simd::Kernel::Avx2);
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn quantized_freeze_is_bit_identical_and_roundtrips() {
+        for abstraction in [Abstraction::Word, Abstraction::Vector, Abstraction::Majority] {
+            let (ds, dd) = frozen_iris(abstraction);
+            let plain = dd.freeze();
+            let q = dd
+                .freeze()
+                .apply_freeze_opts(FreezeOpts {
+                    quantize_f16: true,
+                    ..Default::default()
+                })
+                .unwrap();
+            assert_eq!(q.thresh_quant(), ThreshQuant::F16);
+            assert_eq!(q.feat_width(), FeatWidth::U16);
+            for i in 0..ds.n_rows() {
+                assert_eq!(
+                    q.classify_with_steps(ds.row(i)),
+                    plain.classify_with_steps(ds.row(i)),
+                    "{abstraction:?} row {i}"
+                );
+            }
+            // snapshot round-trip keeps the quantised plane byte-identical
+            let bytes = q.to_bytes();
+            let back = FrozenDD::from_bytes(&bytes).unwrap();
+            assert_eq!(back.thresh_quant(), ThreshQuant::F16);
+            assert_eq!(back.to_bytes(), bytes);
+            assert_eq!(back.classify(ds.row(0)), plain.classify(ds.row(0)));
+        }
+    }
+
+    #[test]
+    fn packed_freeze_is_bit_identical_and_roundtrips() {
+        let (ds, dd) = frozen_iris(Abstraction::Majority);
+        let plain = dd.freeze();
+        let packed = dd
+            .freeze()
+            .apply_freeze_opts(FreezeOpts {
+                pack_features: true,
+                quantize_f16: true,
+            })
+            .unwrap();
+        assert!(packed.packed_features());
+        let data = nan_bearing_rows(&ds);
+        let rows = RowMatrix::new(&data, ds.n_features()).unwrap();
+        // single-row walks, batch sweeps (all strategies) and §6 steps all
+        // agree with the unpacked freeze
+        let want: Vec<u32> = rows.iter().map(|r| plain.classify(r)).collect();
+        let mut scratch = BatchScratch::new();
+        let (mut out, mut steps) = (Vec::new(), Vec::new());
+        for tile_budget in [1usize, 4096, 0] {
+            packed.classify_batch_into_tiled(rows, &mut scratch, &mut out, tile_budget);
+            assert_eq!(out, want, "tile budget {tile_budget}");
+            packed.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, tile_budget);
+            assert_eq!(out, want, "steps classes, tile budget {tile_budget}");
+        }
+        for (i, r) in rows.iter().enumerate().take(64) {
+            assert_eq!(
+                packed.classify_with_steps(r),
+                plain.classify_with_steps(r),
+                "row {i}"
+            );
+        }
+        assert_eq!(packed.classify_batch(rows), want); // sharded path
+        // snapshot round-trip preserves the permutation section
+        let bytes = packed.to_bytes();
+        let back = FrozenDD::from_bytes(&bytes).unwrap();
+        assert!(back.packed_features());
+        assert_eq!(back.to_bytes(), bytes);
+        back.classify_batch_into(rows, &mut scratch, &mut out);
+        assert_eq!(out, want);
+        // an unpacked freeze writes no permutation section at all
+        assert!(!plain.packed_features());
+    }
+
+    #[test]
+    fn quantize_rejects_unsafe_thresholds() {
+        use crate::data::{Feature, FeatureKind};
+        let schema = Schema {
+            features: vec![Feature {
+                name: "x0".into(),
+                kind: FeatureKind::Numeric,
+            }],
+            classes: vec!["a".into(), "b".into()],
+        };
+        let raw = |t0: f32, t1: f32| RawFrozen {
+            schema: schema.clone(),
+            abstraction: Abstraction::Majority,
+            unsat_elim: true,
+            n_trees: 3,
+            pred_feature: vec![0, 0],
+            pred_threshold: vec![t0, t1],
+            node_level: vec![0, 1],
+            node_lo: vec![1, TERM_BIT],
+            node_hi: vec![TERM_BIT, TERM_BIT | 1],
+            root: 0,
+            terminals: FrozenTerminals::Majority {
+                classes: vec![0, 1],
+            },
+        };
+        let quantize = |t0: f32, t1: f32| {
+            FrozenDD::from_raw(raw(t0, t1))
+                .unwrap()
+                .apply_freeze_opts(FreezeOpts {
+                    quantize_f16: true,
+                    ..Default::default()
+                })
+        };
+        // out-of-f16-range threshold
+        assert!(quantize(1.0e9, 0.5).is_err());
+        // two distinct thresholds on one feature that collide in f16
+        assert!(quantize(1.0, 1.000_01).is_err());
+        // distinct-but-representable thresholds are fine
+        assert!(quantize(1.0, 1.5).is_ok());
+        // the wide feature encoding cannot be quantised
+        let wide = FrozenDD::from_raw_with_width(raw(0.5, 0.25), Some(FeatWidth::U32)).unwrap();
+        assert!(wide
+            .apply_freeze_opts(FreezeOpts {
+                quantize_f16: true,
+                ..Default::default()
+            })
+            .is_err());
     }
 }

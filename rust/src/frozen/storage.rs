@@ -19,10 +19,12 @@
 //!   is sound on little-endian hosts.
 //!
 //! The hot walk records live here too: [`Hot16`] (6 bytes: `u16` feature
-//! + `f32` threshold, `repr(C, packed)`) and the [`Hot32`] escape hatch
-//! for schemas with more than 65 536 features (8 bytes). Both keep the
-//! bytes touched per decision at or under 8 — half the 16-byte AoS node
-//! this layout replaced.
+//! + `f32` threshold, `repr(C, packed)`), the [`Hot32`] escape hatch
+//! for schemas with more than 65 536 features (8 bytes), and [`HotQ16`]
+//! (4 bytes: `u16` feature + IEEE-754 binary16 threshold bits, written by
+//! `freeze --quantize-f16`). All keep the bytes touched per decision at
+//! or under 8 — half the 16-byte AoS node this layout replaced; the
+//! quantised record halves the `Hot16` plane again.
 //!
 //! [`FrozenDD`]: crate::frozen::FrozenDD
 
@@ -71,6 +73,112 @@ impl FeatWidth {
             ))),
         }
     }
+}
+
+/// Threshold encoding of the hot plane, chosen at freeze time
+/// (`freeze --quantize-f16`) and recorded in the snapshot META section.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ThreshQuant {
+    /// Full-precision `f32` thresholds (the default; META code 0, which
+    /// is also what every pre-quantisation snapshot carries in the byte).
+    F32,
+    /// IEEE-754 binary16 thresholds (META code 1). Only valid together
+    /// with [`FeatWidth::U16`]; halves the hot plane to 4 bytes/node.
+    F16,
+}
+
+impl ThreshQuant {
+    /// The META encoding of this quantisation mode.
+    pub fn code(self) -> u8 {
+        match self {
+            ThreshQuant::F32 => 0,
+            ThreshQuant::F16 => 1,
+        }
+    }
+
+    /// Decode the META byte.
+    pub fn from_code(code: u8) -> Result<ThreshQuant> {
+        match code {
+            0 => Ok(ThreshQuant::F32),
+            1 => Ok(ThreshQuant::F16),
+            other => Err(Error::parse(format!(
+                "fdd snapshot: unknown threshold quantisation code {other}"
+            ))),
+        }
+    }
+}
+
+/// Largest finite IEEE-754 binary16 magnitude (quantisation range guard).
+pub(crate) const F16_MAX: f32 = 65504.0;
+
+/// Decode IEEE-754 binary16 bits to `f32` (exact: every f16 value is
+/// representable as an f32).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: normalise the mantissa into f32 range
+            let shift = man.leading_zeros() - 21;
+            let exp32 = 113 - shift;
+            let man32 = (man << shift) & 0x3ff;
+            sign | (exp32 << 23) | (man32 << 13)
+        }
+    } else if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13) // ±inf / NaN
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode `f32` to IEEE-754 binary16 bits, rounding to nearest with ties
+/// away from zero. Values past f16 range encode as ±inf; callers that
+/// need lossless-for-classification quantisation must guard the range
+/// and collision cases themselves (see `frozen::FreezeOpts`).
+pub(crate) fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / NaN: preserve the class (and a non-zero payload for NaN)
+        let payload = if man == 0 {
+            0
+        } else {
+            0x200 | ((man >> 13) & 0x3ff) as u16
+        };
+        return sign | 0x7c00 | payload;
+    }
+    let e = exp - 112; // f16 biased exponent before rounding
+    if e >= 0x1f {
+        return sign | 0x7c00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // subnormal (or underflow-to-zero) target
+        if e < -10 {
+            return sign; // magnitude below half the smallest subnormal
+        }
+        let man = man | 0x80_0000; // restore the implicit leading 1
+        let shift = (14 - e) as u32;
+        let half = 1u32 << (shift - 1);
+        let q = (man + half) >> shift; // ties round away from zero
+        return sign | q as u16;
+    }
+    // normal target: round the 13 dropped mantissa bits, ties away
+    let q = man + 0x1000;
+    if q & 0x80_0000 != 0 {
+        // mantissa carry bumps the exponent (may reach inf at e == 0x1e)
+        let e = e + 1;
+        if e >= 0x1f {
+            return sign | 0x7c00;
+        }
+        return sign | ((e as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | ((q >> 13) & 0x3ff) as u16
 }
 
 /// A plane element: fixed-size, alignment ≤ 8, and a little-endian byte
@@ -190,8 +298,46 @@ impl Pod for Hot32 {
     }
 }
 
-/// The walk-record contract shared by [`Hot16`] and [`Hot32`]: the
-/// single-row walk and the batch sweeps are generic over it, so both
+/// The f16-quantised walk record (`freeze --quantize-f16`): 4 bytes,
+/// naturally aligned, threshold stored as IEEE-754 binary16 bits and
+/// widened back to `f32` per visit (one shift-or on the hot path).
+#[derive(Clone, Copy)]
+#[repr(C)]
+pub(crate) struct HotQ16 {
+    pub(crate) feat: u16,
+    pub(crate) qthresh: u16,
+}
+
+impl fmt::Debug for HotQ16 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "HotQ16(x[{}] < {})",
+            self.feat,
+            f16_bits_to_f32(self.qthresh)
+        )
+    }
+}
+
+impl Pod for HotQ16 {
+    const SIZE: usize = 4;
+
+    fn from_le(bytes: &[u8]) -> Self {
+        HotQ16 {
+            feat: u16::from_le_bytes(bytes[0..2].try_into().unwrap()),
+            qthresh: u16::from_le_bytes(bytes[2..4].try_into().unwrap()),
+        }
+    }
+
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.feat.to_le_bytes());
+        out.extend_from_slice(&self.qthresh.to_le_bytes());
+    }
+}
+
+/// The walk-record contract shared by [`Hot16`], [`Hot32`] and
+/// [`HotQ16`]: the
+/// single-row walk and the batch sweeps are generic over it, so all
 /// encodings share one (monomorphised) evaluator.
 pub(crate) trait HotRec: Pod {
     fn feat_ix(self) -> usize;
@@ -219,6 +365,18 @@ impl HotRec for Hot32 {
     #[inline(always)]
     fn threshold(self) -> f32 {
         self.thresh
+    }
+}
+
+impl HotRec for HotQ16 {
+    #[inline(always)]
+    fn feat_ix(self) -> usize {
+        self.feat as usize
+    }
+
+    #[inline(always)]
+    fn threshold(self) -> f32 {
+        f16_bits_to_f32(self.qthresh)
     }
 }
 
@@ -425,13 +583,75 @@ mod tests {
     #[test]
     fn hot_record_layout_is_narrow() {
         // The acceptance bar: hot bytes per decision node ≤ 8 (u16
-        // encoding is 6, the u32 escape hatch exactly 8) — down from the
-        // 16-byte AoS node of the previous layout.
+        // encoding is 6, the u32 escape hatch exactly 8, the quantised
+        // record 4) — down from the 16-byte AoS node of the previous
+        // layout.
         assert_eq!(std::mem::size_of::<Hot16>(), 6);
         assert_eq!(std::mem::align_of::<Hot16>(), 1);
         assert_eq!(std::mem::size_of::<Hot32>(), 8);
+        assert_eq!(std::mem::size_of::<HotQ16>(), 4);
+        assert_eq!(std::mem::align_of::<HotQ16>(), 2);
         assert!(std::mem::size_of::<Hot16>() <= 8);
         assert!(std::mem::size_of::<Hot32>() <= 8);
+    }
+
+    #[test]
+    fn thresh_quant_codes() {
+        assert_eq!(ThreshQuant::F32.code(), 0);
+        assert_eq!(ThreshQuant::F16.code(), 1);
+        assert_eq!(ThreshQuant::from_code(0).unwrap(), ThreshQuant::F32);
+        assert_eq!(ThreshQuant::from_code(1).unwrap(), ThreshQuant::F16);
+        assert!(ThreshQuant::from_code(7).is_err());
+    }
+
+    #[test]
+    fn f16_decode_covers_every_class() {
+        assert_eq!(f16_bits_to_f32(0x0000), 0.0);
+        assert!(f16_bits_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f16_bits_to_f32(0x3c00), 1.0);
+        assert_eq!(f16_bits_to_f32(0xc000), -2.0);
+        assert_eq!(f16_bits_to_f32(0x7bff), 65504.0); // f16::MAX
+        assert_eq!(f16_bits_to_f32(0x0400), 6.103_515_6e-5); // min normal
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // min subnormal
+        assert_eq!(f16_bits_to_f32(0x03ff), 6.097_555_2e-5); // max subnormal
+        assert_eq!(f16_bits_to_f32(0x7c00), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(0xfc00), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest_ties_away() {
+        // exactly representable values round-trip bit-exactly
+        for &h in &[0x0000u16, 0x8000, 0x3c00, 0xc000, 0x7bff, 0x0400, 0x0001, 0x03ff] {
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "bits {h:#06x}");
+        }
+        // every representable f16 round-trips through f32 (exhaustive
+        // over finite non-NaN space: 2^16 values is cheap)
+        for h in 0..=u16::MAX {
+            let v = f16_bits_to_f32(h);
+            if v.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(v)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(v), h, "bits {h:#06x}");
+            }
+        }
+        // midpoints round away from zero
+        let mid = (f16_bits_to_f32(0x3c00) + f16_bits_to_f32(0x3c01)) / 2.0;
+        assert_eq!(f32_to_f16_bits(mid), 0x3c01);
+        assert_eq!(f32_to_f16_bits(-mid), 0xbc01);
+        // non-midpoints go to the nearest neighbour
+        assert_eq!(f32_to_f16_bits(1.0001), 0x3c00);
+        // overflow → ±inf, tiny → ±0
+        assert_eq!(f32_to_f16_bits(1.0e9), 0x7c00);
+        assert_eq!(f32_to_f16_bits(-1.0e9), 0xfc00);
+        assert_eq!(f32_to_f16_bits(1.0e-12), 0x0000);
+        assert_eq!(f32_to_f16_bits(-1.0e-12), 0x8000);
+        // half the smallest subnormal is a tie → rounds away to it
+        let half_min_sub = f16_bits_to_f32(0x0001) / 2.0;
+        assert_eq!(f32_to_f16_bits(half_min_sub), 0x0001);
+        // just above f16::MAX but below the rounding cliff still overflows
+        // the exponent and must yield inf, not garbage
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7c00);
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! [`FrozenDD`]: crate::frozen::FrozenDD
 
 use crate::error::{Error, Result};
+use crate::frozen::storage::HotRec;
 use crate::frozen::{FrozenDD, FrozenTerminals, HotPlane, RawFrozen, TermPlanes, TERM_BIT};
 
 fn err(msg: impl Into<String>) -> Error {
@@ -295,6 +296,12 @@ pub(crate) fn validate_loaded(dd: &FrozenDD) -> Result<()> {
             HotPlane::U32(p) => {
                 let h = p[i];
                 (h.feat, h.thresh)
+            }
+            // Quantisation rewrites the predicate table to the decoded
+            // f16 values, so the bit-for-bit comparison still holds.
+            HotPlane::Q16(p) => {
+                let h = p[i];
+                (u32::from(h.feat), h.threshold())
             }
         };
         if hot_feat != dd.pred_feature[level]

@@ -95,6 +95,45 @@
 //! `POST /classify_batch`) returns the per-row step counts the single-row
 //! walk would report, bit-identical.
 //!
+//! ## SIMD kernels: lanes across the batch, never across the tree
+//!
+//! Inside every batch sweep, each decision node routes its parked rows
+//! through one predicate — so the data parallelism lies across *rows*,
+//! not across the diagram. The frozen sweeps exploit that with explicit
+//! `std::arch` kernels ([`runtime::simd`]): 4–8 parked rows compare
+//! against the node's threshold with one masked ordered-`<` and
+//! blend-select their lo/hi forward deltas branch-free (SSE2/AVX2 on
+//! x86-64, NEON on aarch64, chosen once at startup by runtime feature
+//! detection — no compile-time feature flags, one binary per
+//! architecture). Ordered compares are false on NaN in both the lane and
+//! scalar code, so missing values take the `lo` edge everywhere and
+//! results stay **bit-identical** to the scalar walk — the conformance
+//! suite pins every executable kernel × layout × tile budget. The
+//! portable scalar sweep remains as the fallback and kill switch:
+//! `FOREST_ADD_NO_SIMD=1`, `serve --no-simd`, or `ServeConfig::simd =
+//! false` (the active kernel is exported as the `forest_simd_kernel`
+//! gauge and the `simd_kernel` field of `GET /metrics`).
+//!
+//! Two freeze-time layout transforms feed those lanes
+//! ([`frozen::FreezeOpts`], `forest-add freeze --pack-features
+//! --quantize-f16`):
+//!
+//! - **Feature-column packing** reorders feature columns by descending
+//!   node-test frequency, so the gathers that feed the lanes hit the
+//!   same few cache lines. The permutation is a dedicated snapshot
+//!   section applied transparently on load; single-row walks and old
+//!   readers see original feature ids.
+//! - **f16 threshold quantisation** stores thresholds as IEEE-754
+//!   binary16, halving the hot plane to 4 bytes per node. Quantisation
+//!   *widens* (rounds ties away from zero) and re-writes the predicate
+//!   table to the decoded values, so every plane stays self-consistent;
+//!   freezing fails loudly if a threshold falls outside f16 range or two
+//!   thresholds of one feature would collide — accepted snapshots are
+//!   bit-identical in answers, never approximately right.
+//!
+//! Both transforms are opt-in: default freezes write byte-identical
+//! `fdd-v2` artifacts, and existing snapshots load unchanged.
+//!
 //! ## Snapshots: compile once, mmap everywhere
 //!
 //! Compilation is expensive; serving should not be. The frozen runtime

@@ -17,6 +17,7 @@ pub mod fault;
 pub mod mmap;
 pub mod packing;
 pub mod pool;
+pub mod simd;
 
 pub use packing::PackedForest;
 

@@ -1,0 +1,388 @@
+//! Runtime-dispatched SIMD kernels for the frozen batch sweep.
+//!
+//! The frozen sweeps ([`crate::frozen`]) route many parked rows through one
+//! decision node at a time: load the node's threshold, compare each row's
+//! feature value, and select the `lo`/`hi` forward-delta word. That inner
+//! step is branchless and data-parallel, so this module vectorises it —
+//! [`LANES`] rows per call — with `std::arch` intrinsics picked **once** by
+//! runtime CPU-feature detection:
+//!
+//! - **AVX2** (x86/x86_64): one 8-lane ordered `<` compare + byte blend.
+//! - **SSE2** (x86/x86_64): two 4-lane halves, and/andnot select (SSE2 has
+//!   no `blendv`).
+//! - **NEON** (aarch64): two 4-lane halves, `vclt` + `vbsl` select.
+//! - **Scalar**: the portable fallback, also the reference semantics.
+//!
+//! **Bit-identity is the contract.** Every kernel computes exactly
+//! `out[i] = if x[i] < thresh { hi } else { lo }` under IEEE-754 ordered
+//! `<`: NaN compares false and takes `lo`, ties and signed zeros behave
+//! identically in every lane width. The conformance suite pins every
+//! kernel against the scalar walk on every dataset.
+//!
+//! Selection order: `FOREST_ADD_NO_SIMD` (any value) forces scalar for the
+//! process; [`configure`] (driven by `ServeConfig::simd` / `serve
+//! --no-simd`) can force scalar at runtime; otherwise the best detected
+//! kernel wins. Explicit per-call selection for tests and benches goes
+//! through [`Kernel`] parameters on the frozen `*_kernel_into` entry
+//! points, sanitised by [`Kernel::supported`] so an unsupported request
+//! degrades to a safe kernel instead of faulting.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// Rows evaluated per kernel call. The AVX2 kernel fills all eight lanes;
+/// the 128-bit kernels split the block into two halves. Gather loops may
+/// pass short tails — lanes past the live count hold stale values whose
+/// outputs are ignored.
+pub const LANES: usize = 8;
+
+/// A batch-evaluation kernel. `Scalar` is always available; the SIMD
+/// variants exist on every build (so names/codes are portable) but only
+/// execute where [`Kernel::supported`] confirms the CPU feature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// 8-lane AVX2 compare + blend (x86/x86_64).
+    Avx2,
+    /// 2×4-lane SSE2 compare + and/andnot select (x86/x86_64).
+    Sse2,
+    /// 2×4-lane NEON compare + bit select (aarch64).
+    Neon,
+    /// Portable scalar reference path.
+    Scalar,
+}
+
+impl Kernel {
+    /// Stable lowercase name (metrics label, CLI, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Avx2 => "avx2",
+            Kernel::Sse2 => "sse2",
+            Kernel::Neon => "neon",
+            Kernel::Scalar => "scalar",
+        }
+    }
+
+    /// Stable numeric code (metrics storage).
+    pub fn code(self) -> u8 {
+        match self {
+            Kernel::Scalar => 0,
+            Kernel::Sse2 => 1,
+            Kernel::Avx2 => 2,
+            Kernel::Neon => 3,
+        }
+    }
+
+    /// Inverse of [`code`](Self::code); unknown codes read as scalar.
+    pub fn from_code(code: u8) -> Kernel {
+        match code {
+            1 => Kernel::Sse2,
+            2 => Kernel::Avx2,
+            3 => Kernel::Neon,
+            _ => Kernel::Scalar,
+        }
+    }
+
+    /// Parse a kernel name (`avx2 | sse2 | neon | scalar`).
+    pub fn parse(s: &str) -> Option<Kernel> {
+        match s {
+            "avx2" => Some(Kernel::Avx2),
+            "sse2" => Some(Kernel::Sse2),
+            "neon" => Some(Kernel::Neon),
+            "scalar" => Some(Kernel::Scalar),
+            _ => None,
+        }
+    }
+
+    /// This kernel where the CPU supports it, else the best safe
+    /// downgrade (AVX2 hosts also run the SSE2 kernel; anything the host
+    /// cannot execute degrades to scalar). Every dispatch site sanitises
+    /// through here, so a [`Kernel`] from config or tests can never fault.
+    pub fn supported(self) -> Kernel {
+        match (self, detected()) {
+            (Kernel::Scalar, _) => Kernel::Scalar,
+            (k, d) if k == d => k,
+            (Kernel::Sse2, Kernel::Avx2) => Kernel::Sse2,
+            _ => Kernel::Scalar,
+        }
+    }
+}
+
+/// One-time CPU probe: the widest kernel this host can execute.
+fn probe() -> Kernel {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Kernel::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return Kernel::Sse2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Kernel::Neon;
+        }
+    }
+    Kernel::Scalar
+}
+
+/// The detected hardware kernel (cached; ignores overrides).
+pub fn detected() -> Kernel {
+    static K: OnceLock<Kernel> = OnceLock::new();
+    *K.get_or_init(probe)
+}
+
+/// Every kernel this host can execute, widest first (always ends with
+/// `Scalar`). Conformance sweeps iterate this so each supported kernel is
+/// pinned bit-identical on the hardware actually running the tests.
+pub fn available() -> Vec<Kernel> {
+    let mut v = Vec::new();
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Kernel::Avx2);
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            v.push(Kernel::Sse2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            v.push(Kernel::Neon);
+        }
+    }
+    v.push(Kernel::Scalar);
+    v
+}
+
+/// Runtime force-scalar override (set from `ServeConfig::simd`).
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// `false` when `FOREST_ADD_NO_SIMD` is set (any value, read once) or
+/// [`configure`] disabled SIMD — mirrors `runtime::mmap::enabled`.
+pub fn enabled() -> bool {
+    static ENV_OK: OnceLock<bool> = OnceLock::new();
+    *ENV_OK.get_or_init(|| std::env::var_os("FOREST_ADD_NO_SIMD").is_none())
+        && !FORCE_SCALAR.load(Ordering::Relaxed)
+}
+
+/// Enable/disable the SIMD kernels process-wide (the env kill switch
+/// still wins); returns the kernel now in effect. Called by the server
+/// at startup from `ServeConfig::simd`.
+pub fn configure(simd: bool) -> Kernel {
+    FORCE_SCALAR.store(!simd, Ordering::Relaxed);
+    kernel()
+}
+
+/// The kernel ambient eval paths use right now: scalar when disabled,
+/// else the detected one.
+pub fn kernel() -> Kernel {
+    if enabled() {
+        detected()
+    } else {
+        Kernel::Scalar
+    }
+}
+
+/// Route up to [`LANES`] parked rows through one decision node:
+/// `out[i] = if x[i] < thresh { hi } else { lo }` for every lane. All
+/// kernels implement IEEE-754 ordered `<` (NaN selects `lo`), so the
+/// result is bit-identical to the scalar walk. `lo`/`hi` are opaque
+/// words — forward deltas or `TERM_BIT`-tagged terminal refs pass
+/// through untouched.
+///
+/// `kernel` must come from [`kernel`], [`available`] or
+/// [`Kernel::supported`]; dispatch sites sanitise once per batch.
+#[inline(always)]
+pub fn select_deltas(
+    kernel: Kernel,
+    thresh: f32,
+    lo: u32,
+    hi: u32,
+    x: &[f32; LANES],
+    out: &mut [u32; LANES],
+) {
+    match kernel {
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        // SAFETY: dispatch sites pass kernels sanitised by
+        // `Kernel::supported`, so avx2 is present when this arm runs.
+        Kernel::Avx2 => unsafe { select_avx2(thresh, lo, hi, x, out) },
+        #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+        // SAFETY: as above for sse2 (baseline on x86_64).
+        Kernel::Sse2 => unsafe { select_sse2(thresh, lo, hi, x, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above for neon (baseline on aarch64).
+        Kernel::Neon => unsafe { select_neon(thresh, lo, hi, x, out) },
+        _ => select_scalar(thresh, lo, hi, x, out),
+    }
+}
+
+/// The reference lane semantics every SIMD kernel must reproduce.
+fn select_scalar(thresh: f32, lo: u32, hi: u32, x: &[f32; LANES], out: &mut [u32; LANES]) {
+    for (o, &v) in out.iter_mut().zip(x.iter()) {
+        *o = if v < thresh { hi } else { lo };
+    }
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn select_avx2(thresh: f32, lo: u32, hi: u32, x: &[f32; LANES], out: &mut [u32; LANES]) {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+    let xv = _mm256_loadu_ps(x.as_ptr());
+    let tv = _mm256_set1_ps(thresh);
+    // ordered, quiet `<`: a NaN lane yields false, exactly like the
+    // scalar walk, so the blend keeps `lo` there
+    let mask = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(xv, tv));
+    let lov = _mm256_set1_epi32(lo as i32);
+    let hiv = _mm256_set1_epi32(hi as i32);
+    let sel = _mm256_blendv_epi8(lov, hiv, mask);
+    _mm256_storeu_si256(out.as_mut_ptr().cast(), sel);
+}
+
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn select_sse2(thresh: f32, lo: u32, hi: u32, x: &[f32; LANES], out: &mut [u32; LANES]) {
+    #[cfg(target_arch = "x86")]
+    use std::arch::x86::*;
+    #[cfg(target_arch = "x86_64")]
+    use std::arch::x86_64::*;
+    let tv = _mm_set1_ps(thresh);
+    let lov = _mm_set1_epi32(lo as i32);
+    let hiv = _mm_set1_epi32(hi as i32);
+    for half in 0..2 {
+        let xv = _mm_loadu_ps(x.as_ptr().add(half * 4));
+        // CMPLTPS is the ordered compare: NaN lanes come back false
+        let m = _mm_castps_si128(_mm_cmplt_ps(xv, tv));
+        // SSE2 has no blendv: (hi & m) | (lo & !m)
+        let sel = _mm_or_si128(_mm_and_si128(m, hiv), _mm_andnot_si128(m, lov));
+        _mm_storeu_si128(out.as_mut_ptr().add(half * 4).cast(), sel);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn select_neon(thresh: f32, lo: u32, hi: u32, x: &[f32; LANES], out: &mut [u32; LANES]) {
+    use std::arch::aarch64::*;
+    let tv = vdupq_n_f32(thresh);
+    let lov = vdupq_n_u32(lo);
+    let hiv = vdupq_n_u32(hi);
+    for half in 0..2 {
+        let xv = vld1q_f32(x.as_ptr().add(half * 4));
+        // vclt is the ordered compare: NaN lanes come back false
+        let m = vcltq_f32(xv, tv);
+        let sel = vbslq_u32(m, hiv, lov);
+        vst1q_u32(out.as_mut_ptr().add(half * 4), sel);
+    }
+}
+
+/// Software prefetch of the cache line at `p` into all cache levels — the
+/// sweeps hint the next tile's hot records and delta words while the
+/// current lane block computes. A no-op where the target has no prefetch
+/// instruction; never affects results.
+#[inline(always)]
+pub fn prefetch<T>(p: *const T) {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        #[cfg(target_arch = "x86")]
+        use std::arch::x86::{_mm_prefetch, _MM_HINT_T0};
+        #[cfg(target_arch = "x86_64")]
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        // SAFETY: prefetch is a pure hint; any address is permitted and
+        // no memory is dereferenced architecturally.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(p.cast()) };
+    }
+    #[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+    let _ = p;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_codes_and_parse_roundtrip() {
+        for k in [Kernel::Avx2, Kernel::Sse2, Kernel::Neon, Kernel::Scalar] {
+            assert_eq!(Kernel::parse(k.name()), Some(k));
+            assert_eq!(Kernel::from_code(k.code()), k);
+        }
+        assert_eq!(Kernel::parse("mmx"), None);
+        assert_eq!(Kernel::from_code(250), Kernel::Scalar);
+    }
+
+    #[test]
+    fn detection_is_stable_and_available_ends_scalar() {
+        assert_eq!(detected(), detected());
+        let avail = available();
+        assert_eq!(*avail.last().unwrap(), Kernel::Scalar);
+        assert!(avail.contains(&detected()));
+        // everything reported available must sanitise to itself
+        for &k in &avail {
+            assert_eq!(k.supported(), k);
+        }
+    }
+
+    #[test]
+    fn supported_downgrades_never_fault() {
+        // whatever the host, an arbitrary request lands on something the
+        // host runs (scalar at worst) — and executing it must not trap
+        for k in [Kernel::Avx2, Kernel::Sse2, Kernel::Neon, Kernel::Scalar] {
+            let safe = k.supported();
+            assert!(available().contains(&safe));
+            let x = [0.5f32; LANES];
+            let mut out = [0u32; LANES];
+            select_deltas(safe, 1.0, 7, 9, &x, &mut out);
+            assert_eq!(out, [9u32; LANES]);
+        }
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_semantics() {
+        // adversarial lane values: NaN (ordered < is false -> lo), ±inf,
+        // exact tie with the threshold (strict < -> lo), ±0, subnormals
+        let cases: [(f32, [f32; LANES]); 3] = [
+            (
+                0.5,
+                [0.4999, 0.5, 0.5001, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1e-40],
+            ),
+            (0.0, [-0.0, 0.0, -1e-40, 1e-40, f32::NAN, -1.0, 1.0, 0.0]),
+            (f32::MAX, [f32::MAX, f32::MIN, 0.0, f32::NAN, 1.0, -1.0, 65504.0, -65504.0]),
+        ];
+        for k in available() {
+            for (thresh, x) in &cases {
+                let mut got = [0u32; LANES];
+                let mut want = [0u32; LANES];
+                select_deltas(k, *thresh, 0xdead_0001, 0x8000_0002, x, &mut got);
+                select_scalar(*thresh, 0xdead_0001, 0x8000_0002, x, &mut want);
+                assert_eq!(got, want, "kernel {} vs scalar at thresh {thresh}", k.name());
+            }
+        }
+    }
+
+    #[test]
+    fn configure_forces_scalar_and_back() {
+        // bit-identity makes a transient scalar window harmless to any
+        // concurrently running eval test
+        let before = kernel();
+        assert_eq!(configure(false), Kernel::Scalar);
+        assert_eq!(kernel(), Kernel::Scalar);
+        let restored = configure(true);
+        assert_eq!(kernel(), restored);
+        // unless the env kill switch pinned the process to scalar, the
+        // restored kernel is whatever detection picked originally
+        if std::env::var_os("FOREST_ADD_NO_SIMD").is_none() {
+            assert_eq!(restored, before);
+        }
+    }
+
+    #[test]
+    fn prefetch_accepts_any_pointer() {
+        let v = [1u32, 2, 3];
+        prefetch(v.as_ptr());
+        prefetch(std::ptr::null::<u64>());
+    }
+}

@@ -117,6 +117,12 @@ pub struct ServeConfig {
     /// planes exceed the budget are swept in topological tiles of this
     /// size so parked rows stay cache-resident.
     pub tile_bytes: usize,
+    /// Use the explicit-SIMD batch kernels where the host supports them
+    /// (`false` / `serve --no-simd` forces the scalar walk; the
+    /// `FOREST_ADD_NO_SIMD` env var wins over both). Every kernel is
+    /// bit-identical to the scalar walk — this is a perf/debug knob, not
+    /// an accuracy trade.
+    pub simd: bool,
     /// Artifacts directory (XLA path).
     pub artifacts_dir: String,
     /// Artifact variant to load.
@@ -175,6 +181,7 @@ impl Default for ServeConfig {
             dispatch_cap: 0,
             eval_threads: 0,
             tile_bytes: 0,
+            simd: true,
             artifacts_dir: "artifacts".into(),
             variant: "base".into(),
             enable_xla: true,
@@ -245,6 +252,9 @@ impl ServeConfig {
         }
         if let Some(n) = v.get_i64("tile_bytes") {
             cfg.tile_bytes = n as usize;
+        }
+        if let Some(b) = v.get("simd").and_then(Json::as_bool) {
+            cfg.simd = b;
         }
         if let Some(s) = v.get_str("artifacts_dir") {
             cfg.artifacts_dir = s.to_string();
@@ -396,6 +406,7 @@ impl ServeConfig {
             ("dispatch_cap", json::num(self.dispatch_cap as f64)),
             ("eval_threads", json::num(self.eval_threads as f64)),
             ("tile_bytes", json::num(self.tile_bytes as f64)),
+            ("simd", Json::Bool(self.simd)),
             ("artifacts_dir", json::s(self.artifacts_dir.clone())),
             ("variant", json::s(self.variant.clone())),
             ("enable_xla", Json::Bool(self.enable_xla)),
@@ -431,6 +442,7 @@ mod tests {
             bundle: "fleet.fab".into(),
             eval_threads: 6,
             tile_bytes: 2 << 20,
+            simd: false,
             io_mode: IoMode::Sync,
             read_timeout_ms: 750,
             batch_queue_cap: 32,
@@ -452,6 +464,7 @@ mod tests {
         assert!(back.snapshot.is_empty());
         assert_eq!(back.eval_threads, 6);
         assert_eq!(back.tile_bytes, 2 << 20);
+        assert!(!back.simd);
         assert_eq!(back.io_mode, IoMode::Sync);
         assert_eq!(back.read_timeout_ms, 750);
         assert_eq!(back.batch_queue_cap, 32);
@@ -505,6 +518,7 @@ mod tests {
         assert_eq!(cfg.trees, 9);
         assert_eq!(cfg.dataset, "iris");
         assert_eq!(cfg.http_workers, 4);
+        assert!(cfg.simd, "SIMD kernels default on");
     }
 
     #[test]

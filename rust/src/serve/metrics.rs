@@ -187,6 +187,11 @@ pub struct ServerMetrics {
     pub batch_queue_depth: AtomicU64,
     /// Front-end marker: 1 = evented, 0 = sync (set once at startup).
     io_evented: AtomicU64,
+    /// Active frozen-sweep SIMD kernel, stored as its
+    /// [`Kernel::code`](crate::runtime::simd::Kernel::code) (0 = scalar;
+    /// set once at startup after `ServeConfig::simd` and
+    /// `FOREST_ADD_NO_SIMD` are resolved).
+    simd_kernel: AtomicU64,
 }
 
 impl Default for ServerMetrics {
@@ -219,6 +224,7 @@ impl Default for ServerMetrics {
             dispatch_queue_depth: AtomicU64::new(0),
             batch_queue_depth: AtomicU64::new(0),
             io_evented: AtomicU64::new(0),
+            simd_kernel: AtomicU64::new(0),
         }
     }
 }
@@ -318,6 +324,17 @@ impl ServerMetrics {
         self.io_evented.store(u64::from(evented), Ordering::Relaxed);
     }
 
+    /// Record the frozen-sweep SIMD kernel this process resolved at
+    /// startup (shown in `/metrics` as `simd_kernel`).
+    pub fn set_simd_kernel(&self, kernel: crate::runtime::simd::Kernel) {
+        self.simd_kernel
+            .store(u64::from(kernel.code()), Ordering::Relaxed);
+    }
+
+    fn simd_kernel(&self) -> crate::runtime::simd::Kernel {
+        crate::runtime::simd::Kernel::from_code(self.simd_kernel.load(Ordering::Relaxed) as u8)
+    }
+
     /// Account bytes read from a client socket.
     pub fn add_bytes_read(&self, n: u64) {
         self.bytes_read_total.fetch_add(n, Ordering::Relaxed);
@@ -367,6 +384,7 @@ impl ServerMetrics {
                     "sync"
                 }),
             ),
+            ("simd_kernel", json::s(self.simd_kernel().name())),
             ("requests", json::num(requests as f64)),
             (
                 "errors",
@@ -501,6 +519,16 @@ impl ServerMetrics {
             "forest_io_evented",
             "1 when the evented front-end serves this process",
             self.io_evented.load(Ordering::Relaxed) as f64,
+        );
+        w.header(
+            "forest_simd_kernel",
+            "gauge",
+            "active frozen-sweep SIMD kernel (1 on the kernel label)",
+        );
+        w.sample(
+            "forest_simd_kernel",
+            &[("kernel", self.simd_kernel().name())],
+            1.0,
         );
         w.counter(
             "forest_requests_total",
@@ -908,6 +936,25 @@ mod tests {
         let v = h.to_json_values();
         assert!(v.get_i64("p95").is_some());
         assert!(v.get("p95_us").is_none());
+    }
+
+    #[test]
+    fn simd_kernel_is_exposed_in_both_formats() {
+        let m = ServerMetrics::default();
+        assert_eq!(
+            m.to_json().get_str("simd_kernel"),
+            Some("scalar"),
+            "scalar until set"
+        );
+        let k = crate::runtime::simd::detected();
+        m.set_simd_kernel(k);
+        assert_eq!(m.to_json().get_str("simd_kernel"), Some(k.name()));
+        let prom = m.to_prometheus();
+        assert!(prom.contains("# TYPE forest_simd_kernel gauge"), "{prom}");
+        assert!(
+            prom.contains(&format!("forest_simd_kernel{{kernel=\"{}\"}}", k.name())),
+            "{prom}"
+        );
     }
 
     #[test]

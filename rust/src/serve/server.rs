@@ -82,8 +82,13 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
     // (spawn-once; the first effective configuration wins process-wide).
     let eval_threads = crate::runtime::pool::configure(cfg.eval_threads);
     let tile_bytes = crate::frozen::configure_tile_bytes(cfg.tile_bytes);
+    // Pin the frozen-sweep SIMD kernel before any batch traffic exists.
+    // `FOREST_ADD_NO_SIMD` wins over the config knob inside configure.
+    let simd_kernel = crate::runtime::simd::configure(cfg.simd);
     crate::log_info!(
-        "serve: evaluation parallelism {eval_threads}, frozen tile budget {tile_bytes} bytes"
+        "serve: evaluation parallelism {eval_threads}, frozen tile budget {tile_bytes} bytes, \
+         simd kernel {}",
+        simd_kernel.name()
     );
     let engine = if !cfg.bundle.is_empty() {
         let engine = Engine::new();
@@ -134,6 +139,7 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
         .eval_threads
         .store(eval_threads as u64, std::sync::atomic::Ordering::Relaxed);
     metrics.set_io_mode(evented);
+    metrics.set_simd_kernel(simd_kernel);
     let router = Arc::new(Router::new(
         engine.registry().clone(),
         metrics.clone(),

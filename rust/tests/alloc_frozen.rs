@@ -3,9 +3,10 @@
 //!
 //! 1. **Warm sweeps allocate nothing.** Once the [`BatchScratch`] and the
 //!    output vector are warm, `classify_batch_into` (round-based and
-//!    cache-tiled, with and without step metering) must not touch the
-//!    allocator — the steady-state serving loop runs entirely on reused
-//!    buffers. The tracing hot path (`ReqTrace` record/commit into the
+//!    cache-tiled, with and without step metering, scalar and
+//!    kernel-pinned SIMD, plain and quantised/column-packed layouts)
+//!    must not touch the allocator — the steady-state serving loop runs
+//!    entirely on reused buffers. The tracing hot path (`ReqTrace` record/commit into the
 //!    debug ring, per-shard timing atomics) runs inside the same counted
 //!    window: with the inline breakdown off, observability costs zero
 //!    allocations per request. The fault-tolerance plumbing rides in the
@@ -98,6 +99,19 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
     frozen.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
     frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
     let want_steps = steps.clone();
+    // The quantised + column-packed freeze shares the scratch; warming it
+    // sizes `scratch.packed` (the copy-permute buffer) and pins the
+    // SIMD-kernel OnceLocks (env read + CPU probe allocate on first use).
+    let opt = dd
+        .freeze_with(forest_add::frozen::FreezeOpts {
+            pack_features: true,
+            quantize_f16: true,
+        })
+        .unwrap();
+    let kernel = forest_add::runtime::simd::kernel();
+    frozen.classify_batch_kernel_into(rows, &mut scratch, &mut out, 0, kernel);
+    opt.classify_batch_into(rows, &mut scratch, &mut out);
+    opt.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
     // Warm the trace-id generator (seeds a OnceLock on first use).
     let _ = forest_add::obs::trace::next_id();
     // Arm an injection point at rate 0: the armed-but-silent draw path is
@@ -137,6 +151,15 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
         frozen.classify_batch_steps_into_tiled(rows, &mut scratch, &mut out, &mut steps, 1);
         assert_eq!(out, want);
         assert_eq!(steps, want_steps, "warm metered sweeps must stay bit-identical");
+        // kernel-pinned sweep (whatever kernel this host detects)
+        frozen.classify_batch_kernel_into(rows, &mut scratch, &mut out, 0, kernel);
+        assert_eq!(out, want, "warm SIMD sweeps must stay bit-identical");
+        // quantised + column-packed layout: the per-batch copy-permute
+        // into the warm scratch.packed buffer must not allocate either
+        opt.classify_batch_into(rows, &mut scratch, &mut out);
+        assert_eq!(out, want, "warm quantised sweeps must stay bit-identical");
+        opt.classify_batch_into_tiled(rows, &mut scratch, &mut out, 1);
+        assert_eq!(out, want, "warm quantised tiled sweeps must stay bit-identical");
         trace.record(forest_add::obs::trace::Stage::Eval);
         forest_add::obs::trace::record_shard(0, 7);
         forest_add::obs::trace::note_shard_run(1);
@@ -151,7 +174,7 @@ fn warm_sweeps_and_snapshot_boot_do_not_allocate() {
         after - before,
         0,
         "the warm frozen sweeps plus the tracing hot path must not allocate \
-         ({} allocations in 30 batches)",
+         ({} allocations in 60 batches)",
         after - before
     );
 

@@ -547,6 +547,111 @@ fn breaker_fallback_serves_bit_identical_answers() {
     }
 }
 
+/// Explicit-SIMD kernels, freeze-time column packing and f16 threshold
+/// quantisation are perf features, never semantic ones: every kernel
+/// this host can execute × every freeze layout × every tile budget must
+/// be bit-identical — class *and* §6 step count, single-threaded
+/// kernel-pinned sweeps *and* the sharded ambient entry points — to the
+/// single-row walk, on every built-in dataset. Batches carry injected
+/// NaN cells: missing-value traffic must take the `lo` edge in both the
+/// scalar compare and the masked lane compare.
+#[test]
+fn simd_kernels_and_freeze_layouts_conform_on_every_dataset() {
+    use forest_add::batch::RowMatrix;
+    use forest_add::frozen::FreezeOpts;
+    use forest_add::runtime::simd;
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        let forest = ForestLearner::default().trees(8).seed(17).fit(&data);
+        let dd = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+
+        // 1024 rows (past the sharding crossover) with a NaN injected on
+        // every 17th row, walking across the feature columns.
+        let nf = data.n_features();
+        let tiled = forest_add::bench_support::tile_rows(&data, 1024, 7);
+        let mut cells = tiled.as_matrix().data().to_vec();
+        for r in (0..1024usize).step_by(17) {
+            cells[r * nf + r % nf] = f32::NAN;
+        }
+        let rows = RowMatrix::new(&cells, nf).unwrap();
+
+        let plain = dd.freeze();
+        let mut variants: Vec<(&str, FrozenDD)> = vec![("plain", plain.clone())];
+        for (vname, opts) in [
+            ("packed", FreezeOpts { pack_features: true, quantize_f16: false }),
+            ("f16", FreezeOpts { pack_features: false, quantize_f16: true }),
+            ("packed+f16", FreezeOpts { pack_features: true, quantize_f16: true }),
+        ] {
+            // Every built-in dataset has coarse-granularity thresholds;
+            // a refusal here means the f16 widening guard regressed.
+            let f = dd
+                .freeze_with(opts)
+                .unwrap_or_else(|e| panic!("{name}/{vname}: optimised freeze refused: {e}"));
+            variants.push((vname, f));
+        }
+
+        // truth: the scalar single-row walk on the plain layout
+        let reference: Vec<(u32, usize)> =
+            rows.iter().map(|x| plain.classify_with_steps(x)).collect();
+
+        let mut scratch = forest_add::frozen::BatchScratch::new();
+        let (mut out, mut steps) = (Vec::new(), Vec::new());
+        for (vname, frozen) in &variants {
+            let tag = format!("{name}/{vname}");
+            for (i, x) in rows.iter().enumerate() {
+                assert_eq!(
+                    frozen.classify_with_steps(x),
+                    reference[i],
+                    "{tag} row {i}: single-row walk"
+                );
+            }
+            // sharded ambient entry points (multi-threaded on multi-core
+            // hosts, whatever kernel the host detects)
+            let sharded = frozen.classify_batch(rows);
+            let (sharded_classes, sharded_steps) = frozen.classify_batch_steps(rows);
+            for (i, want) in reference.iter().enumerate() {
+                assert_eq!(sharded[i], want.0, "{tag} row {i}: sharded batch");
+                assert_eq!(sharded_classes[i], want.0, "{tag} row {i}: sharded steps batch");
+                assert_eq!(
+                    sharded_steps[i] as usize, want.1,
+                    "{tag} row {i}: sharded batch steps"
+                );
+            }
+            // every executable kernel × every tile budget, kernel-pinned
+            // and single-threaded (1 forces minimum tiles, 0 = auto)
+            for kernel in simd::available() {
+                for tile_budget in [1usize, 4096, 0] {
+                    let ktag = format!("{tag}/{}/budget {tile_budget}", kernel.name());
+                    frozen.classify_batch_kernel_into(
+                        rows,
+                        &mut scratch,
+                        &mut out,
+                        tile_budget,
+                        kernel,
+                    );
+                    for (i, want) in reference.iter().enumerate() {
+                        assert_eq!(out[i], want.0, "{ktag} row {i}: classes");
+                    }
+                    frozen.classify_batch_steps_kernel_into(
+                        rows,
+                        &mut scratch,
+                        &mut out,
+                        &mut steps,
+                        tile_budget,
+                        kernel,
+                    );
+                    for (i, want) in reference.iter().enumerate() {
+                        assert_eq!(out[i], want.0, "{ktag} row {i}: steps-path classes");
+                        assert_eq!(steps[i] as usize, want.1, "{ktag} row {i}: steps");
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Sharded-parallel batch evaluation must be bit-identical to the
 /// single-threaded per-row path for every backend × abstraction ×
 /// dataset. Batches are tiled far past both the frozen sweep's
