@@ -141,10 +141,10 @@ fn main() {
             let buf = forest_add::bench_support::tile_rows(&data, batch, 13);
             let rows = buf.as_matrix();
             let ns = measure_ns(window, || {
-                let (out, _, _) = router
-                    .classify_batch(rows, Some(backend), None, false)
+                let out = router
+                    .classify_batch(rows, Some(backend), None, false, false)
                     .unwrap();
-                std::hint::black_box(out.len());
+                std::hint::black_box(out.classes.len());
             });
             t.row(vec![
                 backend.name().to_string(),

@@ -90,6 +90,7 @@ mod tests {
                 kind: FeatureKind::Numeric,
             }],
             classes: vec!["a".into(), "b".into()],
+            task: crate::data::Task::Classification,
         };
         let mut m: Manager<ClassLabel> = Manager::new(pool);
         let a = m.terminal(0);
@@ -127,6 +128,7 @@ mod tests {
                 kind: FeatureKind::Numeric,
             }],
             classes: vec![],
+            task: crate::data::Task::Classification,
         };
         let mut m: Manager<ClassLabel> = Manager::new(pool);
         let a = m.terminal(0);

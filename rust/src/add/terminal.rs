@@ -122,7 +122,7 @@ pub type ClassLabel = u16;
 
 /// Tie-to-lowest argmax — the single definition of the crate's vote
 /// semantics (`frozen` reuses it so the two layouts can never drift).
-pub(crate) fn argmax(counts: &[u32]) -> u16 {
+pub fn argmax(counts: &[u32]) -> u16 {
     let mut best = 0usize;
     for (i, &c) in counts.iter().enumerate() {
         if c > counts[best] {
@@ -130,6 +130,58 @@ pub(crate) fn argmax(counts: &[u32]) -> u16 {
         }
     }
     best as u16
+}
+
+/// Class-weighted argmax: `argmax_c counts_c · weights_c`, ties to the
+/// lowest class index — the imbalanced-data decision rule. Scores are
+/// computed in `f64` so `count × weight` is exact for any realistic
+/// forest size; with all-ones weights this is exactly [`argmax`].
+/// `weights` must have one entry per class.
+pub fn weighted_argmax(counts: &[u32], weights: &[f32]) -> u16 {
+    debug_assert_eq!(counts.len(), weights.len());
+    let mut best = 0usize;
+    let mut best_score = f64::NEG_INFINITY;
+    for (i, (&c, &w)) in counts.iter().zip(weights).enumerate() {
+        let score = c as f64 * w as f64;
+        if score > best_score {
+            best = i;
+            best_score = score;
+        }
+    }
+    best as u16
+}
+
+/// Per-class probability estimates `counts_c / Σ counts` — the fraction
+/// of trees voting for each class, i.e. the standard random-forest
+/// probability estimate (Louppe, *Understanding Random Forests* §4.2).
+/// The empty vote vector yields all zeros.
+pub fn probabilities(counts: &[u32]) -> Vec<f64> {
+    let total: u64 = counts.iter().map(|&c| c as u64).sum();
+    if total == 0 {
+        return vec![0.0; counts.len()];
+    }
+    counts.iter().map(|&c| c as f64 / total as f64).collect()
+}
+
+/// Expected value of a vote vector under a per-class value table:
+/// `Σ_c counts_c · values_c / Σ_c counts_c` — the regression-forest
+/// prediction (each tree votes for a value bin; the ensemble answers
+/// the mean). Accumulated in `f64` in ascending class order, so every
+/// backend that produces the same vote vector produces the *same bits*.
+/// The empty vote vector yields `0.0`.
+pub fn expected_value(counts: &[u32], values: &[f32]) -> f64 {
+    debug_assert_eq!(counts.len(), values.len());
+    let mut sum = 0.0f64;
+    let mut total = 0u64;
+    for (&c, &v) in counts.iter().zip(values) {
+        sum += c as f64 * v as f64;
+        total += c as u64;
+    }
+    if total == 0 {
+        0.0
+    } else {
+        sum / total as f64
+    }
 }
 
 #[cfg(test)]
@@ -190,5 +242,37 @@ mod tests {
     fn unit_and_singleton_correspond() {
         assert_eq!(ClassWord::singleton(2).to_vector(4), ClassVector::unit(2, 4));
         assert_eq!(ClassVector::unit(2, 4).total(), 1);
+    }
+
+    #[test]
+    fn weighted_argmax_reweights_and_ties_low() {
+        // unit weights reduce to plain argmax, ties included
+        assert_eq!(weighted_argmax(&[3, 3, 1], &[1.0, 1.0, 1.0]), 0);
+        assert_eq!(weighted_argmax(&[1, 5, 2], &[1.0, 1.0, 1.0]), 1);
+        // upweighting the rare class flips the decision
+        assert_eq!(weighted_argmax(&[8, 2, 0], &[1.0, 5.0, 1.0]), 1);
+        // weighted ties still break to the lowest index
+        assert_eq!(weighted_argmax(&[2, 1, 0], &[1.0, 2.0, 1.0]), 0);
+        // all-zero counts: class 0
+        assert_eq!(weighted_argmax(&[0, 0], &[9.0, 9.0]), 0);
+    }
+
+    #[test]
+    fn probabilities_normalise() {
+        assert_eq!(probabilities(&[1, 3]), vec![0.25, 0.75]);
+        assert_eq!(probabilities(&[0, 0, 0]), vec![0.0, 0.0, 0.0]);
+        let p = probabilities(&[7, 11, 2]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_value_is_the_count_weighted_mean() {
+        // 3 votes at 1.0, 1 vote at 5.0 → (3 + 5) / 4 = 2.0
+        assert_eq!(expected_value(&[3, 1], &[1.0, 5.0]), 2.0);
+        assert_eq!(expected_value(&[0, 0], &[1.0, 5.0]), 0.0);
+        // deterministic: same counts, same bits
+        let a = expected_value(&[2, 5, 9], &[0.1, 0.2, 0.3]);
+        let b = expected_value(&[2, 5, 9], &[0.1, 0.2, 0.3]);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 }

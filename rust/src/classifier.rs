@@ -158,6 +158,46 @@ pub trait Classifier: Send + Sync {
         Ok((classes, Some(steps)))
     }
 
+    /// Per-class vote counts for one row — the full terminal payload
+    /// before any decision rule (`counts[c]` = trees voting class `c`,
+    /// length [`ClassifierInfo::n_classes`]). Probabilities, weighted
+    /// decisions, and regression means are all pure post-maps over this
+    /// vector ([`crate::add::terminal`]), so one method funds every
+    /// decision surface. The default refuses: backends whose terminals
+    /// went through the majority abstraction have already discarded the
+    /// distribution and cannot reconstruct it.
+    fn votes(&self, _x: &[f32]) -> Result<Vec<u32>> {
+        Err(Error::invalid(format!(
+            "backend '{}' does not expose vote distributions \
+             (majority-abstracted terminals discard them)",
+            self.info().label
+        )))
+    }
+
+    /// Per-class vote counts for a batch, flattened row-major with
+    /// stride [`ClassifierInfo::n_classes`] (row `r`'s vector is
+    /// `out[r*k..(r+1)*k]`). The default loops [`Classifier::votes`];
+    /// backends with a native batch sweep override it to keep their
+    /// tiling/SIMD path.
+    fn votes_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
+        let k = self.info().n_classes;
+        let mut out = Vec::with_capacity(rows.n_rows() * k);
+        for r in rows.iter() {
+            out.extend_from_slice(&self.votes(r)?);
+        }
+        Ok(out)
+    }
+
+    /// The per-class regression value table this model was trained with
+    /// (`None` for classification models). When present, the model's
+    /// regression prediction is
+    /// [`expected_value`](crate::add::terminal::expected_value) of
+    /// [`Classifier::votes`] under this table — a pure post-map, so the
+    /// serving layer applies it uniformly across backends.
+    fn task_values(&self) -> Option<Vec<f32>> {
+        None
+    }
+
     /// Concrete-type escape hatch for tooling that needs more than the
     /// classification contract (e.g. exporting a registered frozen model
     /// as a snapshot file). The default opts out; backends that want to be
@@ -290,6 +330,49 @@ mod tests {
         fn classify_with_steps(&self, _x: &[f32]) -> Result<(u32, Option<usize>)> {
             Ok((0, None))
         }
+    }
+
+    #[test]
+    fn votes_default_refuses_and_batch_derives_from_single() {
+        // a backend without vote support refuses, singly and batched
+        let c = Constant {
+            class: 1,
+            features: 2,
+        };
+        assert!(c.votes(&[0.0, 0.0]).is_err());
+        let cells = [0.0f32, 0.0, 1.0, 1.0];
+        assert!(c.votes_batch(RowMatrix::new(&cells, 2).unwrap()).is_err());
+
+        /// A two-class backend with a fixed vote vector.
+        struct Voting;
+        impl Classifier for Voting {
+            fn info(&self) -> ClassifierInfo {
+                ClassifierInfo {
+                    backend: BackendKind::Forest,
+                    label: "voting".into(),
+                    n_features: 2,
+                    n_classes: 2,
+                    size_nodes: 1,
+                    cost: CostModel {
+                        max_steps: Some(0),
+                        aggregation_reads: 2,
+                        preferred_batch: 1,
+                    },
+                }
+            }
+            fn classify_with_steps(&self, _x: &[f32]) -> Result<(u32, Option<usize>)> {
+                Ok((1, Some(0)))
+            }
+            fn votes(&self, _x: &[f32]) -> Result<Vec<u32>> {
+                Ok(vec![2, 5])
+            }
+        }
+        // the default batch flattens row vectors at stride n_classes
+        let flat = Voting
+            .votes_batch(RowMatrix::new(&cells, 2).unwrap())
+            .unwrap();
+        assert_eq!(flat, vec![2, 5, 2, 5]);
+        assert!(Voting.votes_batch(RowMatrix::empty()).unwrap().is_empty());
     }
 
     #[test]

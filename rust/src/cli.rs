@@ -123,12 +123,39 @@ fn train_spec() -> ArgSpec {
         .opt("trees", "100", "number of trees")
         .opt("seed", "42", "training seed")
         .opt("max-depth", "0", "depth cap (0 = unlimited)")
+        .opt(
+            "task",
+            "auto",
+            "auto | classification | regression (assert the dataset's task)",
+        )
         .opt("out", "model.json", "output model path")
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
     let a = train_spec().parse(args)?;
     let ds = crate::data::resolve(a.str("dataset"))?;
+    // The dataset schema decides the task (a regression dataset carries a
+    // per-bin value table); --task only asserts the expectation so a
+    // pipeline script fails loudly on the wrong dataset spec.
+    let is_reg = ds.schema.task.is_regression();
+    match a.str("task") {
+        "auto" => {}
+        "classification" if !is_reg => {}
+        "regression" if is_reg => {}
+        "classification" | "regression" => {
+            return Err(Error::invalid(format!(
+                "--task {} but dataset '{}' is a {} dataset (try `forest-add datasets`)",
+                a.str("task"),
+                ds.name,
+                if is_reg { "regression" } else { "classification" }
+            )));
+        }
+        other => {
+            return Err(Error::invalid(format!(
+                "unknown task '{other}' (auto|classification|regression)"
+            )));
+        }
+    }
     let forest = ForestLearner::default()
         .trees(a.usize("trees")?)
         .seed(a.u64("seed")?)
@@ -143,6 +170,15 @@ fn cmd_train(args: &[String]) -> Result<()> {
         forest.n_nodes(),
         classifier::accuracy(&forest, &ds)?
     );
+    if let Some(values) = ds.schema.values() {
+        println!(
+            "task: regression over {} target bins (values {:.3}..{:.3}); compile with \
+             `--abstraction vector` to keep vote vectors for value prediction",
+            values.len(),
+            values.iter().cloned().fold(f32::INFINITY, f32::min),
+            values.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        );
+    }
     Ok(())
 }
 
@@ -527,6 +563,20 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
             "f32"
         }
     );
+    // Payload semantics: what a terminal's vote vector is folded into.
+    // The value table is authoritative in the loaded schema (section 12
+    // bytes were validated on load), so report it from the classifier.
+    if s.regression {
+        let values = dd.task_values().unwrap_or_default();
+        println!(
+            "task: regression — {} target bins, values {:.3}..{:.3} (vote-weighted mean; section `values`)",
+            values.len(),
+            values.iter().cloned().fold(f32::INFINITY, f32::min),
+            values.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+        );
+    } else {
+        println!("task: classification — argmax over terminal vote vectors");
+    }
     println!(
         "feature columns: {}",
         if s.packed_features {
@@ -843,6 +893,11 @@ fn serve_spec() -> ArgSpec {
         )
         .opt("eval-threads", "", "evaluation parallelism (0 = all cores)")
         .opt("tile-bytes", "", "frozen sweep LLC tile budget in bytes (0 = auto)")
+        .opt(
+            "class-weights",
+            "",
+            "comma-separated per-class decision weights (weighted argmax)",
+        )
         .switch("no-simd", "force the scalar frozen sweep (FOREST_ADD_NO_SIMD=1 also wins)")
         .opt(
             "conn-max-inflight",
@@ -921,6 +976,17 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if !a.str("tile-bytes").is_empty() {
         cfg.tile_bytes = a.usize("tile-bytes")?;
     }
+    if !a.str("class-weights").is_empty() {
+        cfg.class_weights = a
+            .str("class-weights")
+            .split(',')
+            .map(|w| {
+                w.trim()
+                    .parse::<f32>()
+                    .map_err(|_| Error::invalid(format!("bad class weight '{w}'")))
+            })
+            .collect::<Result<_>>()?;
+    }
     if a.flag("no-simd") {
         cfg.simd = false;
     }
@@ -960,6 +1026,7 @@ fn classify_spec() -> ArgSpec {
         .req("features", "comma-separated feature values")
         .opt("backend", "", "forest | dd | frozen | xla")
         .opt("model", "", "named model (server default otherwise)")
+        .switch("probs", "request the per-class vote distribution too")
 }
 
 fn cmd_classify(args: &[String]) -> Result<()> {
@@ -980,6 +1047,9 @@ fn cmd_classify(args: &[String]) -> Result<()> {
     }
     if !a.str("model").is_empty() {
         fields.push(("model", json::s(a.str("model"))));
+    }
+    if a.flag("probs") {
+        fields.push(("probs", Json::Bool(true)));
     }
     let body = json::obj(fields);
     let (status, resp) = http_request(a.str("addr"), "POST", "/classify", Some(&body))?;

@@ -192,6 +192,28 @@ impl CompiledDD {
         }
     }
 
+    /// Per-class vote counts for one row — the terminal payload before
+    /// any decision rule. Word diagrams recover it by counting the class
+    /// word (§4.1's `W → V` homomorphism), vector diagrams carry it
+    /// directly; the majority abstraction (§4.2) has already collapsed
+    /// the distribution to one label, so it refuses rather than guess.
+    pub fn votes(&self, x: &[f32]) -> Result<Vec<u32>> {
+        match &self.model {
+            Model::Word { mgr, root } => {
+                let (w, _) = mgr.eval(*root, x);
+                Ok(w.to_vector(self.schema.n_classes()).0)
+            }
+            Model::Vector { mgr, root } => {
+                let (v, _) = mgr.eval(*root, x);
+                Ok(v.0.clone())
+            }
+            Model::Majority { .. } => Err(Error::invalid(
+                "majority-abstracted diagram has discarded vote distributions \
+                 (compile with a word or vector abstraction to keep them)",
+            )),
+        }
+    }
+
     /// Diagram size (Fig. 7 / Table 2 measure).
     pub fn size(&self) -> SizeStats {
         match &self.model {
@@ -335,6 +357,14 @@ impl Classifier for CompiledDD {
     fn classify_with_steps(&self, x: &[f32]) -> Result<(u32, Option<usize>)> {
         let (class, steps) = CompiledDD::classify_with_steps(self, x);
         Ok((class, Some(steps)))
+    }
+
+    fn votes(&self, x: &[f32]) -> Result<Vec<u32>> {
+        CompiledDD::votes(self, x)
+    }
+
+    fn task_values(&self) -> Option<Vec<f32>> {
+        self.schema.values().map(<[f32]>::to_vec)
     }
 }
 
@@ -707,6 +737,34 @@ mod tests {
         } else {
             panic!("expected vector model");
         }
+    }
+
+    #[test]
+    fn votes_surface_matches_forest_where_retained() {
+        let (ds, forest) = iris_forest(11);
+        for abstraction in [Abstraction::Word, Abstraction::Vector] {
+            let dd = ForestCompiler::new(opts(abstraction, true))
+                .compile(&forest)
+                .unwrap();
+            for i in (0..ds.n_rows()).step_by(19) {
+                assert_eq!(
+                    dd.votes(ds.row(i)).unwrap(),
+                    forest.votes(ds.row(i)),
+                    "{abstraction:?} row {i}"
+                );
+            }
+        }
+        // the majority abstraction has discarded the distribution
+        let mv = ForestCompiler::new(opts(Abstraction::Majority, true))
+            .compile(&forest)
+            .unwrap();
+        assert!(mv.votes(ds.row(0)).is_err());
+        // and the trait surface agrees with the inherent one
+        let dd = ForestCompiler::new(opts(Abstraction::Vector, true))
+            .compile(&forest)
+            .unwrap();
+        let c: &dyn Classifier = &dd;
+        assert_eq!(c.votes(ds.row(5)).unwrap(), forest.votes(ds.row(5)));
     }
 
     #[test]

@@ -247,7 +247,7 @@ fn cone_from_json<T: Terminal>(
 }
 
 fn schema_json(s: &Schema) -> Json {
-    json::obj(vec![
+    let mut fields = vec![
         (
             "classes",
             Json::Arr(s.classes.iter().map(|c| json::s(c.clone())).collect()),
@@ -269,7 +269,16 @@ fn schema_json(s: &Schema) -> Json {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // Regression forests carry the per-bin value table; classification
+    // documents omit the field, keeping existing artifacts unchanged.
+    if let Some(values) = s.values() {
+        fields.push((
+            "values",
+            Json::Arr(values.iter().map(|&v| json::num(v as f64)).collect()),
+        ));
+    }
+    json::obj(fields)
 }
 
 fn schema_from_json(v: &Json) -> Result<Schema> {
@@ -305,7 +314,25 @@ fn schema_from_json(v: &Json) -> Result<Schema> {
             Ok(Feature { name, kind })
         })
         .collect::<Result<Vec<_>>>()?;
-    Ok(Schema { features, classes })
+    let task = match v.get("values").and_then(Json::as_arr) {
+        Some(arr) => crate::data::Task::Regression {
+            values: arr
+                .iter()
+                .map(|x| x.as_f64().map(|v| v as f32))
+                .collect::<Option<_>>()
+                .ok_or_else(|| Error::parse("schema: regression value"))?,
+        },
+        None => crate::data::Task::Classification,
+    };
+    let schema = Schema {
+        features,
+        classes,
+        task,
+    };
+    schema
+        .validate_task()
+        .map_err(|e| Error::parse(format!("schema: {e}")))?;
+    Ok(schema)
 }
 
 #[cfg(test)]
@@ -370,6 +397,35 @@ mod tests {
         let back = CompiledDD::load(path.to_str().unwrap()).unwrap();
         assert_eq!(back.agreement(&forest, &ds), 1.0);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn regression_value_table_roundtrips() {
+        let ds = crate::data::synth::regression(&crate::data::synth::RegressionSpec {
+            rows: 150,
+            bins: 6,
+            ..Default::default()
+        })
+        .unwrap();
+        let forest = ForestLearner::default().trees(7).seed(9).fit(&ds);
+        let dd = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Vector,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap();
+        let text = dd.to_persist_json().to_string_compact();
+        assert!(text.contains("\"values\""));
+        let back = CompiledDD::load_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.schema, dd.schema, "task + value table survive");
+        // classification documents never carry the field
+        let cls = ForestCompiler::new(CompileOptions::default())
+            .compile(&ForestLearner::default().trees(3).seed(1).fit(&datasets::lenses()))
+            .unwrap();
+        assert!(!cls.to_persist_json().to_string_compact().contains("\"values\""));
+        // a value table whose arity disagrees with the classes is rejected
+        let forged = text.replace("\"values\":[", "\"values\":[0.25,");
+        assert!(CompiledDD::load_from_json(&Json::parse(&forged).unwrap()).is_err());
     }
 
     #[test]

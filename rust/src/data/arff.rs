@@ -130,6 +130,7 @@ pub fn parse(text: &str) -> Result<Dataset> {
     let schema = Schema {
         features,
         classes: classes.clone(),
+        task: super::Task::Classification,
     };
 
     let mut cells = Vec::with_capacity(rows.len() * nf);

@@ -104,7 +104,11 @@ pub fn parse(name: &str, text: &str) -> Result<Dataset> {
             },
         })
         .collect();
-    let schema = Schema { features, classes };
+    let schema = Schema {
+        features,
+        classes,
+        task: super::Task::Classification,
+    };
 
     let mut cells = Vec::with_capacity(records.len() * nf);
     let mut labels = Vec::with_capacity(records.len());

@@ -15,18 +15,20 @@
 //! | `vote`          | 435  | synthesised: 267 dem / 168 rep, 16 issues, party-conditional vote model with abstentions |
 //! | `breast-cancer` | 286  | synthesised: 201 / 85 class split, Ljubljana schema, risk-factor-conditional model |
 
-use super::{Dataset, Feature, FeatureKind, Schema};
+use super::{Dataset, Feature, FeatureKind, Schema, Task};
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 use std::collections::BTreeSet;
 
-/// Names of all built-in datasets (the paper's Table 1/2 rows).
+/// Names of all built-in datasets (the paper's Table 1/2 rows, plus the
+/// synthetic regression corpus `synth-reg`).
 pub fn names() -> Vec<&'static str> {
     vec![
         "balance-scale",
         "breast-cancer",
         "lenses",
         "iris",
+        "synth-reg",
         "tic-tac-toe",
         "vote",
     ]
@@ -41,6 +43,9 @@ pub fn load(name: &str) -> Result<Dataset> {
         "tic-tac-toe" | "tictactoe" | "ttt" => Ok(tic_tac_toe()),
         "vote" | "voting" | "house-votes-84" => Ok(vote()),
         "breast-cancer" | "breast" => Ok(breast_cancer()),
+        "synth-reg" | "synthreg" | "regression" => {
+            super::synth::regression(&super::synth::RegressionSpec::default())
+        }
         other => Err(Error::invalid(format!(
             "unknown dataset '{other}' (available: {})",
             names().join(", ")
@@ -101,6 +106,7 @@ pub fn iris() -> Dataset {
                 numeric("petalwidth"),
             ],
             classes: vec!["setosa".into(), "versicolor".into(), "virginica".into()],
+            task: Task::Classification,
         },
         cells,
         labels,
@@ -142,6 +148,7 @@ pub fn balance_scale() -> Dataset {
                 numeric("right-distance"),
             ],
             classes: vec!["L".into(), "B".into(), "R".into()],
+            task: Task::Classification,
         },
         cells,
         labels,
@@ -198,6 +205,7 @@ pub fn lenses() -> Dataset {
                 categorical("tear-prod-rate", &tears),
             ],
             classes: vec!["hard".into(), "soft".into(), "none".into()],
+            task: Task::Classification,
         },
         cells,
         labels,
@@ -269,6 +277,7 @@ pub fn tic_tac_toe() -> Dataset {
         Schema {
             features,
             classes: vec!["positive".into(), "negative".into()],
+            task: Task::Classification,
         },
         cells,
         labels,
@@ -332,6 +341,7 @@ pub fn vote() -> Dataset {
         Schema {
             features,
             classes: vec!["democrat".into(), "republican".into()],
+            task: Task::Classification,
         },
         cells,
         labels,
@@ -404,6 +414,7 @@ pub fn breast_cancer() -> Dataset {
                 categorical("irradiat", &irradiat),
             ],
             classes: vec!["no-recurrence-events".into(), "recurrence-events".into()],
+            task: Task::Classification,
         },
         cells,
         labels,

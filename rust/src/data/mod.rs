@@ -61,6 +61,47 @@ pub struct Feature {
     pub kind: FeatureKind,
 }
 
+/// What a model predicts — the interpretation of the class alphabet.
+///
+/// The aggregation algebra is identical for both tasks: trees vote for
+/// class indices, the compiled DD carries the per-class vote vector, and
+/// the *decision rule* is a pure post-map over that vector
+/// ([`crate::add::terminal::argmax`] /
+/// [`crate::add::terminal::weighted_argmax`] /
+/// [`crate::add::terminal::expected_value`]). Regression reuses the
+/// whole pipeline by treating each class as a target-value bin: the
+/// schema carries one representative value per bin and the prediction is
+/// the vote-weighted mean of those values.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum Task {
+    /// Classes are categorical labels; predictions are argmax decisions.
+    #[default]
+    Classification,
+    /// Classes are target-value bins; predictions are vote-weighted
+    /// means over the bin value table.
+    Regression {
+        /// Representative target value per class (one entry per class;
+        /// the mean of the training targets that fell in the bin).
+        values: Vec<f32>,
+    },
+}
+
+impl Task {
+    /// True for [`Task::Regression`].
+    pub fn is_regression(&self) -> bool {
+        matches!(self, Task::Regression { .. })
+    }
+
+    /// The per-class value table of a regression task (`None` for
+    /// classification).
+    pub fn values(&self) -> Option<&[f32]> {
+        match self {
+            Task::Classification => None,
+            Task::Regression { values } => Some(values),
+        }
+    }
+}
+
 /// Dataset schema: feature columns plus the class alphabet `C`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schema {
@@ -68,6 +109,9 @@ pub struct Schema {
     pub features: Vec<Feature>,
     /// Class labels; the classification co-domain `C` of the paper.
     pub classes: Vec<String>,
+    /// What the classes mean: categorical labels, or target-value bins
+    /// of a regression forest (see [`Task`]).
+    pub task: Task,
 }
 
 impl Schema {
@@ -84,6 +128,31 @@ impl Schema {
     /// Index of a class label.
     pub fn class_index(&self, label: &str) -> Option<usize> {
         self.classes.iter().position(|c| c == label)
+    }
+
+    /// The per-class regression value table (`None` for classification).
+    pub fn values(&self) -> Option<&[f32]> {
+        self.task.values()
+    }
+
+    /// Check the task is internally consistent: a regression schema
+    /// needs exactly one finite value per class.
+    pub fn validate_task(&self) -> Result<()> {
+        if let Task::Regression { values } = &self.task {
+            if values.len() != self.classes.len() {
+                return Err(Error::invalid(format!(
+                    "regression schema has {} values for {} classes",
+                    values.len(),
+                    self.classes.len()
+                )));
+            }
+            if values.iter().any(|v| !v.is_finite()) {
+                return Err(Error::invalid(
+                    "regression value table must be finite",
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Render a cell value for display (categorical codes back to names).
@@ -124,6 +193,7 @@ impl Dataset {
         if nf == 0 {
             return Err(Error::invalid("dataset must have at least one feature"));
         }
+        schema.validate_task()?;
         if cells.len() % nf != 0 {
             return Err(Error::invalid(format!(
                 "cell count {} is not a multiple of feature count {nf}",
@@ -267,6 +337,7 @@ mod tests {
                 },
             ],
             classes: vec!["a".into(), "b".into()],
+            task: Task::Classification,
         }
     }
 

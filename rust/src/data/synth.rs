@@ -4,8 +4,8 @@
 //! property tests — places that need datasets with controlled shape
 //! (feature count, class count, difficulty) rather than a fixed corpus.
 
-use super::{Dataset, Feature, FeatureKind, Schema};
-use crate::error::Result;
+use super::{Dataset, Feature, FeatureKind, Schema, Task};
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// Configuration for a Gaussian-blob classification problem.
@@ -66,6 +66,7 @@ pub fn blobs(spec: &BlobSpec) -> Result<Dataset> {
             })
             .collect(),
         classes: (0..spec.classes).map(|c| format!("c{c}")).collect(),
+        task: Task::Classification,
     };
     Dataset::new(
         format!("blobs-{}x{}", spec.rows, spec.features),
@@ -115,8 +116,129 @@ pub fn mixed_rule(rows: usize, seed: u64) -> Result<Dataset> {
             },
         ],
         classes: vec!["no".into(), "yes".into()],
+        task: Task::Classification,
     };
     Dataset::new(format!("mixed-rule-{rows}"), schema, cells, labels)
+}
+
+/// Bin continuous targets into `bins` equal-frequency quantile bins and
+/// return a regression [`Dataset`]: labels are bin indices, the schema's
+/// [`Task::Regression`] value table carries each bin's mean target, and
+/// class "labels" render as the bin value. This is the bridge between
+/// continuous targets and the paper's vote algebra — every tree votes
+/// for a value bin, and the forest's prediction is the vote-weighted
+/// mean ([`crate::add::terminal::expected_value`]), which the DD
+/// aggregation preserves exactly.
+pub fn bin_targets(
+    name: impl Into<String>,
+    features: Vec<Feature>,
+    cells: Vec<f32>,
+    targets: &[f32],
+    bins: usize,
+) -> Result<Dataset> {
+    if bins < 2 {
+        return Err(Error::invalid("regression binning needs at least 2 bins"));
+    }
+    if targets.is_empty() {
+        return Err(Error::invalid("regression binning needs targets"));
+    }
+    if targets.iter().any(|t| !t.is_finite()) {
+        return Err(Error::invalid("regression targets must be finite"));
+    }
+    // Equal-frequency bin edges over the sorted targets; duplicate edges
+    // (heavily tied targets) collapse, so the effective bin count may be
+    // smaller than requested.
+    let mut sorted = targets.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut edges: Vec<f32> = (1..bins)
+        .map(|b| sorted[b * sorted.len() / bins])
+        .collect();
+    edges.dedup();
+    // Assign each target to its bin: index of the first edge above it.
+    let bin_of = |t: f32| edges.partition_point(|&e| e <= t) as u32;
+    let n_bins = edges.len() + 1;
+    let labels: Vec<u32> = targets.iter().map(|&t| bin_of(t)).collect();
+    // Per-bin mean target (f64 accumulation, the bin's representative
+    // value); empty bins keep the midpoint of their edge interval.
+    let mut sums = vec![0.0f64; n_bins];
+    let mut counts = vec![0u64; n_bins];
+    for (&t, &l) in targets.iter().zip(&labels) {
+        sums[l as usize] += t as f64;
+        counts[l as usize] += 1;
+    }
+    let values: Vec<f32> = (0..n_bins)
+        .map(|b| {
+            if counts[b] > 0 {
+                (sums[b] / counts[b] as f64) as f32
+            } else {
+                *edges.get(b.saturating_sub(1)).unwrap_or(&0.0)
+            }
+        })
+        .collect();
+    let classes = values.iter().map(|v| format!("{v}")).collect();
+    let schema = Schema {
+        features,
+        classes,
+        task: Task::Regression { values },
+    };
+    Dataset::new(name, schema, cells, labels)
+}
+
+/// Configuration for the built-in synthetic regression problem.
+#[derive(Debug, Clone)]
+pub struct RegressionSpec {
+    /// Rows to generate.
+    pub rows: usize,
+    /// Target-value bins (the regression resolution; see [`bin_targets`]).
+    pub bins: usize,
+    /// Additive noise std on the target.
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RegressionSpec {
+    fn default() -> Self {
+        RegressionSpec {
+            rows: 400,
+            bins: 16,
+            noise: 0.5,
+            seed: 0,
+        }
+    }
+}
+
+/// Friedman-#1-style regression surface over 5 numeric features:
+/// `y = 10·sin(π·x0·x1) + 20·(x2 − 0.5)² + 10·x3 + 5·x4 + noise`,
+/// binned through [`bin_targets`]. The built-in `synth-reg` dataset.
+pub fn regression(spec: &RegressionSpec) -> Result<Dataset> {
+    let mut rng = Rng::new(spec.seed);
+    let nf = 5usize;
+    let mut cells = Vec::with_capacity(spec.rows * nf);
+    let mut targets = Vec::with_capacity(spec.rows);
+    for _ in 0..spec.rows {
+        let x: Vec<f64> = (0..nf).map(|_| rng.range_f64(0.0, 1.0)).collect();
+        cells.extend(x.iter().map(|&v| v as f32));
+        let y = 10.0 * (std::f64::consts::PI * x[0] * x[1]).sin()
+            + 20.0 * (x[2] - 0.5).powi(2)
+            + 10.0 * x[3]
+            + 5.0 * x[4]
+            + rng.normal() * spec.noise;
+        targets.push(y as f32);
+    }
+    let features = (0..nf)
+        .map(|f| Feature {
+            name: format!("x{f}"),
+            kind: FeatureKind::Numeric,
+        })
+        .collect();
+    bin_targets(
+        format!("synth-reg-{}", spec.rows),
+        features,
+        cells,
+        &targets,
+        spec.bins,
+    )
 }
 
 #[cfg(test)]
@@ -178,5 +300,49 @@ mod tests {
         assert_eq!(ds.n_classes(), 2);
         let h = ds.class_histogram();
         assert!(h[0] > 50 && h[1] > 50, "{h:?}");
+    }
+
+    #[test]
+    fn regression_dataset_bins_targets() {
+        let ds = regression(&RegressionSpec::default()).unwrap();
+        assert_eq!(ds.n_rows(), 400);
+        assert_eq!(ds.n_features(), 5);
+        assert!(ds.schema.task.is_regression());
+        let values = ds.schema.values().unwrap();
+        assert_eq!(values.len(), ds.n_classes());
+        // bin values are sorted and finite (quantile binning preserves order)
+        for w in values.windows(2) {
+            assert!(w[0] <= w[1], "{values:?}");
+        }
+        // every label's bin value is a plausible target (Friedman#1 ∈ ~[0,30])
+        for &v in values {
+            assert!(v.is_finite() && v > -5.0 && v < 35.0, "{v}");
+        }
+        // deterministic per seed
+        let again = regression(&RegressionSpec::default()).unwrap();
+        assert_eq!(ds.labels(), again.labels());
+        assert_eq!(ds.schema, again.schema);
+    }
+
+    #[test]
+    fn bin_targets_validates_inputs() {
+        let feats = vec![Feature {
+            name: "x".into(),
+            kind: FeatureKind::Numeric,
+        }];
+        assert!(bin_targets("t", feats.clone(), vec![1.0], &[1.0], 1).is_err());
+        assert!(bin_targets("t", feats.clone(), vec![], &[], 4).is_err());
+        assert!(bin_targets("t", feats.clone(), vec![1.0], &[f32::NAN], 4).is_err());
+        // tied targets collapse edges instead of failing
+        let ds = bin_targets(
+            "t",
+            feats,
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[5.0, 5.0, 5.0, 9.0],
+            4,
+        )
+        .unwrap();
+        assert!(ds.n_classes() >= 2);
+        assert!(ds.schema.task.is_regression());
     }
 }

@@ -254,6 +254,58 @@ impl Engine {
         slot.classifier.classify_batch_with_steps(rows)
     }
 
+    /// Per-class vote counts for one row on `model`/`backend` — the raw
+    /// distribution behind every decision rule. Errors with
+    /// [`Error::InvalidArgument`] on backends that fold votes away at
+    /// compile time (the default majority abstraction, XLA); compile
+    /// with [`Abstraction::Vector`] (or query the forest backend) to
+    /// serve distributions.
+    pub fn votes(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        x: &[f32],
+    ) -> Result<Vec<u32>> {
+        let (version, slot) = self.registry.resolve(model, backend)?;
+        version.check_row(x)?;
+        slot.classifier.votes(x)
+    }
+
+    /// Per-class vote fractions for one row (`votes` normalised to sum
+    /// to 1) — same backend requirements as [`Engine::votes`].
+    pub fn probabilities(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        x: &[f32],
+    ) -> Result<Vec<f64>> {
+        Ok(crate::add::terminal::probabilities(&self.votes(
+            model, backend, x,
+        )?))
+    }
+
+    /// Regression prediction for one row: the vote-weighted mean of the
+    /// model's bin value table. Errors when the model's schema carries
+    /// no value table (a classification model) or the backend cannot
+    /// expose votes.
+    pub fn predict_value(
+        &self,
+        model: Option<&str>,
+        backend: Option<BackendKind>,
+        x: &[f32],
+    ) -> Result<f64> {
+        let (version, slot) = self.registry.resolve(model, backend)?;
+        version.check_row(x)?;
+        let values = version.schema.values().ok_or_else(|| {
+            Error::invalid(format!(
+                "model '{}' has no value table (not a regression model)",
+                version.id
+            ))
+        })?;
+        let votes = slot.classifier.votes(x)?;
+        Ok(crate::add::terminal::expected_value(&votes, values))
+    }
+
     /// Per-backend metadata for a model (`None` = default model).
     pub fn info(&self, model: Option<&str>) -> Result<Vec<ClassifierInfo>> {
         let version = self.registry.get(model)?;
@@ -622,6 +674,55 @@ mod tests {
         assert!(Engine::new().save_bundle(&[], &path_s).is_err());
         assert!(replica.register_bundle("/no/such/file.fab").is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn votes_and_values_through_the_facade() {
+        let spec = crate::data::synth::RegressionSpec {
+            rows: 140,
+            bins: 8,
+            ..Default::default()
+        };
+        let data = crate::data::synth::regression(&spec).unwrap();
+        let engine = Engine::builder()
+            .dataset(data.clone())
+            .trees(7)
+            .seed(5)
+            .abstraction(Abstraction::Vector)
+            .build()
+            .unwrap();
+        for i in (0..data.n_rows()).step_by(19) {
+            let forest = engine
+                .votes(None, Some(BackendKind::Forest), data.row(i))
+                .unwrap();
+            let dd = engine.votes(None, Some(BackendKind::Dd), data.row(i)).unwrap();
+            let frozen = engine
+                .votes(None, Some(BackendKind::Frozen), data.row(i))
+                .unwrap();
+            assert_eq!(forest, dd, "row {i}");
+            assert_eq!(dd, frozen, "row {i}");
+            assert_eq!(forest.iter().sum::<u32>(), 7, "one vote per tree");
+            let probs = engine
+                .probabilities(None, Some(BackendKind::Dd), data.row(i))
+                .unwrap();
+            assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9, "row {i}");
+            let value = engine.predict_value(None, None, data.row(i)).unwrap();
+            assert!(value.is_finite(), "row {i}");
+        }
+        // a classification model has no value table
+        let iris = Engine::builder()
+            .dataset(datasets::iris())
+            .trees(5)
+            .seed(1)
+            .build()
+            .unwrap();
+        let err = iris
+            .predict_value(None, Some(BackendKind::Forest), datasets::iris().row(0))
+            .unwrap_err();
+        assert!(err.to_string().contains("value table"), "{err}");
+        // the default majority abstraction folds votes away
+        let err = iris.votes(None, Some(BackendKind::Dd), datasets::iris().row(0)).unwrap_err();
+        assert!(err.to_string().contains("vote"), "{err}");
     }
 
     #[test]

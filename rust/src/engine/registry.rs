@@ -427,6 +427,7 @@ mod tests {
                 })
                 .collect(),
             classes: (0..classes).map(|c| format!("c{c}")).collect(),
+            task: crate::data::Task::Classification,
         }
     }
 

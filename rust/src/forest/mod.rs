@@ -217,8 +217,11 @@ impl RandomForest {
     }
 
     /// JSON encoding (model persistence for the CLI train/compile workflow).
+    /// Regression forests additionally carry the per-class value table as
+    /// a `"values"` field; classification encodings are unchanged from
+    /// earlier releases, so old model files round-trip byte-for-byte.
     pub fn to_json(&self) -> Json {
-        json::obj(vec![
+        let mut fields = vec![
             (
                 "classes",
                 Json::Arr(self.schema.classes.iter().map(|c| json::s(c.clone())).collect()),
@@ -245,7 +248,14 @@ impl RandomForest {
                 "trees",
                 Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
             ),
-        ])
+        ];
+        if let Some(values) = self.schema.values() {
+            fields.push((
+                "values",
+                Json::Arr(values.iter().map(|&v| Json::Num(v as f64)).collect()),
+            ));
+        }
+        json::obj(fields)
     }
 
     /// JSON decoding.
@@ -289,7 +299,26 @@ impl RandomForest {
             .iter()
             .map(DecisionTree::from_json)
             .collect::<Result<Vec<_>>>()?;
-        let schema = Schema { features, classes };
+        // Optional regression value table ("values" absent = classification,
+        // which keeps pre-existing model files parsing identically).
+        let task = match v.get("values").and_then(Json::as_arr) {
+            Some(vals) => crate::data::Task::Regression {
+                values: vals
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Option<_>>()
+                    .ok_or_else(|| Error::parse("forest: bad regression value"))?,
+            },
+            None => crate::data::Task::Classification,
+        };
+        let schema = Schema {
+            features,
+            classes,
+            task,
+        };
+        schema.validate_task().map_err(|e| {
+            Error::parse(format!("forest: invalid regression value table: {e}"))
+        })?;
         for t in &trees {
             if t.n_features != schema.n_features() || t.n_classes != schema.n_classes() {
                 return Err(Error::SchemaMismatch(
@@ -340,6 +369,14 @@ impl Classifier for RandomForest {
 
     fn classify_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
         Ok(self.predict_batch(rows))
+    }
+
+    fn votes(&self, x: &[f32]) -> Result<Vec<u32>> {
+        Ok(RandomForest::votes(self, x))
+    }
+
+    fn task_values(&self) -> Option<Vec<f32>> {
+        self.schema.values().map(<[f32]>::to_vec)
     }
 }
 
@@ -470,6 +507,27 @@ mod tests {
             assert_eq!(got[i], forest.predict(row), "row {i}");
         }
         assert!(forest.predict_batch(crate::batch::RowMatrix::empty()).is_empty());
+    }
+
+    #[test]
+    fn regression_schema_survives_json_roundtrip() {
+        let spec = crate::data::synth::RegressionSpec {
+            rows: 120,
+            ..Default::default()
+        };
+        let ds = crate::data::synth::regression(&spec).unwrap();
+        let forest = ForestLearner::default().trees(9).seed(3).fit(&ds);
+        assert!(forest.schema.task.is_regression());
+        let text = forest.to_json().to_string_pretty();
+        let back = RandomForest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.schema, forest.schema);
+        // classification encodings gain no new field
+        let cls = ForestLearner::default().trees(3).seed(0).fit(&datasets::lenses());
+        assert!(cls.to_json().get("values").is_none());
+        // the trait surface delegates to the inherent vote counter
+        let v = Classifier::votes(&forest, ds.row(0)).unwrap();
+        assert_eq!(v, RandomForest::votes(&forest, ds.row(0)));
+        assert_eq!(v.iter().sum::<u32>(), 9);
     }
 
     #[test]

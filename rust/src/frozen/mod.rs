@@ -362,6 +362,32 @@ impl TermPlanes {
         }
     }
 
+    /// Write terminal `i`'s per-class vote counts into `out` (length
+    /// `n_classes`). Word payloads are counted through the §4.1
+    /// homomorphism, vector payloads copied verbatim. Returns `false`
+    /// for majority terminals — the abstraction has discarded the
+    /// distribution and `out` is left untouched.
+    pub(crate) fn counts_into(&self, i: usize, out: &mut [u32]) -> bool {
+        match self {
+            TermPlanes::Word { offsets, symbols } => {
+                out.fill(0);
+                for &s in &symbols[offsets[i] as usize..offsets[i + 1] as usize] {
+                    out[s as usize] += 1;
+                }
+                true
+            }
+            TermPlanes::Vector {
+                stride,
+                counts: votes,
+            } => {
+                let s = *stride as usize;
+                out.copy_from_slice(&votes[i * s..(i + 1) * s]);
+                true
+            }
+            TermPlanes::Majority { .. } => false,
+        }
+    }
+
     /// §6 aggregation reads still paid at runtime when terminal `i` is
     /// reached: the word length for class words, `|C|` for vote vectors,
     /// zero after the majority abstraction.
@@ -832,7 +858,7 @@ impl FrozenDD {
         let sharded = rows.n_rows() >= PAR_MIN_ROWS
             && pool::run_sharded(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
                 SCRATCH.with(|s| {
-                    self.sweep_dispatch::<false>(
+                    self.sweep_dispatch::<false, false>(
                         shard,
                         &mut s.borrow_mut(),
                         out_chunk,
@@ -845,7 +871,7 @@ impl FrozenDD {
             });
         if !sharded {
             SCRATCH.with(|s| {
-                self.sweep_dispatch::<false>(
+                self.sweep_dispatch::<false, false>(
                     rows,
                     &mut s.borrow_mut(),
                     &mut out,
@@ -879,7 +905,7 @@ impl FrozenDD {
             pool::run_sharded_quarantined(rows, &mut out, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
                 fault::fire_eval_points();
                 SCRATCH.with(|s| {
-                    self.sweep_dispatch::<false>(
+                    self.sweep_dispatch::<false, false>(
                         shard,
                         &mut s.borrow_mut(),
                         out_chunk,
@@ -900,7 +926,7 @@ impl FrozenDD {
                 // here unwinds into the router's catch_unwind guard.
                 fault::fire_eval_points();
                 SCRATCH.with(|s| {
-                    self.sweep_dispatch::<false>(
+                    self.sweep_dispatch::<false, false>(
                         rows,
                         &mut s.borrow_mut(),
                         &mut out,
@@ -937,7 +963,7 @@ impl FrozenDD {
                 PAR_ROWS_PER_SHARD,
                 |shard, out_chunk, steps_chunk| {
                     SCRATCH.with(|s| {
-                        self.sweep_dispatch::<true>(
+                        self.sweep_dispatch::<true, false>(
                             shard,
                             &mut s.borrow_mut(),
                             out_chunk,
@@ -951,7 +977,7 @@ impl FrozenDD {
             );
         if !sharded {
             SCRATCH.with(|s| {
-                self.sweep_dispatch::<true>(
+                self.sweep_dispatch::<true, false>(
                     rows,
                     &mut s.borrow_mut(),
                     &mut out,
@@ -985,7 +1011,7 @@ impl FrozenDD {
                 |shard, out_chunk, steps_chunk| {
                     fault::fire_eval_points();
                     SCRATCH.with(|s| {
-                        self.sweep_dispatch::<true>(
+                        self.sweep_dispatch::<true, false>(
                             shard,
                             &mut s.borrow_mut(),
                             out_chunk,
@@ -1005,7 +1031,7 @@ impl FrozenDD {
             pool::ShardedRun::TooSmall => {
                 fault::fire_eval_points();
                 SCRATCH.with(|s| {
-                    self.sweep_dispatch::<true>(
+                    self.sweep_dispatch::<true, false>(
                         rows,
                         &mut s.borrow_mut(),
                         &mut out,
@@ -1028,7 +1054,7 @@ impl FrozenDD {
     /// [`BatchScratch`].
     pub fn classify_batch_with(&self, rows: RowMatrix<'_>, scratch: &mut BatchScratch) -> Vec<u32> {
         let mut out = vec![0u32; rows.n_rows()];
-        self.sweep_dispatch::<false>(
+        self.sweep_dispatch::<false, false>(
             rows,
             scratch,
             &mut out,
@@ -1085,7 +1111,7 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<false>(rows, scratch, out, &mut [], budget, kernel.supported(), None);
+        self.sweep_dispatch::<false, false>(rows, scratch, out, &mut [], budget, kernel.supported(), None);
     }
 
     /// Steps-metered single-threaded sweep with an explicit tile budget
@@ -1122,12 +1148,124 @@ impl FrozenDD {
         } else {
             tile_budget
         };
-        self.sweep_dispatch::<true>(rows, scratch, out, steps, budget, kernel.supported(), None);
+        self.sweep_dispatch::<true, false>(rows, scratch, out, steps, budget, kernel.supported(), None);
     }
 
-    /// Monomorphise the sweep over the hot-plane encoding.
+    /// Whether this diagram retains full vote distributions: word and
+    /// vector terminals carry the complete payload; the majority
+    /// abstraction (§4.2) collapsed it to one label at compile time.
+    pub fn has_votes(&self) -> bool {
+        !matches!(self.abstraction, Abstraction::Majority)
+    }
+
+    fn require_votes(&self) -> Result<()> {
+        if self.has_votes() {
+            Ok(())
+        } else {
+            Err(Error::invalid(
+                "majority-abstracted frozen diagram has discarded vote distributions \
+                 (freeze a word or vector diagram to keep them)",
+            ))
+        }
+    }
+
+    /// Per-class vote counts for one row — the full terminal payload the
+    /// walk lands on, before any decision rule.
+    pub fn votes(&self, x: &[f32]) -> Result<Vec<u32>> {
+        self.require_votes()?;
+        let (t, _) = with_hot!(self, hot, { walk(hot, &self.lo, &self.hi, self.root, x) });
+        let mut v = vec![0u32; self.schema.n_classes()];
+        self.terminals.counts_into(t, &mut v);
+        Ok(v)
+    }
+
+    /// Per-class vote counts for a batch, flattened row-major with stride
+    /// `|C|`. Runs the same tiled/SIMD sweeps as
+    /// [`FrozenDD::classify_batch`] — sharded across the worker pool — in
+    /// raw terminal-index mode, then expands each row's terminal payload:
+    /// the distribution comes from exactly the sweep whose argmax the
+    /// classification path reports, so the two can never drift.
+    pub fn votes_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
+        self.require_votes()?;
+        let tile = tile_bytes();
+        let kernel = simd::kernel();
+        let mut terms = vec![0u32; rows.n_rows()];
+        let sharded = rows.n_rows() >= PAR_MIN_ROWS
+            && pool::run_sharded(rows, &mut terms, PAR_ROWS_PER_SHARD, |shard, out_chunk| {
+                SCRATCH.with(|s| {
+                    self.sweep_dispatch::<false, true>(
+                        shard,
+                        &mut s.borrow_mut(),
+                        out_chunk,
+                        &mut [],
+                        tile,
+                        kernel,
+                        None,
+                    )
+                });
+            });
+        if !sharded {
+            SCRATCH.with(|s| {
+                self.sweep_dispatch::<false, true>(
+                    rows,
+                    &mut s.borrow_mut(),
+                    &mut terms,
+                    &mut [],
+                    tile,
+                    kernel,
+                    None,
+                )
+            });
+        }
+        Ok(self.expand_terms(&terms))
+    }
+
+    /// Kernel- and tile-pinned batch distributions (single-threaded) —
+    /// the hook conformance uses to pin every SIMD kernel × tile budget
+    /// against the per-row walks, mirroring
+    /// [`FrozenDD::classify_batch_kernel_into`].
+    pub fn votes_batch_kernel(
+        &self,
+        rows: RowMatrix<'_>,
+        scratch: &mut BatchScratch,
+        tile_budget: usize,
+        kernel: simd::Kernel,
+    ) -> Result<Vec<u32>> {
+        self.require_votes()?;
+        let budget = if tile_budget == 0 {
+            tile_bytes()
+        } else {
+            tile_budget
+        };
+        let mut terms = vec![0u32; rows.n_rows()];
+        self.sweep_dispatch::<false, true>(
+            rows,
+            scratch,
+            &mut terms,
+            &mut [],
+            budget,
+            kernel.supported(),
+            None,
+        );
+        Ok(self.expand_terms(&terms))
+    }
+
+    /// Expand swept terminal indices into flat per-row vote vectors.
+    fn expand_terms(&self, terms: &[u32]) -> Vec<u32> {
+        let k = self.schema.n_classes();
+        let mut out = vec![0u32; terms.len() * k];
+        for (i, &t) in terms.iter().enumerate() {
+            self.terminals
+                .counts_into(t as usize, &mut out[i * k..(i + 1) * k]);
+        }
+        out
+    }
+
+    /// Monomorphise the sweep over the hot-plane encoding. `RAW` switches
+    /// the output from decided classes to raw terminal *indices* (the
+    /// vote-distribution path reads the full payload afterwards).
     #[allow(clippy::too_many_arguments)]
-    fn sweep_dispatch<const STEPS: bool>(
+    fn sweep_dispatch<const STEPS: bool, const RAW: bool>(
         &self,
         rows: RowMatrix<'_>,
         scratch: &mut BatchScratch,
@@ -1138,7 +1276,7 @@ impl FrozenDD {
         deadline: Option<Instant>,
     ) {
         with_hot!(self, hot, {
-            self.sweep_into::<_, STEPS>(
+            self.sweep_into::<_, STEPS, RAW>(
                 hot,
                 rows,
                 scratch,
@@ -1154,10 +1292,11 @@ impl FrozenDD {
     /// The batch sweep front door: pick per-row walks (small batches),
     /// the round-based counting scatter (diagram fits the tile budget) or
     /// the cache-tiled chain sweep (diagram larger than the budget).
-    /// Every path writes identical classes (and, when `STEPS`, identical
-    /// §6 step counts) — only the memory traffic differs.
+    /// Every path writes identical classes — or identical terminal
+    /// indices when `RAW` — (and, when `STEPS`, identical §6 step
+    /// counts); only the memory traffic differs.
     #[allow(clippy::too_many_arguments)]
-    fn sweep_into<H: HotRec, const STEPS: bool>(
+    fn sweep_into<H: HotRec, const STEPS: bool, const RAW: bool>(
         &self,
         hot: &[H],
         rows: RowMatrix<'_>,
@@ -1180,7 +1319,7 @@ impl FrozenDD {
         let term_agg = &self.term_agg_reads[..];
         if self.root & TERM_BIT != 0 {
             let t = (self.root & !TERM_BIT) as usize;
-            out.fill(u32::from(term_class[t]));
+            out.fill(if RAW { t as u32 } else { u32::from(term_class[t]) });
             if STEPS {
                 steps.fill(term_agg[t]);
             }
@@ -1194,7 +1333,7 @@ impl FrozenDD {
             let hi = &self.hi[..];
             for (i, r) in rows.iter().enumerate() {
                 let (t, s) = walk(hot, lo, hi, self.root, r);
-                out[i] = u32::from(term_class[t]);
+                out[i] = if RAW { t as u32 } else { u32::from(term_class[t]) };
                 if STEPS {
                     steps[i] = s + term_agg[t];
                 }
@@ -1219,11 +1358,11 @@ impl FrozenDD {
         };
         let tile_nodes = tile_span::<H>(tile_budget);
         if tile_nodes >= n_nodes {
-            self.rounds_sweep::<H, STEPS>(
+            self.rounds_sweep::<H, STEPS, RAW>(
                 hot, rows, cells, nf, rank, scratch, out, steps, kernel, deadline,
             );
         } else {
-            self.tiled_sweep::<H, STEPS>(
+            self.tiled_sweep::<H, STEPS, RAW>(
                 hot, rows, cells, nf, rank, scratch, out, steps, tile_nodes, kernel, deadline,
             );
         }
@@ -1240,7 +1379,7 @@ impl FrozenDD {
     /// rows into one flat slot array for the next round. No per-node
     /// `Vec`s, no allocation once the scratch is warm.
     #[allow(clippy::too_many_arguments)]
-    fn rounds_sweep<H: HotRec, const STEPS: bool>(
+    fn rounds_sweep<H: HotRec, const STEPS: bool, const RAW: bool>(
         &self,
         hot: &[H],
         rows: RowMatrix<'_>,
@@ -1305,7 +1444,8 @@ impl FrozenDD {
                         let stored: u32 = $stored;
                         if stored & TERM_BIT != 0 {
                             let t = (stored & !TERM_BIT) as usize;
-                            out[$r as usize] = u32::from(term_class[t]);
+                            out[$r as usize] =
+                                if RAW { t as u32 } else { u32::from(term_class[t]) };
                             if STEPS {
                                 steps[$r as usize] += term_agg[t];
                             }
@@ -1402,7 +1542,7 @@ impl FrozenDD {
     /// pass). The working set per tile is one tile of node data plus the
     /// parked rows' features, instead of the whole diagram per round.
     #[allow(clippy::too_many_arguments)]
-    fn tiled_sweep<H: HotRec, const STEPS: bool>(
+    fn tiled_sweep<H: HotRec, const STEPS: bool, const RAW: bool>(
         &self,
         hot: &[H],
         rows: RowMatrix<'_>,
@@ -1488,7 +1628,7 @@ impl FrozenDD {
                     };
                     if stored & TERM_BIT != 0 {
                         let t = (stored & !TERM_BIT) as usize;
-                        out[row] = u32::from(term_class[t]);
+                        out[row] = if RAW { t as u32 } else { u32::from(term_class[t]) };
                         if STEPS {
                             steps[row] += term_agg[t];
                         }
@@ -1635,6 +1775,18 @@ impl Classifier for FrozenDD {
         Ok((classes, Some(steps)))
     }
 
+    fn votes(&self, x: &[f32]) -> Result<Vec<u32>> {
+        FrozenDD::votes(self, x)
+    }
+
+    fn task_values(&self) -> Option<Vec<f32>> {
+        self.schema.values().map(<[f32]>::to_vec)
+    }
+
+    fn votes_batch(&self, rows: RowMatrix<'_>) -> Result<Vec<u32>> {
+        FrozenDD::votes_batch(self, rows)
+    }
+
     fn as_any(&self) -> Option<&dyn std::any::Any> {
         Some(self)
     }
@@ -1779,6 +1931,7 @@ mod tests {
                 },
             ],
             classes: vec!["a".into(), "b".into()],
+            task: crate::data::Task::Classification,
         };
         let raw = || RawFrozen {
             schema: schema.clone(),
@@ -1866,6 +2019,78 @@ mod tests {
         for (i, row) in rows.iter().enumerate() {
             assert_eq!(steps[i] as usize, frozen.classify_with_steps(row).1, "row {i}");
         }
+    }
+
+    #[test]
+    fn votes_match_the_forest_across_every_sweep_strategy() {
+        let ds = datasets::iris();
+        let forest = ForestLearner::default().trees(10).seed(21).fit(&ds);
+        for abstraction in [Abstraction::Word, Abstraction::Vector] {
+            let frozen = ForestCompiler::new(CompileOptions {
+                abstraction,
+                ..Default::default()
+            })
+            .compile(&forest)
+            .unwrap()
+            .freeze();
+            // single-row walks
+            for i in (0..ds.n_rows()).step_by(13) {
+                assert_eq!(
+                    frozen.votes(ds.row(i)).unwrap(),
+                    forest.votes(ds.row(i)),
+                    "{abstraction:?} row {i}"
+                );
+            }
+            // batch path past the walk-fallback and parallel crossovers
+            let tiled = crate::bench_support::tile_rows(&ds, 4096, 9);
+            let rows = tiled.as_matrix();
+            let want: Vec<u32> = rows.iter().flat_map(|r| forest.votes(r)).collect();
+            assert_eq!(frozen.votes_batch(rows).unwrap(), want, "{abstraction:?}");
+            // every kernel × tile budget produces the same bits
+            let mut scratch = BatchScratch::new();
+            for kernel in simd::available() {
+                for tile_budget in [1usize, 4096, 0] {
+                    assert_eq!(
+                        frozen
+                            .votes_batch_kernel(rows, &mut scratch, tile_budget, kernel)
+                            .unwrap(),
+                        want,
+                        "{abstraction:?} {} tile {tile_budget}",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+        // the majority freeze refuses: the payload is gone
+        let mv = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap()
+            .freeze();
+        assert!(!mv.has_votes());
+        assert!(mv.votes(ds.row(0)).is_err());
+        assert!(mv.votes_batch(ds.matrix()).is_err());
+    }
+
+    #[test]
+    fn single_terminal_diagram_votes() {
+        // One depth-1 tree on pure-class rows collapses to a single
+        // terminal; the TERM_BIT-tagged-root path must expand payloads too.
+        let ds = datasets::iris();
+        let rows: Vec<usize> = (0..50).collect(); // pure setosa
+        let pure = ds.select(&rows);
+        let forest = ForestLearner::default().trees(3).max_depth(1).seed(0).fit(&pure);
+        let frozen = ForestCompiler::new(CompileOptions {
+            abstraction: Abstraction::Vector,
+            ..Default::default()
+        })
+        .compile(&forest)
+        .unwrap()
+        .freeze();
+        let want = forest.votes(pure.row(0));
+        assert_eq!(frozen.votes(pure.row(0)).unwrap(), want);
+        let flat = frozen.votes_batch(pure.matrix()).unwrap();
+        assert_eq!(flat.len(), pure.n_rows() * pure.n_classes());
+        assert_eq!(&flat[..pure.n_classes()], &want[..]);
     }
 
     #[test]
@@ -2033,6 +2258,7 @@ mod tests {
                 kind: FeatureKind::Numeric,
             }],
             classes: vec!["a".into(), "b".into()],
+            task: crate::data::Task::Classification,
         };
         let raw = |t0: f32, t1: f32| RawFrozen {
             schema: schema.clone(),

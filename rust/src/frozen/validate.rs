@@ -34,6 +34,7 @@ pub(crate) fn validate(raw: &RawFrozen) -> Result<()> {
     if n_classes == 0 {
         return Err(err("schema has no classes"));
     }
+    raw.schema.validate_task().map_err(|e| err(e.to_string()))?;
     if raw.pred_feature.len() != raw.pred_threshold.len() {
         return Err(err("predicate table arrays disagree on length"));
     }
@@ -176,6 +177,7 @@ pub(crate) fn validate_loaded(dd: &FrozenDD) -> Result<()> {
     if n_classes == 0 {
         return Err(err("schema has no classes"));
     }
+    dd.schema.validate_task().map_err(|e| err(e.to_string()))?;
     let n_preds = dd.pred_feature.len();
     if dd.pred_threshold.len() != n_preds {
         return Err(err("predicate table arrays disagree on length"));
@@ -375,6 +377,7 @@ mod tests {
                 },
             ],
             classes: vec!["a".into(), "b".into()],
+            task: crate::data::Task::Classification,
         }
     }
 

@@ -6,7 +6,9 @@
 //! orders of magnitude faster and smaller, packaged as a three-layer
 //! Rust + JAX/Pallas serving system.
 //!
-//! Architecture (see `DESIGN.md`):
+//! Architecture — the layer map and request lifecycle live in
+//! `docs/ARCHITECTURE.md` at the repository root, the binary artifact
+//! formats in `docs/FORMAT.md`, and the serving API in `docs/HTTP.md`:
 //! - **L3 (this crate)**: the paper's entire algorithm — random-forest
 //!   training substrate, the ADD library, feasibility solvers,
 //!   unsatisfiable-path elimination, the forest→DD compiler — plus a
@@ -26,7 +28,7 @@
 //! dispatch through the registry; no caller hard-codes a backend.
 //!
 //! Quickstart (see `examples/quickstart.rs` for the full tour):
-//! ```no_run
+//! ```
 //! use forest_add::classifier::BackendKind;
 //! use forest_add::engine::Engine;
 //!
@@ -35,7 +37,7 @@
 //! let data = forest_add::data::datasets::load("iris").unwrap();
 //! let engine = Engine::builder()
 //!     .dataset(data.clone())
-//!     .trees(100)
+//!     .trees(20)
 //!     .seed(7)
 //!     .build()
 //!     .unwrap();
@@ -57,7 +59,7 @@
 //! [`batch::RowMatrixBuf`], [`data::Dataset::matrix`] views a whole
 //! dataset for free, and worker shards are pointer-arithmetic slices.
 //!
-//! ```no_run
+//! ```
 //! # let data = forest_add::data::datasets::load("iris").unwrap();
 //! # let engine = forest_add::engine::Engine::builder()
 //! #     .dataset(data.clone()).trees(20).seed(7).build().unwrap();
@@ -301,6 +303,11 @@
 //!   replays the same fire sequence, so the chaos soak in
 //!   `tests/integration_fault.rs` is reproducible; disarmed points cost
 //!   one relaxed atomic load on the hot path.
+
+// Public API documentation is part of the contract: every exported
+// item carries rustdoc, and the byte formats / HTTP wire contract are
+// additionally specified under docs/ at the repository root.
+#![warn(missing_docs)]
 
 pub mod add;
 pub mod batch;

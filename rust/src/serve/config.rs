@@ -150,6 +150,15 @@ pub struct ServeConfig {
     /// How long an open breaker waits before admitting a half-open
     /// probe request whose success re-closes it, in milliseconds.
     pub breaker_cooldown_ms: u64,
+    /// Per-class decision weights for imbalanced data: the served
+    /// decision becomes `argmax_c votes_c · weights_c`
+    /// ([`crate::add::terminal::weighted_argmax`]) instead of the plain
+    /// majority. One entry per class, each finite and positive; empty =
+    /// unweighted. The weights re-rank the *decision* only — reported
+    /// probabilities stay the raw vote fractions — and apply to every
+    /// backend identically, because they post-map the same vote vector.
+    /// Requires a vote-preserving model (word or vector abstraction).
+    pub class_weights: Vec<f32>,
     /// Deterministic fault-injection spec, `point:rate:seed` entries
     /// separated by commas (e.g. `eval_shard_panic:0.05:42`); empty =
     /// disarmed. Points: `snapshot_load`, `eval_shard_panic`,
@@ -190,6 +199,7 @@ impl Default for ServeConfig {
             conn_max_inflight: 0,
             breaker_threshold: 3,
             breaker_cooldown_ms: 1_000,
+            class_weights: Vec::new(),
             fault: String::new(),
         }
     }
@@ -280,6 +290,13 @@ impl ServeConfig {
         if let Some(n) = v.get_i64("breaker_cooldown_ms") {
             cfg.breaker_cooldown_ms = n as u64;
         }
+        if let Some(arr) = v.get("class_weights").and_then(Json::as_arr) {
+            cfg.class_weights = arr
+                .iter()
+                .map(|w| w.as_f64().map(|x| x as f32))
+                .collect::<Option<_>>()
+                .ok_or_else(|| Error::parse("class_weights entries must be numbers"))?;
+        }
         if let Some(s) = v.get_str("fault") {
             cfg.fault = s.to_string();
         }
@@ -360,6 +377,13 @@ impl ServeConfig {
                 "breaker_cooldown_ms must be positive (an open breaker needs a probe interval)",
             ));
         }
+        // Length is checked against the model's class count at startup
+        // (the config alone does not know |C|).
+        if self.class_weights.iter().any(|w| !w.is_finite() || *w <= 0.0) {
+            return Err(Error::invalid(
+                "class_weights entries must be finite and positive",
+            ));
+        }
         if !self.fault.is_empty() {
             crate::runtime::fault::parse_spec(&self.fault).map_err(Error::invalid)?;
         }
@@ -418,6 +442,15 @@ impl ServeConfig {
                 "breaker_cooldown_ms",
                 json::num(self.breaker_cooldown_ms as f64),
             ),
+            (
+                "class_weights",
+                Json::Arr(
+                    self.class_weights
+                        .iter()
+                        .map(|&w| json::num(w as f64))
+                        .collect(),
+                ),
+            ),
             ("fault", json::s(self.fault.clone())),
         ])
     }
@@ -452,6 +485,7 @@ mod tests {
             conn_max_inflight: 12,
             breaker_threshold: 5,
             breaker_cooldown_ms: 250,
+            class_weights: vec![1.0, 2.5, 0.5],
             fault: "eval_shard_panic:0.05:42,eval_slow:0.1:7".into(),
             ..Default::default()
         };
@@ -474,6 +508,7 @@ mod tests {
         assert_eq!(back.conn_max_inflight, 12);
         assert_eq!(back.breaker_threshold, 5);
         assert_eq!(back.breaker_cooldown_ms, 250);
+        assert_eq!(back.class_weights, vec![1.0, 2.5, 0.5]);
         assert_eq!(back.fault, "eval_shard_panic:0.05:42,eval_slow:0.1:7");
     }
 
@@ -558,6 +593,16 @@ mod tests {
         );
         assert!(
             ServeConfig::from_json(&Json::parse(r#"{"breaker_cooldown_ms": 0}"#).unwrap())
+                .is_err()
+        );
+        // weights must be finite and positive (length is checked against
+        // the model at startup)
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"class_weights": [1.0, 0.0]}"#).unwrap())
+                .is_err()
+        );
+        assert!(
+            ServeConfig::from_json(&Json::parse(r#"{"class_weights": [1.0, "x"]}"#).unwrap())
                 .is_err()
         );
         // the fault spec is validated up front, not at arming time

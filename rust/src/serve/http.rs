@@ -23,15 +23,23 @@
 //! - `GET  /model`            → default-model description (per-backend info)
 //! - `GET  /models`           → all registered models (name, version, backends,
 //!   `source` = artifact provenance for bundle-booted models)
-//! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?}`
+//! - `POST /classify`         → `{"features": [...], "backend": "dd"?, "model": "name"?,
+//!   "probs": true?}` — with `"probs": true` the response carries the
+//!   per-class vote counts and vote fractions (requires a
+//!   vote-preserving backend; see docs/HTTP.md)
 //! - `POST /classify_batch`   → `{"rows": [[...], ...], "backend": ...?, "model": ...?,
-//!   "steps": true?}` — with `"steps": true` the response carries the §6
-//!   step count per row (`null` when the backend cannot meter)
+//!   "steps": true?, "probs": true?}` — with `"steps": true` the
+//!   response carries the §6 step count per row (`null` when the
+//!   backend cannot meter); with `"probs": true` the per-row vote
+//!   distributions
 //!
-//! Both `POST` endpoints also accept the compact binary row frame
+//! Regression models (schemas with a bin value table) additionally
+//! answer with `value`/`values`: the vote-weighted mean prediction per
+//! row. Both `POST` endpoints also accept the compact binary row frame
 //! (`Content-Type: application/octet-stream`, see `net::proto`) that
-//! deserialises straight into a [`RowMatrixBuf`]; `backend`, `model` and
-//! `steps` then travel in the query string. Responses are always JSON.
+//! deserialises straight into a [`RowMatrixBuf`]; `backend`, `model`,
+//! `steps` and `probs` then travel in the query string. Responses are
+//! always JSON.
 //!
 //! Backpressure: [`Error::Overloaded`] (a full batcher or dispatch
 //! queue) maps to `429 Too Many Requests` + `Retry-After: 1`. Fault
@@ -302,6 +310,22 @@ fn model_info(router: &Arc<Router>) -> Result<Json> {
                     .collect(),
             ),
         ),
+        (
+            "task",
+            json::s(if version.schema.task.is_regression() {
+                "regression"
+            } else {
+                "classification"
+            }),
+        ),
+        (
+            "values",
+            version
+                .schema
+                .values()
+                .map(|vals| Json::Arr(vals.iter().map(|&v| json::num(v as f64)).collect()))
+                .unwrap_or(Json::Null),
+        ),
         ("backends", Json::Arr(backends)),
         ("default_backend", json::s(router.default_backend().name())),
         ("xla_loaded", Json::Bool(router.has_xla())),
@@ -398,8 +422,18 @@ fn wants_trace(req: &Request, body: Option<&Json>) -> bool {
             .unwrap_or(false)
 }
 
+/// Whether the request opted into the vote distribution (`"probs": true`
+/// body field, or `?probs=true` on binary frames).
+fn wants_probs(req: &Request, body: Option<&Json>) -> bool {
+    matches!(req.param("probs"), Some("true") | Some("1"))
+        || body
+            .and_then(|v| v.get("probs"))
+            .and_then(Json::as_bool)
+            .unwrap_or(false)
+}
+
 fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result<Json> {
-    let (features, backend, model) = if req.is_binary() {
+    let (features, backend, model, probs) = if req.is_binary() {
         trace.inline = wants_trace(req, None);
         let batch = proto::decode_rows(&req.body)?;
         let m = batch.as_matrix();
@@ -409,7 +443,12 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
                 m.n_rows()
             )));
         }
-        (m.row(0).to_vec(), backend_param(req)?, model_param(req))
+        (
+            m.row(0).to_vec(),
+            backend_param(req)?,
+            model_param(req),
+            wants_probs(req, None),
+        )
     } else {
         let v = parse_body(&req.body)?;
         trace.inline = wants_trace(req, Some(&v));
@@ -420,12 +459,14 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
             )?,
             parse_backend(&v)?,
             v.get_str("model").map(String::from),
+            wants_probs(req, Some(&v)),
         )
     };
     let resp = router.classify(&ClassifyRequest {
         features,
         backend,
         model,
+        probs,
     })?;
     trace.record(Stage::Eval);
     trace.served_by = resp.served_by.map(|k| k.name());
@@ -440,6 +481,18 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
         ),
         ("latency_us", json::num(resp.latency_us as f64)),
     ];
+    if let Some(votes) = resp.votes {
+        fields.push((
+            "votes",
+            Json::Arr(votes.iter().map(|&v| json::num(v as f64)).collect()),
+        ));
+    }
+    if let Some(p) = resp.probs {
+        fields.push(("probs", Json::Arr(p.into_iter().map(json::num).collect())));
+    }
+    if let Some(value) = resp.value {
+        fields.push(("value", json::num(value)));
+    }
     if let Some(kind) = resp.served_by {
         // only degraded responses carry the field (and the header)
         fields.push(("served_by", json::s(kind.name())));
@@ -453,7 +506,7 @@ fn classify(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result
 }
 
 fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> Result<Json> {
-    let (batch, backend, model, want_steps) = if req.is_binary() {
+    let (batch, backend, model, want_steps, want_probs) = if req.is_binary() {
         trace.inline = wants_trace(req, None);
         // the binary fast path: the body deserialises straight into the
         // flat batch buffer, no JSON parser anywhere on the row path
@@ -462,6 +515,7 @@ fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> 
             backend_param(req)?,
             model_param(req),
             matches!(req.param("steps"), Some("true") | Some("1")),
+            wants_probs(req, None),
         )
     } else {
         let v = parse_body(&req.body)?;
@@ -501,10 +555,16 @@ fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> 
             parse_backend(&v)?,
             v.get_str("model").map(String::from),
             v.get("steps").and_then(Json::as_bool).unwrap_or(false),
+            wants_probs(req, Some(&v)),
         )
     };
-    let routed =
-        router.classify_batch(batch.as_matrix(), backend, model.as_deref(), want_steps)?;
+    let routed = router.classify_batch(
+        batch.as_matrix(),
+        backend,
+        model.as_deref(),
+        want_steps,
+        want_probs,
+    )?;
     let (classes, steps, version) = (routed.classes, routed.steps, routed.version);
     trace.record(Stage::Eval);
     trace.served_by = routed.rerouted.map(|k| k.name());
@@ -531,6 +591,40 @@ fn classify_batch(req: &Request, router: &Arc<Router>, trace: &mut ReqTrace) -> 
         ),
         ("model", json::s(version.id.to_string())),
     ];
+    if let Some(votes) = &routed.votes {
+        let k = version.schema.n_classes();
+        fields.push((
+            "votes",
+            Json::Arr(
+                votes
+                    .chunks_exact(k)
+                    .map(|c| Json::Arr(c.iter().map(|&v| json::num(v as f64)).collect()))
+                    .collect(),
+            ),
+        ));
+        fields.push((
+            "probs",
+            Json::Arr(
+                votes
+                    .chunks_exact(k)
+                    .map(|c| {
+                        Json::Arr(
+                            crate::add::terminal::probabilities(c)
+                                .into_iter()
+                                .map(json::num)
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ));
+    }
+    if let Some(values) = &routed.values {
+        fields.push((
+            "values",
+            Json::Arr(values.iter().map(|&v| json::num(v)).collect()),
+        ));
+    }
     if let Some(kind) = routed.rerouted {
         fields.push(("served_by", json::s(kind.name())));
     }

@@ -185,6 +185,15 @@ pub struct ServerMetrics {
     pub dispatch_queue_depth: AtomicU64,
     /// Jobs currently queued for the dynamic batcher (gauge).
     pub batch_queue_depth: AtomicU64,
+    /// Requests that asked for the per-class vote distribution
+    /// (`"probs": true` on `/classify` or `/classify_batch`).
+    pub prob_requests: AtomicU64,
+    /// Decisions re-ranked by `ServeConfig::class_weights`
+    /// (per row on the batch path).
+    pub weighted_decisions: AtomicU64,
+    /// Regression predictions served (vote-weighted bin means; per row
+    /// on the batch path).
+    pub regression_predictions: AtomicU64,
     /// Front-end marker: 1 = evented, 0 = sync (set once at startup).
     io_evented: AtomicU64,
     /// Active frozen-sweep SIMD kernel, stored as its
@@ -223,6 +232,9 @@ impl Default for ServerMetrics {
             bytes_written_total: AtomicU64::new(0),
             dispatch_queue_depth: AtomicU64::new(0),
             batch_queue_depth: AtomicU64::new(0),
+            prob_requests: AtomicU64::new(0),
+            weighted_decisions: AtomicU64::new(0),
+            regression_predictions: AtomicU64::new(0),
             io_evented: AtomicU64::new(0),
             simd_kernel: AtomicU64::new(0),
         }
@@ -294,6 +306,21 @@ impl ServerMetrics {
     /// Record a request served by a fallback backend (breaker open).
     pub fn observe_degraded(&self) {
         self.degraded_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a request that asked for the vote distribution.
+    pub fn observe_prob_request(&self) {
+        self.prob_requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` decisions re-ranked by configured class weights.
+    pub fn observe_weighted_decisions(&self, n: u64) {
+        self.weighted_decisions.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` regression predictions served.
+    pub fn observe_regression_predictions(&self, n: u64) {
+        self.regression_predictions.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Mirror the breaker board's gauges into the snapshot (called by
@@ -436,6 +463,23 @@ impl ServerMetrics {
                     ),
                 ]),
             ),
+            (
+                "votes",
+                json::obj(vec![
+                    (
+                        "prob_requests",
+                        json::num(self.prob_requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "weighted_decisions",
+                        json::num(self.weighted_decisions.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "regression_predictions",
+                        json::num(self.regression_predictions.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
             ("request_us", self.request_us.to_json()),
             (
                 "connections",
@@ -574,6 +618,21 @@ impl ServerMetrics {
             "forest_breaker_trips_total",
             "circuit breaker closed-to-open transitions",
             self.breaker_trips.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_prob_requests_total",
+            "requests that asked for the vote distribution",
+            self.prob_requests.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_weighted_decisions_total",
+            "decisions re-ranked by configured class weights",
+            self.weighted_decisions.load(Ordering::Relaxed),
+        );
+        w.counter(
+            "forest_regression_predictions_total",
+            "regression predictions served (vote-weighted bin means)",
+            self.regression_predictions.load(Ordering::Relaxed),
         );
         w.counter(
             "forest_faults_injected_total",
@@ -841,6 +900,10 @@ mod tests {
         let breakers = j.get("breakers").unwrap();
         assert_eq!(breakers.get_i64("open"), Some(0));
         assert_eq!(breakers.get_i64("trips"), Some(0));
+        let votes = j.get("votes").unwrap();
+        assert_eq!(votes.get_i64("prob_requests"), Some(0));
+        assert_eq!(votes.get_i64("weighted_decisions"), Some(0));
+        assert_eq!(votes.get_i64("regression_predictions"), Some(0));
         let fault = j.get("fault").unwrap();
         assert_eq!(fault.get_i64("eval_panics"), Some(0));
         assert_eq!(fault.get_i64("deadline_dropped"), Some(0));
@@ -874,6 +937,9 @@ mod tests {
         m.observe_deadline_dropped();
         m.observe_conn_rejected();
         m.observe_degraded();
+        m.observe_prob_request();
+        m.observe_weighted_decisions(3);
+        m.observe_regression_predictions(2);
         m.sync_breakers(1, 2);
         let body = m.to_prometheus();
         assert!(body.contains("# TYPE forest_request_us histogram\n"));
@@ -897,6 +963,9 @@ mod tests {
         assert!(body.contains("forest_degraded_requests_total 1\n"));
         assert!(body.contains("forest_breakers_open 1\n"));
         assert!(body.contains("forest_breaker_trips_total 2\n"));
+        assert!(body.contains("forest_prob_requests_total 1\n"));
+        assert!(body.contains("forest_weighted_decisions_total 3\n"));
+        assert!(body.contains("forest_regression_predictions_total 2\n"));
         assert!(body.contains("forest_faults_injected_total "));
         // shard family headers render even before any sharded batch ran
         assert!(body.contains("# TYPE forest_eval_shard_us summary\n"));

@@ -73,6 +73,9 @@ pub struct ClassifyRequest {
     pub backend: Option<BackendKind>,
     /// Model-name override (the registry's default model otherwise).
     pub model: Option<String>,
+    /// Request the per-class vote distribution alongside the decision
+    /// (`"probs": true` over HTTP). Requires a vote-preserving backend.
+    pub probs: bool,
 }
 
 impl ClassifyRequest {
@@ -82,6 +85,7 @@ impl ClassifyRequest {
             features,
             backend: None,
             model: None,
+            probs: false,
         }
     }
 
@@ -94,6 +98,12 @@ impl ClassifyRequest {
     /// Select a named model.
     pub fn on_model(mut self, model: impl Into<String>) -> ClassifyRequest {
         self.model = Some(model.into());
+        self
+    }
+
+    /// Ask for the vote distribution (`votes` + `probs` in the response).
+    pub fn with_probs(mut self) -> ClassifyRequest {
+        self.probs = true;
         self
     }
 }
@@ -118,6 +128,15 @@ pub struct ClassifyResponse {
     /// `backend`, kept separate so transports can emit `X-Served-By`
     /// only on degraded responses). `None` on the normal path.
     pub served_by: Option<BackendKind>,
+    /// Per-class vote counts (only when the request asked for `probs`).
+    pub votes: Option<Vec<u32>>,
+    /// Per-class vote fractions derived from `votes` (same gating). When
+    /// `class_weights` are configured these stay the *raw* fractions —
+    /// weights re-rank the decision, not the reported distribution.
+    pub probs: Option<Vec<f64>>,
+    /// Regression prediction (vote-weighted mean of the model's bin value
+    /// table). Always present for regression models, `None` otherwise.
+    pub value: Option<f64>,
 }
 
 #[cfg(test)]
@@ -128,11 +147,13 @@ mod tests {
     fn request_builders_compose() {
         let req = ClassifyRequest::new(vec![1.0, 2.0])
             .on_backend(BackendKind::Forest)
-            .on_model("canary");
+            .on_model("canary")
+            .with_probs();
         assert_eq!(req.features, vec![1.0, 2.0]);
         assert_eq!(req.backend, Some(BackendKind::Forest));
         assert_eq!(req.model.as_deref(), Some("canary"));
+        assert!(req.probs);
         let plain = ClassifyRequest::new(vec![0.0]);
-        assert!(plain.backend.is_none() && plain.model.is_none());
+        assert!(plain.backend.is_none() && plain.model.is_none() && !plain.probs);
     }
 }

@@ -23,6 +23,7 @@
 //! after eval and rides each coalesced job into the batcher, which
 //! answers expired jobs with `504` instead of evaluating them.
 
+use crate::add::terminal::{argmax, expected_value, probabilities, weighted_argmax};
 use crate::batch::{RowMatrix, RowMatrixBuf};
 use crate::classifier::Classifier;
 use crate::engine::{ModelRegistry, ModelVersion};
@@ -58,6 +59,11 @@ pub struct Router {
     batch_cfg: BatcherConfig,
     reply_timeout: Duration,
     breakers: BreakerBoard,
+    /// Per-class decision weights (`ServeConfig::class_weights`): when
+    /// non-empty, every decision becomes
+    /// [`weighted_argmax`](crate::add::terminal::weighted_argmax) over
+    /// the model's vote vector. Empty = plain majority.
+    class_weights: Vec<f32>,
 }
 
 /// The outcome of one routed single-row dispatch, before response
@@ -71,6 +77,12 @@ struct Routed {
     /// `Some(backend)` when a circuit breaker rerouted the request off
     /// its picked backend.
     rerouted: Option<BackendKind>,
+    /// Per-class vote counts, when the request (or the router's decision
+    /// rule) needed them.
+    votes: Option<Vec<u32>>,
+    /// Regression prediction (vote-weighted bin mean), when the model is
+    /// a regression forest.
+    value: Option<f64>,
 }
 
 /// The outcome of a routed explicit-batch dispatch.
@@ -84,6 +96,12 @@ pub struct BatchRouted {
     pub version: Arc<ModelVersion>,
     /// `Some(backend)` when a circuit breaker rerouted the batch.
     pub rerouted: Option<BackendKind>,
+    /// Flat per-row vote counts (stride = the model's class count), when
+    /// the batch asked for probabilities.
+    pub votes: Option<Vec<u32>>,
+    /// Per-row regression predictions, when the model is a regression
+    /// forest.
+    pub values: Option<Vec<f64>>,
 }
 
 /// Clone an eval error for fan-out to every reply of a failed batch,
@@ -196,7 +214,34 @@ impl Router {
             batch_cfg,
             reply_timeout,
             breakers,
+            class_weights: Vec::new(),
         }
+    }
+
+    /// Install per-class decision weights (`ServeConfig::class_weights`).
+    /// Arity is validated per request against the resolved model's class
+    /// count, since models hot-swap underneath the router.
+    pub fn with_class_weights(mut self, weights: Vec<f32>) -> Router {
+        self.class_weights = weights;
+        self
+    }
+
+    /// The configured decision weights for one resolved model version:
+    /// `None` when unweighted, an error when the configured arity does
+    /// not match the model's class count.
+    fn decision_weights(&self, version: &ModelVersion) -> Result<Option<&[f32]>> {
+        if self.class_weights.is_empty() {
+            return Ok(None);
+        }
+        let k = version.schema.n_classes();
+        if self.class_weights.len() != k {
+            return Err(Error::invalid(format!(
+                "class_weights has {} entries but model '{}' has {k} classes",
+                self.class_weights.len(),
+                version.id
+            )));
+        }
+        Ok(Some(&self.class_weights))
     }
 
     fn batcher(&self) -> &Batcher<BatchJob> {
@@ -262,10 +307,22 @@ impl Router {
     /// Serve one classification request.
     pub fn classify(&self, req: &ClassifyRequest) -> Result<ClassifyResponse> {
         let start = Instant::now();
-        match self.dispatch(req.model.as_deref(), req.backend, &req.features) {
+        if req.probs {
+            self.metrics.observe_prob_request();
+        }
+        match self.dispatch(req.model.as_deref(), req.backend, &req.features, req.probs) {
             Ok(routed) => {
                 let latency = start.elapsed();
                 self.metrics.observe(routed.backend, latency);
+                // Votes may have been fetched only to drive a weighted or
+                // regression decision — they reach the client solely on
+                // explicit request.
+                let probs = routed
+                    .votes
+                    .as_deref()
+                    .filter(|_| req.probs)
+                    .map(probabilities);
+                let votes = if req.probs { routed.votes } else { None };
                 Ok(ClassifyResponse {
                     class: routed.class,
                     label: routed.label,
@@ -274,6 +331,9 @@ impl Router {
                     steps: routed.steps,
                     latency_us: latency.as_micros() as u64,
                     served_by: routed.rerouted,
+                    votes,
+                    probs,
+                    value: routed.value,
                 })
             }
             Err(e) => {
@@ -331,15 +391,35 @@ impl Router {
     /// a panic guard. A result computed after the deadline is discarded
     /// — the frozen sweep may have bailed out mid-batch, so a late
     /// answer is not guaranteed complete.
+    ///
+    /// With `want_votes` the attempt runs inline even on batch-first
+    /// backends: the coalesced batch path only carries classes, and a
+    /// backend that cannot expose votes must fail this request alone
+    /// with [`Error::InvalidArgument`] rather than poison a fused batch.
     fn eval_single(
         &self,
         version: &ModelVersion,
         kind: BackendKind,
         features: &[f32],
         deadline: Option<Instant>,
-    ) -> Result<(u32, Option<usize>)> {
+        want_votes: bool,
+    ) -> Result<(u32, Option<usize>, Option<Vec<u32>>)> {
         let slot = version.slot(kind)?.clone();
-        let out = if slot.batch_first {
+        let out = if want_votes {
+            match catch_unwind(AssertUnwindSafe(|| {
+                let votes = slot.classifier.votes(features)?;
+                let (class, steps) = slot.classifier.classify_with_steps(features)?;
+                Ok::<_, Error>((class, steps, Some(votes)))
+            })) {
+                Ok(r) => r?,
+                Err(p) => {
+                    return Err(Error::EvalPanic {
+                        shard: 0,
+                        msg: crate::runtime::pool::payload_msg(&*p),
+                    })
+                }
+            }
+        } else if slot.batch_first {
             let (tx, rx) = std::sync::mpsc::channel();
             // depth gauge brackets the submit: a rejected job never counts
             self.metrics.batch_enqueued();
@@ -353,12 +433,15 @@ impl Router {
             let class = rx
                 .recv_timeout(self.reply_timeout)
                 .map_err(|_| Error::Serve("batched backend reply timed out".into()))??;
-            (class, None)
+            (class, None, None)
         } else {
             match catch_unwind(AssertUnwindSafe(|| {
                 slot.classifier.classify_with_steps(features)
             })) {
-                Ok(r) => r?,
+                Ok(r) => {
+                    let (class, steps) = r?;
+                    (class, steps, None)
+                }
                 Err(p) => {
                     return Err(Error::EvalPanic {
                         shard: 0,
@@ -380,6 +463,7 @@ impl Router {
         model: Option<&str>,
         requested: Option<BackendKind>,
         features: &[f32],
+        want_probs: bool,
     ) -> Result<Routed> {
         let deadline = crate::obs::trace::eval_deadline();
         let version = self.registry.get(model)?;
@@ -388,6 +472,13 @@ impl Router {
         // error, surfaced before any fallback logic runs
         version.slot(primary)?;
         version.check_row(features)?;
+        let weights = self.decision_weights(&version)?;
+        let values = version.schema.values();
+        // Votes are fetched when the client asked for probabilities, when
+        // weighted decisions are configured, or when the model is a
+        // regression forest — all three rules are pure post-maps over the
+        // same per-class vote vector.
+        let want_votes = want_probs || weights.is_some() || values.is_some();
         if deadline.is_some_and(|d| Instant::now() >= d) {
             return Err(Error::DeadlineExceeded(
                 "request expired before evaluation".into(),
@@ -396,12 +487,23 @@ impl Router {
         let model_key = version.id.to_string();
         let mut last_err = None;
         for kind in self.candidates(&version, primary, &model_key) {
-            match self.eval_single(&version, kind, features, deadline) {
-                Ok((class, steps)) => {
+            match self.eval_single(&version, kind, features, deadline, want_votes) {
+                Ok((mut class, steps, votes)) => {
                     self.note_outcome(&model_key, kind, true);
                     let rerouted = (kind != primary).then_some(kind);
                     if rerouted.is_some() {
                         self.metrics.observe_degraded();
+                    }
+                    let mut value = None;
+                    if let Some(v) = votes.as_deref() {
+                        if let Some(w) = weights {
+                            class = weighted_argmax(v, w) as u32;
+                            self.metrics.observe_weighted_decisions(1);
+                        }
+                        if let Some(vals) = values {
+                            value = Some(expected_value(v, vals));
+                            self.metrics.observe_regression_predictions(1);
+                        }
                     }
                     return Ok(Routed {
                         backend: kind,
@@ -410,11 +512,20 @@ impl Router {
                         steps,
                         label: version.label_of(class),
                         rerouted,
+                        votes,
+                        value,
                     });
                 }
-                // no fallback can beat an expired clock, and overload is
-                // shed (429), never rerouted around admission control
-                Err(e @ (Error::DeadlineExceeded(_) | Error::Overloaded(_))) => return Err(e),
+                // no fallback can beat an expired clock, overload is shed
+                // (429) rather than rerouted around admission control, and
+                // a votes-capability gap (majority-abstracted model, XLA)
+                // is the client's answer — it must not trip breakers or
+                // degrade onto a backend with the same gap
+                Err(
+                    e @ (Error::DeadlineExceeded(_)
+                    | Error::Overloaded(_)
+                    | Error::InvalidArgument(_)),
+                ) => return Err(e),
                 Err(e) => {
                     if matches!(e, Error::EvalPanic { .. }) {
                         self.metrics.observe_eval_panic();
@@ -437,14 +548,35 @@ impl Router {
         kind: BackendKind,
         rows: RowMatrix<'_>,
         want_steps: bool,
+        want_votes: bool,
         deadline: Option<Instant>,
-    ) -> Result<(Vec<u32>, Option<Vec<u32>>)> {
+    ) -> Result<(Vec<u32>, Option<Vec<u32>>, Option<Vec<u32>>)> {
         let slot = version.slot(kind)?.clone();
+        let n_classes = version.schema.n_classes();
         let out = match catch_unwind(AssertUnwindSafe(|| {
-            if want_steps {
-                slot.classifier.classify_batch_with_steps(rows)
+            if want_votes {
+                // classes fall out of the vote sweep (same strict-argmax
+                // tie-break as the classify kernels, pinned by the
+                // conformance suite); steps need the metered walk too
+                let votes = slot.classifier.votes_batch(rows)?;
+                let steps = if want_steps {
+                    slot.classifier.classify_batch_with_steps(rows)?.1
+                } else {
+                    None
+                };
+                let classes = votes
+                    .chunks_exact(n_classes)
+                    .map(|c| argmax(c) as u32)
+                    .collect();
+                Ok((classes, steps, Some(votes)))
+            } else if want_steps {
+                slot.classifier
+                    .classify_batch_with_steps(rows)
+                    .map(|(c, s)| (c, s, None))
             } else {
-                slot.classifier.classify_batch(rows).map(|c| (c, None))
+                slot.classifier
+                    .classify_batch(rows)
+                    .map(|c| (c, None, None))
             }
         })) {
             Ok(r) => r?,
@@ -475,14 +607,21 @@ impl Router {
         backend: Option<BackendKind>,
         model: Option<&str>,
         want_steps: bool,
+        want_probs: bool,
     ) -> Result<BatchRouted> {
         let start = Instant::now();
         let deadline = crate::obs::trace::eval_deadline();
+        if want_probs {
+            self.metrics.observe_prob_request();
+        }
         let result = (|| {
             let version = self.registry.get(model)?;
             let primary = self.pick_backend(&version, backend);
             version.slot(primary)?;
             version.check_matrix(rows)?;
+            let weights = self.decision_weights(&version)?;
+            let values = version.schema.values();
+            let want_votes = want_probs || weights.is_some() || values.is_some();
             if deadline.is_some_and(|d| Instant::now() >= d) {
                 return Err(Error::DeadlineExceeded(
                     "request expired before evaluation".into(),
@@ -491,16 +630,39 @@ impl Router {
             let model_key = version.id.to_string();
             let mut last_err = None;
             for kind in self.candidates(&version, primary, &model_key) {
-                match self.eval_batch(&version, kind, rows, want_steps, deadline) {
-                    Ok((classes, steps)) => {
+                match self.eval_batch(&version, kind, rows, want_steps, want_votes, deadline) {
+                    Ok((mut classes, steps, votes)) => {
                         self.note_outcome(&model_key, kind, true);
                         let rerouted = (kind != primary).then_some(kind);
                         if rerouted.is_some() {
                             self.metrics.observe_degraded();
                         }
-                        return Ok((kind, classes, steps, version, rerouted));
+                        let mut row_values = None;
+                        if let Some(v) = votes.as_deref() {
+                            let k = version.schema.n_classes();
+                            if let Some(w) = weights {
+                                classes = v
+                                    .chunks_exact(k)
+                                    .map(|c| weighted_argmax(c, w) as u32)
+                                    .collect();
+                                self.metrics.observe_weighted_decisions(classes.len() as u64);
+                            }
+                            if let Some(vals) = values {
+                                row_values = Some(
+                                    v.chunks_exact(k)
+                                        .map(|c| expected_value(c, vals))
+                                        .collect::<Vec<f64>>(),
+                                );
+                                self.metrics
+                                    .observe_regression_predictions(rows.n_rows() as u64);
+                            }
+                        }
+                        let votes = if want_probs { votes } else { None };
+                        return Ok((kind, classes, steps, votes, row_values, version, rerouted));
                     }
-                    Err(e @ Error::DeadlineExceeded(_)) => return Err(e),
+                    Err(
+                        e @ (Error::DeadlineExceeded(_) | Error::InvalidArgument(_)),
+                    ) => return Err(e),
                     Err(e) => {
                         if matches!(e, Error::EvalPanic { .. }) {
                             self.metrics.observe_eval_panic();
@@ -513,7 +675,7 @@ impl Router {
             Err(last_err.unwrap_or_else(|| Error::Serve("no backend available".into())))
         })();
         match result {
-            Ok((backend, classes, steps, version, rerouted)) => {
+            Ok((backend, classes, steps, votes, values, version, rerouted)) => {
                 let elapsed = start.elapsed();
                 self.metrics.observe(backend, elapsed);
                 self.metrics.observe_batch(rows.n_rows());
@@ -523,6 +685,8 @@ impl Router {
                     steps,
                     version,
                     rerouted,
+                    votes,
+                    values,
                 })
             }
             Err(e) => {
@@ -621,15 +785,16 @@ mod tests {
         }
         let rows = buf.as_matrix();
         let dd = r
-            .classify_batch(rows, Some(BackendKind::Dd), None, false)
+            .classify_batch(rows, Some(BackendKind::Dd), None, false, false)
             .unwrap();
         assert!(dd.steps.is_none(), "steps only on request");
         assert!(dd.rerouted.is_none(), "healthy path never reroutes");
+        assert!(dd.votes.is_none(), "votes only on request");
         let rf = r
-            .classify_batch(rows, Some(BackendKind::Forest), None, false)
+            .classify_batch(rows, Some(BackendKind::Forest), None, false, false)
             .unwrap();
         let frozen = r
-            .classify_batch(rows, Some(BackendKind::Frozen), None, true)
+            .classify_batch(rows, Some(BackendKind::Frozen), None, true, false)
             .unwrap();
         assert_eq!(dd.classes, rf.classes);
         assert_eq!(dd.classes, frozen.classes);
@@ -756,6 +921,206 @@ mod tests {
     }
 
     #[test]
+    fn probs_ride_vote_preserving_backends() {
+        let (ds, r) = router();
+        let resp = r
+            .classify(
+                &ClassifyRequest::new(ds.row(0).to_vec())
+                    .on_backend(BackendKind::Forest)
+                    .with_probs(),
+            )
+            .unwrap();
+        let votes = resp.votes.as_ref().unwrap();
+        assert_eq!(votes.iter().sum::<u32>(), 12, "one vote per tree");
+        let probs = resp.probs.as_ref().unwrap();
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert_eq!(argmax(votes) as u32, resp.class);
+        assert!(resp.value.is_none(), "classification models have no value");
+        assert_eq!(
+            r.metrics()
+                .prob_requests
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        // without the flag, the wire stays lean
+        let plain = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_backend(BackendKind::Forest))
+            .unwrap();
+        assert!(plain.votes.is_none() && plain.probs.is_none());
+    }
+
+    #[test]
+    fn majority_backends_reject_probs_without_tripping_breakers() {
+        // the default compile abstraction (majority) folds votes away at
+        // compile time — asking it for a distribution is a client error,
+        // not a backend fault
+        let (ds, r) = router();
+        let err = r
+            .classify(
+                &ClassifyRequest::new(ds.row(0).to_vec())
+                    .on_backend(BackendKind::Dd)
+                    .with_probs(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+        assert!(err.to_string().contains("vote"), "{err}");
+        assert_eq!(r.breakers().open_count(), 0, "capability gaps never trip");
+        // plain classification on the same backend is untouched
+        assert!(r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_backend(BackendKind::Dd))
+            .is_ok());
+    }
+
+    #[test]
+    fn class_weights_rerank_decisions() {
+        let (ds, r) = router();
+        // find a row that splits the forest, so a weight can flip it
+        let mut split = None;
+        for i in 0..ds.n_rows() {
+            let resp = r
+                .classify(
+                    &ClassifyRequest::new(ds.row(i).to_vec())
+                        .on_backend(BackendKind::Forest)
+                        .with_probs(),
+                )
+                .unwrap();
+            let votes = resp.votes.clone().unwrap();
+            if votes.iter().filter(|&&v| v > 0).count() >= 2 {
+                split = Some((i, resp.class as usize, votes));
+                break;
+            }
+        }
+        let (i, base, votes) = split.expect("some iris row splits a 12-tree forest");
+        let runner = (0..votes.len())
+            .filter(|&c| c != base)
+            .max_by_key(|&c| votes[c])
+            .unwrap();
+        // weight the runner-up heavily enough that its (non-zero) votes
+        // outscore the raw winner's
+        let mut weights = vec![1.0f32; votes.len()];
+        weights[runner] = votes[base] as f32 + 1.0;
+        let weighted = Router::new(
+            r.registry().clone(),
+            Arc::new(ServerMetrics::default()),
+            BackendKind::Forest,
+            BatcherConfig::default(),
+            Duration::from_secs(5),
+            BreakerBoard::new(3, Duration::from_millis(100)),
+        )
+        .with_class_weights(weights);
+        let resp = weighted
+            .classify(&ClassifyRequest::new(ds.row(i).to_vec()))
+            .unwrap();
+        assert_eq!(resp.class as usize, runner, "the weight flips the decision");
+        assert!(resp.votes.is_none(), "votes still only ship on request");
+        assert_eq!(
+            weighted
+                .metrics()
+                .weighted_decisions
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        // reported probabilities stay the raw vote fractions
+        let with_probs = weighted
+            .classify(&ClassifyRequest::new(ds.row(i).to_vec()).with_probs())
+            .unwrap();
+        let probs = with_probs.probs.unwrap();
+        assert!(probs[base] > probs[runner], "weights re-rank, not re-weight");
+        // a weight vector of the wrong arity is a client error
+        let bad = Router::new(
+            r.registry().clone(),
+            Arc::new(ServerMetrics::default()),
+            BackendKind::Forest,
+            BatcherConfig::default(),
+            Duration::from_secs(5),
+            BreakerBoard::new(3, Duration::from_millis(100)),
+        )
+        .with_class_weights(vec![1.0, 2.0]);
+        let err = bad
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()))
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidArgument(_)), "{err}");
+        assert!(err.to_string().contains("classes"), "{err}");
+    }
+
+    #[test]
+    fn regression_models_serve_values() {
+        let (_, r) = router();
+        let spec = crate::data::synth::RegressionSpec {
+            rows: 120,
+            bins: 6,
+            ..Default::default()
+        };
+        let ds = crate::data::synth::regression(&spec).unwrap();
+        crate::engine::register_forest(
+            r.registry(),
+            "reg",
+            crate::forest::ForestLearner::default().trees(5).seed(3).fit(&ds),
+        )
+        .unwrap();
+        let resp = r
+            .classify(&ClassifyRequest::new(ds.row(0).to_vec()).on_model("reg"))
+            .unwrap();
+        let value = resp.value.expect("regression models always report a value");
+        assert!(value.is_finite());
+        assert!(resp.votes.is_none() && resp.probs.is_none());
+        // the batch path reports the same per-row means
+        let mut buf = RowMatrixBuf::with_capacity(ds.n_features(), 8);
+        for i in 0..8 {
+            buf.push_row(ds.row(i)).unwrap();
+        }
+        let batch = r
+            .classify_batch(buf.as_matrix(), None, Some("reg"), false, true)
+            .unwrap();
+        let values = batch.values.expect("regression batches carry values");
+        assert_eq!(values.len(), 8);
+        assert!((values[0] - value).abs() < 1e-12, "batch matches single");
+        let votes = batch.votes.expect("probs were requested");
+        assert_eq!(votes.len(), 8 * 6);
+        for (i, chunk) in votes.chunks_exact(6).enumerate() {
+            assert_eq!(argmax(chunk) as u32, batch.classes[i], "row {i}");
+        }
+        assert_eq!(
+            r.metrics()
+                .regression_predictions
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1 + 8
+        );
+    }
+
+    #[test]
+    fn batch_probs_match_single_requests() {
+        let (ds, r) = router();
+        let mut buf = RowMatrixBuf::with_capacity(ds.n_features(), 10);
+        for i in 0..10 {
+            buf.push_row(ds.row(i * 7)).unwrap();
+        }
+        let rows = buf.as_matrix();
+        let batch = r
+            .classify_batch(rows, Some(BackendKind::Forest), None, false, true)
+            .unwrap();
+        let votes = batch.votes.as_ref().unwrap();
+        assert_eq!(votes.len(), 10 * 3);
+        assert!(batch.values.is_none(), "classification has no value table");
+        for (i, chunk) in votes.chunks_exact(3).enumerate() {
+            let single = r
+                .classify(
+                    &ClassifyRequest::new(ds.row(i * 7).to_vec())
+                        .on_backend(BackendKind::Forest)
+                        .with_probs(),
+                )
+                .unwrap();
+            assert_eq!(single.votes.as_deref(), Some(chunk), "row {i}");
+            assert_eq!(batch.classes[i], single.class, "row {i}");
+        }
+        let plain = r
+            .classify_batch(rows, Some(BackendKind::Forest), None, false, false)
+            .unwrap();
+        assert!(plain.votes.is_none());
+        assert_eq!(plain.classes, batch.classes);
+    }
+
+    #[test]
     fn expired_deadlines_fail_fast_with_a_deadline_error() {
         let (ds, r) = router();
         crate::obs::trace::set_eval_deadline(Some(Instant::now() - Duration::from_millis(5)));
@@ -767,7 +1132,7 @@ mod tests {
         let mut buf = RowMatrixBuf::with_capacity(ds.n_features(), 1);
         buf.push_row(ds.row(0)).unwrap();
         let err = r
-            .classify_batch(buf.as_matrix(), None, None, false)
+            .classify_batch(buf.as_matrix(), None, None, false, false)
             .unwrap_err();
         assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
         // clearing the deadline restores service on this thread

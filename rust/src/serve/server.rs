@@ -115,10 +115,24 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
             data.n_rows()
         );
         let mut builder = Engine::builder()
-            .dataset(data)
+            .dataset(data.clone())
             .trees(cfg.trees)
             .max_depth(cfg.max_depth)
             .seed(cfg.seed);
+        // Weighted decisions and regression means are post-maps over the
+        // vote vector, so the compiled diagram must keep it: the default
+        // majority abstraction folds votes away at compile time.
+        if data.schema.task.is_regression() || !cfg.class_weights.is_empty() {
+            builder = builder.abstraction(crate::compile::Abstraction::Vector);
+            crate::log_info!(
+                "serve: vote-preserving (vector) abstraction selected ({})",
+                if data.schema.task.is_regression() {
+                    "regression dataset"
+                } else {
+                    "class weights configured"
+                }
+            );
+        }
         if cfg.enable_xla {
             // Load failures fall back to the native backends inside the
             // builder (DESIGN.md §7) — the server still comes up.
@@ -133,6 +147,19 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
             info.label,
             info.size_nodes
         );
+    }
+    // Config validation only checked the weights themselves; their arity
+    // is a property of the loaded model, known first here.
+    if !cfg.class_weights.is_empty() {
+        let version = engine.registry().get(None)?;
+        let k = version.schema.n_classes();
+        if cfg.class_weights.len() != k {
+            return Err(Error::invalid(format!(
+                "class_weights has {} entries but model '{}' has {k} classes",
+                cfg.class_weights.len(),
+                version.id
+            )));
+        }
     }
     let metrics = Arc::new(ServerMetrics::default());
     metrics
@@ -154,7 +181,8 @@ pub fn start(cfg: &ServeConfig) -> Result<ServerHandle> {
             cfg.breaker_threshold,
             Duration::from_millis(cfg.breaker_cooldown_ms),
         ),
-    ));
+    )
+    .with_class_weights(cfg.class_weights.clone()));
 
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;

@@ -13,10 +13,15 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always carried as `f64`).
     Num(f64),
+    /// A string (escapes already decoded).
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Objects keep insertion order for stable, diff-friendly output.
     Obj(Vec<(String, Json)>),

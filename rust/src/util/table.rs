@@ -7,7 +7,9 @@
 /// Column alignment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Align {
+    /// Pad on the right (text columns).
     Left,
+    /// Pad on the left (numeric columns).
     Right,
 }
 

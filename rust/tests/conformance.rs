@@ -508,7 +508,7 @@ fn breaker_fallback_serves_bit_identical_answers() {
             assert_eq!(r.backend, BackendKind::Dd, "{name} row {i}: primary");
             assert_eq!(r.served_by, None, "{name} row {i}: not degraded yet");
         }
-        let healthy_batch = router.classify_batch(rows, None, None, true).unwrap();
+        let healthy_batch = router.classify_batch(rows, None, None, true, false).unwrap();
         assert!(healthy_batch.rerouted.is_none(), "{name}: healthy batch");
 
         router.breakers().record_failure("default@v1", BackendKind::Dd);
@@ -530,7 +530,7 @@ fn breaker_fallback_serves_bit_identical_answers() {
             assert_eq!(got.steps, healthy[i].steps, "{name} row {i}: §6 steps");
             assert_eq!(got.label, healthy[i].label, "{name} row {i}: label");
         }
-        let degraded = router.classify_batch(rows, None, None, true).unwrap();
+        let degraded = router.classify_batch(rows, None, None, true, false).unwrap();
         assert_eq!(
             degraded.rerouted,
             Some(BackendKind::Frozen),
@@ -648,6 +648,153 @@ fn simd_kernels_and_freeze_layouts_conform_on_every_dataset() {
                     }
                 }
             }
+        }
+    }
+}
+
+/// Vote-vector conformance: on every built-in dataset, the full
+/// per-class distribution a terminal carries — not just its argmax —
+/// must be bit-identical between the forest tally, the live DD walk,
+/// the frozen sweep, and the snapshot-roundtripped artifact, for both
+/// vote-preserving abstractions, across every SIMD kernel this host can
+/// execute × every tile budget, single-row and sharded batch paths. The
+/// decided class must equal the argmax of the reported distribution
+/// (shared tie rule: lowest index), and the majority abstraction must
+/// refuse with an error rather than fabricate a distribution.
+#[test]
+fn vote_distributions_conform_on_every_dataset() {
+    use forest_add::add::terminal::argmax;
+    use forest_add::runtime::simd;
+    for name in datasets::names() {
+        let data = datasets::load(name).unwrap();
+        let forest = ForestLearner::default().trees(8).seed(23).fit(&data);
+        let rows = data.matrix();
+        let k = data.schema.n_classes();
+
+        // truth: the forest's per-row vote tally (always sums to |T|)
+        let reference: Vec<Vec<u32>> = rows.iter().map(|x| forest.votes(x)).collect();
+        for (i, v) in reference.iter().enumerate() {
+            assert_eq!(v.len(), k, "{name} row {i}: tally arity");
+            assert_eq!(v.iter().sum::<u32>(), 8, "{name} row {i}: votes sum to |T|");
+        }
+        let forest_flat = Classifier::votes_batch(&forest, rows).unwrap();
+        for (i, want) in reference.iter().enumerate() {
+            assert_eq!(
+                &forest_flat[i * k..(i + 1) * k],
+                &want[..],
+                "{name} row {i}: forest batch tally"
+            );
+        }
+
+        for abstraction in [Abstraction::Word, Abstraction::Vector] {
+            let tag = format!("{name}/{abstraction:?}");
+            let dd = ForestCompiler::new(CompileOptions {
+                abstraction,
+                ..Default::default()
+            })
+            .compile(&forest)
+            .unwrap();
+            let frozen = dd.freeze();
+            let reloaded = FrozenDD::from_bytes(&frozen.to_bytes()).unwrap();
+            for (i, x) in rows.iter().enumerate() {
+                let want = &reference[i];
+                assert_eq!(&dd.votes(x).unwrap(), want, "{tag} row {i}: dd walk");
+                assert_eq!(&frozen.votes(x).unwrap(), want, "{tag} row {i}: frozen walk");
+                assert_eq!(
+                    &reloaded.votes(x).unwrap(),
+                    want,
+                    "{tag} row {i}: snapshot round-trip"
+                );
+                // the decision is a pure post-map over the distribution
+                assert_eq!(
+                    u32::from(argmax(want)),
+                    Classifier::classify(&frozen, x).unwrap(),
+                    "{tag} row {i}: class != argmax(votes)"
+                );
+            }
+            // flat batch distributions through the trait and the sweeps
+            let dd_flat = Classifier::votes_batch(&dd, rows).unwrap();
+            let frozen_flat = frozen.votes_batch(rows).unwrap();
+            assert_eq!(dd_flat, forest_flat, "{tag}: dd batch distributions");
+            assert_eq!(frozen_flat, forest_flat, "{tag}: frozen batch distributions");
+            // every executable kernel × every tile budget, kernel-pinned
+            // and single-threaded (1 forces minimum tiles, 0 = auto)
+            let mut scratch = forest_add::frozen::BatchScratch::new();
+            for kernel in simd::available() {
+                for tile_budget in [1usize, 4096, 0] {
+                    let got = frozen
+                        .votes_batch_kernel(rows, &mut scratch, tile_budget, kernel)
+                        .unwrap();
+                    assert_eq!(
+                        got,
+                        forest_flat,
+                        "{tag}/{}/budget {tile_budget}: kernel-pinned distributions",
+                        kernel.name()
+                    );
+                }
+            }
+            // past the sharding crossover the sharded sweep must expand
+            // exactly the same terminals
+            let tiled = forest_add::bench_support::tile_rows(&data, 1024, 7);
+            let big = tiled.as_matrix();
+            let big_votes = frozen.votes_batch(big).unwrap();
+            for (i, x) in big.iter().enumerate() {
+                assert_eq!(
+                    &big_votes[i * k..(i + 1) * k],
+                    &forest.votes(x)[..],
+                    "{tag} row {i}: sharded batch distributions"
+                );
+            }
+        }
+
+        // the majority abstraction folded the payload at compile time:
+        // asking for it is a capability error, never a made-up vector
+        let majority = ForestCompiler::new(CompileOptions::default())
+            .compile(&forest)
+            .unwrap();
+        let err = Classifier::votes(&majority, rows.row(0)).unwrap_err();
+        assert!(err.to_string().contains("vote"), "{name}: {err}");
+        let err = majority.freeze().votes_batch(rows).unwrap_err();
+        assert!(err.to_string().contains("vote"), "{name}: {err}");
+    }
+}
+
+/// Regression conformance: a binned-target forest predicts the same
+/// vote-weighted mean through every backend, because the value table is
+/// a schema-level post-map over the same conformant distributions.
+#[test]
+fn regression_values_conform_across_backends() {
+    use forest_add::add::terminal::expected_value;
+    use forest_add::data::synth::{regression, RegressionSpec};
+    let data = regression(&RegressionSpec {
+        rows: 160,
+        bins: 8,
+        ..Default::default()
+    })
+    .unwrap();
+    let values = data.schema.values().expect("regression schema").to_vec();
+    let forest = ForestLearner::default().trees(9).seed(37).fit(&data);
+    let dd = ForestCompiler::new(CompileOptions {
+        abstraction: Abstraction::Vector,
+        ..Default::default()
+    })
+    .compile(&forest)
+    .unwrap();
+    let frozen = dd.freeze();
+    let reloaded = FrozenDD::from_bytes(&frozen.to_bytes()).unwrap();
+    // the value table survives the snapshot round-trip bit-identically
+    assert_eq!(reloaded.task_values().as_deref(), Some(&values[..]));
+    let rows = data.matrix();
+    for (i, x) in rows.iter().enumerate() {
+        let want = expected_value(&forest.votes(x), &values);
+        assert!(want.is_finite(), "row {i}: reference value");
+        for (label, votes) in [
+            ("dd", dd.votes(x).unwrap()),
+            ("frozen", frozen.votes(x).unwrap()),
+            ("snapshot", reloaded.votes(x).unwrap()),
+        ] {
+            let got = expected_value(&votes, &values);
+            assert_eq!(got.to_bits(), want.to_bits(), "{label} row {i}: value");
         }
     }
 }

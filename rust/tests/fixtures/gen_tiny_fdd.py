@@ -4,8 +4,9 @@ forward-compat tripwires.
 
 This is an *independent* implementation of the `forest-add/fdd` binary
 snapshot formats and of the `forest-add/fab-v1` multi-model bundle
-format (see rust/src/frozen/snapshot.rs and rust/src/frozen/bundle.rs
-for the authoritative specs). The checked-in fixtures are loaded by
+format (the prose specification is docs/FORMAT.md at the repository
+root; rust/src/frozen/snapshot.rs and rust/src/frozen/bundle.rs are
+the authoritative readers/writers). The checked-in fixtures are loaded by
 tests/snapshot_compat.rs; if the Rust reader or writer drifts from the
 documented layouts, those tests — not a customer's serving fleet — are
 what break.

@@ -1,0 +1,124 @@
+#!/usr/bin/env python3
+"""Docs cross-link checker (CI `docs` job; runnable locally from anywhere).
+
+Three invariants keep the documentation layer from rotting:
+
+1. The documented surface exists: README.md and docs/{ARCHITECTURE,
+   FORMAT,HTTP}.md are present and non-trivial.
+2. Every relative markdown link in those files resolves to a real file
+   in the repository (external http(s) links are not fetched).
+3. The source ↔ docs cross-references hold both ways: the format
+   modules and the fixture generator cite docs/FORMAT.md, the HTTP
+   layer cites docs/HTTP.md, the crate root cites docs/ARCHITECTURE.md
+   — and every `SEC_*` section id declared in snapshot.rs appears in
+   FORMAT.md's section tables, so a new section cannot land
+   undocumented.
+
+Exit code 0 = all good; 1 = problems (listed on stderr).
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+REQUIRED_DOCS = [
+    "README.md",
+    "docs/ARCHITECTURE.md",
+    "docs/FORMAT.md",
+    "docs/HTTP.md",
+]
+
+# source file -> docs path it must mention
+SOURCE_REFS = {
+    "rust/src/lib.rs": "docs/ARCHITECTURE.md",
+    "rust/src/frozen/snapshot.rs": "docs/FORMAT.md",
+    "rust/src/frozen/bundle.rs": "docs/FORMAT.md",
+    "rust/tests/fixtures/gen_tiny_fdd.py": "docs/FORMAT.md",
+    "rust/src/serve/http.rs": "docs/HTTP.md",
+}
+
+MIN_DOC_BYTES = 500
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SEC_RE = re.compile(r"const SEC_\w+: u32 = (\d+);")
+
+problems = []
+
+
+def check_exists():
+    for rel in REQUIRED_DOCS:
+        path = os.path.join(ROOT, rel)
+        if not os.path.isfile(path):
+            problems.append(f"missing required doc: {rel}")
+        elif os.path.getsize(path) < MIN_DOC_BYTES:
+            problems.append(f"suspiciously small doc (<{MIN_DOC_BYTES}B): {rel}")
+
+
+def check_links():
+    for rel in REQUIRED_DOCS:
+        path = os.path.join(ROOT, rel)
+        if not os.path.isfile(path):
+            continue
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            target = target.split("#", 1)[0]
+            if not target:
+                continue  # pure in-page anchor
+            resolved = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(resolved):
+                problems.append(f"{rel}: broken relative link -> {target}")
+
+
+def check_source_refs():
+    for src, doc in SOURCE_REFS.items():
+        path = os.path.join(ROOT, src)
+        if not os.path.isfile(path):
+            problems.append(f"missing source file: {src}")
+            continue
+        with open(path, encoding="utf-8") as f:
+            if doc not in f.read():
+                problems.append(f"{src}: does not reference {doc}")
+
+
+def check_section_ids():
+    snap = os.path.join(ROOT, "rust/src/frozen/snapshot.rs")
+    fmt = os.path.join(ROOT, "docs/FORMAT.md")
+    if not (os.path.isfile(snap) and os.path.isfile(fmt)):
+        return  # already reported above
+    with open(snap, encoding="utf-8") as f:
+        ids = sorted({int(m) for m in SEC_RE.findall(f.read())})
+    if not ids:
+        problems.append("snapshot.rs: no SEC_* section ids found (regex drift?)")
+        return
+    with open(fmt, encoding="utf-8") as f:
+        fmt_text = f.read()
+    for sec in ids:
+        # FORMAT.md's section tables list each id as a `| N ` table cell
+        if not re.search(rf"^\|\s*{sec}\s+\|", fmt_text, re.MULTILINE):
+            problems.append(
+                f"docs/FORMAT.md: section id {sec} (declared in snapshot.rs) "
+                "missing from the section tables"
+            )
+
+
+def main():
+    check_exists()
+    check_links()
+    check_source_refs()
+    check_section_ids()
+    if problems:
+        for p in problems:
+            print(f"check_docs: {p}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK ({len(REQUIRED_DOCS)} docs, cross-links intact)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
